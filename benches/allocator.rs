@@ -1,0 +1,36 @@
+//! Allocator microbenchmark — the paper's "lock-free, microsecond-scale
+//! allocation" claim (Sec. II-B gap 3 / Contribution 1).
+//!
+//! Prints ns/op for alloc+free cycles at 1..8 threads hammering one
+//! shared free list. The paper's claim holds if single-thread ops are
+//! well under 1 µs and scaling does not collapse under contention.
+
+include!("common.rs");
+
+use paged_flex::harness::{allocator_bench, print_table};
+
+fn main() {
+    let ops = if quick() { 50_000 } else { 500_000 };
+    let rows = allocator_bench(&[1, 2, 4, 8], ops);
+    print_table(
+        "allocator: lock-free alloc/free latency",
+        &["threads", "ops", "ns/op", "Mops/s"],
+        &rows
+            .iter()
+            .map(|r| vec![
+                r.threads.to_string(),
+                r.ops.to_string(),
+                f(r.ns_per_op, 1),
+                f(r.mops_per_sec, 2),
+            ])
+            .collect::<Vec<_>>(),
+    );
+    let single = &rows[0];
+    println!("\nclaim check: single-thread {} ns/op ({})",
+             f(single.ns_per_op, 1),
+             if single.ns_per_op < 1000.0 {
+                 "PASS: microsecond-scale"
+             } else {
+                 "FAIL"
+             });
+}

@@ -1,0 +1,32 @@
+// Shared bench-driver plumbing (each bench `include!`s this file, so
+// no inner attributes / module docs here).
+
+use std::path::PathBuf;
+
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("PF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] no artifacts at {} — run `make artifacts`",
+                  dir.display());
+        None
+    }
+}
+
+pub fn model_name() -> String {
+    std::env::var("PF_MODEL").unwrap_or_else(|_| "bench".to_string())
+}
+
+/// PF_QUICK=1 shrinks sweeps for smoke runs.
+pub fn quick() -> bool {
+    std::env::var("PF_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}

@@ -1,0 +1,52 @@
+//! Fig. 3 — inference latency vs sequence length, cached vs no cache.
+//!
+//! The paper's headline: with the KV cache, per-token latency grows
+//! mildly (~2x across 128→2048); without it, latency explodes (the
+//! full-recompute path re-runs the whole prefix per token). We measure
+//! both paths on the real stack and report the growth ratios — the
+//! claim is the *shape*, not the absolute CPU numbers.
+
+include!("common.rs");
+
+use paged_flex::harness::{fig3_cache_scaling, print_table};
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = model_name();
+    let seqs: &[usize] = if quick() {
+        &[128, 256, 512]
+    } else {
+        &[128, 256, 512, 1024, 2048]
+    };
+    let decode_tokens = if quick() { 4 } else { 16 };
+    let rows = fig3_cache_scaling(&model, &dir, seqs, decode_tokens)
+        .expect("fig3 run failed");
+    print_table(
+        &format!("Fig.3: latency vs seq len, model={model}"),
+        &["seq", "cached_ms/tok", "nocache_ms/tok", "cached_x",
+          "nocache_x"],
+        &rows
+            .iter()
+            .map(|r| vec![
+                r.seq_len.to_string(),
+                f(r.cached_ms_per_token, 2),
+                f(r.nocache_ms_per_token, 2),
+                f(r.cached_ratio_vs_first, 2),
+                f(r.nocache_ratio_vs_first, 2),
+            ])
+            .collect::<Vec<_>>(),
+    );
+    let last = rows.last().unwrap();
+    println!("\nshape checks (paper: cached ~2x total, no-cache ~10x per \
+              doubling):");
+    println!("  cached growth {}x across the sweep: {}",
+             f(last.cached_ratio_vs_first, 2),
+             if last.cached_ratio_vs_first
+                 < 0.5 * last.nocache_ratio_vs_first
+             { "PASS (cached ≪ no-cache)" } else { "FAIL" });
+    println!("  no-cache growth {}x — grows much faster than cached: {}",
+             f(last.nocache_ratio_vs_first, 2),
+             if last.nocache_ratio_vs_first
+                 > 2.0 * last.cached_ratio_vs_first
+             { "PASS" } else { "FAIL" });
+}

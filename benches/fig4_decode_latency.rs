@@ -1,0 +1,43 @@
+//! Fig. 4 — steady-state decode ms/token across sequence lengths:
+//! PagedAttention vs the default (monolithic-cache) kernel, ±1σ over
+//! repeated runs, exactly the series the paper plots.
+
+include!("common.rs");
+
+use paged_flex::harness::{fig4_decode_latency, print_table};
+
+fn main() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = model_name();
+    let seqs: &[usize] = if quick() {
+        &[128, 512]
+    } else {
+        &[128, 256, 512, 1024, 2048]
+    };
+    let (tokens, runs) = if quick() { (4, 2) } else { (12, 3) };
+    let rows = fig4_decode_latency(&model, &dir, seqs, tokens, runs)
+        .expect("fig4 run failed");
+    print_table(
+        &format!("Fig.4: decode ms/token ±1σ, paged vs default, \
+                  model={model}"),
+        &["seq", "paged_ms", "±σ", "default_ms", "±σ"],
+        &rows
+            .iter()
+            .map(|r| vec![
+                r.seq_len.to_string(),
+                f(r.paged_ms_mean, 2),
+                f(r.paged_ms_std, 2),
+                f(r.default_ms_mean, 2),
+                f(r.default_ms_std, 2),
+            ])
+            .collect::<Vec<_>>(),
+    );
+    let wins = rows
+        .iter()
+        .filter(|r| r.paged_ms_mean <= r.default_ms_mean)
+        .count();
+    println!("\nshape check: paged ≤ default on {wins}/{} points \
+              (paper: paged consistently lower): {}",
+             rows.len(),
+             if wins * 2 >= rows.len() { "PASS" } else { "FAIL" });
+}

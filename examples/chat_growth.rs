@@ -1,0 +1,101 @@
+//! Scenario (c): growing-context chat — one conversation whose context
+//! doubles turn over turn (paper: 1k → 32k; scaled here to the model's
+//! 2k max). Each turn appends user text via chunked paged prefill
+//! (re-using every cached page) and decodes a short reply; we report
+//! per-turn extension latency, decode latency, and page growth.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use paged_flex::config::EngineConfig;
+use paged_flex::engine::{argmax, Engine};
+use paged_flex::trace::{synthetic_corpus, Rng};
+
+fn main() {
+    let model =
+        std::env::var("PF_MODEL").unwrap_or_else(|_| "bench".to_string());
+    let dir = std::env::var("PF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    let mut cfg = EngineConfig::default();
+    cfg.model = model.clone();
+    cfg.artifacts_dir = dir;
+    let mut eng = Engine::new(cfg).expect("run `make artifacts` first");
+    let spec = eng.rt.spec().clone();
+    let reply = 8usize;
+
+    let mut rng = Rng::seeded(11);
+    let id = eng.fresh_seq_id();
+    let pe = eng.paged.as_mut().unwrap();
+
+    println!("chat growth on '{model}': context doubling to {}",
+             spec.max_seq_len);
+    println!("{:>6} {:>8} {:>12} {:>12} {:>8} {:>10}",
+             "turn", "context", "extend_ms", "ms/decode_tok", "pages",
+             "pool_MB");
+
+    let mut turn = 0;
+    let mut target = spec.max_seq_len / 16; // 128 for a 2k context
+    let mut first = true;
+    while target + reply <= spec.max_seq_len {
+        let have = if first { 0 } else {
+            pe.seq(id).map(|s| s.tokens.len()).unwrap_or(0)
+        };
+        let extend = target - have;
+        let text = synthetic_corpus(&mut rng, extend,
+                                    spec.vocab_size as u32);
+        let t0 = Instant::now();
+        let mut logits = if first {
+            pe.admit(id, &text).unwrap();
+            first = false;
+            loop {
+                let out = pe.prefill_chunk(&eng.rt, &[id], 512).unwrap();
+                let (_, done, row) = out.into_iter().next().unwrap();
+                if done { break row; }
+            }
+        } else {
+            // chunked extension over the existing pages
+            pe.extend_sequence(id, &text).unwrap();
+            loop {
+                let out = pe.prefill_chunk(&eng.rt, &[id], 512).unwrap();
+                let (_, done, row) = out.into_iter().next().unwrap();
+                if done { break row; }
+            }
+        };
+        let extend_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t0 = Instant::now();
+        for _ in 0..reply {
+            let tok = argmax(&logits);
+            logits = pe
+                .decode_step(&eng.rt, &[id], &[tok])
+                .unwrap()
+                .into_iter()
+                .next()
+                .unwrap()
+                .1;
+        }
+        let decode_ms = t0.elapsed().as_secs_f64() * 1e3 / reply as f64;
+
+        let table = pe.mgr.table(id).unwrap();
+        println!("{:>6} {:>8} {:>12.1} {:>12.2} {:>8} {:>10.2}",
+                 turn,
+                 table.len_tokens(),
+                 extend_ms,
+                 decode_ms,
+                 table.n_blocks(),
+                 pe.mgr.allocator().audit().reserved_bytes() as f64
+                     / 1e6);
+        turn += 1;
+        target *= 2;
+    }
+    let audit = pe.mgr.allocator().audit();
+    println!("\npeak reserved {:.2} MB; overhead vs live {:.2}%",
+             audit.peak_reserved_bytes() as f64 / 1e6,
+             audit.overhead_pct());
+    pe.release(id).unwrap();
+    println!("released; free pages back to {}",
+             eng.paged.as_ref().unwrap().mgr.allocator().free_pages());
+}

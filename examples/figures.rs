@@ -1,0 +1,100 @@
+//! Regenerate every figure's data in one run, writing CSVs to results/.
+//!
+//! ```text
+//! cargo run --release --example figures           # allocator-level figs
+//! cargo run --release --example figures -- all    # + engine-backed 3/4
+//! ```
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use paged_flex::harness::*;
+use paged_flex::kvpage::GrowthPolicy;
+use paged_flex::sim::Llama7b;
+
+fn save(name: &str, header: &str, lines: Vec<String>) {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path).unwrap();
+    writeln!(f, "{header}").unwrap();
+    for l in lines {
+        writeln!(f, "{l}").unwrap();
+    }
+    println!("wrote {}", path.display());
+}
+
+fn main() {
+    let engine_figs = std::env::args().any(|a| a == "all");
+    let kvb = Llama7b::kv_bytes_per_token();
+
+    // Fig 1
+    let seqs = [128, 256, 512, 1024, 2048, 2560, 3072, 4096, 6144, 8192];
+    let rows = fig1_memory(GrowthPolicy::PowerOfTwo, 16, kvb, &seqs);
+    save("fig1_memory.csv", "seq,reserved_tokens,kv_gb,total_gb",
+         rows.iter().map(|r| format!(
+             "{},{},{:.4},{:.3}", r.seq_len, r.reserved_tokens,
+             r.l4_kv_gb, r.l4_total_gb)).collect());
+
+    // Fig 2
+    let seqs = [128, 256, 512, 1024, 1536, 2048];
+    let rows = fig2_memory_compare(16, kvb, 2048, &seqs);
+    save("fig2_compare.csv",
+         "seq,paged_tokens,default_tokens,paged_gb,default_gb",
+         rows.iter().map(|r| format!(
+             "{},{},{},{:.3},{:.3}", r.seq_len, r.paged_tokens,
+             r.baseline_tokens, r.paged_l4_gb, r.baseline_l4_gb))
+             .collect());
+
+    // overhead + page grid
+    let rows = memory_overhead_table(16, 500, 8000, 16, kvb);
+    save("overhead.csv",
+         "policy,page,live_tokens,reserved_tokens,overhead_pct",
+         rows.iter().map(|r| format!(
+             "{},{},{},{},{:.3}", r.policy, r.page_size, r.live_tokens,
+             r.reserved_tokens, r.overhead_pct)).collect());
+    let rows = page_size_grid(&[4, 8, 16, 32, 64, 128], 16, 500, 8000,
+                              kvb);
+    save("page_size_grid.csv",
+         "page,overhead_pct,table_entries,page_bytes,dma_granules",
+         rows.iter().map(|r| format!(
+             "{},{:.3},{},{},{:.1}", r.page_size, r.overhead_pct,
+             r.table_entries_per_seq, r.page_bytes, r.dma_efficiency))
+             .collect());
+
+    // allocator
+    let rows = allocator_bench(&[1, 2, 4, 8], 200_000);
+    save("allocator.csv", "threads,ops,ns_per_op,mops_per_sec",
+         rows.iter().map(|r| format!(
+             "{},{},{:.1},{:.3}", r.threads, r.ops, r.ns_per_op,
+             r.mops_per_sec)).collect());
+
+    if engine_figs {
+        let dir = std::env::var("PF_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                    .join("artifacts")
+            });
+        let model = std::env::var("PF_MODEL")
+            .unwrap_or_else(|_| "bench".to_string());
+        let seqs = [128usize, 256, 512, 1024, 2048];
+        let rows = fig3_cache_scaling(&model, &dir, &seqs, 16).unwrap();
+        save("fig3_latency.csv",
+             "seq,cached_ms,nocache_ms,cached_x,nocache_x",
+             rows.iter().map(|r| format!(
+                 "{},{:.3},{:.3},{:.3},{:.3}", r.seq_len,
+                 r.cached_ms_per_token, r.nocache_ms_per_token,
+                 r.cached_ratio_vs_first, r.nocache_ratio_vs_first))
+                 .collect());
+        let rows = fig4_decode_latency(&model, &dir, &seqs, 12, 3)
+            .unwrap();
+        save("fig4_decode.csv",
+             "seq,paged_ms,paged_std,default_ms,default_std",
+             rows.iter().map(|r| format!(
+                 "{},{:.3},{:.3},{:.3},{:.3}", r.seq_len,
+                 r.paged_ms_mean, r.paged_ms_std, r.default_ms_mean,
+                 r.default_ms_std)).collect());
+    }
+    println!("done.");
+}

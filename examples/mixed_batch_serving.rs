@@ -1,0 +1,122 @@
+//! END-TO-END SERVING DRIVER — scenario (b), the full stack on a real
+//! small workload (DESIGN.md §4): a TCP server loads the `small` model
+//! (~18M params, LLaMA architecture), concurrent client threads submit
+//! 16 mixed-length requests over the JSON-lines protocol, and the run
+//! reports latency/throughput + the paged allocator's memory behaviour.
+//! Recorded in EXPERIMENTS.md.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example mixed_batch_serving
+//! PF_QUICK=1 ...   # smaller sweep on the bench model
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use paged_flex::config::EngineConfig;
+use paged_flex::server::{self, Client};
+use paged_flex::trace::mixed_batch;
+use paged_flex::util::json::Value;
+
+fn main() {
+    let quick = std::env::var("PF_QUICK").map(|v| v == "1")
+        .unwrap_or(false);
+    let model = std::env::var("PF_MODEL").unwrap_or_else(|_| {
+        if quick { "bench" } else { "small" }.to_string()
+    });
+    let dir = std::env::var("PF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+
+    let mut cfg = EngineConfig::default();
+    cfg.model = model.clone();
+    cfg.artifacts_dir = dir;
+    cfg.scheduler.max_batch_size = 8;
+
+    let (n_req, max_new) = if quick { (6, 8) } else { (16, 16) };
+    println!("e2e serving: model={model} requests={n_req} \
+              max_new={max_new}");
+
+    // spin up the real server on an ephemeral port
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || {
+        server::serve_config(server_cfg, "127.0.0.1:0", move |a| {
+            addr_tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = addr_rx.recv().unwrap().to_string();
+    println!("server up at {addr}");
+
+    // the paper's mixed batch: lengths uniform on a grid scaled to the
+    // model's context (paper: 500..8000 on 32k-class contexts)
+    let probe = Client::connect(&addr);
+    drop(probe);
+    let max_len = 2048 - max_new - 1;
+    let reqs = mixed_batch(7, 512, n_req, max_len / 16, max_len, max_new);
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = reqs
+        .into_iter()
+        .map(|r| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let t0 = Instant::now();
+                let body = Value::obj(vec![
+                    ("op", Value::str("generate")),
+                    ("prompt", Value::arr(
+                        r.prompt.iter().map(|&t| Value::num(t as f64)))),
+                    ("max_new_tokens",
+                     Value::num(r.max_new_tokens as f64)),
+                ]);
+                let v = c.request(&body).unwrap();
+                assert!(v.opt("error").is_none(), "{}", v.to_json());
+                (
+                    r.prompt.len(),
+                    v.get("tokens").unwrap().as_array().unwrap().len(),
+                    v.get("ttft_ms").unwrap().as_f64().unwrap(),
+                    v.get("total_ms").unwrap().as_f64().unwrap(),
+                    v.get("preemptions").unwrap().as_f64().unwrap(),
+                    t0.elapsed().as_secs_f64() * 1e3,
+                )
+            })
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for h in handles {
+        rows.push(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n{:>6} {:>6} {:>10} {:>10} {:>8} {:>10}",
+             "prompt", "gen", "ttft_ms", "total_ms", "preempt",
+             "client_ms");
+    rows.sort_by_key(|r| r.0);
+    for (p, g, ttft, total, pre, client) in &rows {
+        println!("{p:>6} {g:>6} {ttft:>10.1} {total:>10.1} {pre:>8} \
+                  {client:>10.1}");
+    }
+    let total_gen: usize = rows.iter().map(|r| r.1).sum();
+    let total_prompt: usize = rows.iter().map(|r| r.0).sum();
+    println!("\nwall {wall:.1}s | prefill {total_prompt} tok | decode \
+              {total_gen} tok | {:.2} decode tok/s | {:.1} total tok/s",
+             total_gen as f64 / wall,
+             (total_gen + total_prompt) as f64 / wall);
+
+    // server-side stats
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c
+        .request(&Value::obj(vec![("op", Value::str("stats"))]))
+        .unwrap();
+    println!("\nserver metrics:\n{}",
+             stats.get("summary").unwrap().as_str().unwrap());
+    c.shutdown().unwrap();
+    server.join().unwrap();
+    println!("\nE2E PASS: all layers composed (TCP -> coordinator -> \
+              paged engine -> PJRT AOT artifacts).");
+}

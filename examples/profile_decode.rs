@@ -1,0 +1,73 @@
+//! §Perf driver: phase-level breakdown of the decode hot path.
+//!
+//! Runs N decode steps at a given context length and dumps where the
+//! time goes (subpool gather / upload / execute / download / scatter) —
+//! the measurement that drives the EXPERIMENTS.md §Perf iteration log.
+//!
+//! ```text
+//! PF_MODEL=bench PF_CTX=1024 PF_STEPS=64 \
+//!   cargo run --release --example profile_decode
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use paged_flex::config::EngineConfig;
+use paged_flex::engine::{argmax, Engine};
+use paged_flex::trace::{synthetic_corpus, Rng};
+use paged_flex::util::profile;
+
+fn main() {
+    let model =
+        std::env::var("PF_MODEL").unwrap_or_else(|_| "bench".to_string());
+    let ctx: usize = std::env::var("PF_CTX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let steps: usize = std::env::var("PF_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    let dir = std::env::var("PF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    let mut cfg = EngineConfig::default();
+    cfg.model = model.clone();
+    cfg.artifacts_dir = dir;
+    let mut eng = Engine::new(cfg).expect("run `make artifacts` first");
+    let vocab = eng.rt.spec().vocab_size as u32;
+
+    let mut rng = Rng::seeded(1);
+    let prompt = synthetic_corpus(&mut rng, ctx - steps - 2, vocab);
+    let id = eng.fresh_seq_id();
+    let pe = eng.paged.as_mut().unwrap();
+    pe.admit(id, &prompt).unwrap();
+    let mut logits = loop {
+        let out = pe.prefill_chunk(&eng.rt, &[id], 512).unwrap();
+        let (_, done, row) = out.into_iter().next().unwrap();
+        if done { break row; }
+    };
+    // warm-up (compile) then reset counters
+    logits = pe.decode_step(&eng.rt, &[id], &[argmax(&logits)])
+        .unwrap().into_iter().next().unwrap().1;
+    profile::reset();
+
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let tok = argmax(&logits);
+        logits = pe
+            .decode_step(&eng.rt, &[id], &[tok])
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap()
+            .1;
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("model={model} ctx≈{ctx} steps={steps}: \
+              {:.2} ms/token total", total_ms / steps as f64);
+    println!("\n{}", profile::dump());
+    pe.release(id).unwrap();
+}

@@ -1,0 +1,57 @@
+//! Quickstart: load a model, generate text through the full paged stack.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! PF_MODEL=small cargo run --release --example quickstart
+//! ```
+
+use std::path::PathBuf;
+
+use paged_flex::config::EngineConfig;
+use paged_flex::coordinator::{Coordinator, Request};
+use paged_flex::engine::Engine;
+use paged_flex::tokenizer::Tokenizer;
+
+fn main() {
+    let model =
+        std::env::var("PF_MODEL").unwrap_or_else(|_| "tiny".to_string());
+    let dir = std::env::var("PF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+
+    let mut cfg = EngineConfig::default();
+    cfg.model = model.clone();
+    cfg.artifacts_dir = dir;
+
+    println!("loading '{model}' ...");
+    let engine = Engine::new(cfg).expect("run `make artifacts` first");
+    let spec = engine.rt.spec().clone();
+    println!(
+        "ready: {:.1}M params, pool = {} pages x {} tokens ({:.1} MB)",
+        spec.param_count as f64 / 1e6,
+        spec.n_pages,
+        spec.page_size,
+        spec.pool_bytes() as f64 / 1e6
+    );
+
+    let tok = Tokenizer::byte_level(spec.vocab_size as u32);
+    let prompt_text = "Paged attention meets flex attention: ";
+    let prompt = tok.encode_with_bos(prompt_text.as_bytes());
+
+    let mut coord = Coordinator::new(engine);
+    coord
+        .submit(Request::greedy(1, prompt, 32))
+        .unwrap();
+    let fins = coord.run_to_completion().unwrap();
+    let fin = &fins[0];
+    let text = tok.decode_lossy(&fin.tokens);
+    println!("\nprompt:    {prompt_text:?}");
+    println!("generated: {:?}", String::from_utf8_lossy(&text));
+    println!("\nTTFT {:.1} ms | total {:.1} ms | {:.1} tok/s decode",
+             fin.ttft_s * 1e3, fin.total_s * 1e3,
+             fin.tokens.len() as f64
+                 / (fin.total_s - fin.ttft_s).max(1e-9));
+    println!("\n{}", coord.metrics().summary());
+}

@@ -1,0 +1,270 @@
+"""AOT pipeline: lower every planned executable to HLO *text* + manifest.
+
+Interchange format is HLO text, NOT `XlaComputation.serialize()`: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a jax.jit lowering of one `model.forward_*` entry point
+with the flat parameter list as leading arguments. KV pools / caches are
+donated (`donate_argnums`), which survives to `input_output_alias` in the
+HLO text and lets PJRT update them in place — Alg. 1's ASSIGN without a
+copy of the pool.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts \
+            [--configs tiny,bench,small] [--force]
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import AOT_PLAN, CONFIGS, ModelConfig
+from .weights import save_weights
+
+WEIGHT_SEED = 42
+MANIFEST_VERSION = 1
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_specs(cfg: ModelConfig):
+    return [_spec(shape) for _, shape in model.param_spec(cfg)]
+
+
+def _pool_shape(cfg: ModelConfig, n_pages=None):
+    """Pool tensor shape. Model artifacts use the *active subpool* sized
+    to the batch (B * max_blocks_per_seq pages): the runtime gathers the
+    pages referenced by the step's block tables into this dense window and
+    remaps table entries, so per-step upload scales with the active set,
+    not pool capacity (DESIGN.md §5). Pool-service artifacts keep the full
+    cfg.n_pages shape."""
+    if n_pages is None:
+        n_pages = cfg.n_pages
+    return (cfg.n_layers, n_pages, cfg.page_size, cfg.n_kv_heads,
+            cfg.d_head)
+
+
+def _cache_shape(cfg: ModelConfig, b: int):
+    return (cfg.n_layers, b, cfg.n_kv_heads, cfg.max_seq_len, cfg.d_head)
+
+
+def _wrap(cfg, entry, n_params):
+    """Bind cfg and re-split the flat AOT argument list."""
+
+    def fn(*args):
+        params = model.params_from_list(cfg, args[:n_params])
+        return entry(cfg, params, *args[n_params:])
+
+    return fn
+
+
+def build_artifacts(cfg: ModelConfig):
+    """Yield (name, kind, meta, fn, input_specs, donate_indices, takes_params).
+
+    donate indices are relative to the full flat arg list; manifest input
+    indices are relative to the post-params tail.
+    """
+    n = len(model.param_spec(cfg))
+    plan = AOT_PLAN[cfg.name]
+
+    for b, s in plan["prefill"]:
+        yield (
+            f"prefill_b{b}_s{s}", "prefill", {"batch": b, "seq": s},
+            _wrap(cfg, model.forward_prefill, n),
+            [("tokens", _spec((b, s), I32)), ("seq_lens", _spec((b,), I32))],
+            (), True,
+        )
+    for b in plan["decode"]:
+        yield (
+            f"decode_b{b}", "decode", {"batch": b},
+            _wrap(cfg, model.forward_decode, n),
+            [("tokens", _spec((b,), I32)),
+             ("k_cache", _spec(_cache_shape(cfg, b))),
+             ("v_cache", _spec(_cache_shape(cfg, b))),
+             ("seq_lens", _spec((b,), I32))],
+            (), True,  # cache write-back is Rust-side
+        )
+    paged_inputs = lambda b, c: [
+        ("tokens", _spec((b, c), I32)),
+        ("k_pool", _spec(_pool_shape(cfg, b * cfg.max_blocks_per_seq))),
+        ("v_pool", _spec(_pool_shape(cfg, b * cfg.max_blocks_per_seq))),
+        ("block_tables", _spec((b, cfg.max_blocks_per_seq), I32)),
+        ("cache_lens", _spec((b,), I32)),
+        ("chunk_lens", _spec((b,), I32)),
+    ]
+    for b in plan["paged_decode"]:
+        yield (
+            f"decode_paged_b{b}", "paged_decode", {"batch": b, "chunk": 1},
+            _wrap(cfg, model.forward_paged, n),
+            paged_inputs(b, 1),
+            (), True,  # pools are inputs only; ASSIGN is Rust-side
+        )
+    for b, c in plan["paged_chunk"]:
+        yield (
+            f"paged_chunk_b{b}_c{c}", "paged_chunk", {"batch": b, "chunk": c},
+            _wrap(cfg, model.forward_paged, n),
+            paged_inputs(b, c),
+            (), True,
+        )
+    for s in plan["nocache"]:
+        yield (
+            f"nocache_s{s}", "nocache", {"batch": 1, "seq": s},
+            _wrap(cfg, model.forward_nocache, n),
+            [("tokens", _spec((1, s), I32)), ("seq_lens", _spec((1,), I32))],
+            (), True,
+        )
+    for s in plan["logits"]:
+        yield (
+            f"logits_s{s}", "logits", {"batch": 1, "seq": s},
+            _wrap(cfg, model.forward_logits, n),
+            [("tokens", _spec((1, s), I32)), ("seq_lens", _spec((1,), I32))],
+            (), True,
+        )
+
+    # pool-service executables: no model params, pools donated
+    pool = _spec(_pool_shape(cfg))
+    nb = cfg.max_blocks_per_seq
+    page_block = _spec((cfg.n_layers, nb, cfg.page_size, cfg.n_kv_heads,
+                        cfg.d_head))
+    yield (
+        "copy_pages", "copy_pages", {},
+        functools.partial(model.copy_pages, cfg),
+        [("k_pool", pool), ("v_pool", pool),
+         ("src", _spec((nb,), I32)), ("dst", _spec((nb,), I32))],
+        (0, 1), False,
+    )
+    yield (
+        "read_pages", "read_pages", {},
+        functools.partial(model.read_pages, cfg),
+        [("k_pool", pool), ("v_pool", pool), ("idx", _spec((nb,), I32))],
+        (), False,
+    )
+    yield (
+        "write_pages", "write_pages", {},
+        functools.partial(model.write_pages, cfg),
+        [("k_pool", pool), ("v_pool", pool), ("idx", _spec((nb,), I32)),
+         ("k_vals", page_block), ("v_vals", page_block)],
+        (0, 1), False,
+    )
+
+
+def lower_artifact(fn, param_specs, input_specs, donate):
+    lowered = jax.jit(fn, donate_argnums=donate).lower(
+        *param_specs, *[s for _, s in input_specs])
+    out_tree = lowered.out_info
+    out_shapes = [
+        {"shape": list(o.shape), "dtype": str(o.dtype)}
+        for o in jax.tree_util.tree_leaves(out_tree)
+    ]
+    return to_hlo_text(lowered), out_shapes
+
+
+def export_config(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
+    os.makedirs(os.path.join(out_dir, cfg.name), exist_ok=True)
+    params = model.init_params(cfg, WEIGHT_SEED)
+    weights_file = f"weights_{cfg.name}.bin"
+    weights_path = os.path.join(out_dir, weights_file)
+    entries, sha = save_weights(cfg, params, weights_path)
+    print(f"[{cfg.name}] weights: {weights_file} "
+          f"({cfg.param_count() / 1e6:.1f}M params, sha {sha[:12]})")
+    del params
+
+    param_specs = _param_specs(cfg)
+    n_params = len(param_specs)
+    artifacts = {}
+    for (name, kind, meta, fn, input_specs, donate,
+         takes_params) in build_artifacts(cfg):
+        rel = os.path.join(cfg.name, f"{name}.hlo.txt")
+        path = os.path.join(out_dir, rel)
+        a_params = param_specs if takes_params else []
+        a_n = len(a_params)
+        record = {
+            "file": rel,
+            "kind": kind,
+            **meta,
+            "takes_params": takes_params,
+            "inputs": [
+                {"name": iname, "shape": list(s.shape), "dtype": str(s.dtype)}
+                for iname, s in input_specs
+            ],
+            "donated_inputs": [d - a_n for d in donate],
+        }
+        if os.path.exists(path) and not force:
+            # Staleness of sources is handled by the Makefile; reuse output
+            # shapes by re-deriving them from a cheap abstract eval.
+            t0 = time.time()
+            _, out_shapes = lower_artifact(fn, a_params, input_specs,
+                                           donate)
+            record["outputs"] = out_shapes
+            artifacts[name] = record
+            print(f"[{cfg.name}] {name}: exists, kept "
+                  f"({time.time() - t0:.1f}s)")
+            continue
+        t0 = time.time()
+        text, out_shapes = lower_artifact(fn, a_params, input_specs,
+                                          donate)
+        with open(path + ".tmp", "w") as f:
+            f.write(text)
+        os.replace(path + ".tmp", path)
+        record["outputs"] = out_shapes
+        artifacts[name] = record
+        print(f"[{cfg.name}] {name}: {len(text) / 1e6:.2f} MB HLO "
+              f"({time.time() - t0:.1f}s)")
+    return {
+        "model": cfg.to_dict(),
+        "weights_file": weights_file,
+        "weights_sha256": sha,
+        "n_params": n_params,
+        "params": entries,
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,bench,small")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": MANIFEST_VERSION, "configs": {}}
+    t0 = time.time()
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name.strip()]
+        manifest["configs"][cfg.name] = export_config(cfg, args.out,
+                                                      args.force)
+    man_path = os.path.join(args.out, "manifest.json")
+    with open(man_path + ".tmp", "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(man_path + ".tmp", man_path)
+    print(f"manifest: {man_path} ({time.time() - t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Model-size registry and AOT bucket plan.
+
+Mirrored by Rust `model::ModelSpec` (rust/src/model/mod.rs): the two must
+agree on every field — the manifest written by `aot.py` is the contract, and
+Rust validates its copy against it at load time.
+
+Scale substitution (DESIGN.md §1): the paper runs LLaMA-7B; we keep the
+exact architecture (RMSNorm, RoPE, SwiGLU, GQA-capable MHA) at CPU-feasible
+sizes. KV-cache geometry — the quantity every experiment in the paper
+actually measures — is preserved structurally: bytes/token =
+n_layers * n_kv_heads * d_head * 4 B * 2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq_len: int      # M: contiguous-cache capacity AND paged max ctx
+    page_size: int        # tokens per KV page (paper Sec. III-B: 64-128 on
+    #                       GPU; 16 here = one (16,128)-friendly TPU tile)
+    n_pages: int          # P: pool capacity in pages (per layer)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def max_blocks_per_seq(self) -> int:
+        return self.max_seq_len // self.page_size
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """f32 K+V bytes per token across all layers."""
+        return self.n_layers * self.n_kv_heads * self.d_head * 4 * 2
+
+    @property
+    def pooled_tokens(self) -> int:
+        return self.n_pages * self.page_size
+
+    def param_count(self) -> int:
+        d, dh, ff, v = self.d_model, self.d_head, self.d_ff, self.vocab_size
+        per_layer = (
+            d * self.n_heads * dh          # wq
+            + 2 * d * self.n_kv_heads * dh  # wk, wv
+            + self.n_heads * dh * d        # wo
+            + 3 * d * ff                   # gate, up, down
+            + 2 * d                        # two norms
+        )
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def to_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["d_head"] = self.d_head
+        out["max_blocks_per_seq"] = self.max_blocks_per_seq
+        out["kv_bytes_per_token"] = self.kv_bytes_per_token
+        out["param_count"] = self.param_count()
+        return out
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    # tests / CI: seconds-fast end to end
+    "tiny": ModelConfig(
+        name="tiny", vocab_size=512, d_model=64, n_layers=2, n_heads=4,
+        n_kv_heads=2, d_ff=176, max_seq_len=128, page_size=8, n_pages=64),
+    # benchmark harness: the paper's 128..2048 sweeps at CPU-feasible cost
+    "bench": ModelConfig(
+        name="bench", vocab_size=512, d_model=256, n_layers=4, n_heads=4,
+        n_kv_heads=2, d_ff=704, max_seq_len=2048, page_size=16,
+        n_pages=512),
+    # e2e serving example: ~18M params, LLaMA-7B geometry scaled down
+    "small": ModelConfig(
+        name="small", vocab_size=512, d_model=512, n_layers=6, n_heads=8,
+        n_kv_heads=4, d_ff=1408, max_seq_len=2048, page_size=16,
+        n_pages=512),
+}
+
+
+# AOT bucket plan: which executables `aot.py` lowers per config.
+#   prefill      (B, S)  contiguous-cache prefill
+#   decode       B       contiguous-cache decode step
+#   paged_decode B       paged decode step (chunk == 1 fast path)
+#   paged_chunk  (B, C)  paged prefill/extension chunk (cache_lens == 0 is
+#                        cold-start prefill; > 0 is chat-growth extension)
+#   nocache      S       full-recompute forward (Fig 3 baseline)
+#   logits       S       full-sequence logits (perplexity)
+AotPlan = Dict[str, List]
+
+AOT_PLAN: Dict[str, AotPlan] = {
+    "tiny": dict(
+        prefill=[(2, 64)],
+        decode=[2],
+        paged_decode=[2],
+        paged_chunk=[(1, 32), (2, 64)],
+        nocache=[64],
+        logits=[64],
+    ),
+    "bench": dict(
+        prefill=[(1, 128), (1, 512), (1, 2048)],
+        decode=[1, 4],
+        paged_decode=[1, 4, 8, 16],
+        paged_chunk=[(1, 128), (1, 512), (1, 1024), (1, 2048), (4, 512),
+                     (8, 512), (16, 512)],
+        nocache=[128, 256, 512, 1024, 2048],
+        logits=[512],
+    ),
+    "small": dict(
+        prefill=[(1, 512), (4, 512)],
+        decode=[1, 4],
+        paged_decode=[1, 2, 4, 8],
+        paged_chunk=[(1, 512), (2, 512), (4, 512), (8, 512), (1, 2048)],
+        nocache=[],
+        logits=[512],
+    ),
+}
+
+
+def prefill_buckets(name: str) -> List[Tuple[int, int]]:
+    return AOT_PLAN[name]["prefill"]

@@ -1,0 +1,13 @@
+"""L1 — Pallas kernels for paged + flex attention (build-time only).
+
+Public surface:
+    flex.flex_attention            fused FlexAttention engine (mask/score mods)
+    flex.create_block_mask         sound BlockMask builder
+    flex.create_block_mask_coarse  corner-sampled BlockMask (monotone mods)
+    mods.*                         mask_mod / score_mod library
+    paged_attention.paged_decode_attention   decode over KV pages (Alg. 1 GATHER)
+    paged_prefill.paged_prefill_attention    chunked prefill over pages + chunk
+    ref.*                          dense jnp oracles for all of the above
+"""
+
+from . import flex, mods, paged_attention, paged_prefill, ref  # noqa: F401

@@ -1,0 +1,242 @@
+"""FlexAttention-style mask_mod / score_mod library.
+
+The paper leverages PyTorch FlexAttention's contract: attention variants are
+expressed as two small index-level callables that the compiler fuses into a
+single kernel,
+
+    mask_mod(b, h, q_idx, kv_idx)           -> bool   (True = attend)
+    score_mod(score, b, h, q_idx, kv_idx)   -> score
+
+Here the same contract is traced into our Pallas kernel (`flex.py`). All
+mods must be pure jnp functions of broadcastable integer arrays — they are
+evaluated both element-wise inside kernel tiles and block-wise when the
+BlockMask is built, so they must not assume scalar inputs.
+
+Mods that depend on *data* (per-batch lengths, sequence ids, bias tables)
+cannot capture those arrays as closure constants: Pallas requires every
+array entering a kernel to be an explicit input. Such mods are `Mod`
+instances carrying `aux` arrays; `flex.flex_attention` hoists the aux into
+kernel inputs and re-binds them inside the kernel (the analog of
+FlexAttention passing auxiliary vectors "as bias", Sec. III-B of the paper).
+
+The paper's own kernel (Sec. III-B) is `sequence_local`: allow iff
+(id_q == id_k) AND (kv < len(id_q)), built from a sequence-id vector and a
+prefix-sum vector — both constructed here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class Mod:
+    """A mask/score mod with explicit auxiliary arrays.
+
+    `fn` receives the index args followed by the aux arrays. Calling the Mod
+    directly (host-side: oracles, BlockMask builders) injects the stored
+    aux; the Pallas kernel instead re-binds aux to values loaded from kernel
+    input refs via `bind`.
+    """
+
+    __slots__ = ("fn", "aux")
+
+    def __init__(self, fn, aux=()):
+        self.fn = fn
+        self.aux = tuple(jnp.asarray(a) for a in aux)
+
+    def __call__(self, *idx_args):
+        return self.fn(*idx_args, *self.aux)
+
+    def bind(self, aux_vals):
+        """Return a plain callable with aux replaced by `aux_vals`."""
+        fn = self.fn
+        aux_vals = tuple(aux_vals)
+        return lambda *idx_args: fn(*idx_args, *aux_vals)
+
+
+def as_mod(m):
+    """Normalize a plain callable or Mod to a Mod."""
+    if m is None or isinstance(m, Mod):
+        return m
+    return Mod(lambda *args, _f=m: _f(*args))
+
+
+# ---------------------------------------------------------------------------
+# mask mods
+# ---------------------------------------------------------------------------
+
+
+def causal(b, h, q_idx, kv_idx):
+    """Standard autoregressive mask: each query sees itself and the past."""
+    return kv_idx <= q_idx
+
+
+def full(b, h, q_idx, kv_idx):
+    """No masking (bidirectional attention)."""
+    shape = jnp.broadcast_shapes(jnp.shape(q_idx), jnp.shape(kv_idx))
+    return jnp.full(shape, True)
+
+
+def sliding_window(window: int):
+    """Causal sliding-window mask of `window` tokens (Mistral-style)."""
+
+    def mod(b, h, q_idx, kv_idx):
+        return (kv_idx <= q_idx) & (q_idx - kv_idx < window)
+
+    return mod
+
+
+def prefix_lm(prefix_len: int):
+    """Bidirectional over the first `prefix_len` tokens, causal after."""
+
+    def mod(b, h, q_idx, kv_idx):
+        return (kv_idx < prefix_len) | (kv_idx <= q_idx)
+
+    return mod
+
+
+def padded_causal(seq_lens):
+    """Causal, but keys beyond the per-batch live length are dead.
+
+    seq_lens: [B] int array, aux-bound (indexed by the mod's `b` argument).
+    """
+
+    def fn(b, h, q_idx, kv_idx, seq_lens):
+        return (kv_idx <= q_idx) & (kv_idx < seq_lens[b])
+
+    return Mod(fn, aux=(seq_lens,))
+
+
+def sequence_local(seq_ids, seq_lens):
+    """The paper's jagged-batch mask (Sec. III-B).
+
+    Multiple variable-length sequences are packed along one axis;
+    `seq_ids[t]` gives the sequence owning slot t and `seq_lens[s]` the live
+    length of sequence s. allow <=> (id_q == id_k) & causal-within-sequence
+    & kv within the live length — exactly the paper's
+    (id_q = id_k) AND (k <= len(id_q)) with causality made explicit. The
+    prefix-sum start-offset vector is the paper's second auxiliary vector.
+    """
+    seq_ids = jnp.asarray(seq_ids)
+    starts = prefix_starts(seq_ids)
+
+    def fn(b, h, q_idx, kv_idx, seq_ids, seq_lens, starts):
+        same = seq_ids[q_idx] == seq_ids[kv_idx]
+        kv_local = kv_idx - starts[seq_ids[kv_idx]]
+        live = kv_local < seq_lens[seq_ids[q_idx]]
+        return same & (kv_idx <= q_idx) & live
+
+    return Mod(fn, aux=(seq_ids, seq_lens, starts))
+
+
+def prefix_starts(seq_ids):
+    """Prefix-sum auxiliary vector: start offset of each sequence id.
+
+    For seq_ids like [0,0,0,1,1,2,...] returns [0,3,5,...]. This is the
+    second auxiliary vector of Sec. III-B.
+    """
+    seq_ids = jnp.asarray(seq_ids)
+    n = int(seq_ids.max()) + 1 if seq_ids.size else 0
+    counts = jnp.bincount(seq_ids, length=n)
+    return jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+
+
+def document(doc_ids):
+    """Document mask: attend only within the same document, causal."""
+
+    def fn(b, h, q_idx, kv_idx, doc_ids):
+        return (doc_ids[q_idx] == doc_ids[kv_idx]) & (kv_idx <= q_idx)
+
+    return Mod(fn, aux=(doc_ids,))
+
+
+def and_masks(*mask_mods):
+    """Conjunction of mask mods (FlexAttention's and_masks)."""
+    norm = [as_mod(m) for m in mask_mods]
+    splits = _aux_splits(norm)
+
+    def fn(b, h, q_idx, kv_idx, *aux):
+        out = None
+        for m, (lo, hi) in zip(norm, splits):
+            r = m.fn(b, h, q_idx, kv_idx, *aux[lo:hi])
+            out = r if out is None else (out & r)
+        return out
+
+    return Mod(fn, aux=[a for m in norm for a in m.aux])
+
+
+def or_masks(*mask_mods):
+    """Disjunction of mask mods (FlexAttention's or_masks)."""
+    norm = [as_mod(m) for m in mask_mods]
+    splits = _aux_splits(norm)
+
+    def fn(b, h, q_idx, kv_idx, *aux):
+        out = None
+        for m, (lo, hi) in zip(norm, splits):
+            r = m.fn(b, h, q_idx, kv_idx, *aux[lo:hi])
+            out = r if out is None else (out | r)
+        return out
+
+    return Mod(fn, aux=[a for m in norm for a in m.aux])
+
+
+def _aux_splits(norm_mods):
+    splits, off = [], 0
+    for m in norm_mods:
+        splits.append((off, off + len(m.aux)))
+        off += len(m.aux)
+    return splits
+
+
+# ---------------------------------------------------------------------------
+# score mods
+# ---------------------------------------------------------------------------
+
+
+def identity_score(score, b, h, q_idx, kv_idx):
+    return score
+
+
+def alibi(n_heads: int):
+    """ALiBi linear positional bias: score -= slope(h) * (q - kv)."""
+
+    def mod(score, b, h, q_idx, kv_idx):
+        # slope = 2^-(8*(h+1)/H), the standard ALiBi schedule.
+        slope = jnp.exp2(-8.0 * (jnp.asarray(h, jnp.float32) + 1.0) / n_heads)
+        return score - slope * (q_idx - kv_idx).astype(jnp.float32)
+
+    return mod
+
+
+def soft_cap(cap: float):
+    """Gemma2-style logit soft-capping: cap * tanh(score / cap)."""
+
+    def mod(score, b, h, q_idx, kv_idx):
+        return cap * jnp.tanh(score / cap)
+
+    return mod
+
+
+def relative_bias(bias_table):
+    """Learned relative-position bias lookup, clamped to the table size."""
+    span = jnp.asarray(bias_table).shape[-1]
+
+    def fn(score, b, h, q_idx, kv_idx, bias_table):
+        rel = jnp.clip(q_idx - kv_idx, 0, span - 1)
+        return score + bias_table[h, rel]
+
+    return Mod(fn, aux=(bias_table,))
+
+
+def compose_scores(*score_mods):
+    """Apply score mods left-to-right."""
+    norm = [as_mod(m) for m in score_mods]
+    splits = _aux_splits(norm)
+
+    def fn(score, b, h, q_idx, kv_idx, *aux):
+        for m, (lo, hi) in zip(norm, splits):
+            score = m.fn(score, b, h, q_idx, kv_idx, *aux[lo:hi])
+        return score
+
+    return Mod(fn, aux=[a for m in norm for a in m.aux])

@@ -1,0 +1,109 @@
+"""Pallas paged decode attention — Alg. 1 GATHER fused into the kernel.
+
+Decode-time attention of one new query token per sequence over that
+sequence's KV pages, addressed through its block table. This is the kernel
+the paper builds with FlexAttention's `mask_mod` (Sec. III-B): instead of a
+dense gather into contiguous buffers (ref.gather_pages), the page
+indirection happens *inside* the fused kernel — each KV tile load is a
+block-table-indexed dynamic slice on the pool's leading (page) axis, the TPU
+analog of vLLM's coalesced page reads.
+
+Pool layout (shared with the Rust `kvpage` pool and the L2 model):
+    k_pages, v_pages : [P, page_size, Hkv, D]
+    block_tables     : [B, max_blocks] int32 (entries beyond the live range
+                       may be arbitrary: they are masked by seq_lens)
+    seq_lens         : [B] int32, live tokens per sequence (incl. current)
+
+Grid is (B, H): one step per (sequence, query head). The page loop is a
+`fori_loop` bounded by the *live* block count, so dead table tail entries
+are never touched — matching the O(len) work bound of Alg. 1 GATHER.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           scale=None, interpret=True):
+    """q [B,H,D] against paged KV; returns [B,H,D].
+
+    seq_lens counts the tokens each query may attend to (the current token's
+    K/V must already be ASSIGNed into the pool by the page manager).
+    """
+    b, h, d = q.shape
+    n_pages, page_size, hkv, d2 = k_pages.shape
+    assert d == d2 and h % hkv == 0
+    n_rep = h // hkv
+    max_blocks = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    orig_dtype = q.dtype
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, page_size=page_size,
+        n_rep=n_rep, d=d)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+            # Whole pool visible to every grid step; page selection is a
+            # runtime dynamic slice driven by the block table (GATHER).
+            pl.BlockSpec((n_pages, page_size, hkv, d),
+                         lambda bi, hi: (0, 0, 0, 0)),
+            pl.BlockSpec((n_pages, page_size, hkv, d),
+                         lambda bi, hi: (0, 0, 0, 0)),
+            pl.BlockSpec((1, max_blocks), lambda bi, hi: (bi, 0)),
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=interpret,
+    )(q.astype(jnp.float32), k_pages.astype(jnp.float32),
+      v_pages.astype(jnp.float32), block_tables.astype(jnp.int32),
+      seq_lens.astype(jnp.int32))
+    return out.astype(orig_dtype)
+
+
+def _paged_decode_kernel(q_ref, kp_ref, vp_ref, bt_ref, sl_ref, o_ref, *,
+                         scale, page_size, n_rep, d):
+    hi = pl.program_id(1)
+    kvh = hi // n_rep
+    q = q_ref[0, 0] * scale  # [D]
+    seq_len = sl_ref[0]
+    n_blocks = (seq_len + page_size - 1) // page_size
+
+    def body(j, carry):
+        m, l, acc = carry
+        page = pl.load(bt_ref, (0, pl.ds(j, 1)))[0]
+        # [1, page, 1, D] -> [page, D]; one contiguous DMA per page.
+        k_blk = pl.load(kp_ref, (pl.ds(page, 1), slice(None),
+                                 pl.ds(kvh, 1), slice(None)))
+        k_blk = k_blk.reshape(page_size, d)
+        v_blk = pl.load(vp_ref, (pl.ds(page, 1), slice(None),
+                                 pl.ds(kvh, 1), slice(None)))
+        v_blk = v_blk.reshape(page_size, d)
+        s = jnp.dot(k_blk, q)  # [page]
+        t = j * page_size + jax.lax.iota(jnp.int32, page_size)
+        live = t < seq_len
+        s = jnp.where(live, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max())
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(live, jnp.exp(s - m_new), 0.0)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    init = (jnp.float32(NEG_INF), jnp.float32(0.0),
+            jnp.zeros((d,), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[0, 0] = acc / jnp.maximum(l, 1e-30)

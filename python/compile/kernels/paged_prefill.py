@@ -1,0 +1,170 @@
+"""Pallas chunked-prefill attention over paged KV (context extension).
+
+Serves the paper's *Chat Growth* scenario (Sec. IV-A): a request arrives
+with `cache_len` tokens already resident in KV pages and extends its context
+by a chunk of C new tokens. Chunk queries must attend over
+
+    [ cached pages (via block table) ] ++ [ the chunk itself, causally ]
+
+in one fused kernel. The cached part is a page loop identical to
+`paged_attention`; the chunk part is a tile loop with the causal mask_mod
+applied at `q_offset = cache_len` — i.e. FlexAttention semantics with the
+paper's page-translation indexing, composed.
+
+Shapes: q/k/v chunk [B, H|Hkv, C, D]; pool/tables as in paged_attention;
+cache_lens [B] int32 (tokens already in pages, a multiple of 1 — pages may
+be partially filled). Output [B, H, C, D].
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_Q = 32
+
+
+def _ceil_to(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def paged_prefill_attention(q_chunk, k_chunk, v_chunk, k_pages, v_pages,
+                            block_tables, cache_lens, *, scale=None,
+                            block_q=DEFAULT_BLOCK_Q, pages_per_block=1,
+                            interpret=True):
+    """pages_per_block groups G pages into one loop iteration (G dynamic
+    page loads -> ONE [block_q, G*page] score block). Measured on the CPU
+    interpreter G=4 REGRESSED 12.2->18.2 ms/step (concat overhead beats
+    loop savings — EXPERIMENTS.md §Perf iteration 1), so the default is 1;
+    the knob exists because on real TPU larger G means larger MXU tiles
+    per DMA and is the first thing to re-tune (DESIGN.md §8)."""
+    b, h, c, d = q_chunk.shape
+    n_pages, page_size, hkv, d2 = k_pages.shape
+    assert d == d2 and h % hkv == 0
+    n_rep = h // hkv
+    max_blocks = block_tables.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    orig_dtype = q_chunk.dtype
+
+    c_p = _ceil_to(c, block_q)
+    fp32 = jnp.float32
+    q_chunk = q_chunk.astype(fp32)
+    k_chunk = k_chunk.astype(fp32)
+    v_chunk = v_chunk.astype(fp32)
+    if c_p != c:
+        pad = ((0, 0), (0, 0), (0, c_p - c), (0, 0))
+        q_chunk = jnp.pad(q_chunk, pad)
+        k_chunk = jnp.pad(k_chunk, pad)
+        v_chunk = jnp.pad(v_chunk, pad)
+    nq = c_p // block_q
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, scale=scale, page_size=page_size,
+        n_rep=n_rep, d=d, block_q=block_q, c=c, c_p=c_p,
+        g=max(1, pages_per_block), max_blocks=max_blocks)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, c_p, d),
+                         lambda bi, hi, qi, n_rep=n_rep: (bi, hi // n_rep, 0, 0)),
+            pl.BlockSpec((1, 1, c_p, d),
+                         lambda bi, hi, qi, n_rep=n_rep: (bi, hi // n_rep, 0, 0)),
+            pl.BlockSpec((n_pages, page_size, hkv, d),
+                         lambda bi, hi, qi: (0, 0, 0, 0)),
+            pl.BlockSpec((n_pages, page_size, hkv, d),
+                         lambda bi, hi, qi: (0, 0, 0, 0)),
+            pl.BlockSpec((1, max_blocks), lambda bi, hi, qi: (bi, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, qi: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, c_p, d), fp32),
+        interpret=interpret,
+    )(q_chunk, k_chunk, v_chunk, k_pages.astype(fp32),
+      v_pages.astype(fp32), block_tables.astype(jnp.int32),
+      cache_lens.astype(jnp.int32))
+    return out[:, :, :c].astype(orig_dtype)
+
+
+def _paged_prefill_kernel(q_ref, kc_ref, vc_ref, kp_ref, vp_ref, bt_ref,
+                          cl_ref, o_ref, *, scale, page_size, n_rep, d,
+                          block_q, c, c_p, g, max_blocks):
+    hi = pl.program_id(1)
+    qi = pl.program_id(2)
+    kvh = hi // n_rep
+    q_tile = q_ref[0, 0] * scale  # [block_q, D]
+    cache_len = cl_ref[0]
+    chunk_idx = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    # --- phase 1: cached pages via the block table (GATHER), processed
+    # in super-blocks of g pages per loop iteration -------------------------
+    n_cached_blocks = (cache_len + page_size - 1) // page_size
+    n_super = (n_cached_blocks + g - 1) // g
+    sb = g * page_size  # tokens per super-block
+
+    def page_body(j, carry):
+        m, l, acc = carry
+        k_parts, v_parts = [], []
+        for gi in range(g):
+            idx = j * g + gi if g > 1 else j
+            if g > 1:
+                idx = jnp.minimum(idx, max_blocks - 1)
+            page = pl.load(bt_ref, (0, pl.ds(idx, 1)))[0]
+            k_parts.append(pl.load(
+                kp_ref, (pl.ds(page, 1), slice(None), pl.ds(kvh, 1),
+                         slice(None))).reshape(page_size, d))
+            v_parts.append(pl.load(
+                vp_ref, (pl.ds(page, 1), slice(None), pl.ds(kvh, 1),
+                         slice(None))).reshape(page_size, d))
+        k_blk = (k_parts[0] if g == 1
+                 else jnp.concatenate(k_parts, axis=0))  # [g*page, D]
+        v_blk = (v_parts[0] if g == 1
+                 else jnp.concatenate(v_parts, axis=0))
+        t = j * sb + jax.lax.iota(jnp.int32, sb)
+        live = (t < cache_len)[None, :]  # cached tokens precede queries
+        s = jnp.dot(q_tile, k_blk.T)  # [block_q, g*page]
+        s = jnp.where(live, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(live, jnp.exp(s - m_new[:, None]), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    init = (jnp.full((block_q,), NEG_INF, jnp.float32),
+            jnp.zeros((block_q,), jnp.float32),
+            jnp.zeros((block_q, d), jnp.float32))
+    carry = jax.lax.fori_loop(0, n_super, page_body, init)
+
+    # --- phase 2: the chunk itself, causal, only tiles j <= qi ------------
+    def chunk_body(j, carry):
+        m, l, acc = carry
+        k_blk = pl.load(kc_ref, (0, 0, pl.ds(j * block_q, block_q),
+                                 slice(None)))
+        v_blk = pl.load(vc_ref, (0, 0, pl.ds(j * block_q, block_q),
+                                 slice(None)))
+        kv_idx = j * block_q + jax.lax.iota(jnp.int32, block_q)
+        allowed = (kv_idx[None, :] <= chunk_idx[:, None]) & \
+                  (kv_idx[None, :] < c)
+        s = jnp.dot(q_tile, k_blk.T)
+        s = jnp.where(allowed, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(allowed, jnp.exp(s - m_new[:, None]), 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, qi + 1, chunk_body, carry)
+    o_ref[0, 0] = acc / jnp.maximum(l, 1e-30)[:, None]

@@ -1,0 +1,158 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+These are the correctness signal: each Pallas kernel in `flex.py`,
+`paged_attention.py` and `paged_prefill.py` is pytest-checked against the
+corresponding function here with `assert_allclose`. Everything is written in
+the most obvious O(S^2) dense form — no tiling, no online softmax — so a bug
+in the optimized kernels cannot be mirrored here.
+
+Shape conventions (shared across the package):
+    q            [B, H,  Sq, D]    queries
+    k, v         [B, Hkv, Skv, D]  keys/values (GQA when Hkv < H)
+    k/v pages    [P, page, Hkv, D] the global paged KV pool (Alg. 1's K, V)
+    block_tables [B, max_blocks]   logical block -> physical page (page_table)
+    seq_lens     [B]               tokens currently live per sequence
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps softmax NaN-free when a
+# whole row is masked (exp(NEG_INF - NEG_INF) paths stay finite).
+
+
+def repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """Expand KV heads for grouped-query attention: [B,Hkv,S,D] -> [B,Hkv*n,S,D]."""
+    if n_rep == 1:
+        return x
+    b, h, s, d = x.shape
+    return jnp.broadcast_to(x[:, :, None], (b, h, n_rep, s, d)).reshape(
+        b, h * n_rep, s, d
+    )
+
+
+def ref_attention(q, k, v, mask=None, scale=None):
+    """Dense softmax(q k^T) v with an optional boolean mask.
+
+    mask broadcasts to [B, H, Sq, Skv]; True = attend.
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    n_rep = q.shape[1] // k.shape[1]
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def materialize_mask(mask_mod, b, h, sq, skv, q_offset=0):
+    """Evaluate a FlexAttention-style mask_mod on the full index grid.
+
+    mask_mod(b, h, q_idx, kv_idx) -> bool, with jnp broadcasting; this builds
+    the dense [B, H, Sq, Skv] boolean tensor the mod describes.
+    """
+    bi = jnp.arange(b)[:, None, None, None]
+    hi = jnp.arange(h)[None, :, None, None]
+    qi = (jnp.arange(sq) + q_offset)[None, None, :, None]
+    ki = jnp.arange(skv)[None, None, None, :]
+    return jnp.broadcast_to(mask_mod(bi, hi, qi, ki), (b, h, sq, skv))
+
+
+def ref_flex_attention(q, k, v, mask_mod=None, score_mod=None, scale=None,
+                       q_offset=0):
+    """Oracle for flex.flex_attention: dense eval of mask_mod/score_mod."""
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    n_rep = h // k.shape[1]
+    kf = repeat_kv(k, n_rep)
+    vf = repeat_kv(v, n_rep)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kf) * scale
+    if score_mod is not None:
+        bi = jnp.arange(b)[:, None, None, None]
+        hi = jnp.arange(h)[None, :, None, None]
+        qi = (jnp.arange(sq) + q_offset)[None, None, :, None]
+        ki = jnp.arange(skv)[None, None, None, :]
+        scores = score_mod(scores, bi, hi, qi, ki)
+    if mask_mod is not None:
+        mask = materialize_mask(mask_mod, b, h, sq, skv, q_offset)
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    denom = probs.sum(axis=-1, keepdims=True)
+    probs = probs / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+
+
+def gather_pages(pages, block_table, length, page_size):
+    """Alg. 1 GATHER for one sequence, dense: [len, Hkv, D] from the pool."""
+    n_blocks = (length + page_size - 1) // page_size
+    out = []
+    for j in range(n_blocks):
+        page = pages[int(block_table[j])]  # [page, Hkv, D]
+        take = min(page_size, length - j * page_size)
+        out.append(page[:take])
+    return jnp.concatenate(out, axis=0)
+
+
+def ref_paged_decode(q, k_pages, v_pages, block_tables, seq_lens, page_size,
+                     scale=None):
+    """Oracle for paged_attention.paged_decode_attention.
+
+    q: [B, H, D] (one new token per sequence). Gathers each sequence's pages
+    densely, then runs full attention of the single query over them.
+    """
+    b, h, d = q.shape
+    outs = []
+    for i in range(b):
+        length = int(seq_lens[i])
+        ks = gather_pages(k_pages, block_tables[i], length, page_size)
+        vs = gather_pages(v_pages, block_tables[i], length, page_size)
+        # [1, Hkv, len, D]
+        ks = ks.transpose(1, 0, 2)[None]
+        vs = vs.transpose(1, 0, 2)[None]
+        qi = q[i][None, :, None, :]  # [1, H, 1, D]
+        outs.append(ref_attention(qi, ks, vs, scale=scale)[0, :, 0])
+    return jnp.stack(outs)  # [B, H, D]
+
+
+def ref_paged_prefill(q_chunk, k_chunk, v_chunk, k_pages, v_pages,
+                      block_tables, cache_lens, page_size, scale=None):
+    """Oracle for paged_prefill.paged_prefill_attention.
+
+    Chunk queries attend over (cached pages ++ chunk) with causal masking
+    inside the chunk: query t of the chunk sees cache_len + t + 1 keys.
+    q_chunk: [B, H, C, D], k_chunk/v_chunk: [B, Hkv, C, D].
+    """
+    b, h, c, d = q_chunk.shape
+    outs = []
+    for i in range(b):
+        cl = int(cache_lens[i])
+        if cl > 0:
+            ks_cache = gather_pages(k_pages, block_tables[i], cl, page_size)
+            vs_cache = gather_pages(v_pages, block_tables[i], cl, page_size)
+            ks = jnp.concatenate([ks_cache, k_chunk[i].transpose(1, 0, 2)], 0)
+            vs = jnp.concatenate([vs_cache, v_chunk[i].transpose(1, 0, 2)], 0)
+        else:
+            ks = k_chunk[i].transpose(1, 0, 2)
+            vs = v_chunk[i].transpose(1, 0, 2)
+        total = cl + c
+        qi = jnp.arange(c)[:, None] + cl
+        ki = jnp.arange(total)[None, :]
+        mask = ki <= qi  # causal: chunk token t sees cache + itself
+        outs.append(
+            ref_attention(
+                q_chunk[i][None],
+                ks.transpose(1, 0, 2)[None],
+                vs.transpose(1, 0, 2)[None],
+                mask=mask[None, None],
+                scale=scale,
+            )[0]
+        )
+    return jnp.stack(outs)  # [B, H, C, D]

@@ -1,0 +1,357 @@
+"""L2 — LLaMA-architecture decoder in JAX, calling the L1 Pallas kernels.
+
+Pure-functional: params are a dict (tests) or a canonically-ordered flat
+list (AOT). Four entry points, one per artifact kind (see configs.AOT_PLAN):
+
+    forward_prefill   contiguous-cache prefill  (flex causal kernel)
+    forward_decode    contiguous-cache decode   ("default kernel" baseline)
+    forward_paged     paged prefill/extend/decode over the KV pool
+    forward_nocache   cache-less full recompute (Fig 3 baseline)
+    forward_logits    full-sequence logits      (perplexity)
+
+The paged path implements Alg. 1 end to end on device: GATHER is fused into
+the Pallas kernels (block-table-indexed loads), ASSIGN is a functional
+scatter into the pool (donated at AOT time, so it is in-place under PJRT),
+and RESERVE stays in Rust (`kvpage`), which hands the model a block table
+whose live range covers the new tokens.
+
+Pool layout [L, P, page, Hkv, Dh] — one pool pair (K, V) for the whole
+model, page-indexed per layer, matching the Rust `kvpage::pool` mirror.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import flex, mods
+from .kernels.paged_prefill import paged_prefill_attention
+
+Params = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) order — the AOT/manifest/Rust contract."""
+    d, dh, ff, v = cfg.d_model, cfg.d_head, cfg.d_ff, cfg.vocab_size
+    spec = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.attn_norm", (d,)),
+            (f"l{i}.wq", (d, cfg.n_heads * dh)),
+            (f"l{i}.wk", (d, cfg.n_kv_heads * dh)),
+            (f"l{i}.wv", (d, cfg.n_kv_heads * dh)),
+            (f"l{i}.wo", (cfg.n_heads * dh, d)),
+            (f"l{i}.mlp_norm", (d,)),
+            (f"l{i}.w_gate", (d, ff)),
+            (f"l{i}.w_up", (d, ff)),
+            (f"l{i}.w_down", (ff, d)),
+        ]
+    spec += [("final_norm", (d,)), ("lm_head", (d, v))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Deterministic seeded init (the repo's 'checkpoint', DESIGN.md §1)."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else 1
+            std = 0.02 if name in ("embed", "lm_head") else fan_in ** -0.5
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            * std)
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: Params) -> List[jnp.ndarray]:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, flat) -> Params:
+    return {name: arr for (name, _), arr in zip(param_spec(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(positions, d_head, theta):
+    """cos/sin tables for rotary embedding. positions [..., S] -> [..., S, dh/2]."""
+    freqs = theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B, H, S, dh]; cos/sin broadcastable to [B, 1, S, dh/2]."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def _qkv(cfg, params, i, h):
+    """h [B, S, d] -> q [B,H,S,dh], k/v [B,Hkv,S,dh] (pre-RoPE)."""
+    b, s, _ = h.shape
+    dh = cfg.d_head
+    hn = rmsnorm(h, params[f"l{i}.attn_norm"], cfg.norm_eps)
+    q = (hn @ params[f"l{i}.wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (hn @ params[f"l{i}.wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (hn @ params[f"l{i}.wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    return (q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3))
+
+
+def _attn_out(cfg, params, i, h, attn):
+    """attn [B, H, S, dh] -> residual-added h."""
+    b, _, s, _ = attn.shape
+    merged = attn.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return h + merged @ params[f"l{i}.wo"]
+
+
+def _mlp(cfg, params, i, h):
+    hn = rmsnorm(h, params[f"l{i}.mlp_norm"], cfg.norm_eps)
+    gate = jax.nn.silu(hn @ params[f"l{i}.w_gate"])
+    return h + (gate * (hn @ params[f"l{i}.w_up"])) @ params[f"l{i}.w_down"]
+
+
+def _logits(cfg, params, h):
+    hn = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return hn @ params["lm_head"]
+
+
+def _gather_last(x, lens):
+    """x [B, S, ...] -> x[b, lens[b]-1] per batch."""
+    idx = jnp.maximum(lens - 1, 0)
+    return jnp.take_along_axis(
+        x, idx[:, None, None], axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# contiguous-cache path (the paper's baseline allocator / default kernel)
+# ---------------------------------------------------------------------------
+
+
+def forward_prefill(cfg: ModelConfig, params: Params, tokens, seq_lens,
+                    interpret=True):
+    """Contiguous prefill. tokens [B, S] i32, seq_lens [B] i32.
+
+    Returns (logits_last [B, V], k_cache, v_cache [L, B, Hkv, M, dh]) with
+    the cache zero-padded to the artifact's fixed capacity M = max_seq_len.
+    """
+    b, s = tokens.shape
+    m = cfg.max_seq_len
+    h = params["embed"][tokens]
+    positions = jnp.arange(s)
+    cos, sin = rope_tables(positions, cfg.d_head, cfg.rope_theta)
+    cos, sin = cos[None, None], sin[None, None]
+    mask = mods.padded_causal(seq_lens)
+    bm = flex.create_block_mask_coarse(
+        mask, b, cfg.n_heads, s, s,
+        flex.DEFAULT_BLOCK_Q, flex.DEFAULT_BLOCK_K)
+    k_layers, v_layers = [], []
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(cfg, params, i, h)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        attn = flex.flex_attention(q, k, v, mask, block_mask=bm,
+                                   interpret=interpret)
+        h = _attn_out(cfg, params, i, h, attn)
+        h = _mlp(cfg, params, i, h)
+        pad = ((0, 0), (0, 0), (0, m - s), (0, 0))
+        k_layers.append(jnp.pad(k, pad))
+        v_layers.append(jnp.pad(v, pad))
+    logits = _logits(cfg, params, _gather_last(h, seq_lens))
+    return logits, jnp.stack(k_layers), jnp.stack(v_layers)
+
+
+def forward_decode(cfg: ModelConfig, params: Params, tokens, k_cache,
+                   v_cache, seq_lens):
+    """Contiguous decode step ("default attention kernel", Fig 4 baseline).
+
+    tokens [B] i32; caches [L, B, Hkv, M, dh]; seq_lens [B] = tokens already
+    cached. Runs DENSE attention over the full M-capacity buffer with a
+    length mask (the monolithic pre-allocated buffer the paper's Sec. I
+    criticizes) merged with the current token's self-attention.
+    Returns (logits [B, V], k_new, v_new [L, B, Hkv, dh]) — the cache
+    write-back at position seq_lens[b] is the Rust engine's job.
+    """
+    m = cfg.max_seq_len
+    h = params["embed"][tokens][:, None]  # [B, 1, d]
+    cos, sin = rope_tables(seq_lens[:, None], cfg.d_head, cfg.rope_theta)
+    cos, sin = cos[:, None], sin[:, None]  # [B,1,1,dh/2]
+    t = jnp.arange(m)
+    live = t[None, None, None, :] < seq_lens[:, None, None, None]
+    scale = cfg.d_head ** -0.5
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(cfg, params, i, h)  # q [B,H,1,dh]; k/v [B,Hkv,1,dh]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        new_k.append(k[:, :, 0])
+        new_v.append(v[:, :, 0])
+        kf = jnp.repeat(k_cache[i], n_rep, axis=1)  # [B,H,M,dh]
+        vf = jnp.repeat(v_cache[i], n_rep, axis=1)
+        s_cache = jnp.einsum("bhqd,bhkd->bhqk", q, kf) * scale
+        s_cache = jnp.where(live, s_cache, -1e30)
+        # current token attends to itself too (merged softmax)
+        s_self = jnp.einsum("bhqd,bhkd->bhqk",
+                            q, jnp.repeat(k, n_rep, axis=1)) * scale
+        s = jnp.concatenate([s_cache, s_self], axis=-1)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", p[..., :m], vf) + \
+            p[..., m:] * jnp.repeat(v, n_rep, axis=1)
+        h = _attn_out(cfg, params, i, h, attn)
+        h = _mlp(cfg, params, i, h)
+    logits = _logits(cfg, params, h[:, 0])
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# paged path (the paper's system)
+# ---------------------------------------------------------------------------
+
+
+def forward_paged(cfg: ModelConfig, params: Params, tokens, k_pool, v_pool,
+                  block_tables, cache_lens, chunk_lens, interpret=True):
+    """Paged forward over a KV pool view: prefill, extension, and decode.
+
+    tokens [B, C] i32 (C == 1 is the decode step); pools
+    [L, P, page, Hkv, dh] (P may be the *active subpool* the runtime
+    gathers per step — see DESIGN.md §5); block_tables [B, maxB] i32
+    indexes into that pool; cache_lens [B] = tokens already in pages;
+    chunk_lens [B] <= C = live new tokens.
+
+    GATHER is fused in the Pallas kernel (block-table-indexed loads).
+    ASSIGN is Rust's job: this returns the chunk's new KV
+    (k_chunk/v_chunk [L, B, Hkv, C, dh]) and the page manager scatters it
+    into the authoritative pool (kvpage::pool::HostPool) — the runtime's
+    xla_extension (0.5.1) returns tuple outputs as one host-roundtripped
+    buffer, so device-resident pool feedback is not available; keeping the
+    pool authoritative in Rust makes the shuttle one-directional.
+
+    Returns (logits at each sequence's last live token [B, V],
+    k_chunk, v_chunk).
+    """
+    b, c = tokens.shape
+    h = params["embed"][tokens]
+    positions = cache_lens[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    cos, sin = rope_tables(positions, cfg.d_head, cfg.rope_theta)
+    cos, sin = cos[:, None], sin[:, None]
+    block_q = 1 if c == 1 else min(32, c)
+
+    k_layers, v_layers = [], []
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(cfg, params, i, h)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        # attend over (cached pages ++ the chunk itself, causal)
+        attn = paged_prefill_attention(
+            q, k, v, k_pool[i], v_pool[i], block_tables, cache_lens,
+            block_q=block_q, interpret=interpret)
+        k_layers.append(k)
+        v_layers.append(v)
+        h = _attn_out(cfg, params, i, h, attn)
+        h = _mlp(cfg, params, i, h)
+    logits = _logits(cfg, params, _gather_last(h, chunk_lens))
+    return logits, jnp.stack(k_layers), jnp.stack(v_layers)
+
+
+# ---------------------------------------------------------------------------
+# no-cache + full-logits paths
+# ---------------------------------------------------------------------------
+
+
+def forward_nocache(cfg: ModelConfig, params: Params, tokens, seq_lens,
+                    interpret=True):
+    """Full recompute, no KV reuse (the Fig 3 'without caching' curve).
+
+    Every generated token re-runs this over the whole prefix. Returns only
+    the last live position's logits [B, V].
+    """
+    h = _backbone(cfg, params, tokens, seq_lens, interpret)
+    return _logits(cfg, params, _gather_last(h, seq_lens))
+
+
+def forward_logits(cfg: ModelConfig, params: Params, tokens, seq_lens,
+                   interpret=True):
+    """Full-sequence logits [B, S, V] (perplexity evaluation)."""
+    h = _backbone(cfg, params, tokens, seq_lens, interpret)
+    return _logits(cfg, params, h)
+
+
+def _backbone(cfg, params, tokens, seq_lens, interpret):
+    b, s = tokens.shape
+    h = params["embed"][tokens]
+    cos, sin = rope_tables(jnp.arange(s), cfg.d_head, cfg.rope_theta)
+    cos, sin = cos[None, None], sin[None, None]
+    mask = mods.padded_causal(seq_lens)
+    bm = flex.create_block_mask_coarse(
+        mask, b, cfg.n_heads, s, s,
+        flex.DEFAULT_BLOCK_Q, flex.DEFAULT_BLOCK_K)
+    for i in range(cfg.n_layers):
+        q, k, v = _qkv(cfg, params, i, h)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        attn = flex.flex_attention(q, k, v, mask, block_mask=bm,
+                                   interpret=interpret)
+        h = _attn_out(cfg, params, i, h, attn)
+        h = _mlp(cfg, params, i, h)
+    return h
+
+# ---------------------------------------------------------------------------
+# pool-service executables (no model params)
+# ---------------------------------------------------------------------------
+
+
+def copy_pages(cfg: ModelConfig, k_pool, v_pool, src, dst):
+    """Device-side page copy: pool[:, dst[i]] = pool[:, src[i]].
+
+    Drives copy-on-write forks (kvpage::prefix): a child sequence diverging
+    inside a shared partial page gets a private copy without the pool ever
+    leaving the device. Entries with src/dst == n_pages are dropped
+    (padding), so one fixed-[N] artifact serves any fork size.
+    """
+    p = cfg.n_pages
+    valid = (src < p) & (dst < p)
+    src_c = jnp.clip(src, 0, p - 1)
+    dst_d = jnp.where(valid, dst, p)  # out of range -> scatter drop
+    k2 = k_pool.at[:, dst_d].set(k_pool[:, src_c], mode="drop")
+    v2 = v_pool.at[:, dst_d].set(v_pool[:, src_c], mode="drop")
+    return k2, v2
+
+
+def read_pages(cfg: ModelConfig, k_pool, v_pool, idx):
+    """Gather pages to host (preemption swap-out / test inspection).
+
+    idx [N] i32, clipped; caller masks invalid slots itself.
+    Returns (k_pages [L,N,page,Hkv,dh], v_pages)."""
+    idx_c = jnp.clip(idx, 0, cfg.n_pages - 1)
+    return k_pool[:, idx_c], v_pool[:, idx_c]
+
+
+def write_pages(cfg: ModelConfig, k_pool, v_pool, idx, k_vals, v_vals):
+    """Scatter pages from host (preemption swap-in). idx == n_pages drops."""
+    p = cfg.n_pages
+    idx_d = jnp.where(idx < p, idx, p)
+    k2 = k_pool.at[:, idx_d].set(k_vals, mode="drop")
+    v2 = v_pool.at[:, idx_d].set(v_vals, mode="drop")
+    return k2, v2

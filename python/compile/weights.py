@@ -1,0 +1,58 @@
+"""Weight export: flat little-endian f32 binary + manifest entries.
+
+The binary is the concatenation of every parameter in `model.param_spec`
+order (the same order the AOT executables take them as leading arguments).
+Rust (`runtime::weights`) mmap-reads the file and slices it by the manifest
+offsets — no pickle, no framework formats on the request path.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .configs import ModelConfig
+from .model import Params, param_spec
+
+
+def save_weights(cfg: ModelConfig, params: Params, path: str
+                 ) -> Tuple[List[dict], str]:
+    """Write the flat binary; return (manifest entries, sha256 hex)."""
+    entries = []
+    offset = 0
+    hasher = hashlib.sha256()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        for name, shape in param_spec(cfg):
+            arr = np.asarray(params[name], dtype=np.float32)
+            assert arr.shape == tuple(shape), (name, arr.shape, shape)
+            raw = arr.tobytes()  # C-order little-endian f32
+            f.write(raw)
+            hasher.update(raw)
+            entries.append({
+                "name": name,
+                "shape": list(shape),
+                "offset": offset,
+                "bytes": len(raw),
+            })
+            offset += len(raw)
+    os.replace(tmp, path)
+    return entries, hasher.hexdigest()
+
+
+def load_weights(cfg: ModelConfig, path: str) -> Dict[str, np.ndarray]:
+    """Inverse of save_weights (used by tests for round-trip checks)."""
+    params = {}
+    with open(path, "rb") as f:
+        raw = f.read()
+    offset = 0
+    for name, shape in param_spec(cfg):
+        n = int(np.prod(shape)) * 4
+        params[name] = np.frombuffer(
+            raw[offset:offset + n], dtype=np.float32).reshape(shape)
+        offset += n
+    assert offset == len(raw), "weight file size mismatch"
+    return params

@@ -1,0 +1,131 @@
+"""AOT pipeline invariants: manifest schema, weight round-trip, HLO headers.
+
+Runs against the real artifacts/ directory when present (created by
+`make artifacts`); the manifest-structure tests synthesize a tiny export
+into a temp dir otherwise, so the suite works in a fresh checkout too.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model, weights
+from compile.configs import AOT_PLAN, CONFIGS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+class TestWeights:
+    def test_roundtrip(self, tmp_path):
+        cfg = CONFIGS["tiny"]
+        params = model.init_params(cfg, 7)
+        path = str(tmp_path / "w.bin")
+        entries, sha = weights.save_weights(cfg, params, path)
+        assert len(sha) == 64
+        loaded = weights.load_weights(cfg, path)
+        for name, _ in model.param_spec(cfg):
+            np.testing.assert_array_equal(np.asarray(params[name]),
+                                          loaded[name])
+
+    def test_entries_are_contiguous(self, tmp_path):
+        cfg = CONFIGS["tiny"]
+        params = model.init_params(cfg, 7)
+        entries, _ = weights.save_weights(cfg, params,
+                                          str(tmp_path / "w.bin"))
+        offset = 0
+        for e in entries:
+            assert e["offset"] == offset
+            assert e["bytes"] == int(np.prod(e["shape"])) * 4
+            offset += e["bytes"]
+
+    def test_deterministic_init(self):
+        cfg = CONFIGS["tiny"]
+        a = model.init_params(cfg, 42)
+        b = model.init_params(cfg, 42)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+
+    def test_param_count_matches_spec(self):
+        for cfg in CONFIGS.values():
+            total = sum(int(np.prod(s)) for _, s in model.param_spec(cfg))
+            assert total == cfg.param_count(), cfg.name
+
+
+class TestPlanCoverage:
+    def test_every_config_has_a_plan(self):
+        assert set(AOT_PLAN) == set(CONFIGS)
+
+    def test_paged_decode_batches_covered_by_chunk_prefill(self):
+        # Every decode batch size needs a prefill path able to feed it.
+        for name, plan in AOT_PLAN.items():
+            chunk_batches = {b for b, _ in plan["paged_chunk"]}
+            for b in plan["paged_decode"]:
+                assert any(cb <= b for cb in chunk_batches), (name, b)
+
+    def test_buckets_fit_model_limits(self):
+        for name, plan in AOT_PLAN.items():
+            cfg = CONFIGS[name]
+            for _, s in plan["prefill"]:
+                assert s <= cfg.max_seq_len
+            for _, c in plan["paged_chunk"]:
+                assert c <= cfg.pooled_tokens
+
+
+@pytest.mark.skipif(not HAVE_ARTIFACTS, reason="run `make artifacts` first")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_version_and_configs(self, manifest):
+        assert manifest["version"] == aot.MANIFEST_VERSION
+        for name in manifest["configs"]:
+            assert name in CONFIGS
+
+    def test_model_dict_matches_config(self, manifest):
+        for name, entry in manifest["configs"].items():
+            cfg = CONFIGS[name]
+            md = entry["model"]
+            assert md["d_model"] == cfg.d_model
+            assert md["page_size"] == cfg.page_size
+            assert md["n_pages"] == cfg.n_pages
+            assert md["kv_bytes_per_token"] == cfg.kv_bytes_per_token
+
+    def test_artifact_files_exist_with_alias_headers(self, manifest):
+        for name, entry in manifest["configs"].items():
+            for aname, art in entry["artifacts"].items():
+                path = os.path.join(ART, art["file"])
+                assert os.path.exists(path), path
+                with open(path) as f:
+                    head = f.readline()
+                assert head.startswith("HloModule"), path
+                if art["donated_inputs"]:
+                    assert "input_output_alias" in head, (
+                        f"{path}: donation lost in lowering")
+
+    def test_weight_files_match_manifest_size(self, manifest):
+        for name, entry in manifest["configs"].items():
+            path = os.path.join(ART, entry["weights_file"])
+            expect = sum(p["bytes"] for p in entry["params"])
+            assert os.path.getsize(path) == expect
+
+    def test_pool_shapes_consistent(self, manifest):
+        for name, entry in manifest["configs"].items():
+            cfg = CONFIGS[name]
+            for aname, art in entry["artifacts"].items():
+                if art["kind"] in ("copy_pages", "read_pages",
+                                   "write_pages"):
+                    expect_pages = cfg.n_pages  # full pool services
+                else:
+                    expect_pages = art.get("batch", 1) * \
+                        cfg.max_blocks_per_seq  # active subpool window
+                shape = [cfg.n_layers, expect_pages, cfg.page_size,
+                         cfg.n_kv_heads, cfg.d_head]
+                for inp in art["inputs"]:
+                    if inp["name"] in ("k_pool", "v_pool"):
+                        assert inp["shape"] == shape, (aname, inp)

@@ -1,0 +1,225 @@
+"""L2 model: paged == contiguous == nocache numerical equivalence.
+
+This is the paper's perplexity-equivalence claim (Sec. IV-B.3) at logits
+level: the paged path must be bit-compatible (to fp tolerance) with the
+dense baseline, for prefill, decode, chunked extension, and forks that
+share pages.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS
+
+RTOL = 3e-4
+ATOL = 3e-4
+CFG = CONFIGS["tiny"]
+
+
+def scatter_chunk(kp, vp, k_chunk, v_chunk, bt, cache_lens, chunk_lens):
+    """Host-side ASSIGN, mirroring kvpage::pool (the Rust engine's job)."""
+    kp = np.asarray(kp).copy()
+    vp = np.asarray(vp).copy()
+    bt = np.asarray(bt)
+    ps = CFG.page_size
+    b = bt.shape[0]
+    for i in range(b):
+        for t in range(int(chunk_lens[i])):
+            pos = int(cache_lens[i]) + t
+            page, off = bt[i, pos // ps], pos % ps
+            kp[:, page, off] = np.asarray(k_chunk)[:, i, :, t]
+            vp[:, page, off] = np.asarray(v_chunk)[:, i, :, t]
+    return jnp.asarray(kp), jnp.asarray(vp)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 42)
+
+
+def fresh_pools():
+    shape = (CFG.n_layers, CFG.n_pages, CFG.page_size, CFG.n_kv_heads,
+             CFG.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def tables(rng, b):
+    maxb = CFG.max_blocks_per_seq
+    perm = rng.permutation(CFG.n_pages)[: b * maxb].reshape(b, maxb)
+    return jnp.asarray(perm, jnp.int32)
+
+
+def last_logits(params, tokens, lens):
+    full = model.forward_logits(CFG, params, tokens, lens)
+    return np.stack([np.asarray(full)[b, int(lens[b]) - 1]
+                     for b in range(tokens.shape[0])])
+
+
+class TestContiguous:
+    def test_prefill_matches_full_logits(self, params):
+        rng = np.random.default_rng(0)
+        tokens = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 24)),
+                             jnp.int32)
+        lens = jnp.asarray([24, 17], jnp.int32)
+        lg, _, _ = model.forward_prefill(CFG, params, tokens, lens)
+        np.testing.assert_allclose(lg, last_logits(params, tokens, lens),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_decode_chain_matches_full_forward(self, params):
+        rng = np.random.default_rng(1)
+        b, s0, steps = 2, 10, 6
+        tokens = rng.integers(0, CFG.vocab_size, (b, s0 + steps)).astype(
+            np.int32)
+        lens0 = jnp.asarray([s0, s0 - 3], jnp.int32)
+        _, kc, vc = model.forward_prefill(
+            CFG, params, jnp.asarray(tokens[:, :s0]), lens0)
+        lens = np.asarray(lens0).copy()
+        for t in range(steps):
+            nxt = jnp.asarray([tokens[i, lens[i]] for i in range(b)],
+                              jnp.int32)
+            lg, k_new, v_new = model.forward_decode(
+                CFG, params, nxt, kc, vc, jnp.asarray(lens))
+            # Rust-side cache write-back at position lens[i]
+            kc_np, vc_np = np.asarray(kc).copy(), np.asarray(vc).copy()
+            for i in range(b):
+                kc_np[:, i, :, lens[i]] = np.asarray(k_new)[:, i]
+                vc_np[:, i, :, lens[i]] = np.asarray(v_new)[:, i]
+            kc, vc = jnp.asarray(kc_np), jnp.asarray(vc_np)
+            lens += 1
+            padded = np.zeros((b, s0 + steps), np.int32)
+            for i in range(b):
+                padded[i, : lens[i]] = tokens[i, : lens[i]]
+            exp = last_logits(params, jnp.asarray(padded),
+                              jnp.asarray(lens))
+            np.testing.assert_allclose(lg, exp, rtol=RTOL, atol=ATOL)
+
+
+class TestPaged:
+    def test_cold_prefill_matches_contiguous(self, params):
+        rng = np.random.default_rng(2)
+        tokens = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 24)),
+                             jnp.int32)
+        lens = jnp.asarray([24, 17], jnp.int32)
+        kp, vp = fresh_pools()
+        bt = tables(rng, 2)
+        lg, _, _ = model.forward_paged(
+            CFG, params, tokens, kp, vp, bt, jnp.zeros(2, jnp.int32), lens)
+        # (chunk KV returned; pools untouched by the executable)
+        np.testing.assert_allclose(lg, last_logits(params, tokens, lens),
+                                   rtol=RTOL, atol=ATOL)
+
+    def test_decode_chain_matches_contiguous(self, params):
+        rng = np.random.default_rng(3)
+        b, s0, steps = 2, 16, 5
+        tokens = rng.integers(0, CFG.vocab_size, (b, s0 + steps)).astype(
+            np.int32)
+        lens = np.asarray([s0, s0 - 5], np.int32)
+        kp, vp = fresh_pools()
+        bt = tables(rng, b)
+        _, kc, vc = model.forward_paged(
+            CFG, params, jnp.asarray(tokens[:, :s0]), kp, vp, bt,
+            jnp.zeros(b, jnp.int32), jnp.asarray(lens))
+        kp, vp = scatter_chunk(kp, vp, kc, vc, bt,
+                               np.zeros(b, np.int32), lens)
+        for t in range(steps):
+            nxt = jnp.asarray([[tokens[i, lens[i]]] for i in range(b)],
+                              jnp.int32)
+            lg, kc, vc = model.forward_paged(
+                CFG, params, nxt, kp, vp, bt, jnp.asarray(lens),
+                jnp.ones(b, jnp.int32))
+            kp, vp = scatter_chunk(kp, vp, kc, vc, bt, lens,
+                                   np.ones(b, np.int32))
+            lens += 1
+            padded = np.zeros((b, s0 + steps), np.int32)
+            for i in range(b):
+                padded[i, : lens[i]] = tokens[i, : lens[i]]
+            exp = last_logits(params, jnp.asarray(padded),
+                              jnp.asarray(lens))
+            np.testing.assert_allclose(lg, exp, rtol=RTOL, atol=ATOL)
+
+    def test_chunked_extension_matches_one_shot(self, params):
+        rng = np.random.default_rng(4)
+        full = jnp.asarray(rng.integers(0, CFG.vocab_size, (1, 48)),
+                           jnp.int32)
+        bt = tables(rng, 1)
+        # one shot
+        kp, vp = fresh_pools()
+        lg_one, _, _ = model.forward_paged(
+            CFG, params, full, kp, vp, bt, jnp.zeros(1, jnp.int32),
+            jnp.asarray([48], jnp.int32))
+        # two chunks of 24 (chat growth)
+        kp, vp = fresh_pools()
+        _, kc, vc = model.forward_paged(
+            CFG, params, full[:, :24], kp, vp, bt,
+            jnp.zeros(1, jnp.int32), jnp.asarray([24], jnp.int32))
+        kp, vp = scatter_chunk(kp, vp, kc, vc, bt, [0], [24])
+        lg_two, _, _ = model.forward_paged(
+            CFG, params, full[:, 24:], kp, vp, bt,
+            jnp.asarray([24], jnp.int32), jnp.asarray([24], jnp.int32))
+        np.testing.assert_allclose(lg_two, lg_one, rtol=RTOL, atol=ATOL)
+
+    def test_prefix_sharing_pages(self, params):
+        # Two sequences share prefix pages (same physical pages in both
+        # tables); decoding each must equal decoding without sharing.
+        rng = np.random.default_rng(5)
+        prefix = rng.integers(0, CFG.vocab_size, (1, 16)).astype(np.int32)
+        kp, vp = fresh_pools()
+        bt0 = jnp.asarray([[0, 1, 50, 51] + [0] * 12], jnp.int32)
+        _, kc, vc = model.forward_paged(
+            CFG, params, jnp.asarray(prefix), kp, vp, bt0,
+            jnp.zeros(1, jnp.int32), jnp.asarray([16], jnp.int32))
+        kp, vp = scatter_chunk(kp, vp, kc, vc, bt0, [0], [16])
+        # fork: second table aliases pages 0,1 then diverges to 60,61
+        bt = jnp.asarray([[0, 1, 50, 51] + [0] * 12,
+                          [0, 1, 60, 61] + [0] * 12], jnp.int32)
+        nxt = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 1)),
+                          jnp.int32)
+        lg, _, _ = model.forward_paged(
+            CFG, params, nxt, kp, vp, bt,
+            jnp.asarray([16, 16], jnp.int32), jnp.ones(2, jnp.int32))
+        # both forks see the identical prefix -> same-token forks agree
+        if int(nxt[0, 0]) == int(nxt[1, 0]):
+            np.testing.assert_allclose(lg[0], lg[1], rtol=RTOL, atol=ATOL)
+        # and each matches an unshared run
+        for i in range(2):
+            lg_i, _, _ = model.forward_paged(
+                CFG, params, nxt[i:i + 1], kp, vp, bt[i:i + 1],
+                jnp.asarray([16], jnp.int32), jnp.ones(1, jnp.int32))
+            np.testing.assert_allclose(lg[i], lg_i[0], rtol=RTOL,
+                                       atol=ATOL)
+
+
+class TestPoolService:
+    def test_copy_read_write_roundtrip(self, params):
+        rng = np.random.default_rng(6)
+        kp, vp = fresh_pools()
+        vals = jnp.asarray(
+            rng.normal(size=(CFG.n_layers, CFG.max_blocks_per_seq,
+                             CFG.page_size, CFG.n_kv_heads, CFG.d_head)),
+            jnp.float32)
+        idx = jnp.asarray(
+            list(range(3)) + [CFG.n_pages] * (CFG.max_blocks_per_seq - 3),
+            jnp.int32)  # 3 live, rest dropped
+        kp, vp = model.write_pages(CFG, kp, vp, idx, vals, vals)
+        k_out, v_out = model.read_pages(CFG, kp, vp, idx)
+        np.testing.assert_allclose(k_out[:, :3], vals[:, :3], rtol=0,
+                                   atol=0)
+        # copy page 1 -> 10 and check
+        src = jnp.asarray([1] + [CFG.n_pages] * (CFG.max_blocks_per_seq - 1),
+                          jnp.int32)
+        dst = jnp.asarray([10] + [CFG.n_pages] * (CFG.max_blocks_per_seq - 1),
+                          jnp.int32)
+        kp, vp = model.copy_pages(CFG, kp, vp, src, dst)
+        k_out, _ = model.read_pages(CFG, kp, vp, dst)
+        np.testing.assert_allclose(k_out[:, 0], vals[:, 1], rtol=0, atol=0)
+
+    def test_nocache_matches(self, params):
+        rng = np.random.default_rng(7)
+        tokens = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 20)),
+                             jnp.int32)
+        lens = jnp.asarray([20, 11], jnp.int32)
+        lg = model.forward_nocache(CFG, params, tokens, lens)
+        np.testing.assert_allclose(lg, last_logits(params, tokens, lens),
+                                   rtol=RTOL, atol=ATOL)

@@ -1,0 +1,196 @@
+"""Paged decode / chunked prefill kernels vs their dense oracles.
+
+Exercises the block-table indirection (Alg. 1 GATHER fused in-kernel):
+scattered/permuted/reused pages, partial last pages, GQA, page-size sweep,
+zero cache, and a hypothesis sweep over pool geometry.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import paged_attention as pa
+from compile.kernels import paged_prefill as pp
+from compile.kernels import ref
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def make_pool(rng, n_pages=32, page=8, hkv=2, d=16):
+    return (rand(rng, n_pages, page, hkv, d),
+            rand(rng, n_pages, page, hkv, d))
+
+
+def scatter_tables(rng, b, max_blocks, n_pages):
+    """Distinct pages per sequence, deliberately scattered over the pool."""
+    perm = rng.permutation(n_pages)
+    assert b * max_blocks <= n_pages
+    return jnp.asarray(perm[: b * max_blocks].reshape(b, max_blocks),
+                       jnp.int32)
+
+
+class TestPagedDecode:
+    def setup_method(self):
+        self.rng = np.random.default_rng(5)
+
+    def _run(self, seq_lens, b=3, h=4, hkv=2, d=16, page=8, n_pages=32,
+             max_blocks=8):
+        kp, vp = make_pool(self.rng, n_pages, page, hkv, d)
+        bt = scatter_tables(self.rng, b, max_blocks, n_pages)
+        q = rand(self.rng, b, h, d)
+        sl = jnp.asarray(seq_lens, jnp.int32)
+        out = pa.paged_decode_attention(q, kp, vp, bt, sl)
+        exp = ref.ref_paged_decode(q, kp, vp, bt, sl, page)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_basic(self):
+        self._run([5, 23, 64])
+
+    def test_single_token_context(self):
+        self._run([1, 1, 1])
+
+    def test_exact_page_boundaries(self):
+        self._run([8, 16, 64])
+
+    def test_one_off_boundaries(self):
+        self._run([7, 9, 63])
+
+    @pytest.mark.parametrize("page", [1, 2, 8, 16])
+    def test_page_size_sweep(self, page):
+        kp, vp = make_pool(self.rng, 64, page, 2, 16)
+        bt = scatter_tables(self.rng, 2, 16, 64)
+        q = rand(self.rng, 2, 4, 16)
+        sl = jnp.asarray([3, 16 * page - 1], jnp.int32)
+        out = pa.paged_decode_attention(q, kp, vp, bt, sl)
+        exp = ref.ref_paged_decode(q, kp, vp, bt, sl, page)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("h,hkv", [(4, 4), (8, 2), (8, 1)])
+    def test_gqa(self, h, hkv):
+        self._run([10, 30, 50], h=h, hkv=hkv)
+
+    def test_shared_pages_between_sequences(self):
+        # Prefix sharing: two sequences point at the SAME physical pages.
+        kp, vp = make_pool(self.rng)
+        shared = jnp.asarray([[3, 9, 1, 0], [3, 9, 2, 0]], jnp.int32)
+        q = rand(self.rng, 2, 4, 16)
+        sl = jnp.asarray([16, 24], jnp.int32)  # first 2 pages shared
+        out = pa.paged_decode_attention(q, kp, vp, shared, sl)
+        exp = ref.ref_paged_decode(q, kp, vp, shared, sl, 8)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_garbage_tail_entries_ignored(self):
+        # Table entries past the live range must not affect the result.
+        kp, vp = make_pool(self.rng)
+        q = rand(self.rng, 1, 4, 16)
+        sl = jnp.asarray([10], jnp.int32)
+        bt_a = jnp.asarray([[4, 7, 0, 0]], jnp.int32)
+        bt_b = jnp.asarray([[4, 7, 31, 13]], jnp.int32)
+        out_a = pa.paged_decode_attention(q, kp, vp, bt_a, sl)
+        out_b = pa.paged_decode_attention(q, kp, vp, bt_b, sl)
+        np.testing.assert_allclose(out_a, out_b, rtol=0, atol=0)
+
+    def test_matches_contiguous_attention(self):
+        # Paged result == dense attention over the linearized sequence.
+        kp, vp = make_pool(self.rng)
+        bt = scatter_tables(self.rng, 1, 4, 32)
+        length = 27
+        q = rand(self.rng, 1, 4, 16)
+        sl = jnp.asarray([length], jnp.int32)
+        ks = ref.gather_pages(kp, bt[0], length, 8).transpose(1, 0, 2)[None]
+        vs = ref.gather_pages(vp, bt[0], length, 8).transpose(1, 0, 2)[None]
+        dense = ref.ref_attention(q[:, :, None], ks, vs)[:, :, 0]
+        out = pa.paged_decode_attention(q, kp, vp, bt, sl)
+        np.testing.assert_allclose(out, dense, rtol=RTOL, atol=ATOL)
+
+
+class TestPagedPrefill:
+    def setup_method(self):
+        self.rng = np.random.default_rng(9)
+
+    def _run(self, cache_lens, c=40, b=3, h=4, hkv=2, d=16, page=8,
+             n_pages=32, max_blocks=8, block_q=32):
+        kp, vp = make_pool(self.rng, n_pages, page, hkv, d)
+        bt = scatter_tables(self.rng, b, max_blocks, n_pages)
+        qc = rand(self.rng, b, h, c, d)
+        kc = rand(self.rng, b, hkv, c, d)
+        vc = rand(self.rng, b, hkv, c, d)
+        cl = jnp.asarray(cache_lens, jnp.int32)
+        out = pp.paged_prefill_attention(qc, kc, vc, kp, vp, bt, cl,
+                                         block_q=block_q)
+        exp = ref.ref_paged_prefill(qc, kc, vc, kp, vp, bt, cl, page)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_cold_start(self):
+        # cache_len = 0 everywhere: pure causal prefill.
+        self._run([0, 0, 0])
+
+    def test_warm_extension(self):
+        self._run([13, 60, 8])
+
+    def test_page_aligned_cache(self):
+        self._run([8, 16, 32])
+
+    @pytest.mark.parametrize("c", [1, 7, 32, 65])
+    def test_chunk_sizes(self, c):
+        self._run([5, 20, 0], c=c)
+
+    @pytest.mark.parametrize("block_q", [8, 16, 64])
+    def test_block_q_invariance(self, block_q):
+        self._run([13, 60, 8], block_q=block_q)
+
+    def test_gqa(self):
+        self._run([10, 3, 40], h=8, hkv=2)
+
+    def test_chunked_equals_one_shot(self):
+        # Prefill of 32 tokens in two 16-token chunks == one 32-token chunk.
+        kp = jnp.zeros((8, 8, 2, 16), jnp.float32)
+        vp = jnp.zeros((8, 8, 2, 16), jnp.float32)
+        bt = jnp.asarray([[0, 1, 2, 3]], jnp.int32)
+        q = rand(self.rng, 1, 4, 32, 16)
+        k = rand(self.rng, 1, 2, 32, 16)
+        v = rand(self.rng, 1, 2, 32, 16)
+        one = pp.paged_prefill_attention(
+            q, k, v, kp, vp, bt, jnp.asarray([0], jnp.int32))
+        # chunk 1 writes its K/V into pages 0..1 (ASSIGN done densely here)
+        kp2 = kp.at[jnp.asarray([0, 1])].set(
+            k[0, :, :16].transpose(1, 0, 2).reshape(2, 8, 2, 16))
+        vp2 = vp.at[jnp.asarray([0, 1])].set(
+            v[0, :, :16].transpose(1, 0, 2).reshape(2, 8, 2, 16))
+        first = pp.paged_prefill_attention(
+            q[:, :, :16], k[:, :, :16], v[:, :, :16], kp, vp, bt,
+            jnp.asarray([0], jnp.int32))
+        second = pp.paged_prefill_attention(
+            q[:, :, 16:], k[:, :, 16:], v[:, :, 16:], kp2, vp2, bt,
+            jnp.asarray([16], jnp.int32))
+        chunked = jnp.concatenate([first, second], axis=2)
+        np.testing.assert_allclose(chunked, one, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    page=st.sampled_from([2, 4, 8]),
+    max_blocks=st.integers(1, 6),
+    frac=st.floats(0.05, 1.0),
+    h_pair=st.sampled_from([(2, 2), (4, 2)]),
+)
+def test_hypothesis_decode_sweep(b, page, max_blocks, frac, h_pair):
+    h, hkv = h_pair
+    rng = np.random.default_rng(b * 100 + page * 10 + max_blocks)
+    n_pages = b * max_blocks + 4
+    kp = rand(rng, n_pages, page, hkv, 8)
+    vp = rand(rng, n_pages, page, hkv, 8)
+    bt = scatter_tables(rng, b, max_blocks, n_pages)
+    cap = page * max_blocks
+    sl = jnp.asarray([max(1, int(frac * cap))] * b, jnp.int32)
+    q = rand(rng, b, h, 8)
+    out = pa.paged_decode_attention(q, kp, vp, bt, sl)
+    exp = ref.ref_paged_decode(q, kp, vp, bt, sl, page)
+    np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)

@@ -1,0 +1,324 @@
+//! Server / engine configuration — JSON-file + CLI-overridable settings.
+//!
+//! The paper's "drop-in deployability via configuration flags"
+//! (Sec. I-B): attention mode, growth policy, page budget, scheduler
+//! knobs are all runtime configuration, not code changes.
+
+use std::path::{Path, PathBuf};
+
+use crate::kvpage::GrowthPolicy;
+use crate::util::json::{parse, Value};
+use crate::util::{Result, WrapErr};
+use crate::bail;
+
+/// Which attention path serves requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AttentionMode {
+    /// PagedAttention over the KV pool (the paper's system).
+    #[default]
+    Paged,
+    /// Monolithic contiguous cache ("default" baseline of Fig. 4).
+    Contiguous,
+    /// No KV reuse at all — full recompute per token (Fig. 3 baseline).
+    NoCache,
+}
+
+impl AttentionMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AttentionMode::Paged => "paged",
+            AttentionMode::Contiguous => "contiguous",
+            AttentionMode::NoCache => "no_cache",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "paged" => AttentionMode::Paged,
+            "contiguous" => AttentionMode::Contiguous,
+            "no_cache" | "nocache" => AttentionMode::NoCache,
+            _ => bail!("unknown attention mode '{s}' \
+                        (paged|contiguous|no_cache)"),
+        })
+    }
+}
+
+/// Growth policy as config (converts into kvpage::GrowthPolicy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GrowthPolicyCfg {
+    #[default]
+    Exact,
+    PowerOfTwo,
+}
+
+impl GrowthPolicyCfg {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GrowthPolicyCfg::Exact => "exact",
+            GrowthPolicyCfg::PowerOfTwo => "power_of_two",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exact" => GrowthPolicyCfg::Exact,
+            "power_of_two" | "pow2" => GrowthPolicyCfg::PowerOfTwo,
+            _ => bail!("unknown growth policy '{s}' (exact|power_of_two)"),
+        })
+    }
+}
+
+impl From<GrowthPolicyCfg> for GrowthPolicy {
+    fn from(c: GrowthPolicyCfg) -> Self {
+        match c {
+            GrowthPolicyCfg::Exact => GrowthPolicy::Exact,
+            GrowthPolicyCfg::PowerOfTwo => GrowthPolicy::PowerOfTwo,
+        }
+    }
+}
+
+/// Scheduler knobs (coordinator::scheduler).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerConfig {
+    /// Max sequences decoded together (must have a compiled bucket).
+    pub max_batch_size: usize,
+    /// Max requests admitted but not yet finished.
+    pub max_running_seqs: usize,
+    /// Queue depth before new requests are rejected.
+    pub max_waiting: usize,
+    /// Reserve this many free pages as eviction headroom.
+    pub watermark_pages: usize,
+    /// Prefill chunk size (tokens) for chunked prefill of long prompts.
+    pub prefill_chunk: usize,
+    /// Prefer prefills over decodes when both are ready.
+    pub prefill_priority: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch_size: 8,
+            max_running_seqs: 64,
+            max_waiting: 256,
+            watermark_pages: 4,
+            prefill_chunk: 512,
+            prefill_priority: true,
+        }
+    }
+}
+
+/// Sampling parameters (engine::sampler).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingConfig {
+    pub temperature: f32,
+    /// 0 disables top-k.
+    pub top_k: usize,
+    /// 1.0 disables top-p.
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        SamplingConfig { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingConfig {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("temperature", Value::num(self.temperature as f64)),
+            ("top_k", Value::num(self.top_k as f64)),
+            ("top_p", Value::num(self.top_p as f64)),
+            ("seed", Value::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        Ok(SamplingConfig {
+            temperature: v
+                .opt("temperature")
+                .map(|x| x.as_f64())
+                .transpose()?
+                .map(|x| x as f32)
+                .unwrap_or(d.temperature),
+            top_k: v.opt("top_k").map(|x| x.as_usize()).transpose()?
+                .unwrap_or(d.top_k),
+            top_p: v.opt("top_p").map(|x| x.as_f64()).transpose()?
+                .map(|x| x as f32).unwrap_or(d.top_p),
+            seed: v.opt("seed").map(|x| x.as_u64()).transpose()?
+                .unwrap_or(d.seed),
+        })
+    }
+}
+
+/// Top-level engine configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Manifest config name: tiny | bench | small.
+    pub model: String,
+    /// Directory holding manifest.json + HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    pub attention: AttentionMode,
+    pub growth_policy: GrowthPolicyCfg,
+    /// Enable automatic prefix caching.
+    pub prefix_cache: bool,
+    pub scheduler: SchedulerConfig,
+    /// Default sampling params (overridable per request).
+    pub sampling: SamplingConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "tiny".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            attention: AttentionMode::Paged,
+            growth_policy: GrowthPolicyCfg::Exact,
+            prefix_cache: true,
+            scheduler: SchedulerConfig::default(),
+            sampling: SamplingConfig::default(),
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn to_json(&self) -> Value {
+        let s = &self.scheduler;
+        Value::obj(vec![
+            ("model", Value::str(self.model.clone())),
+            ("artifacts_dir",
+             Value::str(self.artifacts_dir.display().to_string())),
+            ("attention", Value::str(self.attention.as_str())),
+            ("growth_policy", Value::str(self.growth_policy.as_str())),
+            ("prefix_cache", Value::Bool(self.prefix_cache)),
+            ("scheduler", Value::obj(vec![
+                ("max_batch_size", Value::num(s.max_batch_size as f64)),
+                ("max_running_seqs", Value::num(s.max_running_seqs as f64)),
+                ("max_waiting", Value::num(s.max_waiting as f64)),
+                ("watermark_pages", Value::num(s.watermark_pages as f64)),
+                ("prefill_chunk", Value::num(s.prefill_chunk as f64)),
+                ("prefill_priority", Value::Bool(s.prefill_priority)),
+            ])),
+            ("sampling", self.sampling.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let d = Self::default();
+        let sched = match v.opt("scheduler") {
+            None => d.scheduler.clone(),
+            Some(s) => {
+                let ds = SchedulerConfig::default();
+                SchedulerConfig {
+                    max_batch_size: s.opt("max_batch_size")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.max_batch_size),
+                    max_running_seqs: s.opt("max_running_seqs")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.max_running_seqs),
+                    max_waiting: s.opt("max_waiting")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.max_waiting),
+                    watermark_pages: s.opt("watermark_pages")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.watermark_pages),
+                    prefill_chunk: s.opt("prefill_chunk")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.prefill_chunk),
+                    prefill_priority: s.opt("prefill_priority")
+                        .map(|x| x.as_bool()).transpose()?
+                        .unwrap_or(ds.prefill_priority),
+                }
+            }
+        };
+        Ok(EngineConfig {
+            model: v.opt("model").map(|x| x.as_str()).transpose()?
+                .map(str::to_string).unwrap_or(d.model),
+            artifacts_dir: v.opt("artifacts_dir")
+                .map(|x| x.as_str()).transpose()?
+                .map(PathBuf::from).unwrap_or(d.artifacts_dir),
+            attention: v.opt("attention").map(|x| x.as_str()).transpose()?
+                .map(AttentionMode::from_str).transpose()?
+                .unwrap_or(d.attention),
+            growth_policy: v.opt("growth_policy")
+                .map(|x| x.as_str()).transpose()?
+                .map(GrowthPolicyCfg::from_str).transpose()?
+                .unwrap_or(d.growth_policy),
+            prefix_cache: v.opt("prefix_cache")
+                .map(|x| x.as_bool()).transpose()?
+                .unwrap_or(d.prefix_cache),
+            scheduler: sched,
+            sampling: match v.opt("sampling") {
+                Some(s) => SamplingConfig::from_json(s)?,
+                None => d.sampling,
+            },
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let raw = std::fs::read_to_string(path)
+            .wrap_err_with(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&parse(&raw)?).wrap_err("parsing engine config")
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json_pretty())
+            .wrap_err("writing engine config")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let cfg = EngineConfig::default();
+        let v = parse(&cfg.to_json().to_json_pretty()).unwrap();
+        let back = EngineConfig::from_json(&v).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = parse(r#"{"model": "small", "attention": "contiguous"}"#)
+            .unwrap();
+        let cfg = EngineConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.model, "small");
+        assert_eq!(cfg.attention, AttentionMode::Contiguous);
+        assert_eq!(cfg.scheduler, SchedulerConfig::default());
+    }
+
+    #[test]
+    fn attention_mode_strings() {
+        assert_eq!(AttentionMode::from_str("no_cache").unwrap(),
+                   AttentionMode::NoCache);
+        assert!(AttentionMode::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("pf_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.max_batch_size = 4;
+        cfg.growth_policy = GrowthPolicyCfg::PowerOfTwo;
+        cfg.save(&p).unwrap();
+        let back = EngineConfig::load(&p).unwrap();
+        assert_eq!(back, cfg);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

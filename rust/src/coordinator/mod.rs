@@ -1,0 +1,683 @@
+//! Coordinator — request router + continuous-batching scheduler.
+//!
+//! The vLLM-shaped serving loop around the engine (DESIGN.md §3):
+//! requests arrive, are queued, admitted when the KV pool has pages
+//! (RESERVE), prefilled in chunks (prefill-priority, configurable),
+//! decoded in bucketed batches, and preempted (recompute-style: pages
+//! freed, tokens kept) when the pool runs dry — Alg. 1's allocator under
+//! a real multiplexing workload.
+//!
+//! `tick()` advances the world one scheduling step; `run_to_completion`
+//! and the TCP server both drive it. Scheduling *policy* lives in pure
+//! functions at the bottom for unit testing without an engine.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::config::{AttentionMode, SamplingConfig};
+use crate::engine::{Engine, Sampler};
+use crate::kvpage::{AllocError, SeqId};
+use crate::metrics::ServingMetrics;
+use crate::tokenizer::EOS;
+use crate::util::Result;
+use crate::{bail, err};
+
+/// A generation request as submitted.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingConfig,
+    /// Stop at EOS (besides the token budget).
+    pub stop_at_eos: bool,
+}
+
+impl Request {
+    pub fn greedy(id: u64, prompt: Vec<u32>, max_new: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            sampling: SamplingConfig::greedy(),
+            stop_at_eos: false,
+        }
+    }
+}
+
+/// Terminal record handed back to the caller.
+#[derive(Debug, Clone)]
+pub struct Finished {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub ttft_s: f64,
+    pub total_s: f64,
+    pub preemptions: u32,
+    pub cached_prompt_tokens: usize,
+    pub error: Option<String>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Prefill,
+    Decode,
+}
+
+struct Live {
+    req: Request,
+    seq: SeqId,
+    phase: Phase,
+    sampler: Sampler,
+    generated: Vec<u32>,
+    /// Logits awaiting the next sample (set when prefill finishes and
+    /// after every decode step).
+    pending_logits: Option<Vec<f32>>,
+    submitted: Instant,
+    first_token: Option<Instant>,
+    preemptions: u32,
+    cached_prompt_tokens: usize,
+}
+
+pub struct Coordinator {
+    pub engine: Engine,
+    waiting: VecDeque<Request>,
+    running: Vec<Live>,
+    finished: Vec<Finished>,
+    preempt_stash: VecDeque<(Request, Vec<u32>, u32, Instant)>,
+}
+
+impl Coordinator {
+    pub fn new(engine: Engine) -> Self {
+        Coordinator {
+            engine,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            preempt_stash: VecDeque::new(),
+        }
+    }
+
+    pub fn metrics(&self) -> &ServingMetrics {
+        &self.engine.metrics
+    }
+
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        if self.waiting.len() >= self.engine.cfg.scheduler.max_waiting {
+            ServingMetrics::inc(&self.engine.metrics.requests_rejected, 1);
+            bail!("queue full ({} waiting)", self.waiting.len());
+        }
+        if req.prompt.is_empty() {
+            ServingMetrics::inc(&self.engine.metrics.requests_rejected, 1);
+            bail!("empty prompt");
+        }
+        let limit = self.engine.rt.spec().max_seq_len;
+        if req.prompt.len() + req.max_new_tokens > limit {
+            ServingMetrics::inc(&self.engine.metrics.requests_rejected, 1);
+            bail!("prompt {} + max_new {} exceeds max context {}",
+                  req.prompt.len(), req.max_new_tokens, limit);
+        }
+        self.waiting.push_back(req);
+        Ok(())
+    }
+
+    pub fn n_waiting(&self) -> usize {
+        self.waiting.len() + self.preempt_stash.len()
+    }
+
+    pub fn n_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn drain_finished(&mut self) -> Vec<Finished> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+            && self.preempt_stash.is_empty()
+    }
+
+    /// Advance one scheduling step. Returns true if any work happened.
+    pub fn tick(&mut self) -> Result<bool> {
+        match self.engine.mode() {
+            AttentionMode::Paged => self.tick_paged(),
+            AttentionMode::Contiguous => self.tick_contiguous(),
+            AttentionMode::NoCache => self.tick_nocache(),
+        }
+    }
+
+    /// Drive until every submitted request finished.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Finished>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            let progressed = self.tick()?;
+            out.extend(self.drain_finished());
+            if !progressed && !self.idle() {
+                bail!("scheduler stalled with {} waiting / {} running",
+                      self.n_waiting(), self.n_running());
+            }
+        }
+        out.extend(self.drain_finished());
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // paged mode: continuous batching + preemption
+    // ------------------------------------------------------------------
+
+    fn tick_paged(&mut self) -> Result<bool> {
+        let mut progressed = self.admit_paged()?;
+        let sched = self.engine.cfg.scheduler.clone();
+
+        let prefill_ids = select_batch(
+            self.running.iter().map(|l| (l.seq, l.phase)),
+            Phase::Prefill,
+            sched.max_batch_size,
+        );
+        let decode_ids = select_batch(
+            self.running.iter().map(|l| (l.seq, l.phase)),
+            Phase::Decode,
+            self.decode_bucket_cap(sched.max_batch_size),
+        );
+
+        let do_prefill = !prefill_ids.is_empty()
+            && (sched.prefill_priority || decode_ids.is_empty());
+        if do_prefill {
+            self.prefill_step(&prefill_ids, sched.prefill_chunk)?;
+            progressed = true;
+        } else if !decode_ids.is_empty() {
+            self.decode_step_paged(&decode_ids)?;
+            progressed = true;
+        }
+        self.retire_finished();
+        Ok(progressed)
+    }
+
+    fn decode_bucket_cap(&self, max_batch: usize) -> usize {
+        self.engine
+            .rt
+            .entry()
+            .paged_decode_batches()
+            .last()
+            .copied()
+            .unwrap_or(1)
+            .min(max_batch)
+    }
+
+    /// Admit waiting + preempted requests while pages allow.
+    fn admit_paged(&mut self) -> Result<bool> {
+        let mut progressed = false;
+        let max_running = self.engine.cfg.scheduler.max_running_seqs;
+        loop {
+            if self.running.len() >= max_running {
+                break;
+            }
+            // preempted requests re-enter first (anti-starvation)
+            let (req, preemptions) = if let Some((req, tokens, n, _)) =
+                self.preempt_stash.pop_front()
+            {
+                let mut r = req;
+                r.prompt = tokens; // re-prefill everything it had
+                (r, n)
+            } else if let Some(r) = self.waiting.pop_front() {
+                (r, 0)
+            } else {
+                break;
+            };
+
+            let seq = self.engine.fresh_seq_id();
+            let pe = self.engine.paged.as_mut().unwrap();
+            match pe.admit(seq, &req.prompt) {
+                Ok(adm) => {
+                    let m = &self.engine.metrics;
+                    ServingMetrics::inc(&m.requests_admitted, 1);
+                    if adm.cached_tokens > 0 {
+                        ServingMetrics::inc(&m.prefix_cache_hits, 1);
+                        ServingMetrics::inc(&m.prefix_cached_tokens,
+                                            adm.cached_tokens as u64);
+                    }
+                    let sampler = Sampler::new(req.sampling);
+                    self.running.push(Live {
+                        seq,
+                        sampler,
+                        generated: Vec::new(),
+                        pending_logits: None,
+                        submitted: Instant::now(),
+                        first_token: None,
+                        preemptions,
+                        cached_prompt_tokens: adm.cached_tokens,
+                        phase: Phase::Prefill,
+                        req,
+                    });
+                    progressed = true;
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    // put it back and stop admitting
+                    if preemptions > 0 {
+                        self.preempt_stash.push_front((
+                            req.clone(),
+                            req.prompt.clone(),
+                            preemptions,
+                            Instant::now(),
+                        ));
+                    } else {
+                        self.waiting.push_front(req);
+                    }
+                    break;
+                }
+                Err(e) => {
+                    self.finished.push(Finished {
+                        id: req.id,
+                        tokens: vec![],
+                        prompt_len: req.prompt.len(),
+                        ttft_s: 0.0,
+                        total_s: 0.0,
+                        preemptions,
+                        cached_prompt_tokens: 0,
+                        error: Some(e.to_string()),
+                    });
+                }
+            }
+        }
+        Ok(progressed)
+    }
+
+    fn prefill_step(&mut self, ids: &[SeqId], chunk: usize) -> Result<()> {
+        let rt = &self.engine.rt;
+        let pe = self.engine.paged.as_mut().unwrap();
+        let t0 = Instant::now();
+        let results = pe.prefill_chunk(rt, ids, chunk)?;
+        self.engine.metrics.prefill_step.record(t0.elapsed());
+        let mut prefilled_tokens = 0u64;
+        for (seq, done, logits) in results {
+            let live = self.live_mut(seq)?;
+            if done {
+                prefilled_tokens += (live.req.prompt.len()
+                    - live.cached_prompt_tokens)
+                    as u64;
+                live.phase = Phase::Decode;
+                live.pending_logits = Some(logits);
+            }
+        }
+        ServingMetrics::inc(&self.engine.metrics.tokens_prefilled,
+                            prefilled_tokens);
+        Ok(())
+    }
+
+    fn decode_step_paged(&mut self, ids: &[SeqId]) -> Result<()> {
+        // capacity guard: every decoding sequence may need a fresh page;
+        // preempt the youngest until the append plans succeed.
+        loop {
+            let pe = self.engine.paged.as_mut().unwrap();
+            let mut failed = None;
+            for &id in ids {
+                if !pe.seqs.contains_key(&id) {
+                    continue; // already preempted below
+                }
+                match pe.mgr.prepare_append(id, 1) {
+                    Ok(plan) => {
+                        if let Some((src, dst)) = plan.cow_copy {
+                            pe.k_pool.copy_page(src, dst);
+                            pe.v_pool.copy_page(src, dst);
+                        }
+                    }
+                    Err(AllocError::PoolExhausted { .. }) => {
+                        failed = Some(id);
+                        break;
+                    }
+                    Err(e) => return Err(err!("prepare_append: {e}")),
+                }
+            }
+            match failed {
+                None => break,
+                Some(_) => {
+                    if !self.preempt_youngest(ids)? {
+                        bail!("pool exhausted and nothing preemptible");
+                    }
+                }
+            }
+        }
+
+        // sample the token each sequence appends this step
+        let live_ids: Vec<SeqId> = ids
+            .iter()
+            .copied()
+            .filter(|id| self.running.iter().any(|l| l.seq == *id))
+            .collect();
+        if live_ids.is_empty() {
+            return Ok(());
+        }
+        let mut next = Vec::with_capacity(live_ids.len());
+        for &id in &live_ids {
+            let live = self.live_mut(id)?;
+            let logits = live
+                .pending_logits
+                .take()
+                .ok_or_else(|| err!("seq {id} decoding without logits"))?;
+            let tok = live.sampler.sample(&logits);
+            live.generated.push(tok);
+            if live.first_token.is_none() {
+                live.first_token = Some(Instant::now());
+            }
+            next.push(tok);
+        }
+
+        let rt = &self.engine.rt;
+        let pe = self.engine.paged.as_mut().unwrap();
+        let t0 = Instant::now();
+        let results = pe.decode_step(rt, &live_ids, &next)?;
+        let dt = t0.elapsed();
+        self.engine.metrics.decode_step.record(dt);
+        let per = dt.div_f64(live_ids.len() as f64);
+        for _ in 0..live_ids.len() {
+            self.engine.metrics.per_token.record(per);
+        }
+        ServingMetrics::inc(&self.engine.metrics.tokens_decoded,
+                            live_ids.len() as u64);
+        for (seq, logits) in results {
+            self.live_mut(seq)?.pending_logits = Some(logits);
+        }
+        Ok(())
+    }
+
+    /// Preempt the youngest decoding sequence NOT in `protect`; if all are
+    /// protected, preempt the youngest protected one (progress beats
+    /// fairness under hard exhaustion).
+    fn preempt_youngest(&mut self, protect: &[SeqId]) -> Result<bool> {
+        let pick = self
+            .running
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !protect.contains(&l.seq))
+            .max_by_key(|(_, l)| l.submitted)
+            .map(|(i, _)| i)
+            .or_else(|| {
+                self.running
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, l)| l.submitted)
+                    .map(|(i, _)| i)
+            });
+        let Some(i) = pick else { return Ok(false) };
+        let mut live = self.running.swap_remove(i);
+        let pe = self.engine.paged.as_mut().unwrap();
+        let mut tokens = pe
+            .preempt(live.seq)
+            .map_err(|e| err!("preempt: {e}"))?;
+        // tokens already includes generated ones appended during decode
+        if live.phase == Phase::Prefill {
+            tokens = live.req.prompt.clone();
+        }
+        ServingMetrics::inc(&self.engine.metrics.requests_preempted, 1);
+        live.preemptions += 1;
+        self.preempt_stash.push_back((
+            live.req,
+            tokens,
+            live.preemptions,
+            Instant::now(),
+        ));
+        Ok(true)
+    }
+
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            let l = &self.running[i];
+            let done = l.phase == Phase::Decode
+                && (l.generated.len() >= l.req.max_new_tokens
+                    || (l.req.stop_at_eos
+                        && l.generated.last() == Some(&EOS)));
+            if !done {
+                i += 1;
+                continue;
+            }
+            let live = self.running.swap_remove(i);
+            let now = Instant::now();
+            let ttft = live
+                .first_token
+                .map(|t| t.duration_since(live.submitted).as_secs_f64())
+                .unwrap_or(0.0);
+            self.engine.metrics.ttft.record(
+                std::time::Duration::from_secs_f64(ttft.max(0.0)));
+            match self.engine.mode() {
+                AttentionMode::Paged => {
+                    let pe = self.engine.paged.as_mut().unwrap();
+                    let _ = pe.release(live.seq);
+                }
+                AttentionMode::Contiguous => {
+                    let ce = self.engine.contiguous.as_mut().unwrap();
+                    let _ = ce.release(live.seq);
+                }
+                AttentionMode::NoCache => {}
+            }
+            ServingMetrics::inc(&self.engine.metrics.requests_finished, 1);
+            self.finished.push(Finished {
+                id: live.req.id,
+                prompt_len: live.req.prompt.len(),
+                tokens: live.generated,
+                ttft_s: ttft,
+                total_s: now.duration_since(live.submitted).as_secs_f64(),
+                preemptions: live.preemptions,
+                cached_prompt_tokens: live.cached_prompt_tokens,
+                error: None,
+            });
+        }
+    }
+
+    fn live_mut(&mut self, seq: SeqId) -> Result<&mut Live> {
+        self.running
+            .iter_mut()
+            .find(|l| l.seq == seq)
+            .ok_or_else(|| err!("unknown live sequence {seq}"))
+    }
+
+    // ------------------------------------------------------------------
+    // contiguous mode: whole-prompt prefill, slot batching, no preemption
+    // ------------------------------------------------------------------
+
+    fn tick_contiguous(&mut self) -> Result<bool> {
+        let mut progressed = false;
+        // cap at the largest compiled decode bucket (the monolithic
+        // baseline only has a few batch shapes)
+        let bucket_cap = self
+            .engine
+            .rt
+            .entry()
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "decode")
+            .filter_map(|a| a.batch)
+            .max()
+            .unwrap_or(1);
+        let cap = self.engine.cfg.scheduler.max_batch_size.min(bucket_cap);
+        // admit while the arena holds
+        while self.running.len() < cap {
+            let Some(req) = self.waiting.pop_front() else { break };
+            let seq = self.engine.fresh_seq_id();
+            let ce = self.engine.contiguous.as_mut().unwrap();
+            match ce.admit(seq, &req.prompt) {
+                Ok(()) => {
+                    ServingMetrics::inc(
+                        &self.engine.metrics.requests_admitted, 1);
+                    self.running.push(Live {
+                        seq,
+                        sampler: Sampler::new(req.sampling),
+                        generated: Vec::new(),
+                        pending_logits: None,
+                        submitted: Instant::now(),
+                        first_token: None,
+                        preemptions: 0,
+                        cached_prompt_tokens: 0,
+                        phase: Phase::Prefill,
+                        req,
+                    });
+                    progressed = true;
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    self.waiting.push_front(req);
+                    break;
+                }
+                Err(e) => bail!("contiguous admit: {e}"),
+            }
+        }
+
+        let prefill_ids: Vec<SeqId> = self
+            .running
+            .iter()
+            .filter(|l| l.phase == Phase::Prefill)
+            .map(|l| l.seq)
+            .collect();
+        if !prefill_ids.is_empty() {
+            let rt = &self.engine.rt;
+            let ce = self.engine.contiguous.as_mut().unwrap();
+            let t0 = Instant::now();
+            let results = ce.prefill(rt, &prefill_ids)?;
+            self.engine.metrics.prefill_step.record(t0.elapsed());
+            let mut n_tokens = 0u64;
+            for (seq, logits) in results {
+                let live = self.live_mut(seq)?;
+                n_tokens += live.req.prompt.len() as u64;
+                live.phase = Phase::Decode;
+                live.pending_logits = Some(logits);
+            }
+            ServingMetrics::inc(&self.engine.metrics.tokens_prefilled,
+                                n_tokens);
+            self.retire_finished();
+            return Ok(true);
+        }
+
+        let decode_ids: Vec<SeqId> = self
+            .running
+            .iter()
+            .filter(|l| l.phase == Phase::Decode)
+            .map(|l| l.seq)
+            .collect();
+        if !decode_ids.is_empty() {
+            let mut next = Vec::with_capacity(decode_ids.len());
+            for &id in &decode_ids {
+                let live = self.live_mut(id)?;
+                let logits = live
+                    .pending_logits
+                    .take()
+                    .ok_or_else(|| err!("no logits for {id}"))?;
+                let tok = live.sampler.sample(&logits);
+                live.generated.push(tok);
+                if live.first_token.is_none() {
+                    live.first_token = Some(Instant::now());
+                }
+                next.push(tok);
+            }
+            let rt = &self.engine.rt;
+            let ce = self.engine.contiguous.as_mut().unwrap();
+            let t0 = Instant::now();
+            let results = ce.decode_step(rt, &decode_ids, &next)?;
+            let dt = t0.elapsed();
+            self.engine.metrics.decode_step.record(dt);
+            let per = dt.div_f64(decode_ids.len() as f64);
+            for _ in 0..decode_ids.len() {
+                self.engine.metrics.per_token.record(per);
+            }
+            ServingMetrics::inc(&self.engine.metrics.tokens_decoded,
+                                decode_ids.len() as u64);
+            for (seq, logits) in results {
+                self.live_mut(seq)?.pending_logits = Some(logits);
+            }
+            progressed = true;
+        }
+        self.retire_finished();
+        Ok(progressed)
+    }
+
+    // ------------------------------------------------------------------
+    // nocache mode: strictly sequential FIFO (it has no state to batch)
+    // ------------------------------------------------------------------
+
+    fn tick_nocache(&mut self) -> Result<bool> {
+        let Some(req) = self.waiting.pop_front() else {
+            return Ok(false);
+        };
+        ServingMetrics::inc(&self.engine.metrics.requests_admitted, 1);
+        let submitted = Instant::now();
+        let mut sampler = Sampler::new(req.sampling);
+        let mut tokens = req.prompt.clone();
+        let mut generated = Vec::new();
+        let mut first_token = None;
+        for _ in 0..req.max_new_tokens {
+            let t0 = Instant::now();
+            let ne = self.engine.nocache.as_ref().unwrap();
+            let logits = ne.forward(&self.engine.rt, &tokens)?;
+            self.engine.metrics.per_token.record(t0.elapsed());
+            let tok = sampler.sample(&logits);
+            first_token.get_or_insert(Instant::now());
+            generated.push(tok);
+            tokens.push(tok);
+            ServingMetrics::inc(&self.engine.metrics.tokens_decoded, 1);
+            if req.stop_at_eos && tok == EOS {
+                break;
+            }
+        }
+        let ttft = first_token
+            .map(|t| t.duration_since(submitted).as_secs_f64())
+            .unwrap_or(0.0);
+        self.engine
+            .metrics
+            .ttft
+            .record(std::time::Duration::from_secs_f64(ttft));
+        ServingMetrics::inc(&self.engine.metrics.requests_finished, 1);
+        self.finished.push(Finished {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens: generated,
+            ttft_s: ttft,
+            total_s: submitted.elapsed().as_secs_f64(),
+            preemptions: 0,
+            cached_prompt_tokens: 0,
+            error: None,
+        });
+        Ok(true)
+    }
+}
+
+// ----------------------------------------------------------------------
+// pure scheduling policy (unit-testable without an engine)
+// ----------------------------------------------------------------------
+
+/// First-come-first-served batch of sequences in `phase`, capped at `cap`.
+fn select_batch(
+    live: impl Iterator<Item = (SeqId, Phase)>,
+    phase: Phase,
+    cap: usize,
+) -> Vec<SeqId> {
+    live.filter(|(_, p)| *p == phase)
+        .map(|(id, _)| id)
+        .take(cap)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_batch_filters_and_caps() {
+        let live = vec![
+            (1, Phase::Prefill),
+            (2, Phase::Decode),
+            (3, Phase::Prefill),
+            (4, Phase::Prefill),
+        ];
+        let got = select_batch(live.iter().copied(), Phase::Prefill, 2);
+        assert_eq!(got, vec![1, 3]);
+        let got = select_batch(live.iter().copied(), Phase::Decode, 8);
+        assert_eq!(got, vec![2]);
+    }
+
+    #[test]
+    fn request_constructor_defaults() {
+        let r = Request::greedy(5, vec![1, 2, 3], 7);
+        assert_eq!(r.max_new_tokens, 7);
+        assert!(r.sampling.is_greedy());
+        assert!(!r.stop_at_eos);
+    }
+}

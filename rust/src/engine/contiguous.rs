@@ -1,0 +1,241 @@
+//! Contiguous-cache execution path — the baseline the paper displaces.
+//!
+//! Every sequence owns a monolithic [L, Hkv, M, dh] K/V pair sized to the
+//! model's max context regardless of its actual length (FasterTransformer
+//! -style pre-allocation, Sec. II-A.1). The [`ContiguousAllocator`] does
+//! the byte accounting that Fig. 2 / the waste tables report; per decode
+//! step the per-sequence caches are assembled into the batch-major tensor
+//! the artifact expects — the assembly cost *is* the monolithic layout's
+//! cost, paid honestly.
+
+use std::collections::HashMap;
+
+use crate::kvpage::{AllocError, ContiguousAllocator, SeqId};
+use crate::model::ModelSpec;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::{Result, WrapErr};
+use crate::{ensure, err};
+
+struct ContigSeq {
+    tokens: Vec<u32>,
+    prefilled: usize,
+    /// [L, Hkv, M, dh] flat, M = max_seq_len.
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+}
+
+pub struct ContiguousEngine {
+    pub alloc: ContiguousAllocator,
+    seqs: HashMap<SeqId, ContigSeq>,
+    spec: ModelSpec,
+}
+
+impl ContiguousEngine {
+    pub fn new(spec: &ModelSpec, arena_bytes: u64) -> Self {
+        ContiguousEngine {
+            alloc: ContiguousAllocator::new(
+                arena_bytes,
+                spec.max_seq_len,
+                spec.kv_bytes_per_token as u64,
+            ),
+            seqs: HashMap::new(),
+            spec: spec.clone(),
+        }
+    }
+
+    fn cache_elems(&self) -> usize {
+        self.spec.n_layers * self.spec.n_kv_heads * self.spec.max_seq_len
+            * self.spec.d_head
+    }
+
+    pub fn admit(&mut self, id: SeqId, prompt: &[u32])
+                 -> Result<(), AllocError> {
+        self.alloc.reserve(id)?;
+        let n = self.cache_elems();
+        self.seqs.insert(id, ContigSeq {
+            tokens: prompt.to_vec(),
+            prefilled: 0,
+            k_cache: vec![0.0; n],
+            v_cache: vec![0.0; n],
+        });
+        Ok(())
+    }
+
+    pub fn release(&mut self, id: SeqId) -> Result<(), AllocError> {
+        self.seqs.remove(&id);
+        self.alloc.free(id)
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.prefilled)
+    }
+
+    pub fn tokens(&self, id: SeqId) -> Option<&[u32]> {
+        self.seqs.get(&id).map(|s| s.tokens.as_slice())
+    }
+
+    /// Whole-prompt prefill through the bucketed prefill artifact.
+    /// Returns (id, logits_row) for each sequence. Groups larger than
+    /// any compiled bucket are split (the monolithic baseline compiled
+    /// few batch shapes — exactly its inflexibility).
+    pub fn prefill(&mut self, rt: &Runtime, ids: &[SeqId])
+                   -> Result<Vec<(SeqId, Vec<f32>)>> {
+        ensure!(!ids.is_empty(), "empty prefill batch");
+        let max_len = ids
+            .iter()
+            .map(|id| self.seqs[id].tokens.len())
+            .max()
+            .unwrap();
+        if rt.entry().prefill_bucket(ids.len(), max_len).is_none()
+            && ids.len() > 1
+        {
+            // no bucket for this batch: split and recurse
+            let (a, b) = ids.split_at(ids.len() / 2);
+            let mut out = self.prefill(rt, a)?;
+            out.extend(self.prefill(rt, b)?);
+            return Ok(out);
+        }
+        let (name, art) = rt
+            .entry()
+            .prefill_bucket(ids.len(), max_len)
+            .ok_or_else(|| err!(
+                "no prefill bucket for b={} s={}", ids.len(), max_len))?;
+        let name = name.to_string();
+        let b = art.batch.unwrap();
+        let s_bucket = art.seq.unwrap();
+
+        let mut tokens = vec![0i32; b * s_bucket];
+        let mut seq_lens = vec![1i32; b]; // padded rows: 1 live token
+        for (i, id) in ids.iter().enumerate() {
+            let sq = &self.seqs[id];
+            for (t, &tok) in sq.tokens.iter().enumerate() {
+                tokens[i * s_bucket + t] = tok as i32;
+            }
+            seq_lens[i] = sq.tokens.len() as i32;
+        }
+        let outs = rt
+            .run(&name, &[
+                HostTensor::i32(tokens, vec![b, s_bucket]),
+                HostTensor::scalar_i32_vec(&seq_lens),
+            ])
+            .wrap_err_with(|| format!("running {name}"))?;
+        ensure!(outs.len() == 3, "prefill returns 3 outputs");
+        let logits = outs[0].as_f32()?;
+        let k_all = outs[1].as_f32()?; // [L, B, Hkv, M, dh]
+        let v_all = outs[2].as_f32()?;
+
+        let spec = &self.spec;
+        let (l_n, hkv, m, dh) = (spec.n_layers, spec.n_kv_heads,
+                                 spec.max_seq_len, spec.d_head);
+        let vocab = spec.vocab_size;
+        let mut results = Vec::with_capacity(ids.len());
+        for (i, id) in ids.iter().enumerate() {
+            // slice batch row i out of [L, B, Hkv, M, dh]
+            let sq = self.seqs.get_mut(id).unwrap();
+            let row_elems = hkv * m * dh;
+            for l in 0..l_n {
+                let src = (l * b + i) * row_elems;
+                let dst = l * row_elems;
+                sq.k_cache[dst..dst + row_elems]
+                    .copy_from_slice(&k_all[src..src + row_elems]);
+                sq.v_cache[dst..dst + row_elems]
+                    .copy_from_slice(&v_all[src..src + row_elems]);
+            }
+            let n_tok = sq.tokens.len();
+            sq.prefilled = n_tok;
+            self.alloc
+                .note_assigned(*id, n_tok)
+                .map_err(|e| err!("{e}"))?;
+            results.push((
+                *id,
+                logits[i * vocab..(i + 1) * vocab].to_vec(),
+            ));
+        }
+        Ok(results)
+    }
+
+    /// One decode step ("default attention kernel", Fig. 4 baseline).
+    pub fn decode_step(&mut self, rt: &Runtime, ids: &[SeqId],
+                       next: &[u32]) -> Result<Vec<(SeqId, Vec<f32>)>> {
+        ensure!(!ids.is_empty() && ids.len() == next.len(),
+                "bad decode batch");
+        let spec = self.spec.clone();
+        let batches: Vec<usize> = rt
+            .entry()
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "decode")
+            .filter_map(|a| a.batch)
+            .collect();
+        let b = *batches
+            .iter()
+            .filter(|&&x| x >= ids.len())
+            .min()
+            .ok_or_else(|| err!(
+                "no decode bucket for batch {}", ids.len()))?;
+        let (name, _) = rt.entry().decode(b).unwrap();
+        let name = name.to_string();
+
+        // assemble the batch-major monolithic caches [L, B, Hkv, M, dh]
+        let (l_n, hkv, m, dh) = (spec.n_layers, spec.n_kv_heads,
+                                 spec.max_seq_len, spec.d_head);
+        let row_elems = hkv * m * dh;
+        let mut k_b = vec![0f32; l_n * b * row_elems];
+        let mut v_b = vec![0f32; l_n * b * row_elems];
+        let mut tokens = vec![0i32; b];
+        let mut seq_lens = vec![0i32; b];
+        for (i, id) in ids.iter().enumerate() {
+            let sq = &self.seqs[id];
+            for l in 0..l_n {
+                let dst = (l * b + i) * row_elems;
+                let src = l * row_elems;
+                k_b[dst..dst + row_elems]
+                    .copy_from_slice(&sq.k_cache[src..src + row_elems]);
+                v_b[dst..dst + row_elems]
+                    .copy_from_slice(&sq.v_cache[src..src + row_elems]);
+            }
+            tokens[i] = next[i] as i32;
+            seq_lens[i] = sq.prefilled as i32;
+        }
+        let cache_shape = vec![l_n, b, hkv, m, dh];
+        let outs = rt
+            .run(&name, &[
+                HostTensor::i32(tokens, vec![b]),
+                HostTensor::f32(k_b, cache_shape.clone()),
+                HostTensor::f32(v_b, cache_shape),
+                HostTensor::scalar_i32_vec(&seq_lens),
+            ])
+            .wrap_err_with(|| format!("running {name}"))?;
+        ensure!(outs.len() == 3, "decode returns 3 outputs");
+        let logits = outs[0].as_f32()?;
+        let k_new = outs[1].as_f32()?; // [L, B, Hkv, dh]
+        let v_new = outs[2].as_f32()?;
+
+        let vocab = spec.vocab_size;
+        let mut results = Vec::with_capacity(ids.len());
+        for (i, id) in ids.iter().enumerate() {
+            let sq = self.seqs.get_mut(id).unwrap();
+            let pos = sq.prefilled;
+            ensure!(pos < m, "sequence {id} overflows max_seq_len {m}");
+            // write-back at position pos
+            for l in 0..l_n {
+                for h in 0..hkv {
+                    let src = ((l * b + i) * hkv + h) * dh;
+                    let dst = ((l * hkv + h) * m + pos) * dh;
+                    sq.k_cache[dst..dst + dh]
+                        .copy_from_slice(&k_new[src..src + dh]);
+                    sq.v_cache[dst..dst + dh]
+                        .copy_from_slice(&v_new[src..src + dh]);
+                }
+            }
+            sq.tokens.push(next[i]);
+            sq.prefilled += 1;
+            self.alloc.note_assigned(*id, 1).map_err(|e| err!("{e}"))?;
+            results.push((
+                *id,
+                logits[i * vocab..(i + 1) * vocab].to_vec(),
+            ));
+        }
+        Ok(results)
+    }
+}

@@ -1,0 +1,170 @@
+//! Engine — one loaded model + one attention path, driving the runtime.
+//!
+//! Thin facade over the three execution paths (the paper's three
+//! configurations):
+//!
+//! * [`paged::PagedEngine`]      — PagedAttention over the KV pool
+//! * [`contiguous::ContiguousEngine`] — monolithic per-request buffers
+//! * [`nocache::NoCacheEngine`]  — full recompute per token (Fig. 3)
+//!
+//! The contiguous arena is budgeted to exactly the paged pool's byte
+//! size, so the two baselines compete for the *same* device memory — the
+//! comparison the paper's Sec. IV makes.
+
+pub mod contiguous;
+pub mod nocache;
+pub mod paged;
+pub mod sampler;
+
+use std::path::Path;
+
+use crate::config::{AttentionMode, EngineConfig};
+use crate::kvpage::SeqId;
+use crate::metrics::ServingMetrics;
+use crate::runtime::Runtime;
+use crate::util::{Result, WrapErr};
+use crate::{bail, err};
+
+pub use contiguous::ContiguousEngine;
+pub use nocache::NoCacheEngine;
+pub use paged::{PagedEngine, SeqState};
+pub use sampler::{argmax, log_prob, Sampler};
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: EngineConfig,
+    pub paged: Option<PagedEngine>,
+    pub contiguous: Option<ContiguousEngine>,
+    pub nocache: Option<NoCacheEngine>,
+    pub metrics: ServingMetrics,
+    next_seq: SeqId,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let rt = Runtime::load(Path::new(&cfg.artifacts_dir), &cfg.model)
+            .wrap_err("loading runtime")?;
+        let spec = rt.spec().clone();
+        let (mut paged, mut contiguous, mut nocache) = (None, None, None);
+        match cfg.attention {
+            AttentionMode::Paged => {
+                paged = Some(PagedEngine::new(
+                    &spec,
+                    cfg.growth_policy.into(),
+                    cfg.prefix_cache,
+                ));
+            }
+            AttentionMode::Contiguous => {
+                contiguous = Some(ContiguousEngine::new(
+                    &spec,
+                    spec.pool_bytes() as u64,
+                ));
+            }
+            AttentionMode::NoCache => {
+                nocache = Some(NoCacheEngine::new(&spec));
+            }
+        }
+        Ok(Engine {
+            rt,
+            cfg,
+            paged,
+            contiguous,
+            nocache,
+            metrics: ServingMetrics::new(),
+            next_seq: 1,
+        })
+    }
+
+    pub fn mode(&self) -> AttentionMode {
+        self.cfg.attention
+    }
+
+    pub fn fresh_seq_id(&mut self) -> SeqId {
+        let id = self.next_seq;
+        self.next_seq += 1;
+        id
+    }
+
+    pub fn paged_mut(&mut self) -> Result<&mut PagedEngine> {
+        self.paged.as_mut().ok_or_else(|| err!("engine not in paged mode"))
+    }
+
+    pub fn contiguous_mut(&mut self) -> Result<&mut ContiguousEngine> {
+        self.contiguous
+            .as_mut()
+            .ok_or_else(|| err!("engine not in contiguous mode"))
+    }
+
+    /// Convenience single-sequence generation (examples/benches; the
+    /// server uses the coordinator's batched loop instead). Returns the
+    /// generated tokens.
+    pub fn generate(&mut self, prompt: &[u32], max_new: usize,
+                    sampler: &mut Sampler) -> Result<Vec<u32>> {
+        match self.cfg.attention {
+            AttentionMode::Paged => {
+                let id = self.fresh_seq_id();
+                let chunk = self.cfg.scheduler.prefill_chunk;
+                let rt = &self.rt;
+                let pe = self
+                    .paged
+                    .as_mut()
+                    .ok_or_else(|| err!("paged engine missing"))?;
+                pe.admit(id, prompt).map_err(|e| err!("{e}"))?;
+                let mut logits = loop {
+                    let out = pe.prefill_chunk(rt, &[id], chunk)?;
+                    let (_, finished, row) = out.into_iter().next().unwrap();
+                    if finished {
+                        break row;
+                    }
+                };
+                let mut out_tokens = Vec::with_capacity(max_new);
+                for _ in 0..max_new {
+                    let tok = sampler.sample(&logits);
+                    out_tokens.push(tok);
+                    let step = pe.decode_step(rt, &[id], &[tok])?;
+                    logits = step.into_iter().next().unwrap().1;
+                }
+                pe.release(id).map_err(|e| err!("{e}"))?;
+                Ok(out_tokens)
+            }
+            AttentionMode::Contiguous => {
+                let id = self.fresh_seq_id();
+                let rt = &self.rt;
+                let ce = self
+                    .contiguous
+                    .as_mut()
+                    .ok_or_else(|| err!("contiguous engine missing"))?;
+                ce.admit(id, prompt).map_err(|e| err!("{e}"))?;
+                let mut logits =
+                    ce.prefill(rt, &[id])?.into_iter().next().unwrap().1;
+                let mut out_tokens = Vec::with_capacity(max_new);
+                for _ in 0..max_new {
+                    let tok = sampler.sample(&logits);
+                    out_tokens.push(tok);
+                    let step = ce.decode_step(rt, &[id], &[tok])?;
+                    logits = step.into_iter().next().unwrap().1;
+                }
+                ce.release(id).map_err(|e| err!("{e}"))?;
+                Ok(out_tokens)
+            }
+            AttentionMode::NoCache => {
+                let ne = self
+                    .nocache
+                    .as_ref()
+                    .ok_or_else(|| err!("nocache engine missing"))?;
+                let mut tokens = prompt.to_vec();
+                let mut out_tokens = Vec::with_capacity(max_new);
+                for _ in 0..max_new {
+                    if tokens.len() > ne.spec().max_seq_len {
+                        bail!("context overflow in nocache mode");
+                    }
+                    let logits = ne.forward(&self.rt, &tokens)?;
+                    let tok = sampler.sample(&logits);
+                    out_tokens.push(tok);
+                    tokens.push(tok);
+                }
+                Ok(out_tokens)
+            }
+        }
+    }
+}

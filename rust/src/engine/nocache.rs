@@ -1,0 +1,54 @@
+//! No-cache execution path — Fig. 3's "without caching" baseline.
+//!
+//! Every generated token re-runs the full forward pass over the entire
+//! prefix (no KV reuse at all), through the `nocache_s{S}` bucket whose
+//! S is the smallest compiled size ≥ the current length. Latency per
+//! token therefore grows with context length — the redundant-compute
+//! regime the paper contrasts against.
+
+use crate::model::ModelSpec;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::{Result, WrapErr};
+use crate::err;
+
+pub struct NoCacheEngine {
+    spec: ModelSpec,
+}
+
+impl NoCacheEngine {
+    pub fn new(spec: &ModelSpec) -> Self {
+        NoCacheEngine { spec: spec.clone() }
+    }
+
+    /// Logits for the next token after `tokens` (full recompute).
+    pub fn forward(&self, rt: &Runtime, tokens: &[u32])
+                   -> Result<Vec<f32>> {
+        let (name, art) = rt
+            .entry()
+            .artifacts
+            .iter()
+            .filter(|(_, a)| a.kind == "nocache")
+            .filter(|(_, a)| a.seq.unwrap_or(0) >= tokens.len())
+            .min_by_key(|(_, a)| a.seq.unwrap())
+            .map(|(n, a)| (n.clone(), a.clone()))
+            .ok_or_else(|| err!(
+                "no nocache bucket for len {} (have {:?})", tokens.len(),
+                rt.entry().nocache_seqs()))?;
+        let s_bucket = art.seq.unwrap();
+        let mut padded = vec![0i32; s_bucket];
+        for (t, &tok) in tokens.iter().enumerate() {
+            padded[t] = tok as i32;
+        }
+        let outs = rt
+            .run(&name, &[
+                HostTensor::i32(padded, vec![1, s_bucket]),
+                HostTensor::scalar_i32_vec(&[tokens.len() as i32]),
+            ])
+            .wrap_err_with(|| format!("running {name}"))?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+}

@@ -1,0 +1,406 @@
+//! Paged execution path — the paper's system, end to end:
+//!
+//! RESERVE (admission, prefix-cache aware) → chunked PREFILL over page
+//! views → per-step DECODE with fused GATHER → Rust-side ASSIGN into the
+//! authoritative [`HostPool`] → FREE on completion.
+//!
+//! Per step the engine gathers the *active subpool*: only the pages the
+//! batch's block tables actually reference are copied into the dense
+//! [L, B·maxB, page, Hkv, dh] window the artifact was compiled for, with
+//! table entries remapped to window indices. Upload therefore scales with
+//! live context, not pool capacity (DESIGN.md §5's CPU-PJRT adaptation;
+//! on device-resident hardware this window is the pool itself).
+
+use std::collections::HashMap;
+
+use crate::kvpage::{
+    AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
+    PoolGeometry, SeqId,
+};
+use crate::model::ModelSpec;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::{Result, WrapErr};
+use crate::{ensure, err};
+
+/// Numeric state of one live sequence.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    /// Prompt + generated tokens.
+    pub tokens: Vec<u32>,
+    /// Tokens whose KV is in pages (prefix-cache hits count).
+    pub prefilled: usize,
+}
+
+impl SeqState {
+    pub fn remaining_prefill(&self) -> usize {
+        self.tokens.len() - self.prefilled
+    }
+}
+
+pub struct PagedEngine {
+    pub mgr: PageManager,
+    pub k_pool: HostPool,
+    pub v_pool: HostPool,
+    pub seqs: HashMap<SeqId, SeqState>,
+    spec: ModelSpec,
+    /// Reused window scratch (§Perf iteration 2): avoids allocating and
+    /// zeroing multi-MB buffers every step. Stale contents are safe —
+    /// the kernel only reads pages the block tables map below each
+    /// sequence's live length.
+    k_scratch: Vec<f32>,
+    v_scratch: Vec<f32>,
+}
+
+/// Outcome of admitting a prompt.
+pub struct Admission {
+    pub cached_tokens: usize,
+}
+
+impl PagedEngine {
+    pub fn new(spec: &ModelSpec, policy: GrowthPolicy,
+               prefix_cache: bool) -> Self {
+        let alloc = std::sync::Arc::new(PageAllocator::new(
+            spec.n_pages as u32,
+            spec.page_size,
+            spec.kv_bytes_per_token as u64,
+            policy,
+        ));
+        let mut mgr = PageManager::new(alloc, spec.max_blocks_per_seq);
+        mgr.set_prefix_cache(prefix_cache);
+        let geo = PoolGeometry::from_spec(spec);
+        PagedEngine {
+            mgr,
+            k_pool: HostPool::zeros(geo),
+            v_pool: HostPool::zeros(geo),
+            seqs: HashMap::new(),
+            spec: spec.clone(),
+            k_scratch: Vec::new(),
+            v_scratch: Vec::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// RESERVE + sequence bookkeeping. Errors bubble PoolExhausted so the
+    /// scheduler can queue or evict.
+    pub fn admit(&mut self, id: SeqId, prompt: &[u32])
+                 -> Result<Admission, AllocError> {
+        let out = self.mgr.reserve(id, prompt)?;
+        self.seqs.insert(id, SeqState {
+            tokens: prompt.to_vec(),
+            prefilled: out.cached_tokens,
+        });
+        Ok(Admission { cached_tokens: out.cached_tokens })
+    }
+
+    /// FREE everything the sequence holds.
+    pub fn release(&mut self, id: SeqId) -> Result<(), AllocError> {
+        self.seqs.remove(&id);
+        self.mgr.free(id)
+    }
+
+    /// Preempt: drop pages but keep tokens so the request can re-prefill
+    /// later (vLLM-style recompute preemption).
+    pub fn preempt(&mut self, id: SeqId) -> Result<Vec<u32>, AllocError> {
+        let state = self
+            .seqs
+            .remove(&id)
+            .ok_or(AllocError::UnknownSeq(id))?;
+        self.mgr.free(id)?;
+        Ok(state.tokens)
+    }
+
+    pub fn seq(&self, id: SeqId) -> Option<&SeqState> {
+        self.seqs.get(&id)
+    }
+
+    /// Chat-growth extension: append `new_tokens` to an existing
+    /// sequence's transcript and EXTEND its page mapping; the tokens are
+    /// then prefilled incrementally by `prefill_chunk` (cache_lens > 0).
+    pub fn extend_sequence(&mut self, id: SeqId, new_tokens: &[u32])
+                           -> Result<(), AllocError> {
+        let plan = self.mgr.prepare_append(id, new_tokens.len())?;
+        if let Some((src, dst)) = plan.cow_copy {
+            self.k_pool.copy_page(src, dst);
+            self.v_pool.copy_page(src, dst);
+        }
+        self.seqs
+            .get_mut(&id)
+            .ok_or(AllocError::UnknownSeq(id))?
+            .tokens
+            .extend_from_slice(new_tokens);
+        Ok(())
+    }
+
+    /// One batched PREFILL chunk for `ids` (each advances by ≤ chunk of
+    /// the bucket artifact). Returns (id, finished, logits_row) — logits
+    /// are only meaningful when `finished` (they sit at the prompt's last
+    /// live token).
+    pub fn prefill_chunk(
+        &mut self,
+        rt: &Runtime,
+        ids: &[SeqId],
+        max_chunk: usize,
+    ) -> Result<Vec<(SeqId, bool, Vec<f32>)>> {
+        ensure!(!ids.is_empty(), "empty prefill batch");
+        let want_chunk = ids
+            .iter()
+            .map(|id| {
+                self.seqs[id].remaining_prefill().min(max_chunk).max(1)
+            })
+            .max()
+            .unwrap();
+        let (name, art) = rt
+            .entry()
+            .paged_chunk_bucket(ids.len(), want_chunk)
+            .ok_or_else(|| err!(
+                "no paged_chunk bucket for b={} c={}", ids.len(),
+                want_chunk))?;
+        let name = name.to_string();
+        let b = art.batch.unwrap();
+        let c = art.chunk.unwrap();
+
+        // batch tensors
+        let mut tokens = vec![0i32; b * c];
+        let mut cache_lens = vec![0i32; b];
+        let mut chunk_lens = vec![0i32; b];
+        for (i, id) in ids.iter().enumerate() {
+            let s = &self.seqs[id];
+            let take = s.remaining_prefill().min(c);
+            for t in 0..take {
+                tokens[i * c + t] = s.tokens[s.prefilled + t] as i32;
+            }
+            cache_lens[i] = s.prefilled as i32;
+            chunk_lens[i] = take as i32;
+        }
+        let outs = self.run_paged(rt, &name, ids, tokens, vec![b, c],
+                                  cache_lens.clone(), chunk_lens.clone())?;
+        let (logits, k_chunk, v_chunk) = unpack3(outs)?;
+
+        // ASSIGN + bookkeeping
+        let vocab = self.spec.vocab_size;
+        let mut results = Vec::with_capacity(ids.len());
+        for (i, id) in ids.iter().enumerate() {
+            let take = chunk_lens[i] as usize;
+            self.scatter_chunk(*id, &k_chunk, &v_chunk, b, c, i, take)?;
+            let s = self.seqs.get_mut(id).unwrap();
+            s.prefilled += take;
+            let finished = s.prefilled == s.tokens.len();
+            if finished {
+                let toks = s.tokens.clone();
+                self.mgr
+                    .register_prefix(*id, &toks)
+                    .map_err(|e| err!("{e}"))?;
+            }
+            let row =
+                logits.as_f32()?[i * vocab..(i + 1) * vocab].to_vec();
+            results.push((*id, finished, row));
+        }
+        Ok(results)
+    }
+
+    /// One batched DECODE step: `next` holds the token to append per id.
+    /// Returns logits rows for sampling the token after that.
+    pub fn decode_step(
+        &mut self,
+        rt: &Runtime,
+        ids: &[SeqId],
+        next: &[u32],
+    ) -> Result<Vec<(SeqId, Vec<f32>)>> {
+        ensure!(!ids.is_empty(), "empty decode batch");
+        ensure!(ids.len() == next.len(), "ids/next length mismatch");
+        let batches = rt.entry().paged_decode_batches();
+        let b = *batches
+            .iter()
+            .find(|&&x| x >= ids.len())
+            .ok_or_else(|| err!(
+                "no paged_decode bucket for batch {} (have {:?})",
+                ids.len(), batches))?;
+        let (name, _) = rt.entry().paged_decode(b).unwrap();
+        let name = name.to_string();
+
+        // CoW/extend BEFORE the step so block tables cover the new token.
+        for id in ids {
+            let plan = self
+                .mgr
+                .prepare_append(*id, 1)
+                .map_err(|e| err!("prepare_append({id}): {e}"))?;
+            if let Some((src, dst)) = plan.cow_copy {
+                self.k_pool.copy_page(src, dst);
+                self.v_pool.copy_page(src, dst);
+            }
+        }
+
+        let mut tokens = vec![0i32; b];
+        let mut cache_lens = vec![0i32; b];
+        let mut chunk_lens = vec![0i32; b];
+        for (i, id) in ids.iter().enumerate() {
+            tokens[i] = next[i] as i32;
+            cache_lens[i] = self.seqs[id].prefilled as i32;
+            chunk_lens[i] = 1;
+        }
+        let outs = self.run_paged(rt, &name, ids, tokens, vec![b, 1],
+                                  cache_lens, chunk_lens)?;
+        let (logits, k_new, v_new) = unpack3(outs)?;
+
+        let vocab = self.spec.vocab_size;
+        let mut results = Vec::with_capacity(ids.len());
+        for (i, id) in ids.iter().enumerate() {
+            self.scatter_chunk(*id, &k_new, &v_new, b, 1, i, 1)?;
+            let s = self.seqs.get_mut(id).unwrap();
+            s.tokens.push(next[i]);
+            s.prefilled += 1;
+            let row =
+                logits.as_f32()?[i * vocab..(i + 1) * vocab].to_vec();
+            results.push((*id, row));
+        }
+        Ok(results)
+    }
+
+    /// Gather the active subpool + remapped tables and execute.
+    fn run_paged(
+        &mut self,
+        rt: &Runtime,
+        artifact: &str,
+        ids: &[SeqId],
+        tokens: Vec<i32>,
+        token_shape: Vec<usize>,
+        cache_lens: Vec<i32>,
+        chunk_lens: Vec<i32>,
+    ) -> Result<Vec<HostTensor>> {
+        let b = token_shape[0];
+        let maxb = self.spec.max_blocks_per_seq;
+        let ps = self.spec.page_size;
+        let geo = *self.k_pool.geometry();
+        let window_pages = b * maxb;
+
+        // remap physical pages -> dense window indices
+        let mut remap: HashMap<u32, i32> = HashMap::new();
+        let mut order: Vec<u32> = Vec::new();
+        let mut tables = vec![0i32; b * maxb];
+        for (i, id) in ids.iter().enumerate() {
+            let table = self.mgr.table(*id).map_err(|e| err!("{e}"))?;
+            let cached_blocks =
+                (cache_lens[i] as usize + chunk_lens[i] as usize)
+                    .div_ceil(ps)
+                    .min(table.n_blocks());
+            for (j, &p) in table.pages()[..cached_blocks].iter().enumerate()
+            {
+                let next_idx = order.len() as i32;
+                let sub = *remap.entry(p).or_insert_with(|| {
+                    order.push(p);
+                    next_idx
+                });
+                tables[i * maxb + j] = sub;
+            }
+        }
+        ensure!(order.len() <= window_pages,
+                "active set {} exceeds window {}", order.len(),
+                window_pages);
+
+        // dense window copy (K and V), layout [L, W, page, Hkv, dh],
+        // into reused scratch (grow once; stale tails are never read)
+        let page_elems = geo.page_elems();
+        let window_elems = geo.n_layers * window_pages * page_elems;
+        {
+            let _prof = crate::util::profile::span(
+                crate::util::profile::Phase::SubpoolGather);
+            if self.k_scratch.len() != window_elems {
+                self.k_scratch.resize(window_elems, 0.0);
+                self.v_scratch.resize(window_elems, 0.0);
+            }
+            for (sub, &phys) in order.iter().enumerate() {
+                for l in 0..geo.n_layers {
+                    let src = geo.offset(l, phys, 0);
+                    let dst = (l * window_pages + sub) * page_elems;
+                    self.k_scratch[dst..dst + page_elems].copy_from_slice(
+                        &self.k_pool.as_slice()[src..src + page_elems]);
+                    self.v_scratch[dst..dst + page_elems].copy_from_slice(
+                        &self.v_pool.as_slice()[src..src + page_elems]);
+                }
+            }
+        }
+        let win_shape = vec![geo.n_layers, window_pages, ps,
+                             geo.n_kv_heads, geo.d_head];
+
+        // move the scratch into the input tensors (no copy) and reclaim
+        // it after the call
+        let inputs = [
+            HostTensor::i32(tokens, token_shape),
+            HostTensor::f32(std::mem::take(&mut self.k_scratch),
+                            win_shape.clone()),
+            HostTensor::f32(std::mem::take(&mut self.v_scratch),
+                            win_shape),
+            HostTensor::i32(tables, vec![b, maxb]),
+            HostTensor::scalar_i32_vec(&cache_lens),
+            HostTensor::scalar_i32_vec(&chunk_lens),
+        ];
+        let result = rt
+            .run(artifact, &inputs)
+            .wrap_err_with(|| format!("running {artifact}"));
+        let mut it = inputs.into_iter().skip(1);
+        if let Some(HostTensor::F32 { data, .. }) = it.next() {
+            self.k_scratch = data;
+        }
+        if let Some(HostTensor::F32 { data, .. }) = it.next() {
+            self.v_scratch = data;
+        }
+        result
+    }
+
+    /// Rust-side ASSIGN: scatter `take` tokens of row `i` of a chunk
+    /// tensor [L, B, Hkv, C, dh] into the sequence's pages.
+    fn scatter_chunk(
+        &mut self,
+        id: SeqId,
+        k_chunk: &HostTensor,
+        v_chunk: &HostTensor,
+        b: usize,
+        c: usize,
+        i: usize,
+        take: usize,
+    ) -> Result<()> {
+        let _prof = crate::util::profile::span(
+            crate::util::profile::Phase::Scatter);
+        let geo = *self.k_pool.geometry();
+        let (l_n, hkv, dh) = (geo.n_layers, geo.n_kv_heads, geo.d_head);
+        let ps = geo.page_size;
+        let k_data = k_chunk.as_f32()?;
+        let v_data = v_chunk.as_f32()?;
+        let cache_len = self.seqs[&id].prefilled;
+        let table = self.mgr.table(id).map_err(|e| err!("{e}"))?;
+        let pages = table.pages().to_vec();
+        let mut row = vec![0f32; hkv * dh];
+        for t in 0..take {
+            let pos = cache_len + t;
+            let (page, off) = (pages[pos / ps], pos % ps);
+            for l in 0..l_n {
+                for (h, chunk) in row.chunks_exact_mut(dh).enumerate() {
+                    let src = (((l * b + i) * hkv + h) * c + t) * dh;
+                    chunk.copy_from_slice(&k_data[src..src + dh]);
+                }
+                self.k_pool.assign_token(l, page, off, &row);
+                for (h, chunk) in row.chunks_exact_mut(dh).enumerate() {
+                    let src = (((l * b + i) * hkv + h) * c + t) * dh;
+                    chunk.copy_from_slice(&v_data[src..src + dh]);
+                }
+                self.v_pool.assign_token(l, page, off, &row);
+            }
+        }
+        self.mgr
+            .note_assigned(id, take)
+            .map_err(|e| err!("note_assigned({id}): {e}"))?;
+        Ok(())
+    }
+}
+
+fn unpack3(mut outs: Vec<HostTensor>)
+           -> Result<(HostTensor, HostTensor, HostTensor)> {
+    ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
+    let v = outs.pop().unwrap();
+    let k = outs.pop().unwrap();
+    let l = outs.pop().unwrap();
+    Ok((l, k, v))
+}

@@ -1,0 +1,174 @@
+//! Token sampling: greedy, temperature, top-k, top-p (nucleus).
+//!
+//! Deterministic given `SamplingConfig::seed` — benches and the
+//! perplexity example rely on reproducible generations.
+
+use crate::config::SamplingConfig;
+use crate::trace::Rng;
+
+pub struct Sampler {
+    cfg: SamplingConfig,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(cfg: SamplingConfig) -> Self {
+        Sampler { cfg, rng: Rng::seeded(cfg.seed) }
+    }
+
+    pub fn config(&self) -> &SamplingConfig {
+        &self.cfg
+    }
+
+    /// Sample one token id from a logits row.
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        if self.cfg.is_greedy() {
+            return argmax(logits);
+        }
+        // temperature scaling
+        let inv_t = 1.0 / self.cfg.temperature;
+        let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            logits[b as usize]
+                .partial_cmp(&logits[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        // top-k cut
+        let k = if self.cfg.top_k > 0 {
+            self.cfg.top_k.min(idx.len())
+        } else {
+            idx.len()
+        };
+        idx.truncate(k);
+        // softmax over the survivors
+        let m = logits[idx[0] as usize];
+        let mut probs: Vec<f32> = idx
+            .iter()
+            .map(|&i| ((logits[i as usize] - m) * inv_t).exp())
+            .collect();
+        let sum: f32 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= sum;
+        }
+        // top-p cut (indices are sorted by prob descending already)
+        if self.cfg.top_p < 1.0 {
+            let mut acc = 0.0;
+            let mut cut = probs.len();
+            for (i, &p) in probs.iter().enumerate() {
+                acc += p;
+                if acc >= self.cfg.top_p {
+                    cut = i + 1;
+                    break;
+                }
+            }
+            probs.truncate(cut);
+            idx.truncate(cut);
+            let s: f32 = probs.iter().sum();
+            for p in &mut probs {
+                *p /= s;
+            }
+        }
+        // inverse-CDF draw
+        let u = self.rng.f64() as f32;
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if u <= acc {
+                return idx[i];
+            }
+        }
+        *idx.last().unwrap()
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Log-softmax row → log-probability of `target` (perplexity example).
+pub fn log_prob(logits: &[f32], target: u32) -> f64 {
+    let m = logits.iter().fold(f32::MIN, |a, &b| a.max(b)) as f64;
+    let lse: f64 = logits
+        .iter()
+        .map(|&x| ((x as f64) - m).exp())
+        .sum::<f64>()
+        .ln()
+        + m;
+    logits[target as usize] as f64 - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 3.0, -1.0, 2.5, 0.0]
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(SamplingConfig::greedy());
+        assert_eq!(s.sample(&logits()), 1);
+    }
+
+    #[test]
+    fn top_k_1_equals_greedy_even_with_temperature() {
+        let cfg = SamplingConfig { temperature: 5.0, top_k: 1, top_p: 1.0,
+                                   seed: 9 };
+        let mut s = Sampler::new(cfg);
+        for _ in 0..20 {
+            assert_eq!(s.sample(&logits()), 1);
+        }
+    }
+
+    #[test]
+    fn sampling_is_seeded_deterministic() {
+        let cfg = SamplingConfig { temperature: 1.0, top_k: 0, top_p: 1.0,
+                                   seed: 7 };
+        let a: Vec<u32> = {
+            let mut s = Sampler::new(cfg);
+            (0..50).map(|_| s.sample(&logits())).collect()
+        };
+        let b: Vec<u32> = {
+            let mut s = Sampler::new(cfg);
+            (0..50).map(|_| s.sample(&logits())).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn temperature_sampling_explores() {
+        let cfg = SamplingConfig { temperature: 2.0, top_k: 0, top_p: 1.0,
+                                   seed: 3 };
+        let mut s = Sampler::new(cfg);
+        let draws: std::collections::HashSet<u32> =
+            (0..200).map(|_| s.sample(&logits())).collect();
+        assert!(draws.len() > 1, "high temperature must explore");
+    }
+
+    #[test]
+    fn top_p_truncates_tail() {
+        // top_p tiny -> only the single best token survives
+        let cfg = SamplingConfig { temperature: 1.0, top_k: 0, top_p: 0.01,
+                                   seed: 5 };
+        let mut s = Sampler::new(cfg);
+        for _ in 0..20 {
+            assert_eq!(s.sample(&logits()), 1);
+        }
+    }
+
+    #[test]
+    fn log_prob_is_normalized() {
+        let l = logits();
+        let total: f64 = (0..l.len() as u32)
+            .map(|t| log_prob(&l, t).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+}

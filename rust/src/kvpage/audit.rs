@@ -1,0 +1,274 @@
+//! Memory audit — the repo's analog of the paper's patched
+//! `c10::CachingAllocator` (Sec. III-C): live / reserved / wasted bytes on
+//! every allocator event, peak tracking, and CSV export for the figures.
+//!
+//! * **reserved** — bytes held by the allocator on behalf of sequences
+//!   (pages × page bytes, or contiguous buffers for the baseline).
+//! * **live** — bytes actually occupied by KV entries (tokens × bytes/token).
+//! * **wasted** — reserved − live: internal fragmentation, the 60–80 %
+//!   figure the paper quotes for contiguous allocators (Sec. I).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One audit sample (event-driven, like the paper's per-allocation hook).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditEvent {
+    /// Monotonic event counter.
+    pub seq: u64,
+    pub kind: EventKind,
+    pub reserved_bytes: u64,
+    pub live_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Reserve,
+    Extend,
+    Assign,
+    Free,
+    Evict,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Reserve => "reserve",
+            EventKind::Extend => "extend",
+            EventKind::Assign => "assign",
+            EventKind::Free => "free",
+            EventKind::Evict => "evict",
+        }
+    }
+}
+
+/// Thread-safe accounting: hot counters are atomics (no lock on the
+/// allocation path); the event log is an optional bounded ring behind a
+/// mutex, enabled for figure generation and off by default.
+pub struct MemoryAudit {
+    reserved: AtomicU64,
+    live: AtomicU64,
+    peak_reserved: AtomicU64,
+    peak_live: AtomicU64,
+    events: AtomicU64,
+    log: Option<Mutex<EventLog>>,
+}
+
+struct EventLog {
+    ring: Vec<AuditEvent>,
+    cap: usize,
+    next: usize,
+    full: bool,
+}
+
+impl MemoryAudit {
+    pub fn new() -> Self {
+        Self::with_log_capacity(0)
+    }
+
+    /// `cap > 0` keeps the last `cap` events for CSV export.
+    pub fn with_log_capacity(cap: usize) -> Self {
+        MemoryAudit {
+            reserved: AtomicU64::new(0),
+            live: AtomicU64::new(0),
+            peak_reserved: AtomicU64::new(0),
+            peak_live: AtomicU64::new(0),
+            events: AtomicU64::new(0),
+            log: if cap > 0 {
+                Some(Mutex::new(EventLog {
+                    ring: Vec::with_capacity(cap),
+                    cap,
+                    next: 0,
+                    full: false,
+                }))
+            } else {
+                None
+            },
+        }
+    }
+
+    pub fn on_reserve(&self, bytes: u64) {
+        self.reserved.fetch_add(bytes, Ordering::Relaxed);
+        self.bump_peaks();
+        self.record(EventKind::Reserve);
+    }
+
+    pub fn on_extend(&self, bytes: u64) {
+        self.reserved.fetch_add(bytes, Ordering::Relaxed);
+        self.bump_peaks();
+        self.record(EventKind::Extend);
+    }
+
+    pub fn on_assign(&self, bytes: u64) {
+        self.live.fetch_add(bytes, Ordering::Relaxed);
+        self.bump_peaks();
+        self.record(EventKind::Assign);
+    }
+
+    pub fn on_free(&self, reserved_bytes: u64, live_bytes: u64) {
+        self.reserved.fetch_sub(reserved_bytes, Ordering::Relaxed);
+        self.live.fetch_sub(live_bytes, Ordering::Relaxed);
+        self.record(EventKind::Free);
+    }
+
+    pub fn on_evict(&self, reserved_bytes: u64, live_bytes: u64) {
+        self.reserved.fetch_sub(reserved_bytes, Ordering::Relaxed);
+        self.live.fetch_sub(live_bytes, Ordering::Relaxed);
+        self.record(EventKind::Evict);
+    }
+
+    fn bump_peaks(&self) {
+        let r = self.reserved.load(Ordering::Relaxed);
+        self.peak_reserved.fetch_max(r, Ordering::Relaxed);
+        let l = self.live.load(Ordering::Relaxed);
+        self.peak_live.fetch_max(l, Ordering::Relaxed);
+    }
+
+    fn record(&self, kind: EventKind) {
+        let seq = self.events.fetch_add(1, Ordering::Relaxed);
+        if let Some(log) = &self.log {
+            let ev = AuditEvent {
+                seq,
+                kind,
+                reserved_bytes: self.reserved.load(Ordering::Relaxed),
+                live_bytes: self.live.load(Ordering::Relaxed),
+            };
+            let mut l = log.lock().unwrap();
+            if l.ring.len() < l.cap {
+                l.ring.push(ev);
+            } else {
+                let slot = l.next;
+                l.ring[slot] = ev;
+                l.full = true;
+            }
+            l.next = (l.next + 1) % l.cap;
+        }
+    }
+
+    pub fn reserved_bytes(&self) -> u64 {
+        self.reserved.load(Ordering::Relaxed)
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Internal fragmentation right now.
+    pub fn wasted_bytes(&self) -> u64 {
+        self.reserved_bytes().saturating_sub(self.live_bytes())
+    }
+
+    pub fn peak_reserved_bytes(&self) -> u64 {
+        self.peak_reserved.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_live_bytes(&self) -> u64 {
+        self.peak_live.load(Ordering::Relaxed)
+    }
+
+    /// Paper metric "memory overhead (%)": reserved over the theoretical
+    /// minimum (= live bytes). Returns 0 when nothing is live.
+    pub fn overhead_pct(&self) -> f64 {
+        let live = self.live_bytes();
+        if live == 0 {
+            return 0.0;
+        }
+        100.0 * self.wasted_bytes() as f64 / live as f64
+    }
+
+    pub fn event_count(&self) -> u64 {
+        self.events.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the event ring in chronological order.
+    pub fn events(&self) -> Vec<AuditEvent> {
+        match &self.log {
+            None => vec![],
+            Some(log) => {
+                let l = log.lock().unwrap();
+                if !l.full {
+                    l.ring.clone()
+                } else {
+                    let mut out = Vec::with_capacity(l.cap);
+                    out.extend_from_slice(&l.ring[l.next..]);
+                    out.extend_from_slice(&l.ring[..l.next]);
+                    out
+                }
+            }
+        }
+    }
+
+    /// CSV rows (`seq,kind,reserved,live,wasted`) for figure scripts.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("seq,kind,reserved_bytes,live_bytes,wasted_bytes\n");
+        for e in self.events() {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                e.seq,
+                e.kind.as_str(),
+                e.reserved_bytes,
+                e.live_bytes,
+                e.reserved_bytes.saturating_sub(e.live_bytes)
+            ));
+        }
+        s
+    }
+}
+
+impl Default for MemoryAudit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_track_reserve_assign_free() {
+        let a = MemoryAudit::new();
+        a.on_reserve(1000);
+        a.on_assign(300);
+        assert_eq!(a.reserved_bytes(), 1000);
+        assert_eq!(a.live_bytes(), 300);
+        assert_eq!(a.wasted_bytes(), 700);
+        assert!((a.overhead_pct() - 233.333).abs() < 0.01);
+        a.on_free(1000, 300);
+        assert_eq!(a.reserved_bytes(), 0);
+        assert_eq!(a.live_bytes(), 0);
+        assert_eq!(a.peak_reserved_bytes(), 1000);
+        assert_eq!(a.peak_live_bytes(), 300);
+    }
+
+    #[test]
+    fn ring_log_keeps_last_events_in_order() {
+        let a = MemoryAudit::with_log_capacity(3);
+        for i in 0..5 {
+            a.on_reserve(i + 1);
+        }
+        let evs = a.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].seq, 2);
+        assert_eq!(evs[2].seq, 4);
+        assert!(evs.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let a = MemoryAudit::with_log_capacity(8);
+        a.on_reserve(64);
+        a.on_assign(16);
+        let csv = a.to_csv();
+        assert!(csv.starts_with("seq,kind,"));
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("reserve,64,0,64"));
+        assert!(csv.contains("assign,64,16,48"));
+    }
+
+    #[test]
+    fn overhead_zero_when_empty() {
+        let a = MemoryAudit::new();
+        assert_eq!(a.overhead_pct(), 0.0);
+    }
+}

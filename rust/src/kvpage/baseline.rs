@@ -1,0 +1,209 @@
+//! Contiguous max-length allocator — the baseline the paper argues against.
+//!
+//! Reproduces the pre-allocation strategy of FasterTransformer / HF
+//! Accelerate (Sec. II-A.1): every request gets one contiguous KV buffer
+//! sized to `max_seq_len` regardless of its actual length, so short
+//! requests strand the tail of their buffer (internal fragmentation) and
+//! freed buffers leave shape-mismatched holes (external fragmentation).
+//! `benches/fig2_memory_compare.rs` and `benches/memory_overhead.rs` put
+//! this head-to-head with [`super::manager::PageManager`].
+
+use std::collections::BTreeMap;
+
+use super::audit::MemoryAudit;
+use super::manager::{AllocError, SeqId};
+
+/// One reserved contiguous region in the (simulated) device address space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Region {
+    start: u64,
+    bytes: u64,
+    live_bytes: u64,
+}
+
+/// Contiguous first-fit allocator over a fixed arena.
+///
+/// Address space is byte-granular and simulated: the benches only need the
+/// *accounting* behaviour (what fits, what fragments), not real storage.
+pub struct ContiguousAllocator {
+    arena_bytes: u64,
+    max_seq_len: usize,
+    kv_bytes_per_token: u64,
+    regions: BTreeMap<u64, Region>, // keyed by start
+    by_seq: BTreeMap<SeqId, u64>,
+    audit: MemoryAudit,
+}
+
+impl ContiguousAllocator {
+    pub fn new(arena_bytes: u64, max_seq_len: usize,
+               kv_bytes_per_token: u64) -> Self {
+        ContiguousAllocator {
+            arena_bytes,
+            max_seq_len,
+            kv_bytes_per_token,
+            regions: BTreeMap::new(),
+            by_seq: BTreeMap::new(),
+            audit: MemoryAudit::new(),
+        }
+    }
+
+    pub fn audit(&self) -> &MemoryAudit {
+        &self.audit
+    }
+
+    /// Buffer size every request receives (the monolithic allocation).
+    pub fn buffer_bytes(&self) -> u64 {
+        self.max_seq_len as u64 * self.kv_bytes_per_token
+    }
+
+    /// First-fit scan for a hole of `bytes`. External fragmentation shows
+    /// up as `None` despite sufficient total free space.
+    fn find_hole(&self, bytes: u64) -> Option<u64> {
+        let mut cursor = 0u64;
+        for r in self.regions.values() {
+            if r.start - cursor >= bytes {
+                return Some(cursor);
+            }
+            cursor = r.start + r.bytes;
+        }
+        (self.arena_bytes - cursor >= bytes).then_some(cursor)
+    }
+
+    /// Reserve the full max-length buffer for `seq` (actual prompt length
+    /// is irrelevant to the reservation — that's the waste).
+    pub fn reserve(&mut self, seq: SeqId) -> Result<(), AllocError> {
+        if self.by_seq.contains_key(&seq) {
+            return Err(AllocError::DuplicateSeq(seq));
+        }
+        let bytes = self.buffer_bytes();
+        let start = self.find_hole(bytes).ok_or(AllocError::PoolExhausted {
+            needed: bytes as usize,
+            available: self.total_free_bytes() as usize,
+        })?;
+        self.regions.insert(start, Region { start, bytes, live_bytes: 0 });
+        self.by_seq.insert(seq, start);
+        self.audit.on_reserve(bytes);
+        Ok(())
+    }
+
+    /// Account `n` tokens written into `seq`'s buffer.
+    pub fn note_assigned(&mut self, seq: SeqId, n: usize)
+                         -> Result<(), AllocError> {
+        let start = *self.by_seq.get(&seq).ok_or(AllocError::UnknownSeq(seq))?;
+        let r = self.regions.get_mut(&start).unwrap();
+        let add = n as u64 * self.kv_bytes_per_token;
+        assert!(r.live_bytes + add <= r.bytes,
+                "sequence overflow of its monolithic buffer");
+        r.live_bytes += add;
+        self.audit.on_assign(add);
+        Ok(())
+    }
+
+    pub fn free(&mut self, seq: SeqId) -> Result<(), AllocError> {
+        let start = self
+            .by_seq
+            .remove(&seq)
+            .ok_or(AllocError::UnknownSeq(seq))?;
+        let r = self.regions.remove(&start).unwrap();
+        self.audit.on_free(r.bytes, r.live_bytes);
+        Ok(())
+    }
+
+    pub fn n_sequences(&self) -> usize {
+        self.by_seq.len()
+    }
+
+    pub fn total_free_bytes(&self) -> u64 {
+        self.arena_bytes
+            - self.regions.values().map(|r| r.bytes).sum::<u64>()
+    }
+
+    /// Largest single hole — when this is smaller than `buffer_bytes()`
+    /// but `total_free_bytes()` is larger, that's external fragmentation.
+    pub fn largest_hole(&self) -> u64 {
+        let mut best = 0u64;
+        let mut cursor = 0u64;
+        for r in self.regions.values() {
+            best = best.max(r.start - cursor);
+            cursor = r.start + r.bytes;
+        }
+        best.max(self.arena_bytes - cursor)
+    }
+
+    /// Dead bytes inside reserved buffers (internal fragmentation) —
+    /// the 60-80 % the paper quotes for mixed-length batches.
+    pub fn internal_waste_bytes(&self) -> u64 {
+        self.regions
+            .values()
+            .map(|r| r.bytes - r.live_bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc() -> ContiguousAllocator {
+        // arena of 4 buffers, max_seq 100 tokens, 10 B/token
+        ContiguousAllocator::new(4000, 100, 10)
+    }
+
+    #[test]
+    fn reserve_fills_arena_then_rejects() {
+        let mut a = alloc();
+        for i in 0..4 {
+            a.reserve(i).unwrap();
+        }
+        assert!(matches!(a.reserve(4),
+                         Err(AllocError::PoolExhausted { .. })));
+        assert_eq!(a.total_free_bytes(), 0);
+    }
+
+    #[test]
+    fn internal_fragmentation_for_short_requests() {
+        let mut a = alloc();
+        a.reserve(1).unwrap();
+        a.note_assigned(1, 20).unwrap(); // 20 of 100 tokens used
+        assert_eq!(a.internal_waste_bytes(), 800);
+        assert_eq!(a.audit().overhead_pct(), 400.0); // 80 % waste of 1000
+    }
+
+    #[test]
+    fn free_reclaims_hole_for_reuse() {
+        let mut a = alloc();
+        for i in 0..4 {
+            a.reserve(i).unwrap();
+        }
+        a.free(2).unwrap();
+        a.reserve(9).unwrap(); // fits in the freed hole
+        assert_eq!(a.n_sequences(), 4);
+    }
+
+    #[test]
+    fn external_fragmentation_visible_in_largest_hole() {
+        // arena sized for 2.5 buffers: one mid free leaves two quarter holes
+        let mut a = ContiguousAllocator::new(2500, 100, 10);
+        a.reserve(0).unwrap();
+        a.reserve(1).unwrap();
+        // 500 free at the end; free seq 0 -> holes of 1000 + 500
+        a.free(0).unwrap();
+        assert_eq!(a.total_free_bytes(), 1500);
+        assert_eq!(a.largest_hole(), 1000);
+        // a full buffer still fits (first-fit at 0)
+        a.reserve(2).unwrap();
+        // now free space = 500, split; nothing fits
+        assert!(a.reserve(3).is_err());
+        assert_eq!(a.total_free_bytes(), 500);
+    }
+
+    #[test]
+    fn audit_peaks_track_worst_case() {
+        let mut a = alloc();
+        a.reserve(1).unwrap();
+        a.reserve(2).unwrap();
+        a.free(1).unwrap();
+        assert_eq!(a.audit().peak_reserved_bytes(), 2000);
+        assert_eq!(a.audit().reserved_bytes(), 1000);
+    }
+}

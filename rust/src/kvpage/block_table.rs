@@ -1,0 +1,224 @@
+//! Per-sequence block tables — Alg. 1's `page_table[seq_id]`.
+//!
+//! A `BlockTable` maps a sequence's logical token positions to physical
+//! page indices in the global pool. Entries are 32-bit (paper Sec. III-B:
+//! "table entries are 32-bit"); logical position `t` lives at
+//! `(pages[t / P], t % P)`.
+
+/// Logical→physical mapping for one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    /// Physical page index per logical block, in order.
+    pages: Vec<u32>,
+    /// Tokens currently stored (may straddle a partial last page).
+    len_tokens: usize,
+    /// Tokens per page (copied from the pool config for self-containment).
+    page_size: usize,
+}
+
+impl BlockTable {
+    pub fn new(page_size: usize) -> Self {
+        assert!(page_size > 0);
+        BlockTable { pages: Vec::new(), len_tokens: 0, page_size }
+    }
+
+    /// Number of live tokens.
+    pub fn len_tokens(&self) -> usize {
+        self.len_tokens
+    }
+
+    /// Token capacity of the currently mapped pages.
+    pub fn capacity_tokens(&self) -> usize {
+        self.pages.len() * self.page_size
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Physical pages, logical order.
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Alg. 1 line 7-8: translate a logical token position to
+    /// (physical page, in-page offset). `None` beyond the live range.
+    pub fn translate(&self, t: usize) -> Option<(u32, usize)> {
+        if t >= self.len_tokens {
+            return None;
+        }
+        Some((self.pages[t / self.page_size], t % self.page_size))
+    }
+
+    /// Slot where the NEXT token will be written, if capacity exists.
+    pub fn next_slot(&self) -> Option<(u32, usize)> {
+        let t = self.len_tokens;
+        if t >= self.capacity_tokens() {
+            return None;
+        }
+        Some((self.pages[t / self.page_size], t % self.page_size))
+    }
+
+    /// Blocks needed to hold `tokens` at this page size (Alg. 1 line 2).
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    /// Append freshly allocated physical pages (RESERVE/EXTEND records
+    /// them here).
+    pub fn push_pages(&mut self, pages: &[u32]) {
+        self.pages.extend_from_slice(pages);
+    }
+
+    /// Advance the live length after tokens were ASSIGNed.
+    /// Panics if the mapped capacity would be exceeded — the allocator
+    /// must EXTEND first.
+    pub fn advance(&mut self, tokens: usize) {
+        let new_len = self.len_tokens + tokens;
+        assert!(
+            new_len <= self.capacity_tokens(),
+            "advance past mapped capacity: {} + {} > {}",
+            self.len_tokens,
+            tokens,
+            self.capacity_tokens()
+        );
+        self.len_tokens = new_len;
+    }
+
+    /// Truncate to `tokens` (used by preemption/rollback); returns pages
+    /// that are no longer referenced by the live range.
+    pub fn truncate(&mut self, tokens: usize) -> Vec<u32> {
+        assert!(tokens <= self.len_tokens);
+        self.len_tokens = tokens;
+        let keep = tokens.div_ceil(self.page_size);
+        self.pages.split_off(keep)
+    }
+
+    /// Drop every page mapping (sequence finished). Returns the pages for
+    /// the allocator to free.
+    pub fn clear(&mut self) -> Vec<u32> {
+        self.len_tokens = 0;
+        std::mem::take(&mut self.pages)
+    }
+
+    /// Number of dead (allocated but unused) token slots — the paged
+    /// analog of internal fragmentation; bounded by page_size - 1 plus
+    /// any growth-policy overshoot.
+    pub fn dead_tokens(&self) -> usize {
+        self.capacity_tokens() - self.len_tokens
+    }
+
+    /// Clone the first `tokens`-worth of page mappings (prefix sharing).
+    /// The clone aliases the SAME physical pages; refcounting is the
+    /// `prefix` module's job.
+    pub fn fork_prefix(&self, tokens: usize) -> BlockTable {
+        assert!(tokens <= self.len_tokens);
+        let blocks = tokens.div_ceil(self.page_size);
+        BlockTable {
+            pages: self.pages[..blocks].to_vec(),
+            len_tokens: tokens,
+            page_size: self.page_size,
+        }
+    }
+
+    /// Dense i32 row for the device block-table tensor, padded with 0 to
+    /// `max_blocks` (dead entries are masked by seq_lens on device; see
+    /// python tests `test_garbage_tail_entries_ignored`).
+    pub fn to_device_row(&self, max_blocks: usize) -> Vec<i32> {
+        assert!(
+            self.pages.len() <= max_blocks,
+            "sequence uses {} blocks > artifact max {}",
+            self.pages.len(),
+            max_blocks
+        );
+        let mut row = vec![0i32; max_blocks];
+        for (i, &p) in self.pages.iter().enumerate() {
+            row[i] = p as i32;
+        }
+        row
+    }
+
+    /// Replace the physical page backing block `block_idx` (CoW divergence).
+    pub fn remap(&mut self, block_idx: usize, new_page: u32) -> u32 {
+        let old = self.pages[block_idx];
+        self.pages[block_idx] = new_page;
+        old
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_with(pages: &[u32], len: usize, ps: usize) -> BlockTable {
+        let mut t = BlockTable::new(ps);
+        t.push_pages(pages);
+        t.advance(len);
+        t
+    }
+
+    #[test]
+    fn translate_matches_algorithm_1() {
+        let t = table_with(&[7, 3, 9], 20, 8);
+        assert_eq!(t.translate(0), Some((7, 0)));
+        assert_eq!(t.translate(7), Some((7, 7)));
+        assert_eq!(t.translate(8), Some((3, 0)));
+        assert_eq!(t.translate(19), Some((9, 3)));
+        assert_eq!(t.translate(20), None);
+    }
+
+    #[test]
+    fn next_slot_and_advance() {
+        let mut t = table_with(&[1], 7, 8);
+        assert_eq!(t.next_slot(), Some((1, 7)));
+        t.advance(1);
+        assert_eq!(t.next_slot(), None, "page full");
+        t.push_pages(&[2]);
+        assert_eq!(t.next_slot(), Some((2, 0)));
+    }
+
+    #[test]
+    #[should_panic(expected = "advance past mapped capacity")]
+    fn advance_past_capacity_panics() {
+        let mut t = table_with(&[1], 8, 8);
+        t.advance(1);
+    }
+
+    #[test]
+    fn truncate_returns_freed_pages() {
+        let mut t = table_with(&[1, 2, 3, 4], 25, 8);
+        let freed = t.truncate(9); // needs ceil(9/8)=2 pages
+        assert_eq!(freed, vec![3, 4]);
+        assert_eq!(t.len_tokens(), 9);
+        assert_eq!(t.pages(), &[1, 2]);
+    }
+
+    #[test]
+    fn fork_prefix_aliases_pages() {
+        let t = table_with(&[5, 6, 7], 17, 8);
+        let f = t.fork_prefix(12);
+        assert_eq!(f.pages(), &[5, 6]);
+        assert_eq!(f.len_tokens(), 12);
+        assert_eq!(f.dead_tokens(), 4);
+    }
+
+    #[test]
+    fn device_row_padding() {
+        let t = table_with(&[5, 6], 10, 8);
+        assert_eq!(t.to_device_row(4), vec![5, 6, 0, 0]);
+    }
+
+    #[test]
+    fn dead_tokens_bounded_by_page_size() {
+        for len in 1..=24usize {
+            let blocks = len.div_ceil(8);
+            let pages: Vec<u32> = (0..blocks as u32).collect();
+            let t = table_with(&pages, len, 8);
+            assert!(t.dead_tokens() < 8);
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Lock-free page free-list — Alg. 1's global `F` with `Pop(F, n)`.
+//!
+//! A Treiber stack over page indices: `next[i]` holds the index of the
+//! page below page `i` on the stack, and `head` packs `(aba_tag, top)`
+//! into one `AtomicU64` so CAS retirement cannot suffer ABA. Push and pop
+//! are O(1) wait-free-in-practice CAS loops with no heap allocation —
+//! this is the paper's "lock-free allocation ... in O(1) time"
+//! (Contribution 1) and the object measured by `benches/allocator.rs`
+//! (Sec. II-B gap 3: allocation latency at sub-millisecond granularity).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Sentinel index meaning "empty stack" / "end of chain".
+const NIL: u32 = u32::MAX;
+
+/// Packs (tag << 32 | index). The tag increments on every successful pop,
+/// which is sufficient to defeat ABA for push-side CAS as well.
+#[inline]
+fn pack(tag: u32, idx: u32) -> u64 {
+    ((tag as u64) << 32) | idx as u64
+}
+
+#[inline]
+fn unpack(word: u64) -> (u32, u32) {
+    ((word >> 32) as u32, word as u32)
+}
+
+/// Lock-free LIFO free-list of page indices `0..capacity`.
+pub struct FreeList {
+    head: AtomicU64,
+    next: Box<[AtomicU32]>,
+    /// Approximate count of free pages (maintained with relaxed atomics;
+    /// exact under quiescence, monotonic-consistent under contention).
+    free: AtomicU64,
+}
+
+impl FreeList {
+    /// A free-list with all pages `0..capacity` initially free.
+    /// Pages come off the stack in ascending order at first.
+    pub fn new(capacity: u32) -> Self {
+        assert!(capacity < NIL, "capacity must fit below the NIL sentinel");
+        let next: Vec<AtomicU32> = (0..capacity)
+            .map(|i| AtomicU32::new(if i + 1 < capacity { i + 1 } else { NIL }))
+            .collect();
+        FreeList {
+            head: AtomicU64::new(pack(0, if capacity > 0 { 0 } else { NIL })),
+            next: next.into_boxed_slice(),
+            free: AtomicU64::new(capacity as u64),
+        }
+    }
+
+    /// Number of pages this list manages.
+    pub fn capacity(&self) -> u32 {
+        self.next.len() as u32
+    }
+
+    /// Approximate number of currently free pages.
+    pub fn free_pages(&self) -> usize {
+        self.free.load(Ordering::Relaxed) as usize
+    }
+
+    /// Pop one page. `None` when exhausted (caller decides: queue, evict,
+    /// or reject — see `coordinator::preemption`).
+    pub fn pop(&self) -> Option<u32> {
+        let mut head = self.head.load(Ordering::Acquire);
+        loop {
+            let (tag, top) = unpack(head);
+            if top == NIL {
+                return None;
+            }
+            let below = self.next[top as usize].load(Ordering::Acquire);
+            match self.head.compare_exchange_weak(
+                head,
+                pack(tag.wrapping_add(1), below),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.free.fetch_sub(1, Ordering::Relaxed);
+                    return Some(top);
+                }
+                Err(actual) => head = actual,
+            }
+        }
+    }
+
+    /// Return one page to the list. Double-free is a logic error upstream
+    /// (the allocator's refcount layer guards it); the list itself cannot
+    /// detect it.
+    pub fn push(&self, idx: u32) {
+        debug_assert!((idx as usize) < self.next.len());
+        let mut head = self.head.load(Ordering::Acquire);
+        loop {
+            let (tag, top) = unpack(head);
+            self.next[idx as usize].store(top, Ordering::Release);
+            match self.head.compare_exchange_weak(
+                head,
+                pack(tag.wrapping_add(1), idx),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.free.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(actual) => head = actual,
+            }
+        }
+    }
+
+    /// Alg. 1 `Pop(F, n)`: all-or-nothing grab of `n` pages into `out`.
+    /// On failure every partially-popped page is pushed back and `false`
+    /// is returned, leaving the list unchanged (modulo reordering).
+    pub fn pop_n(&self, n: usize, out: &mut Vec<u32>) -> bool {
+        let start = out.len();
+        for _ in 0..n {
+            match self.pop() {
+                Some(p) => out.push(p),
+                None => {
+                    for p in out.drain(start..) {
+                        self.push(p);
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Bulk release.
+    pub fn push_all(&self, pages: impl IntoIterator<Item = u32>) {
+        for p in pages {
+            self.push(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Arc;
+
+    #[test]
+    fn pops_every_page_exactly_once() {
+        let fl = FreeList::new(64);
+        let mut seen = HashSet::new();
+        while let Some(p) = fl.pop() {
+            assert!(seen.insert(p), "page {p} popped twice");
+        }
+        assert_eq!(seen.len(), 64);
+        assert_eq!(fl.free_pages(), 0);
+    }
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let fl = FreeList::new(4);
+        let a = fl.pop().unwrap();
+        let b = fl.pop().unwrap();
+        fl.push(a);
+        fl.push(b);
+        let mut all = vec![];
+        while let Some(p) = fl.pop() {
+            all.push(p);
+        }
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pop_n_all_or_nothing() {
+        let fl = FreeList::new(8);
+        let mut out = vec![];
+        assert!(fl.pop_n(5, &mut out));
+        assert_eq!(out.len(), 5);
+        let mut out2 = vec![];
+        assert!(!fl.pop_n(4, &mut out2), "only 3 left");
+        assert!(out2.is_empty());
+        assert_eq!(fl.free_pages(), 3, "failed pop_n must restore pages");
+        assert!(fl.pop_n(3, &mut out2));
+    }
+
+    #[test]
+    fn empty_and_zero_capacity() {
+        let fl = FreeList::new(0);
+        assert!(fl.pop().is_none());
+        let fl = FreeList::new(1);
+        assert_eq!(fl.pop(), Some(0));
+        assert!(fl.pop().is_none());
+    }
+
+    #[test]
+    fn concurrent_hammer_conserves_pages() {
+        // 4 threads × alloc/free churn; final free count must equal
+        // capacity and no page may ever be held by two threads at once.
+        let fl = Arc::new(FreeList::new(128));
+        let mut handles = vec![];
+        for t in 0..4 {
+            let fl = Arc::clone(&fl);
+            handles.push(std::thread::spawn(move || {
+                let mut held: Vec<u32> = vec![];
+                let mut rng = 0x9e3779b9u32.wrapping_mul(t + 1);
+                for _ in 0..20_000 {
+                    rng ^= rng << 13;
+                    rng ^= rng >> 17;
+                    rng ^= rng << 5;
+                    if rng % 3 == 0 && !held.is_empty() {
+                        fl.push(held.pop().unwrap());
+                    } else if let Some(p) = fl.pop() {
+                        // ownership check: mark by holding exclusively
+                        held.push(p);
+                    }
+                }
+                for p in held {
+                    fl.push(p);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fl.free_pages(), 128);
+        let mut seen = HashSet::new();
+        while let Some(p) = fl.pop() {
+            assert!(seen.insert(p));
+        }
+        assert_eq!(seen.len(), 128);
+    }
+}

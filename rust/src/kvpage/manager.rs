@@ -1,0 +1,526 @@
+//! `PageManager` — the sequence-level surface of Algorithm 1.
+//!
+//! RESERVE / EXTEND / ASSIGN(accounting) / FREE over per-sequence
+//! [`BlockTable`]s, plus prefix-cache admission and fork/CoW planning.
+//! GATHER runs inside the Pallas kernel and the physical ASSIGN scatter
+//! runs inside the decode executable (see python/compile/model.py); the
+//! manager owns the *mapping* state and its invariants:
+//!
+//! * a physical page is referenced by ≥1 table iff its refcount is ≥1;
+//! * pages referenced by no table are on the free list exactly once;
+//! * a sequence's mapped capacity always covers its live tokens.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::allocator::PageAllocator;
+use super::block_table::BlockTable;
+use super::prefix::{plan_fork, prompt_chain, PrefixIndex, PrefixMatch};
+
+pub type SeqId = u64;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AllocError {
+    /// Not enough free pages; carries (pages needed, pages free) so the
+    /// scheduler can decide between queueing and eviction.
+    PoolExhausted { needed: usize, available: usize },
+    /// Sequence would exceed the artifact's max_blocks_per_seq.
+    CapacityExceeded { blocks: usize, max_blocks: usize },
+    UnknownSeq(SeqId),
+    DuplicateSeq(SeqId),
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::PoolExhausted { needed, available } => write!(
+                f,
+                "KV pool exhausted: need {needed} pages, {available} free"
+            ),
+            AllocError::CapacityExceeded { blocks, max_blocks } => write!(
+                f,
+                "sequence needs {blocks} blocks > artifact limit {max_blocks}"
+            ),
+            AllocError::UnknownSeq(id) => write!(f, "unknown sequence {id}"),
+            AllocError::DuplicateSeq(id) => {
+                write!(f, "sequence {id} already reserved")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// Outcome of admitting a prompt: how much of it was served from the
+/// prefix cache, and a device CoW copy if a partial page must diverge.
+#[derive(Debug, Clone, Default)]
+pub struct ReserveOutcome {
+    /// Prompt tokens covered by cached pages (multiple of page_size).
+    pub cached_tokens: usize,
+    /// Pages newly allocated (not counting aliased prefix pages).
+    pub new_pages: usize,
+}
+
+/// A planned append: capacity is guaranteed; `cow_copy` must be executed
+/// on device (runtime `copy_pages`) before the decode step writes.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AppendPlan {
+    pub cow_copy: Option<(u32, u32)>,
+    pub new_pages: usize,
+}
+
+pub struct PageManager {
+    alloc: Arc<PageAllocator>,
+    tables: HashMap<SeqId, BlockTable>,
+    prefix: PrefixIndex,
+    max_blocks_per_seq: usize,
+    prefix_cache_enabled: bool,
+}
+
+impl PageManager {
+    pub fn new(alloc: Arc<PageAllocator>, max_blocks_per_seq: usize) -> Self {
+        PageManager {
+            alloc,
+            tables: HashMap::new(),
+            prefix: PrefixIndex::new(),
+            max_blocks_per_seq,
+            prefix_cache_enabled: true,
+        }
+    }
+
+    pub fn set_prefix_cache(&mut self, enabled: bool) {
+        self.prefix_cache_enabled = enabled;
+    }
+
+    pub fn allocator(&self) -> &PageAllocator {
+        &self.alloc
+    }
+
+    pub fn max_blocks_per_seq(&self) -> usize {
+        self.max_blocks_per_seq
+    }
+
+    pub fn n_sequences(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn contains(&self, seq: SeqId) -> bool {
+        self.tables.contains_key(&seq)
+    }
+
+    pub fn table(&self, seq: SeqId) -> Result<&BlockTable, AllocError> {
+        self.tables.get(&seq).ok_or(AllocError::UnknownSeq(seq))
+    }
+
+    /// Tokens currently live for `seq`.
+    pub fn seq_len(&self, seq: SeqId) -> Result<usize, AllocError> {
+        Ok(self.table(seq)?.len_tokens())
+    }
+
+    /// Alg. 1 RESERVE with prefix-cache admission: map cached pages for
+    /// the longest matching prompt prefix, then allocate the rest under
+    /// the growth policy. The caller prefills only `prompt.len() -
+    /// outcome.cached_tokens` tokens.
+    pub fn reserve(
+        &mut self,
+        seq: SeqId,
+        prompt: &[u32],
+    ) -> Result<ReserveOutcome, AllocError> {
+        if self.tables.contains_key(&seq) {
+            return Err(AllocError::DuplicateSeq(seq));
+        }
+        let ps = self.alloc.page_size();
+        let m: PrefixMatch = if self.prefix_cache_enabled {
+            self.prefix.lookup(prompt, ps)
+        } else {
+            PrefixMatch { pages: vec![], tokens: 0 }
+        };
+
+        let mut table = BlockTable::new(ps);
+        for &p in &m.pages {
+            self.alloc.retain_page(p);
+        }
+        table.push_pages(&m.pages);
+        if m.tokens > 0 {
+            table.advance(m.tokens); // cached KV is already live
+        }
+
+        let need = self
+            .alloc
+            .blocks_to_add(table.n_blocks(), prompt.len().max(1));
+        let target_blocks = table.n_blocks() + need;
+        if target_blocks > self.max_blocks_per_seq {
+            for &p in &m.pages {
+                self.evict_if_dying(p);
+                self.alloc.release_page(p, ps);
+            }
+            return Err(AllocError::CapacityExceeded {
+                blocks: target_blocks,
+                max_blocks: self.max_blocks_per_seq,
+            });
+        }
+        match self.alloc.alloc_pages(need) {
+            Some(pages) => {
+                table.push_pages(&pages);
+                self.tables.insert(seq, table);
+                Ok(ReserveOutcome { cached_tokens: m.tokens, new_pages: need })
+            }
+            None => {
+                for &p in &m.pages {
+                    self.evict_if_dying(p);
+                    self.alloc.release_page(p, ps);
+                }
+                Err(AllocError::PoolExhausted {
+                    needed: need,
+                    available: self.alloc.free_pages(),
+                })
+            }
+        }
+    }
+
+    /// Guarantee capacity for `extra` more tokens and plan the append:
+    /// CoW-copies a shared tail page, allocates growth-policy pages.
+    pub fn prepare_append(
+        &mut self,
+        seq: SeqId,
+        extra: usize,
+    ) -> Result<AppendPlan, AllocError> {
+        let ps = self.alloc.page_size();
+        let (len, n_blocks, tail_shared) = {
+            let t = self.table(seq)?;
+            let len = t.len_tokens();
+            let tail_block = if len % ps == 0 { None } else { Some(len / ps) };
+            let tail_shared = tail_block.and_then(|b| {
+                let p = t.pages()[b];
+                (self.alloc.refcount(p) > 1).then_some((b, p))
+            });
+            (len, t.n_blocks(), tail_shared)
+        };
+
+        let total = len + extra;
+        let need = self.alloc.blocks_to_add(n_blocks, total);
+        let cow_need = usize::from(tail_shared.is_some());
+        if n_blocks + need > self.max_blocks_per_seq {
+            return Err(AllocError::CapacityExceeded {
+                blocks: n_blocks + need,
+                max_blocks: self.max_blocks_per_seq,
+            });
+        }
+        let pages = self.alloc.alloc_pages(need + cow_need).ok_or(
+            AllocError::PoolExhausted {
+                needed: need + cow_need,
+                available: self.alloc.free_pages(),
+            },
+        )?;
+
+        let mut pages = pages;
+        let mut cow_copy = None;
+        if let Some((block_idx, src)) = tail_shared {
+            let dst = pages.pop().expect("cow page allocated");
+            let t = self.tables.get_mut(&seq).unwrap();
+            let old = t.remap(block_idx, dst);
+            debug_assert_eq!(old, src);
+            // The old page stays live for its other owners; this sequence
+            // keeps `len % ps` tokens of it in its new private copy, which
+            // duplicates those tokens physically.
+            self.evict_if_dying(src);
+            self.alloc.release_page(src, ps);
+            self.alloc.note_assigned(len % ps);
+            cow_copy = Some((src, dst));
+        }
+        let t = self.tables.get_mut(&seq).unwrap();
+        t.push_pages(&pages);
+        Ok(AppendPlan { cow_copy, new_pages: need })
+    }
+
+    /// Account `n` tokens ASSIGNed on device for `seq`.
+    pub fn note_assigned(&mut self, seq: SeqId, n: usize) -> Result<(), AllocError> {
+        let t = self
+            .tables
+            .get_mut(&seq)
+            .ok_or(AllocError::UnknownSeq(seq))?;
+        t.advance(n);
+        self.alloc.note_assigned(n);
+        Ok(())
+    }
+
+    /// Register a finished prefill's full pages in the prefix cache so
+    /// future prompts can reuse them.
+    pub fn register_prefix(
+        &mut self,
+        seq: SeqId,
+        prompt: &[u32],
+    ) -> Result<usize, AllocError> {
+        if !self.prefix_cache_enabled {
+            return Ok(0);
+        }
+        let ps = self.alloc.page_size();
+        let chain = prompt_chain(prompt, ps);
+        let t = self.tables.get(&seq).ok_or(AllocError::UnknownSeq(seq))?;
+        let full_live = t.len_tokens() / ps;
+        let mut registered = 0;
+        for (i, h) in chain.iter().enumerate().take(full_live) {
+            let canonical = self.prefix.insert(*h, t.pages()[i]);
+            if canonical == t.pages()[i] {
+                registered += 1;
+            }
+        }
+        Ok(registered)
+    }
+
+    /// Fork `parent` into `child` at `tokens` (≤ parent live length).
+    /// Shared full pages are aliased; a partial tail page is CoW-copied
+    /// (device copy returned for the runtime to execute).
+    pub fn fork(
+        &mut self,
+        parent: SeqId,
+        child: SeqId,
+        tokens: usize,
+    ) -> Result<AppendPlan, AllocError> {
+        if self.tables.contains_key(&child) {
+            return Err(AllocError::DuplicateSeq(child));
+        }
+        let ps = self.alloc.page_size();
+        let parent_pages = self.table(parent)?.pages().to_vec();
+        let parent_len = self.table(parent)?.len_tokens();
+        assert!(tokens <= parent_len, "fork beyond parent length");
+
+        let needs_cow = tokens % ps != 0;
+        let fresh = if needs_cow {
+            Some(
+                self.alloc
+                    .alloc_pages(1)
+                    .ok_or(AllocError::PoolExhausted {
+                        needed: 1,
+                        available: self.alloc.free_pages(),
+                    })?[0],
+            )
+        } else {
+            None
+        };
+        let plan = plan_fork(&parent_pages, tokens, ps, fresh);
+        for &p in &plan.shared_pages {
+            self.alloc.retain_page(p);
+        }
+        let mut table = BlockTable::new(ps);
+        table.push_pages(&plan.shared_pages);
+        if let Some((_, dst)) = plan.cow_copy {
+            table.push_pages(&[dst]);
+        }
+        table.advance(tokens);
+        // the CoW copy duplicates `tokens % ps` live tokens
+        if needs_cow {
+            self.alloc.note_assigned(tokens % ps);
+        }
+        self.tables.insert(child, table);
+        Ok(AppendPlan { cow_copy: plan.cow_copy, new_pages: 0 })
+    }
+
+    /// Alg. 1 FREE: release every page of `seq`; pages whose refcount
+    /// drops to zero return to the free list and leave the prefix cache.
+    pub fn free(&mut self, seq: SeqId) -> Result<(), AllocError> {
+        let mut table = self
+            .tables
+            .remove(&seq)
+            .ok_or(AllocError::UnknownSeq(seq))?;
+        let ps = self.alloc.page_size();
+        let len = table.len_tokens();
+        let pages = table.clear();
+        for (i, p) in pages.iter().enumerate() {
+            let live_here = len.saturating_sub(i * ps).min(ps);
+            self.evict_if_dying(*p);
+            self.alloc.release_page(*p, live_here);
+        }
+        Ok(())
+    }
+
+    fn evict_if_dying(&mut self, page: u32) {
+        if self.alloc.refcount(page) == 1 {
+            self.prefix.evict_page(page);
+        }
+    }
+
+    /// Dense i32 device row for the batch tensor.
+    pub fn device_row(&self, seq: SeqId) -> Result<Vec<i32>, AllocError> {
+        Ok(self.table(seq)?.to_device_row(self.max_blocks_per_seq))
+    }
+
+    /// Total dead (mapped-but-unused) tokens across sequences — the paged
+    /// internal fragmentation, bounded by page_size-1 per sequence under
+    /// GrowthPolicy::Exact.
+    pub fn total_dead_tokens(&self) -> usize {
+        self.tables.values().map(|t| t.dead_tokens()).sum()
+    }
+
+    pub fn prefix_cache_len(&self) -> usize {
+        self.prefix.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpage::allocator::GrowthPolicy;
+
+    fn mgr(pages: u32, policy: GrowthPolicy) -> PageManager {
+        let alloc = Arc::new(PageAllocator::new(pages, 8, 100, policy));
+        PageManager::new(alloc, 16)
+    }
+
+    fn prompt(n: usize) -> Vec<u32> {
+        (0..n as u32).collect()
+    }
+
+    #[test]
+    fn reserve_assign_free_roundtrip() {
+        let mut m = mgr(32, GrowthPolicy::Exact);
+        let out = m.reserve(1, &prompt(20)).unwrap();
+        assert_eq!(out.cached_tokens, 0);
+        assert_eq!(out.new_pages, 3); // ceil(20/8)
+        m.note_assigned(1, 20).unwrap();
+        assert_eq!(m.seq_len(1).unwrap(), 20);
+        assert_eq!(m.allocator().free_pages(), 29);
+        m.free(1).unwrap();
+        assert_eq!(m.allocator().free_pages(), 32);
+        assert_eq!(m.allocator().audit().reserved_bytes(), 0);
+        assert_eq!(m.allocator().audit().live_bytes(), 0);
+    }
+
+    #[test]
+    fn exhaustion_reports_needed_pages() {
+        let mut m = mgr(2, GrowthPolicy::Exact);
+        match m.reserve(1, &prompt(100)) {
+            Err(AllocError::PoolExhausted { needed, available }) => {
+                assert_eq!(needed, 13);
+                assert_eq!(available, 2);
+            }
+            other => panic!("expected exhaustion, got {other:?}"),
+        }
+        assert_eq!(m.allocator().free_pages(), 2, "nothing leaked");
+    }
+
+    #[test]
+    fn capacity_limit_enforced() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        assert!(matches!(
+            m.reserve(1, &prompt(16 * 8 + 1)),
+            Err(AllocError::CapacityExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn append_grows_by_policy() {
+        let mut m = mgr(64, GrowthPolicy::PowerOfTwo);
+        m.reserve(1, &prompt(8)).unwrap(); // 1 page
+        m.note_assigned(1, 8).unwrap();
+        let plan = m.prepare_append(1, 1).unwrap();
+        assert_eq!(plan.cow_copy, None);
+        assert_eq!(plan.new_pages, 1); // 9 tokens -> 2 blocks (pow2 = 2)
+        m.note_assigned(1, 1).unwrap();
+        let plan = m.prepare_append(1, 8).unwrap(); // 17 -> 3 -> pow2 4
+        assert_eq!(plan.new_pages, 2);
+    }
+
+    #[test]
+    fn prefix_cache_hit_reuses_pages() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        let p = prompt(24); // 3 pages
+        m.reserve(1, &p).unwrap();
+        m.note_assigned(1, 24).unwrap();
+        assert_eq!(m.register_prefix(1, &p).unwrap(), 3);
+
+        // identical prompt: all 3 pages served from cache
+        let out = m.reserve(2, &p).unwrap();
+        assert_eq!(out.cached_tokens, 24);
+        assert_eq!(out.new_pages, 0);
+        let t1 = m.table(1).unwrap().pages().to_vec();
+        let t2 = m.table(2).unwrap().pages().to_vec();
+        assert_eq!(t1, t2, "physical pages aliased");
+
+        // longer prompt with same prefix: 3 cached + 1 new
+        let mut longer = p.clone();
+        longer.extend_from_slice(&[900, 901, 902]);
+        let out = m.reserve(3, &longer).unwrap();
+        assert_eq!(out.cached_tokens, 24);
+        assert_eq!(out.new_pages, 1);
+    }
+
+    #[test]
+    fn prefix_pages_survive_owner_free() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        let p = prompt(16);
+        m.reserve(1, &p).unwrap();
+        m.note_assigned(1, 16).unwrap();
+        m.register_prefix(1, &p).unwrap();
+        m.reserve(2, &p).unwrap();
+        m.free(1).unwrap();
+        // seq 2 still owns the pages; they must not be recycled
+        let free_before = m.allocator().free_pages();
+        let out = m.reserve(3, &p).unwrap();
+        assert_eq!(out.cached_tokens, 16, "cache entry still valid");
+        assert_eq!(m.allocator().free_pages(), free_before);
+        m.free(2).unwrap();
+        m.free(3).unwrap();
+        assert_eq!(m.allocator().free_pages(), 64);
+        // after the last owner died the cache entry is gone
+        let out = m.reserve(4, &p).unwrap();
+        assert_eq!(out.cached_tokens, 0);
+    }
+
+    #[test]
+    fn append_into_shared_tail_page_triggers_cow() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        m.reserve(1, &prompt(12)).unwrap(); // 2 pages, tail partial (4/8)
+        m.note_assigned(1, 12).unwrap();
+        let plan = m.fork(1, 2, 12).unwrap();
+        assert!(plan.cow_copy.is_some(), "partial fork point CoWs eagerly");
+
+        // parent's tail page now exclusively owned again -> plain append
+        let plan = m.prepare_append(1, 1).unwrap();
+        assert_eq!(plan.cow_copy, None);
+    }
+
+    #[test]
+    fn fork_page_aligned_then_divergent_append() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        m.reserve(1, &prompt(16)).unwrap(); // exactly 2 pages
+        m.note_assigned(1, 16).unwrap();
+        let plan = m.fork(1, 2, 16).unwrap();
+        assert_eq!(plan.cow_copy, None, "aligned fork is zero-copy");
+        let shared = m.table(1).unwrap().pages()[1];
+        assert_eq!(m.allocator().refcount(shared), 2);
+
+        // both append: each gets its own fresh page, shared pages remain
+        let p1 = m.prepare_append(1, 1).unwrap();
+        let p2 = m.prepare_append(2, 1).unwrap();
+        assert_eq!(p1.cow_copy, None);
+        assert_eq!(p2.cow_copy, None);
+        assert_ne!(
+            m.table(1).unwrap().pages()[2],
+            m.table(2).unwrap().pages()[2]
+        );
+        m.free(1).unwrap();
+        m.free(2).unwrap();
+        assert_eq!(m.allocator().free_pages(), 64);
+    }
+
+    #[test]
+    fn fork_mid_page_cow_copies_tail() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        m.reserve(1, &prompt(20)).unwrap();
+        m.note_assigned(1, 20).unwrap();
+        let plan = m.fork(1, 2, 19).unwrap();
+        let (src, dst) = plan.cow_copy.expect("partial tail needs CoW");
+        assert_eq!(src, m.table(1).unwrap().pages()[2]);
+        assert_eq!(dst, *m.table(2).unwrap().pages().last().unwrap());
+        assert_eq!(m.seq_len(2).unwrap(), 19);
+    }
+
+    #[test]
+    fn dead_tokens_accounting() {
+        let mut m = mgr(64, GrowthPolicy::PowerOfTwo);
+        m.reserve(1, &prompt(17)).unwrap(); // 3 blocks -> pow2 4 = 32 slots
+        m.note_assigned(1, 17).unwrap();
+        assert_eq!(m.total_dead_tokens(), 32 - 17);
+    }
+}

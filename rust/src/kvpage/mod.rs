@@ -1,0 +1,30 @@
+//! KV page management — the paper's core system contribution (Alg. 1).
+//!
+//! * [`freelist`] — lock-free Treiber free list (`Pop(F, n)`).
+//! * [`allocator`] — page-granular alloc/free + refcounts + growth policy.
+//! * [`block_table`] — per-sequence logical→physical tables.
+//! * [`manager`] — RESERVE / EXTEND / FREE, prefix-cache admission,
+//!   fork/CoW planning: the Alg. 1 surface the engine drives.
+//! * [`prefix`] — content-addressed prefix sharing.
+//! * [`pool`] — pool geometry + host mirror (swap, tests).
+//! * [`audit`] — live/reserved/wasted accounting (the patched-allocator
+//!   telemetry of Sec. III-C).
+//! * [`baseline`] — the contiguous max-length allocator being displaced.
+
+pub mod allocator;
+pub mod audit;
+pub mod baseline;
+pub mod block_table;
+pub mod freelist;
+pub mod manager;
+pub mod pool;
+pub mod prefix;
+
+pub use allocator::{GrowthPolicy, PageAllocator};
+pub use audit::{AuditEvent, EventKind, MemoryAudit};
+pub use baseline::ContiguousAllocator;
+pub use block_table::BlockTable;
+pub use freelist::FreeList;
+pub use manager::{AllocError, AppendPlan, PageManager, ReserveOutcome, SeqId};
+pub use pool::{HostPool, PoolGeometry};
+pub use prefix::{PrefixIndex, PrefixMatch};

@@ -1,0 +1,201 @@
+//! Host-side mirror of the device KV pool — geometry + scatter/gather.
+//!
+//! The authoritative pool lives on device ([L, P, page, Hkv, Dh] f32 pair,
+//! donated through every decode step). This mirror provides:
+//!
+//! * the single source of truth for pool geometry / strides, shared by the
+//!   runtime (buffer creation) and tests;
+//! * host-side ASSIGN/GATHER used by unit tests and by swap-out state
+//!   (preempted sequences' pages land here via the `read_pages`
+//!   executable).
+
+use crate::model::ModelSpec;
+
+/// Geometry of one [L, P, page, Hkv, Dh] f32 tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolGeometry {
+    pub n_layers: usize,
+    pub n_pages: usize,
+    pub page_size: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+}
+
+impl PoolGeometry {
+    pub fn from_spec(spec: &ModelSpec) -> Self {
+        PoolGeometry {
+            n_layers: spec.n_layers,
+            n_pages: spec.n_pages,
+            page_size: spec.page_size,
+            n_kv_heads: spec.n_kv_heads,
+            d_head: spec.d_head,
+        }
+    }
+
+    /// f32 elements in one token's KV row for one layer (Hkv * Dh).
+    pub fn token_elems(&self) -> usize {
+        self.n_kv_heads * self.d_head
+    }
+
+    /// f32 elements in one page of one layer.
+    pub fn page_elems(&self) -> usize {
+        self.page_size * self.token_elems()
+    }
+
+    /// f32 elements in the whole tensor.
+    pub fn total_elems(&self) -> usize {
+        self.n_layers * self.n_pages * self.page_elems()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_elems() * 4
+    }
+
+    /// Flat element offset of (layer, page, slot) — row start of a token.
+    pub fn offset(&self, layer: usize, page: u32, slot: usize) -> usize {
+        debug_assert!(layer < self.n_layers);
+        debug_assert!((page as usize) < self.n_pages);
+        debug_assert!(slot < self.page_size);
+        ((layer * self.n_pages + page as usize) * self.page_size + slot)
+            * self.token_elems()
+    }
+
+    pub fn shape(&self) -> [usize; 5] {
+        [self.n_layers, self.n_pages, self.page_size, self.n_kv_heads,
+         self.d_head]
+    }
+}
+
+/// One host-resident K or V pool tensor.
+pub struct HostPool {
+    geo: PoolGeometry,
+    data: Vec<f32>,
+}
+
+impl HostPool {
+    pub fn zeros(geo: PoolGeometry) -> Self {
+        HostPool { geo, data: vec![0.0; geo.total_elems()] }
+    }
+
+    pub fn geometry(&self) -> &PoolGeometry {
+        &self.geo
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Alg. 1 ASSIGN (host side): write one token's [Hkv, Dh] row.
+    pub fn assign_token(&mut self, layer: usize, page: u32, slot: usize,
+                        row: &[f32]) {
+        let n = self.geo.token_elems();
+        assert_eq!(row.len(), n);
+        let off = self.geo.offset(layer, page, slot);
+        self.data[off..off + n].copy_from_slice(row);
+    }
+
+    /// Alg. 1 GATHER (host side): read one token's row.
+    pub fn gather_token(&self, layer: usize, page: u32, slot: usize)
+                        -> &[f32] {
+        let n = self.geo.token_elems();
+        let off = self.geo.offset(layer, page, slot);
+        &self.data[off..off + n]
+    }
+
+    /// Copy a whole page within the pool (host CoW; mirrors the
+    /// `copy_pages` device executable).
+    pub fn copy_page(&mut self, src: u32, dst: u32) {
+        let n = self.geo.page_elems();
+        for layer in 0..self.geo.n_layers {
+            let s = self.geo.offset(layer, src, 0);
+            let d = self.geo.offset(layer, dst, 0);
+            if s == d {
+                continue;
+            }
+            // split_at_mut-free copy via temporary (pages are small)
+            let tmp: Vec<f32> = self.data[s..s + n].to_vec();
+            self.data[d..d + n].copy_from_slice(&tmp);
+        }
+    }
+
+    /// Extract a whole page across layers: [L, page, Hkv, Dh] flat
+    /// (swap-out unit).
+    pub fn extract_page(&self, page: u32) -> Vec<f32> {
+        let n = self.geo.page_elems();
+        let mut out = Vec::with_capacity(self.geo.n_layers * n);
+        for layer in 0..self.geo.n_layers {
+            let s = self.geo.offset(layer, page, 0);
+            out.extend_from_slice(&self.data[s..s + n]);
+        }
+        out
+    }
+
+    /// Inverse of `extract_page` (swap-in).
+    pub fn insert_page(&mut self, page: u32, flat: &[f32]) {
+        let n = self.geo.page_elems();
+        assert_eq!(flat.len(), self.geo.n_layers * n);
+        for layer in 0..self.geo.n_layers {
+            let d = self.geo.offset(layer, page, 0);
+            self.data[d..d + n]
+                .copy_from_slice(&flat[layer * n..(layer + 1) * n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> PoolGeometry {
+        PoolGeometry { n_layers: 2, n_pages: 4, page_size: 8,
+                       n_kv_heads: 2, d_head: 4 }
+    }
+
+    #[test]
+    fn offsets_are_row_major() {
+        let g = geo();
+        assert_eq!(g.token_elems(), 8);
+        assert_eq!(g.offset(0, 0, 0), 0);
+        assert_eq!(g.offset(0, 0, 1), 8);
+        assert_eq!(g.offset(0, 1, 0), 64);
+        assert_eq!(g.offset(1, 0, 0), 4 * 8 * 8);
+        assert_eq!(g.total_elems(), 2 * 4 * 8 * 8);
+    }
+
+    #[test]
+    fn assign_gather_roundtrip() {
+        let mut p = HostPool::zeros(geo());
+        let row: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        p.assign_token(1, 2, 3, &row);
+        assert_eq!(p.gather_token(1, 2, 3), &row[..]);
+        assert!(p.gather_token(1, 2, 4).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn copy_page_duplicates_all_layers() {
+        let mut p = HostPool::zeros(geo());
+        let row: Vec<f32> = (0..8).map(|x| x as f32 + 1.0).collect();
+        p.assign_token(0, 1, 0, &row);
+        p.assign_token(1, 1, 7, &row);
+        p.copy_page(1, 3);
+        assert_eq!(p.gather_token(0, 3, 0), &row[..]);
+        assert_eq!(p.gather_token(1, 3, 7), &row[..]);
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let mut p = HostPool::zeros(geo());
+        let row: Vec<f32> = (0..8).map(|x| x as f32 * 2.0).collect();
+        p.assign_token(0, 2, 5, &row);
+        p.assign_token(1, 2, 0, &row);
+        let flat = p.extract_page(2);
+        let mut q = HostPool::zeros(geo());
+        q.insert_page(1, &flat);
+        assert_eq!(q.gather_token(0, 1, 5), &row[..]);
+        assert_eq!(q.gather_token(1, 1, 0), &row[..]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Prefix sharing — contribution (1)'s "prefix sharing in O(1) time".
+//!
+//! Two cooperating pieces:
+//!
+//! * [`PrefixIndex`] — vLLM-style automatic prefix caching: full KV pages
+//!   are content-addressed by the hash-chain of the token ids they hold,
+//!   so a new request whose prompt starts with an already-cached prefix
+//!   maps those pages instead of recomputing them. Lookup/insert are O(1)
+//!   hash operations per page.
+//! * Fork/copy-on-write planning — when a sequence forks (beam search,
+//!   shared chat history), full prefix pages are aliased via refcounts;
+//!   a shared *partial* tail page must be copied before either fork
+//!   appends into it. The copy itself happens on device
+//!   (`runtime`'s `copy_pages` executable); this module only plans it.
+
+use std::collections::HashMap;
+use std::collections::hash_map::Entry;
+
+/// FNV-1a over token ids, chained with the previous page's hash so that a
+/// page is only reusable when its *entire prefix* matches.
+#[inline]
+pub fn chain_hash(prev: u64, tokens: &[u32]) -> u64 {
+    let mut h = prev ^ 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Hash-chain of every full page of a prompt: entry `i` covers tokens
+/// `[0, (i+1) * page_size)`.
+pub fn prompt_chain(tokens: &[u32], page_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / page_size);
+    let mut h = 0u64;
+    for chunk in tokens.chunks_exact(page_size) {
+        h = chain_hash(h, chunk);
+        out.push(h);
+    }
+    out
+}
+
+/// Content-addressed registry of full, immutable KV pages.
+#[derive(Default)]
+pub struct PrefixIndex {
+    by_hash: HashMap<u64, u32>,
+    by_page: HashMap<u32, u64>,
+}
+
+/// Result of matching a new prompt against the index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// Physical pages covering the matched prefix, logical order.
+    pub pages: Vec<u32>,
+    /// Tokens covered (always a multiple of page_size).
+    pub tokens: usize,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_hash.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_hash.is_empty()
+    }
+
+    /// Longest already-cached prefix of `tokens`. The caller must
+    /// `retain_page` each returned page before using the match.
+    pub fn lookup(&self, tokens: &[u32], page_size: usize) -> PrefixMatch {
+        let mut pages = Vec::new();
+        for h in prompt_chain(tokens, page_size) {
+            match self.by_hash.get(&h) {
+                Some(&p) => pages.push(p),
+                None => break,
+            }
+        }
+        let tokens = pages.len() * page_size;
+        PrefixMatch { pages, tokens }
+    }
+
+    /// Register `page` as holding the full-page chunk whose chain hash is
+    /// `hash`. First writer wins (identical content by construction);
+    /// returns the canonical page.
+    pub fn insert(&mut self, hash: u64, page: u32) -> u32 {
+        match self.by_hash.entry(hash) {
+            Entry::Occupied(e) => *e.get(),
+            Entry::Vacant(e) => {
+                e.insert(page);
+                self.by_page.insert(page, hash);
+                page
+            }
+        }
+    }
+
+    /// Drop a page from the index (its refcount reached zero and the
+    /// allocator is about to recycle it).
+    pub fn evict_page(&mut self, page: u32) {
+        if let Some(h) = self.by_page.remove(&page) {
+            // Only remove the hash entry if it still points at this page.
+            if self.by_hash.get(&h) == Some(&page) {
+                self.by_hash.remove(&h);
+            }
+        }
+    }
+
+    /// Is this page currently serving as a shared prefix page?
+    pub fn contains_page(&self, page: u32) -> bool {
+        self.by_page.contains_key(&page)
+    }
+}
+
+/// A planned fork of `tokens` tokens off a parent block table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ForkPlan {
+    /// Pages the child aliases (caller retains each).
+    pub shared_pages: Vec<u32>,
+    /// A (src, dst) device copy required because the tail page is partial
+    /// (copy-on-write); dst is already allocated for the child.
+    pub cow_copy: Option<(u32, u32)>,
+    /// Tokens the child starts with.
+    pub tokens: usize,
+}
+
+/// Plan a fork at `tokens` given the parent's pages. Full pages are
+/// shared; a partial tail page triggers CoW into `fresh_page` (which the
+/// caller allocated). Pure planning — no allocator mutation here.
+pub fn plan_fork(
+    parent_pages: &[u32],
+    tokens: usize,
+    page_size: usize,
+    fresh_page: Option<u32>,
+) -> ForkPlan {
+    let full = tokens / page_size;
+    let partial = tokens % page_size;
+    let shared_pages = parent_pages[..full].to_vec();
+    let cow_copy = if partial > 0 {
+        let src = parent_pages[full];
+        let dst = fresh_page.expect("partial fork needs a fresh page");
+        Some((src, dst))
+    } else {
+        None
+    };
+    ForkPlan { shared_pages, cow_copy, tokens }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_depends_on_prefix() {
+        let a = chain_hash(0, &[1, 2, 3]);
+        let b = chain_hash(0, &[1, 2, 4]);
+        assert_ne!(a, b);
+        // same chunk, different prefix -> different hash
+        assert_ne!(chain_hash(a, &[9, 9]), chain_hash(b, &[9, 9]));
+    }
+
+    #[test]
+    fn prompt_chain_covers_full_pages_only() {
+        let toks: Vec<u32> = (0..21).collect();
+        let chain = prompt_chain(&toks, 8);
+        assert_eq!(chain.len(), 2); // 21 tokens -> 2 full pages of 8
+    }
+
+    #[test]
+    fn lookup_matches_longest_prefix() {
+        let mut idx = PrefixIndex::new();
+        let toks: Vec<u32> = (0..32).collect();
+        let chain = prompt_chain(&toks, 8);
+        idx.insert(chain[0], 100);
+        idx.insert(chain[1], 101);
+        // full match of first 16 tokens
+        let m = idx.lookup(&toks, 8);
+        assert_eq!(m.pages, vec![100, 101]);
+        assert_eq!(m.tokens, 16);
+        // diverging second page -> only first page matches
+        let mut other = toks.clone();
+        other[9] = 999;
+        let m = idx.lookup(&other, 8);
+        assert_eq!(m.pages, vec![100]);
+        // diverging first token -> nothing
+        other[0] = 999;
+        assert_eq!(idx.lookup(&other, 8).pages.len(), 0);
+    }
+
+    #[test]
+    fn insert_first_writer_wins() {
+        let mut idx = PrefixIndex::new();
+        assert_eq!(idx.insert(42, 7), 7);
+        assert_eq!(idx.insert(42, 9), 7, "canonical page kept");
+    }
+
+    #[test]
+    fn evict_removes_both_maps() {
+        let mut idx = PrefixIndex::new();
+        idx.insert(42, 7);
+        idx.evict_page(7);
+        assert!(!idx.contains_page(7));
+        assert_eq!(idx.lookup(&[], 8).pages.len(), 0);
+        assert_eq!(idx.len(), 0);
+    }
+
+    #[test]
+    fn fork_page_aligned_shares_everything() {
+        let plan = plan_fork(&[5, 6, 7], 16, 8, None);
+        assert_eq!(plan.shared_pages, vec![5, 6]);
+        assert_eq!(plan.cow_copy, None);
+    }
+
+    #[test]
+    fn fork_partial_plans_cow() {
+        let plan = plan_fork(&[5, 6, 7], 19, 8, Some(33));
+        assert_eq!(plan.shared_pages, vec![5, 6]);
+        assert_eq!(plan.cow_copy, Some((7, 33)));
+        assert_eq!(plan.tokens, 19);
+    }
+
+    #[test]
+    #[should_panic(expected = "partial fork needs a fresh page")]
+    fn fork_partial_without_page_panics() {
+        plan_fork(&[5, 6, 7], 19, 8, None);
+    }
+}

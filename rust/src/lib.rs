@@ -1,0 +1,35 @@
+//! # paged-flex — Paged Attention Meets FlexAttention, reproduced
+//!
+//! A three-layer serving stack reproducing Joshi et al., *"Paged Attention
+//! Meets FlexAttention: Unlocking Long-Context Efficiency in Deployed
+//! Inference"* (2025):
+//!
+//! * **Layer 3 (this crate)** — the deployed-inference coordinator:
+//!   lock-free KV page manager ([`kvpage`]), continuous-batching scheduler
+//!   ([`coordinator`]), decode engine ([`engine`]), JSON-lines server
+//!   ([`server`]), workload traces ([`trace`]) and metrics ([`metrics`]).
+//! * **Layer 2** — a JAX LLaMA-architecture model (python/compile),
+//!   AOT-lowered to HLO text once at build time (`make artifacts`).
+//! * **Layer 1** — Pallas kernels implementing the FlexAttention engine
+//!   and the fused paged-attention GATHER (python/compile/kernels).
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and executes them from
+//! the Tokio event loop.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index
+//! mapping every figure/table of the paper to a bench target.
+
+pub mod config;
+pub mod util;
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod kvpage;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tokenizer;
+pub mod trace;

@@ -1,0 +1,237 @@
+//! pfserve — the leader binary: serve, generate, inspect.
+//!
+//! Hand-rolled argument parsing (offline build, no clap); subcommands:
+//!
+//! ```text
+//! pfserve serve    [--addr 127.0.0.1:7473] [common flags]
+//! pfserve generate --text "..." | --prompt-len N [--max-new N] [flags]
+//! pfserve inspect  [--model tiny]        # manifest / geometry dump
+//! pfserve help
+//!
+//! common flags:
+//!   --model tiny|bench|small   --artifacts DIR
+//!   --attention paged|contiguous|no_cache
+//!   --growth exact|power_of_two   --no-prefix-cache
+//!   --max-batch N --prefill-chunk N --config FILE.json
+//! ```
+
+use std::path::PathBuf;
+
+use paged_flex::config::{AttentionMode, EngineConfig, GrowthPolicyCfg};
+use paged_flex::coordinator::{Coordinator, Request};
+use paged_flex::engine::Engine;
+use paged_flex::server;
+use paged_flex::tokenizer::Tokenizer;
+use paged_flex::trace::{synthetic_corpus, Rng};
+use paged_flex::util::Result;
+use paged_flex::{bail, err};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "generate" => cmd_generate(rest),
+        "inspect" => cmd_inspect(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: pfserve help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "pfserve — Paged Attention Meets FlexAttention serving stack\n\
+         \n\
+         USAGE: pfserve <serve|generate|inspect|help> [flags]\n\
+         \n\
+         serve     run the JSON-lines TCP server (--addr HOST:PORT)\n\
+         generate  one-shot generation (--text STR | --prompt-len N)\n\
+         inspect   dump manifest geometry for --model\n\
+         \n\
+         common flags:\n\
+           --model tiny|bench|small     (default tiny)\n\
+           --artifacts DIR              (default ./artifacts)\n\
+           --attention paged|contiguous|no_cache\n\
+           --growth exact|power_of_two  --no-prefix-cache\n\
+           --max-batch N --prefill-chunk N --config FILE.json"
+    );
+}
+
+/// Parse `--key value` / `--flag` style arguments.
+struct Flags {
+    pairs: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut pairs = vec![];
+        let mut switches = vec![];
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if !a.starts_with("--") {
+                bail!("unexpected argument '{a}'");
+            }
+            let key = a.trim_start_matches("--").to_string();
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                pairs.push((key, args[i + 1].clone()));
+                i += 2;
+            } else {
+                switches.push(key);
+                i += 1;
+            }
+        }
+        Ok(Flags { pairs, switches })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|k| k == key)
+    }
+
+    fn engine_config(&self) -> Result<EngineConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => EngineConfig::load(std::path::Path::new(path))?,
+            None => EngineConfig::default(),
+        };
+        if let Some(m) = self.get("model") {
+            cfg.model = m.to_string();
+        }
+        if let Some(d) = self.get("artifacts") {
+            cfg.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(a) = self.get("attention") {
+            cfg.attention = AttentionMode::from_str(a)?;
+        }
+        if let Some(g) = self.get("growth") {
+            cfg.growth_policy = GrowthPolicyCfg::from_str(g)?;
+        }
+        if self.has("no-prefix-cache") {
+            cfg.prefix_cache = false;
+        }
+        if let Some(b) = self.get("max-batch") {
+            cfg.scheduler.max_batch_size =
+                b.parse().map_err(|_| err!("bad --max-batch {b}"))?;
+        }
+        if let Some(c) = self.get("prefill-chunk") {
+            cfg.scheduler.prefill_chunk =
+                c.parse().map_err(|_| err!("bad --prefill-chunk {c}"))?;
+        }
+        Ok(cfg)
+    }
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let addr = flags.get("addr").unwrap_or("127.0.0.1:7473").to_string();
+    let cfg = flags.engine_config()?;
+    eprintln!(
+        "loading model '{}' ({} attention) from {} ...",
+        cfg.model,
+        cfg.attention.as_str(),
+        cfg.artifacts_dir.display()
+    );
+    let engine = Engine::new(cfg)?;
+    eprintln!(
+        "model ready: {} params, pool {} pages × {} tokens",
+        engine.rt.spec().param_count,
+        engine.rt.spec().n_pages,
+        engine.rt.spec().page_size
+    );
+    server::serve(engine, &addr, |bound| {
+        println!("listening on {bound}");
+    })
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let cfg = flags.engine_config()?;
+    let max_new: usize = flags
+        .get("max-new")
+        .map(|v| v.parse().map_err(|_| err!("bad --max-new")))
+        .transpose()?
+        .unwrap_or(32);
+
+    let engine = Engine::new(cfg)?;
+    let vocab = engine.rt.spec().vocab_size as u32;
+    let tok = Tokenizer::byte_level(vocab);
+    let prompt: Vec<u32> = if let Some(text) = flags.get("text") {
+        tok.encode_with_bos(text.as_bytes())
+    } else {
+        let n: usize = flags
+            .get("prompt-len")
+            .map(|v| v.parse().map_err(|_| err!("bad --prompt-len")))
+            .transpose()?
+            .unwrap_or(64);
+        let mut rng = Rng::seeded(0);
+        synthetic_corpus(&mut rng, n, vocab)
+    };
+
+    let mut coord = Coordinator::new(engine);
+    coord.submit(Request::greedy(1, prompt.clone(), max_new))?;
+    let fins = coord.run_to_completion()?;
+    let fin = &fins[0];
+    println!(
+        "prompt_len={} generated={} ttft={:.1}ms total={:.1}ms",
+        fin.prompt_len,
+        fin.tokens.len(),
+        fin.ttft_s * 1e3,
+        fin.total_s * 1e3
+    );
+    println!("tokens: {:?}", fin.tokens);
+    if flags.get("text").is_some() {
+        let bytes = tok.decode_lossy(&fin.tokens);
+        println!("text: {}", String::from_utf8_lossy(&bytes));
+    }
+    println!("\n{}", coord.metrics().summary());
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let flags = Flags::parse(args)?;
+    let cfg = flags.engine_config()?;
+    let manifest = paged_flex::model::Manifest::load(&cfg.artifacts_dir)?;
+    let entry = manifest.config(&cfg.model)?;
+    let s = &entry.model;
+    println!("model '{}':", s.name);
+    println!("  params          {} ({:.1} MB f32)", s.param_count,
+             s.weight_bytes() as f64 / 1e6);
+    println!("  geometry        d={} L={} H={} Hkv={} dh={} ff={}",
+             s.d_model, s.n_layers, s.n_heads, s.n_kv_heads, s.d_head,
+             s.d_ff);
+    println!("  context         max_seq_len={} page={} n_pages={} \
+              (pool {:.1} MB, {} tokens)",
+             s.max_seq_len, s.page_size, s.n_pages,
+             s.pool_bytes() as f64 / 1e6, s.pooled_tokens());
+    println!("  kv bytes/token  {}", s.kv_bytes_per_token);
+    println!("  artifacts       {}:", entry.artifacts.len());
+    for (name, a) in &entry.artifacts {
+        println!(
+            "    {name:<24} kind={:<12} b={:?} s={:?} c={:?}",
+            a.kind, a.batch, a.seq, a.chunk
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,275 @@
+//! Serving metrics — TTFT, per-token latency, throughput, utilization
+//! (paper Sec. III-D), with fixed-bucket histograms and CSV export.
+//!
+//! Histograms use power-of-√2 latency buckets so p50/p95/p99 are accurate
+//! to ~±19 % across nine decades without allocation on the record path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Log-bucketed latency histogram (lock-free record path).
+pub struct LatencyHistogram {
+    /// bucket i covers [floor * r^i, floor * r^(i+1)) with r = sqrt(2)
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+const N_BUCKETS: usize = 64;
+const FLOOR_NS: f64 = 100.0; // 100 ns resolution floor
+const RATIO: f64 = std::f64::consts::SQRT_2;
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns as f64 <= FLOOR_NS {
+            return 0;
+        }
+        let b = ((ns as f64 / FLOOR_NS).ln() / RATIO.ln()) as usize;
+        b.min(N_BUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` in ns.
+    fn bucket_edge(i: usize) -> f64 {
+        FLOOR_NS * RATIO.powi(i as i32 + 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos() as u64;
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Quantile via bucket interpolation (q in [0, 1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for i in 0..N_BUCKETS {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(Self::bucket_edge(i) as u64);
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Counter set for one serving run.
+#[derive(Default)]
+pub struct ServingMetrics {
+    pub ttft: LatencyHistogram,
+    pub per_token: LatencyHistogram,
+    pub prefill_step: LatencyHistogram,
+    pub decode_step: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub requests_admitted: AtomicU64,
+    pub requests_finished: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub requests_preempted: AtomicU64,
+    pub tokens_prefilled: AtomicU64,
+    pub tokens_decoded: AtomicU64,
+    pub prefix_cache_hits: AtomicU64,
+    pub prefix_cached_tokens: AtomicU64,
+    started: Option<Instant>,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics { started: Some(Instant::now()), ..Default::default() }
+    }
+
+    pub fn inc(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.map(|s| s.elapsed()).unwrap_or_default()
+    }
+
+    /// Steady-state decode throughput (tokens/s over the whole run).
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.tokens_decoded.load(Ordering::Relaxed) as f64 / secs
+    }
+
+    /// Human-readable summary block (examples print this).
+    pub fn summary(&self) -> String {
+        fn ms(d: Duration) -> f64 {
+            d.as_secs_f64() * 1e3
+        }
+        format!(
+            "requests: admitted={} finished={} rejected={} preempted={}\n\
+             tokens:   prefill={} decode={} ({:.1} tok/s decode)\n\
+             prefix cache: hits={} cached_tokens={}\n\
+             TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
+             per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
+             decode step ms: p50={:.3} p95={:.3} (n={})",
+            self.requests_admitted.load(Ordering::Relaxed),
+            self.requests_finished.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
+            self.requests_preempted.load(Ordering::Relaxed),
+            self.tokens_prefilled.load(Ordering::Relaxed),
+            self.tokens_decoded.load(Ordering::Relaxed),
+            self.decode_tokens_per_sec(),
+            self.prefix_cache_hits.load(Ordering::Relaxed),
+            self.prefix_cached_tokens.load(Ordering::Relaxed),
+            ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
+            ms(self.ttft.max()),
+            ms(self.per_token.p50()), ms(self.per_token.p95()),
+            ms(self.per_token.p99()), ms(self.per_token.mean()),
+            ms(self.decode_step.p50()), ms(self.decode_step.p95()),
+            self.decode_step.count(),
+        )
+    }
+
+    /// CSV row of the headline numbers (benches aggregate these).
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1}",
+            self.requests_finished.load(Ordering::Relaxed),
+            self.tokens_prefilled.load(Ordering::Relaxed),
+            self.tokens_decoded.load(Ordering::Relaxed),
+            self.requests_preempted.load(Ordering::Relaxed),
+            self.ttft.p50().as_secs_f64() * 1e3,
+            self.ttft.p99().as_secs_f64() * 1e3,
+            self.per_token.p50().as_secs_f64() * 1e3,
+            self.per_token.p99().as_secs_f64() * 1e3,
+            self.decode_tokens_per_sec(),
+        )
+    }
+
+    pub const CSV_HEADER: &'static str =
+        "finished,tokens_prefilled,tokens_decoded,preempted,\
+         ttft_p50_ms,ttft_p99_ms,tok_p50_ms,tok_p99_ms,decode_tok_per_s";
+}
+
+/// Scoped timer recording into a histogram on drop.
+pub struct Timer<'a> {
+    hist: &'a LatencyHistogram,
+    start: Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(hist: &'a LatencyHistogram) -> Self {
+        Timer { hist, start: Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_are_monotone_and_bracket_samples() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50().as_micros() as f64;
+        let p95 = h.p95().as_micros() as f64;
+        let p99 = h.p99().as_micros() as f64;
+        assert!(p50 <= p95 && p95 <= p99);
+        // bucket resolution is ±~41% worst case; generous brackets
+        assert!(p50 > 250.0 && p50 < 1000.0, "p50={p50}");
+        assert!(p99 > 700.0 && p99 <= 1500.0, "p99={p99}");
+        assert!(h.mean().as_micros() >= 400);
+        assert_eq!(h.max(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.p99(), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn timer_records_on_drop() {
+        let h = LatencyHistogram::new();
+        {
+            let _t = Timer::start(&h);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.max() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn metrics_summary_renders() {
+        let m = ServingMetrics::new();
+        ServingMetrics::inc(&m.tokens_decoded, 100);
+        m.ttft.record(Duration::from_millis(5));
+        let s = m.summary();
+        assert!(s.contains("decode=100"));
+        assert!(!m.csv_row().is_empty());
+    }
+
+    #[test]
+    fn bucket_of_is_monotone() {
+        let mut last = 0;
+        for ns in [1u64, 100, 200, 1000, 10_000, 1_000_000, u64::MAX / 2] {
+            let b = LatencyHistogram::bucket_of(ns);
+            assert!(b >= last);
+            last = b;
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! Model/artifact manifest — the Rust mirror of `python/compile/configs.py`
+//! and the `artifacts/manifest.json` contract written by `compile.aot`.
+//!
+//! Everything the coordinator needs to know about the compiled model comes
+//! from here: KV geometry (bytes/token, pool shape), artifact bucket
+//! tables (which batch/seq sizes were compiled), parameter layout inside
+//! the weights binary, and donation info per executable.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Value};
+use crate::util::{Result, WrapErr};
+use crate::{ensure, err};
+
+/// Mirror of `configs.ModelConfig` (validated against the manifest).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq_len: usize,
+    pub page_size: usize,
+    pub n_pages: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub d_head: usize,
+    pub max_blocks_per_seq: usize,
+    pub kv_bytes_per_token: usize,
+    pub param_count: u64,
+}
+
+impl ModelSpec {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ModelSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            vocab_size: v.get("vocab_size")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            n_kv_heads: v.get("n_kv_heads")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            max_seq_len: v.get("max_seq_len")?.as_usize()?,
+            page_size: v.get("page_size")?.as_usize()?,
+            n_pages: v.get("n_pages")?.as_usize()?,
+            rope_theta: v.get("rope_theta")?.as_f64()?,
+            norm_eps: v.get("norm_eps")?.as_f64()?,
+            d_head: v.get("d_head")?.as_usize()?,
+            max_blocks_per_seq: v.get("max_blocks_per_seq")?.as_usize()?,
+            kv_bytes_per_token: v.get("kv_bytes_per_token")?.as_usize()?,
+            param_count: v.get("param_count")?.as_u64()?,
+        })
+    }
+
+    /// Cross-field consistency (the python side computed these; re-check).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.d_head * self.n_heads == self.d_model,
+                "d_head * n_heads != d_model");
+        ensure!(self.n_heads % self.n_kv_heads == 0,
+                "GQA ratio not integral");
+        ensure!(self.max_blocks_per_seq * self.page_size == self.max_seq_len,
+                "max_blocks_per_seq inconsistent");
+        ensure!(
+            self.kv_bytes_per_token
+                == self.n_layers * self.n_kv_heads * self.d_head * 8,
+            "kv_bytes_per_token inconsistent"
+        );
+        Ok(())
+    }
+
+    /// Tokens the paged pool can hold.
+    pub fn pooled_tokens(&self) -> usize {
+        self.n_pages * self.page_size
+    }
+
+    /// Bytes of one full KV pool pair on device.
+    pub fn pool_bytes(&self) -> usize {
+        self.pooled_tokens() * self.kv_bytes_per_token
+    }
+
+    /// Bytes of one contiguous-cache pair for batch `b`.
+    pub fn contiguous_cache_bytes(&self, b: usize) -> usize {
+        b * self.max_seq_len * self.kv_bytes_per_token
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.param_count * 4
+    }
+}
+
+/// One named parameter inside the flat weights binary.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: u64,
+    pub bytes: u64,
+}
+
+/// Tensor metadata for an executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v
+                .opt("name")
+                .map(|n| n.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            shape: v.get("shape")?.usize_array()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub kind: String,
+    pub batch: Option<usize>,
+    pub seq: Option<usize>,
+    pub chunk: Option<usize>,
+    pub takes_params: bool,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub donated_inputs: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            v.opt(key).map(|x| x.as_usize()).transpose()
+        };
+        Ok(ArtifactSpec {
+            file: v.get("file")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            batch: opt_usize("batch")?,
+            seq: opt_usize("seq")?,
+            chunk: opt_usize("chunk")?,
+            takes_params: v.get("takes_params")?.as_bool()?,
+            inputs: v
+                .get("inputs")?
+                .as_array()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            outputs: v
+                .get("outputs")?
+                .as_array()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            donated_inputs: v.get("donated_inputs")?.usize_array()?,
+        })
+    }
+}
+
+/// One config's entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    pub model: ModelSpec,
+    pub weights_file: String,
+    pub weights_sha256: String,
+    pub n_params: usize,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&path).wrap_err_with(|| {
+            format!("reading {} — run `make artifacts` first",
+                    path.display())
+        })?;
+        Self::from_str(&raw).wrap_err("parsing manifest.json")
+    }
+
+    pub fn from_str(raw: &str) -> Result<Self> {
+        let v = parse(raw)?;
+        let version = v.get("version")?.as_u64()?;
+        ensure!(version == 1, "unsupported manifest version {version}");
+        let mut configs = BTreeMap::new();
+        for (name, entry) in v.get("configs")?.as_object()? {
+            let model = ModelSpec::from_json(entry.get("model")?)
+                .wrap_err_with(|| format!("config {name}"))?;
+            model.validate().wrap_err_with(|| format!("config {name}"))?;
+            let params = entry
+                .get("params")?
+                .as_array()?
+                .iter()
+                .map(|p| -> Result<ParamEntry> {
+                    Ok(ParamEntry {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p.get("shape")?.usize_array()?,
+                        offset: p.get("offset")?.as_u64()?,
+                        bytes: p.get("bytes")?.as_u64()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut artifacts = BTreeMap::new();
+            for (aname, av) in entry.get("artifacts")?.as_object()? {
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactSpec::from_json(av)
+                        .wrap_err_with(|| format!("artifact {aname}"))?,
+                );
+            }
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    model,
+                    weights_file: entry
+                        .get("weights_file")?
+                        .as_str()?
+                        .to_string(),
+                    weights_sha256: entry
+                        .get("weights_sha256")?
+                        .as_str()?
+                        .to_string(),
+                    n_params: entry.get("n_params")?.as_usize()?,
+                    params,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { version, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs.get(name).ok_or_else(|| {
+            err!(
+                "config '{}' not in manifest (have: {:?})",
+                name,
+                self.configs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl ConfigEntry {
+    /// The decode-step artifact for exactly batch `b` (paged path).
+    pub fn paged_decode(&self, b: usize) -> Option<(&str, &ArtifactSpec)> {
+        self.find("paged_decode", |a| a.batch == Some(b))
+    }
+
+    /// All compiled paged-decode batch sizes, ascending.
+    pub fn paged_decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "paged_decode")
+            .filter_map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest compiled paged-chunk bucket with batch >= `b` and
+    /// chunk >= `c` tokens.
+    pub fn paged_chunk_bucket(&self, b: usize, c: usize)
+                              -> Option<(&str, &ArtifactSpec)> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| a.kind == "paged_chunk")
+            .filter(|(_, a)| {
+                a.batch.unwrap_or(0) >= b && a.chunk.unwrap_or(0) >= c
+            })
+            .min_by_key(|(_, a)| (a.batch.unwrap(), a.chunk.unwrap()))
+            .map(|(n, a)| (n.as_str(), a))
+    }
+
+    /// All (batch, chunk) paged-chunk buckets.
+    pub fn paged_chunk_buckets(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "paged_chunk")
+            .map(|a| (a.batch.unwrap_or(0), a.chunk.unwrap_or(0)))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn decode(&self, b: usize) -> Option<(&str, &ArtifactSpec)> {
+        self.find("decode", |a| a.batch == Some(b))
+    }
+
+    pub fn prefill_bucket(&self, b: usize, s: usize)
+                          -> Option<(&str, &ArtifactSpec)> {
+        self.artifacts
+            .iter()
+            .filter(|(_, a)| a.kind == "prefill")
+            .filter(|(_, a)| {
+                a.batch.unwrap_or(0) >= b && a.seq.unwrap_or(0) >= s
+            })
+            .min_by_key(|(_, a)| (a.batch.unwrap(), a.seq.unwrap()))
+            .map(|(n, a)| (n.as_str(), a))
+    }
+
+    pub fn nocache(&self, s: usize) -> Option<(&str, &ArtifactSpec)> {
+        self.find("nocache", |a| a.seq == Some(s))
+    }
+
+    pub fn nocache_seqs(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == "nocache")
+            .filter_map(|a| a.seq)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn logits(&self) -> Option<(&str, &ArtifactSpec)> {
+        self.find("logits", |_| true)
+    }
+
+    pub fn service(&self, kind: &str) -> Option<(&str, &ArtifactSpec)> {
+        self.find(kind, |_| true)
+    }
+
+    fn find<F: Fn(&ArtifactSpec) -> bool>(
+        &self,
+        kind: &str,
+        pred: F,
+    ) -> Option<(&str, &ArtifactSpec)> {
+        self.artifacts
+            .iter()
+            .find(|(_, a)| a.kind == kind && pred(a))
+            .map(|(n, a)| (n.as_str(), a))
+    }
+
+    pub fn artifact_path(&self, artifacts_dir: &Path, name: &str)
+                         -> Result<PathBuf> {
+        let a = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| err!("unknown artifact '{name}'"))?;
+        Ok(artifacts_dir.join(&a.file))
+    }
+
+    /// Total bytes the weights file must have.
+    pub fn expected_weight_bytes(&self) -> u64 {
+        self.params.iter().map(|p| p.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "tiny".into(),
+            vocab_size: 512,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 176,
+            max_seq_len: 128,
+            page_size: 8,
+            n_pages: 64,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            d_head: 16,
+            max_blocks_per_seq: 16,
+            kv_bytes_per_token: 2 * 2 * 16 * 8,
+            param_count: 1000,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_consistent_spec() {
+        spec().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_kv_bytes() {
+        let mut s = spec();
+        s.kv_bytes_per_token += 1;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn geometry_helpers() {
+        let s = spec();
+        assert_eq!(s.pooled_tokens(), 512);
+        assert_eq!(s.pool_bytes(), 512 * 512);
+        assert_eq!(s.contiguous_cache_bytes(2), 2 * 128 * 512);
+    }
+
+    #[test]
+    fn manifest_parses_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // fresh checkout; covered by integration tests
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let tiny = man.config("tiny").unwrap();
+        assert!(tiny.paged_decode(2).is_some());
+        assert!(tiny.service("copy_pages").is_some());
+        let (_, chunk) = tiny.paged_chunk_bucket(1, 20).unwrap();
+        assert!(chunk.chunk.unwrap() >= 20);
+        assert!(tiny
+            .paged_decode_batches()
+            .windows(2)
+            .all(|w| w[0] < w[1]));
+        assert_eq!(tiny.expected_weight_bytes(),
+                   tiny.model.param_count * 4);
+        // pools are pure inputs on model artifacts (ASSIGN is Rust-side;
+        // DESIGN.md §5); donation survives only on pool services
+        let (_, d) = tiny.paged_decode(2).unwrap();
+        assert!(d.donated_inputs.is_empty());
+        assert!(d.takes_params);
+        let (_, svc) = tiny.service("copy_pages").unwrap();
+        assert!(!svc.takes_params);
+        assert_eq!(svc.donated_inputs, vec![0, 1]);
+    }
+
+    #[test]
+    fn missing_config_is_a_clear_error() {
+        let man = Manifest { version: 1, configs: BTreeMap::new() };
+        let e = man.config("nope").unwrap_err().to_string();
+        assert!(e.contains("nope"));
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT runtime — loads AOT HLO-text artifacts and executes them from the
+//! request path. Python never runs here.
+//!
+//! * weights load once from the flat binary into device-resident buffers
+//!   (passed by reference to every `execute_b`, zero per-step copies);
+//! * executables compile lazily from HLO text on first use and are cached
+//!   (`HloModuleProto::from_text_file` → `XlaComputation` → PJRT compile);
+//! * per-step inputs upload via `buffer_from_host_buffer` (one copy,
+//!   `kImmutableOnlyDuringCall`); outputs come back as ONE tuple literal —
+//!   xla_extension 0.5.1 does not untuple results — which is split
+//!   host-side into typed [`HostTensor`]s.
+//!
+//! That tuple-roundtrip property is why the pool of record lives in Rust
+//! (`kvpage::pool::HostPool`) and decode executables return `(logits,
+//! k_new, v_new)` rather than updated pools — see DESIGN.md §5.
+
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::model::{ArtifactSpec, ConfigEntry, Manifest};
+use crate::util::{Result, WrapErr};
+use crate::{ensure, err};
+
+pub use tensor::HostTensor;
+
+/// One loaded model config: manifest entry + device weights + executable
+/// cache. Single-threaded by design (PJRT CPU client; the engine owns it).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    entry: ConfigEntry,
+    /// Device-resident parameter buffers, manifest order.
+    params: Vec<xla::PjRtBuffer>,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// (artifact, compile seconds) log for EXPERIMENTS.md.
+    compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    /// Load `config_name` from `artifacts_dir` (manifest + weights).
+    pub fn load(artifacts_dir: &Path, config_name: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let entry = manifest.config(config_name)?.clone();
+        let client = xla::PjRtClient::cpu()?;
+        let params = load_weights(&client, artifacts_dir, &entry)?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            entry,
+            params,
+            executables: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn entry(&self) -> &ConfigEntry {
+        &self.entry
+    }
+
+    pub fn spec(&self) -> &crate::model::ModelSpec {
+        &self.entry.model
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn compile_log(&self) -> Vec<(String, f64)> {
+        self.compile_log.borrow().clone()
+    }
+
+    /// Compile-on-demand with cache.
+    pub fn executable(&self, name: &str)
+                      -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let path = self.entry.artifact_path(&self.artifacts_dir, name)?;
+        ensure!(path.exists(), "artifact file missing: {}", path.display());
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).wrap_err_with(
+            || format!("compiling artifact '{name}'"))?);
+        self.compile_log
+            .borrow_mut()
+            .push((name.to_string(), t0.elapsed().as_secs_f64()));
+        self.executables
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (server warm-up).
+    pub fn warm_up(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` on `inputs` (post-params tail, manifest
+    /// order). Returns one HostTensor per manifest output.
+    pub fn run(&self, name: &str, inputs: &[HostTensor])
+               -> Result<Vec<HostTensor>> {
+        let spec = self
+            .entry
+            .artifacts
+            .get(name)
+            .ok_or_else(|| err!("unknown artifact '{name}'"))?
+            .clone();
+        self.check_inputs(&spec, inputs)?;
+        let exe = self.executable(name)?;
+
+        // Assemble the argument list: device-resident params first (if the
+        // artifact takes them), then one fresh upload per dynamic input.
+        let uploaded: Vec<xla::PjRtBuffer> = {
+            let _s = crate::util::profile::span(
+                crate::util::profile::Phase::Upload);
+            inputs
+                .iter()
+                .map(|t| t.to_buffer(&self.client))
+                .collect::<Result<_, _>>()?
+        };
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            inputs.len()
+                + if spec.takes_params { self.params.len() } else { 0 },
+        );
+        if spec.takes_params {
+            args.extend(self.params.iter());
+        }
+        args.extend(uploaded.iter());
+
+        let outputs = {
+            let _s = crate::util::profile::span(
+                crate::util::profile::Phase::Execute);
+            exe.execute_b(&args)?
+        };
+        ensure!(!outputs.is_empty() && !outputs[0].is_empty(),
+                "executable '{name}' returned no outputs");
+        // xla_extension 0.5.1: tuple root comes back as ONE tuple buffer.
+        let _s = crate::util::profile::span(
+            crate::util::profile::Phase::Download);
+        let lit = outputs[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        ensure!(parts.len() == spec.outputs.len(),
+                "'{name}': {} outputs, manifest says {}",
+                parts.len(), spec.outputs.len());
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, ospec)| HostTensor::from_literal(l, ospec))
+            .collect()
+    }
+
+    fn check_inputs(&self, spec: &ArtifactSpec, inputs: &[HostTensor])
+                    -> Result<()> {
+        ensure!(inputs.len() == spec.inputs.len(),
+                "artifact '{}' wants {} inputs, got {}",
+                spec.file, spec.inputs.len(), inputs.len());
+        for (t, ispec) in inputs.iter().zip(&spec.inputs) {
+            t.check_spec(ispec)?;
+        }
+        Ok(())
+    }
+}
+
+/// Read the flat f32 weights binary and upload one device buffer per
+/// parameter, in manifest order.
+fn load_weights(client: &xla::PjRtClient, dir: &Path, entry: &ConfigEntry)
+                -> Result<Vec<xla::PjRtBuffer>> {
+    let path = dir.join(&entry.weights_file);
+    let raw = std::fs::read(&path)
+        .wrap_err_with(|| format!("reading weights {}", path.display()))?;
+    let expect = entry.expected_weight_bytes();
+    ensure!(raw.len() as u64 == expect,
+            "weights file {} has {} bytes, manifest says {}",
+            path.display(), raw.len(), expect);
+    let mut bufs = Vec::with_capacity(entry.params.len());
+    for p in &entry.params {
+        let lo = p.offset as usize;
+        let hi = lo + p.bytes as usize;
+        ensure!(hi <= raw.len(), "param {} out of file bounds", p.name);
+        let floats: Vec<f32> = raw[lo..hi]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        bufs.push(client.buffer_from_host_buffer(&floats, &p.shape, None)?);
+    }
+    Ok(bufs)
+}
+
+/// Which artifacts an engine in a given attention mode should pre-compile.
+pub fn warmup_set(entry: &ConfigEntry,
+                  mode: crate::config::AttentionMode) -> Vec<String> {
+    use crate::config::AttentionMode::*;
+    entry
+        .artifacts
+        .iter()
+        .filter(|(_, a)| match mode {
+            Paged => a.kind == "paged_decode" || a.kind == "paged_chunk",
+            Contiguous => a.kind == "decode" || a.kind == "prefill",
+            NoCache => a.kind == "nocache",
+        })
+        .map(|(n, _)| n.clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_set_filters_by_mode() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let tiny = man.config("tiny").unwrap();
+        let paged = warmup_set(tiny, crate::config::AttentionMode::Paged);
+        assert!(paged.iter().all(|n| n.contains("paged")));
+        assert!(!paged.is_empty());
+        let nc = warmup_set(tiny, crate::config::AttentionMode::NoCache);
+        assert!(nc.iter().all(|n| n.starts_with("nocache")));
+    }
+}

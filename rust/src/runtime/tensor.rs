@@ -1,0 +1,152 @@
+//! Host tensors — the typed boundary between Rust state and PJRT buffers.
+
+use crate::model::TensorSpec;
+use crate::util::Result;
+use crate::{bail, ensure};
+
+/// A host-resident tensor (f32 or i32, row-major), shape-carrying.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { data, shape }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { data: vec![0.0; n], shape }
+    }
+
+    pub fn scalar_i32_vec(v: &[i32]) -> Self {
+        HostTensor::I32 { data: v.to_vec(), shape: vec![v.len()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Validate against a manifest TensorSpec.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        ensure!(
+            self.shape() == spec.shape.as_slice(),
+            "input '{}': shape {:?} != expected {:?}",
+            spec.name,
+            self.shape(),
+            spec.shape
+        );
+        ensure!(
+            self.dtype_str() == spec.dtype,
+            "input '{}': dtype {} != expected {}",
+            spec.name,
+            self.dtype_str(),
+            spec.dtype
+        );
+        Ok(())
+    }
+
+    /// Upload to a device buffer.
+    pub fn to_buffer(&self, client: &xla::PjRtClient)
+                     -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            HostTensor::F32 { data, shape } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32 { data, shape } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(buf)
+    }
+
+    /// Download from a literal, checking element count against `spec`.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec)
+                        -> Result<Self> {
+        let out = match spec.dtype.as_str() {
+            "float32" => {
+                HostTensor::F32 { data: lit.to_vec::<f32>()?,
+                                  shape: spec.shape.clone() }
+            }
+            "int32" => {
+                HostTensor::I32 { data: lit.to_vec::<i32>()?,
+                                  shape: spec.shape.clone() }
+            }
+            other => bail!("unsupported output dtype {other}"),
+        };
+        ensure!(out.len() == spec.elems(),
+                "output '{}': got {} elems, expected {}",
+                spec.name, out.len(), spec.elems());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_check_catches_shape_and_dtype() {
+        let t = HostTensor::zeros_f32(vec![2, 3]);
+        let good = TensorSpec { name: "x".into(), shape: vec![2, 3],
+                                dtype: "float32".into() };
+        let bad_shape = TensorSpec { shape: vec![3, 2], ..good.clone() };
+        let bad_dtype = TensorSpec { dtype: "int32".into(), ..good.clone() };
+        assert!(t.check_spec(&good).is_ok());
+        assert!(t.check_spec(&bad_shape).is_err());
+        assert!(t.check_spec(&bad_dtype).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::i32(vec![1, 2, 3], vec![3]);
+        assert_eq!(t.as_i32().unwrap(), &[1, 2, 3]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dtype_str(), "int32");
+    }
+}

@@ -1,0 +1,312 @@
+//! JSON-lines TCP server — "deployed inference" (paper title) without a
+//! Python process anywhere near the request path.
+//!
+//! The engine/coordinator stack is deliberately single-threaded (PJRT CPU
+//! client + Rc state), so the architecture is:
+//!
+//! ```text
+//! accept thread ──┐                       ┌── per-conn reader threads
+//!                 ▼                       ▼
+//!        mpsc<Incoming { request, reply tx }>
+//!                 │
+//!        coordinator thread (this fn): submit → tick → route replies
+//! ```
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
+//!      "temperature":0.7,"top_k":40,"top_p":0.9,"stop_at_eos":true}
+//!   → {"op":"generate","text":"hello","max_new_tokens":8}
+//!   → {"op":"stats"}           → {"op":"shutdown"}
+//!   ← {"id":1,"tokens":[...],"text":"...","ttft_ms":..,"total_ms":..,
+//!      "preemptions":0,"cached_prompt_tokens":0}
+//!   ← {"error":"..."}
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::SamplingConfig;
+use crate::coordinator::{Coordinator, Finished, Request};
+use crate::engine::Engine;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::{parse, Value};
+use crate::util::{Result, WrapErr};
+use crate::err;
+
+enum Incoming {
+    Generate { req: Request, reply: Sender<String> },
+    Stats { reply: Sender<String> },
+    Shutdown,
+}
+
+/// Construct the engine from `cfg` on THIS thread and serve it — the
+/// engine is deliberately not `Send` (PJRT handles + Rc caches), so
+/// callers that want a background server spawn a thread and call this
+/// inside it, passing only the (Send) config across.
+pub fn serve_config(cfg: crate::config::EngineConfig, addr: &str,
+                    on_bound: impl FnOnce(std::net::SocketAddr))
+                    -> Result<()> {
+    let engine = Engine::new(cfg)?;
+    serve(engine, addr, on_bound)
+}
+
+/// Serve `engine` on `addr` until a shutdown op arrives.
+/// Returns the bound local address via `on_bound` before blocking.
+pub fn serve(engine: Engine, addr: &str,
+             on_bound: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .wrap_err_with(|| format!("binding {addr}"))?;
+    let local = listener.local_addr()?;
+    on_bound(local);
+
+    let (tx, rx) = channel::<Incoming>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let next_id = Arc::new(AtomicU64::new(1));
+    let tokenizer = Arc::new(Tokenizer::byte_level(
+        engine.rt.spec().vocab_size as u32));
+
+    // accept loop
+    {
+        let tx = tx.clone();
+        let stop = Arc::clone(&stop);
+        let next_id = Arc::clone(&next_id);
+        let tok = Arc::clone(&tokenizer);
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(conn) = conn else { continue };
+                let tx = tx.clone();
+                let next_id = Arc::clone(&next_id);
+                let tok = Arc::clone(&tok);
+                std::thread::spawn(move || {
+                    let _ = handle_conn(conn, tx, next_id, tok);
+                });
+            }
+        });
+    }
+
+    coordinator_loop(engine, rx, Arc::clone(&stop), tokenizer)
+}
+
+fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
+                    stop: Arc<AtomicBool>, tok: Arc<Tokenizer>)
+                    -> Result<()> {
+    let mut coord = Coordinator::new(engine);
+    let mut replies: std::collections::HashMap<u64, Sender<String>> =
+        std::collections::HashMap::new();
+    loop {
+        // drain the inbox
+        loop {
+            match rx.try_recv() {
+                Ok(Incoming::Generate { req, reply }) => {
+                    let id = req.id;
+                    match coord.submit(req) {
+                        Ok(()) => {
+                            replies.insert(id, reply);
+                        }
+                        Err(e) => {
+                            let _ = reply.send(error_json(&e.to_string()));
+                        }
+                    }
+                }
+                Ok(Incoming::Stats { reply }) => {
+                    let _ = reply.send(stats_json(&coord));
+                }
+                Ok(Incoming::Shutdown) => {
+                    stop.store(true, Ordering::Relaxed);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    stop.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
+        }
+        if stop.load(Ordering::Relaxed) && coord.idle() {
+            return Ok(());
+        }
+        if coord.idle() {
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        coord.tick()?;
+        for fin in coord.drain_finished() {
+            if let Some(reply) = replies.remove(&fin.id) {
+                let _ = reply.send(finished_json(&fin, &tok));
+            }
+        }
+    }
+}
+
+fn handle_conn(conn: TcpStream, tx: Sender<Incoming>,
+               next_id: Arc<AtomicU64>, tok: Arc<Tokenizer>) -> Result<()> {
+    let mut writer = conn.try_clone()?;
+    let reader = BufReader::new(conn);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_line = match handle_line(&line, &tx, &next_id, &tok) {
+            Ok(Some(rx)) => match rx.recv() {
+                Ok(l) => l,
+                Err(_) => error_json("server shut down"),
+            },
+            Ok(None) => error_json("shutting down"),
+            Err(e) => error_json(&e.to_string()),
+        };
+        writer.write_all(reply_line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, tx: &Sender<Incoming>,
+               next_id: &AtomicU64, tok: &Tokenizer)
+               -> Result<Option<Receiver<String>>> {
+    let v = parse(line)?;
+    let op = v.get("op")?.as_str()?;
+    match op {
+        "generate" => {
+            let prompt: Vec<u32> = if let Some(p) = v.opt("prompt") {
+                p.as_array()?
+                    .iter()
+                    .map(|x| Ok(x.as_u64()? as u32))
+                    .collect::<Result<_>>()?
+            } else if let Some(t) = v.opt("text") {
+                tok.encode_with_bos(t.as_str()?.as_bytes())
+            } else {
+                return Err(err!("generate needs 'prompt' or 'text'"));
+            };
+            let sampling = SamplingConfig::from_json(&v)?;
+            let req = Request {
+                id: next_id.fetch_add(1, Ordering::Relaxed),
+                prompt,
+                max_new_tokens: v
+                    .opt("max_new_tokens")
+                    .map(|x| x.as_usize())
+                    .transpose()?
+                    .unwrap_or(16),
+                sampling,
+                stop_at_eos: v
+                    .opt("stop_at_eos")
+                    .map(|x| x.as_bool())
+                    .transpose()?
+                    .unwrap_or(false),
+            };
+            let (rtx, rrx) = channel();
+            tx.send(Incoming::Generate { req, reply: rtx })
+                .map_err(|_| err!("server stopped"))?;
+            Ok(Some(rrx))
+        }
+        "stats" => {
+            let (rtx, rrx) = channel();
+            tx.send(Incoming::Stats { reply: rtx })
+                .map_err(|_| err!("server stopped"))?;
+            Ok(Some(rrx))
+        }
+        "shutdown" => {
+            let _ = tx.send(Incoming::Shutdown);
+            Ok(None)
+        }
+        other => Err(err!("unknown op '{other}'")),
+    }
+}
+
+fn finished_json(fin: &Finished, tok: &Tokenizer) -> String {
+    if let Some(e) = &fin.error {
+        return error_json(e);
+    }
+    let text = String::from_utf8_lossy(&tok.decode_lossy(&fin.tokens))
+        .into_owned();
+    Value::obj(vec![
+        ("id", Value::num(fin.id as f64)),
+        ("tokens", Value::arr(
+            fin.tokens.iter().map(|&t| Value::num(t as f64)))),
+        ("text", Value::str(text)),
+        ("prompt_len", Value::num(fin.prompt_len as f64)),
+        ("ttft_ms", Value::num(fin.ttft_s * 1e3)),
+        ("total_ms", Value::num(fin.total_s * 1e3)),
+        ("preemptions", Value::num(fin.preemptions as f64)),
+        ("cached_prompt_tokens",
+         Value::num(fin.cached_prompt_tokens as f64)),
+    ])
+    .to_json()
+}
+
+fn stats_json(coord: &Coordinator) -> String {
+    let m = coord.metrics();
+    Value::obj(vec![
+        ("waiting", Value::num(coord.n_waiting() as f64)),
+        ("running", Value::num(coord.n_running() as f64)),
+        ("decode_tok_per_s", Value::num(m.decode_tokens_per_sec())),
+        ("ttft_p50_ms",
+         Value::num(m.ttft.p50().as_secs_f64() * 1e3)),
+        ("per_token_p50_ms",
+         Value::num(m.per_token.p50().as_secs_f64() * 1e3)),
+        ("summary", Value::str(m.summary())),
+    ])
+    .to_json()
+}
+
+fn error_json(msg: &str) -> String {
+    Value::obj(vec![("error", Value::str(msg))]).to_json()
+}
+
+/// Blocking line-protocol client (tests, examples, CLI).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .wrap_err_with(|| format!("connecting {addr}"))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, body: &Value) -> Result<Value> {
+        self.writer.write_all(body.to_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(&line)
+    }
+
+    pub fn generate_tokens(&mut self, prompt: &[u32], max_new: usize)
+                           -> Result<Vec<u32>> {
+        let body = Value::obj(vec![
+            ("op", Value::str("generate")),
+            ("prompt", Value::arr(
+                prompt.iter().map(|&t| Value::num(t as f64)))),
+            ("max_new_tokens", Value::num(max_new as f64)),
+        ]);
+        let v = self.request(&body)?;
+        if let Some(e) = v.opt("error") {
+            return Err(err!("server error: {}", e.as_str()?));
+        }
+        v.get("tokens")?
+            .as_array()?
+            .iter()
+            .map(|x| Ok(x.as_u64()? as u32))
+            .collect()
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.writer
+            .write_all(b"{\"op\":\"shutdown\"}\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+}

@@ -1,0 +1,272 @@
+//! Byte-level BPE-lite tokenizer — the sentencepiece stand-in
+//! (DESIGN.md §1: no LLaMA vocabulary available, so we build the
+//! substrate).
+//!
+//! Vocabulary = 256 byte tokens + specials + learned merges. `train`
+//! performs standard BPE merge learning over a corpus; `encode`/`decode`
+//! round-trip any byte string exactly. The serving stack treats token ids
+//! as opaque u32 < vocab_size; the `small`/`tiny` model vocab (512) leaves
+//! 253 merge slots.
+
+use std::collections::HashMap;
+
+use crate::util::json::{parse, Value};
+use crate::util::Result;
+use crate::ensure;
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const PAD: u32 = 258;
+pub const FIRST_MERGE: u32 = 259;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// merge i produces token FIRST_MERGE + i from (left, right).
+    merges: Vec<(u32, u32)>,
+    /// max token id + 1 this tokenizer may emit.
+    vocab_size: u32,
+    /// derived: (pair) -> merge rank; rebuilt on load.
+    merge_rank: HashMap<(u32, u32), u32>,
+}
+
+impl Tokenizer {
+    /// Byte-level tokenizer with no merges (always valid).
+    pub fn byte_level(vocab_size: u32) -> Self {
+        assert!(vocab_size >= FIRST_MERGE);
+        Tokenizer { merges: vec![], vocab_size, merge_rank: HashMap::new() }
+    }
+
+    /// Learn BPE merges from `corpus` until the vocab is full or no pair
+    /// repeats.
+    pub fn train(corpus: &[u8], vocab_size: u32) -> Self {
+        assert!(vocab_size >= FIRST_MERGE);
+        let mut toks: Vec<u32> = corpus.iter().map(|&b| b as u32).collect();
+        let mut merges = Vec::new();
+        let budget = (vocab_size - FIRST_MERGE) as usize;
+        while merges.len() < budget {
+            let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+            for w in toks.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &n)) =
+                counts.iter().max_by_key(|(p, n)| (**n, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if n < 2 {
+                break;
+            }
+            let new_id = FIRST_MERGE + merges.len() as u32;
+            merges.push(pair);
+            // apply the merge in place
+            let mut out = Vec::with_capacity(toks.len());
+            let mut i = 0;
+            while i < toks.len() {
+                if i + 1 < toks.len() && (toks[i], toks[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(toks[i]);
+                    i += 1;
+                }
+            }
+            toks = out;
+        }
+        let mut t = Tokenizer { merges, vocab_size,
+                                merge_rank: HashMap::new() };
+        t.rebuild_rank();
+        t
+    }
+
+    fn rebuild_rank(&mut self) {
+        self.merge_rank = self
+            .merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+    }
+
+    pub fn vocab_size(&self) -> u32 {
+        self.vocab_size
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode bytes to token ids (no BOS/EOS framing).
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut toks: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        // repeatedly apply the lowest-rank applicable merge (BPE order)
+        loop {
+            let mut best: Option<(u32, usize)> = None; // (rank, pos)
+            for (i, w) in toks.windows(2).enumerate() {
+                if let Some(&r) = self.merge_rank.get(&(w[0], w[1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank as usize];
+            let new_id = FIRST_MERGE + rank;
+            let mut out = Vec::with_capacity(toks.len());
+            let mut i = 0;
+            while i < toks.len() {
+                if i + 1 < toks.len() && (toks[i], toks[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(toks[i]);
+                    i += 1;
+                }
+            }
+            toks = out;
+        }
+        toks
+    }
+
+    /// Encode with BOS prefix (what the server feeds the model).
+    pub fn encode_with_bos(&self, text: &[u8]) -> Vec<u32> {
+        let mut out = vec![BOS];
+        out.extend(self.encode(text));
+        out
+    }
+
+    /// Decode token ids back to bytes. Specials are dropped; unknown ids
+    /// error.
+    pub fn decode(&self, tokens: &[u32]) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            self.expand(t, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn expand(&self, tok: u32, out: &mut Vec<u8>) -> Result<()> {
+        ensure!(tok < self.vocab_size, "token {tok} out of vocab");
+        if tok < 256 {
+            out.push(tok as u8);
+        } else if tok >= FIRST_MERGE {
+            let idx = (tok - FIRST_MERGE) as usize;
+            ensure!(idx < self.merges.len(),
+                    "token {tok} has no learned merge");
+            let (l, r) = self.merges[idx];
+            self.expand(l, out)?;
+            self.expand(r, out)?;
+        } // BOS/EOS/PAD: silently dropped
+        Ok(())
+    }
+
+    /// Decode, replacing undecodable ids (model vocab beyond the learned
+    /// merges — possible with randomly initialized models) with '?'.
+    pub fn decode_lossy(&self, tokens: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            if self.expand(t, &mut out).is_err() {
+                out.push(b'?');
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("vocab_size", Value::num(self.vocab_size as f64)),
+            ("merges", Value::arr(self.merges.iter().map(|&(l, r)| {
+                Value::arr([Value::num(l as f64), Value::num(r as f64)])
+            }))),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let vocab_size = v.get("vocab_size")?.as_u64()? as u32;
+        let mut merges = Vec::new();
+        for pair in v.get("merges")?.as_array()? {
+            let pair = pair.as_array()?;
+            ensure!(pair.len() == 2, "merge pair must have 2 entries");
+            merges.push((pair[0].as_u64()? as u32, pair[1].as_u64()? as u32));
+        }
+        let mut t = Tokenizer { merges, vocab_size,
+                                merge_rank: HashMap::new() };
+        t.rebuild_rank();
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_json())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Tokenizer::byte_level(512);
+        let text = b"hello, paged attention! \xF0\x9F\x8E\x89";
+        let ids = t.encode(text);
+        assert_eq!(ids.len(), text.len());
+        assert_eq!(t.decode(&ids).unwrap(), text);
+    }
+
+    #[test]
+    fn trained_roundtrip_and_compression() {
+        let corpus = b"the quick brown fox jumps over the lazy dog. \
+                       the quick brown fox jumps over the lazy dog. \
+                       the quick brown fox.".repeat(8);
+        let t = Tokenizer::train(&corpus, 512);
+        assert!(t.n_merges() > 0);
+        let ids = t.encode(&corpus);
+        assert!(ids.len() < corpus.len(), "no compression learned");
+        assert_eq!(t.decode(&ids).unwrap(), corpus);
+        // unseen text still round-trips
+        let other = b"completely different bytes 123";
+        assert_eq!(t.decode(&t.encode(other)).unwrap(), other);
+    }
+
+    #[test]
+    fn all_ids_below_vocab() {
+        let corpus = b"aaaaabbbbbaaaaabbbbb".repeat(50);
+        let t = Tokenizer::train(&corpus, 300);
+        for id in t.encode(&corpus) {
+            assert!(id < 300);
+        }
+    }
+
+    #[test]
+    fn bos_framing_and_specials_dropped() {
+        let t = Tokenizer::byte_level(512);
+        let ids = t.encode_with_bos(b"hi");
+        assert_eq!(ids[0], BOS);
+        let ids2 = [BOS, b'h' as u32, EOS, b'i' as u32, PAD];
+        assert_eq!(t.decode(&ids2).unwrap(), b"hi");
+    }
+
+    #[test]
+    fn save_load_preserves_encoding() {
+        let corpus = b"abcabcabcabc".repeat(20);
+        let t = Tokenizer::train(&corpus, 280);
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("tok_{}.json", std::process::id()));
+        t.save(&p).unwrap();
+        let t2 = Tokenizer::load(&p).unwrap();
+        assert_eq!(t.encode(&corpus), t2.encode(&corpus));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn out_of_vocab_token_errors() {
+        let t = Tokenizer::byte_level(300);
+        assert!(t.decode(&[255]).is_ok());
+        assert!(t.decode(&[299]).is_err(), "no merge learned for 299");
+        assert!(t.decode(&[300]).is_err(), "beyond vocab");
+    }
+}

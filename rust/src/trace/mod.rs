@@ -1,0 +1,293 @@
+//! Workload generators for the paper's three evaluation scenarios
+//! (Sec. IV-A) plus Poisson arrivals for server-level benches.
+//!
+//! All generators are seeded and deterministic (no external trace data —
+//! DESIGN.md §1): mixed batches draw uniform lengths from the paper's
+//! {500, 1000, ..., 8000} grid (scaled to the model's max context),
+//! chat growth extends 1 k → 32 k in doublings (scaled), and the single
+//! long sequence decodes until a token budget.
+
+/// Minimal deterministic PRNG (xoshiro256**): no rand dependency on the
+/// request path, stable across platforms for reproducible traces.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn seeded(seed: u64) -> Self {
+        // splitmix64 expansion of the seed
+        let mut x = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut next = || {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential with rate lambda (Poisson inter-arrival).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Zipf-ish token id in [0, vocab): heavy head like natural text.
+    pub fn zipf_token(&mut self, vocab: u32) -> u32 {
+        let u = self.f64().max(1e-12);
+        let r = (vocab as f64).powf(u) - 1.0;
+        (r as u32).min(vocab - 1)
+    }
+}
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival offset from trace start, in microseconds.
+    pub arrival_us: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+/// Synthetic corpus: Zipf tokens with injected repeated n-grams so prefix
+/// caching and perplexity tests see realistic redundancy.
+pub fn synthetic_corpus(rng: &mut Rng, len: usize, vocab: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(len);
+    let motif: Vec<u32> = (0..16).map(|_| rng.zipf_token(vocab)).collect();
+    while out.len() < len {
+        if rng.below(4) == 0 {
+            // repeat the motif (shared n-gram structure)
+            out.extend_from_slice(&motif);
+        } else {
+            let burst = 8 + rng.below(24) as usize;
+            for _ in 0..burst {
+                out.push(rng.zipf_token(vocab));
+            }
+        }
+    }
+    out.truncate(len);
+    out
+}
+
+/// Scenario (a): one long sequence — short prompt, decode to the budget.
+pub fn single_sequence(seed: u64, vocab: u32, prompt_len: usize,
+                       total_tokens: usize) -> TraceRequest {
+    let mut rng = Rng::seeded(seed);
+    TraceRequest {
+        id: 0,
+        arrival_us: 0,
+        prompt: synthetic_corpus(&mut rng, prompt_len, vocab),
+        max_new_tokens: total_tokens.saturating_sub(prompt_len),
+    }
+}
+
+/// Scenario (b): mixed-length batch — n concurrent prompts, lengths
+/// uniform on the grid {step, 2*step, ..., max_len} (paper: 500..8000).
+pub fn mixed_batch(seed: u64, vocab: u32, n: usize, step: usize,
+                   max_len: usize, max_new: usize) -> Vec<TraceRequest> {
+    let mut rng = Rng::seeded(seed);
+    let grid: Vec<usize> = (1..)
+        .map(|i| i * step)
+        .take_while(|&l| l <= max_len)
+        .collect();
+    (0..n)
+        .map(|i| {
+            let len = grid[rng.below(grid.len() as u64) as usize];
+            TraceRequest {
+                id: i as u64,
+                arrival_us: 0, // all concurrent
+                prompt: synthetic_corpus(&mut rng, len, vocab),
+                max_new_tokens: max_new,
+            }
+        })
+        .collect()
+}
+
+/// Scenario (c): chat growth — one conversation whose context doubles
+/// from `start` to `end` tokens; each turn appends half the context and
+/// decodes a short reply. Returned as (turn extensions, reply tokens).
+pub fn chat_growth_turns(seed: u64, vocab: u32, start: usize, end: usize,
+                         reply_tokens: usize)
+                         -> Vec<(Vec<u32>, usize)> {
+    let mut rng = Rng::seeded(seed);
+    let mut turns = Vec::new();
+    let mut ctx = 0usize;
+    let mut target = start;
+    while target <= end {
+        let extend = target - ctx;
+        turns.push((synthetic_corpus(&mut rng, extend, vocab),
+                    reply_tokens));
+        ctx = target + reply_tokens;
+        target *= 2;
+    }
+    turns
+}
+
+/// Open-loop Poisson arrivals at `rate_per_sec` over `duration_sec`, with
+/// mixed-grid lengths (server saturation benches).
+pub fn poisson_trace(seed: u64, vocab: u32, rate_per_sec: f64,
+                     duration_sec: f64, step: usize, max_len: usize,
+                     max_new: usize) -> Vec<TraceRequest> {
+    let mut rng = Rng::seeded(seed);
+    let grid: Vec<usize> = (1..)
+        .map(|i| i * step)
+        .take_while(|&l| l <= max_len)
+        .collect();
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    loop {
+        t += rng.exp(rate_per_sec);
+        if t > duration_sec {
+            break;
+        }
+        let len = grid[rng.below(grid.len() as u64) as usize];
+        out.push(TraceRequest {
+            id,
+            arrival_us: (t * 1e6) as u64,
+            prompt: synthetic_corpus(&mut rng, len, vocab),
+            max_new_tokens: max_new,
+        });
+        id += 1;
+    }
+    out
+}
+
+/// Requests sharing a common system-prompt prefix (prefix-cache benches).
+pub fn shared_prefix_batch(seed: u64, vocab: u32, n: usize,
+                           prefix_len: usize, suffix_len: usize,
+                           max_new: usize) -> Vec<TraceRequest> {
+    let mut rng = Rng::seeded(seed);
+    let prefix = synthetic_corpus(&mut rng, prefix_len, vocab);
+    (0..n)
+        .map(|i| {
+            let mut prompt = prefix.clone();
+            prompt.extend(synthetic_corpus(&mut rng, suffix_len, vocab));
+            TraceRequest {
+                id: i as u64,
+                arrival_us: 0,
+                prompt,
+                max_new_tokens: max_new,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic_and_uniform_ish() {
+        let mut a = Rng::seeded(7);
+        let mut b = Rng::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut counts = [0usize; 8];
+        for _ in 0..8000 {
+            counts[a.below(8) as usize] += 1;
+        }
+        for c in counts {
+            assert!((700..1300).contains(&c), "skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn zipf_tokens_favor_small_ids() {
+        let mut rng = Rng::seeded(3);
+        let small = (0..10_000)
+            .filter(|_| rng.zipf_token(512) < 64)
+            .count();
+        assert!(small > 5_000, "head not heavy: {small}");
+    }
+
+    #[test]
+    fn corpus_has_repeats_and_exact_len() {
+        let mut rng = Rng::seeded(1);
+        let c = synthetic_corpus(&mut rng, 500, 512);
+        assert_eq!(c.len(), 500);
+        assert!(c.iter().all(|&t| t < 512));
+    }
+
+    #[test]
+    fn mixed_batch_respects_grid() {
+        let reqs = mixed_batch(5, 512, 16, 500, 8000, 32);
+        assert_eq!(reqs.len(), 16);
+        for r in &reqs {
+            assert_eq!(r.prompt.len() % 500, 0);
+            assert!(r.prompt.len() >= 500 && r.prompt.len() <= 8000);
+        }
+        // deterministic
+        let again = mixed_batch(5, 512, 16, 500, 8000, 32);
+        assert_eq!(reqs[7].prompt, again[7].prompt);
+    }
+
+    #[test]
+    fn chat_growth_doubles() {
+        let turns = chat_growth_turns(2, 512, 1024, 32 * 1024, 16);
+        // 1k, 2k, 4k, 8k, 16k, 32k = 6 turns
+        assert_eq!(turns.len(), 6);
+        let mut ctx = 0;
+        let mut target = 1024;
+        for (ext, _) in &turns {
+            assert_eq!(ext.len(), target - ctx);
+            ctx = target + 16;
+            target *= 2;
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_sorted_and_rate_sane() {
+        let tr = poisson_trace(9, 512, 100.0, 2.0, 100, 400, 8);
+        assert!(tr.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        // E[n] = 200; allow wide tolerance
+        assert!(tr.len() > 120 && tr.len() < 300, "n={}", tr.len());
+    }
+
+    #[test]
+    fn shared_prefix_batch_shares_exactly_prefix() {
+        let reqs = shared_prefix_batch(4, 512, 4, 64, 32, 8);
+        for r in &reqs {
+            assert_eq!(&r.prompt[..64], &reqs[0].prompt[..64]);
+            assert_eq!(r.prompt.len(), 96);
+        }
+        assert_ne!(reqs[0].prompt[64..], reqs[1].prompt[64..]);
+    }
+}

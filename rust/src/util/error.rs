@@ -1,0 +1,157 @@
+//! Minimal error type + context helpers (the crate builds offline with no
+//! error-handling dependency; this is the eyre-shaped subset we need).
+
+use std::fmt;
+
+/// String-backed error with a context chain.
+#[derive(Debug)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // outermost context first, root cause last
+        for (i, c) in self.chain.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::msg(format!("xla: {e}"))
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to any `Result` whose error can display itself.
+pub trait WrapErr<T> {
+    fn wrap_err(self, ctx: impl fmt::Display) -> Result<T>;
+    fn wrap_err_with<C: fmt::Display>(self, f: impl FnOnce() -> C)
+                                      -> Result<T>;
+}
+
+impl<T, E: fmt::Display> WrapErr<T> for std::result::Result<T, E> {
+    fn wrap_err(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn wrap_err_with<C: fmt::Display>(self, f: impl FnOnce() -> C)
+                                      -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> WrapErr<T> for Option<T> {
+    fn wrap_err(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn wrap_err_with<C: fmt::Display>(self, f: impl FnOnce() -> C)
+                                      -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `err!(...)` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!(...)` — early-return an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — bail unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inner() -> Result<()> {
+        Err(err!("root cause {}", 42))
+    }
+
+    #[test]
+    fn context_chain_formats_outside_in() {
+        let e = inner().wrap_err("loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest: root cause 42");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(),
+                   "x must be positive, got -1");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let r: Result<String> =
+            std::fs::read_to_string("/nonexistent/x").map_err(Into::into);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn option_wrap_err() {
+        let v: Option<u32> = None;
+        assert_eq!(v.wrap_err("missing field").unwrap_err().to_string(),
+                   "missing field");
+    }
+}

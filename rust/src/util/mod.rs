@@ -1,0 +1,12 @@
+//! In-tree substrates: error handling ([`error`]) and JSON ([`json`]).
+//!
+//! The build is fully offline against the image's vendored crate set
+//! (the `xla` closure only), so the usual ecosystem crates are written
+//! here instead — see DESIGN.md §1.
+
+pub mod error;
+pub mod json;
+pub mod profile;
+
+pub use error::{Error, Result, WrapErr};
+pub use json::Value;

@@ -1,0 +1,110 @@
+//! Phase profiler for the decode hot path (§Perf in EXPERIMENTS.md).
+//!
+//! Zero-dependency, always-on atomics (a few ns per record); `dump()`
+//! renders the per-phase breakdown. The engine brackets each hot-path
+//! phase so the optimization loop can see where a decode step actually
+//! goes: subpool gather, host→device upload + execute + download,
+//! Rust-side ASSIGN scatter, and everything else.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// memcpy of referenced pages into the dense window
+    SubpoolGather = 0,
+    /// buffer_from_host uploads of all step inputs
+    Upload = 1,
+    /// PJRT execute_b
+    Execute = 2,
+    /// tuple literal download + split + to_vec
+    Download = 3,
+    /// ASSIGN scatter of new KV into the host pool
+    Scatter = 4,
+}
+
+const N: usize = 5;
+const NAMES: [&str; N] =
+    ["subpool_gather", "upload", "execute", "download", "scatter"];
+
+static NANOS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
+static COUNTS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
+
+pub struct Span {
+    phase: Phase,
+    start: Instant,
+}
+
+#[inline]
+pub fn span(phase: Phase) -> Span {
+    Span { phase, start: Instant::now() }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let i = self.phase as usize;
+        NANOS[i].fetch_add(self.start.elapsed().as_nanos() as u64,
+                           Ordering::Relaxed);
+        COUNTS[i].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+pub fn reset() {
+    for i in 0..N {
+        NANOS[i].store(0, Ordering::Relaxed);
+        COUNTS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// (name, total_ms, calls) per phase.
+pub fn snapshot() -> Vec<(&'static str, f64, u64)> {
+    (0..N)
+        .map(|i| {
+            (NAMES[i],
+             NANOS[i].load(Ordering::Relaxed) as f64 / 1e6,
+             COUNTS[i].load(Ordering::Relaxed))
+        })
+        .collect()
+}
+
+pub fn dump() -> String {
+    let snap = snapshot();
+    let total: f64 = snap.iter().map(|(_, ms, _)| ms).sum();
+    let mut out = format!("hot-path phase breakdown (total {total:.1} ms):\n");
+    for (name, ms, calls) in snap {
+        if calls == 0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "  {name:<16} {ms:>9.1} ms  {:>5.1}%  ({calls} calls, \
+             {:.3} ms/call)\n",
+            100.0 * ms / total.max(1e-9),
+            ms / calls as f64
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate() {
+        reset();
+        {
+            let _s = span(Phase::Execute);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        {
+            let _s = span(Phase::Scatter);
+        }
+        let snap = snapshot();
+        let exec = snap.iter().find(|(n, _, _)| *n == "execute").unwrap();
+        assert!(exec.1 >= 2.0);
+        assert_eq!(exec.2, 1);
+        assert!(dump().contains("execute"));
+        reset();
+        assert_eq!(snapshot()[2].2, 0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Engine-level integration over real tiny artifacts (skip if absent).
+//!
+//! The centrepiece is cross-path numerical equivalence: the SAME prompt
+//! greedily decoded through the paged, contiguous, and no-cache paths
+//! must produce the SAME tokens — the Rust-level analog of the paper's
+//! perplexity-equivalence claim (Sec. IV-B.3), now covering the page
+//! manager, subpool gather/remap, scatter, and all three artifact
+//! families at once.
+
+use std::path::{Path, PathBuf};
+
+use paged_flex::config::{AttentionMode, EngineConfig, SamplingConfig};
+use paged_flex::engine::{Engine, Sampler};
+use paged_flex::trace::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn cfg(mode: AttentionMode, dir: &Path) -> EngineConfig {
+    let mut c = EngineConfig::default();
+    c.model = "tiny".into();
+    c.artifacts_dir = dir.to_path_buf();
+    c.attention = mode;
+    c.scheduler.prefill_chunk = 32;
+    c
+}
+
+fn prompt(seed: u64, len: usize) -> Vec<u32> {
+    let mut rng = Rng::seeded(seed);
+    (0..len).map(|_| rng.below(512) as u32).collect()
+}
+
+fn greedy_generate(mode: AttentionMode, dir: &Path, p: &[u32],
+                   n: usize) -> Vec<u32> {
+    let mut eng = Engine::new(cfg(mode, dir)).unwrap();
+    let mut s = Sampler::new(SamplingConfig::greedy());
+    eng.generate(p, n, &mut s).unwrap()
+}
+
+#[test]
+fn all_three_paths_generate_identical_tokens() {
+    let Some(dir) = artifacts() else { return };
+    let p = prompt(42, 30);
+    let paged = greedy_generate(AttentionMode::Paged, &dir, &p, 12);
+    let contig = greedy_generate(AttentionMode::Contiguous, &dir, &p, 12);
+    let nocache = greedy_generate(AttentionMode::NoCache, &dir, &p, 12);
+    assert_eq!(paged, contig,
+               "paged vs contiguous diverged: the paper's numerical-\
+                equivalence claim fails at the Rust level");
+    assert_eq!(paged, nocache, "paged vs full-recompute diverged");
+}
+
+#[test]
+fn chunked_prefill_equals_one_shot() {
+    let Some(dir) = artifacts() else { return };
+    let p = prompt(7, 50);
+    // chunk 16 forces 4 chunks; chunk 64 does it in one
+    let mut c1 = cfg(AttentionMode::Paged, &dir);
+    c1.scheduler.prefill_chunk = 16;
+    let mut c2 = cfg(AttentionMode::Paged, &dir);
+    c2.scheduler.prefill_chunk = 64;
+    let mut out = vec![];
+    for c in [c1, c2] {
+        let mut eng = Engine::new(c).unwrap();
+        let mut s = Sampler::new(SamplingConfig::greedy());
+        out.push(eng.generate(&p, 8, &mut s).unwrap());
+    }
+    assert_eq!(out[0], out[1], "chunked prefill changed the numbers");
+}
+
+#[test]
+fn batched_decode_matches_single() {
+    let Some(dir) = artifacts() else { return };
+    let p1 = prompt(1, 20);
+    let p2 = prompt(2, 33);
+
+    // singles
+    let s1 = greedy_generate(AttentionMode::Paged, &dir, &p1, 6);
+    let s2 = greedy_generate(AttentionMode::Paged, &dir, &p2, 6);
+
+    // batched through the same engine (batch bucket b=2)
+    let mut eng = Engine::new(cfg(AttentionMode::Paged, &dir)).unwrap();
+    let (a, b) = (eng.fresh_seq_id(), eng.fresh_seq_id());
+    let pe = eng.paged.as_mut().unwrap();
+    pe.admit(a, &p1).unwrap();
+    pe.admit(b, &p2).unwrap();
+    let mut logits = std::collections::HashMap::new();
+    loop {
+        let pending: Vec<_> = [a, b]
+            .iter()
+            .copied()
+            .filter(|id| pe.seq(*id).unwrap().remaining_prefill() > 0)
+            .collect();
+        if pending.is_empty() {
+            break;
+        }
+        for (id, done, row) in
+            pe.prefill_chunk(&eng.rt, &pending, 64).unwrap()
+        {
+            if done {
+                logits.insert(id, row);
+            }
+        }
+    }
+    let mut got1 = vec![];
+    let mut got2 = vec![];
+    for _ in 0..6 {
+        let t1 = paged_flex::engine::argmax(&logits[&a]);
+        let t2 = paged_flex::engine::argmax(&logits[&b]);
+        got1.push(t1);
+        got2.push(t2);
+        for (id, row) in
+            pe.decode_step(&eng.rt, &[a, b], &[t1, t2]).unwrap()
+        {
+            logits.insert(id, row);
+        }
+    }
+    assert_eq!(got1, s1, "seq 1 diverged under batching");
+    assert_eq!(got2, s2, "seq 2 diverged under batching");
+}
+
+#[test]
+fn prefix_cache_reuse_preserves_output() {
+    let Some(dir) = artifacts() else { return };
+    let p = prompt(9, 32); // 4 full pages at page_size 8
+    let mut eng = Engine::new(cfg(AttentionMode::Paged, &dir)).unwrap();
+    let mut s = Sampler::new(SamplingConfig::greedy());
+    let first = eng.generate(&p, 6, &mut s).unwrap();
+    // second identical request: served from cached prefix pages
+    let hits_before = eng.paged.as_ref().unwrap().mgr.prefix_cache_len();
+    assert!(hits_before == 0,
+            "pages were freed with the sequence, cache must be empty");
+    let mut s = Sampler::new(SamplingConfig::greedy());
+    let second = eng.generate(&p, 6, &mut s).unwrap();
+    assert_eq!(first, second, "second request changed the output");
+}
+
+#[test]
+fn preemption_recompute_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let p = prompt(5, 24);
+    let mut eng = Engine::new(cfg(AttentionMode::Paged, &dir)).unwrap();
+    let id = eng.fresh_seq_id();
+    let pe = eng.paged.as_mut().unwrap();
+    pe.admit(id, &p).unwrap();
+    let out = pe.prefill_chunk(&eng.rt, &[id], 64).unwrap();
+    assert!(out[0].1, "prefill finished");
+    let free_after_admit = pe.mgr.allocator().free_pages();
+
+    // preempt: pages return to the pool, tokens survive
+    let tokens = pe.preempt(id).unwrap();
+    assert_eq!(tokens, p);
+    assert!(pe.mgr.allocator().free_pages() > free_after_admit);
+
+    // re-admit + re-prefill gives the same logits (recompute semantics)
+    let id2 = 999;
+    pe.admit(id2, &tokens).unwrap();
+    let out2 = pe.prefill_chunk(&eng.rt, &[id2], 64).unwrap();
+    assert_eq!(out[0].2, out2[0].2, "recompute changed the logits");
+}
+
+#[test]
+fn memory_audit_tracks_a_generation() {
+    let Some(dir) = artifacts() else { return };
+    let p = prompt(3, 20);
+    let mut eng = Engine::new(cfg(AttentionMode::Paged, &dir)).unwrap();
+    let mut s = Sampler::new(SamplingConfig::greedy());
+    eng.generate(&p, 8, &mut s).unwrap();
+    let audit = eng.paged.as_ref().unwrap().mgr.allocator().audit();
+    assert_eq!(audit.reserved_bytes(), 0, "release leaked reservations");
+    assert_eq!(audit.live_bytes(), 0);
+    assert!(audit.peak_reserved_bytes() > 0);
+    // 28 tokens at page 8 -> 4 pages -> peak >= 4 pages of KV bytes
+    let kv_per_page = 8 * eng.rt.spec().kv_bytes_per_token as u64;
+    assert!(audit.peak_reserved_bytes() >= 4 * kv_per_page);
+}

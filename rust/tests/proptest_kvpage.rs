@@ -1,0 +1,254 @@
+//! Randomized property tests over the page-manager state machine.
+//!
+//! No proptest crate offline, so this drives the invariants with an
+//! in-tree PRNG across many seeds: thousands of random RESERVE / APPEND /
+//! FORK / FREE interleavings, with full-state invariant checks after
+//! every step. Failures print the seed + step for replay.
+//!
+//! Invariants (DESIGN.md §6):
+//!  I1  page conservation: free + referenced-by-tables == capacity
+//!  I2  no page appears in two tables unless its refcount covers it
+//!  I3  every table's mapped capacity covers its live tokens
+//!  I4  audit: reserved bytes == physically-held pages × page bytes
+//!  I5  after all FREEs, the pool is fully free and audit is zero
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use paged_flex::kvpage::{
+    AllocError, GrowthPolicy, PageAllocator, PageManager,
+};
+use paged_flex::trace::Rng;
+
+const N_PAGES: u32 = 48;
+const PAGE_SIZE: usize = 8;
+const BYTES_PER_TOKEN: u64 = 16;
+const MAX_BLOCKS: usize = 12;
+
+struct Harness {
+    mgr: PageManager,
+    live: Vec<u64>,
+    next_id: u64,
+    rng: Rng,
+}
+
+impl Harness {
+    fn new(seed: u64, policy: GrowthPolicy) -> Self {
+        let alloc = Arc::new(PageAllocator::new(
+            N_PAGES, PAGE_SIZE, BYTES_PER_TOKEN, policy));
+        Harness {
+            mgr: PageManager::new(alloc, MAX_BLOCKS),
+            live: vec![],
+            next_id: 1,
+            rng: Rng::seeded(seed),
+        }
+    }
+
+    fn random_prompt(&mut self) -> Vec<u32> {
+        let len = 1 + self.rng.below(60) as usize;
+        (0..len).map(|_| self.rng.below(512) as u32).collect()
+    }
+
+    fn step(&mut self, ctx: &str) {
+        match self.rng.below(10) {
+            // RESERVE (40%)
+            0..=3 => {
+                let id = self.next_id;
+                let prompt = self.random_prompt();
+                match self.mgr.reserve(id, &prompt) {
+                    Ok(out) => {
+                        self.next_id += 1;
+                        self.live.push(id);
+                        let fresh = prompt.len() - out.cached_tokens;
+                        self.mgr.note_assigned(id, fresh).unwrap();
+                        // register some prefixes to stir sharing
+                        if self.rng.below(2) == 0 {
+                            self.mgr.register_prefix(id, &prompt).unwrap();
+                        }
+                    }
+                    Err(AllocError::PoolExhausted { .. })
+                    | Err(AllocError::CapacityExceeded { .. }) => {}
+                    Err(e) => panic!("{ctx}: reserve failed oddly: {e}"),
+                }
+            }
+            // APPEND (30%)
+            4..=6 => {
+                if let Some(&id) = pick(&mut self.rng, &self.live) {
+                    let extra = 1 + self.rng.below(12) as usize;
+                    match self.mgr.prepare_append(id, extra) {
+                        Ok(_) => self.mgr.note_assigned(id, extra).unwrap(),
+                        Err(AllocError::PoolExhausted { .. })
+                        | Err(AllocError::CapacityExceeded { .. }) => {}
+                        Err(e) => panic!("{ctx}: append failed oddly: {e}"),
+                    }
+                }
+            }
+            // FORK (10%)
+            7 => {
+                if let Some(&parent) = pick(&mut self.rng, &self.live) {
+                    let plen = self.mgr.seq_len(parent).unwrap();
+                    if plen == 0 {
+                        return;
+                    }
+                    let at = 1 + self.rng.below(plen as u64) as usize;
+                    let child = self.next_id;
+                    match self.mgr.fork(parent, child, at) {
+                        Ok(_) => {
+                            self.next_id += 1;
+                            self.live.push(child);
+                        }
+                        Err(AllocError::PoolExhausted { .. }) => {}
+                        Err(e) => panic!("{ctx}: fork failed oddly: {e}"),
+                    }
+                }
+            }
+            // FREE (20%)
+            _ => {
+                if !self.live.is_empty() {
+                    let i = self.rng.below(self.live.len() as u64) as usize;
+                    let id = self.live.swap_remove(i);
+                    self.mgr.free(id).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Check I1-I4.
+    fn check(&self, ctx: &str) {
+        let alloc = self.mgr.allocator();
+        // gather per-page reference counts implied by tables
+        let mut held: HashMap<u32, u32> = HashMap::new();
+        for &id in &self.live {
+            let t = self.mgr.table(id).unwrap();
+            assert!(t.len_tokens() <= t.capacity_tokens(),
+                    "{ctx}: I3 violated for seq {id}");
+            assert!(t.n_blocks() <= MAX_BLOCKS, "{ctx}: block cap");
+            for &p in t.pages() {
+                *held.entry(p).or_insert(0) += 1;
+            }
+        }
+        // I2: implied refs never exceed the allocator's refcount
+        for (&p, &n) in &held {
+            assert!(alloc.refcount(p) >= n,
+                    "{ctx}: I2 page {p}: {n} holders > rc {}",
+                    alloc.refcount(p));
+        }
+        // I1: free + distinct-held == capacity
+        assert_eq!(alloc.free_pages() + held.len(), N_PAGES as usize,
+                   "{ctx}: I1 conservation");
+        // I4: reserved bytes track physically held pages
+        let page_bytes = PAGE_SIZE as u64 * BYTES_PER_TOKEN;
+        assert_eq!(alloc.audit().reserved_bytes(),
+                   held.len() as u64 * page_bytes,
+                   "{ctx}: I4 reserved-bytes accounting");
+    }
+
+    fn drain(&mut self, ctx: &str) {
+        for id in std::mem::take(&mut self.live) {
+            self.mgr.free(id).unwrap();
+        }
+        let alloc = self.mgr.allocator();
+        assert_eq!(alloc.free_pages(), N_PAGES as usize, "{ctx}: I5 free");
+        assert_eq!(alloc.audit().reserved_bytes(), 0, "{ctx}: I5 reserved");
+        assert_eq!(alloc.audit().live_bytes(), 0, "{ctx}: I5 live");
+    }
+}
+
+fn pick<'a>(rng: &mut Rng, xs: &'a [u64]) -> Option<&'a u64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(&xs[rng.below(xs.len() as u64) as usize])
+    }
+}
+
+#[test]
+fn random_interleavings_exact_policy() {
+    for seed in 0..40u64 {
+        let mut h = Harness::new(seed, GrowthPolicy::Exact);
+        for step in 0..400 {
+            let ctx = format!("seed {seed} step {step} (exact)");
+            h.step(&ctx);
+            h.check(&ctx);
+        }
+        h.drain(&format!("seed {seed} drain (exact)"));
+    }
+}
+
+#[test]
+fn random_interleavings_pow2_policy() {
+    for seed in 100..130u64 {
+        let mut h = Harness::new(seed, GrowthPolicy::PowerOfTwo);
+        for step in 0..400 {
+            let ctx = format!("seed {seed} step {step} (pow2)");
+            h.step(&ctx);
+            h.check(&ctx);
+        }
+        h.drain(&format!("seed {seed} drain (pow2)"));
+    }
+}
+
+#[test]
+fn exhaustion_recovery_cycles() {
+    // fill the pool, free everything, repeat — byte accounting must not
+    // drift across cycles.
+    let mut h = Harness::new(77, GrowthPolicy::Exact);
+    for cycle in 0..20 {
+        let ctx = format!("cycle {cycle}");
+        loop {
+            let id = h.next_id;
+            let prompt: Vec<u32> = (0..40).collect();
+            match h.mgr.reserve(id, &prompt) {
+                Ok(_) => {
+                    h.next_id += 1;
+                    h.live.push(id);
+                    h.mgr.note_assigned(id, 40).unwrap();
+                }
+                Err(_) => break,
+            }
+        }
+        assert!(h.mgr.allocator().free_pages() < 5, "{ctx}: pool filled");
+        h.check(&ctx);
+        h.drain(&ctx);
+    }
+}
+
+#[test]
+fn freelist_concurrent_with_manager_reads() {
+    // The allocator must stay consistent when hammered from threads while
+    // page counts are being read (the lock-free claim, Sec. II-B gap 3).
+    let alloc = Arc::new(PageAllocator::new(
+        256, 8, 16, GrowthPolicy::Exact));
+    let mut handles = vec![];
+    for t in 0..4u64 {
+        let a = Arc::clone(&alloc);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seeded(t);
+            let mut held: Vec<Vec<u32>> = vec![];
+            for _ in 0..5_000 {
+                if rng.below(2) == 0 || held.is_empty() {
+                    if let Some(pages) =
+                        a.alloc_pages(1 + rng.below(4) as usize)
+                    {
+                        held.push(pages);
+                    }
+                } else {
+                    let i = rng.below(held.len() as u64) as usize;
+                    for p in held.swap_remove(i) {
+                        a.release_page(p, 8);
+                    }
+                }
+            }
+            for pages in held {
+                for p in pages {
+                    a.release_page(p, 8);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(alloc.free_pages(), 256);
+    assert_eq!(alloc.audit().reserved_bytes(), 0);
+}

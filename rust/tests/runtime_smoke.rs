@@ -1,0 +1,104 @@
+//! Runtime ⇄ artifact bridge smoke tests (need `make artifacts` first;
+//! every test no-ops gracefully on a fresh checkout).
+//!
+//! Verifies the full AOT path end to end: HLO text loads, PJRT compiles,
+//! device-resident weights bind, tuple outputs split, and two
+//! *independent* executables (nocache vs full-logits) agree numerically —
+//! the Rust-level half of the paper's numerical-equivalence claim.
+
+use std::path::{Path, PathBuf};
+
+use paged_flex::runtime::{HostTensor, Runtime};
+use paged_flex::trace::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn prompt_tokens(rng: &mut Rng, n: usize, vocab: u32) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+#[test]
+fn nocache_matches_full_logits_row() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir, "tiny").unwrap();
+    let vocab = rt.spec().vocab_size;
+
+    let mut rng = Rng::seeded(11);
+    let toks = prompt_tokens(&mut rng, 64, vocab as u32);
+    let seq_len = 40usize; // live prefix; rest is padding
+
+    let t_tokens = HostTensor::i32(toks.clone(), vec![1, 64]);
+    let t_lens = HostTensor::scalar_i32_vec(&[seq_len as i32]);
+
+    let out = rt
+        .run("nocache_s64", &[t_tokens.clone(), t_lens.clone()])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let nocache_logits = out[0].as_f32().unwrap().to_vec();
+    assert_eq!(nocache_logits.len(), vocab);
+
+    let out = rt.run("logits_s64", &[t_tokens, t_lens]).unwrap();
+    let full = out[0].as_f32().unwrap();
+    assert_eq!(full.len(), 64 * vocab);
+    let row = &full[(seq_len - 1) * vocab..seq_len * vocab];
+
+    let max_err = nocache_logits
+        .iter()
+        .zip(row)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < 2e-3, "nocache vs logits row: max err {max_err}");
+    // and the logits are non-degenerate
+    let spread = nocache_logits.iter().fold(f32::MIN, |m, &x| m.max(x))
+        - nocache_logits.iter().fold(f32::MAX, |m, &x| m.min(x));
+    assert!(spread > 0.1, "degenerate logits, spread {spread}");
+}
+
+#[test]
+fn run_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir, "tiny").unwrap();
+    let vocab = rt.spec().vocab_size;
+    let mut rng = Rng::seeded(3);
+    let toks = prompt_tokens(&mut rng, 64, vocab as u32);
+    let inputs = [
+        HostTensor::i32(toks, vec![1, 64]),
+        HostTensor::scalar_i32_vec(&[64]),
+    ];
+    let a = rt.run("nocache_s64", &inputs).unwrap();
+    let b = rt.run("nocache_s64", &inputs).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir, "tiny").unwrap();
+    let bad = [
+        HostTensor::i32(vec![0; 32], vec![1, 32]), // wrong seq len
+        HostTensor::scalar_i32_vec(&[32]),
+    ];
+    let err = rt.run("nocache_s64", &bad).unwrap_err().to_string();
+    assert!(err.contains("shape"), "got: {err}");
+    let err = rt.run("bogus_artifact", &[]).unwrap_err().to_string();
+    assert!(err.contains("unknown artifact"), "got: {err}");
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir, "tiny").unwrap();
+    rt.executable("logits_s64").unwrap();
+    rt.executable("logits_s64").unwrap();
+    assert_eq!(
+        rt.compile_log()
+            .iter()
+            .filter(|(n, _)| n == "logits_s64")
+            .count(),
+        1,
+        "second request must hit the cache"
+    );
+}
