@@ -20,7 +20,7 @@ fn main() {
     print_table(
         &format!("Fig.4: decode ms/token ±1σ, paged vs default, \
                   model={model}"),
-        &["seq", "paged_ms", "±σ", "default_ms", "±σ"],
+        &["seq", "paged_ms", "±σ", "default_ms", "±σ", "win_KB/step"],
         &rows
             .iter()
             .map(|r| vec![
@@ -29,9 +29,21 @@ fn main() {
                 f(r.paged_ms_std, 2),
                 f(r.default_ms_mean, 2),
                 f(r.default_ms_std, 2),
+                f(r.paged_bytes_per_step / 1e3, 1),
             ])
             .collect::<Vec<_>>(),
     );
+    // transfer-volume regression guard: the delta path keeps the
+    // host-side gather memcpy roughly flat in context length; a full
+    // re-gather grows it linearly (benches/window_delta.rs isolates the
+    // comparison; the PJRT upload of the window tensor is separate and
+    // still scales with window size)
+    if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
+        println!("\nwindow gather: {:.1} KB/step @seq={} → {:.1} KB/step \
+                  @seq={}",
+                 first.paged_bytes_per_step / 1e3, first.seq_len,
+                 last.paged_bytes_per_step / 1e3, last.seq_len);
+    }
     let wins = rows
         .iter()
         .filter(|r| r.paged_ms_mean <= r.default_ms_mean)

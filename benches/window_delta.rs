@@ -1,0 +1,142 @@
+//! Window-delta transfer bench — bytes moved into the dense KV window
+//! per decode step, resident delta path vs the seed's full re-gather
+//! (DESIGN.md §5). Host-side only: drives the kvpage layer directly, so
+//! it runs without compiled artifacts.
+
+include!("common.rs");
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use paged_flex::harness::print_table;
+use paged_flex::kvpage::{
+    GrowthPolicy, HostPool, PageAllocator, PageManager, PoolGeometry,
+    ResidentWindow,
+};
+
+const N_LAYERS: usize = 4;
+const PAGE_SIZE: usize = 16;
+const N_KV_HEADS: usize = 4;
+const D_HEAD: usize = 16;
+
+struct StepCost {
+    bytes_per_step: f64,
+    pages_per_step: f64,
+    ns_per_step: f64,
+}
+
+/// Prefill one sequence of `seq_len` tokens host-side, then run `steps`
+/// decode steps, measuring window-transfer volume per step.
+fn run_mode(seq_len: usize, steps: usize, delta: bool) -> StepCost {
+    let max_blocks = (seq_len + steps).div_ceil(PAGE_SIZE) + 2;
+    let n_pages = max_blocks + 8;
+    let geo = PoolGeometry {
+        n_layers: N_LAYERS,
+        n_pages,
+        page_size: PAGE_SIZE,
+        n_kv_heads: N_KV_HEADS,
+        d_head: D_HEAD,
+    };
+    let alloc = Arc::new(PageAllocator::new(
+        n_pages as u32,
+        PAGE_SIZE,
+        (geo.token_elems() * 8) as u64,
+        GrowthPolicy::Exact,
+    ));
+    let mut mgr = PageManager::new(alloc, max_blocks);
+    let mut k = HostPool::zeros(geo);
+    let mut v = HostPool::zeros(geo);
+    let mut win = ResidentWindow::new(geo);
+    win.set_delta(delta);
+    let window_pages = max_blocks; // batch 1 × max_blocks_per_seq
+
+    let prompt: Vec<u32> = (0..seq_len as u32).collect();
+    mgr.reserve(1, &prompt).unwrap();
+    {
+        let table = mgr.table(1).unwrap();
+        for pos in 0..seq_len {
+            let (page, off) =
+                (table.pages()[pos / PAGE_SIZE], pos % PAGE_SIZE);
+            for layer in 0..N_LAYERS {
+                k.token_row_mut(layer, page, off).fill(pos as f32);
+                v.token_row_mut(layer, page, off).fill(-(pos as f32));
+            }
+        }
+    }
+    mgr.note_assigned(1, seq_len).unwrap();
+
+    let bytes0 = win.stats().bytes_moved;
+    let pages0 = win.stats().pages_copied;
+    let t0 = Instant::now();
+    for step in 0..steps {
+        mgr.prepare_append(1, 1).unwrap();
+        let len = mgr.seq_len(1).unwrap();
+        win.begin_step(window_pages);
+        let table = mgr.table(1).unwrap();
+        for &p in table.blocks_covering(len + 1) {
+            win.map_page(&mut k, &mut v, p).unwrap();
+        }
+        // the decode kernel produced one new KV row; scatter writes it
+        // into the pool and through to the resident slot
+        let pos = len;
+        let (page, off) =
+            (table.pages()[pos / PAGE_SIZE], pos % PAGE_SIZE);
+        for layer in 0..N_LAYERS {
+            k.token_row_mut(layer, page, off).fill(step as f32);
+            v.token_row_mut(layer, page, off).fill(step as f32);
+            win.write_row(&mut k, &mut v, layer, page, off);
+        }
+        mgr.note_assigned(1, 1).unwrap();
+    }
+    let dt = t0.elapsed();
+    StepCost {
+        bytes_per_step: (win.stats().bytes_moved - bytes0) as f64
+            / steps as f64,
+        pages_per_step: (win.stats().pages_copied - pages0) as f64
+            / steps as f64,
+        ns_per_step: dt.as_nanos() as f64 / steps as f64,
+    }
+}
+
+fn main() {
+    let seqs: &[usize] = if quick() {
+        &[128, 512]
+    } else {
+        &[128, 256, 512, 1024, 2048]
+    };
+    let steps = if quick() { 32 } else { 128 };
+
+    let mut rows = Vec::new();
+    let mut win_at_512 = true;
+    for &seq in seqs {
+        let full = run_mode(seq, steps, false);
+        let delta = run_mode(seq, steps, true);
+        if seq >= 512 && delta.bytes_per_step >= full.bytes_per_step {
+            win_at_512 = false;
+        }
+        rows.push(vec![
+            seq.to_string(),
+            f(full.bytes_per_step / 1e3, 1),
+            f(delta.bytes_per_step / 1e3, 1),
+            f(full.bytes_per_step / delta.bytes_per_step.max(1.0), 1),
+            f(full.pages_per_step, 1),
+            f(delta.pages_per_step, 2),
+            f(full.ns_per_step / 1e3, 1),
+            f(delta.ns_per_step / 1e3, 1),
+        ]);
+    }
+    print_table(
+        "Window transfer per decode step: full re-gather vs resident \
+         delta (single sequence)",
+        &["seq", "full_KB", "delta_KB", "×less", "full_pages",
+          "delta_pages", "full_µs", "delta_µs"],
+        &rows,
+    );
+    println!("\nshape check: delta bytes/step < full bytes/step at \
+              seq ≥ 512: {}",
+             if win_at_512 { "PASS" } else { "FAIL" });
+    if !win_at_512 {
+        // regression guard: make CI's bench-smoke step go red
+        std::process::exit(1);
+    }
+}

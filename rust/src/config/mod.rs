@@ -172,6 +172,10 @@ pub struct EngineConfig {
     pub growth_policy: GrowthPolicyCfg,
     /// Enable automatic prefix caching.
     pub prefix_cache: bool,
+    /// Resident-window delta transfer (DESIGN.md §5). Off forces the
+    /// full-gather path every step — the escape hatch if the delta
+    /// path misbehaves.
+    pub window_delta: bool,
     pub scheduler: SchedulerConfig,
     /// Default sampling params (overridable per request).
     pub sampling: SamplingConfig,
@@ -185,6 +189,7 @@ impl Default for EngineConfig {
             attention: AttentionMode::Paged,
             growth_policy: GrowthPolicyCfg::Exact,
             prefix_cache: true,
+            window_delta: true,
             scheduler: SchedulerConfig::default(),
             sampling: SamplingConfig::default(),
         }
@@ -201,6 +206,7 @@ impl EngineConfig {
             ("attention", Value::str(self.attention.as_str())),
             ("growth_policy", Value::str(self.growth_policy.as_str())),
             ("prefix_cache", Value::Bool(self.prefix_cache)),
+            ("window_delta", Value::Bool(self.window_delta)),
             ("scheduler", Value::obj(vec![
                 ("max_batch_size", Value::num(s.max_batch_size as f64)),
                 ("max_running_seqs", Value::num(s.max_running_seqs as f64)),
@@ -257,6 +263,9 @@ impl EngineConfig {
             prefix_cache: v.opt("prefix_cache")
                 .map(|x| x.as_bool()).transpose()?
                 .unwrap_or(d.prefix_cache),
+            window_delta: v.opt("window_delta")
+                .map(|x| x.as_bool()).transpose()?
+                .unwrap_or(d.window_delta),
             scheduler: sched,
             sampling: match v.opt("sampling") {
                 Some(s) => SamplingConfig::from_json(s)?,

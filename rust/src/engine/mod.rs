@@ -48,11 +48,13 @@ impl Engine {
         let (mut paged, mut contiguous, mut nocache) = (None, None, None);
         match cfg.attention {
             AttentionMode::Paged => {
-                paged = Some(PagedEngine::new(
+                let mut pe = PagedEngine::new(
                     &spec,
                     cfg.growth_policy.into(),
                     cfg.prefix_cache,
-                ));
+                );
+                pe.set_delta_transfer(cfg.window_delta);
+                paged = Some(pe);
             }
             AttentionMode::Contiguous => {
                 contiguous = Some(ContiguousEngine::new(

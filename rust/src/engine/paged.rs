@@ -4,21 +4,31 @@
 //! views → per-step DECODE with fused GATHER → Rust-side ASSIGN into the
 //! authoritative [`HostPool`] → FREE on completion.
 //!
-//! Per step the engine gathers the *active subpool*: only the pages the
-//! batch's block tables actually reference are copied into the dense
-//! [L, B·maxB, page, Hkv, dh] window the artifact was compiled for, with
-//! table entries remapped to window indices. Upload therefore scales with
-//! live context, not pool capacity (DESIGN.md §5's CPU-PJRT adaptation;
-//! on device-resident hardware this window is the pool itself).
+//! Per step the engine maps the *active subpool* — only the pages the
+//! batch's block tables reference — into the dense
+//! [L, B·maxB, page, Hkv, dh] window the artifact was compiled for.
+//! Mapping goes through the [`ResidentWindow`] (DESIGN.md §5): each
+//! physical page keeps a stable window slot across steps, and only pages
+//! that are newly resident or dirty are copied; the ASSIGN scatter
+//! writes new token rows through to both the pool and the resident slot.
+//! The host-side gather memcpy therefore moves O(tokens written) bytes
+//! per steady-state decode step instead of O(live context). (The PJRT
+//! upload of the window input tensor itself is still O(window) on this
+//! CPU adaptation — on device-resident hardware both costs disappear
+//! because the window *is* the pool; see DESIGN.md §5.) Batch-bucket
+//! changes and lost buffers fall back to the seed's full gather;
+//! freeing or preempting a sequence releases just its dead pages'
+//! slots.
 
 use std::collections::HashMap;
 
 use crate::kvpage::{
     AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
-    PoolGeometry, SeqId,
+    PoolGeometry, ResidentWindow, SeqId, WindowStats,
 };
 use crate::model::ModelSpec;
 use crate::runtime::{HostTensor, Runtime};
+use crate::util::profile::{self, Phase};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
 
@@ -37,18 +47,41 @@ impl SeqState {
     }
 }
 
+/// Per-step batch tensors, reused across calls (§Perf iteration 3: the
+/// decode loop allocates nothing per step beyond the result rows).
+#[derive(Default)]
+struct StepScratch {
+    tokens: Vec<i32>,
+    cache_lens: Vec<i32>,
+    chunk_lens: Vec<i32>,
+    tables: Vec<i32>,
+}
+
+impl StepScratch {
+    /// Clear and zero-fill for a (batch, chunk) bucket.
+    fn begin(&mut self, b: usize, c: usize, maxb: usize) {
+        self.tokens.clear();
+        self.tokens.resize(b * c, 0);
+        self.cache_lens.clear();
+        self.cache_lens.resize(b, 0);
+        self.chunk_lens.clear();
+        self.chunk_lens.resize(b, 0);
+        self.tables.clear();
+        self.tables.resize(b * maxb, 0);
+    }
+}
+
 pub struct PagedEngine {
     pub mgr: PageManager,
     pub k_pool: HostPool,
     pub v_pool: HostPool,
     pub seqs: HashMap<SeqId, SeqState>,
     spec: ModelSpec,
-    /// Reused window scratch (§Perf iteration 2): avoids allocating and
-    /// zeroing multi-MB buffers every step. Stale contents are safe —
-    /// the kernel only reads pages the block tables map below each
-    /// sequence's live length.
-    k_scratch: Vec<f32>,
-    v_scratch: Vec<f32>,
+    /// Resident window: stable slots + persistent K/V scratch + delta
+    /// transfer bookkeeping (replaces the per-step remap HashMap and the
+    /// full re-gather of the whole active subpool).
+    window: ResidentWindow,
+    scr: StepScratch,
 }
 
 /// Outcome of admitting a prompt.
@@ -74,13 +107,33 @@ impl PagedEngine {
             v_pool: HostPool::zeros(geo),
             seqs: HashMap::new(),
             spec: spec.clone(),
-            k_scratch: Vec::new(),
-            v_scratch: Vec::new(),
+            window: ResidentWindow::new(geo),
+            scr: StepScratch::default(),
         }
     }
 
     pub fn spec(&self) -> &ModelSpec {
         &self.spec
+    }
+
+    /// Cumulative window-transfer counters (benches, tests, metrics).
+    pub fn window_stats(&self) -> WindowStats {
+        *self.window.stats()
+    }
+
+    /// Window counters accumulated since the last call (the coordinator
+    /// merges these into `ServingMetrics` after each step).
+    pub fn take_window_delta(&mut self) -> WindowStats {
+        self.window.take_unreported()
+    }
+
+    /// Force the full-gather path on every step (delta transfer off) —
+    /// the seed behaviour. Wired to `EngineConfig::window_delta` and the
+    /// `--no-window-delta` CLI flag as the operator escape hatch; the
+    /// kvpage-level equivalence tests and `benches/window_delta.rs`
+    /// exercise the same fallback via `ResidentWindow::set_delta`.
+    pub fn set_delta_transfer(&mut self, enabled: bool) {
+        self.window.set_delta(enabled);
     }
 
     /// RESERVE + sequence bookkeeping. Errors bubble PoolExhausted so the
@@ -95,20 +148,31 @@ impl PagedEngine {
         Ok(Admission { cached_tokens: out.cached_tokens })
     }
 
-    /// FREE everything the sequence holds.
+    /// FREE everything the sequence holds; dead pages release their
+    /// window slots.
     pub fn release(&mut self, id: SeqId) -> Result<(), AllocError> {
         self.seqs.remove(&id);
-        self.mgr.free(id)
+        for page in self.mgr.free(id)? {
+            self.window.forget(page);
+        }
+        Ok(())
     }
 
     /// Preempt: drop pages but keep tokens so the request can re-prefill
-    /// later (vLLM-style recompute preemption).
+    /// later (vLLM-style recompute preemption). Only the dead pages'
+    /// window slots are released — the rest of the batch keeps its
+    /// residency, which matters exactly when preemptions cluster under
+    /// memory pressure (dirty bits cover any page re-allocation; the
+    /// wholesale full-gather fallback still covers bucket changes and
+    /// buffer loss, DESIGN.md §5).
     pub fn preempt(&mut self, id: SeqId) -> Result<Vec<u32>, AllocError> {
         let state = self
             .seqs
             .remove(&id)
             .ok_or(AllocError::UnknownSeq(id))?;
-        self.mgr.free(id)?;
+        for page in self.mgr.free(id)? {
+            self.window.forget(page);
+        }
         Ok(state.tokens)
     }
 
@@ -162,28 +226,27 @@ impl PagedEngine {
         let b = art.batch.unwrap();
         let c = art.chunk.unwrap();
 
-        // batch tensors
-        let mut tokens = vec![0i32; b * c];
-        let mut cache_lens = vec![0i32; b];
-        let mut chunk_lens = vec![0i32; b];
+        // batch tensors (reused scratch)
+        self.scr.begin(b, c, self.spec.max_blocks_per_seq);
         for (i, id) in ids.iter().enumerate() {
             let s = &self.seqs[id];
             let take = s.remaining_prefill().min(c);
             for t in 0..take {
-                tokens[i * c + t] = s.tokens[s.prefilled + t] as i32;
+                self.scr.tokens[i * c + t] =
+                    s.tokens[s.prefilled + t] as i32;
             }
-            cache_lens[i] = s.prefilled as i32;
-            chunk_lens[i] = take as i32;
+            self.scr.cache_lens[i] = s.prefilled as i32;
+            self.scr.chunk_lens[i] = take as i32;
         }
-        let outs = self.run_paged(rt, &name, ids, tokens, vec![b, c],
-                                  cache_lens.clone(), chunk_lens.clone())?;
+        let outs = self.run_paged(rt, &name, ids, vec![b, c])?;
         let (logits, k_chunk, v_chunk) = unpack3(outs)?;
 
-        // ASSIGN + bookkeeping
+        // ASSIGN + bookkeeping (logits validated once, not per row)
+        let logits_rows = logits.as_f32()?;
         let vocab = self.spec.vocab_size;
         let mut results = Vec::with_capacity(ids.len());
         for (i, id) in ids.iter().enumerate() {
-            let take = chunk_lens[i] as usize;
+            let take = self.scr.chunk_lens[i] as usize;
             self.scatter_chunk(*id, &k_chunk, &v_chunk, b, c, i, take)?;
             let s = self.seqs.get_mut(id).unwrap();
             s.prefilled += take;
@@ -195,7 +258,7 @@ impl PagedEngine {
                     .map_err(|e| err!("{e}"))?;
             }
             let row =
-                logits.as_f32()?[i * vocab..(i + 1) * vocab].to_vec();
+                logits_rows[i * vocab..(i + 1) * vocab].to_vec();
             results.push((*id, finished, row));
         }
         Ok(results)
@@ -221,7 +284,8 @@ impl PagedEngine {
         let (name, _) = rt.entry().paged_decode(b).unwrap();
         let name = name.to_string();
 
-        // CoW/extend BEFORE the step so block tables cover the new token.
+        // CoW/extend BEFORE the step so block tables cover the new token
+        // (CoW destinations come back dirty and re-sync in the gather).
         for id in ids {
             let plan = self
                 .mgr
@@ -233,18 +297,16 @@ impl PagedEngine {
             }
         }
 
-        let mut tokens = vec![0i32; b];
-        let mut cache_lens = vec![0i32; b];
-        let mut chunk_lens = vec![0i32; b];
+        self.scr.begin(b, 1, self.spec.max_blocks_per_seq);
         for (i, id) in ids.iter().enumerate() {
-            tokens[i] = next[i] as i32;
-            cache_lens[i] = self.seqs[id].prefilled as i32;
-            chunk_lens[i] = 1;
+            self.scr.tokens[i] = next[i] as i32;
+            self.scr.cache_lens[i] = self.seqs[id].prefilled as i32;
+            self.scr.chunk_lens[i] = 1;
         }
-        let outs = self.run_paged(rt, &name, ids, tokens, vec![b, 1],
-                                  cache_lens, chunk_lens)?;
+        let outs = self.run_paged(rt, &name, ids, vec![b, 1])?;
         let (logits, k_new, v_new) = unpack3(outs)?;
 
+        let logits_rows = logits.as_f32()?;
         let vocab = self.spec.vocab_size;
         let mut results = Vec::with_capacity(ids.len());
         for (i, id) in ids.iter().enumerate() {
@@ -253,22 +315,22 @@ impl PagedEngine {
             s.tokens.push(next[i]);
             s.prefilled += 1;
             let row =
-                logits.as_f32()?[i * vocab..(i + 1) * vocab].to_vec();
+                logits_rows[i * vocab..(i + 1) * vocab].to_vec();
             results.push((*id, row));
         }
         Ok(results)
     }
 
-    /// Gather the active subpool + remapped tables and execute.
+    /// Map the active subpool into the resident window (delta transfer,
+    /// full gather on fallback), remap tables to stable slots, execute.
+    /// Batch tensors come from `self.scr` (filled by the caller) and are
+    /// reclaimed after the call.
     fn run_paged(
         &mut self,
         rt: &Runtime,
         artifact: &str,
         ids: &[SeqId],
-        tokens: Vec<i32>,
         token_shape: Vec<usize>,
-        cache_lens: Vec<i32>,
-        chunk_lens: Vec<i32>,
     ) -> Result<Vec<HostTensor>> {
         let b = token_shape[0];
         let maxb = self.spec.max_blocks_per_seq;
@@ -276,82 +338,85 @@ impl PagedEngine {
         let geo = *self.k_pool.geometry();
         let window_pages = b * maxb;
 
-        // remap physical pages -> dense window indices
-        let mut remap: HashMap<u32, i32> = HashMap::new();
-        let mut order: Vec<u32> = Vec::new();
-        let mut tables = vec![0i32; b * maxb];
-        for (i, id) in ids.iter().enumerate() {
-            let table = self.mgr.table(*id).map_err(|e| err!("{e}"))?;
-            let cached_blocks =
-                (cache_lens[i] as usize + chunk_lens[i] as usize)
-                    .div_ceil(ps)
-                    .min(table.n_blocks());
-            for (j, &p) in table.pages()[..cached_blocks].iter().enumerate()
-            {
-                let next_idx = order.len() as i32;
-                let sub = *remap.entry(p).or_insert_with(|| {
-                    order.push(p);
-                    next_idx
-                });
-                tables[i * maxb + j] = sub;
-            }
-        }
-        ensure!(order.len() <= window_pages,
-                "active set {} exceeds window {}", order.len(),
-                window_pages);
-
-        // dense window copy (K and V), layout [L, W, page, Hkv, dh],
-        // into reused scratch (grow once; stale tails are never read)
-        let page_elems = geo.page_elems();
-        let window_elems = geo.n_layers * window_pages * page_elems;
+        // remap physical pages -> stable window slots, copying only
+        // newly-resident or dirty pages (everything on a full gather)
+        self.window.begin_step(window_pages);
         {
-            let _prof = crate::util::profile::span(
-                crate::util::profile::Phase::SubpoolGather);
-            if self.k_scratch.len() != window_elems {
-                self.k_scratch.resize(window_elems, 0.0);
-                self.v_scratch.resize(window_elems, 0.0);
-            }
-            for (sub, &phys) in order.iter().enumerate() {
-                for l in 0..geo.n_layers {
-                    let src = geo.offset(l, phys, 0);
-                    let dst = (l * window_pages + sub) * page_elems;
-                    self.k_scratch[dst..dst + page_elems].copy_from_slice(
-                        &self.k_pool.as_slice()[src..src + page_elems]);
-                    self.v_scratch[dst..dst + page_elems].copy_from_slice(
-                        &self.v_pool.as_slice()[src..src + page_elems]);
+            let _prof = profile::span(if self.window.is_full_step() {
+                Phase::SubpoolGather
+            } else {
+                Phase::WindowDelta
+            });
+            for (i, id) in ids.iter().enumerate() {
+                let covered = self.scr.cache_lens[i] as usize
+                    + self.scr.chunk_lens[i] as usize;
+                let table =
+                    self.mgr.table(*id).map_err(|e| err!("{e}"))?;
+                for (j, &p) in
+                    table.blocks_covering(covered).iter().enumerate()
+                {
+                    let slot = self
+                        .window
+                        .map_page(&mut self.k_pool, &mut self.v_pool, p)
+                        .ok_or_else(|| err!(
+                            "active set exceeds window ({window_pages} \
+                             slots)"))?;
+                    self.scr.tables[i * maxb + j] = slot as i32;
                 }
             }
         }
         let win_shape = vec![geo.n_layers, window_pages, ps,
                              geo.n_kv_heads, geo.d_head];
 
-        // move the scratch into the input tensors (no copy) and reclaim
-        // it after the call
+        // move the window buffers + batch scratch into the input tensors
+        // (no copy) and reclaim them after the call
+        let (k_buf, v_buf) = self.window.take_buffers();
         let inputs = [
-            HostTensor::i32(tokens, token_shape),
-            HostTensor::f32(std::mem::take(&mut self.k_scratch),
-                            win_shape.clone()),
-            HostTensor::f32(std::mem::take(&mut self.v_scratch),
-                            win_shape),
-            HostTensor::i32(tables, vec![b, maxb]),
-            HostTensor::scalar_i32_vec(&cache_lens),
-            HostTensor::scalar_i32_vec(&chunk_lens),
+            HostTensor::i32(std::mem::take(&mut self.scr.tokens),
+                            token_shape),
+            HostTensor::f32(k_buf, win_shape.clone()),
+            HostTensor::f32(v_buf, win_shape),
+            HostTensor::i32(std::mem::take(&mut self.scr.tables),
+                            vec![b, maxb]),
+            HostTensor::i32(std::mem::take(&mut self.scr.cache_lens),
+                            vec![b]),
+            HostTensor::i32(std::mem::take(&mut self.scr.chunk_lens),
+                            vec![b]),
         ];
         let result = rt
             .run(artifact, &inputs)
             .wrap_err_with(|| format!("running {artifact}"));
-        let mut it = inputs.into_iter().skip(1);
+        let mut it = inputs.into_iter();
+        if let Some(HostTensor::I32 { data, .. }) = it.next() {
+            self.scr.tokens = data;
+        }
+        let mut k_back = Vec::new();
+        let mut v_back = Vec::new();
         if let Some(HostTensor::F32 { data, .. }) = it.next() {
-            self.k_scratch = data;
+            k_back = data;
         }
         if let Some(HostTensor::F32 { data, .. }) = it.next() {
-            self.v_scratch = data;
+            v_back = data;
         }
+        if let Some(HostTensor::I32 { data, .. }) = it.next() {
+            self.scr.tables = data;
+        }
+        if let Some(HostTensor::I32 { data, .. }) = it.next() {
+            self.scr.cache_lens = data;
+        }
+        if let Some(HostTensor::I32 { data, .. }) = it.next() {
+            self.scr.chunk_lens = data;
+        }
+        self.window.restore_buffers(k_back, v_back);
         result
     }
 
     /// Rust-side ASSIGN: scatter `take` tokens of row `i` of a chunk
-    /// tensor [L, B, Hkv, C, dh] into the sequence's pages.
+    /// tensor [L, B, Hkv, C, dh] into the sequence's pages, writing each
+    /// row through to the resident window slot as well so the page needs
+    /// no re-gather next step. Head-strided chunk rows are copied as
+    /// contiguous `dh` runs straight into the pool (no staging row, no
+    /// page-table clone).
     fn scatter_chunk(
         &mut self,
         id: SeqId,
@@ -362,37 +427,52 @@ impl PagedEngine {
         i: usize,
         take: usize,
     ) -> Result<()> {
-        let _prof = crate::util::profile::span(
-            crate::util::profile::Phase::Scatter);
+        let _prof = profile::span(Phase::Scatter);
         let geo = *self.k_pool.geometry();
-        let (l_n, hkv, dh) = (geo.n_layers, geo.n_kv_heads, geo.d_head);
         let ps = geo.page_size;
         let k_data = k_chunk.as_f32()?;
         let v_data = v_chunk.as_f32()?;
         let cache_len = self.seqs[&id].prefilled;
         let table = self.mgr.table(id).map_err(|e| err!("{e}"))?;
-        let pages = table.pages().to_vec();
-        let mut row = vec![0f32; hkv * dh];
+        let pages = table.pages();
         for t in 0..take {
             let pos = cache_len + t;
             let (page, off) = (pages[pos / ps], pos % ps);
-            for l in 0..l_n {
-                for (h, chunk) in row.chunks_exact_mut(dh).enumerate() {
-                    let src = (((l * b + i) * hkv + h) * c + t) * dh;
-                    chunk.copy_from_slice(&k_data[src..src + dh]);
-                }
-                self.k_pool.assign_token(l, page, off, &row);
-                for (h, chunk) in row.chunks_exact_mut(dh).enumerate() {
-                    let src = (((l * b + i) * hkv + h) * c + t) * dh;
-                    chunk.copy_from_slice(&v_data[src..src + dh]);
-                }
-                self.v_pool.assign_token(l, page, off, &row);
+            for l in 0..geo.n_layers {
+                scatter_row(&mut self.k_pool, k_data, &geo, l, b, i, c,
+                            t, page, off);
+                scatter_row(&mut self.v_pool, v_data, &geo, l, b, i, c,
+                            t, page, off);
+                self.window.write_row(&mut self.k_pool,
+                                      &mut self.v_pool, l, page, off);
             }
         }
         self.mgr
             .note_assigned(id, take)
             .map_err(|e| err!("note_assigned({id}): {e}"))?;
         Ok(())
+    }
+}
+
+/// Copy token `t` of batch row `i` from a chunk tensor [L, B, Hkv, C, dh]
+/// into the pool row at (layer `l`, `page`, `off`). For C == 1 the whole
+/// [Hkv, dh] row is contiguous in the chunk; otherwise it is head-strided
+/// and copied as per-head `dh` runs.
+#[allow(clippy::too_many_arguments)]
+fn scatter_row(pool: &mut HostPool, data: &[f32], geo: &PoolGeometry,
+               l: usize, b: usize, i: usize, c: usize, t: usize,
+               page: u32, off: usize) {
+    let (hkv, dh) = (geo.n_kv_heads, geo.d_head);
+    let row = pool.token_row_mut(l, page, off);
+    if c == 1 {
+        let src = (l * b + i) * hkv * dh;
+        row.copy_from_slice(&data[src..src + hkv * dh]);
+    } else {
+        for h in 0..hkv {
+            let src = (((l * b + i) * hkv + h) * c + t) * dh;
+            row[h * dh..(h + 1) * dh]
+                .copy_from_slice(&data[src..src + dh]);
+        }
     }
 }
 

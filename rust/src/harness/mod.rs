@@ -224,12 +224,19 @@ pub struct Fig4Row {
     pub paged_ms_std: f64,
     pub default_ms_mean: f64,
     pub default_ms_std: f64,
+    /// Mean bytes the host gather memcpy + write-through moved into the
+    /// KV window per decode step (paged path) — the transfer-volume
+    /// regression guard for DESIGN.md §5. The PJRT upload of the
+    /// assembled window tensor is a separate, window-sized cost.
+    pub paged_bytes_per_step: f64,
 }
 
 pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                            seq_lens: &[usize], decode_tokens: usize,
                            runs: usize) -> Result<Vec<Fig4Row>> {
-    let measure = |mode: AttentionMode, seq: usize| -> Result<f64> {
+    // returns (ms/token, window bytes/step; 0 for the default kernel)
+    let measure =
+        |mode: AttentionMode, seq: usize| -> Result<(f64, f64)> {
         let mut cfg = EngineConfig::default();
         cfg.model = model.into();
         cfg.artifacts_dir = artifacts.to_path_buf();
@@ -257,6 +264,7 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                 logits = pe  // warm-up (XLA compile on first use)
                     .decode_step(&eng.rt, &[id], &[argmax(&logits)])?
                     .into_iter().next().unwrap().1;
+                let bytes0 = pe.window_stats().bytes_moved;
                 let t0 = Instant::now();
                 for _ in 0..decode_tokens {
                     let tok = argmax(&logits);
@@ -267,8 +275,11 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                         .unwrap()
                         .1;
                 }
-                Ok(t0.elapsed().as_secs_f64() * 1e3
-                   / decode_tokens as f64)
+                let ms = t0.elapsed().as_secs_f64() * 1e3
+                    / decode_tokens as f64;
+                let bytes = (pe.window_stats().bytes_moved - bytes0)
+                    as f64 / decode_tokens as f64;
+                Ok((ms, bytes))
             }
             AttentionMode::Contiguous => {
                 let id = eng.fresh_seq_id();
@@ -290,8 +301,8 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                         .unwrap()
                         .1;
                 }
-                Ok(t0.elapsed().as_secs_f64() * 1e3
-                   / decode_tokens as f64)
+                Ok((t0.elapsed().as_secs_f64() * 1e3
+                    / decode_tokens as f64, 0.0))
             }
             AttentionMode::NoCache => Err(err!("not used in fig4")),
         }
@@ -300,10 +311,13 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
     let mut rows = Vec::new();
     for &seq in seq_lens {
         let mut paged = Vec::new();
+        let mut paged_bytes = Vec::new();
         let mut dflt = Vec::new();
         for _ in 0..runs {
-            paged.push(measure(AttentionMode::Paged, seq)?);
-            dflt.push(measure(AttentionMode::Contiguous, seq)?);
+            let (ms, bytes) = measure(AttentionMode::Paged, seq)?;
+            paged.push(ms);
+            paged_bytes.push(bytes);
+            dflt.push(measure(AttentionMode::Contiguous, seq)?.0);
         }
         rows.push(Fig4Row {
             seq_len: seq,
@@ -311,6 +325,7 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
             paged_ms_std: std_dev(&paged),
             default_ms_mean: mean(&dflt),
             default_ms_std: std_dev(&dflt),
+            paged_bytes_per_step: mean(&paged_bytes),
         });
     }
     Ok(rows)

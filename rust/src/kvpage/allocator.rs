@@ -130,7 +130,10 @@ impl PageAllocator {
     /// Decrement refcount; page returns to the free list at zero.
     /// `live_tokens` is the caller's estimate of tokens it had live on the
     /// page, for audit purposes (only charged when the page actually dies).
-    pub fn release_page(&self, page: u32, live_tokens: usize) {
+    /// Returns true iff THIS call freed the page — the decrement itself is
+    /// the authoritative death test (a separate `refcount()` pre-read
+    /// races with concurrent releases).
+    pub fn release_page(&self, page: u32, live_tokens: usize) -> bool {
         let prev = self.refcounts[page as usize].fetch_sub(1, Ordering::AcqRel);
         assert!(prev > 0, "double free of page {page}");
         if prev == 1 {
@@ -139,7 +142,9 @@ impl PageAllocator {
                 live_tokens as u64 * self.kv_bytes_per_token,
             );
             self.free.push(page);
+            return true;
         }
+        false
     }
 
     pub fn refcount(&self, page: u32) -> u32 {

@@ -68,6 +68,13 @@ impl BlockTable {
         tokens.div_ceil(self.page_size)
     }
 
+    /// The pages covering the first `tokens` logical tokens, clamped to
+    /// the mapped range — the window remap iterates exactly these.
+    pub fn blocks_covering(&self, tokens: usize) -> &[u32] {
+        let n = self.blocks_for(tokens).min(self.pages.len());
+        &self.pages[..n]
+    }
+
     /// Append freshly allocated physical pages (RESERVE/EXTEND records
     /// them here).
     pub fn push_pages(&mut self, pages: &[u32]) {
@@ -186,6 +193,16 @@ mod tests {
     fn advance_past_capacity_panics() {
         let mut t = table_with(&[1], 8, 8);
         t.advance(1);
+    }
+
+    #[test]
+    fn blocks_covering_clamps_to_mapped_range() {
+        let t = table_with(&[7, 3, 9], 20, 8);
+        assert_eq!(t.blocks_covering(0), &[] as &[u32]);
+        assert_eq!(t.blocks_covering(8), &[7]);
+        assert_eq!(t.blocks_covering(9), &[7, 3]);
+        assert_eq!(t.blocks_covering(24), &[7, 3, 9]);
+        assert_eq!(t.blocks_covering(1000), &[7, 3, 9]);
     }
 
     #[test]

@@ -318,7 +318,9 @@ impl PageManager {
 
     /// Alg. 1 FREE: release every page of `seq`; pages whose refcount
     /// drops to zero return to the free list and leave the prefix cache.
-    pub fn free(&mut self, seq: SeqId) -> Result<(), AllocError> {
+    /// Returns the pages that actually died (refcount hit zero) so the
+    /// engine can drop their resident-window slots (DESIGN.md §5).
+    pub fn free(&mut self, seq: SeqId) -> Result<Vec<u32>, AllocError> {
         let mut table = self
             .tables
             .remove(&seq)
@@ -326,12 +328,15 @@ impl PageManager {
         let ps = self.alloc.page_size();
         let len = table.len_tokens();
         let pages = table.clear();
+        let mut dead = Vec::new();
         for (i, p) in pages.iter().enumerate() {
             let live_here = len.saturating_sub(i * ps).min(ps);
             self.evict_if_dying(*p);
-            self.alloc.release_page(*p, live_here);
+            if self.alloc.release_page(*p, live_here) {
+                dead.push(*p);
+            }
         }
-        Ok(())
+        Ok(dead)
     }
 
     fn evict_if_dying(&mut self, page: u32) {

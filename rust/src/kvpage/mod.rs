@@ -7,6 +7,9 @@
 //!   fork/CoW planning: the Alg. 1 surface the engine drives.
 //! * [`prefix`] — content-addressed prefix sharing.
 //! * [`pool`] — pool geometry + host mirror (swap, tests).
+//! * [`window`] — resident window + delta transfer: stable page→slot
+//!   mapping and dirty-page tracking so a decode step uploads what
+//!   changed, not what is live (DESIGN.md §5).
 //! * [`audit`] — live/reserved/wasted accounting (the patched-allocator
 //!   telemetry of Sec. III-C).
 //! * [`baseline`] — the contiguous max-length allocator being displaced.
@@ -19,6 +22,7 @@ pub mod freelist;
 pub mod manager;
 pub mod pool;
 pub mod prefix;
+pub mod window;
 
 pub use allocator::{GrowthPolicy, PageAllocator};
 pub use audit::{AuditEvent, EventKind, MemoryAudit};
@@ -28,3 +32,4 @@ pub use freelist::FreeList;
 pub use manager::{AllocError, AppendPlan, PageManager, ReserveOutcome, SeqId};
 pub use pool::{HostPool, PoolGeometry};
 pub use prefix::{PrefixIndex, PrefixMatch};
+pub use window::{ResidentWindow, WindowStats};

@@ -66,15 +66,23 @@ impl PoolGeometry {
     }
 }
 
-/// One host-resident K or V pool tensor.
+/// One host-resident K or V pool tensor, with a per-page dirty bit
+/// tracking divergence from the resident window (DESIGN.md §5): every
+/// mutation (ASSIGN, CoW copy, swap-in) marks its page; the window
+/// clears the bit when it re-syncs the page.
 pub struct HostPool {
     geo: PoolGeometry,
     data: Vec<f32>,
+    dirty: Vec<bool>,
 }
 
 impl HostPool {
     pub fn zeros(geo: PoolGeometry) -> Self {
-        HostPool { geo, data: vec![0.0; geo.total_elems()] }
+        HostPool {
+            geo,
+            data: vec![0.0; geo.total_elems()],
+            dirty: vec![false; geo.n_pages],
+        }
     }
 
     pub fn geometry(&self) -> &PoolGeometry {
@@ -96,6 +104,33 @@ impl HostPool {
         assert_eq!(row.len(), n);
         let off = self.geo.offset(layer, page, slot);
         self.data[off..off + n].copy_from_slice(row);
+        self.dirty[page as usize] = true;
+    }
+
+    /// Mutable view of one token's [Hkv, Dh] row — ASSIGN without a
+    /// staging copy (the engine scatters head-strided chunk data into it
+    /// directly). Marks the page dirty like `assign_token`.
+    pub fn token_row_mut(&mut self, layer: usize, page: u32, slot: usize)
+                         -> &mut [f32] {
+        let n = self.geo.token_elems();
+        let off = self.geo.offset(layer, page, slot);
+        self.dirty[page as usize] = true;
+        &mut self.data[off..off + n]
+    }
+
+    /// Page diverged from the resident window since its last sync?
+    pub fn is_dirty(&self, page: u32) -> bool {
+        self.dirty[page as usize]
+    }
+
+    /// Window-side: the page was just re-synced.
+    pub fn clear_dirty(&mut self, page: u32) {
+        self.dirty[page as usize] = false;
+    }
+
+    /// Pages currently marked dirty (tests/telemetry).
+    pub fn dirty_pages(&self) -> usize {
+        self.dirty.iter().filter(|&&d| d).count()
     }
 
     /// Alg. 1 GATHER (host side): read one token's row.
@@ -107,19 +142,21 @@ impl HostPool {
     }
 
     /// Copy a whole page within the pool (host CoW; mirrors the
-    /// `copy_pages` device executable).
+    /// `copy_pages` device executable). The destination page diverges
+    /// from any window copy, so it is marked dirty.
     pub fn copy_page(&mut self, src: u32, dst: u32) {
+        if src == dst {
+            return;
+        }
         let n = self.geo.page_elems();
         for layer in 0..self.geo.n_layers {
             let s = self.geo.offset(layer, src, 0);
             let d = self.geo.offset(layer, dst, 0);
-            if s == d {
-                continue;
-            }
             // split_at_mut-free copy via temporary (pages are small)
             let tmp: Vec<f32> = self.data[s..s + n].to_vec();
             self.data[d..d + n].copy_from_slice(&tmp);
         }
+        self.dirty[dst as usize] = true;
     }
 
     /// Extract a whole page across layers: [L, page, Hkv, Dh] flat
@@ -134,7 +171,7 @@ impl HostPool {
         out
     }
 
-    /// Inverse of `extract_page` (swap-in).
+    /// Inverse of `extract_page` (swap-in). Marks the page dirty.
     pub fn insert_page(&mut self, page: u32, flat: &[f32]) {
         let n = self.geo.page_elems();
         assert_eq!(flat.len(), self.geo.n_layers * n);
@@ -143,6 +180,7 @@ impl HostPool {
             self.data[d..d + n]
                 .copy_from_slice(&flat[layer * n..(layer + 1) * n]);
         }
+        self.dirty[page as usize] = true;
     }
 }
 
@@ -184,6 +222,30 @@ mod tests {
         p.copy_page(1, 3);
         assert_eq!(p.gather_token(0, 3, 0), &row[..]);
         assert_eq!(p.gather_token(1, 3, 7), &row[..]);
+    }
+
+    #[test]
+    fn mutations_mark_dirty_and_clear_resets() {
+        let mut p = HostPool::zeros(geo());
+        assert_eq!(p.dirty_pages(), 0);
+        let row: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        p.assign_token(0, 1, 0, &row);
+        assert!(p.is_dirty(1));
+        p.token_row_mut(1, 2, 3).fill(9.0);
+        assert!(p.is_dirty(2));
+        p.copy_page(1, 3);
+        assert!(p.is_dirty(3));
+        p.copy_page(0, 0); // self-copy: no divergence
+        assert!(!p.is_dirty(0));
+        let flat = p.extract_page(1);
+        p.clear_dirty(1);
+        p.insert_page(1, &flat);
+        assert!(p.is_dirty(1), "swap-in dirties");
+        assert_eq!(p.dirty_pages(), 3);
+        for pg in 0..4 {
+            p.clear_dirty(pg);
+        }
+        assert_eq!(p.dirty_pages(), 0);
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! Resident window with delta transfer — DESIGN.md §5.
+//!
+//! The paged executables read KV from a dense *window* tensor
+//! [L, W, page, Hkv, dh] holding only the pages the batch's block tables
+//! reference. The seed engine re-gathered that whole window from the
+//! [`HostPool`] on every step, so the steady-state decode gather memcpy
+//! moved O(live context) bytes per token. This module makes the window
+//! *resident* so that memcpy scales with what changed (the PJRT upload
+//! of the assembled window is accounted separately under
+//! `profile::Phase::Upload`):
+//!
+//! * [`ResidentWindow`] gives each physical page a **stable slot** for as
+//!   long as the page stays in the active set. Slots are reclaimed lazily
+//!   (only when a new page needs one and the free list is empty), so
+//!   pages that briefly leave the batch keep their copy.
+//! * [`HostPool`] tracks a **dirty bit** per page (set by ASSIGN, CoW
+//!   copies and swap-in). A step copies a page into the window only when
+//!   it is newly resident or dirty; copying clears the bit.
+//! * [`ResidentWindow::write_row`] is the **write-through** half: the
+//!   engine's scatter mirrors each new token row into the resident slot,
+//!   so in steady-state decode the gather memcpy moves ~1 token row per
+//!   sequence instead of every live page.
+//! * Any layout change (different batch bucket → different W), missing
+//!   buffer restore, a one-shot [`ResidentWindow::invalidate`], or
+//!   delta transfer disabled via [`ResidentWindow::set_delta`] (the
+//!   `window_delta: false` config escape hatch) falls back to a
+//!   **full gather** — the seed behaviour —
+//!   which re-copies every mapped page. Equivalence between the two paths
+//!   is property-tested in `rust/tests/proptest_kvpage.rs`.
+
+use std::collections::HashMap;
+
+use super::pool::{HostPool, PoolGeometry};
+
+/// Sentinel for "slot holds no page".
+const NO_PAGE: u32 = u32::MAX;
+
+/// Cumulative transfer counters (bytes count K and V together).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WindowStats {
+    /// `begin_step` calls.
+    pub steps: u64,
+    /// Whole pages copied pool → window (each covers both pools).
+    pub pages_copied: u64,
+    /// f32 bytes written into the window (gather copies + write-through).
+    pub bytes_moved: u64,
+    /// Write-through token rows mirrored into the window.
+    pub rows_written: u64,
+    /// Steps that rebuilt the window from scratch (fallback path).
+    pub full_gathers: u64,
+    /// Pages copied by the most recent step only.
+    pub last_pages_copied: u64,
+    /// Bytes moved by the most recent step only (incl. write-through).
+    pub last_bytes_moved: u64,
+}
+
+/// Stable-slot window allocator + resident K/V scratch buffers.
+pub struct ResidentWindow {
+    geo: PoolGeometry,
+    /// W of the current layout (0 until the first step).
+    window_pages: usize,
+    slot_of: HashMap<u32, u32>,
+    /// slot → physical page (NO_PAGE when free).
+    page_at: Vec<u32>,
+    /// slot → step that last mapped it (lazy-eviction clock).
+    stamp: Vec<u64>,
+    free: Vec<u32>,
+    steal_cursor: usize,
+    step: u64,
+    full_this_step: bool,
+    delta_enabled: bool,
+    /// Buffers are in place and match the current layout.
+    valid: bool,
+    k_win: Vec<f32>,
+    v_win: Vec<f32>,
+    stats: WindowStats,
+    reported: WindowStats,
+}
+
+impl ResidentWindow {
+    pub fn new(geo: PoolGeometry) -> Self {
+        ResidentWindow {
+            geo,
+            window_pages: 0,
+            slot_of: HashMap::new(),
+            page_at: Vec::new(),
+            stamp: Vec::new(),
+            free: Vec::new(),
+            steal_cursor: 0,
+            step: 0,
+            full_this_step: true,
+            delta_enabled: true,
+            valid: false,
+            k_win: Vec::new(),
+            v_win: Vec::new(),
+            stats: WindowStats::default(),
+            reported: WindowStats::default(),
+        }
+    }
+
+    /// Disable/enable delta transfer. Disabled, every step takes the
+    /// full-gather path (the seed behaviour) — used by benches and the
+    /// equivalence tests.
+    pub fn set_delta(&mut self, enabled: bool) {
+        self.delta_enabled = enabled;
+    }
+
+    pub fn delta_enabled(&self) -> bool {
+        self.delta_enabled
+    }
+
+    /// Drop residency once; the next step full-gathers, then delta
+    /// transfer resumes. (The persistent engine escape hatch is
+    /// `set_delta(false)`, wired to `EngineConfig::window_delta`.)
+    /// Safe to call at any time — correctness never depends on
+    /// residency; exercised by the equivalence proptests.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// Release the slot of a page that died (refcount hit zero). Purely
+    /// an optimization — a dead page would otherwise be stolen lazily.
+    pub fn forget(&mut self, page: u32) {
+        if let Some(slot) = self.slot_of.remove(&page) {
+            self.page_at[slot as usize] = NO_PAGE;
+            self.free.push(slot);
+        }
+    }
+
+    /// Open a step for a window of `window_pages` slots. Resets to the
+    /// full-gather path when the layout changed or residency was lost;
+    /// otherwise keeps slots and contents and lets `map_page` copy only
+    /// what moved.
+    pub fn begin_step(&mut self, window_pages: usize) {
+        self.step += 1;
+        self.stats.steps += 1;
+        self.stats.last_pages_copied = 0;
+        self.stats.last_bytes_moved = 0;
+        let elems =
+            self.geo.n_layers * window_pages * self.geo.page_elems();
+        if self.delta_enabled
+            && self.valid
+            && window_pages == self.window_pages
+            && self.k_win.len() == elems
+            && self.v_win.len() == elems
+        {
+            self.full_this_step = false;
+            return;
+        }
+        self.window_pages = window_pages;
+        // grow-only zeroing: a full step copies every mapped page, and
+        // the kernel never reads a slot below a sequence's live length,
+        // so stale contents from a previous layout are safe (the seed
+        // scratch relied on the same invariant)
+        if self.k_win.len() != elems {
+            self.k_win.resize(elems, 0.0);
+        }
+        if self.v_win.len() != elems {
+            self.v_win.resize(elems, 0.0);
+        }
+        self.slot_of.clear();
+        self.page_at.clear();
+        self.page_at.resize(window_pages, NO_PAGE);
+        self.stamp.clear();
+        self.stamp.resize(window_pages, 0);
+        self.free.clear();
+        self.free.extend((0..window_pages as u32).rev());
+        self.steal_cursor = 0;
+        self.full_this_step = true;
+        self.stats.full_gathers += 1;
+        self.valid = true;
+    }
+
+    /// True when the current step is rebuilding the window from scratch.
+    pub fn is_full_step(&self) -> bool {
+        self.full_this_step
+    }
+
+    /// Map `page` to its stable slot for this step, copying its contents
+    /// from the pools when it is newly resident, dirty, or the step is a
+    /// full gather. Returns `None` only if more distinct pages are mapped
+    /// this step than the window has slots (a caller bug: the engine
+    /// sizes W as batch × max_blocks_per_seq).
+    pub fn map_page(&mut self, k: &mut HostPool, v: &mut HostPool,
+                    page: u32) -> Option<u32> {
+        let (slot, fresh) = match self.slot_of.get(&page) {
+            Some(&s) => (s, false),
+            None => {
+                let s = self.alloc_slot()?;
+                self.slot_of.insert(page, s);
+                self.page_at[s as usize] = page;
+                (s, true)
+            }
+        };
+        self.stamp[slot as usize] = self.step;
+        if fresh || self.full_this_step || k.is_dirty(page)
+            || v.is_dirty(page)
+        {
+            self.copy_page_in(k, v, page, slot);
+        }
+        Some(slot)
+    }
+
+    fn alloc_slot(&mut self) -> Option<u32> {
+        if let Some(s) = self.free.pop() {
+            return Some(s);
+        }
+        // Lazy eviction: steal any slot not referenced by this step's
+        // tables (its page left the batch).
+        let n = self.page_at.len();
+        for i in 0..n {
+            let s = (self.steal_cursor + i) % n;
+            if self.stamp[s] < self.step {
+                self.steal_cursor = (s + 1) % n;
+                let old = self.page_at[s];
+                if old != NO_PAGE {
+                    self.slot_of.remove(&old);
+                }
+                self.page_at[s] = NO_PAGE;
+                return Some(s as u32);
+            }
+        }
+        None
+    }
+
+    fn copy_page_in(&mut self, k: &mut HostPool, v: &mut HostPool,
+                    page: u32, slot: u32) {
+        let pe = self.geo.page_elems();
+        let w = self.window_pages;
+        for layer in 0..self.geo.n_layers {
+            let src = self.geo.offset(layer, page, 0);
+            let dst = (layer * w + slot as usize) * pe;
+            self.k_win[dst..dst + pe]
+                .copy_from_slice(&k.as_slice()[src..src + pe]);
+            self.v_win[dst..dst + pe]
+                .copy_from_slice(&v.as_slice()[src..src + pe]);
+        }
+        k.clear_dirty(page);
+        v.clear_dirty(page);
+        let bytes = (2 * self.geo.n_layers * pe * 4) as u64;
+        self.stats.pages_copied += 1;
+        self.stats.last_pages_copied += 1;
+        self.stats.bytes_moved += bytes;
+        self.stats.last_bytes_moved += bytes;
+    }
+
+    /// Write-through: mirror one token row (both pools, one layer) into
+    /// the page's resident slot, right after the same row was ASSIGNed
+    /// into the pools. Keeps the window in sync so the page's dirty bit
+    /// can be cleared without a re-gather next step. No-ops (leaving the
+    /// page dirty for the next gather) when the page is not mapped in
+    /// the current step or residency is invalid — always safe.
+    pub fn write_row(&mut self, k: &mut HostPool, v: &mut HostPool,
+                     layer: usize, page: u32, slot_in_page: usize) {
+        if !self.delta_enabled || !self.valid {
+            // delta off = seed cost profile: no write-through, the next
+            // full gather re-copies the page anyway
+            return;
+        }
+        let Some(&slot) = self.slot_of.get(&page) else { return };
+        if self.stamp[slot as usize] != self.step {
+            // not mapped this step: window copy may be stale in other
+            // rows; keep the dirty bit and let the next gather fix it.
+            return;
+        }
+        let te = self.geo.token_elems();
+        let dst = (layer * self.window_pages + slot as usize)
+            * self.geo.page_elems()
+            + slot_in_page * te;
+        self.k_win[dst..dst + te]
+            .copy_from_slice(k.gather_token(layer, page, slot_in_page));
+        self.v_win[dst..dst + te]
+            .copy_from_slice(v.gather_token(layer, page, slot_in_page));
+        k.clear_dirty(page);
+        v.clear_dirty(page);
+        let bytes = (2 * te * 4) as u64;
+        self.stats.rows_written += 1;
+        self.stats.bytes_moved += bytes;
+        self.stats.last_bytes_moved += bytes;
+    }
+
+    /// Move the K/V buffers out (zero-copy hand-off to the input
+    /// tensors). Residency is invalid until `restore_buffers`.
+    pub fn take_buffers(&mut self) -> (Vec<f32>, Vec<f32>) {
+        self.valid = false;
+        (std::mem::take(&mut self.k_win), std::mem::take(&mut self.v_win))
+    }
+
+    /// Put the buffers back after the executable ran. Restores residency
+    /// only if the lengths still match the layout; otherwise the next
+    /// step full-gathers.
+    pub fn restore_buffers(&mut self, k: Vec<f32>, v: Vec<f32>) {
+        let elems =
+            self.geo.n_layers * self.window_pages * self.geo.page_elems();
+        if k.len() == elems && v.len() == elems {
+            self.k_win = k;
+            self.v_win = v;
+            self.valid = true;
+        }
+    }
+
+    pub fn window_pages(&self) -> usize {
+        self.window_pages
+    }
+
+    pub fn geometry(&self) -> &PoolGeometry {
+        &self.geo
+    }
+
+    /// Current slot of a page, if resident.
+    pub fn slot(&self, page: u32) -> Option<u32> {
+        self.slot_of.get(&page).copied()
+    }
+
+    pub fn k_window(&self) -> &[f32] {
+        &self.k_win
+    }
+
+    pub fn v_window(&self) -> &[f32] {
+        &self.v_win
+    }
+
+    /// One page's window-resident K data for `layer` (tests/verify).
+    pub fn k_page_slice(&self, layer: usize, slot: u32) -> &[f32] {
+        let pe = self.geo.page_elems();
+        let start = (layer * self.window_pages + slot as usize) * pe;
+        &self.k_win[start..start + pe]
+    }
+
+    pub fn v_page_slice(&self, layer: usize, slot: u32) -> &[f32] {
+        let pe = self.geo.page_elems();
+        let start = (layer * self.window_pages + slot as usize) * pe;
+        &self.v_win[start..start + pe]
+    }
+
+    pub fn stats(&self) -> &WindowStats {
+        &self.stats
+    }
+
+    /// Counters accumulated since the last call (serving-metrics merge).
+    pub fn take_unreported(&mut self) -> WindowStats {
+        let d = WindowStats {
+            steps: self.stats.steps - self.reported.steps,
+            pages_copied: self.stats.pages_copied
+                - self.reported.pages_copied,
+            bytes_moved: self.stats.bytes_moved
+                - self.reported.bytes_moved,
+            rows_written: self.stats.rows_written
+                - self.reported.rows_written,
+            full_gathers: self.stats.full_gathers
+                - self.reported.full_gathers,
+            last_pages_copied: self.stats.last_pages_copied,
+            last_bytes_moved: self.stats.last_bytes_moved,
+        };
+        self.reported = self.stats;
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> PoolGeometry {
+        PoolGeometry { n_layers: 2, n_pages: 16, page_size: 4,
+                       n_kv_heads: 2, d_head: 2 }
+    }
+
+    fn pools() -> (HostPool, HostPool) {
+        (HostPool::zeros(geo()), HostPool::zeros(geo()))
+    }
+
+    fn fill_page(pool: &mut HostPool, page: u32, base: f32) {
+        let g = *pool.geometry();
+        for layer in 0..g.n_layers {
+            for slot in 0..g.page_size {
+                let val = base + (layer * g.page_size + slot) as f32;
+                pool.token_row_mut(layer, page, slot).fill(val);
+            }
+        }
+    }
+
+    fn assert_synced(win: &ResidentWindow, pool_k: &HostPool,
+                     pool_v: &HostPool, page: u32) {
+        let g = *pool_k.geometry();
+        let slot = win.slot(page).expect("page resident");
+        for layer in 0..g.n_layers {
+            let src = g.offset(layer, page, 0);
+            let k_pool = &pool_k.as_slice()[src..src + g.page_elems()];
+            let v_pool = &pool_v.as_slice()[src..src + g.page_elems()];
+            assert_eq!(win.k_page_slice(layer, slot), k_pool,
+                       "K page {page} layer {layer} out of sync");
+            assert_eq!(win.v_page_slice(layer, slot), v_pool,
+                       "V page {page} layer {layer} out of sync");
+        }
+    }
+
+    #[test]
+    fn slots_are_stable_and_clean_pages_are_not_recopied() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        fill_page(&mut k, 3, 10.0);
+        fill_page(&mut v, 3, 20.0);
+
+        w.begin_step(8);
+        let s0 = w.map_page(&mut k, &mut v, 3).unwrap();
+        assert!(w.is_full_step());
+        assert_eq!(w.stats().last_pages_copied, 1);
+        assert_synced(&w, &k, &v, 3);
+
+        // next step, same page untouched: same slot, zero copies
+        w.begin_step(8);
+        let s1 = w.map_page(&mut k, &mut v, 3).unwrap();
+        assert!(!w.is_full_step());
+        assert_eq!(s0, s1, "slot must be stable");
+        assert_eq!(w.stats().last_pages_copied, 0);
+    }
+
+    #[test]
+    fn dirty_pages_are_recopied_and_cleared() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 5).unwrap();
+
+        fill_page(&mut k, 5, 7.0); // marks dirty
+        assert!(k.is_dirty(5));
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 5).unwrap();
+        assert_eq!(w.stats().last_pages_copied, 1);
+        assert!(!k.is_dirty(5));
+        assert_synced(&w, &k, &v, 5);
+    }
+
+    #[test]
+    fn write_through_keeps_window_synced_without_recopy() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 2).unwrap();
+
+        // decode-style: write a new token row into the pools, mirror it
+        for layer in 0..2 {
+            k.token_row_mut(layer, 2, 1).fill(42.0);
+            v.token_row_mut(layer, 2, 1).fill(-42.0);
+            w.write_row(&mut k, &mut v, layer, 2, 1);
+        }
+        assert!(!k.is_dirty(2), "write-through clears the dirty bit");
+        assert_synced(&w, &k, &v, 2);
+
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 2).unwrap();
+        assert_eq!(w.stats().last_pages_copied, 0,
+                   "synced page needs no re-gather");
+    }
+
+    #[test]
+    fn write_row_skips_unmapped_pages_and_keeps_dirty() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(4);
+        k.token_row_mut(0, 9, 0).fill(1.0); // page 9 never mapped
+        w.write_row(&mut k, &mut v, 0, 9, 0);
+        assert!(k.is_dirty(9), "unmapped page must stay dirty");
+        assert_eq!(w.stats().rows_written, 0);
+    }
+
+    #[test]
+    fn layout_change_forces_full_gather() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 1).unwrap();
+        w.begin_step(12); // different W → different strides
+        assert!(w.is_full_step());
+        assert_eq!(w.slot(1), None, "residency dropped on resize");
+        assert_eq!(w.stats().full_gathers, 2);
+    }
+
+    #[test]
+    fn missing_restore_invalidates() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 1).unwrap();
+        let (kb, vb) = w.take_buffers();
+        w.restore_buffers(kb, vb);
+        w.begin_step(8);
+        assert!(!w.is_full_step(), "clean take/restore keeps residency");
+
+        let (_kb, vb) = w.take_buffers();
+        w.restore_buffers(Vec::new(), vb); // lost the K buffer
+        w.begin_step(8);
+        assert!(w.is_full_step(), "bad restore falls back to full gather");
+    }
+
+    #[test]
+    fn slot_stealing_reclaims_stale_pages_only() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(2);
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        w.map_page(&mut k, &mut v, 1).unwrap();
+
+        // page 1 leaves the batch; page 2 arrives and must steal its slot
+        w.begin_step(2);
+        let keep = w.map_page(&mut k, &mut v, 0).unwrap();
+        let s2 = w.map_page(&mut k, &mut v, 2).unwrap();
+        assert_ne!(keep, s2);
+        assert_eq!(w.slot(1), None, "stale page evicted");
+
+        // a third distinct page in the same step must fail (window full)
+        assert_eq!(w.map_page(&mut k, &mut v, 3), None);
+    }
+
+    #[test]
+    fn forget_frees_the_slot() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(1);
+        w.map_page(&mut k, &mut v, 4).unwrap();
+        w.forget(4);
+        assert_eq!(w.slot(4), None);
+        // freed slot is immediately reusable within the same step
+        assert!(w.map_page(&mut k, &mut v, 5).is_some());
+    }
+
+    #[test]
+    fn steady_decode_copies_o1_pages_per_step() {
+        // Single sequence, 5 live pages. Without write-through the tail
+        // page is dirty every step → exactly one page copied per pool
+        // pair per step; with write-through → zero.
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        let pages: Vec<u32> = (0..5).collect();
+        for &p in &pages {
+            fill_page(&mut k, p, p as f32);
+            fill_page(&mut v, p, -(p as f32));
+        }
+        w.begin_step(8);
+        for &p in &pages {
+            w.map_page(&mut k, &mut v, p).unwrap();
+        }
+        assert_eq!(w.stats().last_pages_copied, 5, "first gather is full");
+
+        for step in 0..10 {
+            // a decode wrote one row into the tail page (no mirror)
+            k.token_row_mut(0, 4, step % 4).fill(step as f32);
+            v.token_row_mut(0, 4, step % 4).fill(step as f32);
+            w.begin_step(8);
+            for &p in &pages {
+                w.map_page(&mut k, &mut v, p).unwrap();
+            }
+            assert_eq!(w.stats().last_pages_copied, 1,
+                       "exactly the dirty tail page per step");
+            for &p in &pages {
+                assert_synced(&w, &k, &v, p);
+            }
+        }
+
+        // same loop with write-through: zero page copies per step
+        for step in 0..10 {
+            w.begin_step(8);
+            for &p in &pages {
+                w.map_page(&mut k, &mut v, p).unwrap();
+            }
+            k.token_row_mut(1, 4, step % 4).fill(100.0 + step as f32);
+            v.token_row_mut(1, 4, step % 4).fill(200.0 + step as f32);
+            w.write_row(&mut k, &mut v, 1, 4, step % 4);
+            assert!(w.stats().last_pages_copied <= 1);
+            if step > 0 {
+                assert_eq!(w.stats().last_pages_copied, 0,
+                           "write-through avoids all page re-copies");
+            }
+            for &p in &pages {
+                assert_synced(&w, &k, &v, p);
+            }
+        }
+    }
+
+    #[test]
+    fn delta_disabled_full_gathers_every_step() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.set_delta(false);
+        for _ in 0..3 {
+            w.begin_step(8);
+            assert!(w.is_full_step());
+            w.map_page(&mut k, &mut v, 0).unwrap();
+            assert_eq!(w.stats().last_pages_copied, 1);
+        }
+        assert_eq!(w.stats().full_gathers, 3);
+    }
+}

@@ -12,7 +12,8 @@
 //!   --model tiny|bench|small   --artifacts DIR
 //!   --attention paged|contiguous|no_cache
 //!   --growth exact|power_of_two   --no-prefix-cache
-//!   --max-batch N --prefill-chunk N --config FILE.json
+//!   --no-window-delta   --max-batch N --prefill-chunk N
+//!   --config FILE.json
 //! ```
 
 use std::path::PathBuf;
@@ -67,6 +68,7 @@ fn print_help() {
            --artifacts DIR              (default ./artifacts)\n\
            --attention paged|contiguous|no_cache\n\
            --growth exact|power_of_two  --no-prefix-cache\n\
+           --no-window-delta (full KV-window re-gather every step)\n\
            --max-batch N --prefill-chunk N --config FILE.json"
     );
 }
@@ -130,6 +132,10 @@ impl Flags {
         }
         if self.has("no-prefix-cache") {
             cfg.prefix_cache = false;
+        }
+        if self.has("no-window-delta") {
+            // full-gather fallback every step (DESIGN.md §5 escape hatch)
+            cfg.window_delta = false;
         }
         if let Some(b) = self.get("max-batch") {
             cfg.scheduler.max_batch_size =

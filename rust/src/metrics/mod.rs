@@ -7,6 +7,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::kvpage::WindowStats;
+
 /// Log-bucketed latency histogram (lock-free record path).
 pub struct LatencyHistogram {
     /// bucket i covers [floor * r^i, floor * r^(i+1)) with r = sqrt(2)
@@ -119,6 +121,16 @@ pub struct ServingMetrics {
     pub tokens_decoded: AtomicU64,
     pub prefix_cache_hits: AtomicU64,
     pub prefix_cached_tokens: AtomicU64,
+    /// Bytes copied into the resident KV window (gather + write-through;
+    /// K and V together) — the per-step transfer volume DESIGN.md §5
+    /// minimizes.
+    pub window_bytes_moved: AtomicU64,
+    /// Whole pages gathered into the window (newly-resident or dirty).
+    pub window_pages_copied: AtomicU64,
+    /// Token rows written through to resident slots.
+    pub window_rows_written: AtomicU64,
+    /// Steps that fell back to a from-scratch full gather.
+    pub window_full_gathers: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -129,6 +141,26 @@ impl ServingMetrics {
 
     pub fn inc(counter: &AtomicU64, by: u64) {
         counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Merge a window-transfer delta (`PagedEngine::take_window_delta`).
+    pub fn note_window(&self, d: &WindowStats) {
+        Self::inc(&self.window_bytes_moved, d.bytes_moved);
+        Self::inc(&self.window_pages_copied, d.pages_copied);
+        Self::inc(&self.window_rows_written, d.rows_written);
+        Self::inc(&self.window_full_gathers, d.full_gathers);
+    }
+
+    /// Mean bytes uploaded into the KV window per recorded decode step
+    /// (prefill gathers in the same run are amortized into it; decode
+    /// dominates in steady state).
+    pub fn window_bytes_per_decode_step(&self) -> f64 {
+        let steps = self.decode_step.count();
+        if steps == 0 {
+            return 0.0;
+        }
+        self.window_bytes_moved.load(Ordering::Relaxed) as f64
+            / steps as f64
     }
 
     pub fn elapsed(&self) -> Duration {
@@ -153,6 +185,8 @@ impl ServingMetrics {
             "requests: admitted={} finished={} rejected={} preempted={}\n\
              tokens:   prefill={} decode={} ({:.1} tok/s decode)\n\
              prefix cache: hits={} cached_tokens={}\n\
+             kv window: pages_copied={} rows_written={} \
+             full_gathers={} ({:.1} KB/decode step)\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -165,6 +199,10 @@ impl ServingMetrics {
             self.decode_tokens_per_sec(),
             self.prefix_cache_hits.load(Ordering::Relaxed),
             self.prefix_cached_tokens.load(Ordering::Relaxed),
+            self.window_pages_copied.load(Ordering::Relaxed),
+            self.window_rows_written.load(Ordering::Relaxed),
+            self.window_full_gathers.load(Ordering::Relaxed),
+            self.window_bytes_per_decode_step() / 1e3,
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -177,7 +215,7 @@ impl ServingMetrics {
     /// CSV row of the headline numbers (benches aggregate these).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1}",
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1},{:.0}",
             self.requests_finished.load(Ordering::Relaxed),
             self.tokens_prefilled.load(Ordering::Relaxed),
             self.tokens_decoded.load(Ordering::Relaxed),
@@ -187,12 +225,14 @@ impl ServingMetrics {
             self.per_token.p50().as_secs_f64() * 1e3,
             self.per_token.p99().as_secs_f64() * 1e3,
             self.decode_tokens_per_sec(),
+            self.window_bytes_per_decode_step(),
         )
     }
 
     pub const CSV_HEADER: &'static str =
         "finished,tokens_prefilled,tokens_decoded,preempted,\
-         ttft_p50_ms,ttft_p99_ms,tok_p50_ms,tok_p99_ms,decode_tok_per_s";
+         ttft_p50_ms,ttft_p99_ms,tok_p50_ms,tok_p99_ms,decode_tok_per_s,\
+         window_bytes_per_step";
 }
 
 /// Scoped timer recording into a histogram on drop.
@@ -261,6 +301,28 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("decode=100"));
         assert!(!m.csv_row().is_empty());
+    }
+
+    #[test]
+    fn window_counters_merge_and_normalize() {
+        let m = ServingMetrics::new();
+        let d = WindowStats {
+            steps: 2,
+            pages_copied: 3,
+            bytes_moved: 4096,
+            rows_written: 5,
+            full_gathers: 1,
+            ..Default::default()
+        };
+        m.note_window(&d);
+        assert_eq!(m.window_bytes_per_decode_step(), 0.0, "no steps yet");
+        m.decode_step.record(Duration::from_millis(1));
+        m.decode_step.record(Duration::from_millis(1));
+        assert_eq!(m.window_bytes_per_decode_step(), 2048.0);
+        let s = m.summary();
+        assert!(s.contains("pages_copied=3"), "{s}");
+        assert!(s.contains("full_gathers=1"), "{s}");
+        assert!(m.csv_row().ends_with("2048"), "{}", m.csv_row());
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
-    /// memcpy of referenced pages into the dense window
+    /// full re-gather of every referenced page into the dense window
+    /// (fallback path: first step, bucket change, delta disabled)
     SubpoolGather = 0,
     /// buffer_from_host uploads of all step inputs
     Upload = 1,
@@ -19,13 +20,16 @@ pub enum Phase {
     Execute = 2,
     /// tuple literal download + split + to_vec
     Download = 3,
-    /// ASSIGN scatter of new KV into the host pool
+    /// ASSIGN scatter of new KV into the host pool + resident window
     Scatter = 4,
+    /// delta path: slot remap + copy of dirty/newly-resident pages only
+    /// (DESIGN.md §5)
+    WindowDelta = 5,
 }
 
-const N: usize = 5;
-const NAMES: [&str; N] =
-    ["subpool_gather", "upload", "execute", "download", "scatter"];
+const N: usize = 6;
+const NAMES: [&str; N] = ["subpool_gather", "upload", "execute",
+                          "download", "scatter", "window_delta"];
 
 static NANOS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
 static COUNTS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];

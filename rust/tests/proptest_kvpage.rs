@@ -16,7 +16,8 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use paged_flex::kvpage::{
-    AllocError, GrowthPolicy, PageAllocator, PageManager,
+    AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
+    PoolGeometry, ResidentWindow,
 };
 use paged_flex::trace::Rng;
 
@@ -211,6 +212,366 @@ fn exhaustion_recovery_cycles() {
         h.check(&ctx);
         h.drain(&ctx);
     }
+}
+
+// ----------------------------------------------------------------------
+// Resident-window delta transfer vs full gather (DESIGN.md §5)
+//
+// Drives the kvpage layer the way engine::paged does — RESERVE/APPEND
+// with host-side ASSIGN, fork CoW, FREE, preemption (invalidate), and
+// per-step window gathers — keeping one delta window and one
+// full-gather window side by side. After every gather, each mapped
+// page's window-resident contents must be element-identical to the pool
+// (and therefore to each other) for both paths.
+// ----------------------------------------------------------------------
+
+const GEO: PoolGeometry = PoolGeometry {
+    n_layers: 2,
+    n_pages: N_PAGES as usize,
+    page_size: PAGE_SIZE,
+    n_kv_heads: 2,
+    d_head: 4,
+};
+const BATCH_CAP: usize = 4;
+const WINDOW_PAGES: usize = BATCH_CAP * MAX_BLOCKS;
+
+struct WindowHarness {
+    mgr: PageManager,
+    k: HostPool,
+    v: HostPool,
+    delta: ResidentWindow,
+    full: ResidentWindow,
+    live: Vec<u64>,
+    next_id: u64,
+    rng: Rng,
+    counter: f32,
+}
+
+impl WindowHarness {
+    fn new(seed: u64, policy: GrowthPolicy) -> Self {
+        let alloc = Arc::new(PageAllocator::new(
+            N_PAGES, PAGE_SIZE, BYTES_PER_TOKEN, policy));
+        let mut full = ResidentWindow::new(GEO);
+        full.set_delta(false); // from-scratch gather every step
+        WindowHarness {
+            mgr: PageManager::new(alloc, MAX_BLOCKS),
+            k: HostPool::zeros(GEO),
+            v: HostPool::zeros(GEO),
+            delta: ResidentWindow::new(GEO),
+            full,
+            live: vec![],
+            next_id: 1,
+            rng: Rng::seeded(seed),
+            counter: 0.0,
+        }
+    }
+
+    /// Host-side ASSIGN of positions [start, start+n) with fresh values
+    /// (marks pages dirty, like the engine's scatter into the pool).
+    fn write_tokens(&mut self, id: u64, start: usize, n: usize) {
+        let pages = self.mgr.table(id).unwrap().pages().to_vec();
+        for pos in start..start + n {
+            let (page, off) = (pages[pos / PAGE_SIZE], pos % PAGE_SIZE);
+            for layer in 0..GEO.n_layers {
+                self.counter += 1.0;
+                self.k.token_row_mut(layer, page, off)
+                    .fill(self.counter);
+                self.v.token_row_mut(layer, page, off)
+                    .fill(-self.counter);
+            }
+        }
+    }
+
+    fn reserve_op(&mut self) {
+        let id = self.next_id;
+        let len = 1 + self.rng.below(60) as usize;
+        let prompt: Vec<u32> =
+            (0..len).map(|_| self.rng.below(512) as u32).collect();
+        match self.mgr.reserve(id, &prompt) {
+            Ok(out) => {
+                self.next_id += 1;
+                self.live.push(id);
+                let fresh = prompt.len() - out.cached_tokens;
+                self.write_tokens(id, out.cached_tokens, fresh);
+                self.mgr.note_assigned(id, fresh).unwrap();
+                if self.rng.below(2) == 0 {
+                    self.mgr.register_prefix(id, &prompt).unwrap();
+                }
+            }
+            Err(AllocError::PoolExhausted { .. })
+            | Err(AllocError::CapacityExceeded { .. }) => {}
+            Err(e) => panic!("reserve failed oddly: {e}"),
+        }
+    }
+
+    fn append_op(&mut self) {
+        let Some(&id) = pick(&mut self.rng, &self.live) else { return };
+        let extra = 1 + self.rng.below(10) as usize;
+        match self.mgr.prepare_append(id, extra) {
+            Ok(plan) => {
+                if let Some((src, dst)) = plan.cow_copy {
+                    self.k.copy_page(src, dst);
+                    self.v.copy_page(src, dst);
+                }
+                let len = self.mgr.seq_len(id).unwrap();
+                self.write_tokens(id, len, extra);
+                self.mgr.note_assigned(id, extra).unwrap();
+            }
+            Err(AllocError::PoolExhausted { .. })
+            | Err(AllocError::CapacityExceeded { .. }) => {}
+            Err(e) => panic!("append failed oddly: {e}"),
+        }
+    }
+
+    fn fork_op(&mut self) {
+        let Some(&parent) = pick(&mut self.rng, &self.live) else {
+            return;
+        };
+        let plen = self.mgr.seq_len(parent).unwrap();
+        if plen == 0 {
+            return;
+        }
+        let at = 1 + self.rng.below(plen as u64) as usize;
+        let child = self.next_id;
+        match self.mgr.fork(parent, child, at) {
+            Ok(plan) => {
+                if let Some((src, dst)) = plan.cow_copy {
+                    self.k.copy_page(src, dst);
+                    self.v.copy_page(src, dst);
+                }
+                self.next_id += 1;
+                self.live.push(child);
+            }
+            Err(AllocError::PoolExhausted { .. }) => {}
+            Err(e) => panic!("fork failed oddly: {e}"),
+        }
+    }
+
+    fn free_op(&mut self, preempt: bool) {
+        if self.live.is_empty() {
+            return;
+        }
+        let i = self.rng.below(self.live.len() as u64) as usize;
+        let id = self.live.swap_remove(i);
+        for page in self.mgr.free(id).unwrap() {
+            self.delta.forget(page);
+            self.full.forget(page);
+        }
+        if preempt {
+            // exercise the wholesale invalidation fallback (explicit
+            // invalidate / config toggle path; engine preemption itself
+            // now just forgets dead pages like release)
+            self.delta.invalidate();
+        }
+    }
+
+    /// One engine-shaped decode step over a random batch: EXTEND + CoW,
+    /// gather into both windows, verify, then scatter the new token row
+    /// with write-through into the delta window.
+    fn decode_step_op(&mut self, ctx: &str) {
+        let mut batch: Vec<u64> = vec![];
+        let want = 1 + self.rng.below(BATCH_CAP as u64) as usize;
+        for _ in 0..want {
+            if let Some(&id) = pick(&mut self.rng, &self.live) {
+                if !batch.contains(&id) {
+                    batch.push(id);
+                }
+            }
+        }
+        batch.retain(|&id| match self.mgr.prepare_append(id, 1) {
+            Ok(plan) => {
+                if let Some((src, dst)) = plan.cow_copy {
+                    self.k.copy_page(src, dst);
+                    self.v.copy_page(src, dst);
+                }
+                true
+            }
+            Err(AllocError::PoolExhausted { .. })
+            | Err(AllocError::CapacityExceeded { .. }) => false,
+            Err(e) => panic!("{ctx}: prepare_append: {e}"),
+        });
+        if batch.is_empty() {
+            return;
+        }
+
+        // delta window maps first (it consumes the dirty bits)
+        let mut mapped: Vec<(u64, Vec<u32>)> = vec![];
+        self.delta.begin_step(WINDOW_PAGES);
+        for &id in &batch {
+            let len = self.mgr.seq_len(id).unwrap();
+            let pages = self
+                .mgr
+                .table(id)
+                .unwrap()
+                .blocks_covering(len + 1)
+                .to_vec();
+            for &p in &pages {
+                self.delta
+                    .map_page(&mut self.k, &mut self.v, p)
+                    .expect("delta window slots exhausted");
+            }
+            mapped.push((id, pages));
+        }
+        self.full.begin_step(WINDOW_PAGES);
+        for (_, pages) in &mapped {
+            for &p in pages {
+                self.full
+                    .map_page(&mut self.k, &mut self.v, p)
+                    .expect("full window slots exhausted");
+            }
+        }
+        self.verify(ctx, &mapped);
+
+        // scatter one decoded token per sequence, write-through to the
+        // resident delta window (the full window re-gathers anyway)
+        for &id in &batch {
+            let len = self.mgr.seq_len(id).unwrap();
+            let pages = self.mgr.table(id).unwrap().pages().to_vec();
+            let (page, off) =
+                (pages[len / PAGE_SIZE], len % PAGE_SIZE);
+            for layer in 0..GEO.n_layers {
+                self.counter += 1.0;
+                self.k.token_row_mut(layer, page, off)
+                    .fill(self.counter);
+                self.v.token_row_mut(layer, page, off)
+                    .fill(-self.counter);
+                self.delta.write_row(&mut self.k, &mut self.v, layer,
+                                     page, off);
+            }
+            self.mgr.note_assigned(id, 1).unwrap();
+        }
+    }
+
+    /// Every mapped page: delta window == full window == pool, for every
+    /// layer, both pools.
+    fn verify(&self, ctx: &str, mapped: &[(u64, Vec<u32>)]) {
+        let pe = GEO.page_elems();
+        for (id, pages) in mapped {
+            for &p in pages {
+                let ds = self.delta.slot(p).unwrap();
+                let fs = self.full.slot(p).unwrap();
+                for layer in 0..GEO.n_layers {
+                    let src = GEO.offset(layer, p, 0);
+                    let kp = &self.k.as_slice()[src..src + pe];
+                    let vp = &self.v.as_slice()[src..src + pe];
+                    assert_eq!(self.delta.k_page_slice(layer, ds), kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: delta window diverged");
+                    assert_eq!(self.full.k_page_slice(layer, fs), kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: full window diverged");
+                    assert_eq!(self.delta.v_page_slice(layer, ds), vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: delta window diverged");
+                    assert_eq!(self.full.v_page_slice(layer, fs), vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: full window diverged");
+                }
+            }
+        }
+    }
+
+    fn step(&mut self, ctx: &str) {
+        match self.rng.below(10) {
+            0..=2 => self.reserve_op(),
+            3..=4 => self.append_op(),
+            5 => self.fork_op(),
+            6 => self.free_op(false),
+            7 => self.free_op(true),
+            _ => self.decode_step_op(ctx),
+        }
+    }
+}
+
+#[test]
+fn window_delta_matches_full_gather_random_interleavings() {
+    for seed in 0..12u64 {
+        let policy = if seed % 2 == 0 {
+            GrowthPolicy::Exact
+        } else {
+            GrowthPolicy::PowerOfTwo
+        };
+        let mut h = WindowHarness::new(1000 + seed, policy);
+        for step in 0..250 {
+            let ctx = format!("seed {seed} step {step} ({policy:?})");
+            h.step(&ctx);
+        }
+        // drain: every sequence freed; pools fully reclaimed
+        while !h.live.is_empty() {
+            h.free_op(false);
+        }
+        assert_eq!(h.mgr.allocator().free_pages(), N_PAGES as usize,
+                   "seed {seed}: pages leaked");
+        assert!(h.delta.stats().full_gathers <= h.delta.stats().steps,
+                "seed {seed}: gather accounting inconsistent");
+        // the full-gather baseline always re-copies, so across a run it
+        // must move at least as much as the delta path
+        assert!(h.full.stats().bytes_moved
+                    >= h.delta.stats().bytes_moved
+                        - h.delta.stats().rows_written
+                            * (2 * GEO.token_elems() * 4) as u64,
+                "seed {seed}: delta gathered more page bytes than full");
+    }
+}
+
+#[test]
+fn steady_single_sequence_decode_copies_o1_pages() {
+    // The acceptance property: after the first gather, a steady-state
+    // decode step copies at most one page per pool pair into the window
+    // (the freshly mapped tail page at a page crossing; zero otherwise,
+    // thanks to write-through), while a full gather re-copies every
+    // live page every step.
+    let mut h = WindowHarness::new(7, GrowthPolicy::Exact);
+    let prompt: Vec<u32> = (0..40).collect(); // 5 pages
+    h.mgr.reserve(1, &prompt).unwrap();
+    h.live.push(1);
+    h.write_tokens(1, 0, 40);
+    h.mgr.note_assigned(1, 40).unwrap();
+
+    let mut delta_total = 0u64;
+    let mut full_total = 0u64;
+    let steps = 24usize;
+    for step in 0..steps {
+        h.mgr.prepare_append(1, 1).unwrap();
+        let len = h.mgr.seq_len(1).unwrap();
+
+        h.delta.begin_step(WINDOW_PAGES);
+        let pages =
+            h.mgr.table(1).unwrap().blocks_covering(len + 1).to_vec();
+        for &p in &pages {
+            h.delta.map_page(&mut h.k, &mut h.v, p).unwrap();
+        }
+        h.full.begin_step(WINDOW_PAGES);
+        for &p in &pages {
+            h.full.map_page(&mut h.k, &mut h.v, p).unwrap();
+        }
+        if step > 0 {
+            assert!(h.delta.stats().last_pages_copied <= 1,
+                    "step {step}: delta copied {} pages",
+                    h.delta.stats().last_pages_copied);
+        }
+        assert_eq!(h.full.stats().last_pages_copied, pages.len() as u64,
+                   "step {step}: full gather must copy every live page");
+        delta_total += h.delta.stats().last_pages_copied;
+        full_total += h.full.stats().last_pages_copied;
+
+        let (page, off) = (pages[len / PAGE_SIZE], len % PAGE_SIZE);
+        for layer in 0..GEO.n_layers {
+            h.counter += 1.0;
+            h.k.token_row_mut(layer, page, off).fill(h.counter);
+            h.v.token_row_mut(layer, page, off).fill(-h.counter);
+            h.delta.write_row(&mut h.k, &mut h.v, layer, page, off);
+        }
+        h.mgr.note_assigned(1, 1).unwrap();
+    }
+    // step 0 full-gathers the 6 mapped pages; appending 24 tokens to a
+    // 40-token sequence crosses a page boundary twice more (len 48, 56);
+    // every other step rides the write-through and copies nothing
+    assert!(delta_total <= 6 + 2,
+            "delta moved {delta_total} pages over {steps} steps");
+    assert!(full_total > delta_total * 10,
+            "full gather ({full_total}) must dwarf delta \
+             ({delta_total})");
 }
 
 #[test]
