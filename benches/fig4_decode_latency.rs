@@ -20,7 +20,8 @@ fn main() {
     print_table(
         &format!("Fig.4: decode ms/token ±1σ, paged vs default, \
                   model={model}"),
-        &["seq", "paged_ms", "±σ", "default_ms", "±σ", "win_KB/step"],
+        &["seq", "paged_ms", "±σ", "default_ms", "±σ", "win_KB/step",
+          "upload_KB/step"],
         &rows
             .iter()
             .map(|r| vec![
@@ -30,19 +31,26 @@ fn main() {
                 f(r.default_ms_mean, 2),
                 f(r.default_ms_std, 2),
                 f(r.paged_bytes_per_step / 1e3, 1),
+                f(r.paged_upload_bytes_per_step / 1e3, 1),
             ])
             .collect::<Vec<_>>(),
     );
     // transfer-volume regression guard: the delta path keeps the
     // host-side gather memcpy roughly flat in context length; a full
-    // re-gather grows it linearly (benches/window_delta.rs isolates the
-    // comparison; the PJRT upload of the window tensor is separate and
-    // still scales with window size)
+    // re-gather grows it linearly. The upload column tracks the
+    // host→device push (flat on a range-capable backend; the
+    // whole-window fallback on real xla_extension 0.5.1 —
+    // benches/window_delta.rs isolates and asserts the delta-vs-full
+    // comparison for both costs)
     if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
         println!("\nwindow gather: {:.1} KB/step @seq={} → {:.1} KB/step \
                   @seq={}",
                  first.paged_bytes_per_step / 1e3, first.seq_len,
                  last.paged_bytes_per_step / 1e3, last.seq_len);
+        println!("device upload: {:.1} KB/step @seq={} → {:.1} KB/step \
+                  @seq={}",
+                 first.paged_upload_bytes_per_step / 1e3, first.seq_len,
+                 last.paged_upload_bytes_per_step / 1e3, last.seq_len);
     }
     let wins = rows
         .iter()

@@ -1,7 +1,12 @@
-//! Window-delta transfer bench — bytes moved into the dense KV window
-//! per decode step, resident delta path vs the seed's full re-gather
-//! (DESIGN.md §5). Host-side only: drives the kvpage layer directly, so
-//! it runs without compiled artifacts.
+//! Window-delta transfer bench — bytes moved per decode step on both
+//! halves of the transfer path (DESIGN.md §5–6): the pool→window host
+//! gather memcpy, and the host→device upload of the window buffers
+//! through the dirty-range `DeviceWindow` protocol (modeled per-range
+//! copies, `xla::SimDeviceBuffer`) — resident delta path vs the seed's
+//! full re-gather + whole-window re-upload. Host-side only: drives the
+//! kvpage + runtime::device_window layers directly, so it runs without
+//! compiled artifacts. Exits nonzero when the delta path stops beating
+//! the full path at seq ≥ 512 (CI regression guard).
 
 include!("common.rs");
 
@@ -13,6 +18,7 @@ use paged_flex::kvpage::{
     GrowthPolicy, HostPool, PageAllocator, PageManager, PoolGeometry,
     ResidentWindow,
 };
+use paged_flex::runtime::DeviceWindow;
 
 const N_LAYERS: usize = 4;
 const PAGE_SIZE: usize = 16;
@@ -20,13 +26,14 @@ const N_KV_HEADS: usize = 4;
 const D_HEAD: usize = 16;
 
 struct StepCost {
-    bytes_per_step: f64,
+    gather_bytes_per_step: f64,
+    upload_bytes_per_step: f64,
     pages_per_step: f64,
     ns_per_step: f64,
 }
 
 /// Prefill one sequence of `seq_len` tokens host-side, then run `steps`
-/// decode steps, measuring window-transfer volume per step.
+/// decode steps, measuring gather and device-upload volume per step.
 fn run_mode(seq_len: usize, steps: usize, delta: bool) -> StepCost {
     let max_blocks = (seq_len + steps).div_ceil(PAGE_SIZE) + 2;
     let n_pages = max_blocks + 8;
@@ -48,6 +55,8 @@ fn run_mode(seq_len: usize, steps: usize, delta: bool) -> StepCost {
     let mut v = HostPool::zeros(geo);
     let mut win = ResidentWindow::new(geo);
     win.set_delta(delta);
+    let mut k_dev = DeviceWindow::sim();
+    let mut v_dev = DeviceWindow::sim();
     let window_pages = max_blocks; // batch 1 × max_blocks_per_seq
 
     let prompt: Vec<u32> = (0..seq_len as u32).collect();
@@ -65,10 +74,21 @@ fn run_mode(seq_len: usize, steps: usize, delta: bool) -> StepCost {
     }
     mgr.note_assigned(1, seq_len).unwrap();
 
-    let bytes0 = win.stats().bytes_moved;
-    let pages0 = win.stats().pages_copied;
-    let t0 = Instant::now();
+    // step 0 seeds the window and device buffers (full gather + full
+    // upload in both modes); counters start at step 1 so every column
+    // reports steady state
+    let mut gather0 = 0u64;
+    let mut pages0 = 0u64;
+    let mut upload0 = 0u64;
+    let mut t0 = Instant::now();
     for step in 0..steps {
+        if step == 1 {
+            gather0 = win.stats().bytes_moved;
+            pages0 = win.stats().pages_copied;
+            upload0 = k_dev.stats().bytes_uploaded
+                + v_dev.stats().bytes_uploaded;
+            t0 = Instant::now();
+        }
         mgr.prepare_append(1, 1).unwrap();
         let len = mgr.seq_len(1).unwrap();
         win.begin_step(window_pages);
@@ -76,6 +96,11 @@ fn run_mode(seq_len: usize, steps: usize, delta: bool) -> StepCost {
         for &p in table.blocks_covering(len + 1) {
             win.map_page(&mut k, &mut v, p).unwrap();
         }
+        // push what changed to the (modeled) device buffers; with
+        // delta off the plan is Full every step — the seed cost
+        let plan = win.take_upload_plan();
+        k_dev.apply(win.k_window(), &plan);
+        v_dev.apply(win.v_window(), &plan);
         // the decode kernel produced one new KV row; scatter writes it
         // into the pool and through to the resident slot
         let pos = len;
@@ -89,12 +114,16 @@ fn run_mode(seq_len: usize, steps: usize, delta: bool) -> StepCost {
         mgr.note_assigned(1, 1).unwrap();
     }
     let dt = t0.elapsed();
+    let denom = (steps - 1).max(1) as f64;
     StepCost {
-        bytes_per_step: (win.stats().bytes_moved - bytes0) as f64
-            / steps as f64,
+        gather_bytes_per_step: (win.stats().bytes_moved - gather0)
+            as f64 / denom,
+        upload_bytes_per_step: (k_dev.stats().bytes_uploaded
+            + v_dev.stats().bytes_uploaded
+            - upload0) as f64 / denom,
         pages_per_step: (win.stats().pages_copied - pages0) as f64
-            / steps as f64,
-        ns_per_step: dt.as_nanos() as f64 / steps as f64,
+            / denom,
+        ns_per_step: dt.as_nanos() as f64 / denom,
     }
 }
 
@@ -111,14 +140,24 @@ fn main() {
     for &seq in seqs {
         let full = run_mode(seq, steps, false);
         let delta = run_mode(seq, steps, true);
-        if seq >= 512 && delta.bytes_per_step >= full.bytes_per_step {
+        if seq >= 512
+            && (delta.gather_bytes_per_step
+                >= full.gather_bytes_per_step
+                || delta.upload_bytes_per_step
+                    >= full.upload_bytes_per_step)
+        {
             win_at_512 = false;
         }
         rows.push(vec![
             seq.to_string(),
-            f(full.bytes_per_step / 1e3, 1),
-            f(delta.bytes_per_step / 1e3, 1),
-            f(full.bytes_per_step / delta.bytes_per_step.max(1.0), 1),
+            f(full.gather_bytes_per_step / 1e3, 1),
+            f(delta.gather_bytes_per_step / 1e3, 1),
+            f(full.gather_bytes_per_step
+                  / delta.gather_bytes_per_step.max(1.0), 1),
+            f(full.upload_bytes_per_step / 1e3, 1),
+            f(delta.upload_bytes_per_step / 1e3, 1),
+            f(full.upload_bytes_per_step
+                  / delta.upload_bytes_per_step.max(1.0), 1),
             f(full.pages_per_step, 1),
             f(delta.pages_per_step, 2),
             f(full.ns_per_step / 1e3, 1),
@@ -126,14 +165,15 @@ fn main() {
         ]);
     }
     print_table(
-        "Window transfer per decode step: full re-gather vs resident \
-         delta (single sequence)",
-        &["seq", "full_KB", "delta_KB", "×less", "full_pages",
+        "Transfer per decode step: full re-gather + re-upload vs \
+         resident delta (single sequence)",
+        &["seq", "gath_full_KB", "gath_delta_KB", "×less",
+          "upl_full_KB", "upl_delta_KB", "×less", "full_pages",
           "delta_pages", "full_µs", "delta_µs"],
         &rows,
     );
-    println!("\nshape check: delta bytes/step < full bytes/step at \
-              seq ≥ 512: {}",
+    println!("\nshape check: delta gather AND upload bytes/step < full \
+              at seq ≥ 512: {}",
              if win_at_512 { "PASS" } else { "FAIL" });
     if !win_at_512 {
         // regression guard: make CI's bench-smoke step go red

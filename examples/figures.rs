@@ -91,11 +91,12 @@ fn main() {
             .unwrap();
         save("fig4_decode.csv",
              "seq,paged_ms,paged_std,default_ms,default_std,\
-              window_bytes_per_step",
+              window_bytes_per_step,upload_bytes_per_step",
              rows.iter().map(|r| format!(
-                 "{},{:.3},{:.3},{:.3},{:.3},{:.0}", r.seq_len,
+                 "{},{:.3},{:.3},{:.3},{:.3},{:.0},{:.0}", r.seq_len,
                  r.paged_ms_mean, r.paged_ms_std, r.default_ms_mean,
-                 r.default_ms_std, r.paged_bytes_per_step)).collect());
+                 r.default_ms_std, r.paged_bytes_per_step,
+                 r.paged_upload_bytes_per_step)).collect());
     }
     println!("done.");
 }

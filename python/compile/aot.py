@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax._src.lib import xla_client as xc
 
 from . import model
-from .configs import AOT_PLAN, CONFIGS, ModelConfig
+from .configs import AOT_PLAN, CONFIGS, ModelConfig, paged_window_pages
 from .weights import save_weights
 
 WEIGHT_SEED = 42
@@ -57,12 +57,15 @@ def _param_specs(cfg: ModelConfig):
 
 
 def _pool_shape(cfg: ModelConfig, n_pages=None):
-    """Pool tensor shape. Model artifacts use the *active subpool* sized
-    to the batch (B * max_blocks_per_seq pages): the runtime gathers the
-    pages referenced by the step's block tables into this dense window and
-    remaps table entries, so per-step upload scales with the active set,
-    not pool capacity (DESIGN.md §5). Pool-service artifacts keep the full
-    cfg.n_pages shape."""
+    """Pool tensor shape. Paged model artifacts use the *active subpool*
+    window, sized ONCE per config (fixed W = max_blocks_per_seq × the
+    largest paged batch bucket, `configs.paged_window_pages`): the
+    runtime gathers the pages referenced by the step's block tables into
+    this dense window and remaps table entries, so per-step transfer
+    scales with the active set, not pool capacity — and because every
+    paged bucket shares the same W, the runtime's resident window and
+    device buffer survive bucket changes (DESIGN.md §5–6).
+    Pool-service artifacts keep the full cfg.n_pages shape."""
     if n_pages is None:
         n_pages = cfg.n_pages
     return (cfg.n_layers, n_pages, cfg.page_size, cfg.n_kv_heads,
@@ -83,11 +86,15 @@ def _wrap(cfg, entry, n_params):
     return fn
 
 
-def build_artifacts(cfg: ModelConfig):
+def build_artifacts(cfg: ModelConfig, per_bucket_window: bool = False):
     """Yield (name, kind, meta, fn, input_specs, donate_indices, takes_params).
 
     donate indices are relative to the full flat arg list; manifest input
-    indices are relative to the post-params tail.
+    indices are relative to the post-params tail. `per_bucket_window`
+    restores the pre-fixed-W shape (W = b × max_blocks_per_seq per
+    bucket) for deployments on full-upload-only backends that prefer
+    small windows over bucket-stable residency (pair with the runtime's
+    `window_layout = per_bucket`).
     """
     n = len(model.param_spec(cfg))
     plan = AOT_PLAN[cfg.name]
@@ -109,10 +116,13 @@ def build_artifacts(cfg: ModelConfig):
              ("seq_lens", _spec((b,), I32))],
             (), True,  # cache write-back is Rust-side
         )
+    fixed_pages = paged_window_pages(cfg.name)
+    window_pages = lambda b: (b * cfg.max_blocks_per_seq
+                              if per_bucket_window else fixed_pages)
     paged_inputs = lambda b, c: [
         ("tokens", _spec((b, c), I32)),
-        ("k_pool", _spec(_pool_shape(cfg, b * cfg.max_blocks_per_seq))),
-        ("v_pool", _spec(_pool_shape(cfg, b * cfg.max_blocks_per_seq))),
+        ("k_pool", _spec(_pool_shape(cfg, window_pages(b)))),
+        ("v_pool", _spec(_pool_shape(cfg, window_pages(b)))),
         ("block_tables", _spec((b, cfg.max_blocks_per_seq), I32)),
         ("cache_lens", _spec((b,), I32)),
         ("chunk_lens", _spec((b,), I32)),
@@ -184,7 +194,8 @@ def lower_artifact(fn, param_specs, input_specs, donate):
     return to_hlo_text(lowered), out_shapes
 
 
-def export_config(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
+def export_config(cfg: ModelConfig, out_dir: str, force: bool,
+                  per_bucket_window: bool = False) -> dict:
     os.makedirs(os.path.join(out_dir, cfg.name), exist_ok=True)
     params = model.init_params(cfg, WEIGHT_SEED)
     weights_file = f"weights_{cfg.name}.bin"
@@ -197,8 +208,17 @@ def export_config(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
     param_specs = _param_specs(cfg)
     n_params = len(param_specs)
     artifacts = {}
+    # Input shapes recorded by the previous export, if any: an existing
+    # .hlo.txt is only reusable when its input contract is unchanged
+    # (the fixed-W window resize is exactly such a contract change).
+    prior = {}
+    prior_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(prior_path):
+        with open(prior_path) as f:
+            prior = (json.load(f).get("configs", {})
+                     .get(cfg.name, {}).get("artifacts", {}))
     for (name, kind, meta, fn, input_specs, donate,
-         takes_params) in build_artifacts(cfg):
+         takes_params) in build_artifacts(cfg, per_bucket_window):
         rel = os.path.join(cfg.name, f"{name}.hlo.txt")
         path = os.path.join(out_dir, rel)
         a_params = param_specs if takes_params else []
@@ -214,9 +234,14 @@ def export_config(cfg: ModelConfig, out_dir: str, force: bool) -> dict:
             ],
             "donated_inputs": [d - a_n for d in donate],
         }
-        if os.path.exists(path) and not force:
-            # Staleness of sources is handled by the Makefile; reuse output
-            # shapes by re-deriving them from a cheap abstract eval.
+        unchanged = (prior.get(name, {}).get("inputs")
+                     == record["inputs"])
+        if os.path.exists(path) and not force and unchanged:
+            # Source staleness is the caller's concern; shape staleness
+            # is checked here (a reused .hlo.txt with a changed input
+            # contract would pass manifest validation but fail at
+            # execute). Output shapes re-derive from a cheap abstract
+            # eval.
             t0 = time.time()
             _, out_shapes = lower_artifact(fn, a_params, input_specs,
                                            donate)
@@ -250,15 +275,24 @@ def main() -> None:
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--configs", default="tiny,bench,small")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--window-layout", choices=["fixed", "per_bucket"],
+        default="fixed",
+        help="paged KV window sizing: 'fixed' (one W per config, "
+             "residency survives bucket changes) or 'per_bucket' "
+             "(W = b × max_blocks_per_seq, smaller uploads on "
+             "full-upload-only backends; pair with the runtime's "
+             "window_layout = per_bucket)")
     args = ap.parse_args()
 
+    per_bucket = args.window_layout == "per_bucket"
     os.makedirs(args.out, exist_ok=True)
     manifest = {"version": MANIFEST_VERSION, "configs": {}}
     t0 = time.time()
     for name in args.configs.split(","):
         cfg = CONFIGS[name.strip()]
-        manifest["configs"][cfg.name] = export_config(cfg, args.out,
-                                                      args.force)
+        manifest["configs"][cfg.name] = export_config(
+            cfg, args.out, args.force, per_bucket)
     man_path = os.path.join(args.out, "manifest.json")
     with open(man_path + ".tmp", "w") as f:
         json.dump(manifest, f, indent=1)

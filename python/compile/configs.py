@@ -130,3 +130,18 @@ AOT_PLAN: Dict[str, AotPlan] = {
 
 def prefill_buckets(name: str) -> List[Tuple[int, int]]:
     return AOT_PLAN[name]["prefill"]
+
+
+def paged_window_pages(name: str) -> int:
+    """Fixed resident-window size W shared by every paged artifact of a
+    config: max_blocks_per_seq × the largest paged batch bucket
+    (decode and chunk plans together). Because W no longer depends on
+    the bucket, the runtime's resident window and device buffer survive
+    batch-size churn and prefill/decode alternation (DESIGN.md §6); the
+    Rust side validates this invariant from the manifest
+    (`ConfigEntry::paged_window_pages`)."""
+    plan = AOT_PLAN[name]
+    cfg = CONFIGS[name]
+    batches = [b for b in plan["paged_decode"]]
+    batches += [b for b, _ in plan["paged_chunk"]]
+    return cfg.max_blocks_per_seq * max(batches, default=1)

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from compile import aot, model, weights
-from compile.configs import AOT_PLAN, CONFIGS
+from compile.configs import AOT_PLAN, CONFIGS, paged_window_pages
 
 ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
@@ -117,15 +117,42 @@ class TestManifest:
     def test_pool_shapes_consistent(self, manifest):
         for name, entry in manifest["configs"].items():
             cfg = CONFIGS[name]
+            # layout must be consistent per config: every paged
+            # artifact fixed-W (default, DESIGN.md §6) or every one
+            # per-bucket (--window-layout per_bucket export) — a mixed
+            # manifest means a partially stale export. For the largest
+            # bucket the two sizes coincide, which is consistent with
+            # either layout.
+            fixed_w = paged_window_pages(name)
+            layouts = set()
             for aname, art in entry["artifacts"].items():
-                if art["kind"] in ("copy_pages", "read_pages",
-                                   "write_pages"):
-                    expect_pages = cfg.n_pages  # full pool services
-                else:
-                    expect_pages = art.get("batch", 1) * \
-                        cfg.max_blocks_per_seq  # active subpool window
-                shape = [cfg.n_layers, expect_pages, cfg.page_size,
-                         cfg.n_kv_heads, cfg.d_head]
+                service = art["kind"] in ("copy_pages", "read_pages",
+                                          "write_pages")
+                pb_w = art.get("batch", 1) * cfg.max_blocks_per_seq
                 for inp in art["inputs"]:
-                    if inp["name"] in ("k_pool", "v_pool"):
-                        assert inp["shape"] == shape, (aname, inp)
+                    if inp["name"] not in ("k_pool", "v_pool"):
+                        continue
+                    pages = inp["shape"][1]
+                    tail = [cfg.page_size, cfg.n_kv_heads, cfg.d_head]
+                    assert inp["shape"] == [cfg.n_layers, pages] + tail, \
+                        (aname, inp)
+                    if service:
+                        assert pages == cfg.n_pages, (aname, inp)
+                        continue
+                    assert pages in (fixed_w, pb_w), (aname, inp)
+                    if pages == fixed_w != pb_w:
+                        layouts.add("fixed")
+                    elif pages == pb_w != fixed_w:
+                        layouts.add("per_bucket")
+            assert len(layouts) <= 1, (
+                f"{name}: mixed window layouts {layouts} — "
+                "partially stale export, re-run compile.aot --force")
+
+    def test_fixed_window_covers_every_bucket(self):
+        for name, plan in AOT_PLAN.items():
+            cfg = CONFIGS[name]
+            w = paged_window_pages(name)
+            for b in plan["paged_decode"]:
+                assert w >= b * cfg.max_blocks_per_seq, (name, b)
+            for b, _ in plan["paged_chunk"]:
+                assert w >= b * cfg.max_blocks_per_seq, (name, b)

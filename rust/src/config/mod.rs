@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::kvpage::GrowthPolicy;
+use crate::kvpage::{GrowthPolicy, WindowLayout};
 use crate::util::json::{parse, Value};
 use crate::util::{Result, WrapErr};
 use crate::bail;
@@ -74,6 +74,53 @@ impl From<GrowthPolicyCfg> for GrowthPolicy {
             GrowthPolicyCfg::Exact => GrowthPolicy::Exact,
             GrowthPolicyCfg::PowerOfTwo => GrowthPolicy::PowerOfTwo,
         }
+    }
+}
+
+/// String forms for [`WindowLayout`] (the enum itself lives in
+/// `kvpage::window`, next to the protocol it configures).
+pub fn window_layout_as_str(l: WindowLayout) -> &'static str {
+    match l {
+        WindowLayout::Fixed => "fixed",
+        WindowLayout::PerBucket => "per_bucket",
+    }
+}
+
+pub fn window_layout_from_str(s: &str) -> Result<WindowLayout> {
+    Ok(match s {
+        "fixed" => WindowLayout::Fixed,
+        "per_bucket" | "bucket" => WindowLayout::PerBucket,
+        _ => bail!("unknown window layout '{s}' (fixed|per_bucket)"),
+    })
+}
+
+/// How the assembled window reaches the device each step
+/// (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum UploadMode {
+    /// Push only the coalesced dirty ranges the resident window
+    /// reports (full upload on fallback triggers).
+    #[default]
+    Delta,
+    /// Re-push the whole window buffer every step (seed behaviour; the
+    /// forced path on backends without range updates).
+    Full,
+}
+
+impl UploadMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            UploadMode::Delta => "delta",
+            UploadMode::Full => "full",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "delta" => UploadMode::Delta,
+            "full" => UploadMode::Full,
+            _ => bail!("unknown upload mode '{s}' (delta|full)"),
+        })
     }
 }
 
@@ -174,8 +221,16 @@ pub struct EngineConfig {
     pub prefix_cache: bool,
     /// Resident-window delta transfer (DESIGN.md §5). Off forces the
     /// full-gather path every step — the escape hatch if the delta
-    /// path misbehaves.
+    /// path misbehaves. (Implies full device uploads too: a full
+    /// gather always re-pushes the whole window.)
     pub window_delta: bool,
+    /// Resident-window sizing policy (DESIGN.md §6): `fixed` keeps
+    /// residency across batch-bucket changes; `per_bucket` is the
+    /// pre-fixed-W artifact escape hatch.
+    pub window_layout: WindowLayout,
+    /// Host→device window upload mode (DESIGN.md §6): `delta` pushes
+    /// coalesced dirty ranges, `full` re-pushes the whole window.
+    pub window_upload: UploadMode,
     pub scheduler: SchedulerConfig,
     /// Default sampling params (overridable per request).
     pub sampling: SamplingConfig,
@@ -190,6 +245,8 @@ impl Default for EngineConfig {
             growth_policy: GrowthPolicyCfg::Exact,
             prefix_cache: true,
             window_delta: true,
+            window_layout: WindowLayout::Fixed,
+            window_upload: UploadMode::Delta,
             scheduler: SchedulerConfig::default(),
             sampling: SamplingConfig::default(),
         }
@@ -207,6 +264,9 @@ impl EngineConfig {
             ("growth_policy", Value::str(self.growth_policy.as_str())),
             ("prefix_cache", Value::Bool(self.prefix_cache)),
             ("window_delta", Value::Bool(self.window_delta)),
+            ("window_layout",
+             Value::str(window_layout_as_str(self.window_layout))),
+            ("window_upload", Value::str(self.window_upload.as_str())),
             ("scheduler", Value::obj(vec![
                 ("max_batch_size", Value::num(s.max_batch_size as f64)),
                 ("max_running_seqs", Value::num(s.max_running_seqs as f64)),
@@ -266,6 +326,14 @@ impl EngineConfig {
             window_delta: v.opt("window_delta")
                 .map(|x| x.as_bool()).transpose()?
                 .unwrap_or(d.window_delta),
+            window_layout: v.opt("window_layout")
+                .map(|x| x.as_str()).transpose()?
+                .map(window_layout_from_str).transpose()?
+                .unwrap_or(d.window_layout),
+            window_upload: v.opt("window_upload")
+                .map(|x| x.as_str()).transpose()?
+                .map(UploadMode::from_str).transpose()?
+                .unwrap_or(d.window_upload),
             scheduler: sched,
             sampling: match v.opt("sampling") {
                 Some(s) => SamplingConfig::from_json(s)?,
@@ -314,6 +382,24 @@ mod tests {
         assert_eq!(AttentionMode::from_str("no_cache").unwrap(),
                    AttentionMode::NoCache);
         assert!(AttentionMode::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn window_layout_and_upload_strings() {
+        assert_eq!(window_layout_from_str("fixed").unwrap(),
+                   WindowLayout::Fixed);
+        assert_eq!(window_layout_from_str("per_bucket").unwrap(),
+                   WindowLayout::PerBucket);
+        assert!(window_layout_from_str("wide").is_err());
+        assert_eq!(UploadMode::from_str("full").unwrap(),
+                   UploadMode::Full);
+        assert!(UploadMode::from_str("partial").is_err());
+        let v = parse(
+            r#"{"window_layout": "per_bucket", "window_upload": "full"}"#,
+        ).unwrap();
+        let cfg = EngineConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.window_layout, WindowLayout::PerBucket);
+        assert_eq!(cfg.window_upload, UploadMode::Full);
     }
 
     #[test]

@@ -289,8 +289,10 @@ impl Coordinator {
         let t0 = Instant::now();
         let results = pe.prefill_chunk(rt, ids, chunk)?;
         let window = pe.take_window_delta();
+        let upload = pe.take_upload_delta();
         self.engine.metrics.prefill_step.record(t0.elapsed());
         self.engine.metrics.note_window(&window);
+        self.engine.metrics.note_upload(&upload);
         let mut prefilled_tokens = 0u64;
         for (seq, done, logits) in results {
             let live = self.live_mut(seq)?;
@@ -371,8 +373,10 @@ impl Coordinator {
         let results = pe.decode_step(rt, &live_ids, &next)?;
         let dt = t0.elapsed();
         let window = pe.take_window_delta();
+        let upload = pe.take_upload_delta();
         self.engine.metrics.decode_step.record(dt);
         self.engine.metrics.note_window(&window);
+        self.engine.metrics.note_upload(&upload);
         let per = dt.div_f64(live_ids.len() as f64);
         for _ in 0..live_ids.len() {
             self.engine.metrics.per_token.record(per);

@@ -54,6 +54,8 @@ impl Engine {
                     cfg.prefix_cache,
                 );
                 pe.set_delta_transfer(cfg.window_delta);
+                pe.set_window_layout(cfg.window_layout);
+                pe.set_upload_mode(cfg.window_upload);
                 paged = Some(pe);
             }
             AttentionMode::Contiguous => {

@@ -6,28 +6,37 @@
 //!
 //! Per step the engine maps the *active subpool* — only the pages the
 //! batch's block tables reference — into the dense
-//! [L, B·maxB, page, Hkv, dh] window the artifact was compiled for.
+//! [L, W, page, Hkv, dh] window the artifact was compiled for.
 //! Mapping goes through the [`ResidentWindow`] (DESIGN.md §5): each
 //! physical page keeps a stable window slot across steps, and only pages
 //! that are newly resident or dirty are copied; the ASSIGN scatter
 //! writes new token rows through to both the pool and the resident slot.
 //! The host-side gather memcpy therefore moves O(tokens written) bytes
-//! per steady-state decode step instead of O(live context). (The PJRT
-//! upload of the window input tensor itself is still O(window) on this
-//! CPU adaptation — on device-resident hardware both costs disappear
-//! because the window *is* the pool; see DESIGN.md §5.) Batch-bucket
-//! changes and lost buffers fall back to the seed's full gather;
-//! freeing or preempting a sequence releases just its dead pages'
-//! slots.
+//! per steady-state decode step instead of O(live context).
+//!
+//! The device half (DESIGN.md §6): under the default
+//! [`WindowLayout::Fixed`] policy W is bucket-independent (largest
+//! paged bucket × max_blocks_per_seq, the shape every paged artifact is
+//! exported with), so residency survives prefill/decode alternation and
+//! batch churn, and the engine keeps one persistent [`DeviceWindow`]
+//! per pool: each step it takes the window's [`UploadPlan`] and pushes
+//! only the coalesced dirty ranges, falling back to a full upload on
+//! buffer loss, layout change, `--no-window-delta`, or a backend
+//! without range updates (xla_extension 0.5.1 — there the whole-window
+//! `buffer_from_host` at execute time remains the real transfer and the
+//! device windows account for it as full uploads). Freeing or
+//! preempting a sequence releases just its dead pages' slots.
 
 use std::collections::HashMap;
 
+use crate::config::UploadMode;
 use crate::kvpage::{
     AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
-    PoolGeometry, ResidentWindow, SeqId, WindowStats,
+    PoolGeometry, ResidentWindow, SeqId, UploadPlan, WindowLayout,
+    WindowStats,
 };
 use crate::model::ModelSpec;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{DeviceWindow, HostTensor, Runtime, UploadStats};
 use crate::util::profile::{self, Phase};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
@@ -81,6 +90,18 @@ pub struct PagedEngine {
     /// transfer bookkeeping (replaces the per-step remap HashMap and the
     /// full re-gather of the whole active subpool).
     window: ResidentWindow,
+    /// Window sizing policy; Fixed caches the manifest-validated W in
+    /// `fixed_pages` on first use, PerBucket caches the manifest's
+    /// fixed W (if any) in `manifest_w` for its per-step layout check.
+    layout: WindowLayout,
+    fixed_pages: usize,
+    manifest_w: Option<Option<usize>>,
+    /// Persistent device-side window buffers (K and V) running the
+    /// dirty-range upload protocol — accounting-only on the 0.5.1 PJRT
+    /// backing, which cannot update buffers in place (DESIGN.md §6).
+    k_dev: DeviceWindow,
+    v_dev: DeviceWindow,
+    upload_delta: bool,
     scr: StepScratch,
 }
 
@@ -108,6 +129,12 @@ impl PagedEngine {
             seqs: HashMap::new(),
             spec: spec.clone(),
             window: ResidentWindow::new(geo),
+            layout: WindowLayout::default(),
+            fixed_pages: 0,
+            manifest_w: None,
+            k_dev: DeviceWindow::pjrt(),
+            v_dev: DeviceWindow::pjrt(),
+            upload_delta: true,
             scr: StepScratch::default(),
         }
     }
@@ -132,8 +159,36 @@ impl PagedEngine {
     /// `--no-window-delta` CLI flag as the operator escape hatch; the
     /// kvpage-level equivalence tests and `benches/window_delta.rs`
     /// exercise the same fallback via `ResidentWindow::set_delta`.
+    /// A full gather always re-pushes the whole window, so this also
+    /// forces full device uploads.
     pub fn set_delta_transfer(&mut self, enabled: bool) {
         self.window.set_delta(enabled);
+    }
+
+    /// Window sizing policy (`EngineConfig::window_layout`). Takes
+    /// effect on the next step; a change relayouts the window there.
+    pub fn set_window_layout(&mut self, layout: WindowLayout) {
+        self.layout = layout;
+    }
+
+    /// Host→device upload mode (`EngineConfig::window_upload`): Full
+    /// re-pushes the whole window every step even when the gather ran
+    /// on the delta path.
+    pub fn set_upload_mode(&mut self, mode: UploadMode) {
+        self.upload_delta = mode == UploadMode::Delta;
+    }
+
+    /// Cumulative device-window upload counters, K and V summed.
+    pub fn upload_stats(&self) -> UploadStats {
+        self.k_dev.stats().plus(self.v_dev.stats())
+    }
+
+    /// Upload counters accumulated since the last call (the coordinator
+    /// merges these into `ServingMetrics` after each step).
+    pub fn take_upload_delta(&mut self) -> UploadStats {
+        self.k_dev
+            .take_unreported()
+            .plus(&self.v_dev.take_unreported())
     }
 
     /// RESERVE + sequence bookkeeping. Errors bubble PoolExhausted so the
@@ -321,10 +376,76 @@ impl PagedEngine {
         Ok(results)
     }
 
+    /// Resident-window size for this step's batch bucket `b` under the
+    /// configured layout (DESIGN.md §6). Fixed reads W from the
+    /// manifest (all paged artifacts must agree) and caches it, so
+    /// bucket changes never relayout the window.
+    fn window_pages_for(&mut self, rt: &Runtime, b: usize)
+                        -> Result<usize> {
+        let maxb = self.spec.max_blocks_per_seq;
+        match self.layout {
+            WindowLayout::PerBucket => {
+                // fail with a hint, not a generic shape error, when
+                // the manifest holds fixed-W artifacts (every paged
+                // artifact agreeing on one W larger than this bucket);
+                // the manifest scan runs once, the bucket check per
+                // step
+                let cached = *self.manifest_w.get_or_insert_with(|| {
+                    rt.entry().paged_window_pages().ok().flatten()
+                });
+                if let Some(w) = cached {
+                    ensure!(w == b * maxb,
+                            "window_layout = per_bucket but the \
+                             artifacts were exported with fixed W = \
+                             {w} (bucket {b} wants {}) — set \
+                             window_layout = fixed, or re-export with \
+                             `compile.aot --window-layout per_bucket`",
+                            b * maxb);
+                }
+                Ok(b * maxb)
+            }
+            WindowLayout::Fixed => {
+                if self.fixed_pages == 0 {
+                    let entry = rt.entry();
+                    let w = match entry.paged_window_pages()? {
+                        Some(w) => w,
+                        // no paged artifacts in the manifest: analytic
+                        // fixed W (the run below would fail to find an
+                        // artifact anyway)
+                        None => {
+                            let bmax = entry
+                                .paged_decode_batches()
+                                .into_iter()
+                                .chain(
+                                    entry
+                                        .paged_chunk_buckets()
+                                        .into_iter()
+                                        .map(|(bb, _)| bb),
+                                )
+                                .max()
+                                .unwrap_or(b)
+                                .max(b);
+                            bmax * maxb
+                        }
+                    };
+                    self.fixed_pages = w;
+                }
+                ensure!(self.fixed_pages >= b * maxb,
+                        "batch bucket {b} needs {} window pages but the \
+                         artifacts were exported with W = {} — \
+                         re-export with `make artifacts` or set \
+                         window_layout = per_bucket",
+                        b * maxb, self.fixed_pages);
+                Ok(self.fixed_pages)
+            }
+        }
+    }
+
     /// Map the active subpool into the resident window (delta transfer,
-    /// full gather on fallback), remap tables to stable slots, execute.
-    /// Batch tensors come from `self.scr` (filled by the caller) and are
-    /// reclaimed after the call.
+    /// full gather on fallback), push the dirty ranges to the device
+    /// windows, remap tables to stable slots, execute. Batch tensors
+    /// come from `self.scr` (filled by the caller) and are reclaimed
+    /// after the call.
     fn run_paged(
         &mut self,
         rt: &Runtime,
@@ -336,7 +457,7 @@ impl PagedEngine {
         let maxb = self.spec.max_blocks_per_seq;
         let ps = self.spec.page_size;
         let geo = *self.k_pool.geometry();
-        let window_pages = b * maxb;
+        let window_pages = self.window_pages_for(rt, b)?;
 
         // remap physical pages -> stable window slots, copying only
         // newly-resident or dirty pages (everything on a full gather)
@@ -365,6 +486,17 @@ impl PagedEngine {
                 }
             }
         }
+        // device upload: only the ranges that changed since the last
+        // step (plan Full on fallback triggers and in Full upload
+        // mode; the 0.5.1 PJRT backing cannot delta, falls back, and
+        // records the whole-window re-push it actually performs)
+        let mut plan = self.window.take_upload_plan();
+        if !self.upload_delta {
+            plan = UploadPlan::Full;
+        }
+        self.k_dev.apply(self.window.k_window(), &plan);
+        self.v_dev.apply(self.window.v_window(), &plan);
+
         let win_shape = vec![geo.n_layers, window_pages, ps,
                              geo.n_kv_heads, geo.d_head];
 
@@ -383,31 +515,44 @@ impl PagedEngine {
             HostTensor::i32(std::mem::take(&mut self.scr.chunk_lens),
                             vec![b]),
         ];
-        let result = rt
-            .run(artifact, &inputs)
-            .wrap_err_with(|| format!("running {artifact}"));
+        let result = rt.run(artifact, &inputs).wrap_err_with(|| {
+            format!("running {artifact} (window layout '{}', W = \
+                     {window_pages})",
+                    crate::config::window_layout_as_str(self.layout))
+        });
         let mut it = inputs.into_iter();
-        if let Some(HostTensor::I32 { data, .. }) = it.next() {
-            self.scr.tokens = data;
-        }
-        let mut k_back = Vec::new();
-        let mut v_back = Vec::new();
-        if let Some(HostTensor::F32 { data, .. }) = it.next() {
-            k_back = data;
-        }
-        if let Some(HostTensor::F32 { data, .. }) = it.next() {
-            v_back = data;
-        }
-        if let Some(HostTensor::I32 { data, .. }) = it.next() {
-            self.scr.tables = data;
-        }
-        if let Some(HostTensor::I32 { data, .. }) = it.next() {
-            self.scr.cache_lens = data;
-        }
-        if let Some(HostTensor::I32 { data, .. }) = it.next() {
-            self.scr.chunk_lens = data;
-        }
+        self.scr.tokens = it
+            .next()
+            .and_then(HostTensor::into_i32)
+            .unwrap_or_default();
+        let k_back = it
+            .next()
+            .and_then(HostTensor::into_f32)
+            .unwrap_or_default();
+        let v_back = it
+            .next()
+            .and_then(HostTensor::into_f32)
+            .unwrap_or_default();
+        self.scr.tables = it
+            .next()
+            .and_then(HostTensor::into_i32)
+            .unwrap_or_default();
+        self.scr.cache_lens = it
+            .next()
+            .and_then(HostTensor::into_i32)
+            .unwrap_or_default();
+        self.scr.chunk_lens = it
+            .next()
+            .and_then(HostTensor::into_i32)
+            .unwrap_or_default();
         self.window.restore_buffers(k_back, v_back);
+        if result.is_err() {
+            // failed execute ⇒ assume the device lost its buffers: the
+            // next step falls back to a full gather + full upload
+            self.window.invalidate();
+            self.k_dev.invalidate();
+            self.v_dev.invalidate();
+        }
         result
     }
 

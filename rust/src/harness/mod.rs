@@ -226,17 +226,22 @@ pub struct Fig4Row {
     pub default_ms_std: f64,
     /// Mean bytes the host gather memcpy + write-through moved into the
     /// KV window per decode step (paged path) — the transfer-volume
-    /// regression guard for DESIGN.md §5. The PJRT upload of the
-    /// assembled window tensor is a separate, window-sized cost.
+    /// regression guard for DESIGN.md §5.
     pub paged_bytes_per_step: f64,
+    /// Mean bytes pushed host→device into the persistent window
+    /// buffers per decode step (DESIGN.md §6). Flat in context length
+    /// on a range-capable backend; on the real xla_extension 0.5.1
+    /// path this records the whole-window fallback it actually pays.
+    pub paged_upload_bytes_per_step: f64,
 }
 
 pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                            seq_lens: &[usize], decode_tokens: usize,
                            runs: usize) -> Result<Vec<Fig4Row>> {
-    // returns (ms/token, window bytes/step; 0 for the default kernel)
+    // returns (ms/token, window bytes/step, upload bytes/step; zeros
+    // for the default kernel)
     let measure =
-        |mode: AttentionMode, seq: usize| -> Result<(f64, f64)> {
+        |mode: AttentionMode, seq: usize| -> Result<(f64, f64, f64)> {
         let mut cfg = EngineConfig::default();
         cfg.model = model.into();
         cfg.artifacts_dir = artifacts.to_path_buf();
@@ -265,6 +270,7 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                     .decode_step(&eng.rt, &[id], &[argmax(&logits)])?
                     .into_iter().next().unwrap().1;
                 let bytes0 = pe.window_stats().bytes_moved;
+                let upload0 = pe.upload_stats().bytes_uploaded;
                 let t0 = Instant::now();
                 for _ in 0..decode_tokens {
                     let tok = argmax(&logits);
@@ -279,7 +285,9 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                     / decode_tokens as f64;
                 let bytes = (pe.window_stats().bytes_moved - bytes0)
                     as f64 / decode_tokens as f64;
-                Ok((ms, bytes))
+                let upload = (pe.upload_stats().bytes_uploaded
+                    - upload0) as f64 / decode_tokens as f64;
+                Ok((ms, bytes, upload))
             }
             AttentionMode::Contiguous => {
                 let id = eng.fresh_seq_id();
@@ -302,7 +310,7 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
                         .1;
                 }
                 Ok((t0.elapsed().as_secs_f64() * 1e3
-                    / decode_tokens as f64, 0.0))
+                    / decode_tokens as f64, 0.0, 0.0))
             }
             AttentionMode::NoCache => Err(err!("not used in fig4")),
         }
@@ -312,11 +320,14 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
     for &seq in seq_lens {
         let mut paged = Vec::new();
         let mut paged_bytes = Vec::new();
+        let mut paged_upload = Vec::new();
         let mut dflt = Vec::new();
         for _ in 0..runs {
-            let (ms, bytes) = measure(AttentionMode::Paged, seq)?;
+            let (ms, bytes, upload) =
+                measure(AttentionMode::Paged, seq)?;
             paged.push(ms);
             paged_bytes.push(bytes);
+            paged_upload.push(upload);
             dflt.push(measure(AttentionMode::Contiguous, seq)?.0);
         }
         rows.push(Fig4Row {
@@ -326,6 +337,7 @@ pub fn fig4_decode_latency(model: &str, artifacts: &std::path::Path,
             default_ms_mean: mean(&dflt),
             default_ms_std: std_dev(&dflt),
             paged_bytes_per_step: mean(&paged_bytes),
+            paged_upload_bytes_per_step: mean(&paged_upload),
         });
     }
     Ok(rows)

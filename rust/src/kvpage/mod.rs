@@ -8,8 +8,9 @@
 //! * [`prefix`] — content-addressed prefix sharing.
 //! * [`pool`] — pool geometry + host mirror (swap, tests).
 //! * [`window`] — resident window + delta transfer: stable page→slot
-//!   mapping and dirty-page tracking so a decode step uploads what
-//!   changed, not what is live (DESIGN.md §5).
+//!   mapping, dirty-page tracking, and dirty-slot upload planning so a
+//!   decode step gathers *and* uploads what changed, not what is live
+//!   (DESIGN.md §5–6).
 //! * [`audit`] — live/reserved/wasted accounting (the patched-allocator
 //!   telemetry of Sec. III-C).
 //! * [`baseline`] — the contiguous max-length allocator being displaced.
@@ -32,4 +33,4 @@ pub use freelist::FreeList;
 pub use manager::{AllocError, AppendPlan, PageManager, ReserveOutcome, SeqId};
 pub use pool::{HostPool, PoolGeometry};
 pub use prefix::{PrefixIndex, PrefixMatch};
-pub use window::{ResidentWindow, WindowStats};
+pub use window::{ResidentWindow, UploadPlan, WindowLayout, WindowStats};

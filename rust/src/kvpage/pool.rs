@@ -152,9 +152,16 @@ impl HostPool {
         for layer in 0..self.geo.n_layers {
             let s = self.geo.offset(layer, src, 0);
             let d = self.geo.offset(layer, dst, 0);
-            // split_at_mut-free copy via temporary (pages are small)
-            let tmp: Vec<f32> = self.data[s..s + n].to_vec();
-            self.data[d..d + n].copy_from_slice(&tmp);
+            // in-place disjoint copy (src != dst ⇒ the ranges cannot
+            // overlap within a layer): no temporary on the CoW path
+            let (lo, hi, from_lo) =
+                if s < d { (s, d, true) } else { (d, s, false) };
+            let (a, b) = self.data.split_at_mut(hi);
+            if from_lo {
+                b[..n].copy_from_slice(&a[lo..lo + n]);
+            } else {
+                a[lo..lo + n].copy_from_slice(&b[..n]);
+            }
         }
         self.dirty[dst as usize] = true;
     }

@@ -5,9 +5,9 @@
 //! reference. The seed engine re-gathered that whole window from the
 //! [`HostPool`] on every step, so the steady-state decode gather memcpy
 //! moved O(live context) bytes per token. This module makes the window
-//! *resident* so that memcpy scales with what changed (the PJRT upload
-//! of the assembled window is accounted separately under
-//! `profile::Phase::Upload`):
+//! *resident* so that memcpy scales with what changed, and plans the
+//! matching host→device pushes (`take_upload_plan` →
+//! `runtime::DeviceWindow`, DESIGN.md §6):
 //!
 //! * [`ResidentWindow`] gives each physical page a **stable slot** for as
 //!   long as the page stays in the active set. Slots are reclaimed lazily
@@ -20,13 +20,22 @@
 //!   engine's scatter mirrors each new token row into the resident slot,
 //!   so in steady-state decode the gather memcpy moves ~1 token row per
 //!   sequence instead of every live page.
-//! * Any layout change (different batch bucket → different W), missing
-//!   buffer restore, a one-shot [`ResidentWindow::invalidate`], or
-//!   delta transfer disabled via [`ResidentWindow::set_delta`] (the
+//! * Any layout change (different W), missing buffer restore, a
+//!   one-shot [`ResidentWindow::invalidate`], or delta transfer
+//!   disabled via [`ResidentWindow::set_delta`] (the
 //!   `window_delta: false` config escape hatch) falls back to a
 //!   **full gather** — the seed behaviour —
 //!   which re-copies every mapped page. Equivalence between the two paths
 //!   is property-tested in `rust/tests/proptest_kvpage.rs`.
+//! * Under the default [`WindowLayout::Fixed`] policy the engine keeps W
+//!   constant across batch buckets (largest paged bucket ×
+//!   max_blocks_per_seq), so bucket churn in mixed prefill/decode
+//!   serving no longer drops residency at all (DESIGN.md §6).
+//! * [`ResidentWindow::take_upload_plan`] closes the device half of the
+//!   protocol: the window remembers which slots changed since the last
+//!   upload and hands back coalesced element ranges (or a full-upload
+//!   order) for `runtime::DeviceWindow` to push, making the host→device
+//!   transfer O(changed) as well.
 
 use std::collections::HashMap;
 
@@ -34,6 +43,37 @@ use super::pool::{HostPool, PoolGeometry};
 
 /// Sentinel for "slot holds no page".
 const NO_PAGE: u32 = u32::MAX;
+
+/// How the engine sizes the resident window (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WindowLayout {
+    /// W fixed at max_blocks_per_seq × the largest compiled paged batch
+    /// bucket, shared by every paged artifact: residency and the device
+    /// buffer survive batch-bucket changes. Requires artifacts exported
+    /// with the same fixed window shape (`make artifacts`).
+    #[default]
+    Fixed,
+    /// Seed behaviour: W = batch bucket × max_blocks_per_seq; any
+    /// bucket change relayouts the window and drops all residency.
+    /// Escape hatch for artifact sets predating the fixed layout.
+    PerBucket,
+}
+
+/// Host→device upload work for one step, produced by
+/// [`ResidentWindow::take_upload_plan`] and executed by
+/// `runtime::DeviceWindow::apply` (same plan for the K and V buffers,
+/// which share slot bookkeeping).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UploadPlan {
+    /// Push the whole window buffer: layout changed, residency or the
+    /// device buffer was lost, or delta transfer is disabled.
+    Full,
+    /// Ascending, non-overlapping (element offset, element count)
+    /// ranges covering every slot whose window contents changed since
+    /// the previous plan was taken — adjacent dirty slots coalesced,
+    /// expanded per layer.
+    Ranges(Vec<(usize, usize)>),
+}
 
 /// Cumulative transfer counters (bytes count K and V together).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -66,11 +106,21 @@ pub struct ResidentWindow {
     stamp: Vec<u64>,
     free: Vec<u32>,
     steal_cursor: usize,
+    /// Slots stamped by the current step — lets `alloc_slot` refuse in
+    /// O(1) when every slot is live instead of rescanning the clock.
+    mapped_this_step: usize,
+    /// Clock-hand slot inspections (amortization telemetry, tested).
+    steal_probes: u64,
     step: u64,
     full_this_step: bool,
     delta_enabled: bool,
     /// Buffers are in place and match the current layout.
     valid: bool,
+    /// slot → window contents changed since the last `take_upload_plan`.
+    upload_dirty: Vec<bool>,
+    /// The next upload plan must be Full (layout rebuilt since the last
+    /// plan was taken).
+    pending_full_upload: bool,
     k_win: Vec<f32>,
     v_win: Vec<f32>,
     stats: WindowStats,
@@ -87,10 +137,14 @@ impl ResidentWindow {
             stamp: Vec::new(),
             free: Vec::new(),
             steal_cursor: 0,
+            mapped_this_step: 0,
+            steal_probes: 0,
             step: 0,
             full_this_step: true,
             delta_enabled: true,
             valid: false,
+            upload_dirty: Vec::new(),
+            pending_full_upload: false,
             k_win: Vec::new(),
             v_win: Vec::new(),
             stats: WindowStats::default(),
@@ -122,7 +176,17 @@ impl ResidentWindow {
     /// an optimization — a dead page would otherwise be stolen lazily.
     pub fn forget(&mut self, page: u32) {
         if let Some(slot) = self.slot_of.remove(&page) {
-            self.page_at[slot as usize] = NO_PAGE;
+            let s = slot as usize;
+            self.page_at[s] = NO_PAGE;
+            if self.stamp[s] == self.step && self.step > 0 {
+                // keep the all-slots-live counter exact: this slot is
+                // free again, so it no longer blocks allocation
+                self.mapped_this_step -= 1;
+            }
+            self.stamp[s] = 0;
+            // a freed slot's contents will never be read again; don't
+            // waste upload bytes on it unless a new page lands there
+            self.upload_dirty[s] = false;
             self.free.push(slot);
         }
     }
@@ -136,6 +200,7 @@ impl ResidentWindow {
         self.stats.steps += 1;
         self.stats.last_pages_copied = 0;
         self.stats.last_bytes_moved = 0;
+        self.mapped_this_step = 0;
         let elems =
             self.geo.n_layers * window_pages * self.geo.page_elems();
         if self.delta_enabled
@@ -166,6 +231,9 @@ impl ResidentWindow {
         self.free.clear();
         self.free.extend((0..window_pages as u32).rev());
         self.steal_cursor = 0;
+        self.upload_dirty.clear();
+        self.upload_dirty.resize(window_pages, false);
+        self.pending_full_upload = true;
         self.full_this_step = true;
         self.stats.full_gathers += 1;
         self.valid = true;
@@ -192,7 +260,10 @@ impl ResidentWindow {
                 (s, true)
             }
         };
-        self.stamp[slot as usize] = self.step;
+        if self.stamp[slot as usize] != self.step {
+            self.stamp[slot as usize] = self.step;
+            self.mapped_this_step += 1;
+        }
         if fresh || self.full_this_step || k.is_dirty(page)
             || v.is_dirty(page)
         {
@@ -201,17 +272,28 @@ impl ResidentWindow {
         Some(slot)
     }
 
+    /// Victim selection is O(1) amortized: a free-list pop when a slot
+    /// is free; otherwise a clock hand that skips mapped-this-step
+    /// slots. The `mapped_this_step` counter makes the pathological
+    /// all-slots-live case an immediate O(1) refusal (the seed rescanned
+    /// every slot on every failing call), and within one step the hand
+    /// never revisits a position: total probes per step are bounded by
+    /// W + allocations.
     fn alloc_slot(&mut self) -> Option<u32> {
         if let Some(s) = self.free.pop() {
             return Some(s);
         }
-        // Lazy eviction: steal any slot not referenced by this step's
-        // tables (its page left the batch).
         let n = self.page_at.len();
-        for i in 0..n {
-            let s = (self.steal_cursor + i) % n;
+        if self.mapped_this_step >= n {
+            return None; // every slot is live this step — caller bug
+        }
+        // Lazy eviction: steal the next slot not referenced by this
+        // step's tables (its page left the batch).
+        loop {
+            let s = self.steal_cursor;
+            self.steal_cursor = (s + 1) % n;
+            self.steal_probes += 1;
             if self.stamp[s] < self.step {
-                self.steal_cursor = (s + 1) % n;
                 let old = self.page_at[s];
                 if old != NO_PAGE {
                     self.slot_of.remove(&old);
@@ -220,7 +302,11 @@ impl ResidentWindow {
                 return Some(s as u32);
             }
         }
-        None
+    }
+
+    /// Cumulative clock-hand inspections (amortization telemetry).
+    pub fn steal_probes(&self) -> u64 {
+        self.steal_probes
     }
 
     fn copy_page_in(&mut self, k: &mut HostPool, v: &mut HostPool,
@@ -237,6 +323,7 @@ impl ResidentWindow {
         }
         k.clear_dirty(page);
         v.clear_dirty(page);
+        self.upload_dirty[slot as usize] = true;
         let bytes = (2 * self.geo.n_layers * pe * 4) as u64;
         self.stats.pages_copied += 1;
         self.stats.last_pages_copied += 1;
@@ -273,10 +360,54 @@ impl ResidentWindow {
             .copy_from_slice(v.gather_token(layer, page, slot_in_page));
         k.clear_dirty(page);
         v.clear_dirty(page);
+        self.upload_dirty[slot as usize] = true;
         let bytes = (2 * te * 4) as u64;
         self.stats.rows_written += 1;
         self.stats.bytes_moved += bytes;
         self.stats.last_bytes_moved += bytes;
+    }
+
+    /// Hand the device side its upload work: everything that changed in
+    /// the window buffers since the previous call, as coalesced element
+    /// ranges (adjacent dirty slots merge into one range per layer) —
+    /// or a full-upload order when the layout was rebuilt since then or
+    /// delta transfer is off. Clears the dirty-slot set; the caller
+    /// must execute the plan (`runtime::DeviceWindow::apply`) on both
+    /// the K and V buffers or device state goes stale. Write-through
+    /// rows scattered *after* a step's upload are picked up by the next
+    /// step's plan.
+    pub fn take_upload_plan(&mut self) -> UploadPlan {
+        if self.pending_full_upload || self.full_this_step
+            || !self.delta_enabled
+        {
+            self.pending_full_upload = false;
+            self.upload_dirty.iter_mut().for_each(|d| *d = false);
+            return UploadPlan::Full;
+        }
+        let w = self.window_pages;
+        let pe = self.geo.page_elems();
+        let mut slot_runs: Vec<(usize, usize)> = Vec::new();
+        let mut s = 0;
+        while s < w {
+            if !self.upload_dirty[s] {
+                s += 1;
+                continue;
+            }
+            let start = s;
+            while s < w && self.upload_dirty[s] {
+                self.upload_dirty[s] = false;
+                s += 1;
+            }
+            slot_runs.push((start, s - start));
+        }
+        let mut ranges =
+            Vec::with_capacity(slot_runs.len() * self.geo.n_layers);
+        for layer in 0..self.geo.n_layers {
+            for &(start, n) in &slot_runs {
+                ranges.push(((layer * w + start) * pe, n * pe));
+            }
+        }
+        UploadPlan::Ranges(ranges)
     }
 
     /// Move the K/V buffers out (zero-copy hand-off to the input
@@ -575,6 +706,138 @@ mod tests {
             for &p in &pages {
                 assert_synced(&w, &k, &v, p);
             }
+        }
+    }
+
+    #[test]
+    fn all_slots_live_refuses_in_constant_time() {
+        // Pathological case: every slot mapped this step, one more page
+        // wants in. The seed rescanned all W slots on every failing
+        // call; victim selection must now refuse in O(1) without
+        // advancing the clock hand at all.
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(4);
+        for p in 0..4 {
+            w.map_page(&mut k, &mut v, p).unwrap();
+        }
+        let probes0 = w.steal_probes();
+        for _ in 0..100 {
+            assert_eq!(w.map_page(&mut k, &mut v, 99), None);
+        }
+        assert_eq!(w.steal_probes(), probes0,
+                   "all-live refusal must not touch the clock hand");
+
+        // and per-step hand work stays bounded by W + allocations even
+        // under full turnover (every slot stolen every step); page ids
+        // cycle 4..8 → 8..12 → 12..16 so each step's set is disjoint
+        // from the previous one and stays inside the 16-page test pool
+        for step in 0..8usize {
+            w.begin_step(4);
+            let base = (4 + 4 * (step % 3)) as u32;
+            for p in base..base + 4 {
+                w.map_page(&mut k, &mut v, p).unwrap();
+            }
+        }
+        let per_step =
+            (w.steal_probes() - probes0) as f64 / 8.0;
+        assert!(per_step <= 8.0,
+                "expected ≤ 2W probes/step, got {per_step}");
+    }
+
+    #[test]
+    fn forget_keeps_live_counter_exact() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(2);
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        w.map_page(&mut k, &mut v, 1).unwrap();
+        assert_eq!(w.map_page(&mut k, &mut v, 2), None, "window full");
+        w.forget(0);
+        // the freed slot must be allocatable again in the same step
+        assert!(w.map_page(&mut k, &mut v, 2).is_some());
+        assert_eq!(w.map_page(&mut k, &mut v, 3), None, "full again");
+    }
+
+    #[test]
+    fn first_upload_plan_is_full_then_ranges() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        assert_eq!(w.take_upload_plan(), UploadPlan::Full);
+
+        // steady step: only the re-dirtied page's slot uploads
+        fill_page(&mut k, 0, 5.0);
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        let g = geo();
+        let pe = g.page_elems();
+        let slot = w.slot(0).unwrap() as usize;
+        let expect: Vec<(usize, usize)> = (0..g.n_layers)
+            .map(|l| ((l * 8 + slot) * pe, pe))
+            .collect();
+        assert_eq!(w.take_upload_plan(), UploadPlan::Ranges(expect));
+
+        // nothing changed since: an empty delta
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        assert_eq!(w.take_upload_plan(),
+                   UploadPlan::Ranges(Vec::new()));
+    }
+
+    #[test]
+    fn adjacent_dirty_slots_coalesce_per_layer() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        for p in 0..4 {
+            w.map_page(&mut k, &mut v, p).unwrap();
+        }
+        let _ = w.take_upload_plan(); // discharge the full upload
+
+        // dirty pages in slots 0,1 (adjacent) and 3 (isolated)
+        for p in [0u32, 1, 3] {
+            fill_page(&mut k, p, p as f32);
+        }
+        w.begin_step(8);
+        for p in 0..4 {
+            w.map_page(&mut k, &mut v, p).unwrap();
+        }
+        let g = geo();
+        let pe = g.page_elems();
+        let UploadPlan::Ranges(ranges) = w.take_upload_plan() else {
+            panic!("expected a delta plan");
+        };
+        // slots 0..4 were allocated in order on the full step
+        assert_eq!(ranges.len(), 2 * g.n_layers,
+                   "two runs per layer: [0,2) and [3,4)");
+        assert_eq!(ranges[0], (0, 2 * pe), "slots 0-1 coalesced");
+        assert_eq!(ranges[1], (3 * pe, pe));
+        assert_eq!(ranges[2], ((8 + 0) * pe, 2 * pe), "layer 1 run");
+    }
+
+    #[test]
+    fn write_through_rows_ride_the_next_plan() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 2).unwrap();
+        let _ = w.take_upload_plan();
+
+        // engine order: upload happened, then the scatter writes through
+        k.token_row_mut(0, 2, 1).fill(42.0);
+        v.token_row_mut(0, 2, 1).fill(-42.0);
+        w.write_row(&mut k, &mut v, 0, 2, 1);
+
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 2).unwrap();
+        match w.take_upload_plan() {
+            UploadPlan::Ranges(r) => {
+                assert!(!r.is_empty(),
+                        "write-through slot must re-upload");
+            }
+            UploadPlan::Full => panic!("residency should have held"),
         }
     }
 

@@ -12,13 +12,15 @@
 //!   --model tiny|bench|small   --artifacts DIR
 //!   --attention paged|contiguous|no_cache
 //!   --growth exact|power_of_two   --no-prefix-cache
-//!   --no-window-delta   --max-batch N --prefill-chunk N
-//!   --config FILE.json
+//!   --no-window-delta   --window-layout fixed|per_bucket
+//!   --window-upload delta|full
+//!   --max-batch N --prefill-chunk N   --config FILE.json
 //! ```
 
 use std::path::PathBuf;
 
-use paged_flex::config::{AttentionMode, EngineConfig, GrowthPolicyCfg};
+use paged_flex::config::{self, AttentionMode, EngineConfig,
+                         GrowthPolicyCfg};
 use paged_flex::coordinator::{Coordinator, Request};
 use paged_flex::engine::Engine;
 use paged_flex::server;
@@ -69,6 +71,10 @@ fn print_help() {
            --attention paged|contiguous|no_cache\n\
            --growth exact|power_of_two  --no-prefix-cache\n\
            --no-window-delta (full KV-window re-gather every step)\n\
+           --window-layout fixed|per_bucket (KV window sizing; fixed\n\
+             keeps residency across batch buckets)\n\
+           --window-upload delta|full (device push: dirty ranges or\n\
+             whole window)\n\
            --max-batch N --prefill-chunk N --config FILE.json"
     );
 }
@@ -136,6 +142,12 @@ impl Flags {
         if self.has("no-window-delta") {
             // full-gather fallback every step (DESIGN.md §5 escape hatch)
             cfg.window_delta = false;
+        }
+        if let Some(l) = self.get("window-layout") {
+            cfg.window_layout = config::window_layout_from_str(l)?;
+        }
+        if let Some(u) = self.get("window-upload") {
+            cfg.window_upload = config::UploadMode::from_str(u)?;
         }
         if let Some(b) = self.get("max-batch") {
             cfg.scheduler.max_batch_size =

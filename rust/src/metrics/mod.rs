@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::kvpage::WindowStats;
+use crate::runtime::UploadStats;
 
 /// Log-bucketed latency histogram (lock-free record path).
 pub struct LatencyHistogram {
@@ -131,6 +132,17 @@ pub struct ServingMetrics {
     pub window_rows_written: AtomicU64,
     /// Steps that fell back to a from-scratch full gather.
     pub window_full_gathers: AtomicU64,
+    /// Bytes pushed host→device into the persistent window buffers
+    /// (delta ranges + full-upload fallbacks; K and V together) —
+    /// DESIGN.md §6.
+    pub upload_bytes: AtomicU64,
+    /// Individual coalesced ranges pushed on the delta path.
+    pub upload_ranges: AtomicU64,
+    /// Delta uploads performed (only dirty ranges moved).
+    pub upload_delta: AtomicU64,
+    /// Whole-window uploads (first step, fallback triggers, or a
+    /// backend without range updates).
+    pub upload_full: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -151,9 +163,17 @@ impl ServingMetrics {
         Self::inc(&self.window_full_gathers, d.full_gathers);
     }
 
-    /// Mean bytes uploaded into the KV window per recorded decode step
-    /// (prefill gathers in the same run are amortized into it; decode
-    /// dominates in steady state).
+    /// Merge a device-upload delta (`PagedEngine::take_upload_delta`).
+    pub fn note_upload(&self, d: &UploadStats) {
+        Self::inc(&self.upload_bytes, d.bytes_uploaded);
+        Self::inc(&self.upload_ranges, d.ranges_pushed);
+        Self::inc(&self.upload_delta, d.delta_uploads);
+        Self::inc(&self.upload_full, d.full_uploads);
+    }
+
+    /// Mean bytes the host gather memcpy moved into the KV window per
+    /// recorded decode step (prefill gathers in the same run are
+    /// amortized into it; decode dominates in steady state).
     pub fn window_bytes_per_decode_step(&self) -> f64 {
         let steps = self.decode_step.count();
         if steps == 0 {
@@ -161,6 +181,16 @@ impl ServingMetrics {
         }
         self.window_bytes_moved.load(Ordering::Relaxed) as f64
             / steps as f64
+    }
+
+    /// Mean bytes pushed host→device per recorded decode step (same
+    /// amortization caveat as `window_bytes_per_decode_step`).
+    pub fn upload_bytes_per_decode_step(&self) -> f64 {
+        let steps = self.decode_step.count();
+        if steps == 0 {
+            return 0.0;
+        }
+        self.upload_bytes.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
     pub fn elapsed(&self) -> Duration {
@@ -187,6 +217,8 @@ impl ServingMetrics {
              prefix cache: hits={} cached_tokens={}\n\
              kv window: pages_copied={} rows_written={} \
              full_gathers={} ({:.1} KB/decode step)\n\
+             kv upload: delta={} full={} ranges={} \
+             ({:.1} KB/decode step)\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -203,6 +235,10 @@ impl ServingMetrics {
             self.window_rows_written.load(Ordering::Relaxed),
             self.window_full_gathers.load(Ordering::Relaxed),
             self.window_bytes_per_decode_step() / 1e3,
+            self.upload_delta.load(Ordering::Relaxed),
+            self.upload_full.load(Ordering::Relaxed),
+            self.upload_ranges.load(Ordering::Relaxed),
+            self.upload_bytes_per_decode_step() / 1e3,
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -215,7 +251,7 @@ impl ServingMetrics {
     /// CSV row of the headline numbers (benches aggregate these).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1},{:.0}",
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1},{:.0},{:.0}",
             self.requests_finished.load(Ordering::Relaxed),
             self.tokens_prefilled.load(Ordering::Relaxed),
             self.tokens_decoded.load(Ordering::Relaxed),
@@ -226,13 +262,14 @@ impl ServingMetrics {
             self.per_token.p99().as_secs_f64() * 1e3,
             self.decode_tokens_per_sec(),
             self.window_bytes_per_decode_step(),
+            self.upload_bytes_per_decode_step(),
         )
     }
 
     pub const CSV_HEADER: &'static str =
         "finished,tokens_prefilled,tokens_decoded,preempted,\
          ttft_p50_ms,ttft_p99_ms,tok_p50_ms,tok_p99_ms,decode_tok_per_s,\
-         window_bytes_per_step";
+         window_bytes_per_step,upload_bytes_per_step";
 }
 
 /// Scoped timer recording into a histogram on drop.
@@ -322,7 +359,27 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("pages_copied=3"), "{s}");
         assert!(s.contains("full_gathers=1"), "{s}");
-        assert!(m.csv_row().ends_with("2048"), "{}", m.csv_row());
+        assert!(m.csv_row().ends_with("2048,0"), "{}", m.csv_row());
+    }
+
+    #[test]
+    fn upload_counters_merge_and_normalize() {
+        let m = ServingMetrics::new();
+        let d = UploadStats {
+            full_uploads: 1,
+            delta_uploads: 3,
+            ranges_pushed: 9,
+            bytes_uploaded: 8192,
+            last_bytes: 64,
+        };
+        m.note_upload(&d);
+        m.decode_step.record(Duration::from_millis(1));
+        m.decode_step.record(Duration::from_millis(1));
+        assert_eq!(m.upload_bytes_per_decode_step(), 4096.0);
+        let s = m.summary();
+        assert!(s.contains("delta=3"), "{s}");
+        assert!(s.contains("ranges=9"), "{s}");
+        assert!(m.csv_row().ends_with("4096"), "{}", m.csv_row());
     }
 
     #[test]

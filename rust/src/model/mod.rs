@@ -291,6 +291,42 @@ impl ConfigEntry {
             .map(|(n, a)| (n.as_str(), a))
     }
 
+    /// Window pages (W) every paged artifact was compiled for, read
+    /// from the k_pool input shapes. `Ok(Some(w))` when all paged
+    /// artifacts agree (the fixed-W layout contract, DESIGN.md §6),
+    /// `Ok(None)` when there are no paged artifacts, and an error
+    /// naming the disagreeing artifact for pre-fixed-W artifact sets
+    /// (which sized W per bucket).
+    pub fn paged_window_pages(&self) -> Result<Option<usize>> {
+        let mut w: Option<(usize, &str)> = None;
+        for (name, a) in &self.artifacts {
+            if a.kind != "paged_decode" && a.kind != "paged_chunk" {
+                continue;
+            }
+            let pool = a
+                .inputs
+                .iter()
+                .find(|i| i.name == "k_pool")
+                .ok_or_else(|| err!(
+                    "paged artifact '{name}' has no k_pool input"))?;
+            ensure!(pool.shape.len() == 5,
+                    "paged artifact '{name}': k_pool rank {} != 5",
+                    pool.shape.len());
+            let pages = pool.shape[1];
+            match w {
+                None => w = Some((pages, name)),
+                Some((prev, first)) => ensure!(
+                    prev == pages,
+                    "paged artifacts disagree on window pages \
+                     ('{first}' = {prev}, '{name}' = {pages}): \
+                     re-export with `make artifacts` for the fixed-W \
+                     layout, or set window_layout = per_bucket"
+                ),
+            }
+        }
+        Ok(w.map(|(pages, _)| pages))
+    }
+
     /// All (batch, chunk) paged-chunk buckets.
     pub fn paged_chunk_buckets(&self) -> Vec<(usize, usize)> {
         let mut v: Vec<(usize, usize)> = self

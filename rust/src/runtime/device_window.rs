@@ -1,0 +1,285 @@
+//! Persistent device-side KV window + dirty-range upload — DESIGN.md §6.
+//!
+//! PR 1 made the *host* gather memcpy O(changed); the host→device push
+//! of the assembled window was still a whole-buffer upload every step.
+//! [`DeviceWindow`] closes that gap: it models one persistent device
+//! buffer per pool (K or V) and pushes only the coalesced byte ranges
+//! the [`ResidentWindow`](crate::kvpage::ResidentWindow) reports as
+//! changed since the previous upload ([`UploadPlan::Ranges`]), falling
+//! back to a whole-buffer upload ([`UploadPlan::Full`]) on the first
+//! step, any residency or buffer loss, a backend without range support,
+//! or when delta transfer is disabled.
+//!
+//! Two backings:
+//!
+//! * [`DeviceWindow::sim`] — a real in-process device-buffer model
+//!   (`xla::SimDeviceBuffer`) that performs per-range copies, so benches
+//!   and property tests assert uploaded bytes/step and device-side
+//!   contents without PJRT hardware. On range-capable hardware this is
+//!   the shape of the real path.
+//! * [`DeviceWindow::pjrt`] — accounting for the real xla_extension
+//!   0.5.1 path, which cannot update a device buffer in place: every
+//!   `upload_ranges` refuses, `apply` falls back to a full upload, and
+//!   the actual `buffer_from_host` transfer keeps happening at execute
+//!   time (`runtime::Runtime::run`). The counters still record what the
+//!   step *would* move on range-capable hardware vs what it does move.
+//!
+//! The contract for [`DeviceWindow::upload_ranges`]: the caller
+//! guarantees the ranges cover every element that changed in `host`
+//! since the previous successful upload, at the same buffer length.
+//! `ResidentWindow::take_upload_plan` provides exactly that;
+//! equivalence with the full-upload path is property-tested in
+//! `rust/tests/proptest_kvpage.rs`.
+
+use crate::kvpage::window::UploadPlan;
+use crate::util::profile::{self, Phase};
+use crate::util::Result;
+use crate::{bail, ensure};
+
+/// Cumulative host→device upload counters for one device window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UploadStats {
+    /// Whole-buffer uploads (fallback path).
+    pub full_uploads: u64,
+    /// Delta uploads (only dirty ranges pushed).
+    pub delta_uploads: u64,
+    /// Individual contiguous ranges pushed across all delta uploads.
+    pub ranges_pushed: u64,
+    /// Bytes moved host→device (full + delta).
+    pub bytes_uploaded: u64,
+    /// Bytes moved by the most recent upload only.
+    pub last_bytes: u64,
+}
+
+impl UploadStats {
+    /// Element-wise sum (engines hold one window per pool).
+    pub fn plus(&self, o: &UploadStats) -> UploadStats {
+        UploadStats {
+            full_uploads: self.full_uploads + o.full_uploads,
+            delta_uploads: self.delta_uploads + o.delta_uploads,
+            ranges_pushed: self.ranges_pushed + o.ranges_pushed,
+            bytes_uploaded: self.bytes_uploaded + o.bytes_uploaded,
+            last_bytes: self.last_bytes + o.last_bytes,
+        }
+    }
+}
+
+enum Backing {
+    /// Modeled persistent buffer with per-range copies (offline and
+    /// range-capable hardware shape).
+    Sim(xla::SimDeviceBuffer),
+    /// Real PJRT 0.5.1: no in-place update — accounting only, the
+    /// transfer itself happens at execute time.
+    Pjrt,
+}
+
+/// One persistent device-resident window buffer (K or V pool view).
+pub struct DeviceWindow {
+    backing: Backing,
+    /// Elements resident on device (0 until the first full upload).
+    len: usize,
+    /// False after `invalidate` (buffer loss): the next `apply` must be
+    /// a full upload.
+    valid: bool,
+    stats: UploadStats,
+    reported: UploadStats,
+}
+
+impl DeviceWindow {
+    /// Modeled-buffer backing (benches, tests, offline runs).
+    pub fn sim() -> Self {
+        Self::with_backing(Backing::Sim(xla::SimDeviceBuffer::new()))
+    }
+
+    /// Accounting-only backing for the real PJRT path.
+    pub fn pjrt() -> Self {
+        Self::with_backing(Backing::Pjrt)
+    }
+
+    fn with_backing(backing: Backing) -> Self {
+        DeviceWindow {
+            backing,
+            len: 0,
+            valid: false,
+            stats: UploadStats::default(),
+            reported: UploadStats::default(),
+        }
+    }
+
+    /// Whether the backing can push individual ranges.
+    pub fn supports_ranges(&self) -> bool {
+        matches!(self.backing, Backing::Sim(_))
+    }
+
+    /// Drop the device buffer (failed execute, device reset). The next
+    /// `apply` falls back to a full upload whatever the plan says.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    /// A delta upload against the resident buffer would be sound.
+    pub fn can_delta(&self, host_len: usize) -> bool {
+        self.valid && self.len == host_len && self.supports_ranges()
+    }
+
+    /// Whole-buffer upload; (re)sizes the device buffer.
+    pub fn upload_full(&mut self, host: &[f32]) {
+        let _p = profile::span(Phase::UploadFull);
+        if let Backing::Sim(buf) = &mut self.backing {
+            buf.write_full(host);
+        }
+        self.len = host.len();
+        self.valid = true;
+        let bytes = 4 * host.len() as u64;
+        self.stats.full_uploads += 1;
+        self.stats.bytes_uploaded += bytes;
+        self.stats.last_bytes = bytes;
+    }
+
+    /// Push only `ranges` (element offset, element count), which must
+    /// cover everything that changed in `host` since the previous
+    /// successful upload. Errors — so callers can fall back to
+    /// `upload_full` — when the backing has no range support or the
+    /// resident buffer is missing, stale, or a different size.
+    pub fn upload_ranges(&mut self, host: &[f32],
+                         ranges: &[(usize, usize)]) -> Result<()> {
+        ensure!(self.can_delta(host.len()),
+                "device window cannot take a delta upload (valid={}, \
+                 resident {} vs host {} elements, range support {})",
+                self.valid, self.len, host.len(),
+                self.supports_ranges());
+        let _p = profile::span(Phase::UploadDelta);
+        let Backing::Sim(buf) = &mut self.backing else {
+            bail!("unreachable: range upload without range support");
+        };
+        let mut bytes = 0u64;
+        for &(off, n) in ranges {
+            ensure!(off + n <= host.len(),
+                    "upload range [{off}, {}) exceeds host window of {} \
+                     elements", off + n, host.len());
+            buf.write_range(off, &host[off..off + n])?;
+            bytes += 4 * n as u64;
+        }
+        self.stats.delta_uploads += 1;
+        self.stats.ranges_pushed += ranges.len() as u64;
+        self.stats.bytes_uploaded += bytes;
+        self.stats.last_bytes = bytes;
+        Ok(())
+    }
+
+    /// Execute an [`UploadPlan`] from the resident window, falling back
+    /// to a full upload whenever a delta is not possible (plan says
+    /// full, backing lacks range support, buffer lost or resized).
+    pub fn apply(&mut self, host: &[f32], plan: &UploadPlan) {
+        match plan {
+            UploadPlan::Ranges(ranges)
+                if self.can_delta(host.len()) =>
+            {
+                // can_delta pre-checked: only a malformed range can
+                // fail, and that is a protocol bug upstream
+                self.upload_ranges(host, ranges)
+                    .expect("checked delta upload failed");
+            }
+            _ => self.upload_full(host),
+        }
+    }
+
+    /// Device-side contents (sim backing only; tests and benches verify
+    /// the dirty-range protocol against these).
+    pub fn contents(&self) -> Option<&[f32]> {
+        match &self.backing {
+            Backing::Sim(buf) if self.valid => Some(buf.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn stats(&self) -> &UploadStats {
+        &self.stats
+    }
+
+    /// Counters accumulated since the last call (serving-metrics merge).
+    pub fn take_unreported(&mut self) -> UploadStats {
+        let d = UploadStats {
+            full_uploads: self.stats.full_uploads
+                - self.reported.full_uploads,
+            delta_uploads: self.stats.delta_uploads
+                - self.reported.delta_uploads,
+            ranges_pushed: self.stats.ranges_pushed
+                - self.reported.ranges_pushed,
+            bytes_uploaded: self.stats.bytes_uploaded
+                - self.reported.bytes_uploaded,
+            last_bytes: self.stats.last_bytes,
+        };
+        self.reported = self.stats;
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_delta_uploads_only_move_range_bytes() {
+        let mut dev = DeviceWindow::sim();
+        let mut host = vec![0.0f32; 64];
+        dev.apply(&host, &UploadPlan::Full);
+        assert_eq!(dev.stats().last_bytes, 64 * 4);
+        assert_eq!(dev.contents().unwrap(), &host[..]);
+
+        host[8..12].fill(3.0);
+        host[40..44].fill(7.0);
+        dev.apply(&host, &UploadPlan::Ranges(vec![(8, 4), (40, 4)]));
+        assert_eq!(dev.stats().last_bytes, 8 * 4);
+        assert_eq!(dev.stats().delta_uploads, 1);
+        assert_eq!(dev.stats().ranges_pushed, 2);
+        assert_eq!(dev.contents().unwrap(), &host[..]);
+    }
+
+    #[test]
+    fn invalidation_and_resize_force_full_upload() {
+        let mut dev = DeviceWindow::sim();
+        let host = vec![1.0f32; 16];
+        dev.apply(&host, &UploadPlan::Ranges(vec![(0, 1)]));
+        assert_eq!(dev.stats().full_uploads, 1, "first upload is full");
+
+        dev.invalidate();
+        assert!(!dev.can_delta(host.len()));
+        assert!(dev.contents().is_none(), "lost buffer is unreadable");
+        dev.apply(&host, &UploadPlan::Ranges(vec![(0, 1)]));
+        assert_eq!(dev.stats().full_uploads, 2, "loss → full upload");
+
+        let grown = vec![2.0f32; 32];
+        dev.apply(&grown, &UploadPlan::Ranges(vec![(0, 1)]));
+        assert_eq!(dev.stats().full_uploads, 3, "resize → full upload");
+        assert_eq!(dev.contents().unwrap(), &grown[..]);
+    }
+
+    #[test]
+    fn pjrt_backing_counts_but_never_deltas() {
+        let mut dev = DeviceWindow::pjrt();
+        let host = vec![0.5f32; 8];
+        assert!(!dev.supports_ranges());
+        dev.apply(&host, &UploadPlan::Full);
+        dev.apply(&host, &UploadPlan::Ranges(vec![(0, 2)]));
+        assert_eq!(dev.stats().full_uploads, 2,
+                   "0.5.1 path falls back to full uploads");
+        assert_eq!(dev.stats().delta_uploads, 0);
+        assert!(dev.contents().is_none(), "no modeled contents");
+        assert!(dev.upload_ranges(&host, &[(0, 1)]).is_err());
+    }
+
+    #[test]
+    fn stats_plus_and_take_unreported() {
+        let mut dev = DeviceWindow::sim();
+        let host = vec![0.0f32; 4];
+        dev.upload_full(&host);
+        let d = dev.take_unreported();
+        assert_eq!(d.full_uploads, 1);
+        assert_eq!(d.bytes_uploaded, 16);
+        let d2 = dev.take_unreported();
+        assert_eq!(d2.full_uploads, 0, "delta since last take");
+        let merged = d.plus(&d2);
+        assert_eq!(merged.full_uploads, 1);
+    }
+}

@@ -14,6 +14,7 @@
 //! (`kvpage::pool::HostPool`) and decode executables return `(logits,
 //! k_new, v_new)` rather than updated pools — see DESIGN.md §5.
 
+pub mod device_window;
 pub mod tensor;
 
 use std::cell::RefCell;
@@ -26,6 +27,7 @@ use crate::model::{ArtifactSpec, ConfigEntry, Manifest};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
 
+pub use device_window::{DeviceWindow, UploadStats};
 pub use tensor::HostTensor;
 
 /// One loaded model config: manifest entry + device weights + executable

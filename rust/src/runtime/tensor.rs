@@ -71,6 +71,22 @@ impl HostTensor {
         }
     }
 
+    /// Reclaim the backing storage of an f32 tensor (zero-copy; the
+    /// engine recycles its step scratch and window buffers this way).
+    pub fn into_f32(self) -> Option<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Some(data),
+            HostTensor::I32 { .. } => None,
+        }
+    }
+
+    pub fn into_i32(self) -> Option<Vec<i32>> {
+        match self {
+            HostTensor::I32 { data, .. } => Some(data),
+            HostTensor::F32 { .. } => None,
+        }
+    }
+
     /// Validate against a manifest TensorSpec.
     pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
         ensure!(
@@ -148,5 +164,9 @@ mod tests {
         assert!(t.as_f32().is_err());
         assert_eq!(t.len(), 3);
         assert_eq!(t.dtype_str(), "int32");
+        assert!(t.clone().into_f32().is_none());
+        assert_eq!(t.into_i32().unwrap(), vec![1, 2, 3]);
+        let f = HostTensor::f32(vec![1.5], vec![1]);
+        assert_eq!(f.into_f32().unwrap(), vec![1.5]);
     }
 }

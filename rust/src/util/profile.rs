@@ -25,11 +25,18 @@ pub enum Phase {
     /// delta path: slot remap + copy of dirty/newly-resident pages only
     /// (DESIGN.md §5)
     WindowDelta = 5,
+    /// device-window delta upload: only coalesced dirty ranges pushed
+    /// (DESIGN.md §6)
+    UploadDelta = 6,
+    /// device-window full upload: whole window buffer re-pushed
+    /// (first step, residency/buffer loss, delta disabled)
+    UploadFull = 7,
 }
 
-const N: usize = 6;
+const N: usize = 8;
 const NAMES: [&str; N] = ["subpool_gather", "upload", "execute",
-                          "download", "scatter", "window_delta"];
+                          "download", "scatter", "window_delta",
+                          "upload_delta", "upload_full"];
 
 static NANOS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
 static COUNTS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];

@@ -5,7 +5,7 @@
 //! FORK / FREE interleavings, with full-state invariant checks after
 //! every step. Failures print the seed + step for replay.
 //!
-//! Invariants (DESIGN.md §6):
+//! Invariants (DESIGN.md §7):
 //!  I1  page conservation: free + referenced-by-tables == capacity
 //!  I2  no page appears in two tables unless its refcount covers it
 //!  I3  every table's mapped capacity covers its live tokens
@@ -17,8 +17,9 @@ use std::sync::Arc;
 
 use paged_flex::kvpage::{
     AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
-    PoolGeometry, ResidentWindow,
+    PoolGeometry, ResidentWindow, UploadPlan,
 };
+use paged_flex::runtime::DeviceWindow;
 use paged_flex::trace::Rng;
 
 const N_PAGES: u32 = 48;
@@ -215,14 +216,20 @@ fn exhaustion_recovery_cycles() {
 }
 
 // ----------------------------------------------------------------------
-// Resident-window delta transfer vs full gather (DESIGN.md §5)
+// Resident-window delta transfer vs full gather (DESIGN.md §5–6)
 //
-// Drives the kvpage layer the way engine::paged does — RESERVE/APPEND
-// with host-side ASSIGN, fork CoW, FREE, preemption (invalidate), and
-// per-step window gathers — keeping one delta window and one
-// full-gather window side by side. After every gather, each mapped
-// page's window-resident contents must be element-identical to the pool
-// (and therefore to each other) for both paths.
+// Drives the kvpage + device-window layers the way engine::paged does —
+// RESERVE/APPEND with host-side ASSIGN, fork CoW, FREE, preemption
+// (invalidate), random device-buffer loss, batch-bucket flips, and
+// per-step window gathers + device uploads — keeping one delta window
+// and one full-gather window side by side, each backed by a pair of
+// modeled device buffers (`DeviceWindow::sim`). After every gather and
+// upload, each mapped page's window-resident contents AND its
+// device-resident contents must be element-identical to the pool (and
+// therefore to each other) on both paths: the dirty-range delta upload
+// reconstructs exactly the device state the full re-upload produces.
+// The window is sized once (fixed-W layout) so batch-size churn never
+// relayouts it.
 // ----------------------------------------------------------------------
 
 const GEO: PoolGeometry = PoolGeometry {
@@ -241,6 +248,13 @@ struct WindowHarness {
     v: HostPool,
     delta: ResidentWindow,
     full: ResidentWindow,
+    delta_kdev: DeviceWindow,
+    delta_vdev: DeviceWindow,
+    full_kdev: DeviceWindow,
+    full_vdev: DeviceWindow,
+    /// Randomly drop delta device buffers mid-run (exercises the
+    /// full-upload fallback); off for the residency-survival test.
+    inject_device_loss: bool,
     live: Vec<u64>,
     next_id: u64,
     rng: Rng,
@@ -259,6 +273,11 @@ impl WindowHarness {
             v: HostPool::zeros(GEO),
             delta: ResidentWindow::new(GEO),
             full,
+            delta_kdev: DeviceWindow::sim(),
+            delta_vdev: DeviceWindow::sim(),
+            full_kdev: DeviceWindow::sim(),
+            full_vdev: DeviceWindow::sim(),
+            inject_device_loss: true,
             live: vec![],
             next_id: 1,
             rng: Rng::seeded(seed),
@@ -366,8 +385,10 @@ impl WindowHarness {
     }
 
     /// One engine-shaped decode step over a random batch: EXTEND + CoW,
-    /// gather into both windows, verify, then scatter the new token row
-    /// with write-through into the delta window.
+    /// gather into both windows, upload to the device buffers, verify,
+    /// then scatter the new token row with write-through into the delta
+    /// window. The random batch size IS the bucket flip: under the
+    /// fixed-W layout a changed batch never relayouts the window.
     fn decode_step_op(&mut self, ctx: &str) {
         let mut batch: Vec<u64> = vec![];
         let want = 1 + self.rng.below(BATCH_CAP as u64) as usize;
@@ -378,6 +399,23 @@ impl WindowHarness {
                 }
             }
         }
+        if self.inject_device_loss {
+            // occasional device-buffer loss, K and V independently:
+            // the next apply must fall back to a full upload
+            if self.rng.below(16) == 0 {
+                self.delta_kdev.invalidate();
+            }
+            if self.rng.below(16) == 0 {
+                self.delta_vdev.invalidate();
+            }
+        }
+        self.decode_batch(&batch, ctx);
+    }
+
+    /// Decode step over an explicit batch (bucket-flip test drives this
+    /// directly with a cycling batch size).
+    fn decode_batch(&mut self, ids: &[u64], ctx: &str) {
+        let mut batch: Vec<u64> = ids.to_vec();
         batch.retain(|&id| match self.mgr.prepare_append(id, 1) {
             Ok(plan) => {
                 if let Some((src, dst)) = plan.cow_copy {
@@ -420,6 +458,17 @@ impl WindowHarness {
                     .expect("full window slots exhausted");
             }
         }
+
+        // engine order: upload what changed (delta path) / everything
+        // (full path) to the persistent device buffers, then verify
+        let plan = self.delta.take_upload_plan();
+        self.delta_kdev.apply(self.delta.k_window(), &plan);
+        self.delta_vdev.apply(self.delta.v_window(), &plan);
+        let fplan = self.full.take_upload_plan();
+        assert_eq!(fplan, UploadPlan::Full,
+                   "{ctx}: full-gather window must order full uploads");
+        self.full_kdev.apply(self.full.k_window(), &fplan);
+        self.full_vdev.apply(self.full.v_window(), &fplan);
         self.verify(ctx, &mapped);
 
         // scatter one decoded token per sequence, write-through to the
@@ -442,10 +491,20 @@ impl WindowHarness {
         }
     }
 
-    /// Every mapped page: delta window == full window == pool, for every
-    /// layer, both pools.
+    /// Every mapped page: delta window == full window == pool, AND
+    /// delta device buffer == full device buffer == pool, for every
+    /// layer, both pools — the dirty-range upload reconstructs exactly
+    /// the device state a whole-window re-upload produces.
     fn verify(&self, ctx: &str, mapped: &[(u64, Vec<u32>)]) {
         let pe = GEO.page_elems();
+        let dk = self.delta_kdev.contents()
+            .expect("delta K device buffer resident after apply");
+        let dv = self.delta_vdev.contents()
+            .expect("delta V device buffer resident after apply");
+        let fk = self.full_kdev.contents()
+            .expect("full K device buffer resident after apply");
+        let fv = self.full_vdev.contents()
+            .expect("full V device buffer resident after apply");
         for (id, pages) in mapped {
             for &p in pages {
                 let ds = self.delta.slot(p).unwrap();
@@ -466,6 +525,22 @@ impl WindowHarness {
                     assert_eq!(self.full.v_page_slice(layer, fs), vp,
                                "{ctx}: seq {id} V page {p} layer \
                                 {layer}: full window diverged");
+                    let doff =
+                        (layer * WINDOW_PAGES + ds as usize) * pe;
+                    let foff =
+                        (layer * WINDOW_PAGES + fs as usize) * pe;
+                    assert_eq!(&dk[doff..doff + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: delta DEVICE diverged");
+                    assert_eq!(&dv[doff..doff + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: delta DEVICE diverged");
+                    assert_eq!(&fk[foff..foff + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: full DEVICE diverged");
+                    assert_eq!(&fv[foff..foff + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: full DEVICE diverged");
                 }
             }
         }
@@ -511,7 +586,51 @@ fn window_delta_matches_full_gather_random_interleavings() {
                         - h.delta.stats().rows_written
                             * (2 * GEO.token_elems() * 4) as u64,
                 "seed {seed}: delta gathered more page bytes than full");
+        // same on the device half: whole-window re-uploads dominate
+        // dirty-range pushes (even with injected buffer-loss fallbacks)
+        assert!(h.delta_kdev.stats().bytes_uploaded
+                    <= h.full_kdev.stats().bytes_uploaded,
+                "seed {seed}: delta uploaded more than full re-upload");
     }
+}
+
+#[test]
+fn fixed_window_survives_batch_bucket_flips() {
+    // The fixed-W acceptance property: with W held constant, decode
+    // batches of churning size (the engine's bucket flips) never
+    // relayout the window — residency and the device buffers survive
+    // the entire run with exactly one full gather and one full upload,
+    // and every step's device contents stay element-identical to the
+    // full-gather + full-upload baseline (checked inside decode_batch).
+    let mut h = WindowHarness::new(4242, GrowthPolicy::Exact);
+    h.inject_device_loss = false;
+    for id in 1..=3u64 {
+        let prompt: Vec<u32> =
+            (0..20).map(|t| (id * 100 + t) as u32).collect();
+        h.mgr.reserve(id, &prompt).unwrap();
+        h.live.push(id);
+        h.write_tokens(id, 0, prompt.len());
+        h.mgr.note_assigned(id, prompt.len()).unwrap();
+    }
+    h.next_id = 4;
+
+    // cycle through batch sizes 1 → 2 → 3 → 1 (decode-bucket flips),
+    // with appends (chunked-prefill extensions) interleaved
+    let batches: [&[u64]; 4] = [&[1], &[1, 2], &[1, 2, 3], &[2]];
+    for step in 0..60usize {
+        let ctx = format!("flip step {step}");
+        if step % 5 == 4 {
+            h.append_op();
+        }
+        h.decode_batch(batches[step % batches.len()], &ctx);
+    }
+    assert_eq!(h.delta.stats().full_gathers, 1,
+               "bucket flips must not drop residency under fixed W");
+    assert_eq!(h.delta_kdev.stats().full_uploads, 1,
+               "bucket flips must not force device re-uploads");
+    assert_eq!(h.delta_vdev.stats().full_uploads, 1);
+    assert!(h.delta_kdev.stats().delta_uploads > 30,
+            "steady steps must ride the dirty-range path");
 }
 
 #[test]

@@ -6,11 +6,17 @@
 //! point that would touch a real PJRT client returns a descriptive
 //! error instead. Swapping the `xla` path dependency in the root
 //! `Cargo.toml` for the real bindings (xla_extension 0.5.x) restores
-//! artifact execution with no source changes elsewhere.
+//! artifact execution with no source changes elsewhere. (One addition
+//! rides along with the stub: [`SimDeviceBuffer`], the modeled
+//! persistent device buffer behind `runtime::device_window`. It has no
+//! PJRT dependencies — when swapping in the real bindings, carry this
+//! self-contained type over in the swap shim so the delta-upload
+//! benches and proptests keep running.)
 //!
-//! Nothing here is reachable in normal offline runs: `PjRtClient::cpu()`
-//! is the first call on the runtime path and it fails fast, before any
-//! buffer/executable type is ever constructed.
+//! Apart from `SimDeviceBuffer`, nothing here is reachable in normal
+//! offline runs: `PjRtClient::cpu()` is the first call on the runtime
+//! path and it fails fast, before any buffer/executable type is ever
+//! constructed.
 
 use std::fmt;
 
@@ -124,6 +130,75 @@ impl Literal {
     }
 }
 
+/// Modeled persistent device buffer with per-range host→device copies —
+/// what a PJRT backend with incremental buffer updates (or genuinely
+/// device-resident hardware) provides. `runtime::device_window` uses it
+/// to run the dirty-range upload protocol end to end offline, so benches
+/// and property tests can assert uploaded bytes/step and device-side
+/// contents without PJRT hardware. xla_extension 0.5.1 itself cannot
+/// update a buffer in place; the real path falls back to whole-buffer
+/// uploads (DESIGN.md §6).
+#[derive(Debug, Default, Clone)]
+pub struct SimDeviceBuffer {
+    data: Vec<f32>,
+    range_copies: u64,
+    full_copies: u64,
+}
+
+impl SimDeviceBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Elements currently resident (0 until the first full write).
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Replace the whole device buffer (the full-upload path; also the
+    /// only way to change its size).
+    pub fn write_full(&mut self, src: &[f32]) {
+        self.data.clear();
+        self.data.extend_from_slice(src);
+        self.full_copies += 1;
+    }
+
+    /// Copy one contiguous host range into the resident buffer at
+    /// `offset` (the delta-upload path). Errors instead of growing: a
+    /// range copy is only meaningful against a buffer a full write
+    /// already sized.
+    pub fn write_range(&mut self, offset: usize, src: &[f32])
+                       -> Result<()> {
+        match offset.checked_add(src.len()) {
+            Some(end) if end <= self.data.len() => {
+                self.data[offset..end].copy_from_slice(src);
+                self.range_copies += 1;
+                Ok(())
+            }
+            _ => Err(Error(format!(
+                "SimDeviceBuffer::write_range: [{offset}, {offset}+{}) \
+                 out of bounds for resident buffer of {} elements",
+                src.len(),
+                self.data.len()
+            ))),
+        }
+    }
+
+    /// Device-side contents (tests/benches verify against these).
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// (range copies, full copies) performed so far.
+    pub fn copy_counts(&self) -> (u64, u64) {
+        (self.range_copies, self.full_copies)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +216,27 @@ mod tests {
         // from_proto is infallible in the real API; mirror that.
         let proto = HloModuleProto { _private: () };
         let _comp = XlaComputation::from_proto(&proto);
+    }
+
+    #[test]
+    fn sim_buffer_full_then_range_copies() {
+        let mut b = SimDeviceBuffer::new();
+        assert!(b.is_empty());
+        b.write_full(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.len(), 4);
+        b.write_range(1, &[9.0, 8.0]).unwrap();
+        assert_eq!(b.as_slice(), &[1.0, 9.0, 8.0, 4.0]);
+        assert_eq!(b.copy_counts(), (1, 1));
+    }
+
+    #[test]
+    fn sim_buffer_range_is_bounds_checked() {
+        let mut b = SimDeviceBuffer::new();
+        assert!(b.write_range(0, &[1.0]).is_err(), "empty buffer");
+        b.write_full(&[0.0; 4]);
+        assert!(b.write_range(3, &[1.0, 2.0]).is_err(), "overrun");
+        assert!(b.write_range(usize::MAX, &[1.0]).is_err(), "overflow");
+        b.write_range(3, &[1.0]).unwrap();
+        assert_eq!(b.as_slice()[3], 1.0);
     }
 }
