@@ -231,6 +231,11 @@ pub struct EngineConfig {
     /// Host→device window upload mode (DESIGN.md §6): `delta` pushes
     /// coalesced dirty ranges, `full` re-pushes the whole window.
     pub window_upload: UploadMode,
+    /// Double-buffered transfer/compute decode pipeline (DESIGN.md
+    /// §8): stage step N+1's window upload while step N executes. Off
+    /// (`--pipeline off`) runs the serial gather → upload → execute
+    /// path; `per_bucket` layouts collapse to serial regardless.
+    pub pipeline: bool,
     pub scheduler: SchedulerConfig,
     /// Default sampling params (overridable per request).
     pub sampling: SamplingConfig,
@@ -247,6 +252,7 @@ impl Default for EngineConfig {
             window_delta: true,
             window_layout: WindowLayout::Fixed,
             window_upload: UploadMode::Delta,
+            pipeline: true,
             scheduler: SchedulerConfig::default(),
             sampling: SamplingConfig::default(),
         }
@@ -267,6 +273,7 @@ impl EngineConfig {
             ("window_layout",
              Value::str(window_layout_as_str(self.window_layout))),
             ("window_upload", Value::str(self.window_upload.as_str())),
+            ("pipeline", Value::Bool(self.pipeline)),
             ("scheduler", Value::obj(vec![
                 ("max_batch_size", Value::num(s.max_batch_size as f64)),
                 ("max_running_seqs", Value::num(s.max_running_seqs as f64)),
@@ -334,6 +341,9 @@ impl EngineConfig {
                 .map(|x| x.as_str()).transpose()?
                 .map(UploadMode::from_str).transpose()?
                 .unwrap_or(d.window_upload),
+            pipeline: v.opt("pipeline")
+                .map(|x| x.as_bool()).transpose()?
+                .unwrap_or(d.pipeline),
             scheduler: sched,
             sampling: match v.opt("sampling") {
                 Some(s) => SamplingConfig::from_json(s)?,
@@ -400,6 +410,13 @@ mod tests {
         let cfg = EngineConfig::from_json(&v).unwrap();
         assert_eq!(cfg.window_layout, WindowLayout::PerBucket);
         assert_eq!(cfg.window_upload, UploadMode::Full);
+    }
+
+    #[test]
+    fn pipeline_knob_defaults_on_and_parses() {
+        assert!(EngineConfig::default().pipeline);
+        let v = parse(r#"{"pipeline": false}"#).unwrap();
+        assert!(!EngineConfig::from_json(&v).unwrap().pipeline);
     }
 
     #[test]

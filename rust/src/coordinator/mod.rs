@@ -290,9 +290,11 @@ impl Coordinator {
         let results = pe.prefill_chunk(rt, ids, chunk)?;
         let window = pe.take_window_delta();
         let upload = pe.take_upload_delta();
+        let pipeline = pe.take_pipeline_delta();
         self.engine.metrics.prefill_step.record(t0.elapsed());
         self.engine.metrics.note_window(&window);
         self.engine.metrics.note_upload(&upload);
+        self.engine.metrics.note_pipeline(&pipeline);
         let mut prefilled_tokens = 0u64;
         for (seq, done, logits) in results {
             let live = self.live_mut(seq)?;
@@ -312,6 +314,7 @@ impl Coordinator {
     fn decode_step_paged(&mut self, ids: &[SeqId]) -> Result<()> {
         // capacity guard: every decoding sequence may need a fresh page;
         // preempt the youngest until the append plans succeed.
+        let mut preempted_here = 0u32;
         loop {
             let pe = self.engine.paged.as_mut().unwrap();
             let mut failed = None;
@@ -339,7 +342,26 @@ impl Coordinator {
                     if !self.preempt_youngest(ids)? {
                         bail!("pool exhausted and nothing preemptible");
                     }
+                    preempted_here += 1;
                 }
+            }
+        }
+        // stage-boundary policy (DESIGN.md §8): a preemption storm, or
+        // a nearly dry pool with admissions queued, means slots are
+        // about to be reassigned under an in-flight staged upload —
+        // drop it so the next step's pre-execute sync rebuilds the
+        // front buffers from the live window and no admitted request
+        // observes a half-drained state. (PagedEngine::{preempt,fork}
+        // also drain per-event; this is the scheduler-level backstop,
+        // unit-tested as a pure function.)
+        {
+            let waiting = self.n_waiting();
+            let pe = self.engine.paged.as_mut().unwrap();
+            let free = pe.mgr.allocator().free_pages();
+            let watermark = self.engine.cfg.scheduler.watermark_pages;
+            if pipeline_drain_decision(preempted_here, free, watermark,
+                                       waiting) {
+                pe.drain_pipeline();
             }
         }
 
@@ -374,9 +396,11 @@ impl Coordinator {
         let dt = t0.elapsed();
         let window = pe.take_window_delta();
         let upload = pe.take_upload_delta();
+        let pipeline = pe.take_pipeline_delta();
         self.engine.metrics.decode_step.record(dt);
         self.engine.metrics.note_window(&window);
         self.engine.metrics.note_upload(&upload);
+        self.engine.metrics.note_pipeline(&pipeline);
         let per = dt.div_f64(live_ids.len() as f64);
         for _ in 0..live_ids.len() {
             self.engine.metrics.per_token.record(per);
@@ -663,6 +687,23 @@ fn select_batch(
         .collect()
 }
 
+/// Drain the transfer pipeline this tick? Only when window slots can
+/// actually be reassigned under the in-flight staged upload: pages
+/// were preempted this tick, or the pool is nearly dry AND an
+/// admission wave is queued to take the freed slots. A dry pool with
+/// nothing waiting keeps the staged upload — otherwise sustained
+/// memory pressure would drain every step and pin the overlap
+/// fraction at zero in exactly the loaded regime the pipeline
+/// targets. Correctness never depends on this policy (the epoch
+/// protocol re-covers reassigned slots, invariant I8); draining just
+/// spares the doomed transfer (DESIGN.md §8).
+fn pipeline_drain_decision(preempted_this_tick: u32, free_pages: usize,
+                           watermark_pages: usize, waiting: usize)
+                           -> bool {
+    preempted_this_tick > 0
+        || (free_pages < watermark_pages && waiting > 0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -687,5 +728,48 @@ mod tests {
         assert_eq!(r.max_new_tokens, 7);
         assert!(r.sampling.is_greedy());
         assert!(!r.stop_at_eos);
+    }
+
+    #[test]
+    fn drain_policy_fires_on_preemption_and_dry_pool_with_queue() {
+        // steady serving: plenty of pages, no preemptions → keep the
+        // staged upload (overlap preserved)
+        assert!(!pipeline_drain_decision(0, 100, 4, 5));
+        assert!(!pipeline_drain_decision(0, 4, 4, 5),
+                "at watermark is ok");
+        // any preemption this tick reassigns slots → must drain
+        assert!(pipeline_drain_decision(1, 100, 4, 0));
+        assert!(pipeline_drain_decision(3, 0, 4, 0));
+        // pool below watermark AND an admission wave queued: the
+        // admissions will take the freed slots → drain
+        assert!(pipeline_drain_decision(0, 3, 4, 1));
+        assert!(pipeline_drain_decision(0, 0, 1, 7));
+        // dry pool but NOTHING waiting: no slot can move — keep the
+        // staged upload so sustained pressure doesn't zero the overlap
+        assert!(!pipeline_drain_decision(0, 3, 4, 0));
+        assert!(!pipeline_drain_decision(0, 0, 1, 0));
+    }
+
+    #[test]
+    fn drain_policy_storms_never_admit_over_staged_state() {
+        // preemption-storm property: across ANY interleaving of
+        // (preemptions, free pages, queue depth) ticks, every tick
+        // that could hand freed slots to a newly admitted request
+        // decides to drain — so no admitted request ever observes a
+        // half-drained window.
+        for preempted in 0..8u32 {
+            for free in 0..16usize {
+                for waiting in 0..4usize {
+                    let drains = pipeline_drain_decision(
+                        preempted, free, 4, waiting);
+                    let slots_can_move = preempted > 0
+                        || (free < 4 && waiting > 0);
+                    assert!(!slots_can_move || drains,
+                            "preempted={preempted} free={free} \
+                             waiting={waiting}: staged upload \
+                             survived a slot-reassigning tick");
+                }
+            }
+        }
     }
 }

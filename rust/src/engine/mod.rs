@@ -14,6 +14,7 @@
 pub mod contiguous;
 pub mod nocache;
 pub mod paged;
+pub mod pipeline;
 pub mod sampler;
 
 use std::path::Path;
@@ -28,6 +29,7 @@ use crate::{bail, err};
 pub use contiguous::ContiguousEngine;
 pub use nocache::NoCacheEngine;
 pub use paged::{PagedEngine, SeqState};
+pub use pipeline::{DevicePair, PipelineStats, TransferPipeline};
 pub use sampler::{argmax, log_prob, Sampler};
 
 pub struct Engine {
@@ -56,6 +58,7 @@ impl Engine {
                 pe.set_delta_transfer(cfg.window_delta);
                 pe.set_window_layout(cfg.window_layout);
                 pe.set_upload_mode(cfg.window_upload);
+                pe.set_pipeline(cfg.pipeline);
                 paged = Some(pe);
             }
             AttentionMode::Contiguous => {

@@ -28,15 +28,16 @@
 //! preempting a sequence releases just its dead pages' slots.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use crate::config::UploadMode;
+use crate::engine::pipeline::{PipelineStats, TransferPipeline};
 use crate::kvpage::{
     AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
-    PoolGeometry, ResidentWindow, SeqId, UploadPlan, WindowLayout,
-    WindowStats,
+    PoolGeometry, ResidentWindow, SeqId, WindowLayout, WindowStats,
 };
 use crate::model::ModelSpec;
-use crate::runtime::{DeviceWindow, HostTensor, Runtime, UploadStats};
+use crate::runtime::{HostTensor, Runtime, UploadStats};
 use crate::util::profile::{self, Phase};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
@@ -96,12 +97,14 @@ pub struct PagedEngine {
     layout: WindowLayout,
     fixed_pages: usize,
     manifest_w: Option<Option<usize>>,
-    /// Persistent device-side window buffers (K and V) running the
-    /// dirty-range upload protocol — accounting-only on the 0.5.1 PJRT
-    /// backing, which cannot update buffers in place (DESIGN.md §6).
-    k_dev: DeviceWindow,
-    v_dev: DeviceWindow,
-    upload_delta: bool,
+    /// Double-buffered device-side window transfer (DESIGN.md §8):
+    /// two persistent backings per pool running the epoch-tagged
+    /// dirty-range protocol, staging step N+1's upload while step N
+    /// executes — accounting-only (and therefore serial) on the 0.5.1
+    /// PJRT backing, which cannot update buffers in place.
+    pipe: TransferPipeline,
+    /// `--pipeline` request; effective only under the fixed-W layout.
+    pipeline_requested: bool,
     scr: StepScratch,
 }
 
@@ -132,9 +135,8 @@ impl PagedEngine {
             layout: WindowLayout::default(),
             fixed_pages: 0,
             manifest_w: None,
-            k_dev: DeviceWindow::pjrt(),
-            v_dev: DeviceWindow::pjrt(),
-            upload_delta: true,
+            pipe: TransferPipeline::pjrt(true),
+            pipeline_requested: true,
             scr: StepScratch::default(),
         }
     }
@@ -167,28 +169,63 @@ impl PagedEngine {
 
     /// Window sizing policy (`EngineConfig::window_layout`). Takes
     /// effect on the next step; a change relayouts the window there.
+    /// `per_bucket` relayouts on bucket churn, so it also collapses
+    /// the transfer pipeline to the serial path (DESIGN.md §8).
     pub fn set_window_layout(&mut self, layout: WindowLayout) {
         self.layout = layout;
+        self.pipe.set_enabled(
+            self.pipeline_requested && layout == WindowLayout::Fixed,
+        );
+    }
+
+    /// `EngineConfig::pipeline` / `--pipeline off`: overlap step N+1's
+    /// window upload with step N's execute (DESIGN.md §8). Off runs
+    /// the serial gather → upload → execute path of PR 2.
+    pub fn set_pipeline(&mut self, on: bool) {
+        self.pipeline_requested = on;
+        self.pipe.set_enabled(
+            on && self.layout == WindowLayout::Fixed,
+        );
+    }
+
+    pub fn pipeline_enabled(&self) -> bool {
+        self.pipe.enabled()
     }
 
     /// Host→device upload mode (`EngineConfig::window_upload`): Full
     /// re-pushes the whole window every step even when the gather ran
     /// on the delta path.
     pub fn set_upload_mode(&mut self, mode: UploadMode) {
-        self.upload_delta = mode == UploadMode::Delta;
+        self.pipe.set_upload_full(mode == UploadMode::Full);
     }
 
-    /// Cumulative device-window upload counters, K and V summed.
+    /// Cumulative device-window upload counters, all backings summed.
     pub fn upload_stats(&self) -> UploadStats {
-        self.k_dev.stats().plus(self.v_dev.stats())
+        self.pipe.upload_stats()
     }
 
     /// Upload counters accumulated since the last call (the coordinator
     /// merges these into `ServingMetrics` after each step).
     pub fn take_upload_delta(&mut self) -> UploadStats {
-        self.k_dev
-            .take_unreported()
-            .plus(&self.v_dev.take_unreported())
+        self.pipe.take_upload_unreported()
+    }
+
+    /// Cumulative pipeline counters (staging, overlap, drains).
+    pub fn pipeline_stats(&self) -> &PipelineStats {
+        self.pipe.stats()
+    }
+
+    /// Pipeline counters accumulated since the last call.
+    pub fn take_pipeline_delta(&mut self) -> PipelineStats {
+        self.pipe.take_unreported()
+    }
+
+    /// Drop any staged (in-flight) upload; the next step re-syncs the
+    /// front buffers from the live window before executing. The
+    /// scheduler calls this on preemption storms and pool-dry
+    /// admission so no request observes a half-drained window.
+    pub fn drain_pipeline(&mut self) {
+        self.pipe.drain();
     }
 
     /// RESERVE + sequence bookkeeping. Errors bubble PoolExhausted so the
@@ -228,11 +265,40 @@ impl PagedEngine {
         for page in self.mgr.free(id)? {
             self.window.forget(page);
         }
+        // an in-flight staged upload may cover the dead pages' slots;
+        // drop it so the next step re-syncs from the live window
+        self.pipe.drain();
         Ok(state.tokens)
     }
 
     pub fn seq(&self, id: SeqId) -> Option<&SeqState> {
         self.seqs.get(&id)
+    }
+
+    /// FORK `parent` into `child` at `tokens` (≤ the parent's
+    /// prefilled length): full pages are aliased copy-on-write, a
+    /// partial tail page is copied host-side, and the child decodes
+    /// independently from there. Drains any staged pipeline upload —
+    /// page ownership changes under an in-flight plan (DESIGN.md §8).
+    pub fn fork(&mut self, parent: SeqId, child: SeqId, tokens: usize)
+                -> Result<(), AllocError> {
+        let parent_tokens = self
+            .seqs
+            .get(&parent)
+            .ok_or(AllocError::UnknownSeq(parent))?
+            .tokens
+            .clone();
+        let plan = self.mgr.fork(parent, child, tokens)?;
+        if let Some((src, dst)) = plan.cow_copy {
+            self.k_pool.copy_page(src, dst);
+            self.v_pool.copy_page(src, dst);
+        }
+        self.seqs.insert(child, SeqState {
+            tokens: parent_tokens[..tokens].to_vec(),
+            prefilled: tokens,
+        });
+        self.pipe.drain();
+        Ok(())
     }
 
     /// Chat-growth extension: append `new_tokens` to an existing
@@ -459,6 +525,11 @@ impl PagedEngine {
         let geo = *self.k_pool.geometry();
         let window_pages = self.window_pages_for(rt, b)?;
 
+        // stage boundary 1 (DESIGN.md §8): finish the in-flight staged
+        // upload (row tail) and rotate the device pairs, then open the
+        // window step
+        self.pipe.begin_step(&mut self.window);
+
         // remap physical pages -> stable window slots, copying only
         // newly-resident or dirty pages (everything on a full gather)
         self.window.begin_step(window_pages);
@@ -486,16 +557,14 @@ impl PagedEngine {
                 }
             }
         }
-        // device upload: only the ranges that changed since the last
-        // step (plan Full on fallback triggers and in Full upload
-        // mode; the 0.5.1 PJRT backing cannot delta, falls back, and
-        // records the whole-window re-push it actually performs)
-        let mut plan = self.window.take_upload_plan();
-        if !self.upload_delta {
-            plan = UploadPlan::Full;
-        }
-        self.k_dev.apply(self.window.k_window(), &plan);
-        self.v_dev.apply(self.window.v_window(), &plan);
+        // stage boundary 2: sync the front device pair for THIS step
+        // (only what the gather just changed) and stage the next
+        // step's upload into the back pair, modeled as overlapping the
+        // coming execute (plan Full on fallback triggers and in Full
+        // upload mode; the 0.5.1 PJRT backing cannot delta, runs
+        // serially, and records the whole-window re-push it actually
+        // performs at execute time)
+        self.pipe.pre_execute(&mut self.window);
 
         let win_shape = vec![geo.n_layers, window_pages, ps,
                              geo.n_kv_heads, geo.d_head];
@@ -515,11 +584,13 @@ impl PagedEngine {
             HostTensor::i32(std::mem::take(&mut self.scr.chunk_lens),
                             vec![b]),
         ];
+        let t_run = Instant::now();
         let result = rt.run(artifact, &inputs).wrap_err_with(|| {
             format!("running {artifact} (window layout '{}', W = \
                      {window_pages})",
                     crate::config::window_layout_as_str(self.layout))
         });
+        let run_ns = t_run.elapsed().as_nanos() as u64;
         let mut it = inputs.into_iter();
         self.scr.tokens = it
             .next()
@@ -550,8 +621,11 @@ impl PagedEngine {
             // failed execute ⇒ assume the device lost its buffers: the
             // next step falls back to a full gather + full upload
             self.window.invalidate();
-            self.k_dev.invalidate();
-            self.v_dev.invalidate();
+            self.pipe.invalidate();
+        } else {
+            // stage boundary 3: account how much of the staged
+            // transfer hid under the device round-trip
+            self.pipe.note_execute(run_ns);
         }
         result
     }

@@ -1,0 +1,600 @@
+//! Double-buffered transfer/compute decode pipeline — DESIGN.md §8.
+//!
+//! PR 1–2 made both halves of the KV transfer O(changed); this module
+//! takes the transfer off the decode critical path. The serial step
+//! runs gather → upload → execute in sequence, so the host→device push
+//! (the deployment bottleneck of arXiv 2506.07311) stalls every step —
+//! exactly the serialization production servers hide by overlapping
+//! transfer with compute (Kwon et al., arXiv 2309.06180).
+//!
+//! [`TransferPipeline`] keeps **two** persistent device backings per
+//! pool ([`DevicePair`] front/back) and drives them with the
+//! epoch-tagged plans of `kvpage::window` (DESIGN.md §8):
+//!
+//! * while step N executes against the *front* pair, step N+1's upload
+//!   is staged into the *back* pair from an epoch-tagged
+//!   [`StagedUpload`] whose bytes were captured at snapshot time — the
+//!   in-flight transfer can never observe the scatter running
+//!   meanwhile;
+//! * at the next stage boundary the rows the scatter wrote after the
+//!   snapshot are pushed row-granularly
+//!   ([`ResidentWindow::take_row_tail`]) and the pairs rotate;
+//! * a small slot-granular sync (`plan_for` against the new front's
+//!   epoch) before execute covers whatever the gather just changed.
+//!
+//! Anything the fast path cannot promise collapses to the serial path
+//! for that step and recovers after: residency loss or a window
+//! relayout forces a captured full refill of the back pair, a lost
+//! device buffer full-syncs when its pair reaches the front,
+//! `--pipeline off` or a `per_bucket` window layout disables staging
+//! outright, and a backing without range support (the real
+//! xla_extension 0.5.1 path, where the transfer actually happens at
+//! execute time) never stages at all.
+//!
+//! Overlap is *modeled* offline: staged bytes cost
+//! `xla::modeled_transfer_ns`, and [`TransferPipeline::note_execute`]
+//! accounts how much of that hides under the measured execute
+//! (`Phase::PipelineOverlap`, the overlap-fraction serving line, and
+//! `benches/pipeline_overlap.rs`).
+
+use crate::kvpage::{ResidentWindow, StagedUpload, UploadPlan};
+use crate::runtime::{DeviceWindow, UploadStats};
+use crate::util::profile::{self, Phase};
+
+/// K and V device windows moving in lockstep (one plan drives both).
+pub struct DevicePair {
+    pub k: DeviceWindow,
+    pub v: DeviceWindow,
+}
+
+impl DevicePair {
+    fn sim() -> Self {
+        DevicePair { k: DeviceWindow::sim(), v: DeviceWindow::sim() }
+    }
+
+    fn pjrt() -> Self {
+        DevicePair { k: DeviceWindow::pjrt(), v: DeviceWindow::pjrt() }
+    }
+
+    /// Epoch the pair is current through (a lost half drags it to 0).
+    pub fn epoch(&self) -> u64 {
+        self.k.epoch().min(self.v.epoch())
+    }
+
+    pub fn supports_ranges(&self) -> bool {
+        self.k.supports_ranges() && self.v.supports_ranges()
+    }
+
+    pub fn invalidate(&mut self) {
+        self.k.invalidate();
+        self.v.invalidate();
+    }
+
+    fn can_delta(&self, host_len: usize) -> bool {
+        self.k.can_delta(host_len) && self.v.can_delta(host_len)
+    }
+}
+
+/// Cumulative pipeline counters (modeled ns; wall time is measured
+/// only for execute, by the engine).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    /// `begin_step` calls.
+    pub steps: u64,
+    /// Staged (overlappable) uploads into the back pair.
+    pub staged_uploads: u64,
+    /// Bytes those uploads moved (K and V together).
+    pub staged_bytes: u64,
+    /// Modeled ns of staged transfer (overlappable with execute).
+    pub staged_ns: u64,
+    /// Modeled ns of row-tail pushes (critical path).
+    pub tail_ns: u64,
+    /// Modeled ns of pre-execute front syncs (critical path).
+    pub sync_ns: u64,
+    /// Modeled staged ns actually hidden under measured execute.
+    pub overlap_ns: u64,
+    /// Steps whose staging fell back to a captured full refill
+    /// (residency drop / relayout reached the back pair).
+    pub collapses: u64,
+    /// Staged uploads dropped by `drain` (preemption, pool-dry).
+    pub drains: u64,
+    /// Most recent step's staged / tail / sync modeled ns.
+    pub last_staged_ns: u64,
+    pub last_tail_ns: u64,
+    pub last_sync_ns: u64,
+}
+
+impl PipelineStats {
+    /// Fraction of staged transfer hidden under execute ([0, 1]).
+    pub fn overlap_fraction(&self) -> f64 {
+        if self.staged_ns == 0 {
+            0.0
+        } else {
+            self.overlap_ns as f64 / self.staged_ns as f64
+        }
+    }
+}
+
+/// Modeled transfer cost of `elems` f32 elements in `copies` DMA ops.
+fn modeled_ns(elems: usize, copies: usize) -> u64 {
+    xla::modeled_transfer_ns(4 * elems as u64, copies as u64)
+}
+
+fn plan_cost(plan: &UploadPlan, host_len: usize) -> u64 {
+    match plan {
+        UploadPlan::Full => modeled_ns(host_len, 1),
+        UploadPlan::Ranges(r) => {
+            let elems: usize = r.iter().map(|&(_, n)| n).sum();
+            modeled_ns(elems, r.len())
+        }
+    }
+}
+
+/// Double-buffered device-side window transfer state machine. The
+/// engine drives one per pool pair through three stage boundaries per
+/// step: [`TransferPipeline::begin_step`] (tail push + rotate, before
+/// the gather), [`TransferPipeline::pre_execute`] (front sync + stage
+/// the back pair, after the gather), and
+/// [`TransferPipeline::note_execute`] (overlap accounting, after the
+/// executable returns). With the pipeline disabled the same calls
+/// reproduce the serial PR 2 path against a single pair.
+pub struct TransferPipeline {
+    bufs: [DevicePair; 2],
+    front: usize,
+    enabled: bool,
+    /// `window_upload = full`: every plan and snapshot is whole-window.
+    upload_full: bool,
+    /// The back pair holds a completed staged upload for the next step.
+    staged: bool,
+    /// The current front pair was rotated in with a completed staged
+    /// upload this step — in `window_upload = full` mode its pre-
+    /// execute sync only needs the residual (the staged phase already
+    /// pushed the whole window, off the critical path).
+    front_fresh: bool,
+    stats: PipelineStats,
+    reported: PipelineStats,
+}
+
+impl TransferPipeline {
+    /// Modeled-buffer backing (benches, proptests, offline runs).
+    pub fn sim(enabled: bool) -> Self {
+        Self::with_pairs([DevicePair::sim(), DevicePair::sim()], enabled)
+    }
+
+    /// Accounting-only backing for the real PJRT 0.5.1 path: without
+    /// in-place buffer updates there is no second buffer to fill, so
+    /// the pipeline never stages and every step runs serially.
+    pub fn pjrt(enabled: bool) -> Self {
+        Self::with_pairs([DevicePair::pjrt(), DevicePair::pjrt()],
+                         enabled)
+    }
+
+    fn with_pairs(bufs: [DevicePair; 2], enabled: bool) -> Self {
+        TransferPipeline {
+            bufs,
+            front: 0,
+            enabled,
+            upload_full: false,
+            staged: false,
+            front_fresh: false,
+            stats: PipelineStats::default(),
+            reported: PipelineStats::default(),
+        }
+    }
+
+    /// `--pipeline off` / `per_bucket` layout: collapse to the serial
+    /// single-pair path (turning off drops any staged upload).
+    pub fn set_enabled(&mut self, on: bool) {
+        if !on {
+            self.staged = false;
+        }
+        self.enabled = on;
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// `window_upload = full`: plans and snapshots are whole-window.
+    pub fn set_upload_full(&mut self, full: bool) {
+        self.upload_full = full;
+    }
+
+    /// Pair the next execute reads (tests/benches verify device-side
+    /// contents against it).
+    pub fn front(&self) -> &DevicePair {
+        &self.bufs[self.front]
+    }
+
+    /// Pair being staged for the following step.
+    pub fn back(&self) -> &DevicePair {
+        &self.bufs[1 - self.front]
+    }
+
+    /// Loss-injection hooks (proptests model device resets).
+    pub fn front_mut(&mut self) -> &mut DevicePair {
+        &mut self.bufs[self.front]
+    }
+
+    pub fn back_mut(&mut self) -> &mut DevicePair {
+        &mut self.bufs[1 - self.front]
+    }
+
+    /// A staged upload is waiting to rotate in.
+    pub fn has_staged(&self) -> bool {
+        self.staged
+    }
+
+    /// Drop both device backings (failed execute, device reset): the
+    /// next step full-syncs whatever pair is in front.
+    pub fn invalidate(&mut self) {
+        self.bufs[0].invalidate();
+        self.bufs[1].invalidate();
+        self.staged = false;
+    }
+
+    /// Drop the staged upload without touching resident contents
+    /// (preemption storm, pool-dry admission): the next step's
+    /// pre-execute sync rebuilds the front pair from the live window,
+    /// so no admitted request ever executes against a half-drained
+    /// device state.
+    pub fn drain(&mut self) {
+        if self.staged {
+            self.stats.drains += 1;
+        }
+        self.staged = false;
+    }
+
+    /// Stage boundary 1 — before the gather: finish the in-flight
+    /// upload by pushing the rows the scatter wrote after its snapshot
+    /// (row-granular when possible), then rotate the staged pair to
+    /// the front. No-op when serial or nothing is staged.
+    pub fn begin_step(&mut self, win: &mut ResidentWindow) {
+        self.stats.steps += 1;
+        self.stats.last_staged_ns = 0;
+        self.stats.last_tail_ns = 0;
+        self.stats.last_sync_ns = 0;
+        self.front_fresh = false;
+        if !self.enabled || !self.staged {
+            return;
+        }
+        let back = 1 - self.front;
+        if let Some((ranges, through)) = win.take_row_tail() {
+            let pair = &mut self.bufs[back];
+            let k_ok = pair
+                .k
+                .upload_ranges_at(win.k_window(), &ranges, through)
+                .is_ok();
+            let v_ok = pair
+                .v
+                .upload_ranges_at(win.v_window(), &ranges, through)
+                .is_ok();
+            if k_ok && v_ok {
+                let elems: usize =
+                    ranges.iter().map(|&(_, n)| n).sum();
+                let ns = modeled_ns(2 * elems, 2 * ranges.len());
+                self.stats.tail_ns += ns;
+                self.stats.last_tail_ns = ns;
+            }
+            // a failed half (buffer lost mid-flight) keeps its old
+            // epoch; the pre-execute sync below full-uploads it — the
+            // serial-collapse guarantee
+        }
+        // take_row_tail == None (non-row writes since the snapshot):
+        // the pending writes stay pending and the pre-execute sync
+        // pushes them slot-granularly.
+        self.front = back;
+        self.staged = false;
+        self.front_fresh = true;
+    }
+
+    /// Stage boundary 2 — after the gather, before execute: bring the
+    /// front pair current for THIS step (sync residual on the critical
+    /// path), then stage the next step's upload into the back pair
+    /// (modeled as overlapping the coming execute). Serial mode stops
+    /// after the sync — that IS the PR 2 upload step.
+    pub fn pre_execute(&mut self, win: &mut ResidentWindow) {
+        let host_len = win.k_window().len();
+        // In full-upload mode a freshly rotated front already received
+        // the whole window during the (overlapped) staged phase; its
+        // sync only tops up the residual. Everywhere else the mode
+        // forces a whole-window push, as does a backing without range
+        // support (plan_for still orders Full on any epoch staleness).
+        let force_full = (self.upload_full && !self.front_fresh)
+            || !self.bufs[self.front].supports_ranges();
+        let front_epoch = self.bufs[self.front].epoch();
+        let (plan, through) = win.plan_for(front_epoch, force_full);
+        {
+            let pair = &mut self.bufs[self.front];
+            pair.k.apply_at(win.k_window(), &plan, through);
+            pair.v.apply_at(win.v_window(), &plan, through);
+        }
+        let ns = 2 * plan_cost(&plan, host_len);
+        self.stats.sync_ns += ns;
+        self.stats.last_sync_ns = ns;
+
+        if !self.enabled
+            || !self.bufs[1 - self.front].supports_ranges()
+        {
+            // serial mode, or an accounting-only backing where the
+            // real transfer happens at execute time: nothing to stage
+            return;
+        }
+        let back = 1 - self.front;
+        let back_stale = !self.bufs[back].can_delta(host_len);
+        let snap = win.snapshot_for(
+            self.bufs[back].epoch(),
+            self.upload_full || back_stale,
+        );
+        if snap.full && !self.upload_full && !back_stale {
+            // the window itself forced the refill (residency drop /
+            // relayout since the back pair last uploaded)
+            self.stats.collapses += 1;
+        }
+        self.apply_staged(back, &snap, host_len);
+    }
+
+    fn apply_staged(&mut self, back: usize, snap: &StagedUpload,
+                    host_len: usize) {
+        let pair = &mut self.bufs[back];
+        if snap.full {
+            pair.k.upload_full_captured(&snap.k_data, snap.through);
+            pair.v.upload_full_captured(&snap.v_data, snap.through);
+        } else {
+            let k_ok = pair
+                .k
+                .upload_captured(host_len, &snap.ranges, &snap.k_data,
+                                 snap.through)
+                .is_ok();
+            let v_ok = pair
+                .v
+                .upload_captured(host_len, &snap.ranges, &snap.v_data,
+                                 snap.through)
+                .is_ok();
+            if !k_ok || !v_ok {
+                // defensive: captured ranges no longer apply (buffer
+                // lost between capture and apply). Stage nothing and
+                // credit nothing — the pair is stale, so the next
+                // pre-execute snapshots it a full refill, and if it
+                // reaches the front first the sync full-uploads it.
+                self.staged = false;
+                self.stats.collapses += 1;
+                return;
+            }
+        }
+        let elems = 2 * snap.elems();
+        let ns = modeled_ns(elems, snap.copies());
+        self.stats.staged_uploads += 1;
+        self.stats.staged_bytes += 4 * elems as u64;
+        self.stats.staged_ns += ns;
+        self.stats.last_staged_ns = ns;
+        self.staged = true;
+    }
+
+    /// Stage boundary 3 — the executable returned after `execute_ns`
+    /// wall ns: account how much of the staged transfer hid under it.
+    pub fn note_execute(&mut self, execute_ns: u64) {
+        if !self.enabled || !self.staged {
+            return;
+        }
+        let overlap = self.stats.last_staged_ns.min(execute_ns);
+        self.stats.overlap_ns += overlap;
+        profile::record_ns(Phase::PipelineOverlap, overlap);
+    }
+
+    pub fn stats(&self) -> &PipelineStats {
+        &self.stats
+    }
+
+    /// Counters accumulated since the last call (serving-metrics
+    /// merge).
+    pub fn take_unreported(&mut self) -> PipelineStats {
+        let s = &self.stats;
+        let r = &self.reported;
+        let d = PipelineStats {
+            steps: s.steps - r.steps,
+            staged_uploads: s.staged_uploads - r.staged_uploads,
+            staged_bytes: s.staged_bytes - r.staged_bytes,
+            staged_ns: s.staged_ns - r.staged_ns,
+            tail_ns: s.tail_ns - r.tail_ns,
+            sync_ns: s.sync_ns - r.sync_ns,
+            overlap_ns: s.overlap_ns - r.overlap_ns,
+            collapses: s.collapses - r.collapses,
+            drains: s.drains - r.drains,
+            last_staged_ns: s.last_staged_ns,
+            last_tail_ns: s.last_tail_ns,
+            last_sync_ns: s.last_sync_ns,
+        };
+        self.reported = self.stats;
+        d
+    }
+
+    /// Host→device upload counters summed over all four buffers.
+    pub fn upload_stats(&self) -> UploadStats {
+        self.bufs[0]
+            .k
+            .stats()
+            .plus(self.bufs[0].v.stats())
+            .plus(self.bufs[1].k.stats())
+            .plus(self.bufs[1].v.stats())
+    }
+
+    /// Upload counters accumulated since the last call.
+    pub fn take_upload_unreported(&mut self) -> UploadStats {
+        self.bufs[0]
+            .k
+            .take_unreported()
+            .plus(&self.bufs[0].v.take_unreported())
+            .plus(&self.bufs[1].k.take_unreported())
+            .plus(&self.bufs[1].v.take_unreported())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvpage::{HostPool, PoolGeometry};
+
+    fn geo() -> PoolGeometry {
+        PoolGeometry { n_layers: 2, n_pages: 16, page_size: 4,
+                       n_kv_heads: 2, d_head: 2 }
+    }
+
+    struct Rig {
+        k: HostPool,
+        v: HostPool,
+        win: ResidentWindow,
+        pipe: TransferPipeline,
+        counter: f32,
+    }
+
+    impl Rig {
+        fn new(enabled: bool) -> Self {
+            Rig {
+                k: HostPool::zeros(geo()),
+                v: HostPool::zeros(geo()),
+                win: ResidentWindow::new(geo()),
+                pipe: TransferPipeline::sim(enabled),
+                counter: 0.0,
+            }
+        }
+
+        /// One decode-shaped step over `pages`: map, sync/stage,
+        /// "execute" (front contents verified at that boundary when
+        /// `ctx` is nonempty), scatter a row into the last page.
+        fn step(&mut self, pages: &[u32], w: usize, ctx: &str) {
+            self.pipe.begin_step(&mut self.win);
+            self.win.begin_step(w);
+            for &p in pages {
+                self.win.map_page(&mut self.k, &mut self.v, p).unwrap();
+            }
+            self.pipe.pre_execute(&mut self.win);
+            if !ctx.is_empty() {
+                // what a device-resident execute would read right now
+                self.assert_front_synced(pages, ctx);
+            }
+            self.pipe.note_execute(1_000_000);
+            let tail = *pages.last().unwrap();
+            for layer in 0..geo().n_layers {
+                self.counter += 1.0;
+                self.k.token_row_mut(layer, tail, 1).fill(self.counter);
+                self.v.token_row_mut(layer, tail, 1)
+                    .fill(-self.counter);
+                self.win.write_row(&mut self.k, &mut self.v, layer,
+                                   tail, 1);
+            }
+        }
+
+        /// Front device contents == host window for every mapped page.
+        fn assert_front_synced(&self, pages: &[u32], ctx: &str) {
+            let g = geo();
+            let pe = g.page_elems();
+            let w = self.win.window_pages();
+            let fk = self.pipe.front().k.contents().expect("front K");
+            let fv = self.pipe.front().v.contents().expect("front V");
+            for &p in pages {
+                let slot = self.win.slot(p).unwrap() as usize;
+                for layer in 0..g.n_layers {
+                    let off = (layer * w + slot) * pe;
+                    assert_eq!(&fk[off..off + pe],
+                               self.win.k_page_slice(layer, slot as u32),
+                               "{ctx}: K page {p} layer {layer}");
+                    assert_eq!(&fv[off..off + pe],
+                               self.win.v_page_slice(layer, slot as u32),
+                               "{ctx}: V page {p} layer {layer}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_steps_stage_and_rotate() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "step 0");
+        assert!(r.pipe.has_staged(), "step stages the back pair");
+        for i in 1..7 {
+            r.step(&[0, 1], 8, &format!("step {i}"));
+        }
+        let s = r.pipe.stats();
+        assert!(s.staged_uploads >= 6, "{s:?}");
+        assert!(s.tail_ns > 0, "row tails rode the rotation: {s:?}");
+        assert!(s.overlap_ns > 0, "staged ns hid under execute: {s:?}");
+        assert!(s.overlap_fraction() > 0.0);
+    }
+
+    #[test]
+    fn serial_mode_never_stages() {
+        let mut r = Rig::new(false);
+        for i in 0..4 {
+            r.step(&[2], 8, &format!("serial {i}"));
+        }
+        let s = r.pipe.stats();
+        assert_eq!(s.staged_uploads, 0);
+        assert_eq!(s.overlap_ns, 0);
+        assert!(s.sync_ns > 0, "serial path is all sync");
+    }
+
+    #[test]
+    fn drain_forces_clean_front_resync() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "");
+        r.step(&[0, 1], 8, "");
+        assert!(r.pipe.has_staged());
+        r.pipe.drain();
+        assert!(!r.pipe.has_staged());
+        assert_eq!(r.pipe.stats().drains, 1);
+        // next step must still execute against fully synced contents
+        r.step(&[0, 1], 8, "post-drain");
+    }
+
+    #[test]
+    fn back_buffer_loss_recovers_via_full_refill() {
+        let mut r = Rig::new(true);
+        r.step(&[3], 8, "");
+        r.step(&[3], 8, "");
+        r.pipe.back_mut().k.invalidate();
+        let staged_before = r.pipe.stats().staged_uploads;
+        r.step(&[3], 8, "loss step"); // stale back → full refill
+        assert!(r.pipe.stats().staged_uploads > staged_before,
+                "pipeline keeps staging after a loss");
+        r.step(&[3], 8, "recovered");
+    }
+
+    #[test]
+    fn residency_drop_counts_a_collapse_and_stays_correct() {
+        let mut r = Rig::new(true);
+        r.step(&[0], 8, "");
+        r.step(&[0], 8, "");
+        r.win.invalidate(); // preemption-style residency drop
+        r.step(&[0], 8, "drop step");
+        r.step(&[0], 8, "post-invalidate");
+        assert!(r.pipe.stats().collapses >= 1,
+                "rebuild must surface as a collapse: {:?}",
+                r.pipe.stats());
+    }
+
+    #[test]
+    fn upload_full_mode_stages_whole_windows() {
+        let mut r = Rig::new(true);
+        r.pipe.set_upload_full(true);
+        r.step(&[0, 1], 8, "");
+        for i in 0..3 {
+            r.step(&[0, 1], 8, &format!("full mode {i}"));
+        }
+        let s = r.pipe.stats();
+        let win_bytes = 2 * 4 * r.win.k_window().len() as u64;
+        assert!(s.staged_bytes >= 3 * win_bytes,
+                "full mode stages whole windows: {s:?}");
+    }
+
+    #[test]
+    fn stats_delta_reporting() {
+        let mut r = Rig::new(true);
+        r.step(&[0], 8, "");
+        let d1 = r.pipe.take_unreported();
+        assert_eq!(d1.steps, 1);
+        let d2 = r.pipe.take_unreported();
+        assert_eq!(d2.steps, 0, "delta since last take");
+        assert!(r.pipe.upload_stats().bytes_uploaded > 0);
+    }
+}

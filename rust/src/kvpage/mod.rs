@@ -33,4 +33,5 @@ pub use freelist::FreeList;
 pub use manager::{AllocError, AppendPlan, PageManager, ReserveOutcome, SeqId};
 pub use pool::{HostPool, PoolGeometry};
 pub use prefix::{PrefixIndex, PrefixMatch};
-pub use window::{ResidentWindow, UploadPlan, WindowLayout, WindowStats};
+pub use window::{ResidentWindow, StagedUpload, UploadPlan, WindowLayout,
+                 WindowStats};

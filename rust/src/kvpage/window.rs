@@ -36,6 +36,17 @@
 //!   upload and hands back coalesced element ranges (or a full-upload
 //!   order) for `runtime::DeviceWindow` to push, making the host→device
 //!   transfer O(changed) as well.
+//! * Upload plans are **epoch-tagged** (DESIGN.md §8): every slot write
+//!   stamps a monotone epoch, and [`ResidentWindow::plan_for`] /
+//!   [`ResidentWindow::snapshot_for`] produce the work a device buffer
+//!   current *through* any given epoch is missing. That generalizes the
+//!   one-buffer dirty-bit scheme to the double-buffered
+//!   transfer/compute pipeline (`engine::pipeline`), where two device
+//!   backings per pool sit at different epochs. `snapshot_for` also
+//!   captures the range bytes at snapshot time, so an upload modeled as
+//!   in flight during execute can never observe a later scatter, and
+//!   [`ResidentWindow::take_row_tail`] hands the rows written *after*
+//!   the snapshot to the next stage boundary row-granularly.
 
 use std::collections::HashMap;
 
@@ -43,6 +54,10 @@ use super::pool::{HostPool, PoolGeometry};
 
 /// Sentinel for "slot holds no page".
 const NO_PAGE: u32 = u32::MAX;
+
+/// Row-tail log bound: past this many write-through rows between
+/// captures the tail degrades to slot-granular ranges.
+const ROW_TAIL_CAP: usize = 8192;
 
 /// How the engine sizes the resident window (DESIGN.md §6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -73,6 +88,36 @@ pub enum UploadPlan {
     /// the previous plan was taken — adjacent dirty slots coalesced,
     /// expanded per layer.
     Ranges(Vec<(usize, usize)>),
+}
+
+/// One staged (pipelined) upload: an epoch-tagged plan whose range
+/// bytes were captured from the window buffers at snapshot time, so the
+/// transfer can be modeled as overlapping the following execute without
+/// racing the scatter that runs meanwhile (DESIGN.md §8). `full`
+/// snapshots capture the whole buffers (the double-buffer refill /
+/// `window_upload = full` path).
+pub struct StagedUpload {
+    /// Epoch the applying device buffer becomes current through.
+    pub through: u64,
+    /// Whole-buffer capture (ranges empty, data = full window).
+    pub full: bool,
+    /// Ascending (element offset, count) ranges; `k_data`/`v_data`
+    /// hold their bytes concatenated in the same order.
+    pub ranges: Vec<(usize, usize)>,
+    pub k_data: Vec<f32>,
+    pub v_data: Vec<f32>,
+}
+
+impl StagedUpload {
+    /// f32 elements captured per pool.
+    pub fn elems(&self) -> usize {
+        self.k_data.len()
+    }
+
+    /// Individual device copies this upload costs (K and V).
+    pub fn copies(&self) -> usize {
+        if self.full { 2 } else { 2 * self.ranges.len() }
+    }
 }
 
 /// Cumulative transfer counters (bytes count K and V together).
@@ -116,11 +161,24 @@ pub struct ResidentWindow {
     delta_enabled: bool,
     /// Buffers are in place and match the current layout.
     valid: bool,
-    /// slot → window contents changed since the last `take_upload_plan`.
-    upload_dirty: Vec<bool>,
-    /// The next upload plan must be Full (layout rebuilt since the last
-    /// plan was taken).
-    pending_full_upload: bool,
+    /// Monotone write epoch: every slot mutation stamps the current
+    /// value; every capture (`plan_for` / `snapshot_for` /
+    /// `take_row_tail`) returns it as `through` and bumps it, so writes
+    /// after a capture always ride a later plan.
+    epoch: u64,
+    /// slot → epoch of its last content change (0 = free/never).
+    slot_epoch: Vec<u64>,
+    /// Epoch at the last layout rebuild: a device buffer current only
+    /// through an earlier epoch needs a full upload.
+    rebuild_epoch: u64,
+    /// Device epoch of the legacy single-buffer `take_upload_plan`.
+    last_plan_epoch: u64,
+    /// Element ranges written by `write_row` since the last capture
+    /// (shared offsets for K and V), for row-granular tail pushes.
+    row_tail: Vec<(usize, usize)>,
+    /// All writes since the last capture were logged rows (no page
+    /// copies, no rebuild) — the precondition for `take_row_tail`.
+    rows_clean: bool,
     k_win: Vec<f32>,
     v_win: Vec<f32>,
     stats: WindowStats,
@@ -143,8 +201,12 @@ impl ResidentWindow {
             full_this_step: true,
             delta_enabled: true,
             valid: false,
-            upload_dirty: Vec::new(),
-            pending_full_upload: false,
+            epoch: 1,
+            slot_epoch: Vec::new(),
+            rebuild_epoch: 1,
+            last_plan_epoch: 0,
+            row_tail: Vec::new(),
+            rows_clean: false,
             k_win: Vec::new(),
             v_win: Vec::new(),
             stats: WindowStats::default(),
@@ -186,7 +248,7 @@ impl ResidentWindow {
             self.stamp[s] = 0;
             // a freed slot's contents will never be read again; don't
             // waste upload bytes on it unless a new page lands there
-            self.upload_dirty[s] = false;
+            self.slot_epoch[s] = 0;
             self.free.push(slot);
         }
     }
@@ -231,9 +293,11 @@ impl ResidentWindow {
         self.free.clear();
         self.free.extend((0..window_pages as u32).rev());
         self.steal_cursor = 0;
-        self.upload_dirty.clear();
-        self.upload_dirty.resize(window_pages, false);
-        self.pending_full_upload = true;
+        self.slot_epoch.clear();
+        self.slot_epoch.resize(window_pages, 0);
+        self.rebuild_epoch = self.epoch;
+        self.row_tail.clear();
+        self.rows_clean = false;
         self.full_this_step = true;
         self.stats.full_gathers += 1;
         self.valid = true;
@@ -323,7 +387,10 @@ impl ResidentWindow {
         }
         k.clear_dirty(page);
         v.clear_dirty(page);
-        self.upload_dirty[slot as usize] = true;
+        self.slot_epoch[slot as usize] = self.epoch;
+        // a whole-page copy is not row-granular: the next tail capture
+        // must fall back to slot ranges
+        self.rows_clean = false;
         let bytes = (2 * self.geo.n_layers * pe * 4) as u64;
         self.stats.pages_copied += 1;
         self.stats.last_pages_copied += 1;
@@ -360,7 +427,14 @@ impl ResidentWindow {
             .copy_from_slice(v.gather_token(layer, page, slot_in_page));
         k.clear_dirty(page);
         v.clear_dirty(page);
-        self.upload_dirty[slot as usize] = true;
+        self.slot_epoch[slot as usize] = self.epoch;
+        if self.row_tail.len() < ROW_TAIL_CAP {
+            self.row_tail.push((dst, te));
+        } else {
+            // safety valve: an absurdly long tail degrades to slot
+            // ranges rather than growing without bound
+            self.rows_clean = false;
+        }
         let bytes = (2 * te * 4) as u64;
         self.stats.rows_written += 1;
         self.stats.bytes_moved += bytes;
@@ -371,31 +445,55 @@ impl ResidentWindow {
     /// the window buffers since the previous call, as coalesced element
     /// ranges (adjacent dirty slots merge into one range per layer) —
     /// or a full-upload order when the layout was rebuilt since then or
-    /// delta transfer is off. Clears the dirty-slot set; the caller
-    /// must execute the plan (`runtime::DeviceWindow::apply`) on both
-    /// the K and V buffers or device state goes stale. Write-through
-    /// rows scattered *after* a step's upload are picked up by the next
-    /// step's plan.
+    /// delta transfer is off. The caller must execute the plan
+    /// (`runtime::DeviceWindow::apply`) on both the K and V buffers or
+    /// device state goes stale. Write-through rows scattered *after* a
+    /// step's upload are picked up by the next step's plan. (Legacy
+    /// single-buffer form of [`ResidentWindow::plan_for`].)
     pub fn take_upload_plan(&mut self) -> UploadPlan {
-        if self.pending_full_upload || self.full_this_step
-            || !self.delta_enabled
-        {
-            self.pending_full_upload = false;
-            self.upload_dirty.iter_mut().for_each(|d| *d = false);
-            return UploadPlan::Full;
-        }
+        let (plan, through) = self.plan_for(self.last_plan_epoch, false);
+        self.last_plan_epoch = through;
+        plan
+    }
+
+    /// Current write epoch (every slot mutation stamps it; every
+    /// capture bumps it).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Close a capture point: later writes ride a later plan.
+    fn capture_point(&mut self) -> u64 {
+        let through = self.epoch;
+        self.epoch += 1;
+        self.row_tail.clear();
+        self.rows_clean = true;
+        through
+    }
+
+    /// The single fallback-trigger rule deciding Full vs Ranges for a
+    /// buffer current through `dev_epoch` — shared by `plan_for` and
+    /// `snapshot_for` so the sync and staged paths can never disagree
+    /// on staleness.
+    fn needs_full(&self, dev_epoch: u64, force_full: bool) -> bool {
+        force_full || !self.delta_enabled
+            || dev_epoch < self.rebuild_epoch
+    }
+
+    /// Coalesced per-layer element ranges covering every slot written
+    /// after `dev_epoch` (adjacent slots merge into one run).
+    fn ranges_since(&self, dev_epoch: u64) -> Vec<(usize, usize)> {
         let w = self.window_pages;
         let pe = self.geo.page_elems();
         let mut slot_runs: Vec<(usize, usize)> = Vec::new();
         let mut s = 0;
         while s < w {
-            if !self.upload_dirty[s] {
+            if self.slot_epoch[s] <= dev_epoch {
                 s += 1;
                 continue;
             }
             let start = s;
-            while s < w && self.upload_dirty[s] {
-                self.upload_dirty[s] = false;
+            while s < w && self.slot_epoch[s] > dev_epoch {
                 s += 1;
             }
             slot_runs.push((start, s - start));
@@ -407,7 +505,68 @@ impl ResidentWindow {
                 ranges.push(((layer * w + start) * pe, n * pe));
             }
         }
-        UploadPlan::Ranges(ranges)
+        ranges
+    }
+
+    /// Upload plan for a device buffer current through `dev_epoch`,
+    /// plus the epoch it becomes current through by executing it. Full
+    /// when the layout was rebuilt past the buffer's epoch, delta
+    /// transfer is off, or `force_full` (the `window_upload = full`
+    /// mode). Pure apart from the epoch bump — two buffers at
+    /// different epochs can each take their own plan.
+    pub fn plan_for(&mut self, dev_epoch: u64, force_full: bool)
+                    -> (UploadPlan, u64) {
+        let plan = if self.needs_full(dev_epoch, force_full) {
+            UploadPlan::Full
+        } else {
+            UploadPlan::Ranges(self.ranges_since(dev_epoch))
+        };
+        (plan, self.capture_point())
+    }
+
+    /// Like [`ResidentWindow::plan_for`], but captures the range bytes
+    /// from the window buffers *now*, so the upload can be modeled as
+    /// in flight while the scatter keeps writing (DESIGN.md §8).
+    pub fn snapshot_for(&mut self, dev_epoch: u64, force_full: bool)
+                        -> StagedUpload {
+        if self.needs_full(dev_epoch, force_full) {
+            let k_data = self.k_win.clone();
+            let v_data = self.v_win.clone();
+            let through = self.capture_point();
+            return StagedUpload {
+                through,
+                full: true,
+                ranges: Vec::new(),
+                k_data,
+                v_data,
+            };
+        }
+        let ranges = self.ranges_since(dev_epoch);
+        let n: usize = ranges.iter().map(|&(_, len)| len).sum();
+        let mut k_data = Vec::with_capacity(n);
+        let mut v_data = Vec::with_capacity(n);
+        for &(off, len) in &ranges {
+            k_data.extend_from_slice(&self.k_win[off..off + len]);
+            v_data.extend_from_slice(&self.v_win[off..off + len]);
+        }
+        let through = self.capture_point();
+        StagedUpload { through, full: false, ranges, k_data, v_data }
+    }
+
+    /// The rows written through since the last capture, as element
+    /// ranges into the live window buffers (same offsets for K and V),
+    /// plus the epoch they carry a buffer through. `None` when
+    /// anything other than write-through rows happened since the last
+    /// capture (page copy, rebuild, overflow) — the caller then falls
+    /// back to a slot-granular [`ResidentWindow::plan_for`], which is
+    /// always sound; the pending writes stay pending.
+    pub fn take_row_tail(&mut self)
+                         -> Option<(Vec<(usize, usize)>, u64)> {
+        if !self.delta_enabled || !self.rows_clean {
+            return None;
+        }
+        let ranges = std::mem::take(&mut self.row_tail);
+        Some((ranges, self.capture_point()))
     }
 
     /// Move the K/V buffers out (zero-copy hand-off to the input

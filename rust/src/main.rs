@@ -13,7 +13,7 @@
 //!   --attention paged|contiguous|no_cache
 //!   --growth exact|power_of_two   --no-prefix-cache
 //!   --no-window-delta   --window-layout fixed|per_bucket
-//!   --window-upload delta|full
+//!   --window-upload delta|full   --pipeline on|off
 //!   --max-batch N --prefill-chunk N   --config FILE.json
 //! ```
 
@@ -75,6 +75,8 @@ fn print_help() {
              keeps residency across batch buckets)\n\
            --window-upload delta|full (device push: dirty ranges or\n\
              whole window)\n\
+           --pipeline on|off (overlap next step's KV upload with the\n\
+             current execute; off = serial transfer)\n\
            --max-batch N --prefill-chunk N --config FILE.json"
     );
 }
@@ -148,6 +150,13 @@ impl Flags {
         }
         if let Some(u) = self.get("window-upload") {
             cfg.window_upload = config::UploadMode::from_str(u)?;
+        }
+        if let Some(p) = self.get("pipeline") {
+            cfg.pipeline = match p {
+                "on" => true,
+                "off" => false,
+                _ => bail!("bad --pipeline '{p}' (on|off)"),
+            };
         }
         if let Some(b) = self.get("max-batch") {
             cfg.scheduler.max_batch_size =

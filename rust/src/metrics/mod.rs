@@ -7,6 +7,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::engine::pipeline::PipelineStats;
 use crate::kvpage::WindowStats;
 use crate::runtime::UploadStats;
 
@@ -143,6 +144,18 @@ pub struct ServingMetrics {
     /// Whole-window uploads (first step, fallback triggers, or a
     /// backend without range updates).
     pub upload_full: AtomicU64,
+    /// Staged (overlappable) uploads the transfer pipeline pushed into
+    /// the back device pair (DESIGN.md §8).
+    pub pipeline_staged: AtomicU64,
+    /// Modeled ns of staged transfer.
+    pub pipeline_staged_ns: AtomicU64,
+    /// Modeled staged ns that hid under measured execute time.
+    pub pipeline_overlap_ns: AtomicU64,
+    /// Steps whose staging collapsed to a full refill (residency drop
+    /// or relayout reaching the back pair).
+    pub pipeline_collapses: AtomicU64,
+    /// Staged uploads dropped on preemption / pool-dry admission.
+    pub pipeline_drains: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -169,6 +182,26 @@ impl ServingMetrics {
         Self::inc(&self.upload_ranges, d.ranges_pushed);
         Self::inc(&self.upload_delta, d.delta_uploads);
         Self::inc(&self.upload_full, d.full_uploads);
+    }
+
+    /// Merge a pipeline delta (`PagedEngine::take_pipeline_delta`).
+    pub fn note_pipeline(&self, d: &PipelineStats) {
+        Self::inc(&self.pipeline_staged, d.staged_uploads);
+        Self::inc(&self.pipeline_staged_ns, d.staged_ns);
+        Self::inc(&self.pipeline_overlap_ns, d.overlap_ns);
+        Self::inc(&self.pipeline_collapses, d.collapses);
+        Self::inc(&self.pipeline_drains, d.drains);
+    }
+
+    /// Fraction of modeled staged-transfer time hidden under execute
+    /// ([0, 1]; 0 with the pipeline off or nothing staged).
+    pub fn pipeline_overlap_fraction(&self) -> f64 {
+        let staged = self.pipeline_staged_ns.load(Ordering::Relaxed);
+        if staged == 0 {
+            return 0.0;
+        }
+        self.pipeline_overlap_ns.load(Ordering::Relaxed) as f64
+            / staged as f64
     }
 
     /// Mean bytes the host gather memcpy moved into the KV window per
@@ -219,6 +252,8 @@ impl ServingMetrics {
              full_gathers={} ({:.1} KB/decode step)\n\
              kv upload: delta={} full={} ranges={} \
              ({:.1} KB/decode step)\n\
+             kv pipeline: staged={} collapses={} drains={} \
+             overlap={:.0}%\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -239,6 +274,10 @@ impl ServingMetrics {
             self.upload_full.load(Ordering::Relaxed),
             self.upload_ranges.load(Ordering::Relaxed),
             self.upload_bytes_per_decode_step() / 1e3,
+            self.pipeline_staged.load(Ordering::Relaxed),
+            self.pipeline_collapses.load(Ordering::Relaxed),
+            self.pipeline_drains.load(Ordering::Relaxed),
+            100.0 * self.pipeline_overlap_fraction(),
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -251,7 +290,7 @@ impl ServingMetrics {
     /// CSV row of the headline numbers (benches aggregate these).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1},{:.0},{:.0}",
+            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1},{:.0},{:.0},{:.3}",
             self.requests_finished.load(Ordering::Relaxed),
             self.tokens_prefilled.load(Ordering::Relaxed),
             self.tokens_decoded.load(Ordering::Relaxed),
@@ -263,13 +302,15 @@ impl ServingMetrics {
             self.decode_tokens_per_sec(),
             self.window_bytes_per_decode_step(),
             self.upload_bytes_per_decode_step(),
+            self.pipeline_overlap_fraction(),
         )
     }
 
     pub const CSV_HEADER: &'static str =
         "finished,tokens_prefilled,tokens_decoded,preempted,\
          ttft_p50_ms,ttft_p99_ms,tok_p50_ms,tok_p99_ms,decode_tok_per_s,\
-         window_bytes_per_step,upload_bytes_per_step";
+         window_bytes_per_step,upload_bytes_per_step,\
+         pipeline_overlap_frac";
 }
 
 /// Scoped timer recording into a histogram on drop.
@@ -359,7 +400,7 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("pages_copied=3"), "{s}");
         assert!(s.contains("full_gathers=1"), "{s}");
-        assert!(m.csv_row().ends_with("2048,0"), "{}", m.csv_row());
+        assert!(m.csv_row().ends_with("2048,0,0.000"), "{}", m.csv_row());
     }
 
     #[test]
@@ -379,7 +420,29 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("delta=3"), "{s}");
         assert!(s.contains("ranges=9"), "{s}");
-        assert!(m.csv_row().ends_with("4096"), "{}", m.csv_row());
+        assert!(m.csv_row().ends_with("4096,0.000"), "{}", m.csv_row());
+    }
+
+    #[test]
+    fn pipeline_counters_merge_and_fraction() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.pipeline_overlap_fraction(), 0.0, "no staging yet");
+        let d = PipelineStats {
+            steps: 4,
+            staged_uploads: 4,
+            staged_bytes: 1024,
+            staged_ns: 1000,
+            overlap_ns: 750,
+            collapses: 1,
+            drains: 2,
+            ..Default::default()
+        };
+        m.note_pipeline(&d);
+        assert_eq!(m.pipeline_overlap_fraction(), 0.75);
+        let s = m.summary();
+        assert!(s.contains("staged=4"), "{s}");
+        assert!(s.contains("overlap=75%"), "{s}");
+        assert!(m.csv_row().ends_with("0.750"), "{}", m.csv_row());
     }
 
     #[test]

@@ -81,6 +81,9 @@ pub struct DeviceWindow {
     /// False after `invalidate` (buffer loss): the next `apply` must be
     /// a full upload.
     valid: bool,
+    /// Window epoch the resident contents are current through
+    /// (`ResidentWindow::plan_for` handoff; 0 = never uploaded/lost).
+    epoch: u64,
     stats: UploadStats,
     reported: UploadStats,
 }
@@ -101,9 +104,15 @@ impl DeviceWindow {
             backing,
             len: 0,
             valid: false,
+            epoch: 0,
             stats: UploadStats::default(),
             reported: UploadStats::default(),
         }
+    }
+
+    /// Window epoch the buffer is current through (0 = none).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Whether the backing can push individual ranges.
@@ -115,6 +124,7 @@ impl DeviceWindow {
     /// `apply` falls back to a full upload whatever the plan says.
     pub fn invalidate(&mut self) {
         self.valid = false;
+        self.epoch = 0;
     }
 
     /// A delta upload against the resident buffer would be sound.
@@ -160,11 +170,17 @@ impl DeviceWindow {
             buf.write_range(off, &host[off..off + n])?;
             bytes += 4 * n as u64;
         }
+        self.note_delta_upload(ranges.len() as u64, bytes);
+        Ok(())
+    }
+
+    /// Shared stats bookkeeping for the two range-push paths (live
+    /// host slices vs snapshot-captured data) — keep them in sync.
+    fn note_delta_upload(&mut self, n_ranges: u64, bytes: u64) {
         self.stats.delta_uploads += 1;
-        self.stats.ranges_pushed += ranges.len() as u64;
+        self.stats.ranges_pushed += n_ranges;
         self.stats.bytes_uploaded += bytes;
         self.stats.last_bytes = bytes;
-        Ok(())
     }
 
     /// Execute an [`UploadPlan`] from the resident window, falling back
@@ -182,6 +198,67 @@ impl DeviceWindow {
             }
             _ => self.upload_full(host),
         }
+    }
+
+    /// [`DeviceWindow::apply`] plus the epoch handoff: the buffer
+    /// becomes current through `through` (the epoch
+    /// `ResidentWindow::plan_for` returned alongside the plan).
+    pub fn apply_at(&mut self, host: &[f32], plan: &UploadPlan,
+                    through: u64) {
+        self.apply(host, plan);
+        self.epoch = through;
+    }
+
+    /// [`DeviceWindow::upload_ranges`] plus the epoch handoff. On error
+    /// the epoch is untouched, so a later plan re-covers the ranges.
+    pub fn upload_ranges_at(&mut self, host: &[f32],
+                            ranges: &[(usize, usize)], through: u64)
+                            -> Result<()> {
+        self.upload_ranges(host, ranges)?;
+        self.epoch = through;
+        Ok(())
+    }
+
+    /// Push ranges whose bytes were captured at snapshot time
+    /// (`ResidentWindow::snapshot_for`): `data` holds the ranges'
+    /// elements concatenated in order. This is the staged (pipelined)
+    /// upload — it must not read the live host buffer, which the
+    /// scatter may be rewriting while the transfer is in flight.
+    pub fn upload_captured(&mut self, host_len: usize,
+                           ranges: &[(usize, usize)], data: &[f32],
+                           through: u64) -> Result<()> {
+        ensure!(self.can_delta(host_len),
+                "device window cannot take a captured delta (valid={}, \
+                 resident {} vs host {} elements, range support {})",
+                self.valid, self.len, host_len, self.supports_ranges());
+        let _p = profile::span(Phase::UploadDelta);
+        let Backing::Sim(buf) = &mut self.backing else {
+            bail!("unreachable: range upload without range support");
+        };
+        let mut cursor = 0usize;
+        let mut bytes = 0u64;
+        for &(off, n) in ranges {
+            ensure!(cursor + n <= data.len(),
+                    "captured upload underrun: range [{off}, {}) wants \
+                     {n} elements, {} captured",
+                    off + n, data.len() - cursor);
+            ensure!(off + n <= host_len,
+                    "upload range [{off}, {}) exceeds host window of {} \
+                     elements", off + n, host_len);
+            buf.write_range(off, &data[cursor..cursor + n])?;
+            cursor += n;
+            bytes += 4 * n as u64;
+        }
+        self.note_delta_upload(ranges.len() as u64, bytes);
+        self.epoch = through;
+        Ok(())
+    }
+
+    /// Whole-buffer upload from bytes captured at snapshot time (the
+    /// staged full path: double-buffer refill, `window_upload = full`).
+    pub fn upload_full_captured(&mut self, data: &[f32], through: u64) {
+        self.upload_full(data);
+        self.epoch = through;
     }
 
     /// Device-side contents (sim backing only; tests and benches verify

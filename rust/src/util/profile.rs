@@ -31,12 +31,17 @@ pub enum Phase {
     /// device-window full upload: whole window buffer re-pushed
     /// (first step, residency/buffer loss, delta disabled)
     UploadFull = 7,
+    /// modeled staged-transfer time hidden under execute by the
+    /// double-buffered pipeline (DESIGN.md §8; recorded via
+    /// `record_ns`, not a wall-clock span)
+    PipelineOverlap = 8,
 }
 
-const N: usize = 8;
+const N: usize = 9;
 const NAMES: [&str; N] = ["subpool_gather", "upload", "execute",
                           "download", "scatter", "window_delta",
-                          "upload_delta", "upload_full"];
+                          "upload_delta", "upload_full",
+                          "pipeline_overlap"];
 
 static NANOS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
 static COUNTS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
@@ -58,6 +63,15 @@ impl Drop for Span {
                            Ordering::Relaxed);
         COUNTS[i].fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// Record a phase duration directly in nanoseconds — for modeled (not
+/// wall-clock) time like `Phase::PipelineOverlap`.
+#[inline]
+pub fn record_ns(phase: Phase, ns: u64) {
+    let i = phase as usize;
+    NANOS[i].fetch_add(ns, Ordering::Relaxed);
+    COUNTS[i].fetch_add(1, Ordering::Relaxed);
 }
 
 pub fn reset() {

@@ -1,0 +1,262 @@
+//! Cross-engine differential conformance (skip if artifacts absent).
+//!
+//! The pipeline PR's end-to-end guarantee: overlapping transfer with
+//! compute changes NOTHING observable. Randomized mixed prefill/decode
+//! traces (`trace::mixed_batch`) are served through four engine
+//! configurations — paged with the transfer pipeline on, paged with
+//! `--pipeline off`, contiguous, and nocache — and every request's
+//! greedy token stream must be byte-identical across all of them. A
+//! second set of tests drives preempt/resume and fork interleavings
+//! through the paged engine directly (pipeline on AND off) against
+//! uninterrupted references.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use paged_flex::config::{AttentionMode, EngineConfig, SamplingConfig};
+use paged_flex::coordinator::{Coordinator, Request};
+use paged_flex::engine::{argmax, Engine, Sampler};
+use paged_flex::trace::mixed_batch;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn cfg(mode: AttentionMode, dir: &Path, pipeline: bool) -> EngineConfig {
+    let mut c = EngineConfig::default();
+    c.model = "tiny".into();
+    c.artifacts_dir = dir.to_path_buf();
+    c.attention = mode;
+    c.pipeline = pipeline;
+    c.scheduler.prefill_chunk = 32;
+    c
+}
+
+/// Serve `reqs` to completion under `cfg`; id → generated tokens.
+fn serve(cfg: EngineConfig, reqs: &[(u64, Vec<u32>, usize)])
+         -> HashMap<u64, Vec<u32>> {
+    let engine = Engine::new(cfg).unwrap();
+    let mut coord = Coordinator::new(engine);
+    for (id, prompt, max_new) in reqs {
+        coord
+            .submit(Request::greedy(*id, prompt.clone(), *max_new))
+            .unwrap();
+    }
+    let fins = coord.run_to_completion().unwrap();
+    fins.into_iter()
+        .inspect(|f| assert!(f.error.is_none(),
+                             "request {} errored: {:?}", f.id, f.error))
+        .map(|f| (f.id, f.tokens))
+        .collect()
+}
+
+#[test]
+fn mixed_traces_identical_across_engines_and_pipeline_modes() {
+    let Some(dir) = artifacts() else { return };
+    for seed in [11u64, 23, 47] {
+        // lengths on the {8, 16, ..., 48} grid, scaled to the tiny
+        // model (the paper's 500..8000 grid shape, Sec. IV-A)
+        let reqs: Vec<(u64, Vec<u32>, usize)> =
+            mixed_batch(seed, 512, 5, 8, 48, 6)
+                .into_iter()
+                .map(|r| (r.id, r.prompt, r.max_new_tokens))
+                .collect();
+
+        let pipe_on =
+            serve(cfg(AttentionMode::Paged, &dir, true), &reqs);
+        let pipe_off =
+            serve(cfg(AttentionMode::Paged, &dir, false), &reqs);
+        let contig =
+            serve(cfg(AttentionMode::Contiguous, &dir, true), &reqs);
+        let nocache =
+            serve(cfg(AttentionMode::NoCache, &dir, true), &reqs);
+
+        for (id, _, _) in &reqs {
+            assert_eq!(pipe_on[id], pipe_off[id],
+                       "seed {seed} req {id}: pipeline changed the \
+                        tokens");
+            assert_eq!(pipe_on[id], contig[id],
+                       "seed {seed} req {id}: paged vs contiguous \
+                        diverged");
+            assert_eq!(pipe_on[id], nocache[id],
+                       "seed {seed} req {id}: paged vs full-recompute \
+                        diverged");
+        }
+    }
+}
+
+fn prompt(seed: u64, len: usize) -> Vec<u32> {
+    let mut rng = paged_flex::trace::Rng::seeded(seed);
+    (0..len).map(|_| rng.below(512) as u32).collect()
+}
+
+/// Uninterrupted greedy reference through the paged path.
+fn reference(dir: &Path, pipeline: bool, p: &[u32], n: usize)
+             -> Vec<u32> {
+    let mut eng =
+        Engine::new(cfg(AttentionMode::Paged, dir, pipeline)).unwrap();
+    let mut s = Sampler::new(SamplingConfig::greedy());
+    eng.generate(p, n, &mut s).unwrap()
+}
+
+/// Preempt/resume interleaving: two sequences decode together; one is
+/// preempted mid-stream (recompute-style: pages freed, tokens kept,
+/// staged pipeline uploads drained), re-admitted, re-prefilled, and
+/// decoded on — its final stream must equal the uninterrupted run.
+fn preempt_resume_roundtrip(pipeline: bool) {
+    let Some(dir) = artifacts() else { return };
+    let p1 = prompt(61, 24);
+    let p2 = prompt(62, 17);
+    let ref1 = reference(&dir, pipeline, &p1, 8);
+    let ref2 = reference(&dir, pipeline, &p2, 8);
+
+    let mut eng =
+        Engine::new(cfg(AttentionMode::Paged, &dir, pipeline)).unwrap();
+    let (a, b) = (eng.fresh_seq_id(), eng.fresh_seq_id());
+    let pe = eng.paged.as_mut().unwrap();
+    pe.admit(a, &p1).unwrap();
+    pe.admit(b, &p2).unwrap();
+    let mut logits: HashMap<u64, Vec<f32>> = HashMap::new();
+    for id in [a, b] {
+        loop {
+            let out = pe.prefill_chunk(&eng.rt, &[id], 32).unwrap();
+            let (_, done, row) = out.into_iter().next().unwrap();
+            if done {
+                logits.insert(id, row);
+                break;
+            }
+        }
+    }
+    let mut got: HashMap<u64, Vec<u32>> =
+        [(a, vec![]), (b, vec![])].into();
+
+    // 3 joint decode steps
+    for _ in 0..3 {
+        let (t1, t2) = (argmax(&logits[&a]), argmax(&logits[&b]));
+        got.get_mut(&a).unwrap().push(t1);
+        got.get_mut(&b).unwrap().push(t2);
+        for (id, row) in
+            pe.decode_step(&eng.rt, &[a, b], &[t1, t2]).unwrap()
+        {
+            logits.insert(id, row);
+        }
+    }
+
+    // preempt seq a mid-stream; b decodes alone meanwhile
+    let kept = pe.preempt(a).unwrap();
+    assert_eq!(kept.len(), p1.len() + 3, "tokens kept across preempt");
+    logits.remove(&a);
+    for _ in 0..2 {
+        let t2 = argmax(&logits[&b]);
+        got.get_mut(&b).unwrap().push(t2);
+        for (id, row) in
+            pe.decode_step(&eng.rt, &[b], &[t2]).unwrap()
+        {
+            logits.insert(id, row);
+        }
+    }
+
+    // resume: re-admit with everything it had, re-prefill (recompute)
+    let a2 = 1000;
+    pe.admit(a2, &kept).unwrap();
+    loop {
+        let out = pe.prefill_chunk(&eng.rt, &[a2], 32).unwrap();
+        let (_, done, row) = out.into_iter().next().unwrap();
+        if done {
+            logits.insert(a2, row);
+            break;
+        }
+    }
+
+    // joint decode to the budget (a resumed at 3/8, b at 5/8)
+    for _ in 0..3 {
+        let (t1, t2) = (argmax(&logits[&a2]), argmax(&logits[&b]));
+        got.get_mut(&a).unwrap().push(t1);
+        if got[&b].len() < 8 {
+            got.get_mut(&b).unwrap().push(t2);
+            for (id, row) in pe
+                .decode_step(&eng.rt, &[a2, b], &[t1, t2])
+                .unwrap()
+            {
+                logits.insert(id, row);
+            }
+        } else {
+            for (id, row) in
+                pe.decode_step(&eng.rt, &[a2], &[t1]).unwrap()
+            {
+                logits.insert(id, row);
+            }
+        }
+    }
+    assert_eq!(got[&a], ref1[..6].to_vec(),
+               "pipeline={pipeline}: preempt/resume changed seq a");
+    assert_eq!(got[&b], ref2,
+               "pipeline={pipeline}: survivor seq b diverged");
+}
+
+#[test]
+fn preempt_resume_identical_pipeline_on() {
+    preempt_resume_roundtrip(true);
+}
+
+#[test]
+fn preempt_resume_identical_pipeline_off() {
+    preempt_resume_roundtrip(false);
+}
+
+/// Fork interleaving: a child forked from a prefilled parent must
+/// produce byte-identical logits to a freshly prefilled sequence with
+/// the same prefix, when both are driven with the same token chain —
+/// with the pipeline on and off.
+fn fork_matches_fresh_prefill(pipeline: bool) {
+    let Some(dir) = artifacts() else { return };
+    let p = prompt(93, 32);
+    let at = 21; // fork point (not page-aligned at page_size 8 → CoW)
+
+    let mut eng =
+        Engine::new(cfg(AttentionMode::Paged, &dir, pipeline)).unwrap();
+    let parent = eng.fresh_seq_id();
+    let pe = eng.paged.as_mut().unwrap();
+    pe.admit(parent, &p).unwrap();
+    let out = pe.prefill_chunk(&eng.rt, &[parent], 64).unwrap();
+    assert!(out[0].1, "parent prefill finished");
+
+    // fresh reference over the same prefix
+    let fresh = 500;
+    pe.admit(fresh, &p[..at]).unwrap();
+    let out = pe.prefill_chunk(&eng.rt, &[fresh], 64).unwrap();
+    assert!(out[0].1);
+    let mut fresh_logits = out[0].2.clone();
+
+    // fork the child at `at` (aliased full pages + CoW tail page;
+    // drains any staged pipeline upload)
+    let child = 501;
+    pe.fork(parent, child, at).unwrap();
+
+    // drive both with the fresh path's greedy chain; logits must match
+    for step in 0..6 {
+        let tok = argmax(&fresh_logits);
+        let mut rows: HashMap<u64, Vec<f32>> = pe
+            .decode_step(&eng.rt, &[fresh, child], &[tok, tok])
+            .unwrap()
+            .into_iter()
+            .collect();
+        let f = rows.remove(&fresh).unwrap();
+        let c = rows.remove(&child).unwrap();
+        assert_eq!(f, c,
+                   "pipeline={pipeline} step {step}: forked child \
+                    logits diverged from fresh prefill");
+        fresh_logits = f;
+    }
+}
+
+#[test]
+fn fork_identical_pipeline_on() {
+    fork_matches_fresh_prefill(true);
+}
+
+#[test]
+fn fork_identical_pipeline_off() {
+    fork_matches_fresh_prefill(false);
+}

@@ -693,6 +693,463 @@ fn steady_single_sequence_decode_copies_o1_pages() {
              ({delta_total})");
 }
 
+// ----------------------------------------------------------------------
+// Double-buffered transfer pipeline vs the serial dirty-range path
+// (DESIGN.md §8)
+//
+// Two *independent* full replicas of the kvpage state machine (manager,
+// pools, resident window) are driven through the same random op
+// sequence: one uploads through the double-buffered TransferPipeline
+// (epoch-tagged snapshots, row tails, staged full refills), the other
+// through the serial single-buffer take_upload_plan path of PR 2. At
+// every execute boundary, the pipeline's FRONT device contents and the
+// serial device contents must both be element-identical to their pools
+// for every mapped page — and therefore to each other (the replicas
+// evolve identically). Random losses hit the pipeline's front/back
+// halves and the serial buffers independently; preemption invalidates
+// residency and drains the staged upload, exactly like the engine.
+// ----------------------------------------------------------------------
+
+use paged_flex::engine::pipeline::TransferPipeline;
+
+/// One full replica of the host-side decode state.
+struct PathState {
+    mgr: PageManager,
+    k: HostPool,
+    v: HostPool,
+    win: ResidentWindow,
+}
+
+impl PathState {
+    fn new(policy: GrowthPolicy) -> Self {
+        let alloc = Arc::new(PageAllocator::new(
+            N_PAGES, PAGE_SIZE, BYTES_PER_TOKEN, policy));
+        PathState {
+            mgr: PageManager::new(alloc, MAX_BLOCKS),
+            k: HostPool::zeros(GEO),
+            v: HostPool::zeros(GEO),
+            win: ResidentWindow::new(GEO),
+        }
+    }
+
+    fn write_tokens(&mut self, id: u64, start: usize, n: usize,
+                    counter: &mut f32) {
+        let pages = self.mgr.table(id).unwrap().pages().to_vec();
+        for pos in start..start + n {
+            let (page, off) = (pages[pos / PAGE_SIZE], pos % PAGE_SIZE);
+            for layer in 0..GEO.n_layers {
+                *counter += 1.0;
+                self.k.token_row_mut(layer, page, off).fill(*counter);
+                self.v.token_row_mut(layer, page, off).fill(-*counter);
+            }
+        }
+    }
+
+    /// Every mapped page: window == pool (I6).
+    fn assert_window_synced(&self, pages: &[u32], ctx: &str,
+                            path: &str) {
+        let pe = GEO.page_elems();
+        for &p in pages {
+            let slot = self.win.slot(p).unwrap();
+            for layer in 0..GEO.n_layers {
+                let src = GEO.offset(layer, p, 0);
+                assert_eq!(self.win.k_page_slice(layer, slot),
+                           &self.k.as_slice()[src..src + pe],
+                           "{ctx}: {path} K page {p} layer {layer} \
+                            window diverged");
+                assert_eq!(self.win.v_page_slice(layer, slot),
+                           &self.v.as_slice()[src..src + pe],
+                           "{ctx}: {path} V page {p} layer {layer} \
+                            window diverged");
+            }
+        }
+    }
+}
+
+struct PipeHarness {
+    /// Replica uploading through the double-buffered pipeline.
+    p: PathState,
+    pipe: TransferPipeline,
+    /// Replica uploading through the serial PR 2 path.
+    s: PathState,
+    s_kdev: DeviceWindow,
+    s_vdev: DeviceWindow,
+    live: Vec<u64>,
+    next_id: u64,
+    rng: Rng,
+    counter_p: f32,
+    counter_s: f32,
+}
+
+impl PipeHarness {
+    fn new(seed: u64, policy: GrowthPolicy) -> Self {
+        PipeHarness {
+            p: PathState::new(policy),
+            pipe: TransferPipeline::sim(true),
+            s: PathState::new(policy),
+            s_kdev: DeviceWindow::sim(),
+            s_vdev: DeviceWindow::sim(),
+            live: vec![],
+            next_id: 1,
+            rng: Rng::seeded(seed),
+            counter_p: 0.0,
+            counter_s: 0.0,
+        }
+    }
+
+    fn reserve_op(&mut self) {
+        let id = self.next_id;
+        let len = 1 + self.rng.below(60) as usize;
+        let prompt: Vec<u32> =
+            (0..len).map(|_| self.rng.below(512) as u32).collect();
+        let a = self.p.mgr.reserve(id, &prompt);
+        let b = self.s.mgr.reserve(id, &prompt);
+        match (a, b) {
+            (Ok(oa), Ok(ob)) => {
+                assert_eq!(oa.cached_tokens, ob.cached_tokens,
+                           "replicas diverged on admission");
+                self.next_id += 1;
+                self.live.push(id);
+                let fresh = prompt.len() - oa.cached_tokens;
+                self.p.write_tokens(id, oa.cached_tokens, fresh,
+                                    &mut self.counter_p);
+                self.s.write_tokens(id, ob.cached_tokens, fresh,
+                                    &mut self.counter_s);
+                self.p.mgr.note_assigned(id, fresh).unwrap();
+                self.s.mgr.note_assigned(id, fresh).unwrap();
+                if self.rng.below(2) == 0 {
+                    self.p.mgr.register_prefix(id, &prompt).unwrap();
+                    self.s.mgr.register_prefix(id, &prompt).unwrap();
+                }
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on reserve outcome"),
+        }
+    }
+
+    fn append_op(&mut self) {
+        let Some(&id) = pick(&mut self.rng, &self.live) else { return };
+        let extra = 1 + self.rng.below(10) as usize;
+        let a = self.p.mgr.prepare_append(id, extra);
+        let b = self.s.mgr.prepare_append(id, extra);
+        match (a, b) {
+            (Ok(pa), Ok(pb)) => {
+                if let Some((src, dst)) = pa.cow_copy {
+                    self.p.k.copy_page(src, dst);
+                    self.p.v.copy_page(src, dst);
+                }
+                if let Some((src, dst)) = pb.cow_copy {
+                    self.s.k.copy_page(src, dst);
+                    self.s.v.copy_page(src, dst);
+                }
+                let len = self.p.mgr.seq_len(id).unwrap();
+                self.p.write_tokens(id, len, extra,
+                                    &mut self.counter_p);
+                self.s.write_tokens(id, len, extra,
+                                    &mut self.counter_s);
+                self.p.mgr.note_assigned(id, extra).unwrap();
+                self.s.mgr.note_assigned(id, extra).unwrap();
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on append outcome"),
+        }
+    }
+
+    fn fork_op(&mut self) {
+        let Some(&parent) = pick(&mut self.rng, &self.live) else {
+            return;
+        };
+        let plen = self.p.mgr.seq_len(parent).unwrap();
+        if plen == 0 {
+            return;
+        }
+        let at = 1 + self.rng.below(plen as u64) as usize;
+        let child = self.next_id;
+        let a = self.p.mgr.fork(parent, child, at);
+        let b = self.s.mgr.fork(parent, child, at);
+        match (a, b) {
+            (Ok(pa), Ok(pb)) => {
+                if let Some((src, dst)) = pa.cow_copy {
+                    self.p.k.copy_page(src, dst);
+                    self.p.v.copy_page(src, dst);
+                }
+                if let Some((src, dst)) = pb.cow_copy {
+                    self.s.k.copy_page(src, dst);
+                    self.s.v.copy_page(src, dst);
+                }
+                self.next_id += 1;
+                self.live.push(child);
+                // PagedEngine::fork drains the staged upload, but a
+                // manager-level fork does not — exercise BOTH
+                // interleavings: the epoch protocol must keep the
+                // undrained one correct too (invariant I8)
+                if self.rng.below(2) == 0 {
+                    self.pipe.drain();
+                }
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on fork outcome"),
+        }
+    }
+
+    fn free_op(&mut self, preempt: bool) {
+        if self.live.is_empty() {
+            return;
+        }
+        let i = self.rng.below(self.live.len() as u64) as usize;
+        let id = self.live.swap_remove(i);
+        for page in self.p.mgr.free(id).unwrap() {
+            self.p.win.forget(page);
+        }
+        for page in self.s.mgr.free(id).unwrap() {
+            self.s.win.forget(page);
+        }
+        if preempt {
+            // engine preemption: residency dropped, staged upload
+            // drained (PagedEngine::preempt + the scheduler policy)
+            self.p.win.invalidate();
+            self.s.win.invalidate();
+            self.pipe.drain();
+        }
+    }
+
+    fn decode_step_op(&mut self, ctx: &str) {
+        let mut batch: Vec<u64> = vec![];
+        let want = 1 + self.rng.below(BATCH_CAP as u64) as usize;
+        for _ in 0..want {
+            if let Some(&id) = pick(&mut self.rng, &self.live) {
+                if !batch.contains(&id) {
+                    batch.push(id);
+                }
+            }
+        }
+        // independent loss injection: pipeline halves and serial
+        // buffers each occasionally lose their device backing
+        if self.rng.below(16) == 0 {
+            self.pipe.front_mut().k.invalidate();
+        }
+        if self.rng.below(16) == 0 {
+            self.pipe.back_mut().v.invalidate();
+        }
+        if self.rng.below(16) == 0 {
+            self.s_kdev.invalidate();
+        }
+
+        // both replicas must agree on which ids can take a token
+        batch.retain(|&id| {
+            let a = self.p.mgr.prepare_append(id, 1);
+            let b = self.s.mgr.prepare_append(id, 1);
+            match (a, b) {
+                (Ok(pa), Ok(pb)) => {
+                    if let Some((src, dst)) = pa.cow_copy {
+                        self.p.k.copy_page(src, dst);
+                        self.p.v.copy_page(src, dst);
+                    }
+                    if let Some((src, dst)) = pb.cow_copy {
+                        self.s.k.copy_page(src, dst);
+                        self.s.v.copy_page(src, dst);
+                    }
+                    true
+                }
+                (Err(_), Err(_)) => false,
+                _ => panic!("{ctx}: replicas diverged on append"),
+            }
+        });
+        if batch.is_empty() {
+            return;
+        }
+
+        // ---- pipelined replica: the engine's three stage boundaries
+        self.pipe.begin_step(&mut self.p.win);
+        self.p.win.begin_step(WINDOW_PAGES);
+        let mut mapped: Vec<(u64, Vec<u32>)> = vec![];
+        for &id in &batch {
+            let len = self.p.mgr.seq_len(id).unwrap();
+            let pages = self
+                .p
+                .mgr
+                .table(id)
+                .unwrap()
+                .blocks_covering(len + 1)
+                .to_vec();
+            for &pg in &pages {
+                self.p
+                    .win
+                    .map_page(&mut self.p.k, &mut self.p.v, pg)
+                    .expect("pipeline window slots exhausted");
+            }
+            mapped.push((id, pages));
+        }
+        self.pipe.pre_execute(&mut self.p.win);
+
+        // ---- serial replica: the PR 2 path
+        self.s.win.begin_step(WINDOW_PAGES);
+        for (_, pages) in &mapped {
+            for &pg in pages {
+                self.s
+                    .win
+                    .map_page(&mut self.s.k, &mut self.s.v, pg)
+                    .expect("serial window slots exhausted");
+            }
+        }
+        let plan = self.s.win.take_upload_plan();
+        self.s_kdev.apply(self.s.win.k_window(), &plan);
+        self.s_vdev.apply(self.s.win.v_window(), &plan);
+
+        self.verify(ctx, &mapped);
+        self.pipe.note_execute(1_000_000);
+
+        // scatter one token per sequence with write-through, both
+        // replicas (identical values: counters advance in lockstep)
+        for &id in &batch {
+            let len = self.p.mgr.seq_len(id).unwrap();
+            for (st, counter) in [
+                (&mut self.p, &mut self.counter_p),
+                (&mut self.s, &mut self.counter_s),
+            ] {
+                let pages = st.mgr.table(id).unwrap().pages().to_vec();
+                let (page, off) =
+                    (pages[len / PAGE_SIZE], len % PAGE_SIZE);
+                for layer in 0..GEO.n_layers {
+                    *counter += 1.0;
+                    st.k.token_row_mut(layer, page, off).fill(*counter);
+                    st.v.token_row_mut(layer, page, off)
+                        .fill(-*counter);
+                    st.win.write_row(&mut st.k, &mut st.v, layer, page,
+                                     off);
+                }
+                st.mgr.note_assigned(id, 1).unwrap();
+            }
+        }
+    }
+
+    /// Execute-boundary equivalence: for every mapped page, the
+    /// pipeline's FRONT device pair and the serial device pair are
+    /// element-identical to their pools (and the replicas' pools are
+    /// identical by construction) — an epoch handoff that uploaded a
+    /// stale slot would surface here as a pool mismatch.
+    fn verify(&self, ctx: &str, mapped: &[(u64, Vec<u32>)]) {
+        let pe = GEO.page_elems();
+        self.p.assert_window_synced(
+            &mapped.iter().flat_map(|(_, p)| p.iter().copied())
+                .collect::<Vec<_>>(),
+            ctx, "pipeline");
+        let fk = self.pipe.front().k.contents()
+            .expect("pipeline front K resident after pre_execute");
+        let fv = self.pipe.front().v.contents()
+            .expect("pipeline front V resident after pre_execute");
+        let sk = self.s_kdev.contents()
+            .expect("serial K resident after apply");
+        let sv = self.s_vdev.contents()
+            .expect("serial V resident after apply");
+        for (id, pages) in mapped {
+            for &p in pages {
+                let ps = self.p.win.slot(p).unwrap() as usize;
+                let ss = self.s.win.slot(p).unwrap() as usize;
+                for layer in 0..GEO.n_layers {
+                    let src = GEO.offset(layer, p, 0);
+                    let kp = &self.p.k.as_slice()[src..src + pe];
+                    let vp = &self.p.v.as_slice()[src..src + pe];
+                    let poff = (layer * WINDOW_PAGES + ps) * pe;
+                    let soff = (layer * WINDOW_PAGES + ss) * pe;
+                    assert_eq!(&fk[poff..poff + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: pipeline FRONT device stale");
+                    assert_eq!(&fv[poff..poff + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: pipeline FRONT device stale");
+                    assert_eq!(&sk[soff..soff + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: serial device diverged");
+                    assert_eq!(&sv[soff..soff + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: serial device diverged");
+                }
+            }
+        }
+    }
+
+    fn step(&mut self, ctx: &str) {
+        match self.rng.below(10) {
+            0..=2 => self.reserve_op(),
+            3 => self.append_op(),
+            4 => self.fork_op(),
+            5 => self.free_op(false),
+            6 => self.free_op(true),
+            _ => self.decode_step_op(ctx),
+        }
+    }
+}
+
+#[test]
+fn pipeline_matches_serial_upload_random_interleavings() {
+    for seed in 0..10u64 {
+        let policy = if seed % 2 == 0 {
+            GrowthPolicy::Exact
+        } else {
+            GrowthPolicy::PowerOfTwo
+        };
+        let mut h = PipeHarness::new(9000 + seed, policy);
+        for step in 0..250 {
+            let ctx =
+                format!("pipe seed {seed} step {step} ({policy:?})");
+            h.step(&ctx);
+        }
+        while !h.live.is_empty() {
+            h.free_op(false);
+        }
+        assert_eq!(h.p.mgr.allocator().free_pages(), N_PAGES as usize,
+                   "seed {seed}: pipeline replica leaked pages");
+        assert_eq!(h.s.mgr.allocator().free_pages(), N_PAGES as usize,
+                   "seed {seed}: serial replica leaked pages");
+        let ps = h.pipe.stats();
+        assert!(ps.staged_uploads > 0,
+                "seed {seed}: pipeline never staged ({ps:?})");
+    }
+}
+
+#[test]
+fn epoch_handoff_never_uploads_a_stale_slot() {
+    // Deterministic slot-reuse scenario: a page is mapped, staged into
+    // the back pair, then freed; a NEW page steals its slot while the
+    // old snapshot is still the back pair's last upload. At the next
+    // execute boundary the front pair must show the new page's data —
+    // the epoch tags force the reassigned slot back into a plan even
+    // though the back pair already "has" that slot from the stale
+    // snapshot.
+    let mut h = PipeHarness::new(777, GrowthPolicy::Exact);
+    // sequence 1: one page worth of tokens
+    let prompt: Vec<u32> = (0..PAGE_SIZE as u32 - 1).collect();
+    h.p.mgr.reserve(1, &prompt).unwrap();
+    h.s.mgr.reserve(1, &prompt).unwrap();
+    h.live.push(1);
+    h.p.write_tokens(1, 0, prompt.len(), &mut h.counter_p);
+    h.s.write_tokens(1, 0, prompt.len(), &mut h.counter_s);
+    h.p.mgr.note_assigned(1, prompt.len()).unwrap();
+    h.s.mgr.note_assigned(1, prompt.len()).unwrap();
+    h.next_id = 2;
+    h.decode_step_op("warmup a");
+    h.decode_step_op("warmup b");
+
+    // free seq 1 (slot released), admit seq 2 over the same pages
+    h.free_op(false);
+    assert!(h.live.is_empty());
+    let prompt2: Vec<u32> = (100..100 + PAGE_SIZE as u32).collect();
+    h.p.mgr.reserve(2, &prompt2).unwrap();
+    h.s.mgr.reserve(2, &prompt2).unwrap();
+    h.live.push(2);
+    h.p.write_tokens(2, 0, prompt2.len(), &mut h.counter_p);
+    h.s.write_tokens(2, 0, prompt2.len(), &mut h.counter_s);
+    h.p.mgr.note_assigned(2, prompt2.len()).unwrap();
+    h.s.mgr.note_assigned(2, prompt2.len()).unwrap();
+
+    // the next decode steps verify (inside decode_step_op) that the
+    // front pair shows seq 2's rows, not seq 1's stale snapshot
+    h.decode_step_op("reuse a");
+    h.decode_step_op("reuse b");
+    h.decode_step_op("reuse c");
+}
+
 #[test]
 fn freelist_concurrent_with_manager_reads() {
     // The allocator must stay consistent when hammered from threads while

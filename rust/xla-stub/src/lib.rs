@@ -130,6 +130,22 @@ impl Literal {
     }
 }
 
+/// Modeled host→device interconnect: per-copy submission latency plus
+/// a bandwidth term (PCIe gen4 x8-ish effective figures — the paper's
+/// deployment bottleneck, arXiv 2506.07311 §I). Shared by
+/// [`SimDeviceBuffer`] and the pipeline-overlap accounting in
+/// `paged_flex::engine::pipeline`, so modeled step times compose from
+/// one cost model.
+pub const TRANSFER_NS_PER_COPY: u64 = 1_500;
+/// Modeled effective host→device bandwidth (bytes/second).
+pub const TRANSFER_BYTES_PER_SEC: u64 = 16_000_000_000;
+
+/// Modeled nanoseconds to move `bytes` in `copies` discrete DMA ops.
+pub fn modeled_transfer_ns(bytes: u64, copies: u64) -> u64 {
+    copies * TRANSFER_NS_PER_COPY
+        + bytes.saturating_mul(1_000_000_000) / TRANSFER_BYTES_PER_SEC
+}
+
 /// Modeled persistent device buffer with per-range host→device copies —
 /// what a PJRT backend with incremental buffer updates (or genuinely
 /// device-resident hardware) provides. `runtime::device_window` uses it
@@ -143,6 +159,7 @@ pub struct SimDeviceBuffer {
     data: Vec<f32>,
     range_copies: u64,
     full_copies: u64,
+    busy_ns: u64,
 }
 
 impl SimDeviceBuffer {
@@ -165,6 +182,7 @@ impl SimDeviceBuffer {
         self.data.clear();
         self.data.extend_from_slice(src);
         self.full_copies += 1;
+        self.busy_ns += modeled_transfer_ns(4 * src.len() as u64, 1);
     }
 
     /// Copy one contiguous host range into the resident buffer at
@@ -177,6 +195,8 @@ impl SimDeviceBuffer {
             Some(end) if end <= self.data.len() => {
                 self.data[offset..end].copy_from_slice(src);
                 self.range_copies += 1;
+                self.busy_ns +=
+                    modeled_transfer_ns(4 * src.len() as u64, 1);
                 Ok(())
             }
             _ => Err(Error(format!(
@@ -196,6 +216,12 @@ impl SimDeviceBuffer {
     /// (range copies, full copies) performed so far.
     pub fn copy_counts(&self) -> (u64, u64) {
         (self.range_copies, self.full_copies)
+    }
+
+    /// Modeled nanoseconds this buffer has spent receiving transfers
+    /// (per-copy latency + bandwidth; see [`modeled_transfer_ns`]).
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns
     }
 }
 
@@ -227,6 +253,20 @@ mod tests {
         b.write_range(1, &[9.0, 8.0]).unwrap();
         assert_eq!(b.as_slice(), &[1.0, 9.0, 8.0, 4.0]);
         assert_eq!(b.copy_counts(), (1, 1));
+    }
+
+    #[test]
+    fn transfer_model_is_monotone_and_counted() {
+        assert_eq!(modeled_transfer_ns(0, 1), TRANSFER_NS_PER_COPY);
+        assert!(modeled_transfer_ns(1 << 20, 1)
+                    > modeled_transfer_ns(1 << 10, 1));
+        let mut b = SimDeviceBuffer::new();
+        b.write_full(&[0.0; 64]);
+        let after_full = b.busy_ns();
+        assert_eq!(after_full, modeled_transfer_ns(256, 1));
+        b.write_range(0, &[1.0; 8]).unwrap();
+        assert_eq!(b.busy_ns(),
+                   after_full + modeled_transfer_ns(32, 1));
     }
 
     #[test]
