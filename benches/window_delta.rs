@@ -98,9 +98,10 @@ fn run_mode(seq_len: usize, steps: usize, delta: bool) -> StepCost {
         }
         // push what changed to the (modeled) device buffers; with
         // delta off the plan is Full every step — the seed cost
-        let plan = win.take_upload_plan();
-        k_dev.apply(win.k_window(), &plan);
-        v_dev.apply(win.v_window(), &plan);
+        let (plan, through) =
+            win.plan_for(k_dev.epoch().min(v_dev.epoch()), false);
+        k_dev.apply_at(win.k_window(), &plan, through);
+        v_dev.apply_at(win.v_window(), &plan, through);
         // the decode kernel produced one new KV row; scatter writes it
         // into the pool and through to the resident slot
         let pos = len;

@@ -236,9 +236,23 @@ pub struct EngineConfig {
     /// (`--pipeline off`) runs the serial gather → upload → execute
     /// path; `per_bucket` layouts collapse to serial regardless.
     pub pipeline: bool,
+    /// Gather-shard width (DESIGN.md §9): the per-step pool→window
+    /// page memcpys run sharded by layer × slot-range across this many
+    /// scoped worker threads. 1 is the serial eager gather, bit for
+    /// bit. Default min(4, cores).
+    pub copy_threads: usize,
     pub scheduler: SchedulerConfig,
     /// Default sampling params (overridable per request).
     pub sampling: SamplingConfig,
+}
+
+/// Default gather-shard width: min(4, cores). Past ~4 shards the
+/// per-step memcpys are memory-bandwidth-bound, not core-bound.
+pub fn default_copy_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(4)
 }
 
 impl Default for EngineConfig {
@@ -253,6 +267,7 @@ impl Default for EngineConfig {
             window_layout: WindowLayout::Fixed,
             window_upload: UploadMode::Delta,
             pipeline: true,
+            copy_threads: default_copy_threads(),
             scheduler: SchedulerConfig::default(),
             sampling: SamplingConfig::default(),
         }
@@ -274,6 +289,7 @@ impl EngineConfig {
              Value::str(window_layout_as_str(self.window_layout))),
             ("window_upload", Value::str(self.window_upload.as_str())),
             ("pipeline", Value::Bool(self.pipeline)),
+            ("copy_threads", Value::num(self.copy_threads as f64)),
             ("scheduler", Value::obj(vec![
                 ("max_batch_size", Value::num(s.max_batch_size as f64)),
                 ("max_running_seqs", Value::num(s.max_running_seqs as f64)),
@@ -344,6 +360,10 @@ impl EngineConfig {
             pipeline: v.opt("pipeline")
                 .map(|x| x.as_bool()).transpose()?
                 .unwrap_or(d.pipeline),
+            copy_threads: v.opt("copy_threads")
+                .map(|x| x.as_usize()).transpose()?
+                .unwrap_or(d.copy_threads)
+                .max(1),
             scheduler: sched,
             sampling: match v.opt("sampling") {
                 Some(s) => SamplingConfig::from_json(s)?,
@@ -417,6 +437,17 @@ mod tests {
         assert!(EngineConfig::default().pipeline);
         let v = parse(r#"{"pipeline": false}"#).unwrap();
         assert!(!EngineConfig::from_json(&v).unwrap().pipeline);
+    }
+
+    #[test]
+    fn copy_threads_defaults_capped_and_clamped() {
+        let d = EngineConfig::default().copy_threads;
+        assert!((1..=4).contains(&d), "min(4, cores), got {d}");
+        let v = parse(r#"{"copy_threads": 7}"#).unwrap();
+        assert_eq!(EngineConfig::from_json(&v).unwrap().copy_threads, 7);
+        // 0 would mean "no gather at all" — clamp to serial
+        let v = parse(r#"{"copy_threads": 0}"#).unwrap();
+        assert_eq!(EngineConfig::from_json(&v).unwrap().copy_threads, 1);
     }
 
     #[test]

@@ -59,6 +59,7 @@ impl Engine {
                 pe.set_window_layout(cfg.window_layout);
                 pe.set_upload_mode(cfg.window_upload);
                 pe.set_pipeline(cfg.pipeline);
+                pe.set_copy_threads(cfg.copy_threads);
                 paged = Some(pe);
             }
             AttentionMode::Contiguous => {

@@ -167,6 +167,14 @@ impl PagedEngine {
         self.window.set_delta(enabled);
     }
 
+    /// Gather-shard width (`EngineConfig::copy_threads` /
+    /// `--copy-threads`): 1 runs the serial eager gather bit for bit;
+    /// > 1 defers the per-step page memcpys and flushes them sharded
+    /// by layer × slot-range on a scoped thread pool (DESIGN.md §9).
+    pub fn set_copy_threads(&mut self, n: usize) {
+        self.window.set_copy_threads(n);
+    }
+
     /// Window sizing policy (`EngineConfig::window_layout`). Takes
     /// effect on the next step; a change relayouts the window there.
     /// `per_bucket` relayouts on bucket churn, so it also collapses
@@ -556,6 +564,10 @@ impl PagedEngine {
                     self.scr.tables[i * maxb + j] = slot as i32;
                 }
             }
+            // deferred mode (`--copy-threads` > 1): the loop above only
+            // queued the page copies; run them now, sharded across the
+            // scoped gather pool. Serial mode: no-op.
+            self.window.flush_pending(&self.k_pool, &self.v_pool);
         }
         // stage boundary 2: sync the front device pair for THIS step
         // (only what the gather just changed) and stage the next

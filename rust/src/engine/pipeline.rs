@@ -1,87 +1,67 @@
-//! Double-buffered transfer/compute decode pipeline — DESIGN.md §8.
+//! Double-buffered transfer/compute decode pipeline — DESIGN.md §8–9.
 //!
-//! PR 1–2 made both halves of the KV transfer O(changed); this module
-//! takes the transfer off the decode critical path. The serial step
-//! runs gather → upload → execute in sequence, so the host→device push
-//! (the deployment bottleneck of arXiv 2506.07311) stalls every step —
-//! exactly the serialization production servers hide by overlapping
-//! transfer with compute (Kwon et al., arXiv 2309.06180).
+//! PR 1–2 made both halves of the KV transfer O(changed); PR 3 took it
+//! off the decode critical path with a double-buffered state machine
+//! whose overlap was *modeled*. This revision makes the overlap real:
+//! staged uploads run on a dedicated transfer worker
+//! (`runtime::copy_stream::CopyStream`), and the stage boundaries are
+//! **fence waits** instead of inline `DeviceWindow` calls — the same
+//! structure vLLM-class servers get from a dedicated copy stream
+//! (Kwon et al., arXiv 2309.06180).
 //!
 //! [`TransferPipeline`] keeps **two** persistent device backings per
 //! pool ([`DevicePair`] front/back) and drives them with the
 //! epoch-tagged plans of `kvpage::window` (DESIGN.md §8):
 //!
 //! * while step N executes against the *front* pair, step N+1's upload
-//!   is staged into the *back* pair from an epoch-tagged
-//!   [`StagedUpload`] whose bytes were captured at snapshot time — the
-//!   in-flight transfer can never observe the scatter running
-//!   meanwhile;
-//! * at the next stage boundary the rows the scatter wrote after the
-//!   snapshot are pushed row-granularly
-//!   ([`ResidentWindow::take_row_tail`]) and the pairs rotate;
+//!   is in flight on the copy stream into the *back* pair, applied
+//!   from an epoch-tagged [`StagedUpload`] whose bytes were captured
+//!   at snapshot time — the transfer can never observe the scatter
+//!   running meanwhile, and the worker owns the pair while it writes;
+//! * at the next stage boundary the engine *waits the fence* (~0 in
+//!   steady state: the transfer finished under the execute), pushes
+//!   the rows the scatter wrote after the snapshot
+//!   ([`ResidentWindow::take_row_tail`]), and rotates the pairs;
 //! * a small slot-granular sync (`plan_for` against the new front's
 //!   epoch) before execute covers whatever the gather just changed.
 //!
 //! Anything the fast path cannot promise collapses to the serial path
 //! for that step and recovers after: residency loss or a window
 //! relayout forces a captured full refill of the back pair, a lost
-//! device buffer full-syncs when its pair reaches the front,
-//! `--pipeline off` or a `per_bucket` window layout disables staging
-//! outright, and a backing without range support (the real
-//! xla_extension 0.5.1 path, where the transfer actually happens at
-//! execute time) never stages at all.
+//! device buffer full-syncs when its pair reaches the front, a
+//! **poisoned copy-stream worker** (panic mid-transfer) is detected at
+//! the next fence or submit and demotes staging to the inline
+//! engine-thread path — exactly like buffer loss, the engine keeps
+//! serving — and `--pipeline off` or a `per_bucket` window layout
+//! disables staging outright. A backing without range support (the
+//! real xla_extension 0.5.1 path, where the transfer actually happens
+//! at execute time) never stages at all.
 //!
-//! Overlap is *modeled* offline: staged bytes cost
-//! `xla::modeled_transfer_ns`, and [`TransferPipeline::note_execute`]
-//! accounts how much of that hides under the measured execute
-//! (`Phase::PipelineOverlap`, the overlap-fraction serving line, and
-//! `benches/pipeline_overlap.rs`).
+//! Accounting is two parallel columns: the **modeled** ns of PR 3
+//! (`xla::modeled_transfer_ns`, [`TransferPipeline::note_execute`],
+//! `Phase::PipelineOverlap`) so offline benches keep their
+//! deterministic gates, and **measured** wall ns — worker time per
+//! staged upload vs engine time blocked on its fence
+//! (`Phase::FenceWait`) — which `benches/copy_stream_overlap.rs`
+//! asserts against real sleeping transfers.
+
+use std::time::Instant;
 
 use crate::kvpage::{ResidentWindow, StagedUpload, UploadPlan};
-use crate::runtime::{DeviceWindow, UploadStats};
+use crate::runtime::{CopyJob, CopyStream, Fence, UploadStats};
 use crate::util::profile::{self, Phase};
 
-/// K and V device windows moving in lockstep (one plan drives both).
-pub struct DevicePair {
-    pub k: DeviceWindow,
-    pub v: DeviceWindow,
-}
+pub use crate::runtime::DevicePair;
 
-impl DevicePair {
-    fn sim() -> Self {
-        DevicePair { k: DeviceWindow::sim(), v: DeviceWindow::sim() }
-    }
-
-    fn pjrt() -> Self {
-        DevicePair { k: DeviceWindow::pjrt(), v: DeviceWindow::pjrt() }
-    }
-
-    /// Epoch the pair is current through (a lost half drags it to 0).
-    pub fn epoch(&self) -> u64 {
-        self.k.epoch().min(self.v.epoch())
-    }
-
-    pub fn supports_ranges(&self) -> bool {
-        self.k.supports_ranges() && self.v.supports_ranges()
-    }
-
-    pub fn invalidate(&mut self) {
-        self.k.invalidate();
-        self.v.invalidate();
-    }
-
-    fn can_delta(&self, host_len: usize) -> bool {
-        self.k.can_delta(host_len) && self.v.can_delta(host_len)
-    }
-}
-
-/// Cumulative pipeline counters (modeled ns; wall time is measured
-/// only for execute, by the engine).
+/// Cumulative pipeline counters. `staged_ns` / `overlap_ns` are the
+/// modeled column (offline benches); `measured_wall_ns` /
+/// `measured_wait_ns` are wall-clock from the copy stream (worker time
+/// per staged upload vs engine time blocked on its fence).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PipelineStats {
     /// `begin_step` calls.
     pub steps: u64,
-    /// Staged (overlappable) uploads into the back pair.
+    /// Staged (overlappable) uploads submitted for the back pair.
     pub staged_uploads: u64,
     /// Bytes those uploads moved (K and V together).
     pub staged_bytes: u64,
@@ -93,11 +73,19 @@ pub struct PipelineStats {
     pub sync_ns: u64,
     /// Modeled staged ns actually hidden under measured execute.
     pub overlap_ns: u64,
+    /// Wall ns the transfer worker spent applying staged uploads.
+    pub measured_wall_ns: u64,
+    /// Wall ns the engine thread spent blocked on copy fences.
+    pub measured_wait_ns: u64,
     /// Steps whose staging fell back to a captured full refill
     /// (residency drop / relayout reached the back pair).
     pub collapses: u64,
     /// Staged uploads dropped by `drain` (preemption, pool-dry).
     pub drains: u64,
+    /// Copy-stream workers lost to a panic (each demotes staging to
+    /// the inline path; the device pair in flight is lost like a
+    /// dropped buffer).
+    pub poisons: u64,
     /// Most recent step's staged / tail / sync modeled ns.
     pub last_staged_ns: u64,
     pub last_tail_ns: u64,
@@ -105,12 +93,26 @@ pub struct PipelineStats {
 }
 
 impl PipelineStats {
-    /// Fraction of staged transfer hidden under execute ([0, 1]).
+    /// Fraction of modeled staged transfer hidden under execute
+    /// ([0, 1]).
     pub fn overlap_fraction(&self) -> f64 {
         if self.staged_ns == 0 {
             0.0
         } else {
             self.overlap_ns as f64 / self.staged_ns as f64
+        }
+    }
+
+    /// Fraction of *measured* transfer wall time the engine did NOT
+    /// block on ([0, 1]; 0 when nothing ran on the copy stream).
+    pub fn measured_overlap_fraction(&self) -> f64 {
+        if self.measured_wall_ns == 0 {
+            0.0
+        } else {
+            let hidden = self
+                .measured_wall_ns
+                .saturating_sub(self.measured_wait_ns);
+            hidden as f64 / self.measured_wall_ns as f64
         }
     }
 }
@@ -130,63 +132,147 @@ fn plan_cost(plan: &UploadPlan, host_len: usize) -> u64 {
     }
 }
 
+fn upload_total_of(pair: &DevicePair) -> UploadStats {
+    pair.k.stats().plus(pair.v.stats())
+}
+
+fn upload_delta(now: &UploadStats, then: &UploadStats) -> UploadStats {
+    // saturating: totals are monotone by construction (retired pairs
+    // fold into upload_stats), but a reporting hiccup must never panic
+    // the serving loop
+    UploadStats {
+        full_uploads: now.full_uploads.saturating_sub(then.full_uploads),
+        delta_uploads: now
+            .delta_uploads
+            .saturating_sub(then.delta_uploads),
+        ranges_pushed: now
+            .ranges_pushed
+            .saturating_sub(then.ranges_pushed),
+        bytes_uploaded: now
+            .bytes_uploaded
+            .saturating_sub(then.bytes_uploaded),
+        last_bytes: now.last_bytes,
+    }
+}
+
+/// Snapshot buffers on their way back to the window arena.
+type RecycledCapture = (Vec<f32>, Vec<f32>, Vec<(usize, usize)>);
+
+/// Which backing fresh pairs are built from (poison recovery spawns a
+/// replacement for the pair that died with the worker).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum BackingKind {
+    Sim,
+    Pjrt,
+}
+
+impl BackingKind {
+    fn pair(self) -> DevicePair {
+        match self {
+            BackingKind::Sim => DevicePair::sim(),
+            BackingKind::Pjrt => DevicePair::pjrt(),
+        }
+    }
+}
+
 /// Double-buffered device-side window transfer state machine. The
 /// engine drives one per pool pair through three stage boundaries per
-/// step: [`TransferPipeline::begin_step`] (tail push + rotate, before
-/// the gather), [`TransferPipeline::pre_execute`] (front sync + stage
-/// the back pair, after the gather), and
-/// [`TransferPipeline::note_execute`] (overlap accounting, after the
-/// executable returns). With the pipeline disabled the same calls
-/// reproduce the serial PR 2 path against a single pair.
+/// step: [`TransferPipeline::begin_step`] (fence wait + tail push +
+/// rotate, before the gather), [`TransferPipeline::pre_execute`]
+/// (front sync + submit the next staged upload to the copy stream,
+/// after the gather), and [`TransferPipeline::note_execute`] (overlap
+/// accounting, after the executable returns). With the pipeline
+/// disabled the same calls reproduce the serial PR 2 path against a
+/// single pair.
 pub struct TransferPipeline {
-    bufs: [DevicePair; 2],
-    front: usize,
+    /// Pair the next execute reads. Never in flight.
+    front: DevicePair,
+    /// Pair being staged; `None` while it is with the copy worker.
+    back: Option<DevicePair>,
+    /// Outstanding copy-stream ticket for the back pair, plus the
+    /// pair's upload totals at submit (so `upload_stats` stays
+    /// readable — the in-flight delta lands when the fence settles).
+    in_flight: Option<(Fence, UploadStats)>,
+    /// Transfer worker; `None` after a poison (inline staging) or on
+    /// the accounting-only PJRT backing (never stages).
+    stream: Option<CopyStream>,
+    kind: BackingKind,
     enabled: bool,
     /// `window_upload = full`: every plan and snapshot is whole-window.
     upload_full: bool,
-    /// The back pair holds a completed staged upload for the next step.
+    /// The back pair holds (or is receiving) a staged upload for the
+    /// next step.
     staged: bool,
     /// The current front pair was rotated in with a completed staged
     /// upload this step — in `window_upload = full` mode its pre-
     /// execute sync only needs the residual (the staged phase already
     /// pushed the whole window, off the critical path).
     front_fresh: bool,
+    /// Capture buffers returned by settled fences, donated to the
+    /// window arena at the next `begin_step`.
+    recycle: Vec<RecycledCapture>,
+    /// Upload totals of pairs that died with a poisoned worker — kept
+    /// so `upload_stats` stays monotone when a fresh pair (zeroed
+    /// counters) replaces a lost one.
+    upload_retired: UploadStats,
     stats: PipelineStats,
     reported: PipelineStats,
+    upload_reported: UploadStats,
 }
 
 impl TransferPipeline {
-    /// Modeled-buffer backing (benches, proptests, offline runs).
+    /// Modeled-buffer backing (benches, proptests, offline runs) with
+    /// a live copy-stream worker: staging really runs off-thread. A
+    /// pipeline constructed disabled spawns no worker; `set_enabled`
+    /// starts one on demand.
     pub fn sim(enabled: bool) -> Self {
-        Self::with_pairs([DevicePair::sim(), DevicePair::sim()], enabled)
+        Self::new(BackingKind::Sim, enabled,
+                  enabled.then(CopyStream::spawn))
     }
 
     /// Accounting-only backing for the real PJRT 0.5.1 path: without
     /// in-place buffer updates there is no second buffer to fill, so
-    /// the pipeline never stages and every step runs serially.
+    /// the pipeline never stages, every step runs serially, and no
+    /// worker thread is spawned.
     pub fn pjrt(enabled: bool) -> Self {
-        Self::with_pairs([DevicePair::pjrt(), DevicePair::pjrt()],
-                         enabled)
+        Self::new(BackingKind::Pjrt, enabled, None)
     }
 
-    fn with_pairs(bufs: [DevicePair; 2], enabled: bool) -> Self {
+    fn new(kind: BackingKind, enabled: bool,
+           stream: Option<CopyStream>) -> Self {
         TransferPipeline {
-            bufs,
-            front: 0,
+            front: kind.pair(),
+            back: Some(kind.pair()),
+            in_flight: None,
+            stream,
+            kind,
             enabled,
             upload_full: false,
             staged: false,
             front_fresh: false,
+            recycle: Vec::new(),
+            upload_retired: UploadStats::default(),
             stats: PipelineStats::default(),
             reported: PipelineStats::default(),
+            upload_reported: UploadStats::default(),
         }
     }
 
     /// `--pipeline off` / `per_bucket` layout: collapse to the serial
-    /// single-pair path (turning off drops any staged upload).
+    /// single-pair path (turning off drops any staged upload; the idle
+    /// worker is left alive for a later re-enable). Turning on starts
+    /// the worker a disabled construction skipped — unless it was
+    /// poisoned, which permanently demotes this pipeline to inline
+    /// staging.
     pub fn set_enabled(&mut self, on: bool) {
         if !on {
+            self.settle();
             self.staged = false;
+        } else if self.stream.is_none()
+            && self.kind == BackingKind::Sim
+            && self.stats.poisons == 0
+        {
+            self.stream = Some(CopyStream::spawn());
         }
         self.enabled = on;
     }
@@ -201,35 +287,51 @@ impl TransferPipeline {
     }
 
     /// Pair the next execute reads (tests/benches verify device-side
-    /// contents against it).
+    /// contents against it). Never in flight on the copy stream.
     pub fn front(&self) -> &DevicePair {
-        &self.bufs[self.front]
+        &self.front
     }
 
-    /// Pair being staged for the following step.
-    pub fn back(&self) -> &DevicePair {
-        &self.bufs[1 - self.front]
+    /// Pair being staged for the following step, when it is not
+    /// currently with the copy worker.
+    pub fn back(&self) -> Option<&DevicePair> {
+        self.back.as_ref()
     }
 
     /// Loss-injection hooks (proptests model device resets).
     pub fn front_mut(&mut self) -> &mut DevicePair {
-        &mut self.bufs[self.front]
+        &mut self.front
     }
 
+    /// Back pair for loss injection; settles any in-flight transfer
+    /// first (you cannot lose a buffer the worker owns — the race the
+    /// ownership hand-off exists to prevent).
     pub fn back_mut(&mut self) -> &mut DevicePair {
-        &mut self.bufs[1 - self.front]
+        self.settle();
+        self.back.as_mut().expect("back pair present after settle")
     }
 
-    /// A staged upload is waiting to rotate in.
+    /// A staged upload is waiting (or in flight) to rotate in.
     pub fn has_staged(&self) -> bool {
         self.staged
+    }
+
+    /// Test hook: crash the transfer worker. The next fence/submit
+    /// detects the poison and demotes staging to the inline path.
+    pub fn poison_stream_for_test(&self) {
+        if let Some(s) = &self.stream {
+            s.inject_poison();
+        }
     }
 
     /// Drop both device backings (failed execute, device reset): the
     /// next step full-syncs whatever pair is in front.
     pub fn invalidate(&mut self) {
-        self.bufs[0].invalidate();
-        self.bufs[1].invalidate();
+        self.settle();
+        self.front.invalidate();
+        if let Some(b) = self.back.as_mut() {
+            b.invalidate();
+        }
         self.staged = false;
     }
 
@@ -237,35 +339,88 @@ impl TransferPipeline {
     /// (preemption storm, pool-dry admission): the next step's
     /// pre-execute sync rebuilds the front pair from the live window,
     /// so no admitted request ever executes against a half-drained
-    /// device state.
+    /// device state. Waits out any in-flight transfer first — a fence
+    /// cannot be cancelled, only collected.
     pub fn drain(&mut self) {
+        self.settle();
         if self.staged {
             self.stats.drains += 1;
         }
         self.staged = false;
     }
 
-    /// Stage boundary 1 — before the gather: finish the in-flight
-    /// upload by pushing the rows the scatter wrote after its snapshot
-    /// (row-granular when possible), then rotate the staged pair to
-    /// the front. No-op when serial or nothing is staged.
+    /// Collect the outstanding copy-stream ticket, if any: recover the
+    /// device pair, bank the measured wall/wait ns, and stash the
+    /// capture buffers for the window arena. On poison the pair died
+    /// with the worker — a fresh (invalid) pair takes its place and
+    /// staging demotes to the inline path, exactly the buffer-loss
+    /// collapse.
+    fn settle(&mut self) {
+        let Some((fence, base)) = self.in_flight.take() else { return };
+        let t = Instant::now();
+        match fence.wait() {
+            Ok(done) => {
+                let waited = t.elapsed().as_nanos() as u64;
+                profile::record_ns(Phase::FenceWait, waited);
+                self.stats.measured_wall_ns += done.wall_ns;
+                self.stats.measured_wait_ns +=
+                    waited.min(done.wall_ns);
+                if !done.ok {
+                    // captured ranges refused (buffer lost between
+                    // capture and apply): the pair is stale; the next
+                    // snapshot full-refills it, or the front sync
+                    // full-uploads it after rotation
+                    self.staged = false;
+                    self.stats.collapses += 1;
+                }
+                self.recycle
+                    .push((done.k_data, done.v_data, done.ranges));
+                self.back = Some(done.pair);
+            }
+            Err(_) => {
+                self.stats.poisons += 1;
+                self.staged = false;
+                self.stream = None; // inline staging from here on
+                // the pair died with the worker: retire its totals so
+                // upload_stats stays monotone past the zeroed
+                // replacement
+                self.upload_retired = self.upload_retired.plus(&base);
+                self.back = Some(self.kind.pair()); // fresh, invalid
+            }
+        }
+    }
+
+    /// Stage boundary 1 — before the gather: wait the in-flight
+    /// upload's fence (~0 in steady state), finish it by pushing the
+    /// rows the scatter wrote after its snapshot (row-granular when
+    /// possible), then rotate the staged pair to the front. No-op when
+    /// serial or nothing is staged.
     pub fn begin_step(&mut self, win: &mut ResidentWindow) {
         self.stats.steps += 1;
         self.stats.last_staged_ns = 0;
         self.stats.last_tail_ns = 0;
         self.stats.last_sync_ns = 0;
         self.front_fresh = false;
+        for (k, v, r) in self.recycle.drain(..) {
+            win.donate_capture(k, v, r);
+        }
         if !self.enabled || !self.staged {
             return;
         }
-        let back = 1 - self.front;
+        self.settle();
+        if !self.staged {
+            // the in-flight upload failed or the worker died: nothing
+            // rotated; the pre-execute sync keeps the front current
+            return;
+        }
+        let back =
+            self.back.as_mut().expect("back pair present after settle");
         if let Some((ranges, through)) = win.take_row_tail() {
-            let pair = &mut self.bufs[back];
-            let k_ok = pair
+            let k_ok = back
                 .k
                 .upload_ranges_at(win.k_window(), &ranges, through)
                 .is_ok();
-            let v_ok = pair
+            let v_ok = back
                 .v
                 .upload_ranges_at(win.v_window(), &ranges, through)
                 .is_ok();
@@ -279,19 +434,24 @@ impl TransferPipeline {
             // a failed half (buffer lost mid-flight) keeps its old
             // epoch; the pre-execute sync below full-uploads it — the
             // serial-collapse guarantee
+            win.donate_ranges(ranges);
         }
         // take_row_tail == None (non-row writes since the snapshot):
         // the pending writes stay pending and the pre-execute sync
         // pushes them slot-granularly.
-        self.front = back;
+        std::mem::swap(
+            &mut self.front,
+            self.back.as_mut().expect("back pair present"),
+        );
         self.staged = false;
         self.front_fresh = true;
     }
 
     /// Stage boundary 2 — after the gather, before execute: bring the
     /// front pair current for THIS step (sync residual on the critical
-    /// path), then stage the next step's upload into the back pair
-    /// (modeled as overlapping the coming execute). Serial mode stops
+    /// path — by definition it cannot overlap anything), then submit
+    /// the next step's upload to the copy stream, which applies it to
+    /// the back pair while the coming execute runs. Serial mode stops
     /// after the sync — that IS the PR 2 upload step.
     pub fn pre_execute(&mut self, win: &mut ResidentWindow) {
         let host_len = win.k_window().len();
@@ -301,29 +461,27 @@ impl TransferPipeline {
         // forces a whole-window push, as does a backing without range
         // support (plan_for still orders Full on any epoch staleness).
         let force_full = (self.upload_full && !self.front_fresh)
-            || !self.bufs[self.front].supports_ranges();
-        let front_epoch = self.bufs[self.front].epoch();
+            || !self.front.supports_ranges();
+        let front_epoch = self.front.epoch();
         let (plan, through) = win.plan_for(front_epoch, force_full);
-        {
-            let pair = &mut self.bufs[self.front];
-            pair.k.apply_at(win.k_window(), &plan, through);
-            pair.v.apply_at(win.v_window(), &plan, through);
-        }
+        self.front.k.apply_at(win.k_window(), &plan, through);
+        self.front.v.apply_at(win.v_window(), &plan, through);
         let ns = 2 * plan_cost(&plan, host_len);
         self.stats.sync_ns += ns;
         self.stats.last_sync_ns = ns;
+        if let UploadPlan::Ranges(r) = plan {
+            win.donate_ranges(r);
+        }
 
-        if !self.enabled
-            || !self.bufs[1 - self.front].supports_ranges()
-        {
+        let back = self.back.as_ref().expect("back settled by now");
+        if !self.enabled || !back.supports_ranges() {
             // serial mode, or an accounting-only backing where the
             // real transfer happens at execute time: nothing to stage
             return;
         }
-        let back = 1 - self.front;
-        let back_stale = !self.bufs[back].can_delta(host_len);
+        let back_stale = !back.can_delta(host_len);
         let snap = win.snapshot_for(
-            self.bufs[back].epoch(),
+            back.epoch(),
             self.upload_full || back_stale,
         );
         if snap.full && !self.upload_full && !back_stale {
@@ -331,15 +489,66 @@ impl TransferPipeline {
             // relayout since the back pair last uploaded)
             self.stats.collapses += 1;
         }
-        self.apply_staged(back, &snap, host_len);
+
+        if let Some(stream) = self.stream.take() {
+            let pair = self.back.take().expect("back settled by now");
+            let base = upload_total_of(&pair);
+            // counted at submit: a captured-range refusal is
+            // unreachable on this path (back_mut settles before any
+            // loss injection, so the pair cannot go stale in flight)
+            self.note_staged(&snap);
+            match stream.submit(CopyJob { pair, snap, host_len }) {
+                Ok(fence) => {
+                    self.in_flight = Some((fence, base));
+                    self.staged = true;
+                    self.stream = Some(stream);
+                }
+                Err(job) => {
+                    // worker died between steps: take the pair back,
+                    // drop the dead stream (join), un-count the
+                    // submit, stage inline from now on
+                    self.stats.poisons += 1;
+                    let job = *job;
+                    self.unnote_staged(&job.snap);
+                    self.back = Some(job.pair);
+                    self.apply_staged_inline(win, job.snap, host_len);
+                }
+            }
+            return;
+        }
+        self.apply_staged_inline(win, snap, host_len);
     }
 
-    fn apply_staged(&mut self, back: usize, snap: &StagedUpload,
-                    host_len: usize) {
-        let pair = &mut self.bufs[back];
-        if snap.full {
+    /// Staged-transfer accounting for one snapshot (modeled column).
+    fn note_staged(&mut self, snap: &StagedUpload) {
+        let elems = 2 * snap.elems();
+        let ns = modeled_ns(elems, snap.copies());
+        self.stats.staged_uploads += 1;
+        self.stats.staged_bytes += 4 * elems as u64;
+        self.stats.staged_ns += ns;
+        self.stats.last_staged_ns = ns;
+    }
+
+    fn unnote_staged(&mut self, snap: &StagedUpload) {
+        let elems = 2 * snap.elems();
+        let ns = modeled_ns(elems, snap.copies());
+        self.stats.staged_uploads -= 1;
+        self.stats.staged_bytes -= 4 * elems as u64;
+        self.stats.staged_ns -= ns;
+        self.stats.last_staged_ns = 0;
+    }
+
+    /// Engine-thread staging (no copy stream: PJRT backing or a
+    /// poisoned worker). Same captured-data entry points as the
+    /// worker, so device state is identical either way; counts the
+    /// staging only on success, like the PR 3 inline path.
+    fn apply_staged_inline(&mut self, win: &mut ResidentWindow,
+                           snap: StagedUpload, host_len: usize) {
+        let pair = self.back.as_mut().expect("back pair present");
+        let ok = if snap.full {
             pair.k.upload_full_captured(&snap.k_data, snap.through);
             pair.v.upload_full_captured(&snap.v_data, snap.through);
+            true
         } else {
             let k_ok = pair
                 .k
@@ -351,28 +560,27 @@ impl TransferPipeline {
                 .upload_captured(host_len, &snap.ranges, &snap.v_data,
                                  snap.through)
                 .is_ok();
-            if !k_ok || !v_ok {
-                // defensive: captured ranges no longer apply (buffer
-                // lost between capture and apply). Stage nothing and
-                // credit nothing — the pair is stale, so the next
-                // pre-execute snapshots it a full refill, and if it
-                // reaches the front first the sync full-uploads it.
-                self.staged = false;
-                self.stats.collapses += 1;
-                return;
-            }
+            k_ok && v_ok
+        };
+        if ok {
+            self.note_staged(&snap);
+            self.staged = true;
+        } else {
+            // defensive: captured ranges no longer apply (buffer lost
+            // between capture and apply). Stage nothing and credit
+            // nothing — the pair is stale, so the next pre-execute
+            // snapshots it a full refill, and if it reaches the front
+            // first the sync full-uploads it.
+            self.staged = false;
+            self.stats.collapses += 1;
         }
-        let elems = 2 * snap.elems();
-        let ns = modeled_ns(elems, snap.copies());
-        self.stats.staged_uploads += 1;
-        self.stats.staged_bytes += 4 * elems as u64;
-        self.stats.staged_ns += ns;
-        self.stats.last_staged_ns = ns;
-        self.staged = true;
+        win.donate_capture(snap.k_data, snap.v_data, snap.ranges);
     }
 
     /// Stage boundary 3 — the executable returned after `execute_ns`
-    /// wall ns: account how much of the staged transfer hid under it.
+    /// wall ns: account how much of the modeled staged transfer hid
+    /// under it. (The measured column needs no help here: the worker
+    /// really was running while the engine executed.)
     pub fn note_execute(&mut self, execute_ns: u64) {
         if !self.enabled || !self.staged {
             return;
@@ -399,8 +607,11 @@ impl TransferPipeline {
             tail_ns: s.tail_ns - r.tail_ns,
             sync_ns: s.sync_ns - r.sync_ns,
             overlap_ns: s.overlap_ns - r.overlap_ns,
+            measured_wall_ns: s.measured_wall_ns - r.measured_wall_ns,
+            measured_wait_ns: s.measured_wait_ns - r.measured_wait_ns,
             collapses: s.collapses - r.collapses,
             drains: s.drains - r.drains,
+            poisons: s.poisons - r.poisons,
             last_staged_ns: s.last_staged_ns,
             last_tail_ns: s.last_tail_ns,
             last_sync_ns: s.last_sync_ns,
@@ -409,24 +620,26 @@ impl TransferPipeline {
         d
     }
 
-    /// Host→device upload counters summed over all four buffers.
+    /// Host→device upload counters summed over all four buffers. While
+    /// an upload is in flight its pair reports the totals it had at
+    /// submit; the delta lands when the fence settles (one boundary
+    /// later) — totals stay monotone either way.
     pub fn upload_stats(&self) -> UploadStats {
-        self.bufs[0]
-            .k
-            .stats()
-            .plus(self.bufs[0].v.stats())
-            .plus(self.bufs[1].k.stats())
-            .plus(self.bufs[1].v.stats())
+        let f = upload_total_of(&self.front);
+        let b = match (&self.back, &self.in_flight) {
+            (Some(pair), _) => upload_total_of(pair),
+            (None, Some((_, base))) => *base,
+            (None, None) => UploadStats::default(),
+        };
+        f.plus(&b).plus(&self.upload_retired)
     }
 
     /// Upload counters accumulated since the last call.
     pub fn take_upload_unreported(&mut self) -> UploadStats {
-        self.bufs[0]
-            .k
-            .take_unreported()
-            .plus(&self.bufs[0].v.take_unreported())
-            .plus(&self.bufs[1].k.take_unreported())
-            .plus(&self.bufs[1].v.take_unreported())
+        let now = self.upload_stats();
+        let d = upload_delta(&now, &self.upload_reported);
+        self.upload_reported = now;
+        d
     }
 }
 
@@ -468,6 +681,7 @@ mod tests {
             for &p in pages {
                 self.win.map_page(&mut self.k, &mut self.v, p).unwrap();
             }
+            self.win.flush_pending(&self.k, &self.v);
             self.pipe.pre_execute(&mut self.win);
             if !ctx.is_empty() {
                 // what a device-resident execute would read right now
@@ -520,6 +734,9 @@ mod tests {
         assert!(s.tail_ns > 0, "row tails rode the rotation: {s:?}");
         assert!(s.overlap_ns > 0, "staged ns hid under execute: {s:?}");
         assert!(s.overlap_fraction() > 0.0);
+        assert!(s.measured_wall_ns > 0,
+                "staged uploads really ran on the worker: {s:?}");
+        assert_eq!(s.poisons, 0);
     }
 
     #[test]
@@ -531,6 +748,7 @@ mod tests {
         let s = r.pipe.stats();
         assert_eq!(s.staged_uploads, 0);
         assert_eq!(s.overlap_ns, 0);
+        assert_eq!(s.measured_wall_ns, 0, "nothing ran on the worker");
         assert!(s.sync_ns > 0, "serial path is all sync");
     }
 
@@ -588,6 +806,29 @@ mod tests {
     }
 
     #[test]
+    fn poisoned_worker_collapses_and_keeps_serving() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "pre-poison");
+        r.pipe.poison_stream_for_test();
+        // the poison surfaces at a following fence/submit; every step
+        // must keep executing against fully synced front contents
+        for i in 0..10 {
+            r.step(&[0, 1], 8, &format!("poison step {i}"));
+            if r.pipe.stats().poisons > 0 {
+                break;
+            }
+        }
+        assert!(r.pipe.stats().poisons >= 1,
+                "worker death must be detected: {:?}", r.pipe.stats());
+        // inline staging keeps the double-buffer running
+        let staged_before = r.pipe.stats().staged_uploads;
+        r.step(&[0, 1], 8, "post-poison a");
+        r.step(&[0, 1], 8, "post-poison b");
+        assert!(r.pipe.stats().staged_uploads > staged_before,
+                "staging continues inline after poison");
+    }
+
+    #[test]
     fn stats_delta_reporting() {
         let mut r = Rig::new(true);
         r.step(&[0], 8, "");
@@ -596,5 +837,20 @@ mod tests {
         let d2 = r.pipe.take_unreported();
         assert_eq!(d2.steps, 0, "delta since last take");
         assert!(r.pipe.upload_stats().bytes_uploaded > 0);
+    }
+
+    #[test]
+    fn upload_totals_stay_monotone_across_in_flight_settles() {
+        let mut r = Rig::new(true);
+        let mut last = 0u64;
+        for i in 0..6 {
+            r.step(&[0, 1], 8, "");
+            let now = r.pipe.upload_stats().bytes_uploaded;
+            assert!(now >= last,
+                    "step {i}: totals went backwards ({now} < {last})");
+            last = now;
+        }
+        r.pipe.drain(); // settle whatever is in flight
+        assert!(r.pipe.upload_stats().bytes_uploaded >= last);
     }
 }

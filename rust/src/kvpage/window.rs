@@ -6,7 +6,7 @@
 //! [`HostPool`] on every step, so the steady-state decode gather memcpy
 //! moved O(live context) bytes per token. This module makes the window
 //! *resident* so that memcpy scales with what changed, and plans the
-//! matching host→device pushes (`take_upload_plan` →
+//! matching host→device pushes (`plan_for` / `snapshot_for` →
 //! `runtime::DeviceWindow`, DESIGN.md §6):
 //!
 //! * [`ResidentWindow`] gives each physical page a **stable slot** for as
@@ -31,26 +31,36 @@
 //!   constant across batch buckets (largest paged bucket ×
 //!   max_blocks_per_seq), so bucket churn in mixed prefill/decode
 //!   serving no longer drops residency at all (DESIGN.md §6).
-//! * [`ResidentWindow::take_upload_plan`] closes the device half of the
-//!   protocol: the window remembers which slots changed since the last
-//!   upload and hands back coalesced element ranges (or a full-upload
-//!   order) for `runtime::DeviceWindow` to push, making the host→device
-//!   transfer O(changed) as well.
 //! * Upload plans are **epoch-tagged** (DESIGN.md §8): every slot write
 //!   stamps a monotone epoch, and [`ResidentWindow::plan_for`] /
 //!   [`ResidentWindow::snapshot_for`] produce the work a device buffer
-//!   current *through* any given epoch is missing. That generalizes the
+//!   current *through* any given epoch is missing, making the
+//!   host→device transfer O(changed) as well. That generalizes the
 //!   one-buffer dirty-bit scheme to the double-buffered
 //!   transfer/compute pipeline (`engine::pipeline`), where two device
 //!   backings per pool sit at different epochs. `snapshot_for` also
-//!   captures the range bytes at snapshot time, so an upload modeled as
-//!   in flight during execute can never observe a later scatter, and
-//!   [`ResidentWindow::take_row_tail`] hands the rows written *after*
-//!   the snapshot to the next stage boundary row-granularly.
+//!   captures the range bytes at snapshot time, so an upload in flight
+//!   on the copy-stream worker during execute can never observe a
+//!   later scatter, and [`ResidentWindow::take_row_tail`] hands the
+//!   rows written *after* the snapshot to the next stage boundary
+//!   row-granularly.
+//! * With [`ResidentWindow::set_copy_threads`] > 1 the per-step page
+//!   memcpys are **deferred** — `map_page` only queues (page, slot)
+//!   work and does the bookkeeping — and
+//!   [`ResidentWindow::flush_pending`] executes them sharded by
+//!   layer × slot-range across a small scoped thread pool
+//!   (DESIGN.md §9). `copy_threads = 1` is the serial eager path,
+//!   bit for bit.
+//! * Capture buffers (snapshot bytes, plan ranges, row tails) come
+//!   from a small **arena** and are donated back after use
+//!   ([`ResidentWindow::donate_capture`]), so steady-state decode
+//!   allocates nothing per step; [`WindowStats::alloc_bytes`] counts
+//!   every byte of fresh capacity the hot path still acquires.
 
 use std::collections::HashMap;
 
 use super::pool::{HostPool, PoolGeometry};
+use crate::util::profile::{self, Phase};
 
 /// Sentinel for "slot holds no page".
 const NO_PAGE: u32 = u32::MAX;
@@ -58,6 +68,15 @@ const NO_PAGE: u32 = u32::MAX;
 /// Row-tail log bound: past this many write-through rows between
 /// captures the tail degrades to slot-granular ranges.
 const ROW_TAIL_CAP: usize = 8192;
+
+/// Deferred-gather flush runs sharded only from this many queued page
+/// copies; below it the scoped-thread spawn costs more than the
+/// memcpys it would split.
+const PAR_MIN_PAGES: usize = 8;
+
+/// Arena depth for recycled capture buffers (two staged snapshots plus
+/// slack; deeper bins would just pin memory).
+const BIN_CAP: usize = 4;
 
 /// How the engine sizes the resident window (DESIGN.md §6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -75,7 +94,7 @@ pub enum WindowLayout {
 }
 
 /// Host→device upload work for one step, produced by
-/// [`ResidentWindow::take_upload_plan`] and executed by
+/// [`ResidentWindow::plan_for`] and executed by
 /// `runtime::DeviceWindow::apply` (same plan for the K and V buffers,
 /// which share slot bookkeeping).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -133,6 +152,10 @@ pub struct WindowStats {
     pub rows_written: u64,
     /// Steps that rebuilt the window from scratch (fallback path).
     pub full_gathers: u64,
+    /// Bytes of fresh heap capacity the hot path acquired (arena
+    /// misses and growth in snapshot/plan/row-tail buffers) — ~0 in
+    /// steady-state decode once the arena is warm (DESIGN.md §9).
+    pub alloc_bytes: u64,
     /// Pages copied by the most recent step only.
     pub last_pages_copied: u64,
     /// Bytes moved by the most recent step only (incl. write-through).
@@ -171,14 +194,21 @@ pub struct ResidentWindow {
     /// Epoch at the last layout rebuild: a device buffer current only
     /// through an earlier epoch needs a full upload.
     rebuild_epoch: u64,
-    /// Device epoch of the legacy single-buffer `take_upload_plan`.
-    last_plan_epoch: u64,
     /// Element ranges written by `write_row` since the last capture
     /// (shared offsets for K and V), for row-granular tail pushes.
     row_tail: Vec<(usize, usize)>,
     /// All writes since the last capture were logged rows (no page
     /// copies, no rebuild) — the precondition for `take_row_tail`.
     rows_clean: bool,
+    /// Gather-shard width: 1 copies pages eagerly in `map_page` (the
+    /// serial path, bit for bit); > 1 defers the memcpys to
+    /// `flush_pending`, sharded by layer × slot-range.
+    copy_threads: usize,
+    /// (page, slot) copies queued by `map_page` in deferred mode.
+    pending: Vec<(u32, u32)>,
+    /// Recycled capture buffers (snapshot bytes / plan ranges).
+    f32_bin: Vec<Vec<f32>>,
+    range_bin: Vec<Vec<(usize, usize)>>,
     k_win: Vec<f32>,
     v_win: Vec<f32>,
     stats: WindowStats,
@@ -204,9 +234,12 @@ impl ResidentWindow {
             epoch: 1,
             slot_epoch: Vec::new(),
             rebuild_epoch: 1,
-            last_plan_epoch: 0,
             row_tail: Vec::new(),
             rows_clean: false,
+            copy_threads: 1,
+            pending: Vec::new(),
+            f32_bin: Vec::new(),
+            range_bin: Vec::new(),
             k_win: Vec::new(),
             v_win: Vec::new(),
             stats: WindowStats::default(),
@@ -223,6 +256,21 @@ impl ResidentWindow {
 
     pub fn delta_enabled(&self) -> bool {
         self.delta_enabled
+    }
+
+    /// Gather-shard width (`--copy-threads`): 1 keeps the serial eager
+    /// gather, bit for bit; > 1 defers the page memcpys of `map_page`
+    /// to [`ResidentWindow::flush_pending`], which runs them sharded
+    /// by layer × slot-range on a scoped thread pool. Callers in
+    /// deferred mode MUST flush after mapping and before any capture
+    /// (`plan_for` / `snapshot_for` / `take_row_tail` /
+    /// `take_buffers`) or scatter.
+    pub fn set_copy_threads(&mut self, n: usize) {
+        self.copy_threads = n.max(1);
+    }
+
+    pub fn copy_threads(&self) -> usize {
+        self.copy_threads
     }
 
     /// Drop residency once; the next step full-gathers, then delta
@@ -258,6 +306,14 @@ impl ResidentWindow {
     /// otherwise keeps slots and contents and lets `map_page` copy only
     /// what moved.
     pub fn begin_step(&mut self, window_pages: usize) {
+        if !self.pending.is_empty() {
+            // a deferred gather was queued but never flushed (the
+            // caller errored out mid-step): those slots' window bytes
+            // are stale, so drop residency and rebuild below — the
+            // same recovery as buffer loss
+            self.pending.clear();
+            self.valid = false;
+        }
         self.step += 1;
         self.stats.steps += 1;
         self.stats.last_pages_copied = 0;
@@ -331,9 +387,115 @@ impl ResidentWindow {
         if fresh || self.full_this_step || k.is_dirty(page)
             || v.is_dirty(page)
         {
-            self.copy_page_in(k, v, page, slot);
+            if self.copy_threads > 1 {
+                // deferred mode: do all the bookkeeping now (so copy
+                // decisions and counters are identical to the serial
+                // path) and queue only the memcpy for flush_pending
+                self.note_page_copy(k, v, page, slot);
+                self.pending.push((page, slot));
+            } else {
+                self.copy_page_in(k, v, page, slot);
+            }
         }
         Some(slot)
+    }
+
+    /// Execute the page memcpys `map_page` deferred this step —
+    /// serially below [`PAR_MIN_PAGES`] pages, otherwise sharded by
+    /// layer × slot-range across a scoped thread pool of
+    /// `copy_threads` workers. No-op in serial mode or when nothing
+    /// was queued. Must run before any capture or scatter.
+    pub fn flush_pending(&mut self, k: &HostPool, v: &HostPool) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let _p = profile::span(Phase::GatherFlush);
+        let mut jobs = std::mem::take(&mut self.pending);
+        jobs.sort_unstable_by_key(|&(_, slot)| slot);
+        if self.copy_threads <= 1 || jobs.len() < PAR_MIN_PAGES {
+            for &(page, slot) in &jobs {
+                self.copy_page_bytes(k, v, page, slot);
+            }
+        } else {
+            self.flush_sharded(k, v, &jobs);
+        }
+        jobs.clear();
+        self.pending = jobs; // recycle the job list's allocation
+    }
+
+    /// Sharded flush: each shard is one (layer, slot-range) cut of the
+    /// window buffers — disjoint `&mut` slices, so the scoped workers
+    /// write concurrently with no synchronization beyond the join.
+    /// Shard count ≈ copy_threads (at least one slot-range per layer),
+    /// statically round-robined over the workers.
+    fn flush_sharded(&mut self, kp: &HostPool, vp: &HostPool,
+                     jobs: &[(u32, u32)]) {
+        let pe = self.geo.page_elems();
+        let w = self.window_pages;
+        let layers = self.geo.n_layers;
+        let threads = self.copy_threads;
+        let ranges_per_layer =
+            threads.div_ceil(layers).min(w.max(1)).max(1);
+        let slots_per_range = w.div_ceil(ranges_per_layer);
+        let range_elems = slots_per_range * pe;
+        let geo = self.geo;
+
+        struct Shard<'a> {
+            layer: usize,
+            base_slot: usize,
+            k_dst: &'a mut [f32],
+            v_dst: &'a mut [f32],
+            jobs: &'a [(u32, u32)],
+        }
+        let mut shards: Vec<Shard> =
+            Vec::with_capacity(layers * ranges_per_layer);
+        let k_layers = self.k_win.chunks_mut(w * pe);
+        let v_layers = self.v_win.chunks_mut(w * pe);
+        for (layer, (k_layer, v_layer)) in
+            k_layers.zip(v_layers).enumerate()
+        {
+            let subs = k_layer
+                .chunks_mut(range_elems)
+                .zip(v_layer.chunks_mut(range_elems));
+            for (i, (k_dst, v_dst)) in subs.enumerate() {
+                let base_slot = i * slots_per_range;
+                // jobs are sorted by slot: binary-search the range
+                let lo = jobs
+                    .partition_point(|&(_, s)| (s as usize) < base_slot);
+                let hi = jobs.partition_point(|&(_, s)| {
+                    (s as usize) < base_slot + slots_per_range
+                });
+                if lo < hi {
+                    shards.push(Shard {
+                        layer,
+                        base_slot,
+                        k_dst,
+                        v_dst,
+                        jobs: &jobs[lo..hi],
+                    });
+                }
+            }
+        }
+        let per_worker = shards.len().div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            for chunk in shards.chunks_mut(per_worker) {
+                scope.spawn(move || {
+                    for sh in chunk.iter_mut() {
+                        for &(page, slot) in sh.jobs {
+                            let src = geo.offset(sh.layer, page, 0);
+                            let dst =
+                                (slot as usize - sh.base_slot) * pe;
+                            sh.k_dst[dst..dst + pe].copy_from_slice(
+                                &kp.as_slice()[src..src + pe],
+                            );
+                            sh.v_dst[dst..dst + pe].copy_from_slice(
+                                &vp.as_slice()[src..src + pe],
+                            );
+                        }
+                    }
+                });
+            }
+        });
     }
 
     /// Victim selection is O(1) amortized: a free-list pop when a slot
@@ -373,8 +535,35 @@ impl ResidentWindow {
         self.steal_probes
     }
 
+    /// Eager gather of one page (serial path): memcpy + bookkeeping.
     fn copy_page_in(&mut self, k: &mut HostPool, v: &mut HostPool,
                     page: u32, slot: u32) {
+        self.note_page_copy(k, v, page, slot);
+        self.copy_page_bytes(k, v, page, slot);
+    }
+
+    /// The bookkeeping half of a page gather — dirty bits, epochs,
+    /// counters — shared by the eager path and the deferred queue so
+    /// both make identical decisions in identical order.
+    fn note_page_copy(&mut self, k: &mut HostPool, v: &mut HostPool,
+                      page: u32, slot: u32) {
+        k.clear_dirty(page);
+        v.clear_dirty(page);
+        self.slot_epoch[slot as usize] = self.epoch;
+        // a whole-page copy is not row-granular: the next tail capture
+        // must fall back to slot ranges
+        self.rows_clean = false;
+        let bytes =
+            (2 * self.geo.n_layers * self.geo.page_elems() * 4) as u64;
+        self.stats.pages_copied += 1;
+        self.stats.last_pages_copied += 1;
+        self.stats.bytes_moved += bytes;
+        self.stats.last_bytes_moved += bytes;
+    }
+
+    /// The memcpy half of a page gather (all layers, both pools).
+    fn copy_page_bytes(&mut self, k: &HostPool, v: &HostPool,
+                       page: u32, slot: u32) {
         let pe = self.geo.page_elems();
         let w = self.window_pages;
         for layer in 0..self.geo.n_layers {
@@ -385,17 +574,6 @@ impl ResidentWindow {
             self.v_win[dst..dst + pe]
                 .copy_from_slice(&v.as_slice()[src..src + pe]);
         }
-        k.clear_dirty(page);
-        v.clear_dirty(page);
-        self.slot_epoch[slot as usize] = self.epoch;
-        // a whole-page copy is not row-granular: the next tail capture
-        // must fall back to slot ranges
-        self.rows_clean = false;
-        let bytes = (2 * self.geo.n_layers * pe * 4) as u64;
-        self.stats.pages_copied += 1;
-        self.stats.last_pages_copied += 1;
-        self.stats.bytes_moved += bytes;
-        self.stats.last_bytes_moved += bytes;
     }
 
     /// Write-through: mirror one token row (both pools, one layer) into
@@ -411,6 +589,9 @@ impl ResidentWindow {
             // full gather re-copies the page anyway
             return;
         }
+        debug_assert!(self.pending.is_empty(),
+                      "scatter before flush_pending: the deferred page \
+                       copy would overwrite this row");
         let Some(&slot) = self.slot_of.get(&page) else { return };
         if self.stamp[slot as usize] != self.step {
             // not mapped this step: window copy may be stale in other
@@ -429,7 +610,11 @@ impl ResidentWindow {
         v.clear_dirty(page);
         self.slot_epoch[slot as usize] = self.epoch;
         if self.row_tail.len() < ROW_TAIL_CAP {
+            let before = self.row_tail.capacity();
             self.row_tail.push((dst, te));
+            let after = self.row_tail.capacity();
+            self.note_alloc(before, after,
+                            std::mem::size_of::<(usize, usize)>());
         } else {
             // safety valve: an absurdly long tail degrades to slot
             // ranges rather than growing without bound
@@ -441,25 +626,61 @@ impl ResidentWindow {
         self.stats.last_bytes_moved += bytes;
     }
 
-    /// Hand the device side its upload work: everything that changed in
-    /// the window buffers since the previous call, as coalesced element
-    /// ranges (adjacent dirty slots merge into one range per layer) —
-    /// or a full-upload order when the layout was rebuilt since then or
-    /// delta transfer is off. The caller must execute the plan
-    /// (`runtime::DeviceWindow::apply`) on both the K and V buffers or
-    /// device state goes stale. Write-through rows scattered *after* a
-    /// step's upload are picked up by the next step's plan. (Legacy
-    /// single-buffer form of [`ResidentWindow::plan_for`].)
-    pub fn take_upload_plan(&mut self) -> UploadPlan {
-        let (plan, through) = self.plan_for(self.last_plan_epoch, false);
-        self.last_plan_epoch = through;
-        plan
-    }
-
     /// Current write epoch (every slot mutation stamps it; every
     /// capture bumps it).
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// Hand a used capture back to the arena: the snapshot byte
+    /// buffers and range list of a completed staged upload
+    /// (`runtime::CopyDone` carries them home). Keeps steady-state
+    /// decode allocation-free; see [`WindowStats::alloc_bytes`].
+    pub fn donate_capture(&mut self, k_data: Vec<f32>,
+                          v_data: Vec<f32>,
+                          ranges: Vec<(usize, usize)>) {
+        if self.f32_bin.len() + 1 < BIN_CAP {
+            self.f32_bin.push(k_data);
+            self.f32_bin.push(v_data);
+        }
+        self.donate_ranges(ranges);
+    }
+
+    /// Hand back a plan's range list ([`UploadPlan::Ranges`] or a row
+    /// tail) once the device windows applied it.
+    pub fn donate_ranges(&mut self, ranges: Vec<(usize, usize)>) {
+        if self.range_bin.len() < BIN_CAP && ranges.capacity() > 0 {
+            self.range_bin.push(ranges);
+        }
+    }
+
+    fn grab_f32(&mut self) -> Vec<f32> {
+        match self.f32_bin.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    fn grab_ranges(&mut self) -> Vec<(usize, usize)> {
+        match self.range_bin.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Charge fresh heap capacity acquired on the hot path.
+    fn note_alloc(&mut self, before_cap: usize, after_cap: usize,
+                  elem_bytes: usize) {
+        if after_cap > before_cap {
+            self.stats.alloc_bytes +=
+                ((after_cap - before_cap) * elem_bytes) as u64;
+        }
     }
 
     /// Close a capture point: later writes ride a later plan.
@@ -481,11 +702,15 @@ impl ResidentWindow {
     }
 
     /// Coalesced per-layer element ranges covering every slot written
-    /// after `dev_epoch` (adjacent slots merge into one run).
-    fn ranges_since(&self, dev_epoch: u64) -> Vec<(usize, usize)> {
+    /// after `dev_epoch` (adjacent slots merge into one run). The
+    /// returned Vec comes from the arena; callers hand it back via
+    /// [`ResidentWindow::donate_ranges`] after the device applied it.
+    fn ranges_since(&mut self, dev_epoch: u64) -> Vec<(usize, usize)> {
         let w = self.window_pages;
         let pe = self.geo.page_elems();
-        let mut slot_runs: Vec<(usize, usize)> = Vec::new();
+        let mut ranges = self.grab_ranges();
+        let before = ranges.capacity();
+        // first pass: slot runs, appended directly as layer-0 ranges
         let mut s = 0;
         while s < w {
             if self.slot_epoch[s] <= dev_epoch {
@@ -496,15 +721,18 @@ impl ResidentWindow {
             while s < w && self.slot_epoch[s] > dev_epoch {
                 s += 1;
             }
-            slot_runs.push((start, s - start));
+            ranges.push((start * pe, (s - start) * pe));
         }
-        let mut ranges =
-            Vec::with_capacity(slot_runs.len() * self.geo.n_layers);
-        for layer in 0..self.geo.n_layers {
-            for &(start, n) in &slot_runs {
-                ranges.push(((layer * w + start) * pe, n * pe));
+        // expand the layer-0 runs across the remaining layers
+        let runs = ranges.len();
+        for layer in 1..self.geo.n_layers {
+            for i in 0..runs {
+                let (off, n) = ranges[i];
+                ranges.push((layer * w * pe + off, n));
             }
         }
+        self.note_alloc(before, ranges.capacity(),
+                        std::mem::size_of::<(usize, usize)>());
         ranges
     }
 
@@ -516,6 +744,9 @@ impl ResidentWindow {
     /// different epochs can each take their own plan.
     pub fn plan_for(&mut self, dev_epoch: u64, force_full: bool)
                     -> (UploadPlan, u64) {
+        assert!(self.pending.is_empty(),
+                "capture before flush_pending: deferred gather bytes \
+                 would be missing from the plan");
         let plan = if self.needs_full(dev_epoch, force_full) {
             UploadPlan::Full
         } else {
@@ -529,9 +760,17 @@ impl ResidentWindow {
     /// in flight while the scatter keeps writing (DESIGN.md §8).
     pub fn snapshot_for(&mut self, dev_epoch: u64, force_full: bool)
                         -> StagedUpload {
+        assert!(self.pending.is_empty(),
+                "capture before flush_pending: deferred gather bytes \
+                 would be snapshotted stale");
+        let mut k_data = self.grab_f32();
+        let mut v_data = self.grab_f32();
+        let caps = (k_data.capacity(), v_data.capacity());
         if self.needs_full(dev_epoch, force_full) {
-            let k_data = self.k_win.clone();
-            let v_data = self.v_win.clone();
+            k_data.extend_from_slice(&self.k_win);
+            v_data.extend_from_slice(&self.v_win);
+            self.note_alloc(caps.0, k_data.capacity(), 4);
+            self.note_alloc(caps.1, v_data.capacity(), 4);
             let through = self.capture_point();
             return StagedUpload {
                 through,
@@ -542,13 +781,12 @@ impl ResidentWindow {
             };
         }
         let ranges = self.ranges_since(dev_epoch);
-        let n: usize = ranges.iter().map(|&(_, len)| len).sum();
-        let mut k_data = Vec::with_capacity(n);
-        let mut v_data = Vec::with_capacity(n);
         for &(off, len) in &ranges {
             k_data.extend_from_slice(&self.k_win[off..off + len]);
             v_data.extend_from_slice(&self.v_win[off..off + len]);
         }
+        self.note_alloc(caps.0, k_data.capacity(), 4);
+        self.note_alloc(caps.1, v_data.capacity(), 4);
         let through = self.capture_point();
         StagedUpload { through, full: false, ranges, k_data, v_data }
     }
@@ -562,16 +800,27 @@ impl ResidentWindow {
     /// always sound; the pending writes stay pending.
     pub fn take_row_tail(&mut self)
                          -> Option<(Vec<(usize, usize)>, u64)> {
+        if !self.pending.is_empty() {
+            // unflushed deferred gather (an aborted step): the window
+            // bytes behind the logged rows are not trustworthy — fall
+            // back to slot-granular plans; the next begin_step
+            // rebuilds (this boundary runs BEFORE the engine reopens
+            // the window step, so it must degrade, not assert)
+            return None;
+        }
         if !self.delta_enabled || !self.rows_clean {
             return None;
         }
-        let ranges = std::mem::take(&mut self.row_tail);
+        let fresh = self.grab_ranges();
+        let ranges = std::mem::replace(&mut self.row_tail, fresh);
         Some((ranges, self.capture_point()))
     }
 
     /// Move the K/V buffers out (zero-copy hand-off to the input
     /// tensors). Residency is invalid until `restore_buffers`.
     pub fn take_buffers(&mut self) -> (Vec<f32>, Vec<f32>) {
+        assert!(self.pending.is_empty(),
+                "take_buffers before flush_pending");
         self.valid = false;
         (std::mem::take(&mut self.k_win), std::mem::take(&mut self.v_win))
     }
@@ -639,6 +888,8 @@ impl ResidentWindow {
                 - self.reported.rows_written,
             full_gathers: self.stats.full_gathers
                 - self.reported.full_gathers,
+            alloc_bytes: self.stats.alloc_bytes
+                - self.reported.alloc_bytes,
             last_pages_copied: self.stats.last_pages_copied,
             last_bytes_moved: self.stats.last_bytes_moved,
         };
@@ -924,7 +1175,9 @@ mod tests {
         let mut w = ResidentWindow::new(geo());
         w.begin_step(8);
         w.map_page(&mut k, &mut v, 0).unwrap();
-        assert_eq!(w.take_upload_plan(), UploadPlan::Full);
+        // a device buffer at epoch 0 (never uploaded) needs everything
+        let (p0, e0) = w.plan_for(0, false);
+        assert_eq!(p0, UploadPlan::Full);
 
         // steady step: only the re-dirtied page's slot uploads
         fill_page(&mut k, 0, 5.0);
@@ -936,13 +1189,14 @@ mod tests {
         let expect: Vec<(usize, usize)> = (0..g.n_layers)
             .map(|l| ((l * 8 + slot) * pe, pe))
             .collect();
-        assert_eq!(w.take_upload_plan(), UploadPlan::Ranges(expect));
+        let (p1, e1) = w.plan_for(e0, false);
+        assert_eq!(p1, UploadPlan::Ranges(expect));
 
         // nothing changed since: an empty delta
         w.begin_step(8);
         w.map_page(&mut k, &mut v, 0).unwrap();
-        assert_eq!(w.take_upload_plan(),
-                   UploadPlan::Ranges(Vec::new()));
+        let (p2, _) = w.plan_for(e1, false);
+        assert_eq!(p2, UploadPlan::Ranges(Vec::new()));
     }
 
     #[test]
@@ -953,7 +1207,7 @@ mod tests {
         for p in 0..4 {
             w.map_page(&mut k, &mut v, p).unwrap();
         }
-        let _ = w.take_upload_plan(); // discharge the full upload
+        let (_, e0) = w.plan_for(0, false); // discharge the full upload
 
         // dirty pages in slots 0,1 (adjacent) and 3 (isolated)
         for p in [0u32, 1, 3] {
@@ -965,7 +1219,8 @@ mod tests {
         }
         let g = geo();
         let pe = g.page_elems();
-        let UploadPlan::Ranges(ranges) = w.take_upload_plan() else {
+        let (UploadPlan::Ranges(ranges), _) = w.plan_for(e0, false)
+        else {
             panic!("expected a delta plan");
         };
         // slots 0..4 were allocated in order on the full step
@@ -982,7 +1237,7 @@ mod tests {
         let mut w = ResidentWindow::new(geo());
         w.begin_step(8);
         w.map_page(&mut k, &mut v, 2).unwrap();
-        let _ = w.take_upload_plan();
+        let (_, e0) = w.plan_for(0, false);
 
         // engine order: upload happened, then the scatter writes through
         k.token_row_mut(0, 2, 1).fill(42.0);
@@ -991,12 +1246,110 @@ mod tests {
 
         w.begin_step(8);
         w.map_page(&mut k, &mut v, 2).unwrap();
-        match w.take_upload_plan() {
-            UploadPlan::Ranges(r) => {
+        match w.plan_for(e0, false) {
+            (UploadPlan::Ranges(r), _) => {
                 assert!(!r.is_empty(),
                         "write-through slot must re-upload");
             }
-            UploadPlan::Full => panic!("residency should have held"),
+            (UploadPlan::Full, _) => {
+                panic!("residency should have held")
+            }
+        }
+    }
+
+    /// Deferred + sharded gather fills the window exactly like the
+    /// eager serial path: every mapped page's slot equals the pool
+    /// after the flush, and the copy decisions/counters are the same.
+    /// (Bit-for-bit eager-vs-deferred equivalence across full random
+    /// interleavings is pinned by the threaded I8 proptest, which runs
+    /// two independent replicas.)
+    #[test]
+    fn sharded_flush_matches_eager_gather() {
+        let (mut k, mut v) = pools();
+        for p in 0..12u32 {
+            fill_page(&mut k, p, 10.0 + p as f32);
+            fill_page(&mut v, p, -(10.0 + p as f32));
+        }
+        let mut w = ResidentWindow::new(geo());
+        w.set_copy_threads(4);
+
+        // 12 pages ≥ PAR_MIN_PAGES ⇒ the flush really shards
+        w.begin_step(16);
+        for p in 0..12u32 {
+            w.map_page(&mut k, &mut v, p).unwrap();
+        }
+        // bookkeeping happened at map time, memcpys not yet
+        assert_eq!(w.stats().pages_copied, 12);
+        assert!(!k.is_dirty(3), "dirty bits consumed at map time");
+        w.flush_pending(&k, &v);
+        for p in 0..12u32 {
+            assert_synced(&w, &k, &v, p);
+        }
+
+        // steady step: one dirty page — the small flush takes the
+        // serial branch, same counters as the eager path
+        fill_page(&mut k, 5, 99.0);
+        w.begin_step(16);
+        for p in 0..12u32 {
+            w.map_page(&mut k, &mut v, p).unwrap();
+        }
+        w.flush_pending(&k, &v);
+        assert_eq!(w.stats().last_pages_copied, 1,
+                   "exactly the dirty page, like the eager path");
+        for p in 0..12u32 {
+            assert_synced(&w, &k, &v, p);
+        }
+    }
+
+    /// An unflushed deferred gather (caller errored mid-step) must not
+    /// leave stale window bytes behind: the next step rebuilds.
+    #[test]
+    fn unflushed_pending_forces_rebuild() {
+        let (mut k, mut v) = pools();
+        fill_page(&mut k, 0, 1.0);
+        let mut w = ResidentWindow::new(geo());
+        w.set_copy_threads(2);
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        // no flush_pending — simulate an aborted step
+        w.begin_step(8);
+        assert!(w.is_full_step(),
+                "stale deferred bytes must drop residency");
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        w.flush_pending(&k, &v);
+        assert_synced(&w, &k, &v, 0);
+    }
+
+    /// Steady-state captures reuse arena buffers: after the first
+    /// warm-up round, snapshot/plan cycles acquire no fresh capacity.
+    #[test]
+    fn capture_arena_goes_allocation_free() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        let mut dev_epoch = 0u64;
+        for round in 0..12u32 {
+            fill_page(&mut k, 3, round as f32);
+            w.begin_step(8);
+            w.map_page(&mut k, &mut v, 3).unwrap();
+            let snap = w.snapshot_for(dev_epoch, false);
+            dev_epoch = snap.through;
+            if round == 3 {
+                // arena warm: later rounds must not allocate
+                let warm = w.stats().alloc_bytes;
+                w.donate_capture(snap.k_data, snap.v_data, snap.ranges);
+                for r in 4..12u32 {
+                    fill_page(&mut k, 3, 100.0 + r as f32);
+                    w.begin_step(8);
+                    w.map_page(&mut k, &mut v, 3).unwrap();
+                    let s = w.snapshot_for(dev_epoch, false);
+                    dev_epoch = s.through;
+                    w.donate_capture(s.k_data, s.v_data, s.ranges);
+                }
+                assert_eq!(w.stats().alloc_bytes, warm,
+                           "steady captures must be allocation-free");
+                return;
+            }
+            w.donate_capture(snap.k_data, snap.v_data, snap.ranges);
         }
     }
 

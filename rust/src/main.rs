@@ -14,7 +14,8 @@
 //!   --growth exact|power_of_two   --no-prefix-cache
 //!   --no-window-delta   --window-layout fixed|per_bucket
 //!   --window-upload delta|full   --pipeline on|off
-//!   --max-batch N --prefill-chunk N   --config FILE.json
+//!   --copy-threads N   --max-batch N --prefill-chunk N
+//!   --config FILE.json
 //! ```
 
 use std::path::PathBuf;
@@ -77,6 +78,8 @@ fn print_help() {
              whole window)\n\
            --pipeline on|off (overlap next step's KV upload with the\n\
              current execute; off = serial transfer)\n\
+           --copy-threads N (shard the KV-window gather across N\n\
+             threads; 1 = serial, default min(4, cores))\n\
            --max-batch N --prefill-chunk N --config FILE.json"
     );
 }
@@ -157,6 +160,12 @@ impl Flags {
                 "off" => false,
                 _ => bail!("bad --pipeline '{p}' (on|off)"),
             };
+        }
+        if let Some(n) = self.get("copy-threads") {
+            cfg.copy_threads = n
+                .parse::<usize>()
+                .map_err(|_| err!("bad --copy-threads {n}"))?
+                .max(1);
         }
         if let Some(b) = self.get("max-batch") {
             cfg.scheduler.max_batch_size =

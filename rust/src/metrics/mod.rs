@@ -133,6 +133,11 @@ pub struct ServingMetrics {
     pub window_rows_written: AtomicU64,
     /// Steps that fell back to a from-scratch full gather.
     pub window_full_gathers: AtomicU64,
+    /// Bytes of fresh heap capacity the window hot path acquired
+    /// (arena misses / growth in snapshot, plan and row-tail buffers)
+    /// — ~0 per steady decode step once the arena is warm
+    /// (DESIGN.md §9).
+    pub alloc_bytes: AtomicU64,
     /// Bytes pushed host→device into the persistent window buffers
     /// (delta ranges + full-upload fallbacks; K and V together) —
     /// DESIGN.md §6.
@@ -156,6 +161,13 @@ pub struct ServingMetrics {
     pub pipeline_collapses: AtomicU64,
     /// Staged uploads dropped on preemption / pool-dry admission.
     pub pipeline_drains: AtomicU64,
+    /// Wall ns the copy-stream worker spent applying staged uploads
+    /// (measured column, DESIGN.md §9).
+    pub pipeline_measured_wall_ns: AtomicU64,
+    /// Wall ns the engine thread spent blocked on copy fences.
+    pub pipeline_measured_wait_ns: AtomicU64,
+    /// Copy-stream workers lost to a panic (staging demoted inline).
+    pub pipeline_poisons: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -174,6 +186,7 @@ impl ServingMetrics {
         Self::inc(&self.window_pages_copied, d.pages_copied);
         Self::inc(&self.window_rows_written, d.rows_written);
         Self::inc(&self.window_full_gathers, d.full_gathers);
+        Self::inc(&self.alloc_bytes, d.alloc_bytes);
     }
 
     /// Merge a device-upload delta (`PagedEngine::take_upload_delta`).
@@ -191,6 +204,9 @@ impl ServingMetrics {
         Self::inc(&self.pipeline_overlap_ns, d.overlap_ns);
         Self::inc(&self.pipeline_collapses, d.collapses);
         Self::inc(&self.pipeline_drains, d.drains);
+        Self::inc(&self.pipeline_measured_wall_ns, d.measured_wall_ns);
+        Self::inc(&self.pipeline_measured_wait_ns, d.measured_wait_ns);
+        Self::inc(&self.pipeline_poisons, d.poisons);
     }
 
     /// Fraction of modeled staged-transfer time hidden under execute
@@ -202,6 +218,30 @@ impl ServingMetrics {
         }
         self.pipeline_overlap_ns.load(Ordering::Relaxed) as f64
             / staged as f64
+    }
+
+    /// Fraction of *measured* copy-stream wall time the engine did not
+    /// block on ([0, 1]; 0 when nothing ran on the worker).
+    pub fn measured_overlap_fraction(&self) -> f64 {
+        let wall =
+            self.pipeline_measured_wall_ns.load(Ordering::Relaxed);
+        if wall == 0 {
+            return 0.0;
+        }
+        let wait =
+            self.pipeline_measured_wait_ns.load(Ordering::Relaxed);
+        wall.saturating_sub(wait) as f64 / wall as f64
+    }
+
+    /// Mean bytes of fresh heap capacity acquired per recorded decode
+    /// step (the hot-path allocation audit; ~0 once the capture arena
+    /// is warm).
+    pub fn alloc_bytes_per_decode_step(&self) -> f64 {
+        let steps = self.decode_step.count();
+        if steps == 0 {
+            return 0.0;
+        }
+        self.alloc_bytes.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
     /// Mean bytes the host gather memcpy moved into the KV window per
@@ -249,11 +289,12 @@ impl ServingMetrics {
              tokens:   prefill={} decode={} ({:.1} tok/s decode)\n\
              prefix cache: hits={} cached_tokens={}\n\
              kv window: pages_copied={} rows_written={} \
-             full_gathers={} ({:.1} KB/decode step)\n\
+             full_gathers={} ({:.1} KB/decode step, \
+             alloc {:.0} B/step)\n\
              kv upload: delta={} full={} ranges={} \
              ({:.1} KB/decode step)\n\
              kv pipeline: staged={} collapses={} drains={} \
-             overlap={:.0}%\n\
+             poisons={} overlap={:.0}% measured={:.0}%\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -270,6 +311,7 @@ impl ServingMetrics {
             self.window_rows_written.load(Ordering::Relaxed),
             self.window_full_gathers.load(Ordering::Relaxed),
             self.window_bytes_per_decode_step() / 1e3,
+            self.alloc_bytes_per_decode_step(),
             self.upload_delta.load(Ordering::Relaxed),
             self.upload_full.load(Ordering::Relaxed),
             self.upload_ranges.load(Ordering::Relaxed),
@@ -277,7 +319,9 @@ impl ServingMetrics {
             self.pipeline_staged.load(Ordering::Relaxed),
             self.pipeline_collapses.load(Ordering::Relaxed),
             self.pipeline_drains.load(Ordering::Relaxed),
+            self.pipeline_poisons.load(Ordering::Relaxed),
             100.0 * self.pipeline_overlap_fraction(),
+            100.0 * self.measured_overlap_fraction(),
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -287,31 +331,63 @@ impl ServingMetrics {
         )
     }
 
-    /// CSV row of the headline numbers (benches aggregate these).
-    pub fn csv_row(&self) -> String {
-        format!(
-            "{},{},{},{},{:.3},{:.3},{:.3},{:.3},{:.1},{:.0},{:.0},{:.3}",
-            self.requests_finished.load(Ordering::Relaxed),
-            self.tokens_prefilled.load(Ordering::Relaxed),
-            self.tokens_decoded.load(Ordering::Relaxed),
-            self.requests_preempted.load(Ordering::Relaxed),
-            self.ttft.p50().as_secs_f64() * 1e3,
-            self.ttft.p99().as_secs_f64() * 1e3,
-            self.per_token.p50().as_secs_f64() * 1e3,
-            self.per_token.p99().as_secs_f64() * 1e3,
-            self.decode_tokens_per_sec(),
-            self.window_bytes_per_decode_step(),
-            self.upload_bytes_per_decode_step(),
-            self.pipeline_overlap_fraction(),
-        )
+    /// CSV header matching [`ServingMetrics::csv_row`], column for
+    /// column (both render from [`CSV_COLUMNS`], so they cannot
+    /// drift).
+    pub fn csv_header() -> String {
+        CSV_COLUMNS
+            .iter()
+            .map(|(name, _)| *name)
+            .collect::<Vec<_>>()
+            .join(",")
     }
 
-    pub const CSV_HEADER: &'static str =
-        "finished,tokens_prefilled,tokens_decoded,preempted,\
-         ttft_p50_ms,ttft_p99_ms,tok_p50_ms,tok_p99_ms,decode_tok_per_s,\
-         window_bytes_per_step,upload_bytes_per_step,\
-         pipeline_overlap_frac";
+    /// CSV row of the headline numbers (benches aggregate these).
+    pub fn csv_row(&self) -> String {
+        CSV_COLUMNS
+            .iter()
+            .map(|(_, render)| render(self))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
 }
+
+type CsvCol = (&'static str, fn(&ServingMetrics) -> String);
+
+/// The single source of truth for CSV emission: every column declares
+/// its name and renderer side by side. Append new columns HERE only —
+/// `csv_header` and `csv_row` both walk this table
+/// (`csv_header_and_row_stay_in_lockstep` holds them to it).
+const CSV_COLUMNS: &[CsvCol] = &[
+    ("finished",
+     |m| m.requests_finished.load(Ordering::Relaxed).to_string()),
+    ("tokens_prefilled",
+     |m| m.tokens_prefilled.load(Ordering::Relaxed).to_string()),
+    ("tokens_decoded",
+     |m| m.tokens_decoded.load(Ordering::Relaxed).to_string()),
+    ("preempted",
+     |m| m.requests_preempted.load(Ordering::Relaxed).to_string()),
+    ("ttft_p50_ms",
+     |m| format!("{:.3}", m.ttft.p50().as_secs_f64() * 1e3)),
+    ("ttft_p99_ms",
+     |m| format!("{:.3}", m.ttft.p99().as_secs_f64() * 1e3)),
+    ("tok_p50_ms",
+     |m| format!("{:.3}", m.per_token.p50().as_secs_f64() * 1e3)),
+    ("tok_p99_ms",
+     |m| format!("{:.3}", m.per_token.p99().as_secs_f64() * 1e3)),
+    ("decode_tok_per_s",
+     |m| format!("{:.1}", m.decode_tokens_per_sec())),
+    ("window_bytes_per_step",
+     |m| format!("{:.0}", m.window_bytes_per_decode_step())),
+    ("upload_bytes_per_step",
+     |m| format!("{:.0}", m.upload_bytes_per_decode_step())),
+    ("pipeline_overlap_frac",
+     |m| format!("{:.3}", m.pipeline_overlap_fraction())),
+    ("alloc_bytes_per_step",
+     |m| format!("{:.0}", m.alloc_bytes_per_decode_step())),
+    ("measured_overlap_frac",
+     |m| format!("{:.3}", m.measured_overlap_fraction())),
+];
 
 /// Scoped timer recording into a histogram on drop.
 pub struct Timer<'a> {
@@ -390,6 +466,7 @@ mod tests {
             bytes_moved: 4096,
             rows_written: 5,
             full_gathers: 1,
+            alloc_bytes: 128,
             ..Default::default()
         };
         m.note_window(&d);
@@ -400,7 +477,8 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("pages_copied=3"), "{s}");
         assert!(s.contains("full_gathers=1"), "{s}");
-        assert!(m.csv_row().ends_with("2048,0,0.000"), "{}", m.csv_row());
+        assert!(m.csv_row().ends_with("2048,0,0.000,64,0.000"),
+                "{}", m.csv_row());
     }
 
     #[test]
@@ -420,29 +498,61 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("delta=3"), "{s}");
         assert!(s.contains("ranges=9"), "{s}");
-        assert!(m.csv_row().ends_with("4096,0.000"), "{}", m.csv_row());
+        assert!(m.csv_row().ends_with("4096,0.000,0,0.000"),
+                "{}", m.csv_row());
     }
 
     #[test]
     fn pipeline_counters_merge_and_fraction() {
         let m = ServingMetrics::new();
         assert_eq!(m.pipeline_overlap_fraction(), 0.0, "no staging yet");
+        assert_eq!(m.measured_overlap_fraction(), 0.0);
         let d = PipelineStats {
             steps: 4,
             staged_uploads: 4,
             staged_bytes: 1024,
             staged_ns: 1000,
             overlap_ns: 750,
+            measured_wall_ns: 2000,
+            measured_wait_ns: 500,
             collapses: 1,
             drains: 2,
+            poisons: 1,
             ..Default::default()
         };
         m.note_pipeline(&d);
         assert_eq!(m.pipeline_overlap_fraction(), 0.75);
+        assert_eq!(m.measured_overlap_fraction(), 0.75);
         let s = m.summary();
         assert!(s.contains("staged=4"), "{s}");
+        assert!(s.contains("poisons=1"), "{s}");
         assert!(s.contains("overlap=75%"), "{s}");
-        assert!(m.csv_row().ends_with("0.750"), "{}", m.csv_row());
+        assert!(s.contains("measured=75%"), "{s}");
+        assert!(m.csv_row().ends_with("0.750,0,0.750"),
+                "{}", m.csv_row());
+    }
+
+    #[test]
+    fn csv_header_and_row_stay_in_lockstep() {
+        // header and row render from one table; this holds them to it
+        let m = ServingMetrics::new();
+        ServingMetrics::inc(&m.tokens_decoded, 7);
+        m.decode_step.record(Duration::from_millis(1));
+        let header: Vec<&str> =
+            ServingMetrics::csv_header().split(',').collect();
+        let row = m.csv_row();
+        let fields: Vec<&str> = row.split(',').collect();
+        assert_eq!(header.len(), fields.len(),
+                   "header/row column counts diverged");
+        assert_eq!(header.len(), CSV_COLUMNS.len());
+        for (name, field) in header.iter().zip(&fields) {
+            assert!(field.parse::<f64>().is_ok(),
+                    "column {name} renders non-numeric '{field}'");
+        }
+        for name in ["alloc_bytes_per_step", "measured_overlap_frac",
+                     "pipeline_overlap_frac"] {
+            assert!(header.contains(&name), "missing column {name}");
+        }
     }
 
     #[test]

@@ -1,0 +1,389 @@
+//! Asynchronous copy engine — a dedicated transfer worker thread per
+//! pool set (DESIGN.md §9).
+//!
+//! PR 3's double-buffered pipeline *modeled* the overlap of step N+1's
+//! KV-window upload with step N's execute: every byte still moved
+//! synchronously on the engine thread. This module makes the overlap
+//! real, the way vLLM-class servers run transfers on their own stream
+//! (Kwon et al., arXiv 2309.06180):
+//!
+//! * [`CopyStream`] owns one transfer worker thread. [`CopyStream::
+//!   submit`] moves an epoch-tagged [`CopyJob`] — the device pair being
+//!   staged plus the bytes `ResidentWindow::snapshot_for` captured (by
+//!   ownership, no copy) — onto a **bounded** queue and returns a
+//!   [`Fence`]; a full queue blocks the submitter, which is the
+//!   backpressure story (an engine that outruns the interconnect must
+//!   stall *somewhere*; better at submit than unbounded memory).
+//! * [`Fence::wait`] blocks until the worker finished the upload and
+//!   hands the device pair back — the engine calls it at the next
+//!   stage boundary (`engine::pipeline::TransferPipeline::begin_step`),
+//!   so in steady state the wait is ~0: the transfer already completed
+//!   under the previous execute.
+//! * **Poison detection**: a dead worker (panic mid-transfer) surfaces
+//!   as an error from `submit` (the job, and its device pair, are
+//!   handed back) or from `Fence::wait` (the in-flight pair died with
+//!   the thread). The pipeline treats either exactly like device-buffer
+//!   loss: collapse to the inline serial path, full-sync the next
+//!   front, keep serving.
+//! * **Clean shutdown drains**: dropping the stream closes the queue
+//!   and joins the worker, which finishes every queued job (and
+//!   answers every outstanding fence) before exiting.
+//!
+//! [`DevicePair`] (the K+V device windows that move in lockstep under
+//! one plan) lives here so the worker can own a pair while a transfer
+//! is in flight; `engine::pipeline` re-exports it.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::kvpage::StagedUpload;
+use crate::runtime::DeviceWindow;
+
+/// K and V device windows moving in lockstep (one plan drives both).
+pub struct DevicePair {
+    pub k: DeviceWindow,
+    pub v: DeviceWindow,
+}
+
+impl DevicePair {
+    /// Modeled-buffer backing (benches, proptests, offline runs).
+    pub fn sim() -> Self {
+        DevicePair { k: DeviceWindow::sim(), v: DeviceWindow::sim() }
+    }
+
+    /// Accounting-only backing for the real PJRT 0.5.1 path.
+    pub fn pjrt() -> Self {
+        DevicePair { k: DeviceWindow::pjrt(), v: DeviceWindow::pjrt() }
+    }
+
+    /// Epoch the pair is current through (a lost half drags it to 0).
+    pub fn epoch(&self) -> u64 {
+        self.k.epoch().min(self.v.epoch())
+    }
+
+    pub fn supports_ranges(&self) -> bool {
+        self.k.supports_ranges() && self.v.supports_ranges()
+    }
+
+    pub fn invalidate(&mut self) {
+        self.k.invalidate();
+        self.v.invalidate();
+    }
+
+    /// A delta upload against both resident buffers would be sound.
+    pub fn can_delta(&self, host_len: usize) -> bool {
+        self.k.can_delta(host_len) && self.v.can_delta(host_len)
+    }
+
+    /// Modeled ns both halves have spent receiving transfers.
+    pub fn busy_ns(&self) -> u64 {
+        self.k.busy_ns() + self.v.busy_ns()
+    }
+}
+
+/// One staged upload handed to the transfer worker: the device pair
+/// being staged plus the snapshot whose bytes it applies. The pair
+/// travels *by ownership* — while the transfer is in flight nobody
+/// else can touch (or observe a half-written) device buffer.
+pub struct CopyJob {
+    pub pair: DevicePair,
+    pub snap: StagedUpload,
+    /// Host window length the captured ranges index into.
+    pub host_len: usize,
+}
+
+/// What comes back over a [`Fence`]: the device pair, whether the
+/// captured ranges applied cleanly to both halves, the wall ns the
+/// worker spent (including any simulated DMA busy time), and the
+/// capture buffers for the window arena to recycle.
+pub struct CopyDone {
+    pub pair: DevicePair,
+    /// False when a half refused the captured ranges (buffer lost
+    /// between capture and apply) — the pair's epoch is stale and the
+    /// caller must not rotate it in as staged.
+    pub ok: bool,
+    /// Wall-clock ns the worker spent applying this job.
+    pub wall_ns: u64,
+    pub k_data: Vec<f32>,
+    pub v_data: Vec<f32>,
+    pub ranges: Vec<(usize, usize)>,
+}
+
+/// The transfer worker died (panicked) with the job's device pair.
+#[derive(Debug)]
+pub struct Poisoned;
+
+/// Completion ticket for one submitted [`CopyJob`].
+pub struct Fence {
+    rx: mpsc::Receiver<CopyDone>,
+}
+
+impl Fence {
+    /// Block until the transfer finished (or the worker died). In
+    /// steady pipelined decode the transfer completed under the
+    /// previous execute and this returns immediately. Consumes the
+    /// fence — the reply channel is one-shot, so there is no
+    /// non-blocking probe to mix up with it.
+    pub fn wait(self) -> Result<CopyDone, Poisoned> {
+        self.rx.recv().map_err(|_| Poisoned)
+    }
+}
+
+enum WorkItem {
+    // boxed: a CopyJob carries a device pair + capture buffers, far
+    // larger than the poison marker
+    Upload { job: Box<CopyJob>, reply: mpsc::Sender<CopyDone> },
+    /// Test hook: makes the worker panic mid-queue, simulating a crash
+    /// in the transfer path (poisoned-worker recovery coverage).
+    Poison,
+}
+
+/// Dedicated transfer worker thread + bounded submission queue.
+pub struct CopyStream {
+    tx: Option<mpsc::SyncSender<WorkItem>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Submission-queue depth. The pipeline keeps at most one upload in
+/// flight per pool set, so 2 gives one slot of slack; anything deeper
+/// only hides backpressure.
+const QUEUE_DEPTH: usize = 2;
+
+impl CopyStream {
+    pub fn spawn() -> Self {
+        let (tx, rx) = mpsc::sync_channel::<WorkItem>(QUEUE_DEPTH);
+        let worker = std::thread::Builder::new()
+            .name("pf-copy-stream".into())
+            .spawn(move || worker_loop(rx))
+            .expect("spawning copy-stream worker");
+        CopyStream { tx: Some(tx), worker: Some(worker) }
+    }
+
+    /// Enqueue an upload; blocks when the queue is full (backpressure).
+    /// A dead worker hands the job — and its device pair — straight
+    /// back (boxed) so the caller can fall to the inline path without
+    /// losing the buffer.
+    pub fn submit(&self, job: CopyJob)
+                  -> Result<Fence, Box<CopyJob>> {
+        let (reply, rx) = mpsc::channel();
+        match self
+            .tx
+            .as_ref()
+            .expect("copy stream submitted after shutdown")
+            .send(WorkItem::Upload { job: Box::new(job), reply })
+        {
+            Ok(()) => Ok(Fence { rx }),
+            Err(mpsc::SendError(WorkItem::Upload { job, .. })) => {
+                Err(job)
+            }
+            Err(mpsc::SendError(WorkItem::Poison)) => unreachable!(),
+        }
+    }
+
+    /// Test hook: crash the worker after it drains what is already
+    /// queued. Subsequent submits/fences report poison.
+    pub fn inject_poison(&self) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(WorkItem::Poison);
+        }
+    }
+}
+
+impl Drop for CopyStream {
+    fn drop(&mut self) {
+        // closing the queue lets the worker drain remaining jobs and
+        // exit; join so no transfer outlives the stream
+        drop(self.tx.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join(); // a poisoned worker already unwound
+        }
+    }
+}
+
+fn worker_loop(rx: mpsc::Receiver<WorkItem>) {
+    while let Ok(item) = rx.recv() {
+        match item {
+            WorkItem::Upload { job, reply } => {
+                // a dropped fence (drain/shutdown race) is fine: the
+                // transfer still completed, only nobody is listening
+                let _ = reply.send(run_job(*job));
+            }
+            WorkItem::Poison => {
+                panic!("copy stream poisoned (test hook)");
+            }
+        }
+    }
+}
+
+/// Apply one staged upload to both halves of the pair. Mirrors the
+/// inline `TransferPipeline` staging path exactly — same captured-data
+/// entry points, same failure semantics — so serial and threaded runs
+/// produce identical device states.
+fn run_job(mut job: CopyJob) -> CopyDone {
+    let t = Instant::now();
+    let snap = job.snap;
+    let ok = if snap.full {
+        job.pair.k.upload_full_captured(&snap.k_data, snap.through);
+        job.pair.v.upload_full_captured(&snap.v_data, snap.through);
+        true
+    } else {
+        let k_ok = job
+            .pair
+            .k
+            .upload_captured(job.host_len, &snap.ranges, &snap.k_data,
+                             snap.through)
+            .is_ok();
+        let v_ok = job
+            .pair
+            .v
+            .upload_captured(job.host_len, &snap.ranges, &snap.v_data,
+                             snap.through)
+            .is_ok();
+        k_ok && v_ok
+    };
+    CopyDone {
+        pair: job.pair,
+        ok,
+        wall_ns: t.elapsed().as_nanos() as u64,
+        k_data: snap.k_data,
+        v_data: snap.v_data,
+        ranges: snap.ranges,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_snap(data: Vec<f32>, through: u64) -> StagedUpload {
+        StagedUpload {
+            through,
+            full: true,
+            ranges: Vec::new(),
+            v_data: data.clone(),
+            k_data: data,
+        }
+    }
+
+    #[test]
+    fn submit_wait_roundtrip_applies_the_upload() {
+        let stream = CopyStream::spawn();
+        let mut pair = DevicePair::sim();
+        pair.k.upload_full(&[0.0; 16]);
+        pair.v.upload_full(&[0.0; 16]);
+
+        let snap = StagedUpload {
+            through: 7,
+            full: false,
+            ranges: vec![(4, 2)],
+            k_data: vec![1.0, 2.0],
+            v_data: vec![-1.0, -2.0],
+        };
+        let Ok(fence) = stream.submit(CopyJob { pair, snap, host_len: 16 })
+        else {
+            panic!("live worker must accept jobs");
+        };
+        let done = fence.wait().expect("worker answers");
+        assert!(done.ok);
+        assert_eq!(done.pair.epoch(), 7, "epoch handoff rode the job");
+        assert_eq!(&done.pair.k.contents().unwrap()[4..6], &[1.0, 2.0]);
+        assert_eq!(&done.pair.v.contents().unwrap()[4..6],
+                   &[-1.0, -2.0]);
+        assert_eq!(done.k_data, vec![1.0, 2.0],
+                   "capture buffers come back for the arena");
+    }
+
+    #[test]
+    fn stale_pair_reports_not_ok_but_survives() {
+        let stream = CopyStream::spawn();
+        let pair = DevicePair::sim(); // never uploaded: can_delta false
+        let snap = StagedUpload {
+            through: 3,
+            full: false,
+            ranges: vec![(0, 1)],
+            k_data: vec![1.0],
+            v_data: vec![1.0],
+        };
+        let Ok(fence) = stream.submit(CopyJob { pair, snap, host_len: 8 })
+        else {
+            panic!("live worker must accept jobs");
+        };
+        let done = fence.wait().unwrap();
+        assert!(!done.ok, "captured ranges must refuse a lost buffer");
+        assert_eq!(done.pair.epoch(), 0, "failed apply keeps the epoch");
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        let stream = CopyStream::spawn();
+        let mut fences = Vec::new();
+        for i in 0..4u64 {
+            let mut pair = DevicePair::sim();
+            pair.k.upload_full(&[0.0; 8]);
+            pair.v.upload_full(&[0.0; 8]);
+            let Ok(fence) = stream.submit(CopyJob {
+                pair,
+                snap: full_snap(vec![i as f32; 8], i + 1),
+                host_len: 8,
+            }) else {
+                panic!("submit while live must succeed");
+            };
+            fences.push((i, fence));
+        }
+        drop(stream); // closes the queue, joins the worker
+        for (i, fence) in fences {
+            let done = fence.wait().expect("queued job drained");
+            assert!(done.ok);
+            assert_eq!(done.pair.k.contents().unwrap()[0], i as f32,
+                       "job {i} applied before shutdown");
+        }
+    }
+
+    #[test]
+    fn poisoned_worker_fails_fences_and_submits() {
+        let stream = CopyStream::spawn();
+        stream.inject_poison();
+        // whether a job lands before or after the worker unwinds, the
+        // poison must surface within a bounded number of attempts —
+        // either as a refused submit (pair handed back) or a dead fence
+        let mut pair = Some(DevicePair::sim());
+        let mut poisoned = false;
+        for round in 0..50 {
+            let job = CopyJob {
+                pair: pair.take().unwrap(),
+                snap: full_snap(vec![0.5; 4], round + 1),
+                host_len: 4,
+            };
+            match stream.submit(job) {
+                Err(job) => {
+                    pair = Some(job.pair); // pair recovered intact
+                    poisoned = true;
+                    break;
+                }
+                Ok(fence) => match fence.wait() {
+                    Err(Poisoned) => {
+                        poisoned = true;
+                        break;
+                    }
+                    Ok(done) => pair = Some(done.pair),
+                },
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(poisoned, "poison never surfaced");
+        drop(stream); // join of a panicked worker must not hang
+    }
+
+    #[test]
+    fn device_pair_epoch_is_min_of_halves() {
+        let mut pair = DevicePair::sim();
+        pair.k.upload_full(&[0.0; 4]);
+        pair.v.upload_full(&[0.0; 4]);
+        assert!(pair.supports_ranges());
+        assert!(pair.can_delta(4));
+        pair.v.invalidate();
+        assert_eq!(pair.epoch(), 0, "lost half drags the pair to 0");
+        assert!(!pair.can_delta(4));
+    }
+}

@@ -27,8 +27,9 @@
 //! The contract for [`DeviceWindow::upload_ranges`]: the caller
 //! guarantees the ranges cover every element that changed in `host`
 //! since the previous successful upload, at the same buffer length.
-//! `ResidentWindow::take_upload_plan` provides exactly that;
-//! equivalence with the full-upload path is property-tested in
+//! `ResidentWindow::plan_for` (against this buffer's
+//! [`DeviceWindow::epoch`]) provides exactly that; equivalence with
+//! the full-upload path is property-tested in
 //! `rust/tests/proptest_kvpage.rs`.
 
 use crate::kvpage::window::UploadPlan;
@@ -85,7 +86,6 @@ pub struct DeviceWindow {
     /// (`ResidentWindow::plan_for` handoff; 0 = never uploaded/lost).
     epoch: u64,
     stats: UploadStats,
-    reported: UploadStats,
 }
 
 impl DeviceWindow {
@@ -106,7 +106,6 @@ impl DeviceWindow {
             valid: false,
             epoch: 0,
             stats: UploadStats::default(),
-            reported: UploadStats::default(),
         }
     }
 
@@ -118,6 +117,25 @@ impl DeviceWindow {
     /// Whether the backing can push individual ranges.
     pub fn supports_ranges(&self) -> bool {
         matches!(self.backing, Backing::Sim(_))
+    }
+
+    /// Modeled ns this buffer has spent receiving transfers (sim
+    /// backing; 0 on the accounting-only PJRT path).
+    pub fn busy_ns(&self) -> u64 {
+        match &self.backing {
+            Backing::Sim(buf) => buf.busy_ns(),
+            Backing::Pjrt => 0,
+        }
+    }
+
+    /// Wall-clock busy simulation: every copy sleeps its modeled ns ×
+    /// `scale` (sim backing only; see `xla::SimDeviceBuffer`). The
+    /// measured-overlap bench turns this on so hidden transfer time is
+    /// *observed*, not derived.
+    pub fn set_sleep_scale(&mut self, scale: f64) {
+        if let Backing::Sim(buf) = &mut self.backing {
+            buf.set_sleep_scale(scale);
+        }
     }
 
     /// Drop the device buffer (failed execute, device reset). The next
@@ -270,25 +288,11 @@ impl DeviceWindow {
         }
     }
 
+    /// Cumulative counters. Delta reporting lives one level up
+    /// (`TransferPipeline::take_upload_unreported` snapshots these
+    /// totals), so a single reporting scheme owns the baselines.
     pub fn stats(&self) -> &UploadStats {
         &self.stats
-    }
-
-    /// Counters accumulated since the last call (serving-metrics merge).
-    pub fn take_unreported(&mut self) -> UploadStats {
-        let d = UploadStats {
-            full_uploads: self.stats.full_uploads
-                - self.reported.full_uploads,
-            delta_uploads: self.stats.delta_uploads
-                - self.reported.delta_uploads,
-            ranges_pushed: self.stats.ranges_pushed
-                - self.reported.ranges_pushed,
-            bytes_uploaded: self.stats.bytes_uploaded
-                - self.reported.bytes_uploaded,
-            last_bytes: self.stats.last_bytes,
-        };
-        self.reported = self.stats;
-        d
     }
 }
 
@@ -347,16 +351,15 @@ mod tests {
     }
 
     #[test]
-    fn stats_plus_and_take_unreported() {
+    fn stats_accumulate_and_sum() {
         let mut dev = DeviceWindow::sim();
         let host = vec![0.0f32; 4];
         dev.upload_full(&host);
-        let d = dev.take_unreported();
+        let d = *dev.stats();
         assert_eq!(d.full_uploads, 1);
         assert_eq!(d.bytes_uploaded, 16);
-        let d2 = dev.take_unreported();
-        assert_eq!(d2.full_uploads, 0, "delta since last take");
-        let merged = d.plus(&d2);
-        assert_eq!(merged.full_uploads, 1);
+        let merged = d.plus(dev.stats());
+        assert_eq!(merged.full_uploads, 2, "element-wise sum");
+        assert_eq!(merged.bytes_uploaded, 32);
     }
 }

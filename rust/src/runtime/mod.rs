@@ -14,6 +14,7 @@
 //! (`kvpage::pool::HostPool`) and decode executables return `(logits,
 //! k_new, v_new)` rather than updated pools — see DESIGN.md §5.
 
+pub mod copy_stream;
 pub mod device_window;
 pub mod tensor;
 
@@ -27,6 +28,8 @@ use crate::model::{ArtifactSpec, ConfigEntry, Manifest};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
 
+pub use copy_stream::{CopyDone, CopyJob, CopyStream, DevicePair, Fence,
+                      Poisoned};
 pub use device_window::{DeviceWindow, UploadStats};
 pub use tensor::HostTensor;
 

@@ -35,13 +35,21 @@ pub enum Phase {
     /// double-buffered pipeline (DESIGN.md §8; recorded via
     /// `record_ns`, not a wall-clock span)
     PipelineOverlap = 8,
+    /// wall-clock time the engine thread spent blocked on a copy-engine
+    /// fence at a stage boundary (DESIGN.md §9; 0 when the transfer
+    /// finished under the previous execute)
+    FenceWait = 9,
+    /// deferred window-gather flush: the sharded pool→window memcpys
+    /// (`ResidentWindow::flush_pending`, `--copy-threads`)
+    GatherFlush = 10,
 }
 
-const N: usize = 9;
+const N: usize = 11;
 const NAMES: [&str; N] = ["subpool_gather", "upload", "execute",
                           "download", "scatter", "window_delta",
                           "upload_delta", "upload_full",
-                          "pipeline_overlap"];
+                          "pipeline_overlap", "fence_wait",
+                          "gather_flush"];
 
 static NANOS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
 static COUNTS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];

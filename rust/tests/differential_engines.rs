@@ -30,6 +30,15 @@ fn cfg(mode: AttentionMode, dir: &Path, pipeline: bool) -> EngineConfig {
     c.attention = mode;
     c.pipeline = pipeline;
     c.scheduler.prefill_chunk = 32;
+    // the CI threaded-stress job sets PF_COPY_THREADS=4 so the whole
+    // differential suite also runs with the sharded gather; token
+    // streams must stay byte-identical at any shard width
+    if let Some(n) = std::env::var("PF_COPY_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        c.copy_threads = n.max(1);
+    }
     c
 }
 

@@ -460,15 +460,21 @@ impl WindowHarness {
         }
 
         // engine order: upload what changed (delta path) / everything
-        // (full path) to the persistent device buffers, then verify
-        let plan = self.delta.take_upload_plan();
-        self.delta_kdev.apply(self.delta.k_window(), &plan);
-        self.delta_vdev.apply(self.delta.v_window(), &plan);
-        let fplan = self.full.take_upload_plan();
+        // (full path) to the persistent device buffers, then verify.
+        // Each buffer pair's own epoch drives its plan — a lost buffer
+        // reads as epoch 0 and the plan goes Full by itself.
+        let dev_epoch =
+            self.delta_kdev.epoch().min(self.delta_vdev.epoch());
+        let (plan, through) = self.delta.plan_for(dev_epoch, false);
+        self.delta_kdev.apply_at(self.delta.k_window(), &plan, through);
+        self.delta_vdev.apply_at(self.delta.v_window(), &plan, through);
+        let fepoch =
+            self.full_kdev.epoch().min(self.full_vdev.epoch());
+        let (fplan, fthrough) = self.full.plan_for(fepoch, false);
         assert_eq!(fplan, UploadPlan::Full,
                    "{ctx}: full-gather window must order full uploads");
-        self.full_kdev.apply(self.full.k_window(), &fplan);
-        self.full_vdev.apply(self.full.v_window(), &fplan);
+        self.full_kdev.apply_at(self.full.k_window(), &fplan, fthrough);
+        self.full_vdev.apply_at(self.full.v_window(), &fplan, fthrough);
         self.verify(ctx, &mapped);
 
         // scatter one decoded token per sequence, write-through to the
@@ -700,14 +706,17 @@ fn steady_single_sequence_decode_copies_o1_pages() {
 // Two *independent* full replicas of the kvpage state machine (manager,
 // pools, resident window) are driven through the same random op
 // sequence: one uploads through the double-buffered TransferPipeline
-// (epoch-tagged snapshots, row tails, staged full refills), the other
-// through the serial single-buffer take_upload_plan path of PR 2. At
-// every execute boundary, the pipeline's FRONT device contents and the
-// serial device contents must both be element-identical to their pools
-// for every mapped page — and therefore to each other (the replicas
-// evolve identically). Random losses hit the pipeline's front/back
-// halves and the serial buffers independently; preemption invalidates
-// residency and drains the staged upload, exactly like the engine.
+// (epoch-tagged snapshots applied on the copy-stream worker thread,
+// row tails, staged full refills; optionally a sharded deferred
+// gather), the other through the serial single-pair plan_for path of
+// PR 2. At every execute boundary, the pipeline's FRONT device
+// contents and the serial device contents must both be
+// element-identical to their pools for every mapped page — and
+// therefore to each other (the replicas evolve identically). Random
+// losses hit the pipeline's front/back halves and the serial buffers
+// independently; preemption invalidates residency and drains the
+// staged upload, exactly like the engine; a poisoned copy worker must
+// demote staging inline without a single divergent byte.
 // ----------------------------------------------------------------------
 
 use paged_flex::engine::pipeline::TransferPipeline;
@@ -782,9 +791,15 @@ struct PipeHarness {
 }
 
 impl PipeHarness {
-    fn new(seed: u64, policy: GrowthPolicy) -> Self {
+    /// `copy_threads` shards the PIPELINED replica's gather; the
+    /// serial replica always runs the eager serial path, so the
+    /// comparison also proves sharded == serial gather bytes.
+    fn new(seed: u64, policy: GrowthPolicy, copy_threads: usize)
+           -> Self {
+        let mut p = PathState::new(policy);
+        p.win.set_copy_threads(copy_threads);
         PipeHarness {
-            p: PathState::new(policy),
+            p,
             pipe: TransferPipeline::sim(true),
             s: PathState::new(policy),
             s_kdev: DeviceWindow::sim(),
@@ -980,6 +995,7 @@ impl PipeHarness {
             }
             mapped.push((id, pages));
         }
+        self.p.win.flush_pending(&self.p.k, &self.p.v);
         self.pipe.pre_execute(&mut self.p.win);
 
         // ---- serial replica: the PR 2 path
@@ -992,9 +1008,12 @@ impl PipeHarness {
                     .expect("serial window slots exhausted");
             }
         }
-        let plan = self.s.win.take_upload_plan();
-        self.s_kdev.apply(self.s.win.k_window(), &plan);
-        self.s_vdev.apply(self.s.win.v_window(), &plan);
+        let (plan, through) = self.s.win.plan_for(
+            self.s_kdev.epoch().min(self.s_vdev.epoch()),
+            false,
+        );
+        self.s_kdev.apply_at(self.s.win.k_window(), &plan, through);
+        self.s_vdev.apply_at(self.s.win.v_window(), &plan, through);
 
         self.verify(ctx, &mapped);
         self.pipe.note_execute(1_000_000);
@@ -1081,18 +1100,37 @@ impl PipeHarness {
     }
 }
 
-#[test]
-fn pipeline_matches_serial_upload_random_interleavings() {
-    for seed in 0..10u64 {
+/// `PF_COPY_THREADS` override for the threaded suites (the CI
+/// threaded-stress job sets 4).
+fn env_copy_threads(default: usize) -> usize {
+    std::env::var("PF_COPY_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+fn pipeline_matches_serial(seeds: std::ops::Range<u64>,
+                           copy_threads: usize, steps: usize,
+                           poison_at: Option<usize>) {
+    for seed in seeds {
         let policy = if seed % 2 == 0 {
             GrowthPolicy::Exact
         } else {
             GrowthPolicy::PowerOfTwo
         };
-        let mut h = PipeHarness::new(9000 + seed, policy);
-        for step in 0..250 {
-            let ctx =
-                format!("pipe seed {seed} step {step} ({policy:?})");
+        let mut h = PipeHarness::new(9000 + seed, policy, copy_threads);
+        for step in 0..steps {
+            if poison_at == Some(step) {
+                // crash the transfer worker mid-run: the pipeline
+                // must detect it, demote to inline staging, and keep
+                // every subsequent verify green
+                h.pipe.poison_stream_for_test();
+            }
+            let ctx = format!(
+                "pipe seed {seed} step {step} ({policy:?}, \
+                 threads {copy_threads})"
+            );
             h.step(&ctx);
         }
         while !h.live.is_empty() {
@@ -1105,7 +1143,34 @@ fn pipeline_matches_serial_upload_random_interleavings() {
         let ps = h.pipe.stats();
         assert!(ps.staged_uploads > 0,
                 "seed {seed}: pipeline never staged ({ps:?})");
+        if poison_at.is_some() {
+            assert!(ps.poisons >= 1,
+                    "seed {seed}: injected poison never surfaced \
+                     ({ps:?})");
+        }
     }
+}
+
+#[test]
+fn pipeline_matches_serial_upload_random_interleavings() {
+    pipeline_matches_serial(0..10, 1, 250, None);
+}
+
+/// I8 in threaded mode: the pipelined replica's gather is deferred and
+/// sharded across the scoped pool while the serial replica stays
+/// eager — device states must remain element-identical.
+#[test]
+fn pipeline_matches_serial_upload_threaded_gather() {
+    pipeline_matches_serial(20..26, env_copy_threads(4), 250, None);
+}
+
+/// Multi-iteration threaded stress: longer runs, sharded gather, and a
+/// mid-run worker poison on every seed. Serving must survive the
+/// crash (inline staging) with byte-identical device state throughout.
+#[test]
+fn threaded_pipeline_stress_survives_worker_poison() {
+    pipeline_matches_serial(40..46, env_copy_threads(4), 400,
+                            Some(120));
 }
 
 #[test]
@@ -1117,7 +1182,7 @@ fn epoch_handoff_never_uploads_a_stale_slot() {
     // the epoch tags force the reassigned slot back into a plan even
     // though the back pair already "has" that slot from the stale
     // snapshot.
-    let mut h = PipeHarness::new(777, GrowthPolicy::Exact);
+    let mut h = PipeHarness::new(777, GrowthPolicy::Exact, 1);
     // sequence 1: one page worth of tokens
     let prompt: Vec<u32> = (0..PAGE_SIZE as u32 - 1).collect();
     h.p.mgr.reserve(1, &prompt).unwrap();

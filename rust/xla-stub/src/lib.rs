@@ -154,17 +154,40 @@ pub fn modeled_transfer_ns(bytes: u64, copies: u64) -> u64 {
 /// contents without PJRT hardware. xla_extension 0.5.1 itself cannot
 /// update a buffer in place; the real path falls back to whole-buffer
 /// uploads (DESIGN.md §6).
+///
+/// With [`SimDeviceBuffer::set_sleep_scale`] > 0 every copy also
+/// *sleeps* `modeled_transfer_ns × scale` wall-clock, so the buffer
+/// behaves like a busy DMA engine: when the copy runs on the transfer
+/// worker thread (`runtime::copy_stream::CopyStream`), overlap with
+/// compute is measured, not assumed (DESIGN.md §9 and
+/// `benches/copy_stream_overlap.rs`). Off (0.0, the default) the
+/// buffer is instantaneous and only the `busy_ns` ledger advances.
 #[derive(Debug, Default, Clone)]
 pub struct SimDeviceBuffer {
     data: Vec<f32>,
     range_copies: u64,
     full_copies: u64,
     busy_ns: u64,
+    sleep_scale: f64,
 }
 
 impl SimDeviceBuffer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Make every copy take real wall time: each write sleeps its
+    /// modeled ns × `scale` (0 = instantaneous, the default).
+    pub fn set_sleep_scale(&mut self, scale: f64) {
+        self.sleep_scale = scale.max(0.0);
+    }
+
+    fn note_busy(&mut self, ns: u64) {
+        self.busy_ns += ns;
+        if self.sleep_scale > 0.0 {
+            let wall = (ns as f64 * self.sleep_scale) as u64;
+            std::thread::sleep(std::time::Duration::from_nanos(wall));
+        }
     }
 
     /// Elements currently resident (0 until the first full write).
@@ -182,7 +205,7 @@ impl SimDeviceBuffer {
         self.data.clear();
         self.data.extend_from_slice(src);
         self.full_copies += 1;
-        self.busy_ns += modeled_transfer_ns(4 * src.len() as u64, 1);
+        self.note_busy(modeled_transfer_ns(4 * src.len() as u64, 1));
     }
 
     /// Copy one contiguous host range into the resident buffer at
@@ -195,8 +218,9 @@ impl SimDeviceBuffer {
             Some(end) if end <= self.data.len() => {
                 self.data[offset..end].copy_from_slice(src);
                 self.range_copies += 1;
-                self.busy_ns +=
-                    modeled_transfer_ns(4 * src.len() as u64, 1);
+                self.note_busy(
+                    modeled_transfer_ns(4 * src.len() as u64, 1),
+                );
                 Ok(())
             }
             _ => Err(Error(format!(
@@ -267,6 +291,20 @@ mod tests {
         b.write_range(0, &[1.0; 8]).unwrap();
         assert_eq!(b.busy_ns(),
                    after_full + modeled_transfer_ns(32, 1));
+    }
+
+    #[test]
+    fn sleep_scale_makes_copies_take_wall_time() {
+        let mut b = SimDeviceBuffer::new();
+        b.write_full(&[0.0; 1024]); // instantaneous while scale = 0
+        // scale chosen so the full write models ≥ 2 ms wall
+        let ns = modeled_transfer_ns(4 * 1024, 1);
+        b.set_sleep_scale(2_000_000.0 / ns as f64);
+        let t = std::time::Instant::now();
+        b.write_full(&[1.0; 1024]);
+        assert!(t.elapsed() >= std::time::Duration::from_millis(1),
+                "busy simulation must cost wall time");
+        assert_eq!(b.as_slice()[0], 1.0);
     }
 
     #[test]
