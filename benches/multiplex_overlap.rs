@@ -1,0 +1,305 @@
+//! Multiplexed copy-engine overlap bench — MEASURED wall-clock decode
+//! of TWO pool sets (two models sharing one host) staging through ONE
+//! shared [`CopyEngine`] vs serialized per-pool transfers
+//! (DESIGN.md §10).
+//!
+//! Like `benches/copy_stream_overlap.rs`, every device copy takes real
+//! time: `SimDeviceBuffer` sleeps its modeled ns × a fixed scale, and
+//! "execute" is a wall-clock sleep sized from the same model. The
+//! baseline is the serialized per-pool path — each pool's upload runs
+//! inline on the engine thread, then its execute, pool after pool (the
+//! shape a multi-model host collapses to when transfers stay on the
+//! decode path). The shared-engine run submits BOTH pools' staged
+//! uploads to the one multiplexed worker before the executes, so the
+//! round-robin lanes apply them while the engine thread sleeps both
+//! executes — if multiplexing did not actually interleave and overlap,
+//! the shared step would measure no faster than the serialized sum.
+//!
+//! Exits nonzero when the measured shared-engine two-pool step stops
+//! beating the serialized per-pool sum at seq ≥ 512 in either upload
+//! mode (CI gate).
+
+include!("common.rs");
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use paged_flex::engine::pipeline::TransferPipeline;
+use paged_flex::harness::print_table;
+use paged_flex::kvpage::{
+    GrowthPolicy, HostPool, PageAllocator, PageManager, PoolGeometry,
+    ResidentWindow,
+};
+use paged_flex::runtime::{CopyEngine, DeviceWindow};
+
+const N_LAYERS: usize = 4;
+/// Same geometry rationale as copy_stream_overlap: large pages + wide
+/// heads so bandwidth dominates per-copy latency.
+const PAGE_SIZE: usize = 64;
+const N_KV_HEADS: usize = 4;
+const D_HEAD: usize = 32;
+/// Wall ns slept per modeled transfer ns (single-digit-ms steps).
+const SLEEP_SCALE: f64 = 24.0;
+/// Pool sets multiplexed over the one shared worker.
+const N_POOLS: usize = 2;
+
+struct Rig {
+    mgr: PageManager,
+    k: HostPool,
+    v: HostPool,
+    win: ResidentWindow,
+    window_pages: usize,
+}
+
+fn rig(seq_len: usize, steps: usize) -> Rig {
+    let max_blocks = (seq_len + steps).div_ceil(PAGE_SIZE) + 2;
+    let n_pages = max_blocks + 8;
+    let geo = PoolGeometry {
+        n_layers: N_LAYERS,
+        n_pages,
+        page_size: PAGE_SIZE,
+        n_kv_heads: N_KV_HEADS,
+        d_head: D_HEAD,
+    };
+    let alloc = Arc::new(PageAllocator::new(
+        n_pages as u32,
+        PAGE_SIZE,
+        (geo.token_elems() * 8) as u64,
+        GrowthPolicy::Exact,
+    ));
+    let mut mgr = PageManager::new(alloc, max_blocks);
+    let mut k = HostPool::zeros(geo);
+    let mut v = HostPool::zeros(geo);
+    let prompt: Vec<u32> = (0..seq_len as u32).collect();
+    mgr.reserve(1, &prompt).unwrap();
+    {
+        let table = mgr.table(1).unwrap();
+        for pos in 0..seq_len {
+            let (page, off) =
+                (table.pages()[pos / PAGE_SIZE], pos % PAGE_SIZE);
+            for layer in 0..N_LAYERS {
+                k.token_row_mut(layer, page, off).fill(pos as f32);
+                v.token_row_mut(layer, page, off).fill(-(pos as f32));
+            }
+        }
+    }
+    mgr.note_assigned(1, seq_len).unwrap();
+    Rig { mgr, k, v, win: ResidentWindow::new(geo), window_pages: max_blocks }
+}
+
+/// Wall-clock "execute" per pool: 1.3× the modeled whole-window (K+V)
+/// upload, scaled — long enough that a pool's staged refill hides
+/// under its own execute, short enough that transfer time matters.
+fn execute_sleep(window_pages: usize) -> (Duration, u64) {
+    let geo_elems = N_LAYERS
+        * window_pages
+        * PAGE_SIZE
+        * N_KV_HEADS
+        * D_HEAD;
+    let model_ns =
+        xla::modeled_transfer_ns(2 * 4 * geo_elems as u64, 2) * 13 / 10;
+    let wall = Duration::from_nanos(
+        (model_ns as f64 * SLEEP_SCALE) as u64,
+    );
+    (wall, model_ns)
+}
+
+/// One pool's gather + write-through scatter for one decode step
+/// (shared by both drivers so the host-side work is identical).
+fn gather_pool(r: &mut Rig) {
+    r.mgr.prepare_append(1, 1).unwrap();
+    let len = r.mgr.seq_len(1).unwrap();
+    r.win.begin_step(r.window_pages);
+    let table = r.mgr.table(1).unwrap();
+    for &p in table.blocks_covering(len + 1) {
+        r.win.map_page(&mut r.k, &mut r.v, p).unwrap();
+    }
+    r.win.flush_pending(&r.k, &r.v);
+}
+
+fn scatter_pool(r: &mut Rig, step: usize) {
+    let len = r.mgr.seq_len(1).unwrap();
+    let table = r.mgr.table(1).unwrap();
+    let (page, off) =
+        (table.pages()[len / PAGE_SIZE], len % PAGE_SIZE);
+    for layer in 0..N_LAYERS {
+        r.k.token_row_mut(layer, page, off).fill(step as f32);
+        r.v.token_row_mut(layer, page, off).fill(step as f32);
+        r.win.write_row(&mut r.k, &mut r.v, layer, page, off);
+    }
+    r.win.flush_rows(&r.k, &r.v);
+    r.mgr.note_assigned(1, 1).unwrap();
+}
+
+/// Front device contents == host window for every mapped page (the
+/// multiplexed path must produce correct device state for BOTH pools).
+fn assert_front_synced(r: &Rig, pipe: &TransferPipeline, pool: usize) {
+    let pe = PAGE_SIZE * N_KV_HEADS * D_HEAD;
+    let w = r.win.window_pages();
+    let len = r.mgr.seq_len(1).unwrap();
+    let table = r.mgr.table(1).unwrap();
+    let fk = pipe.front().k.contents().expect("front K resident");
+    for &p in table.blocks_covering(len + 1) {
+        let slot = r.win.slot(p).unwrap() as usize;
+        for layer in 0..N_LAYERS {
+            let off = (layer * w + slot) * pe;
+            assert_eq!(&fk[off..off + pe],
+                       r.win.k_page_slice(layer, slot as u32),
+                       "pool {pool}: shared-engine front diverged at \
+                        page {p} layer {layer}");
+        }
+    }
+}
+
+struct Measured {
+    step_ms: f64,
+    overlap_frac: f64,
+}
+
+/// Serialized per-pool baseline: each pool's upload stalls the engine
+/// thread inline, then its execute sleeps on top — pool after pool.
+fn run_serialized(seq_len: usize, steps: usize, upload_full: bool)
+                  -> Measured {
+    let mut rigs: Vec<Rig> =
+        (0..N_POOLS).map(|_| rig(seq_len, steps)).collect();
+    let mut devs: Vec<(DeviceWindow, DeviceWindow)> = (0..N_POOLS)
+        .map(|_| {
+            let mut kd = DeviceWindow::sim();
+            let mut vd = DeviceWindow::sim();
+            kd.set_sleep_scale(SLEEP_SCALE);
+            vd.set_sleep_scale(SLEEP_SCALE);
+            (kd, vd)
+        })
+        .collect();
+    let (exec, _) = execute_sleep(rigs[0].window_pages);
+
+    let mut t0 = Instant::now();
+    for step in 0..steps {
+        if step == 1 {
+            t0 = Instant::now(); // step 0 = cold full gathers
+        }
+        for (r, (kd, vd)) in rigs.iter_mut().zip(devs.iter_mut()) {
+            gather_pool(r);
+            let (plan, through) =
+                r.win.plan_for(kd.epoch().min(vd.epoch()), upload_full);
+            kd.apply_at(r.win.k_window(), &plan, through);
+            vd.apply_at(r.win.v_window(), &plan, through);
+            std::thread::sleep(exec);
+            scatter_pool(r, step);
+        }
+    }
+    let dt = t0.elapsed();
+    Measured {
+        step_ms: dt.as_secs_f64() * 1e3 / (steps - 1) as f64,
+        overlap_frac: 0.0,
+    }
+}
+
+/// Shared-engine run: both pools submit their staged uploads to ONE
+/// multiplexed worker, then the engine thread sleeps both executes —
+/// the worker interleaves the two lanes meanwhile.
+fn run_shared(seq_len: usize, steps: usize, upload_full: bool)
+              -> Measured {
+    let engine = CopyEngine::new(1);
+    let mut rigs: Vec<Rig> =
+        (0..N_POOLS).map(|_| rig(seq_len, steps)).collect();
+    let mut pipes: Vec<TransferPipeline> = (0..N_POOLS)
+        .map(|_| {
+            let mut p = TransferPipeline::sim_shared(&engine, true);
+            p.set_upload_full(upload_full);
+            p.front_mut().k.set_sleep_scale(SLEEP_SCALE);
+            p.front_mut().v.set_sleep_scale(SLEEP_SCALE);
+            p.back_mut().k.set_sleep_scale(SLEEP_SCALE);
+            p.back_mut().v.set_sleep_scale(SLEEP_SCALE);
+            p
+        })
+        .collect();
+    let (exec, exec_model_ns) = execute_sleep(rigs[0].window_pages);
+
+    let mut t0 = Instant::now();
+    for step in 0..steps {
+        if step == 1 {
+            t0 = Instant::now(); // step 0 = cold full gather + refill
+        }
+        // stage BOTH pools before either execute: the shared worker's
+        // round-robin lanes apply them under the sleeps below
+        for (r, pipe) in rigs.iter_mut().zip(pipes.iter_mut()) {
+            pipe.begin_step(&mut r.win);
+            gather_pool(r);
+            pipe.pre_execute(&mut r.win);
+        }
+        if step == steps - 1 {
+            for (pool, (r, pipe)) in
+                rigs.iter().zip(pipes.iter()).enumerate()
+            {
+                assert_front_synced(r, pipe, pool);
+            }
+        }
+        for _ in 0..N_POOLS {
+            std::thread::sleep(exec); // both uploads run meanwhile
+        }
+        for (r, pipe) in rigs.iter_mut().zip(pipes.iter_mut()) {
+            pipe.note_execute(exec_model_ns);
+            scatter_pool(r, step);
+        }
+    }
+    let dt = t0.elapsed();
+    for (pool, pipe) in pipes.iter().enumerate() {
+        assert_eq!(pipe.stats().poisons, 0,
+                   "pool {pool}: shared lane must survive the run");
+    }
+
+    let overlap = pipes
+        .iter()
+        .map(|p| p.stats().measured_overlap_fraction())
+        .sum::<f64>()
+        / N_POOLS as f64;
+    Measured {
+        step_ms: dt.as_secs_f64() * 1e3 / (steps - 1) as f64,
+        overlap_frac: overlap,
+    }
+}
+
+fn main() {
+    let seqs: &[usize] =
+        if quick() { &[512] } else { &[128, 512, 1024] };
+    let steps = if quick() { 16 } else { 32 };
+
+    let mut ok_at_512 = true;
+    for (mode, upload_full) in [("delta", false), ("full", true)] {
+        let mut rows = Vec::new();
+        for &seq in seqs {
+            let serial = run_serialized(seq, steps, upload_full);
+            let shared = run_shared(seq, steps, upload_full);
+            if seq >= 512 && shared.step_ms >= serial.step_ms {
+                ok_at_512 = false;
+            }
+            rows.push(vec![
+                seq.to_string(),
+                f(serial.step_ms, 2),
+                f(shared.step_ms, 2),
+                f(serial.step_ms - shared.step_ms, 2),
+                f(serial.step_ms / shared.step_ms.max(1e-9), 2),
+                f(100.0 * shared.overlap_frac, 0),
+            ]);
+        }
+        print_table(
+            &format!(
+                "MEASURED two-pool decode step: serialized per-pool \
+                 transfers vs shared multiplexed copy engine (upload \
+                 mode '{mode}', {N_POOLS} pool sets, wall clock)"
+            ),
+            &["seq", "serialized_ms", "shared_ms", "saved_ms",
+              "speedup", "meas_overlap_%"],
+            &rows,
+        );
+    }
+    println!("\nshape check: measured shared-engine two-pool step < \
+              serialized per-pool gather+upload+execute sum at seq ≥ \
+              512 (both upload modes): {}",
+             if ok_at_512 { "PASS" } else { "FAIL" });
+    if !ok_at_512 {
+        // regression guard: make CI's bench-smoke step go red
+        std::process::exit(1);
+    }
+}

@@ -124,6 +124,38 @@ impl UploadMode {
     }
 }
 
+/// Copy-engine topology: which worker stages pipelined KV uploads
+/// (DESIGN.md §10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CopyEngineCfg {
+    /// One dedicated transfer worker thread per pool set (the PR 4
+    /// topology; worker count scales with served models).
+    #[default]
+    PerPool,
+    /// Every pool set in the process shares one multiplexed copy
+    /// engine: tagged per-pool lanes with bounded backpressure,
+    /// round-robin fairness across pools, and per-pool poison
+    /// isolation — the multi-model serving topology.
+    Shared,
+}
+
+impl CopyEngineCfg {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CopyEngineCfg::PerPool => "per_pool",
+            CopyEngineCfg::Shared => "shared",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "per_pool" | "per-pool" => CopyEngineCfg::PerPool,
+            "shared" => CopyEngineCfg::Shared,
+            _ => bail!("unknown copy engine '{s}' (shared|per-pool)"),
+        })
+    }
+}
+
 /// Scheduler knobs (coordinator::scheduler).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulerConfig {
@@ -236,11 +268,18 @@ pub struct EngineConfig {
     /// (`--pipeline off`) runs the serial gather → upload → execute
     /// path; `per_bucket` layouts collapse to serial regardless.
     pub pipeline: bool,
-    /// Gather-shard width (DESIGN.md §9): the per-step pool→window
-    /// page memcpys run sharded by layer × slot-range across this many
-    /// scoped worker threads. 1 is the serial eager gather, bit for
+    /// Gather/scatter-shard width (DESIGN.md §9–10): the per-step
+    /// pool→window page memcpys AND the ASSIGN write-through row
+    /// memcpys run sharded by layer × slot-range across this many
+    /// scoped worker threads. 1 is the serial eager path, bit for
     /// bit. Default min(4, cores).
     pub copy_threads: usize,
+    /// Copy-engine topology (DESIGN.md §10): `per_pool` gives each
+    /// pool set its own transfer worker; `shared` multiplexes every
+    /// pool set through one process-wide engine (tagged lanes,
+    /// round-robin fairness, per-pool poison isolation) — the
+    /// multi-model serving setting.
+    pub copy_engine: CopyEngineCfg,
     pub scheduler: SchedulerConfig,
     /// Default sampling params (overridable per request).
     pub sampling: SamplingConfig,
@@ -268,6 +307,7 @@ impl Default for EngineConfig {
             window_upload: UploadMode::Delta,
             pipeline: true,
             copy_threads: default_copy_threads(),
+            copy_engine: CopyEngineCfg::default(),
             scheduler: SchedulerConfig::default(),
             sampling: SamplingConfig::default(),
         }
@@ -290,6 +330,7 @@ impl EngineConfig {
             ("window_upload", Value::str(self.window_upload.as_str())),
             ("pipeline", Value::Bool(self.pipeline)),
             ("copy_threads", Value::num(self.copy_threads as f64)),
+            ("copy_engine", Value::str(self.copy_engine.as_str())),
             ("scheduler", Value::obj(vec![
                 ("max_batch_size", Value::num(s.max_batch_size as f64)),
                 ("max_running_seqs", Value::num(s.max_running_seqs as f64)),
@@ -364,6 +405,10 @@ impl EngineConfig {
                 .map(|x| x.as_usize()).transpose()?
                 .unwrap_or(d.copy_threads)
                 .max(1),
+            copy_engine: v.opt("copy_engine")
+                .map(|x| x.as_str()).transpose()?
+                .map(CopyEngineCfg::from_str).transpose()?
+                .unwrap_or(d.copy_engine),
             scheduler: sched,
             sampling: match v.opt("sampling") {
                 Some(s) => SamplingConfig::from_json(s)?,
@@ -437,6 +482,20 @@ mod tests {
         assert!(EngineConfig::default().pipeline);
         let v = parse(r#"{"pipeline": false}"#).unwrap();
         assert!(!EngineConfig::from_json(&v).unwrap().pipeline);
+    }
+
+    #[test]
+    fn copy_engine_strings_and_default() {
+        assert_eq!(EngineConfig::default().copy_engine,
+                   CopyEngineCfg::PerPool);
+        assert_eq!(CopyEngineCfg::from_str("shared").unwrap(),
+                   CopyEngineCfg::Shared);
+        assert_eq!(CopyEngineCfg::from_str("per-pool").unwrap(),
+                   CopyEngineCfg::PerPool);
+        assert!(CopyEngineCfg::from_str("pooled").is_err());
+        let v = parse(r#"{"copy_engine": "shared"}"#).unwrap();
+        assert_eq!(EngineConfig::from_json(&v).unwrap().copy_engine,
+                   CopyEngineCfg::Shared);
     }
 
     #[test]

@@ -29,7 +29,8 @@ use crate::{bail, err};
 pub use contiguous::ContiguousEngine;
 pub use nocache::NoCacheEngine;
 pub use paged::{PagedEngine, SeqState};
-pub use pipeline::{DevicePair, PipelineStats, TransferPipeline};
+pub use pipeline::{CopySource, DevicePair, PipelineStats,
+                   TransferPipeline};
 pub use sampler::{argmax, log_prob, Sampler};
 
 pub struct Engine {
@@ -58,6 +59,7 @@ impl Engine {
                 pe.set_delta_transfer(cfg.window_delta);
                 pe.set_window_layout(cfg.window_layout);
                 pe.set_upload_mode(cfg.window_upload);
+                pe.set_copy_engine(cfg.copy_engine);
                 pe.set_pipeline(cfg.pipeline);
                 pe.set_copy_threads(cfg.copy_threads);
                 paged = Some(pe);

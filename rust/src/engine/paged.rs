@@ -30,8 +30,9 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::config::UploadMode;
-use crate::engine::pipeline::{PipelineStats, TransferPipeline};
+use crate::config::{CopyEngineCfg, UploadMode};
+use crate::engine::pipeline::{CopySource, PipelineStats,
+                              TransferPipeline};
 use crate::kvpage::{
     AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
     PoolGeometry, ResidentWindow, SeqId, WindowLayout, WindowStats,
@@ -167,12 +168,28 @@ impl PagedEngine {
         self.window.set_delta(enabled);
     }
 
-    /// Gather-shard width (`EngineConfig::copy_threads` /
-    /// `--copy-threads`): 1 runs the serial eager gather bit for bit;
-    /// > 1 defers the per-step page memcpys and flushes them sharded
-    /// by layer × slot-range on a scoped thread pool (DESIGN.md §9).
+    /// Gather/scatter-shard width (`EngineConfig::copy_threads` /
+    /// `--copy-threads`): 1 runs the serial eager paths bit for bit;
+    /// > 1 defers the per-step page memcpys AND the ASSIGN
+    /// write-through row memcpys, flushing both sharded by
+    /// layer × slot-range on a scoped thread pool (DESIGN.md §9–10).
     pub fn set_copy_threads(&mut self, n: usize) {
         self.window.set_copy_threads(n);
+    }
+
+    /// Copy-engine topology (`EngineConfig::copy_engine` /
+    /// `--copy-engine`): a dedicated transfer worker for this pool
+    /// set, or a tagged lane on the process-shared multiplexed engine
+    /// so several engines (multi-model serving) interleave their
+    /// staged uploads through one worker with round-robin fairness
+    /// and per-pool poison isolation (DESIGN.md §10).
+    pub fn set_copy_engine(&mut self, cfg: CopyEngineCfg) {
+        self.pipe.set_source(match cfg {
+            CopyEngineCfg::PerPool => CopySource::PerPool,
+            CopyEngineCfg::Shared => CopySource::Engine(
+                crate::runtime::CopyEngine::global().clone(),
+            ),
+        });
     }
 
     /// Window sizing policy (`EngineConfig::window_layout`). Takes
@@ -390,6 +407,10 @@ impl PagedEngine {
                 logits_rows[i * vocab..(i + 1) * vocab].to_vec();
             results.push((*id, finished, row));
         }
+        // threaded ASSIGN (--copy-threads > 1): the scatters above
+        // only queued the write-through row memcpys; run them now,
+        // sharded across the scoped pool. Serial mode: no-op.
+        self.window.flush_rows(&self.k_pool, &self.v_pool);
         Ok(results)
     }
 
@@ -447,6 +468,9 @@ impl PagedEngine {
                 logits_rows[i * vocab..(i + 1) * vocab].to_vec();
             results.push((*id, row));
         }
+        // threaded ASSIGN scatter flush (no-op at --copy-threads 1) —
+        // this was the last serial memcpy on the decode step
+        self.window.flush_rows(&self.k_pool, &self.v_pool);
         Ok(results)
     }
 

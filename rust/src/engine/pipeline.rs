@@ -48,10 +48,35 @@
 use std::time::Instant;
 
 use crate::kvpage::{ResidentWindow, StagedUpload, UploadPlan};
-use crate::runtime::{CopyJob, CopyStream, Fence, UploadStats};
+use crate::runtime::{CopyEngine, CopyJob, CopyStream, Fence,
+                     UploadStats};
 use crate::util::profile::{self, Phase};
 
 pub use crate::runtime::DevicePair;
+
+/// Where this pipeline's transfer worker comes from (`--copy-engine`,
+/// DESIGN.md §10): a dedicated thread per pool set, or a tagged lane
+/// on a shared multiplexed engine that interleaves every pool set's
+/// uploads round-robin (multi-model serving shares one transfer
+/// thread; a poison demotes only the poisoned pool to inline
+/// staging).
+#[derive(Clone, Default)]
+pub enum CopySource {
+    /// One dedicated transfer worker per pool set (PR 4 behaviour).
+    #[default]
+    PerPool,
+    /// A lane on the given shared multiplexed copy engine.
+    Engine(CopyEngine),
+}
+
+impl CopySource {
+    fn stream(&self) -> CopyStream {
+        match self {
+            CopySource::PerPool => CopyStream::spawn(),
+            CopySource::Engine(e) => e.stream(),
+        }
+    }
+}
 
 /// Cumulative pipeline counters. `staged_ns` / `overlap_ns` are the
 /// modeled column (offline benches); `measured_wall_ns` /
@@ -82,10 +107,14 @@ pub struct PipelineStats {
     pub collapses: u64,
     /// Staged uploads dropped by `drain` (preemption, pool-dry).
     pub drains: u64,
-    /// Copy-stream workers lost to a panic (each demotes staging to
-    /// the inline path; the device pair in flight is lost like a
-    /// dropped buffer).
+    /// Copy-stream workers (or shared-engine lanes) lost to a panic
+    /// (each demotes staging to the inline path; the device pair in
+    /// flight is lost like a dropped buffer).
     pub poisons: u64,
+    /// Peak outstanding jobs observed on this pool set's submit queue
+    /// — the per-pool backpressure ledger (`copy_queue_peak` CSV
+    /// column; reported as a level, not a delta).
+    pub queue_peak: u64,
     /// Most recent step's staged / tail / sync modeled ns.
     pub last_staged_ns: u64,
     pub last_tail_ns: u64,
@@ -196,6 +225,8 @@ pub struct TransferPipeline {
     /// Transfer worker; `None` after a poison (inline staging) or on
     /// the accounting-only PJRT backing (never stages).
     stream: Option<CopyStream>,
+    /// Worker topology fresh streams are built from (`--copy-engine`).
+    source: CopySource,
     kind: BackingKind,
     enabled: bool,
     /// `window_upload = full`: every plan and snapshot is whole-window.
@@ -222,12 +253,19 @@ pub struct TransferPipeline {
 
 impl TransferPipeline {
     /// Modeled-buffer backing (benches, proptests, offline runs) with
-    /// a live copy-stream worker: staging really runs off-thread. A
-    /// pipeline constructed disabled spawns no worker; `set_enabled`
-    /// starts one on demand.
+    /// a live dedicated copy-stream worker: staging really runs
+    /// off-thread. A pipeline constructed disabled spawns no worker;
+    /// `set_enabled` starts one on demand.
     pub fn sim(enabled: bool) -> Self {
+        Self::new(BackingKind::Sim, enabled, CopySource::PerPool)
+    }
+
+    /// Modeled-buffer backing staging through a lane on the given
+    /// shared multiplexed copy engine (`--copy-engine shared`,
+    /// DESIGN.md §10) instead of a dedicated worker.
+    pub fn sim_shared(engine: &CopyEngine, enabled: bool) -> Self {
         Self::new(BackingKind::Sim, enabled,
-                  enabled.then(CopyStream::spawn))
+                  CopySource::Engine(engine.clone()))
     }
 
     /// Accounting-only backing for the real PJRT 0.5.1 path: without
@@ -235,16 +273,19 @@ impl TransferPipeline {
     /// the pipeline never stages, every step runs serially, and no
     /// worker thread is spawned.
     pub fn pjrt(enabled: bool) -> Self {
-        Self::new(BackingKind::Pjrt, enabled, None)
+        Self::new(BackingKind::Pjrt, enabled, CopySource::PerPool)
     }
 
     fn new(kind: BackingKind, enabled: bool,
-           stream: Option<CopyStream>) -> Self {
+           source: CopySource) -> Self {
+        let stream = (enabled && kind == BackingKind::Sim)
+            .then(|| source.stream());
         TransferPipeline {
             front: kind.pair(),
             back: Some(kind.pair()),
             in_flight: None,
             stream,
+            source,
             kind,
             enabled,
             upload_full: false,
@@ -272,9 +313,27 @@ impl TransferPipeline {
             && self.kind == BackingKind::Sim
             && self.stats.poisons == 0
         {
-            self.stream = Some(CopyStream::spawn());
+            self.stream = Some(self.source.stream());
         }
         self.enabled = on;
+    }
+
+    /// Worker topology (`EngineConfig::copy_engine`): dedicated
+    /// per-pool worker vs a lane on a shared multiplexed engine.
+    /// Settles any in-flight transfer, retires the old worker/lane,
+    /// and (when enabled on a sim backing) opens a fresh one from the
+    /// new source — unless this pipeline was already poisoned, which
+    /// permanently demotes it to inline staging.
+    pub fn set_source(&mut self, source: CopySource) {
+        self.settle();
+        self.stream = None; // joins a dedicated worker / closes a lane
+        self.source = source;
+        if self.enabled
+            && self.kind == BackingKind::Sim
+            && self.stats.poisons == 0
+        {
+            self.stream = Some(self.source.stream());
+        }
     }
 
     pub fn enabled(&self) -> bool {
@@ -501,6 +560,13 @@ impl TransferPipeline {
                 Ok(fence) => {
                     self.in_flight = Some((fence, base));
                     self.staged = true;
+                    // per-pool backpressure ledger: peak outstanding
+                    // jobs, counting the one in service (levels > 1
+                    // mean the engine outran the transfer worker)
+                    self.stats.queue_peak = self
+                        .stats
+                        .queue_peak
+                        .max(stream.queue_peak());
                     self.stream = Some(stream);
                 }
                 Err(job) => {
@@ -612,6 +678,7 @@ impl TransferPipeline {
             collapses: s.collapses - r.collapses,
             drains: s.drains - r.drains,
             poisons: s.poisons - r.poisons,
+            queue_peak: s.queue_peak,
             last_staged_ns: s.last_staged_ns,
             last_tail_ns: s.last_tail_ns,
             last_sync_ns: s.last_sync_ns,
@@ -663,11 +730,15 @@ mod tests {
 
     impl Rig {
         fn new(enabled: bool) -> Self {
+            Self::with_pipe(TransferPipeline::sim(enabled))
+        }
+
+        fn with_pipe(pipe: TransferPipeline) -> Self {
             Rig {
                 k: HostPool::zeros(geo()),
                 v: HostPool::zeros(geo()),
                 win: ResidentWindow::new(geo()),
-                pipe: TransferPipeline::sim(enabled),
+                pipe,
                 counter: 0.0,
             }
         }
@@ -826,6 +897,76 @@ mod tests {
         r.step(&[0, 1], 8, "post-poison b");
         assert!(r.pipe.stats().staged_uploads > staged_before,
                 "staging continues inline after poison");
+    }
+
+    #[test]
+    fn shared_engine_pipeline_stages_like_a_dedicated_worker() {
+        let engine = CopyEngine::new(1);
+        let mut r =
+            Rig::with_pipe(TransferPipeline::sim_shared(&engine, true));
+        for i in 0..7 {
+            r.step(&[0, 1], 8, &format!("shared step {i}"));
+        }
+        let s = r.pipe.stats();
+        assert!(s.staged_uploads >= 6, "{s:?}");
+        assert!(s.measured_wall_ns > 0,
+                "staged uploads really ran on the shared worker: {s:?}");
+        assert!(s.queue_peak >= 1,
+                "per-pool queue accounting recorded the lane: {s:?}");
+        assert_eq!(s.poisons, 0);
+    }
+
+    #[test]
+    fn shared_engine_poison_demotes_one_pool_not_its_sibling() {
+        let engine = CopyEngine::new(1);
+        let mut a =
+            Rig::with_pipe(TransferPipeline::sim_shared(&engine, true));
+        let mut b =
+            Rig::with_pipe(TransferPipeline::sim_shared(&engine, true));
+        a.step(&[0, 1], 8, "a warm");
+        b.step(&[2, 3], 8, "b warm");
+        a.pipe.poison_stream_for_test();
+        for i in 0..10 {
+            a.step(&[0, 1], 8, &format!("a poison step {i}"));
+            b.step(&[2, 3], 8, &format!("b sibling step {i}"));
+            if a.pipe.stats().poisons > 0 {
+                break;
+            }
+        }
+        assert!(a.pipe.stats().poisons >= 1,
+                "lane poison must surface on pool A: {:?}",
+                a.pipe.stats());
+        // pool A keeps serving via inline staging...
+        let a_staged = a.pipe.stats().staged_uploads;
+        a.step(&[0, 1], 8, "a post-poison");
+        assert!(a.pipe.stats().staged_uploads > a_staged);
+        // ...while pool B never left the shared worker
+        let b_wall = b.pipe.stats().measured_wall_ns;
+        for i in 0..3 {
+            b.step(&[2, 3], 8, &format!("b live step {i}"));
+        }
+        assert_eq!(b.pipe.stats().poisons, 0,
+                   "sibling pool must not observe A's poison: {:?}",
+                   b.pipe.stats());
+        assert!(b.pipe.stats().measured_wall_ns > b_wall,
+                "sibling staging still runs on the shared worker");
+    }
+
+    #[test]
+    fn set_source_swaps_worker_topology_mid_run() {
+        let engine = CopyEngine::new(1);
+        let mut r = Rig::new(true); // dedicated worker first
+        r.step(&[0], 8, "dedicated a");
+        r.step(&[0], 8, "dedicated b");
+        r.pipe.set_source(CopySource::Engine(engine.clone()));
+        for i in 0..3 {
+            r.step(&[0], 8, &format!("shared step {i}"));
+        }
+        assert_eq!(r.pipe.stats().poisons, 0);
+        r.pipe.set_source(CopySource::PerPool);
+        r.step(&[0], 8, "back on dedicated");
+        assert!(r.pipe.stats().staged_uploads >= 5,
+                "staging survived both swaps: {:?}", r.pipe.stats());
     }
 
     #[test]

@@ -49,8 +49,12 @@
 //!   work and does the bookkeeping — and
 //!   [`ResidentWindow::flush_pending`] executes them sharded by
 //!   layer × slot-range across a small scoped thread pool
-//!   (DESIGN.md §9). `copy_threads = 1` is the serial eager path,
-//!   bit for bit.
+//!   (DESIGN.md §9). The ASSIGN write-through scatter threads the
+//!   same way: `write_row` queues the row memcpys (bookkeeping stays
+//!   inline, in call order) and [`ResidentWindow::flush_rows`] runs
+//!   them sharded by layer × slot-range after the step's scatter
+//!   (DESIGN.md §10). `copy_threads = 1` is the serial eager path,
+//!   bit for bit, for both.
 //! * Capture buffers (snapshot bytes, plan ranges, row tails) come
 //!   from a small **arena** and are donated back after use
 //!   ([`ResidentWindow::donate_capture`]), so steady-state decode
@@ -73,6 +77,12 @@ const ROW_TAIL_CAP: usize = 8192;
 /// copies; below it the scoped-thread spawn costs more than the
 /// memcpys it would split.
 const PAR_MIN_PAGES: usize = 8;
+
+/// Deferred-scatter flush runs sharded only from this many queued
+/// write-through rows (the scatter-shard floor, DESIGN.md §10). Rows
+/// are one token wide, so the spawn-cost bar sits at batch × layers
+/// of a small decode batch.
+const PAR_MIN_ROWS: usize = 8;
 
 /// Arena depth for recycled capture buffers (two staged snapshots plus
 /// slack; deeper bins would just pin memory).
@@ -160,6 +170,23 @@ pub struct WindowStats {
     pub last_pages_copied: u64,
     /// Bytes moved by the most recent step only (incl. write-through).
     pub last_bytes_moved: u64,
+    /// Fresh heap capacity acquired by the most recent step only —
+    /// the per-step value the `alloc_bytes_per_step` CSV column
+    /// reports (the cumulative counter above feeds run totals; this
+    /// one resets every `begin_step`, so a warm arena reads exactly 0
+    /// per steady decode step, as the DESIGN.md §9 audit claims).
+    pub last_alloc_bytes: u64,
+}
+
+/// One deferred write-through row copy. (layer, slot) locate the
+/// flush shard; the pool row is re-read at flush time, when its bytes
+/// are final for the step (the engine writes each position once per
+/// step, and bookkeeping already ran inline at `write_row` time).
+struct RowCopy {
+    layer: usize,
+    page: u32,
+    slot: u32,
+    slot_in_page: usize,
 }
 
 /// Stable-slot window allocator + resident K/V scratch buffers.
@@ -206,6 +233,9 @@ pub struct ResidentWindow {
     copy_threads: usize,
     /// (page, slot) copies queued by `map_page` in deferred mode.
     pending: Vec<(u32, u32)>,
+    /// Write-through row memcpys queued by `write_row` in deferred
+    /// mode (the threaded ASSIGN scatter, DESIGN.md §10).
+    pending_rows: Vec<RowCopy>,
     /// Recycled capture buffers (snapshot bytes / plan ranges).
     f32_bin: Vec<Vec<f32>>,
     range_bin: Vec<Vec<(usize, usize)>>,
@@ -238,6 +268,7 @@ impl ResidentWindow {
             rows_clean: false,
             copy_threads: 1,
             pending: Vec::new(),
+            pending_rows: Vec::new(),
             f32_bin: Vec::new(),
             range_bin: Vec::new(),
             k_win: Vec::new(),
@@ -306,18 +337,20 @@ impl ResidentWindow {
     /// otherwise keeps slots and contents and lets `map_page` copy only
     /// what moved.
     pub fn begin_step(&mut self, window_pages: usize) {
-        if !self.pending.is_empty() {
-            // a deferred gather was queued but never flushed (the
-            // caller errored out mid-step): those slots' window bytes
-            // are stale, so drop residency and rebuild below — the
-            // same recovery as buffer loss
+        if !self.pending.is_empty() || !self.pending_rows.is_empty() {
+            // a deferred gather or scatter was queued but never
+            // flushed (the caller errored out mid-step): those slots'
+            // window bytes are stale, so drop residency and rebuild
+            // below — the same recovery as buffer loss
             self.pending.clear();
+            self.pending_rows.clear();
             self.valid = false;
         }
         self.step += 1;
         self.stats.steps += 1;
         self.stats.last_pages_copied = 0;
         self.stats.last_bytes_moved = 0;
+        self.stats.last_alloc_bytes = 0;
         self.mapped_this_step = 0;
         let elems =
             self.geo.n_layers * window_pages * self.geo.page_elems();
@@ -498,6 +531,125 @@ impl ResidentWindow {
         });
     }
 
+    /// Execute the write-through row memcpys `write_row` deferred this
+    /// step — serially below [`PAR_MIN_ROWS`] rows, otherwise sharded
+    /// by layer × slot-range across the scoped `copy_threads` pool
+    /// (DESIGN.md §10). No-op in serial mode or when nothing was
+    /// queued. Must run after the step's scatter and before any
+    /// capture.
+    pub fn flush_rows(&mut self, k: &HostPool, v: &HostPool) {
+        if self.pending_rows.is_empty() {
+            return;
+        }
+        let _p = profile::span(Phase::ScatterFlush);
+        let mut rows = std::mem::take(&mut self.pending_rows);
+        if self.copy_threads <= 1 || rows.len() < PAR_MIN_ROWS {
+            // order is irrelevant: rows copy disjoint destinations
+            // from pool bytes that are final for the step
+            for r in &rows {
+                self.copy_row_bytes(k, v, r);
+            }
+        } else {
+            // the sharded cut binary-searches sorted (layer, slot)
+            rows.sort_unstable_by_key(|r| (r.layer, r.slot));
+            self.flush_rows_sharded(k, v, &rows);
+        }
+        rows.clear();
+        self.pending_rows = rows; // recycle the row list's allocation
+    }
+
+    /// The memcpy half of one write-through row (both pools).
+    fn copy_row_bytes(&mut self, k: &HostPool, v: &HostPool,
+                      r: &RowCopy) {
+        let te = self.geo.token_elems();
+        let dst = (r.layer * self.window_pages + r.slot as usize)
+            * self.geo.page_elems()
+            + r.slot_in_page * te;
+        self.k_win[dst..dst + te].copy_from_slice(
+            k.gather_token(r.layer, r.page, r.slot_in_page),
+        );
+        self.v_win[dst..dst + te].copy_from_slice(
+            v.gather_token(r.layer, r.page, r.slot_in_page),
+        );
+    }
+
+    /// Sharded row flush: the same disjoint layer × slot-range cuts
+    /// of the window buffers as [`ResidentWindow::flush_sharded`],
+    /// but rows carry their layer, so the cut is keyed on
+    /// (layer, slot) instead of slot alone.
+    fn flush_rows_sharded(&mut self, kp: &HostPool, vp: &HostPool,
+                          rows: &[RowCopy]) {
+        let pe = self.geo.page_elems();
+        let te = self.geo.token_elems();
+        let w = self.window_pages;
+        let layers = self.geo.n_layers;
+        let threads = self.copy_threads;
+        let ranges_per_layer =
+            threads.div_ceil(layers).min(w.max(1)).max(1);
+        let slots_per_range = w.div_ceil(ranges_per_layer);
+        let range_elems = slots_per_range * pe;
+
+        struct Shard<'a> {
+            base_slot: usize,
+            k_dst: &'a mut [f32],
+            v_dst: &'a mut [f32],
+            rows: &'a [RowCopy],
+        }
+        let mut shards: Vec<Shard> =
+            Vec::with_capacity(layers * ranges_per_layer);
+        let k_layers = self.k_win.chunks_mut(w * pe);
+        let v_layers = self.v_win.chunks_mut(w * pe);
+        for (layer, (k_layer, v_layer)) in
+            k_layers.zip(v_layers).enumerate()
+        {
+            let subs = k_layer
+                .chunks_mut(range_elems)
+                .zip(v_layer.chunks_mut(range_elems));
+            for (i, (k_dst, v_dst)) in subs.enumerate() {
+                let base_slot = i * slots_per_range;
+                // rows are sorted by (layer, slot): binary-search the
+                // (layer, slot-range) cut
+                let lo = rows.partition_point(|r| {
+                    (r.layer, r.slot as usize) < (layer, base_slot)
+                });
+                let hi = rows.partition_point(|r| {
+                    (r.layer, r.slot as usize)
+                        < (layer, base_slot + slots_per_range)
+                });
+                if lo < hi {
+                    shards.push(Shard {
+                        base_slot,
+                        k_dst,
+                        v_dst,
+                        rows: &rows[lo..hi],
+                    });
+                }
+            }
+        }
+        let per_worker = shards.len().div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            for chunk in shards.chunks_mut(per_worker) {
+                scope.spawn(move || {
+                    for sh in chunk.iter_mut() {
+                        for r in sh.rows {
+                            let dst = (r.slot as usize - sh.base_slot)
+                                * pe
+                                + r.slot_in_page * te;
+                            sh.k_dst[dst..dst + te].copy_from_slice(
+                                kp.gather_token(r.layer, r.page,
+                                                r.slot_in_page),
+                            );
+                            sh.v_dst[dst..dst + te].copy_from_slice(
+                                vp.gather_token(r.layer, r.page,
+                                                r.slot_in_page),
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+
     /// Victim selection is O(1) amortized: a free-list pop when a slot
     /// is free; otherwise a clock hand that skips mapped-this-step
     /// slots. The `mapped_this_step` counter makes the pathological
@@ -602,10 +754,25 @@ impl ResidentWindow {
         let dst = (layer * self.window_pages + slot as usize)
             * self.geo.page_elems()
             + slot_in_page * te;
-        self.k_win[dst..dst + te]
-            .copy_from_slice(k.gather_token(layer, page, slot_in_page));
-        self.v_win[dst..dst + te]
-            .copy_from_slice(v.gather_token(layer, page, slot_in_page));
+        if self.copy_threads > 1 {
+            // deferred mode: bookkeeping below runs now, in call
+            // order (identical decisions to the serial path); only
+            // the memcpy waits for flush_rows, when the pool row's
+            // bytes are final for the step
+            self.pending_rows.push(RowCopy {
+                layer,
+                page,
+                slot,
+                slot_in_page,
+            });
+        } else {
+            self.k_win[dst..dst + te].copy_from_slice(
+                k.gather_token(layer, page, slot_in_page),
+            );
+            self.v_win[dst..dst + te].copy_from_slice(
+                v.gather_token(layer, page, slot_in_page),
+            );
+        }
         k.clear_dirty(page);
         v.clear_dirty(page);
         self.slot_epoch[slot as usize] = self.epoch;
@@ -674,12 +841,15 @@ impl ResidentWindow {
         }
     }
 
-    /// Charge fresh heap capacity acquired on the hot path.
+    /// Charge fresh heap capacity acquired on the hot path (the
+    /// cumulative run total AND the per-step column, which
+    /// `begin_step` resets).
     fn note_alloc(&mut self, before_cap: usize, after_cap: usize,
                   elem_bytes: usize) {
         if after_cap > before_cap {
-            self.stats.alloc_bytes +=
-                ((after_cap - before_cap) * elem_bytes) as u64;
+            let bytes = ((after_cap - before_cap) * elem_bytes) as u64;
+            self.stats.alloc_bytes += bytes;
+            self.stats.last_alloc_bytes += bytes;
         }
     }
 
@@ -744,9 +914,10 @@ impl ResidentWindow {
     /// different epochs can each take their own plan.
     pub fn plan_for(&mut self, dev_epoch: u64, force_full: bool)
                     -> (UploadPlan, u64) {
-        assert!(self.pending.is_empty(),
-                "capture before flush_pending: deferred gather bytes \
-                 would be missing from the plan");
+        assert!(self.pending.is_empty() && self.pending_rows.is_empty(),
+                "capture before flush_pending/flush_rows: deferred \
+                 gather or scatter bytes would be missing from the \
+                 plan");
         let plan = if self.needs_full(dev_epoch, force_full) {
             UploadPlan::Full
         } else {
@@ -760,9 +931,9 @@ impl ResidentWindow {
     /// in flight while the scatter keeps writing (DESIGN.md §8).
     pub fn snapshot_for(&mut self, dev_epoch: u64, force_full: bool)
                         -> StagedUpload {
-        assert!(self.pending.is_empty(),
-                "capture before flush_pending: deferred gather bytes \
-                 would be snapshotted stale");
+        assert!(self.pending.is_empty() && self.pending_rows.is_empty(),
+                "capture before flush_pending/flush_rows: deferred \
+                 gather or scatter bytes would be snapshotted stale");
         let mut k_data = self.grab_f32();
         let mut v_data = self.grab_f32();
         let caps = (k_data.capacity(), v_data.capacity());
@@ -800,12 +971,13 @@ impl ResidentWindow {
     /// always sound; the pending writes stay pending.
     pub fn take_row_tail(&mut self)
                          -> Option<(Vec<(usize, usize)>, u64)> {
-        if !self.pending.is_empty() {
-            // unflushed deferred gather (an aborted step): the window
-            // bytes behind the logged rows are not trustworthy — fall
-            // back to slot-granular plans; the next begin_step
-            // rebuilds (this boundary runs BEFORE the engine reopens
-            // the window step, so it must degrade, not assert)
+        if !self.pending.is_empty() || !self.pending_rows.is_empty() {
+            // unflushed deferred gather or scatter (an aborted step):
+            // the window bytes behind the logged rows are not
+            // trustworthy — fall back to slot-granular plans; the
+            // next begin_step rebuilds (this boundary runs BEFORE the
+            // engine reopens the window step, so it must degrade, not
+            // assert)
             return None;
         }
         if !self.delta_enabled || !self.rows_clean {
@@ -819,8 +991,8 @@ impl ResidentWindow {
     /// Move the K/V buffers out (zero-copy hand-off to the input
     /// tensors). Residency is invalid until `restore_buffers`.
     pub fn take_buffers(&mut self) -> (Vec<f32>, Vec<f32>) {
-        assert!(self.pending.is_empty(),
-                "take_buffers before flush_pending");
+        assert!(self.pending.is_empty() && self.pending_rows.is_empty(),
+                "take_buffers before flush_pending/flush_rows");
         self.valid = false;
         (std::mem::take(&mut self.k_win), std::mem::take(&mut self.v_win))
     }
@@ -892,6 +1064,7 @@ impl ResidentWindow {
                 - self.reported.alloc_bytes,
             last_pages_copied: self.stats.last_pages_copied,
             last_bytes_moved: self.stats.last_bytes_moved,
+            last_alloc_bytes: self.stats.last_alloc_bytes,
         };
         self.reported = self.stats;
         d
@@ -1351,6 +1524,138 @@ mod tests {
             }
             w.donate_capture(snap.k_data, snap.v_data, snap.ranges);
         }
+    }
+
+    /// Deferred + sharded write-through scatter fills the window
+    /// exactly like the eager serial path: same window bytes, same
+    /// counters, same row-tail ranges — the scatter-shard mirror of
+    /// `sharded_flush_matches_eager_gather` (DESIGN.md §10).
+    #[test]
+    fn sharded_row_flush_matches_eager_scatter() {
+        let (mut ks, mut vs) = pools(); // serial replica pools
+        let (mut kt, mut vt) = pools(); // threaded replica pools
+        let mut serial = ResidentWindow::new(geo());
+        let mut threaded = ResidentWindow::new(geo());
+        threaded.set_copy_threads(4);
+
+        let g = geo();
+        for w in [&mut serial, &mut threaded] {
+            w.begin_step(8);
+        }
+        for p in 0..3u32 {
+            serial.map_page(&mut ks, &mut vs, p).unwrap();
+            threaded.map_page(&mut kt, &mut vt, p).unwrap();
+        }
+        threaded.flush_pending(&kt, &vt);
+        // discharge the full upload so the row tail is observable
+        let (_, es) = serial.plan_for(0, false);
+        let (_, et) = threaded.plan_for(0, false);
+
+        // scatter 3 pages × page_size rows × layers ≥ PAR_MIN_ROWS,
+        // identical values into both replicas
+        let mut c = 0.0f32;
+        for p in 0..3u32 {
+            for s in 0..g.page_size {
+                for layer in 0..g.n_layers {
+                    c += 1.0;
+                    ks.token_row_mut(layer, p, s).fill(c);
+                    vs.token_row_mut(layer, p, s).fill(-c);
+                    kt.token_row_mut(layer, p, s).fill(c);
+                    vt.token_row_mut(layer, p, s).fill(-c);
+                    serial.write_row(&mut ks, &mut vs, layer, p, s);
+                    threaded.write_row(&mut kt, &mut vt, layer, p, s);
+                }
+            }
+        }
+        assert_eq!(threaded.stats().rows_written,
+                   serial.stats().rows_written,
+                   "bookkeeping runs inline in both modes");
+        threaded.flush_rows(&kt, &vt);
+        for p in 0..3u32 {
+            assert_synced(&serial, &ks, &vs, p);
+            assert_synced(&threaded, &kt, &vt, p);
+        }
+        assert_eq!(threaded.k_window(), serial.k_window(),
+                   "sharded scatter must be bit-for-bit");
+        assert_eq!(threaded.v_window(), serial.v_window());
+        let (rs, _) = serial.take_row_tail().expect("serial tail");
+        let (rt, _) = threaded.take_row_tail().expect("threaded tail");
+        assert_eq!(rs, rt, "row tails logged in identical order");
+        // plans against the pre-scatter epochs agree too
+        serial.donate_ranges(rs);
+        threaded.donate_ranges(rt);
+        let (ps, _) = serial.plan_for(es, false);
+        let (pt, _) = threaded.plan_for(et, false);
+        assert_eq!(ps, pt);
+    }
+
+    /// An unflushed deferred scatter (caller errored between the
+    /// scatter and flush_rows) must not leave stale window bytes
+    /// behind: the next step rebuilds, and the pre-rebuild capture
+    /// boundary degrades instead of asserting.
+    #[test]
+    fn unflushed_pending_rows_force_rebuild() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.set_copy_threads(2);
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        w.flush_pending(&k, &v);
+        k.token_row_mut(0, 0, 1).fill(9.0);
+        w.write_row(&mut k, &mut v, 0, 0, 1);
+        // no flush_rows — simulate an aborted step: the stage
+        // boundary that runs before the step reopens must degrade
+        assert!(w.take_row_tail().is_none(),
+                "unflushed scatter rows cannot ride a row tail");
+        w.begin_step(8);
+        assert!(w.is_full_step(),
+                "stale deferred scatter must drop residency");
+        w.map_page(&mut k, &mut v, 0).unwrap();
+        w.flush_pending(&k, &v);
+        assert_synced(&w, &k, &v, 0);
+    }
+
+    /// The per-step allocation column resets every step: a warm
+    /// arena reads exactly 0 for the step, while the cumulative
+    /// counter keeps the run total (the DESIGN.md §9 audit fix).
+    #[test]
+    fn alloc_bytes_per_step_resets_each_step() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        let mut dev_epoch = 0u64;
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 3).unwrap();
+        let snap = w.snapshot_for(dev_epoch, false);
+        dev_epoch = snap.through;
+        assert!(w.stats().last_alloc_bytes > 0,
+                "cold capture must charge the step");
+        assert_eq!(w.stats().alloc_bytes, w.stats().last_alloc_bytes);
+        w.donate_capture(snap.k_data, snap.v_data, snap.ranges);
+        // two warm-up rounds: the first delta capture still grows its
+        // fresh range list (the full snapshot donated none)
+        for round in 0..2u32 {
+            fill_page(&mut k, 3, round as f32);
+            w.begin_step(8);
+            assert_eq!(w.stats().last_alloc_bytes, 0,
+                       "begin_step resets the per-step column");
+            w.map_page(&mut k, &mut v, 3).unwrap();
+            let s = w.snapshot_for(dev_epoch, false);
+            dev_epoch = s.through;
+            w.donate_capture(s.k_data, s.v_data, s.ranges);
+        }
+        let total_after_warmup = w.stats().alloc_bytes;
+        for round in 0..4u32 {
+            fill_page(&mut k, 3, 10.0 + round as f32);
+            w.begin_step(8);
+            w.map_page(&mut k, &mut v, 3).unwrap();
+            let s = w.snapshot_for(dev_epoch, false);
+            dev_epoch = s.through;
+            assert_eq!(w.stats().last_alloc_bytes, 0,
+                       "warm captures allocate nothing this step");
+            w.donate_capture(s.k_data, s.v_data, s.ranges);
+        }
+        assert_eq!(w.stats().alloc_bytes, total_after_warmup,
+                   "cumulative total keeps the run history");
     }
 
     #[test]

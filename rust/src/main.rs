@@ -14,7 +14,8 @@
 //!   --growth exact|power_of_two   --no-prefix-cache
 //!   --no-window-delta   --window-layout fixed|per_bucket
 //!   --window-upload delta|full   --pipeline on|off
-//!   --copy-threads N   --max-batch N --prefill-chunk N
+//!   --copy-threads N   --copy-engine shared|per-pool
+//!   --max-batch N --prefill-chunk N
 //!   --config FILE.json
 //! ```
 
@@ -78,8 +79,12 @@ fn print_help() {
              whole window)\n\
            --pipeline on|off (overlap next step's KV upload with the\n\
              current execute; off = serial transfer)\n\
-           --copy-threads N (shard the KV-window gather across N\n\
-             threads; 1 = serial, default min(4, cores))\n\
+           --copy-threads N (shard the KV-window gather and ASSIGN\n\
+             scatter across N threads; 1 = serial, default\n\
+             min(4, cores))\n\
+           --copy-engine shared|per-pool (one multiplexed transfer\n\
+             worker shared by every pool set, or a dedicated worker\n\
+             per pool set; default per-pool)\n\
            --max-batch N --prefill-chunk N --config FILE.json"
     );
 }
@@ -166,6 +171,9 @@ impl Flags {
                 .parse::<usize>()
                 .map_err(|_| err!("bad --copy-threads {n}"))?
                 .max(1);
+        }
+        if let Some(e) = self.get("copy-engine") {
+            cfg.copy_engine = config::CopyEngineCfg::from_str(e)?;
         }
         if let Some(b) = self.get("max-batch") {
             cfg.scheduler.max_batch_size =

@@ -138,6 +138,11 @@ pub struct ServingMetrics {
     /// — ~0 per steady decode step once the arena is warm
     /// (DESIGN.md §9).
     pub alloc_bytes: AtomicU64,
+    /// Fresh heap capacity the most recent step acquired — the
+    /// per-step value the `alloc_bytes_per_step` CSV column reports
+    /// (exactly 0 once the arena is warm; the cumulative counter
+    /// above keeps the run total).
+    pub alloc_bytes_last_step: AtomicU64,
     /// Bytes pushed host→device into the persistent window buffers
     /// (delta ranges + full-upload fallbacks; K and V together) —
     /// DESIGN.md §6.
@@ -166,8 +171,12 @@ pub struct ServingMetrics {
     pub pipeline_measured_wall_ns: AtomicU64,
     /// Wall ns the engine thread spent blocked on copy fences.
     pub pipeline_measured_wait_ns: AtomicU64,
-    /// Copy-stream workers lost to a panic (staging demoted inline).
+    /// Copy-stream workers (or shared-engine lanes) lost to a panic
+    /// (staging demoted inline).
     pub pipeline_poisons: AtomicU64,
+    /// Peak outstanding jobs on this pool set's copy-engine submit
+    /// queue (per-pool backpressure ledger, DESIGN.md §10).
+    pub pipeline_queue_peak: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -187,6 +196,9 @@ impl ServingMetrics {
         Self::inc(&self.window_rows_written, d.rows_written);
         Self::inc(&self.window_full_gathers, d.full_gathers);
         Self::inc(&self.alloc_bytes, d.alloc_bytes);
+        // a level, not a delta: the latest step's fresh allocation
+        self.alloc_bytes_last_step
+            .store(d.last_alloc_bytes, Ordering::Relaxed);
     }
 
     /// Merge a device-upload delta (`PagedEngine::take_upload_delta`).
@@ -207,6 +219,9 @@ impl ServingMetrics {
         Self::inc(&self.pipeline_measured_wall_ns, d.measured_wall_ns);
         Self::inc(&self.pipeline_measured_wait_ns, d.measured_wait_ns);
         Self::inc(&self.pipeline_poisons, d.poisons);
+        // a high-water level, not a delta
+        self.pipeline_queue_peak
+            .fetch_max(d.queue_peak, Ordering::Relaxed);
     }
 
     /// Fraction of modeled staged-transfer time hidden under execute
@@ -233,15 +248,25 @@ impl ServingMetrics {
         wall.saturating_sub(wait) as f64 / wall as f64
     }
 
-    /// Mean bytes of fresh heap capacity acquired per recorded decode
-    /// step (the hot-path allocation audit; ~0 once the capture arena
-    /// is warm).
-    pub fn alloc_bytes_per_decode_step(&self) -> f64 {
+    /// Fresh heap capacity the most recent step acquired (the
+    /// hot-path allocation audit, per-step semantics: exactly 0 once
+    /// the capture arena is warm — the cumulative mean the column
+    /// reported before PR 5 never decayed past warm-up spikes).
+    pub fn alloc_bytes_per_step(&self) -> u64 {
+        self.alloc_bytes_last_step.load(Ordering::Relaxed)
+    }
+
+    /// Mean wall ms per recorded decode step the engine thread spent
+    /// blocked on copy-engine fences (per-pool fence-wait ledger; ~0
+    /// when transfers finish under the previous execute).
+    pub fn fence_wait_ms_per_step(&self) -> f64 {
         let steps = self.decode_step.count();
         if steps == 0 {
             return 0.0;
         }
-        self.alloc_bytes.load(Ordering::Relaxed) as f64 / steps as f64
+        self.pipeline_measured_wait_ns.load(Ordering::Relaxed) as f64
+            / steps as f64
+            / 1e6
     }
 
     /// Mean bytes the host gather memcpy moved into the KV window per
@@ -290,11 +315,12 @@ impl ServingMetrics {
              prefix cache: hits={} cached_tokens={}\n\
              kv window: pages_copied={} rows_written={} \
              full_gathers={} ({:.1} KB/decode step, \
-             alloc {:.0} B/step)\n\
+             alloc {} B/step)\n\
              kv upload: delta={} full={} ranges={} \
              ({:.1} KB/decode step)\n\
              kv pipeline: staged={} collapses={} drains={} \
-             poisons={} overlap={:.0}% measured={:.0}%\n\
+             poisons={} queue_peak={} overlap={:.0}% \
+             measured={:.0}% fence_wait={:.3} ms/step\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -311,7 +337,7 @@ impl ServingMetrics {
             self.window_rows_written.load(Ordering::Relaxed),
             self.window_full_gathers.load(Ordering::Relaxed),
             self.window_bytes_per_decode_step() / 1e3,
-            self.alloc_bytes_per_decode_step(),
+            self.alloc_bytes_per_step(),
             self.upload_delta.load(Ordering::Relaxed),
             self.upload_full.load(Ordering::Relaxed),
             self.upload_ranges.load(Ordering::Relaxed),
@@ -320,8 +346,10 @@ impl ServingMetrics {
             self.pipeline_collapses.load(Ordering::Relaxed),
             self.pipeline_drains.load(Ordering::Relaxed),
             self.pipeline_poisons.load(Ordering::Relaxed),
+            self.pipeline_queue_peak.load(Ordering::Relaxed),
             100.0 * self.pipeline_overlap_fraction(),
             100.0 * self.measured_overlap_fraction(),
+            self.fence_wait_ms_per_step(),
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -384,9 +412,13 @@ const CSV_COLUMNS: &[CsvCol] = &[
     ("pipeline_overlap_frac",
      |m| format!("{:.3}", m.pipeline_overlap_fraction())),
     ("alloc_bytes_per_step",
-     |m| format!("{:.0}", m.alloc_bytes_per_decode_step())),
+     |m| m.alloc_bytes_per_step().to_string()),
     ("measured_overlap_frac",
      |m| format!("{:.3}", m.measured_overlap_fraction())),
+    ("copy_queue_peak",
+     |m| m.pipeline_queue_peak.load(Ordering::Relaxed).to_string()),
+    ("fence_wait_ms_per_step",
+     |m| format!("{:.4}", m.fence_wait_ms_per_step())),
 ];
 
 /// Scoped timer recording into a histogram on drop.
@@ -467,6 +499,7 @@ mod tests {
             rows_written: 5,
             full_gathers: 1,
             alloc_bytes: 128,
+            last_alloc_bytes: 96,
             ..Default::default()
         };
         m.note_window(&d);
@@ -474,10 +507,20 @@ mod tests {
         m.decode_step.record(Duration::from_millis(1));
         m.decode_step.record(Duration::from_millis(1));
         assert_eq!(m.window_bytes_per_decode_step(), 2048.0);
+        assert_eq!(m.alloc_bytes_per_step(), 96,
+                   "the column reports the latest step, not a \
+                    cumulative mean");
         let s = m.summary();
         assert!(s.contains("pages_copied=3"), "{s}");
         assert!(s.contains("full_gathers=1"), "{s}");
-        assert!(m.csv_row().ends_with("2048,0,0.000,64,0.000"),
+        assert!(s.contains("alloc 96 B/step"), "{s}");
+        // a warm follow-up step resets the per-step column even
+        // though the cumulative total stands
+        m.note_window(&WindowStats { steps: 1, ..Default::default() });
+        assert_eq!(m.alloc_bytes_per_step(), 0,
+                   "warm step must read 0, not the warm-up residue");
+        assert_eq!(m.alloc_bytes.load(Ordering::Relaxed), 128);
+        assert!(m.csv_row().ends_with("2048,0,0.000,0,0.000,0,0.0000"),
                 "{}", m.csv_row());
     }
 
@@ -498,7 +541,7 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("delta=3"), "{s}");
         assert!(s.contains("ranges=9"), "{s}");
-        assert!(m.csv_row().ends_with("4096,0.000,0,0.000"),
+        assert!(m.csv_row().ends_with("4096,0.000,0,0.000,0,0.0000"),
                 "{}", m.csv_row());
     }
 
@@ -518,17 +561,26 @@ mod tests {
             collapses: 1,
             drains: 2,
             poisons: 1,
+            queue_peak: 2,
             ..Default::default()
         };
         m.note_pipeline(&d);
         assert_eq!(m.pipeline_overlap_fraction(), 0.75);
         assert_eq!(m.measured_overlap_fraction(), 0.75);
+        // queue peak is a high-water mark: a later, lower level must
+        // not shrink it
+        m.note_pipeline(&PipelineStats {
+            queue_peak: 1,
+            ..Default::default()
+        });
+        assert_eq!(m.pipeline_queue_peak.load(Ordering::Relaxed), 2);
         let s = m.summary();
         assert!(s.contains("staged=4"), "{s}");
         assert!(s.contains("poisons=1"), "{s}");
+        assert!(s.contains("queue_peak=2"), "{s}");
         assert!(s.contains("overlap=75%"), "{s}");
         assert!(s.contains("measured=75%"), "{s}");
-        assert!(m.csv_row().ends_with("0.750,0,0.750"),
+        assert!(m.csv_row().ends_with("0.750,0,0.750,2,0.0000"),
                 "{}", m.csv_row());
     }
 
@@ -550,7 +602,8 @@ mod tests {
                     "column {name} renders non-numeric '{field}'");
         }
         for name in ["alloc_bytes_per_step", "measured_overlap_frac",
-                     "pipeline_overlap_frac"] {
+                     "pipeline_overlap_frac", "copy_queue_peak",
+                     "fence_wait_ms_per_step"] {
             assert!(header.contains(&name), "missing column {name}");
         }
     }

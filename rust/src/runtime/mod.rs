@@ -28,8 +28,8 @@ use crate::model::{ArtifactSpec, ConfigEntry, Manifest};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
 
-pub use copy_stream::{CopyDone, CopyJob, CopyStream, DevicePair, Fence,
-                      Poisoned};
+pub use copy_stream::{CopyDone, CopyEngine, CopyJob, CopyStream,
+                      DevicePair, Fence, Poisoned};
 pub use device_window::{DeviceWindow, UploadStats};
 pub use tensor::HostTensor;
 

@@ -42,14 +42,17 @@ pub enum Phase {
     /// deferred window-gather flush: the sharded pool→window memcpys
     /// (`ResidentWindow::flush_pending`, `--copy-threads`)
     GatherFlush = 10,
+    /// deferred ASSIGN-scatter flush: the sharded write-through row
+    /// memcpys (`ResidentWindow::flush_rows`, DESIGN.md §10)
+    ScatterFlush = 11,
 }
 
-const N: usize = 11;
+const N: usize = 12;
 const NAMES: [&str; N] = ["subpool_gather", "upload", "execute",
                           "download", "scatter", "window_delta",
                           "upload_delta", "upload_full",
                           "pipeline_overlap", "fence_wait",
-                          "gather_flush"];
+                          "gather_flush", "scatter_flush"];
 
 static NANOS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
 static COUNTS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];

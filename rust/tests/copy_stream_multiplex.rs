@@ -1,0 +1,559 @@
+//! Cross-pool stress & conformance suite for the shared multiplexed
+//! copy engine (DESIGN.md §10).
+//!
+//! Randomized interleavings of 2–4 **independent pool sets** — each a
+//! full kvpage state machine (manager, pools, resident window) with
+//! its own admit/extend/decode/preempt/fork/buffer-loss traffic — all
+//! submitting staged uploads through ONE shared [`CopyEngine`]. Every
+//! pool set runs TWO replicas through the identical op sequence:
+//!
+//! * the **shared** replica stages through a tagged lane on the
+//!   common engine (`TransferPipeline::sim_shared`);
+//! * the **dedicated** replica stages through its own per-pool worker
+//!   (`TransferPipeline::sim`, the PR 4 topology).
+//!
+//! At every execute boundary, each replica's FRONT device pair must be
+//! element-identical to its pool for every mapped page, and — since
+//! the replicas evolve through the same deterministic ops — the two
+//! paths' device windows must be **byte-identical to each other**:
+//! multiplexing N pools over one worker changes nothing observable
+//! versus N dedicated workers.
+//!
+//! The poison test crashes ONE pool's lane mid-run: that pool must
+//! demote to inline staging (poisons ≥ 1) without a divergent byte,
+//! while every sibling pool keeps its live lane (poisons == 0) and
+//! keeps staging on the shared worker. The shutdown test drops the
+//! engine mid-run: every pool demotes inline and serving continues.
+//!
+//! `PF_COPY_THREADS` (the CI shared-engine stress job sets 4) shards
+//! the shared replicas' gather AND write-through scatter, so the
+//! suite also covers threaded host copies under multiplexing.
+
+use std::sync::Arc;
+
+use paged_flex::engine::pipeline::TransferPipeline;
+use paged_flex::kvpage::{
+    GrowthPolicy, HostPool, PageAllocator, PageManager, PoolGeometry,
+    ResidentWindow,
+};
+use paged_flex::runtime::CopyEngine;
+use paged_flex::trace::Rng;
+
+const N_PAGES: u32 = 48;
+const PAGE_SIZE: usize = 8;
+const BYTES_PER_TOKEN: u64 = 16;
+const MAX_BLOCKS: usize = 12;
+const GEO: PoolGeometry = PoolGeometry {
+    n_layers: 2,
+    n_pages: N_PAGES as usize,
+    page_size: PAGE_SIZE,
+    n_kv_heads: 2,
+    d_head: 4,
+};
+const BATCH_CAP: usize = 4;
+const WINDOW_PAGES: usize = BATCH_CAP * MAX_BLOCKS;
+
+fn env_copy_threads(default: usize) -> usize {
+    std::env::var("PF_COPY_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+/// One replica of a pool set's full host-side decode state.
+struct Replica {
+    mgr: PageManager,
+    k: HostPool,
+    v: HostPool,
+    win: ResidentWindow,
+    pipe: TransferPipeline,
+    counter: f32,
+}
+
+impl Replica {
+    fn new(policy: GrowthPolicy, pipe: TransferPipeline,
+           copy_threads: usize) -> Self {
+        let alloc = Arc::new(PageAllocator::new(
+            N_PAGES, PAGE_SIZE, BYTES_PER_TOKEN, policy));
+        let mut win = ResidentWindow::new(GEO);
+        win.set_copy_threads(copy_threads);
+        Replica {
+            mgr: PageManager::new(alloc, MAX_BLOCKS),
+            k: HostPool::zeros(GEO),
+            v: HostPool::zeros(GEO),
+            win,
+            pipe,
+            counter: 0.0,
+        }
+    }
+
+    fn write_tokens(&mut self, id: u64, start: usize, n: usize) {
+        let pages = self.mgr.table(id).unwrap().pages().to_vec();
+        for pos in start..start + n {
+            let (page, off) = (pages[pos / PAGE_SIZE], pos % PAGE_SIZE);
+            for layer in 0..GEO.n_layers {
+                self.counter += 1.0;
+                self.k.token_row_mut(layer, page, off)
+                    .fill(self.counter);
+                self.v.token_row_mut(layer, page, off)
+                    .fill(-self.counter);
+            }
+        }
+    }
+}
+
+/// One pool set: the shared-engine replica `sh` and the
+/// dedicated-worker replica `de`, plus the sequence population both
+/// evolve through in lockstep.
+struct PoolSet {
+    sh: Replica,
+    de: Replica,
+    live: Vec<u64>,
+    next_id: u64,
+}
+
+impl PoolSet {
+    fn new(engine: &CopyEngine, policy: GrowthPolicy,
+           copy_threads: usize) -> Self {
+        PoolSet {
+            sh: Replica::new(
+                policy,
+                TransferPipeline::sim_shared(engine, true),
+                copy_threads,
+            ),
+            // the reference path: a dedicated worker, serial host
+            // copies — the bit-for-bit baseline
+            de: Replica::new(policy, TransferPipeline::sim(true), 1),
+            live: vec![],
+            next_id: 1,
+        }
+    }
+
+    fn reserve_op(&mut self, rng: &mut Rng) {
+        let id = self.next_id;
+        let len = 1 + rng.below(60) as usize;
+        let prompt: Vec<u32> =
+            (0..len).map(|_| rng.below(512) as u32).collect();
+        let a = self.sh.mgr.reserve(id, &prompt);
+        let b = self.de.mgr.reserve(id, &prompt);
+        match (a, b) {
+            (Ok(oa), Ok(ob)) => {
+                assert_eq!(oa.cached_tokens, ob.cached_tokens,
+                           "replicas diverged on admission");
+                self.next_id += 1;
+                self.live.push(id);
+                let fresh = prompt.len() - oa.cached_tokens;
+                self.sh.write_tokens(id, oa.cached_tokens, fresh);
+                self.de.write_tokens(id, ob.cached_tokens, fresh);
+                self.sh.mgr.note_assigned(id, fresh).unwrap();
+                self.de.mgr.note_assigned(id, fresh).unwrap();
+                if rng.below(2) == 0 {
+                    self.sh.mgr.register_prefix(id, &prompt).unwrap();
+                    self.de.mgr.register_prefix(id, &prompt).unwrap();
+                }
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on reserve outcome"),
+        }
+    }
+
+    fn append_op(&mut self, rng: &mut Rng) {
+        if self.live.is_empty() {
+            return;
+        }
+        let id = self.live[rng.below(self.live.len() as u64) as usize];
+        let extra = 1 + rng.below(10) as usize;
+        let a = self.sh.mgr.prepare_append(id, extra);
+        let b = self.de.mgr.prepare_append(id, extra);
+        match (a, b) {
+            (Ok(pa), Ok(pb)) => {
+                if let Some((src, dst)) = pa.cow_copy {
+                    self.sh.k.copy_page(src, dst);
+                    self.sh.v.copy_page(src, dst);
+                }
+                if let Some((src, dst)) = pb.cow_copy {
+                    self.de.k.copy_page(src, dst);
+                    self.de.v.copy_page(src, dst);
+                }
+                let len = self.sh.mgr.seq_len(id).unwrap();
+                self.sh.write_tokens(id, len, extra);
+                self.de.write_tokens(id, len, extra);
+                self.sh.mgr.note_assigned(id, extra).unwrap();
+                self.de.mgr.note_assigned(id, extra).unwrap();
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on append outcome"),
+        }
+    }
+
+    fn fork_op(&mut self, rng: &mut Rng) {
+        if self.live.is_empty() {
+            return;
+        }
+        let parent =
+            self.live[rng.below(self.live.len() as u64) as usize];
+        let plen = self.sh.mgr.seq_len(parent).unwrap();
+        if plen == 0 {
+            return;
+        }
+        let at = 1 + rng.below(plen as u64) as usize;
+        let child = self.next_id;
+        let a = self.sh.mgr.fork(parent, child, at);
+        let b = self.de.mgr.fork(parent, child, at);
+        match (a, b) {
+            (Ok(pa), Ok(pb)) => {
+                if let Some((src, dst)) = pa.cow_copy {
+                    self.sh.k.copy_page(src, dst);
+                    self.sh.v.copy_page(src, dst);
+                }
+                if let Some((src, dst)) = pb.cow_copy {
+                    self.de.k.copy_page(src, dst);
+                    self.de.v.copy_page(src, dst);
+                }
+                self.next_id += 1;
+                self.live.push(child);
+                // engine forks drain; exercise both interleavings —
+                // the epoch protocol keeps the undrained one sound
+                if rng.below(2) == 0 {
+                    self.sh.pipe.drain();
+                    self.de.pipe.drain();
+                }
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on fork outcome"),
+        }
+    }
+
+    fn free_op(&mut self, rng: &mut Rng, preempt: bool) {
+        if self.live.is_empty() {
+            return;
+        }
+        let i = rng.below(self.live.len() as u64) as usize;
+        let id = self.live.swap_remove(i);
+        for page in self.sh.mgr.free(id).unwrap() {
+            self.sh.win.forget(page);
+        }
+        for page in self.de.mgr.free(id).unwrap() {
+            self.de.win.forget(page);
+        }
+        if preempt {
+            // engine preemption: residency dropped, staged drained
+            self.sh.win.invalidate();
+            self.de.win.invalidate();
+            self.sh.pipe.drain();
+            self.de.pipe.drain();
+        }
+    }
+
+    fn decode_step_op(&mut self, rng: &mut Rng, ctx: &str) {
+        let mut batch: Vec<u64> = vec![];
+        let want = 1 + rng.below(BATCH_CAP as u64) as usize;
+        for _ in 0..want {
+            if self.live.is_empty() {
+                break;
+            }
+            let id =
+                self.live[rng.below(self.live.len() as u64) as usize];
+            if !batch.contains(&id) {
+                batch.push(id);
+            }
+        }
+        // independent device-buffer loss per replica: contents must
+        // still match the pools (and therefore each other) after the
+        // full-upload recoveries
+        if rng.below(16) == 0 {
+            self.sh.pipe.front_mut().k.invalidate();
+        }
+        if rng.below(16) == 0 {
+            self.sh.pipe.back_mut().v.invalidate();
+        }
+        if rng.below(16) == 0 {
+            self.de.pipe.front_mut().v.invalidate();
+        }
+        batch.retain(|&id| {
+            let a = self.sh.mgr.prepare_append(id, 1);
+            let b = self.de.mgr.prepare_append(id, 1);
+            match (a, b) {
+                (Ok(pa), Ok(pb)) => {
+                    if let Some((src, dst)) = pa.cow_copy {
+                        self.sh.k.copy_page(src, dst);
+                        self.sh.v.copy_page(src, dst);
+                    }
+                    if let Some((src, dst)) = pb.cow_copy {
+                        self.de.k.copy_page(src, dst);
+                        self.de.v.copy_page(src, dst);
+                    }
+                    true
+                }
+                (Err(_), Err(_)) => false,
+                _ => panic!("{ctx}: replicas diverged on append"),
+            }
+        });
+        if batch.is_empty() {
+            return;
+        }
+
+        // both replicas run the engine's stage boundaries
+        let mut mapped: Vec<(u64, Vec<u32>)> = vec![];
+        for &id in &batch {
+            let len = self.sh.mgr.seq_len(id).unwrap();
+            let pages = self
+                .sh
+                .mgr
+                .table(id)
+                .unwrap()
+                .blocks_covering(len + 1)
+                .to_vec();
+            mapped.push((id, pages));
+        }
+        for r in [&mut self.sh, &mut self.de] {
+            r.pipe.begin_step(&mut r.win);
+            r.win.begin_step(WINDOW_PAGES);
+            for (_, pages) in &mapped {
+                for &pg in pages {
+                    r.win
+                        .map_page(&mut r.k, &mut r.v, pg)
+                        .expect("window slots exhausted");
+                }
+            }
+            r.win.flush_pending(&r.k, &r.v);
+            r.pipe.pre_execute(&mut r.win);
+        }
+
+        self.verify(ctx, &mapped);
+        for r in [&mut self.sh, &mut self.de] {
+            r.pipe.note_execute(1_000_000);
+        }
+
+        // scatter one token per sequence with write-through, both
+        // replicas (identical values: counters advance in lockstep)
+        for &id in &batch {
+            let len = self.sh.mgr.seq_len(id).unwrap();
+            for r in [&mut self.sh, &mut self.de] {
+                let pages = r.mgr.table(id).unwrap().pages().to_vec();
+                let (page, off) =
+                    (pages[len / PAGE_SIZE], len % PAGE_SIZE);
+                for layer in 0..GEO.n_layers {
+                    r.counter += 1.0;
+                    r.k.token_row_mut(layer, page, off)
+                        .fill(r.counter);
+                    r.v.token_row_mut(layer, page, off)
+                        .fill(-r.counter);
+                    r.win.write_row(&mut r.k, &mut r.v, layer, page,
+                                    off);
+                }
+                r.mgr.note_assigned(id, 1).unwrap();
+            }
+        }
+        // deferred-mode flush (no-op at copy_threads 1)
+        self.sh.win.flush_rows(&self.sh.k, &self.sh.v);
+        self.de.win.flush_rows(&self.de.k, &self.de.v);
+    }
+
+    /// Execute-boundary equivalence: each replica's FRONT device pair
+    /// equals its pool for every mapped page — and the shared-engine
+    /// path's device bytes equal the dedicated-worker path's.
+    fn verify(&self, ctx: &str, mapped: &[(u64, Vec<u32>)]) {
+        let pe = GEO.page_elems();
+        let shk = self.sh.pipe.front().k.contents()
+            .expect("shared front K resident after pre_execute");
+        let shv = self.sh.pipe.front().v.contents()
+            .expect("shared front V resident after pre_execute");
+        let dek = self.de.pipe.front().k.contents()
+            .expect("dedicated front K resident after pre_execute");
+        let dev = self.de.pipe.front().v.contents()
+            .expect("dedicated front V resident after pre_execute");
+        for (id, pages) in mapped {
+            for &p in pages {
+                let ss = self.sh.win.slot(p).unwrap() as usize;
+                let ds = self.de.win.slot(p).unwrap() as usize;
+                assert_eq!(ss, ds,
+                           "{ctx}: seq {id} page {p}: replicas \
+                            diverged on slot assignment");
+                for layer in 0..GEO.n_layers {
+                    let src = GEO.offset(layer, p, 0);
+                    let kp = &self.sh.k.as_slice()[src..src + pe];
+                    let vp = &self.sh.v.as_slice()[src..src + pe];
+                    let off = (layer * WINDOW_PAGES + ss) * pe;
+                    assert_eq!(&shk[off..off + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: shared-engine device stale");
+                    assert_eq!(&shv[off..off + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: shared-engine device stale");
+                    assert_eq!(&dek[off..off + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: dedicated device stale");
+                    assert_eq!(&dev[off..off + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: dedicated device stale");
+                    assert_eq!(&shk[off..off + pe], &dek[off..off + pe],
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: shared vs dedicated bytes \
+                                diverged");
+                }
+            }
+        }
+    }
+
+    fn step(&mut self, rng: &mut Rng, ctx: &str) {
+        match rng.below(10) {
+            0..=2 => self.reserve_op(rng),
+            3 => self.append_op(rng),
+            4 => self.fork_op(rng),
+            5 => self.free_op(rng, false),
+            6 => self.free_op(rng, true),
+            _ => self.decode_step_op(rng, ctx),
+        }
+    }
+
+    fn drain_all(&mut self, rng: &mut Rng) {
+        while !self.live.is_empty() {
+            self.free_op(rng, false);
+        }
+    }
+}
+
+struct MultiHarness {
+    engine: CopyEngine,
+    pools: Vec<PoolSet>,
+    rng: Rng,
+}
+
+impl MultiHarness {
+    fn new(seed: u64, n_pools: usize, copy_threads: usize) -> Self {
+        let engine = CopyEngine::new(1);
+        let pools = (0..n_pools)
+            .map(|i| {
+                let policy = if i % 2 == 0 {
+                    GrowthPolicy::Exact
+                } else {
+                    GrowthPolicy::PowerOfTwo
+                };
+                PoolSet::new(&engine, policy, copy_threads)
+            })
+            .collect();
+        MultiHarness { engine, pools, rng: Rng::seeded(seed) }
+    }
+
+    /// One harness step: a random pool set takes a random op, so the
+    /// shared worker sees genuinely interleaved traffic.
+    fn step(&mut self, step: usize, ctx_tag: &str) {
+        let p = self.rng.below(self.pools.len() as u64) as usize;
+        let ctx = format!("{ctx_tag} step {step} pool {p}");
+        self.pools[p].step(&mut self.rng, &ctx);
+    }
+}
+
+#[test]
+fn multiplexed_pools_match_dedicated_workers_random_interleavings() {
+    let threads = env_copy_threads(2);
+    for seed in 0..6u64 {
+        let n_pools = 2 + (seed % 3) as usize; // 2–4 pool sets
+        let mut h = MultiHarness::new(5000 + seed, n_pools, threads);
+        for step in 0..160 {
+            h.step(step, &format!("seed {seed} ({n_pools} pools)"));
+        }
+        // force at least one verified decode per pool so the staging
+        // assertions below never depend on the random op mix
+        for (i, p) in h.pools.iter_mut().enumerate() {
+            let mut rng = Rng::seeded(seed * 31 + i as u64);
+            let ctx = format!("seed {seed} forced decode pool {i}");
+            p.reserve_op(&mut rng);
+            p.decode_step_op(&mut rng, &ctx);
+            p.decode_step_op(&mut rng, &ctx);
+        }
+        for (i, p) in h.pools.iter_mut().enumerate() {
+            let mut rng = Rng::seeded(seed);
+            p.drain_all(&mut rng);
+            assert_eq!(p.sh.mgr.allocator().free_pages(),
+                       N_PAGES as usize,
+                       "seed {seed} pool {i}: shared replica leaked");
+            assert_eq!(p.de.mgr.allocator().free_pages(),
+                       N_PAGES as usize,
+                       "seed {seed} pool {i}: dedicated replica leaked");
+            assert_eq!(p.sh.pipe.stats().poisons, 0,
+                       "seed {seed} pool {i}: unexpected lane poison");
+            assert!(p.sh.pipe.stats().staged_uploads > 0,
+                    "seed {seed} pool {i}: shared lane never staged");
+        }
+        assert!(h.engine.pools() <= n_pools,
+                "seed {seed}: lane table leaked ({} lanes for \
+                 {n_pools} pools)", h.engine.pools());
+    }
+}
+
+#[test]
+fn poisoned_pool_demotes_inline_while_siblings_stay_live() {
+    let threads = env_copy_threads(2);
+    for seed in 20..23u64 {
+        let mut h = MultiHarness::new(6000 + seed, 3, threads);
+        let mut wall_before_poison = 0;
+        for step in 0..220 {
+            if step == 60 {
+                // crash pool 0's lane on the shared engine mid-run
+                h.pools[0].sh.pipe.poison_stream_for_test();
+                wall_before_poison = h.pools[1]
+                    .sh
+                    .pipe
+                    .stats()
+                    .measured_wall_ns;
+            }
+            h.step(step, &format!("poison seed {seed}"));
+        }
+        // drive every pool through a few deterministic decode steps so
+        // the post-poison behaviour is observed on each of them
+        for p in 0..3usize {
+            for extra in 0..6 {
+                let ctx = format!("poison seed {seed} tail {extra} \
+                                   pool {p}");
+                let mut rng = Rng::seeded(seed * 97 + extra);
+                h.pools[p].reserve_op(&mut rng);
+                h.pools[p].decode_step_op(&mut rng, &ctx);
+            }
+        }
+        let poisoned = h.pools[0].sh.pipe.stats();
+        assert!(poisoned.poisons >= 1,
+                "seed {seed}: pool 0's lane poison never surfaced \
+                 ({poisoned:?})");
+        for (i, p) in h.pools.iter().enumerate().skip(1) {
+            let s = p.sh.pipe.stats();
+            assert_eq!(s.poisons, 0,
+                       "seed {seed}: sibling pool {i} observed the \
+                        poison ({s:?})");
+            assert!(s.measured_wall_ns > wall_before_poison,
+                    "seed {seed}: sibling pool {i} stopped staging on \
+                     the shared worker after the poison ({s:?})");
+        }
+    }
+}
+
+#[test]
+fn engine_shutdown_mid_run_demotes_every_pool_inline() {
+    let mut h = MultiHarness::new(7000, 2, 1);
+    for step in 0..60 {
+        h.step(step, "pre-shutdown");
+    }
+    // drop the engine while the pools still serve: lanes drain, then
+    // every submit is refused — each pool demotes to inline staging
+    // (counted as a poison) and keeps byte-identical device contents
+    let engine = std::mem::replace(&mut h.engine, CopyEngine::new(1));
+    drop(engine);
+    for step in 60..140 {
+        h.step(step, "post-shutdown");
+    }
+    for (i, p) in h.pools.iter_mut().enumerate() {
+        let mut rng = Rng::seeded(42 + i as u64);
+        for extra in 0..4 {
+            let ctx = format!("post-shutdown tail {extra} pool {i}");
+            p.reserve_op(&mut rng);
+            p.decode_step_op(&mut rng, &ctx);
+        }
+        let s = p.sh.pipe.stats();
+        assert!(s.poisons >= 1,
+                "pool {i} never noticed the engine shutdown ({s:?})");
+        assert!(s.staged_uploads > 0,
+                "pool {i} must keep staging inline ({s:?})");
+    }
+}

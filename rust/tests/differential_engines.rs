@@ -13,7 +13,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use paged_flex::config::{AttentionMode, EngineConfig, SamplingConfig};
+use paged_flex::config::{AttentionMode, CopyEngineCfg, EngineConfig,
+                         SamplingConfig};
 use paged_flex::coordinator::{Coordinator, Request};
 use paged_flex::engine::{argmax, Engine, Sampler};
 use paged_flex::trace::mixed_batch;
@@ -31,13 +32,20 @@ fn cfg(mode: AttentionMode, dir: &Path, pipeline: bool) -> EngineConfig {
     c.pipeline = pipeline;
     c.scheduler.prefill_chunk = 32;
     // the CI threaded-stress job sets PF_COPY_THREADS=4 so the whole
-    // differential suite also runs with the sharded gather; token
-    // streams must stay byte-identical at any shard width
+    // differential suite also runs with the sharded gather AND the
+    // threaded ASSIGN scatter; token streams must stay byte-identical
+    // at any shard width
     if let Some(n) = std::env::var("PF_COPY_THREADS")
         .ok()
         .and_then(|s| s.parse::<usize>().ok())
     {
         c.copy_threads = n.max(1);
+    }
+    // the CI shared-engine stress job sets PF_COPY_ENGINE=shared so
+    // every engine in the suite multiplexes its staged uploads
+    // through the process-wide copy engine; streams must not change
+    if std::env::var("PF_COPY_ENGINE").as_deref() == Ok("shared") {
+        c.copy_engine = CopyEngineCfg::Shared;
     }
     c
 }
@@ -92,6 +100,84 @@ fn mixed_traces_identical_across_engines_and_pipeline_modes() {
                        "seed {seed} req {id}: paged vs full-recompute \
                         diverged");
         }
+    }
+}
+
+/// Multi-model serving conformance: TWO paged engines run with
+/// `copy_engine = shared` and are ticked interleaved, and each
+/// engine's greedy streams must match its solo-engine run
+/// token-for-token. (On the artifact path the pipeline rides the
+/// accounting-only PJRT backing, which never stages — so this pins
+/// the config plumbing and end-to-end conformance of the interleaved
+/// two-engine run; the shared lanes themselves are contended and
+/// byte-checked by the sim-backed `copy_stream_multiplex` suite and
+/// `benches/multiplex_overlap.rs`.)
+#[test]
+fn two_engines_sharing_one_copy_engine_match_solo_streams() {
+    let Some(dir) = artifacts() else { return };
+    let shared = |seed_batch: u64| -> Vec<(u64, Vec<u32>, usize)> {
+        mixed_batch(seed_batch, 512, 4, 8, 40, 6)
+            .into_iter()
+            .map(|r| (r.id, r.prompt, r.max_new_tokens))
+            .collect()
+    };
+    let reqs_a = shared(71);
+    let reqs_b = shared(72);
+    let mut scfg = cfg(AttentionMode::Paged, &dir, true);
+    scfg.copy_engine = CopyEngineCfg::Shared;
+
+    // solo references (each also on the shared engine, run alone)
+    let solo_a = serve(scfg.clone(), &reqs_a);
+    let solo_b = serve(scfg.clone(), &reqs_b);
+
+    // interleaved two-engine run: tick the coordinators alternately
+    let mut c1 = Coordinator::new(Engine::new(scfg.clone()).unwrap());
+    let mut c2 = Coordinator::new(Engine::new(scfg).unwrap());
+    for (id, prompt, max_new) in &reqs_a {
+        c1.submit(Request::greedy(*id, prompt.clone(), *max_new))
+            .unwrap();
+    }
+    for (id, prompt, max_new) in &reqs_b {
+        c2.submit(Request::greedy(*id, prompt.clone(), *max_new))
+            .unwrap();
+    }
+    let mut fin_a = Vec::new();
+    let mut fin_b = Vec::new();
+    while !c1.idle() || !c2.idle() {
+        let mut progressed = false;
+        if !c1.idle() {
+            progressed |= c1.tick().unwrap();
+            fin_a.extend(c1.drain_finished());
+        }
+        if !c2.idle() {
+            progressed |= c2.tick().unwrap();
+            fin_b.extend(c2.drain_finished());
+        }
+        assert!(progressed, "interleaved schedulers stalled");
+    }
+    let got_a: HashMap<u64, Vec<u32>> = fin_a
+        .into_iter()
+        .inspect(|f| assert!(f.error.is_none(),
+                             "engine A request {} errored: {:?}",
+                             f.id, f.error))
+        .map(|f| (f.id, f.tokens))
+        .collect();
+    let got_b: HashMap<u64, Vec<u32>> = fin_b
+        .into_iter()
+        .inspect(|f| assert!(f.error.is_none(),
+                             "engine B request {} errored: {:?}",
+                             f.id, f.error))
+        .map(|f| (f.id, f.tokens))
+        .collect();
+    for (id, _, _) in &reqs_a {
+        assert_eq!(got_a[id], solo_a[id],
+                   "req {id}: engine A diverged from its solo run \
+                    under the shared copy engine");
+    }
+    for (id, _, _) in &reqs_b {
+        assert_eq!(got_b[id], solo_b[id],
+                   "req {id}: engine B diverged from its solo run \
+                    under the shared copy engine");
     }
 }
 

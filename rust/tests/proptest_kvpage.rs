@@ -1040,6 +1040,11 @@ impl PipeHarness {
                 st.mgr.note_assigned(id, 1).unwrap();
             }
         }
+        // threaded ASSIGN mode defers the write-through memcpys; the
+        // engine flushes at the end of its scatter, and so do we
+        // (no-op at copy_threads 1 — the serial replica's path)
+        self.p.win.flush_rows(&self.p.k, &self.p.v);
+        self.s.win.flush_rows(&self.s.k, &self.s.v);
     }
 
     /// Execute-boundary equivalence: for every mapped page, the
@@ -1162,6 +1167,18 @@ fn pipeline_matches_serial_upload_random_interleavings() {
 #[test]
 fn pipeline_matches_serial_upload_threaded_gather() {
     pipeline_matches_serial(20..26, env_copy_threads(4), 250, None);
+}
+
+/// I8 for the threaded ASSIGN scatter (PF_COPY_THREADS ≥ 2, floored
+/// at 2 so the deferred path always engages): the pipelined replica's
+/// write-through rows are queued and flushed sharded by
+/// layer × slot-range while the serial replica scatters eagerly —
+/// device states must remain element-identical, mirroring the PR 4
+/// gather-shard equivalence test.
+#[test]
+fn pipeline_matches_serial_threaded_scatter() {
+    pipeline_matches_serial(60..66, env_copy_threads(2).max(2), 250,
+                            None);
 }
 
 /// Multi-iteration threaded stress: longer runs, sharded gather, and a
