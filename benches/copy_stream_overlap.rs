@@ -169,6 +169,13 @@ fn run_pipelined(seq_len: usize, steps: usize, upload_full: bool)
     }
     let dt = t0.elapsed();
     assert_eq!(pipe.stats().poisons, 0, "worker must survive the run");
+    // a zero-fault run must never touch the degrade ladder: any
+    // demotion or inline retry here is a regression, not noise
+    assert_eq!(pipe.stats().faults, 0, "zero-fault run saw faults");
+    assert_eq!(pipe.stats().demotes, 0, "zero-fault run demoted");
+    assert_eq!(pipe.stats().retries, 0, "zero-fault run retried");
+    assert_eq!(pipe.stats().fence_timeouts, 0,
+               "zero-fault run tripped the fence watchdog");
 
     Measured {
         step_ms: dt.as_secs_f64() * 1e3 / (steps - 1) as f64,

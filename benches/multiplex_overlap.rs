@@ -247,6 +247,13 @@ fn run_shared(seq_len: usize, steps: usize, upload_full: bool)
     for (pool, pipe) in pipes.iter().enumerate() {
         assert_eq!(pipe.stats().poisons, 0,
                    "pool {pool}: shared lane must survive the run");
+        // zero-fault config: the degrade ladder must stay untouched
+        assert_eq!(pipe.stats().faults, 0,
+                   "pool {pool}: zero-fault run saw faults");
+        assert_eq!(pipe.stats().demotes, 0,
+                   "pool {pool}: zero-fault run demoted");
+        assert_eq!(pipe.stats().retries, 0,
+                   "pool {pool}: zero-fault run retried");
     }
 
     let overlap = pipes

@@ -280,6 +280,11 @@ pub struct EngineConfig {
     /// round-robin fairness, per-pool poison isolation) — the
     /// multi-model serving setting.
     pub copy_engine: CopyEngineCfg,
+    /// Deterministic fault schedule for chaos testing (DESIGN.md
+    /// §11): `"seed:S[:HORIZON[:COUNT]]"` or an explicit
+    /// `"kind@step,..."` list (`--fault-plan`; `PF_FAULT_SEED` is the
+    /// env shorthand). `None` (default) injects nothing.
+    pub fault_plan: Option<String>,
     pub scheduler: SchedulerConfig,
     /// Default sampling params (overridable per request).
     pub sampling: SamplingConfig,
@@ -308,6 +313,7 @@ impl Default for EngineConfig {
             pipeline: true,
             copy_threads: default_copy_threads(),
             copy_engine: CopyEngineCfg::default(),
+            fault_plan: None,
             scheduler: SchedulerConfig::default(),
             sampling: SamplingConfig::default(),
         }
@@ -317,7 +323,7 @@ impl Default for EngineConfig {
 impl EngineConfig {
     pub fn to_json(&self) -> Value {
         let s = &self.scheduler;
-        Value::obj(vec![
+        let mut fields = vec![
             ("model", Value::str(self.model.clone())),
             ("artifacts_dir",
              Value::str(self.artifacts_dir.display().to_string())),
@@ -340,7 +346,11 @@ impl EngineConfig {
                 ("prefill_priority", Value::Bool(s.prefill_priority)),
             ])),
             ("sampling", self.sampling.to_json()),
-        ])
+        ];
+        if let Some(fp) = &self.fault_plan {
+            fields.push(("fault_plan", Value::str(fp.clone())));
+        }
+        Value::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> Result<Self> {
@@ -409,6 +419,10 @@ impl EngineConfig {
                 .map(|x| x.as_str()).transpose()?
                 .map(CopyEngineCfg::from_str).transpose()?
                 .unwrap_or(d.copy_engine),
+            fault_plan: v.opt("fault_plan")
+                .map(|x| x.as_str()).transpose()?
+                .map(str::to_string)
+                .or(d.fault_plan),
             scheduler: sched,
             sampling: match v.opt("sampling") {
                 Some(s) => SamplingConfig::from_json(s)?,
@@ -507,6 +521,18 @@ mod tests {
         // 0 would mean "no gather at all" — clamp to serial
         let v = parse(r#"{"copy_threads": 0}"#).unwrap();
         assert_eq!(EngineConfig::from_json(&v).unwrap().copy_threads, 1);
+    }
+
+    #[test]
+    fn fault_plan_defaults_off_and_roundtrips() {
+        assert_eq!(EngineConfig::default().fault_plan, None);
+        let v = parse(r#"{"fault_plan": "seed:7:100:4"}"#).unwrap();
+        let cfg = EngineConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.fault_plan.as_deref(), Some("seed:7:100:4"));
+        let back = EngineConfig::from_json(
+            &parse(&cfg.to_json().to_json_pretty()).unwrap(),
+        ).unwrap();
+        assert_eq!(back, cfg);
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::engine::{Engine, Sampler};
 use crate::kvpage::{AllocError, SeqId};
 use crate::metrics::ServingMetrics;
 use crate::tokenizer::EOS;
-use crate::util::Result;
+use crate::util::{Error, Result};
 use crate::{bail, err};
 
 /// A generation request as submitted.
@@ -338,11 +338,19 @@ impl Coordinator {
             }
             match failed {
                 None => break,
-                Some(_) => {
-                    if !self.preempt_youngest(ids)? {
-                        bail!("pool exhausted and nothing preemptible");
+                Some(seq) => {
+                    if self.preempt_youngest(ids)? {
+                        preempted_here += 1;
+                    } else {
+                        // hard exhaustion, nothing preemptible
+                        // anywhere: fail ONLY the request that needed
+                        // the page (typed Saturated) and keep the
+                        // batch serving — saturation is a per-request
+                        // outcome, never a run abort (DESIGN.md §11).
+                        // Its pages moved, so drain like a preemption.
+                        self.retire_saturated(seq);
+                        preempted_here += 1;
                     }
-                    preempted_here += 1;
                 }
             }
         }
@@ -411,6 +419,37 @@ impl Coordinator {
             self.live_mut(seq)?.pending_logits = Some(logits);
         }
         Ok(())
+    }
+
+    /// Retire the victim of hard pool exhaustion: free whatever it
+    /// held, hand back its partial output with a typed
+    /// [`EngineError::Saturated`](crate::util::EngineError) error,
+    /// and leave every other live request untouched.
+    fn retire_saturated(&mut self, seq: SeqId) {
+        let pe = self.engine.paged.as_mut().unwrap();
+        let free = pe.mgr.allocator().free_pages();
+        let _ = pe.release(seq);
+        let Some(i) =
+            self.running.iter().position(|l| l.seq == seq)
+        else {
+            return;
+        };
+        let live = self.running.swap_remove(i);
+        let now = Instant::now();
+        let ttft = live
+            .first_token
+            .map(|t| t.duration_since(live.submitted).as_secs_f64())
+            .unwrap_or(0.0);
+        self.finished.push(Finished {
+            id: live.req.id,
+            prompt_len: live.req.prompt.len(),
+            tokens: live.generated,
+            ttft_s: ttft,
+            total_s: now.duration_since(live.submitted).as_secs_f64(),
+            preemptions: live.preemptions,
+            cached_prompt_tokens: live.cached_prompt_tokens,
+            error: Some(saturated_error(seq, free).to_string()),
+        });
     }
 
     /// Preempt the youngest decoding sequence NOT in `protect`; if all are
@@ -704,6 +743,15 @@ fn pipeline_drain_decision(preempted_this_tick: u32, free_pages: usize,
         || (free_pages < watermark_pages && waiting > 0)
 }
 
+/// The typed per-request error for the hard-exhaustion path (pure so
+/// the policy tests can pin both the kind and the message shape).
+fn saturated_error(seq: SeqId, free_pages: usize) -> Error {
+    Error::saturated(format!(
+        "kv pool exhausted and nothing preemptible \
+         (seq {seq}, {free_pages} pages free)"
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -748,6 +796,22 @@ mod tests {
         // staged upload so sustained pressure doesn't zero the overlap
         assert!(!pipeline_drain_decision(0, 3, 4, 0));
         assert!(!pipeline_drain_decision(0, 0, 1, 0));
+    }
+
+    #[test]
+    fn saturation_is_a_typed_per_request_error_not_a_run_abort() {
+        let e = saturated_error(7, 0);
+        assert!(e.is_saturated(),
+                "hard exhaustion must carry the Saturated kind so \
+                 the server maps it to a per-request failure");
+        assert_eq!(e.kind(),
+                   Some(crate::util::EngineError::Saturated));
+        let msg = e.to_string();
+        assert!(msg.contains("seq 7"), "{msg}");
+        assert!(msg.contains("0 pages free"), "{msg}");
+        // garden-variety errors stay untyped: only true saturation
+        // takes the retire-the-victim path
+        assert!(!err!("prepare_append: bad page").is_saturated());
     }
 
     #[test]

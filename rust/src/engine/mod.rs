@@ -22,15 +22,15 @@ use std::path::Path;
 use crate::config::{AttentionMode, EngineConfig};
 use crate::kvpage::SeqId;
 use crate::metrics::ServingMetrics;
-use crate::runtime::Runtime;
+use crate::runtime::{FaultPlan, Runtime};
 use crate::util::{Result, WrapErr};
 use crate::{bail, err};
 
 pub use contiguous::ContiguousEngine;
 pub use nocache::NoCacheEngine;
 pub use paged::{PagedEngine, SeqState};
-pub use pipeline::{CopySource, DevicePair, PipelineStats,
-                   TransferPipeline};
+pub use pipeline::{CopySource, DegradeLevel, DevicePair,
+                   PipelineStats, TransferPipeline};
 pub use sampler::{argmax, log_prob, Sampler};
 
 pub struct Engine {
@@ -62,6 +62,16 @@ impl Engine {
                 pe.set_copy_engine(cfg.copy_engine);
                 pe.set_pipeline(cfg.pipeline);
                 pe.set_copy_threads(cfg.copy_threads);
+                // --fault-plan / config wins; PF_FAULT_SEED is the
+                // env shorthand for harnesses (DESIGN.md §11)
+                let plan = match &cfg.fault_plan {
+                    Some(spec) => Some(FaultPlan::parse(spec)
+                        .wrap_err("parsing fault_plan")?),
+                    None => FaultPlan::from_env(),
+                };
+                if let Some(plan) = plan {
+                    pe.set_fault_plan(plan);
+                }
                 paged = Some(pe);
             }
             AttentionMode::Contiguous => {

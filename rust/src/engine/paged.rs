@@ -28,17 +28,18 @@
 //! preempting a sequence releases just its dead pages' slots.
 
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{CopyEngineCfg, UploadMode};
-use crate::engine::pipeline::{CopySource, PipelineStats,
+use crate::engine::pipeline::{CopySource, DegradeLevel, PipelineStats,
                               TransferPipeline};
 use crate::kvpage::{
     AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
     PoolGeometry, ResidentWindow, SeqId, WindowLayout, WindowStats,
 };
 use crate::model::ModelSpec;
-use crate::runtime::{HostTensor, Runtime, UploadStats};
+use crate::runtime::{FaultInjector, FaultKind, FaultPlan, HostTensor,
+                     Runtime, UploadStats};
 use crate::util::profile::{self, Phase};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
@@ -67,6 +68,12 @@ struct StepScratch {
     chunk_lens: Vec<i32>,
     tables: Vec<i32>,
 }
+
+/// Queue delay injected per [`FaultKind::Stall`] event. Well under the
+/// default 2 s fence watchdog (a stall alone only adds latency); chaos
+/// tests shrink the watchdog via `set_fence_timeout` to force the
+/// timeout → demote path.
+const INJECTED_STALL_NS: u64 = 50_000_000;
 
 impl StepScratch {
     /// Clear and zero-fill for a (batch, chunk) bucket.
@@ -106,6 +113,14 @@ pub struct PagedEngine {
     pipe: TransferPipeline,
     /// `--pipeline` request; effective only under the fixed-W layout.
     pipeline_requested: bool,
+    /// Seeded deterministic fault schedule (`--fault-plan` /
+    /// `PF_FAULT_SEED`, DESIGN.md §11). Idle by default; each
+    /// `run_paged` call is one fault step.
+    fault: FaultInjector,
+    /// An injected [`FaultKind::AllocFail`] arms this; the next
+    /// `admit` refuses with `PoolExhausted` so the coordinator's
+    /// queue/preempt/saturation ladder absorbs it.
+    alloc_fail_armed: bool,
     scr: StepScratch,
 }
 
@@ -138,6 +153,8 @@ impl PagedEngine {
             manifest_w: None,
             pipe: TransferPipeline::pjrt(true),
             pipeline_requested: true,
+            fault: FaultInjector::idle(),
+            alloc_fail_armed: false,
             scr: StepScratch::default(),
         }
     }
@@ -253,10 +270,46 @@ impl PagedEngine {
         self.pipe.drain();
     }
 
+    /// Install a deterministic fault schedule (`EngineConfig::
+    /// fault_plan` / `--fault-plan` / `PF_FAULT_SEED`). Each
+    /// `run_paged` call advances the schedule one step; due events
+    /// fire before that step's stage boundaries so the degrade
+    /// ladder absorbs them in-step (DESIGN.md §11).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = FaultInjector::new(plan);
+    }
+
+    /// Faults fired so far by the installed schedule.
+    pub fn faults_injected(&self) -> u64 {
+        self.fault.injected()
+    }
+
+    /// Current rung of the transfer degrade ladder (DESIGN.md §11).
+    pub fn degrade_level(&self) -> DegradeLevel {
+        self.pipe.degrade_level()
+    }
+
+    /// Shrink the stage-boundary fence watchdog (chaos tests; the
+    /// default is production-sized).
+    pub fn set_fence_timeout(&mut self, timeout: Duration) {
+        self.pipe.set_fence_timeout(timeout);
+    }
+
     /// RESERVE + sequence bookkeeping. Errors bubble PoolExhausted so the
     /// scheduler can queue or evict.
     pub fn admit(&mut self, id: SeqId, prompt: &[u32])
                  -> Result<Admission, AllocError> {
+        if self.alloc_fail_armed {
+            // injected allocation failure: refuse exactly one
+            // admission; the coordinator's queue/preempt/saturation
+            // ladder handles it like a genuinely dry pool
+            self.alloc_fail_armed = false;
+            return Err(AllocError::PoolExhausted {
+                needed: prompt.len().div_ceil(self.spec.page_size)
+                              .max(1),
+                available: 0,
+            });
+        }
         let out = self.mgr.reserve(id, prompt)?;
         self.seqs.insert(id, SeqState {
             tokens: prompt.to_vec(),
@@ -557,6 +610,32 @@ impl PagedEngine {
         let geo = *self.k_pool.geometry();
         let window_pages = self.window_pages_for(rt, b)?;
 
+        // due injected faults land BEFORE the stage boundaries so this
+        // very step absorbs them through the degrade ladder
+        // (DESIGN.md §11); outputs stay byte-identical either way
+        for kind in self.fault.begin_step() {
+            match kind {
+                FaultKind::WorkerPanic => {
+                    self.pipe.poison_stream_for_test();
+                }
+                FaultKind::Stall => {
+                    self.pipe.inject_stall(INJECTED_STALL_NS);
+                }
+                FaultKind::BufferLoss => {
+                    // device dropped a backing: the epoch protocol
+                    // recovers via full gather + full upload with no
+                    // demotion
+                    self.window.invalidate();
+                    self.pipe.invalidate();
+                }
+                FaultKind::ExecFail => {
+                    self.window.invalidate();
+                    self.pipe.note_execute_failure();
+                }
+                FaultKind::AllocFail => self.alloc_fail_armed = true,
+            }
+        }
+
         // stage boundary 1 (DESIGN.md §8): finish the in-flight staged
         // upload (row tail) and rotate the device pairs, then open the
         // window step
@@ -654,10 +733,12 @@ impl PagedEngine {
             .unwrap_or_default();
         self.window.restore_buffers(k_back, v_back);
         if result.is_err() {
-            // failed execute ⇒ assume the device lost its buffers: the
-            // next step falls back to a full gather + full upload
+            // failed execute ⇒ assume the device lost its buffers:
+            // the next step falls back to a full gather + full
+            // upload, and the degrade ladder steps down a rung
+            // (repeated failures walk toward rebuild, DESIGN.md §11)
             self.window.invalidate();
-            self.pipe.invalidate();
+            self.pipe.note_execute_failure();
         } else {
             // stage boundary 3: account how much of the staged
             // transfer hid under the device round-trip

@@ -28,14 +28,23 @@
 //! Anything the fast path cannot promise collapses to the serial path
 //! for that step and recovers after: residency loss or a window
 //! relayout forces a captured full refill of the back pair, a lost
-//! device buffer full-syncs when its pair reaches the front, a
-//! **poisoned copy-stream worker** (panic mid-transfer) is detected at
-//! the next fence or submit and demotes staging to the inline
-//! engine-thread path — exactly like buffer loss, the engine keeps
-//! serving — and `--pipeline off` or a `per_bucket` window layout
-//! disables staging outright. A backing without range support (the
-//! real xla_extension 0.5.1 path, where the transfer actually happens
-//! at execute time) never stages at all.
+//! device buffer full-syncs when its pair reaches the front, and
+//! `--pipeline off` or a `per_bucket` window layout disables staging
+//! outright. A backing without range support (the real xla_extension
+//! 0.5.1 path, where the transfer actually happens at execute time)
+//! never stages at all.
+//!
+//! Transfer *faults* — a **poisoned copy-stream worker** (panic
+//! mid-transfer, detected at the next fence or submit), a **stalled
+//! fence** (the [`Fence::wait_timeout`] watchdog fires instead of
+//! hanging the stage boundary), a **failed execute** — walk a unified
+//! per-pool degrade/recover ladder ([`DegradeLevel`], DESIGN.md §11):
+//! pipelined staging → inline staging → forced full-upload → rebuild.
+//! Every rung keeps serving with byte-identical device contents; after
+//! a backoff-bounded run of clean steps the pool re-promotes one rung,
+//! re-arming a poisoned lane with a FRESH worker/lane from its
+//! [`CopySource`]. Demotions are no longer sticky: a transient fault
+//! costs a few degraded steps, not the rest of the process.
 //!
 //! Accounting is two parallel columns: the **modeled** ns of PR 3
 //! (`xla::modeled_transfer_ns`, [`TransferPipeline::note_execute`],
@@ -45,11 +54,11 @@
 //! (`Phase::FenceWait`) — which `benches/copy_stream_overlap.rs`
 //! asserts against real sleeping transfers.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::kvpage::{ResidentWindow, StagedUpload, UploadPlan};
 use crate::runtime::{CopyEngine, CopyJob, CopyStream, Fence,
-                     UploadStats};
+                     FenceWait, UploadStats};
 use crate::util::profile::{self, Phase};
 
 pub use crate::runtime::DevicePair;
@@ -75,6 +84,80 @@ impl CopySource {
             CopySource::PerPool => CopyStream::spawn(),
             CopySource::Engine(e) => e.stream(),
         }
+    }
+}
+
+/// Rung of the unified per-pool degrade/recover ladder (DESIGN.md
+/// §11). Ordered: a larger rung is more degraded. Every rung serves
+/// byte-identical device contents; rungs differ only in how much of
+/// the transfer work rides the critical path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeLevel {
+    /// Staged uploads run on the copy worker/lane (the fast path).
+    Pipelined,
+    /// Staging applies inline on the engine thread (no worker).
+    Inline,
+    /// Inline staging with every plan/snapshot forced whole-window.
+    FullUpload,
+    /// Both pairs dropped: steps full-resync from the live window
+    /// until the pool strings enough clean steps together to climb.
+    Rebuild,
+}
+
+impl DegradeLevel {
+    fn down(self) -> Self {
+        match self {
+            DegradeLevel::Pipelined => DegradeLevel::Inline,
+            DegradeLevel::Inline => DegradeLevel::FullUpload,
+            _ => DegradeLevel::Rebuild,
+        }
+    }
+
+    fn up(self) -> Self {
+        match self {
+            DegradeLevel::Rebuild => DegradeLevel::FullUpload,
+            DegradeLevel::FullUpload => DegradeLevel::Inline,
+            _ => DegradeLevel::Pipelined,
+        }
+    }
+}
+
+/// Clean steps a pool must string together before each re-promotion.
+const PROMOTE_AFTER: u32 = 4;
+/// Backoff cap: repeated faults double the quota up to this.
+const PROMOTE_AFTER_MAX: u32 = 16;
+/// Default fence watchdog at stage boundaries — generous next to a
+/// steady-state wait (~0) but bounded, so a hung worker costs one
+/// demotion instead of a wedged engine.
+const DEFAULT_FENCE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Per-pool ladder state: the current rung, consecutive clean steps
+/// at it, and the (backoff-doubled) clean-step quota the next
+/// re-promotion requires.
+#[derive(Debug, Clone, Copy)]
+struct DegradeState {
+    level: DegradeLevel,
+    clean_steps: u32,
+    promote_after: u32,
+}
+
+impl DegradeState {
+    fn fresh() -> Self {
+        DegradeState {
+            level: DegradeLevel::Pipelined,
+            clean_steps: 0,
+            promote_after: PROMOTE_AFTER,
+        }
+    }
+
+    /// A fault: one rung down, restart the clean-step count, and
+    /// double the quota (bounded) so a flapping component earns a
+    /// longer probation each time.
+    fn demote(&mut self) {
+        self.level = self.level.down();
+        self.clean_steps = 0;
+        self.promote_after =
+            (self.promote_after * 2).min(PROMOTE_AFTER_MAX);
     }
 }
 
@@ -111,6 +194,22 @@ pub struct PipelineStats {
     /// (each demotes staging to the inline path; the device pair in
     /// flight is lost like a dropped buffer).
     pub poisons: u64,
+    /// Transfer faults the ladder absorbed: worker panics observed
+    /// at a fence or submit, fence-watchdog timeouts, failed
+    /// executes (`transfer_faults` CSV column).
+    pub faults: u64,
+    /// Ladder demotions — each fault steps this pool one rung down:
+    /// pipelined → inline → full-upload → rebuild (DESIGN.md §11).
+    pub demotes: u64,
+    /// Ladder re-promotions after a backoff-bounded clean-step run
+    /// (a poisoned lane re-arms on a FRESH worker/lane).
+    pub repromotes: u64,
+    /// Staged uploads re-applied inline right after a refused submit
+    /// — the bounded retry that keeps the step byte-correct.
+    pub retries: u64,
+    /// Fence watchdog expiries: a stalled transfer abandoned (pair
+    /// and worker) instead of hanging a stage boundary.
+    pub fence_timeouts: u64,
     /// Peak outstanding jobs observed on this pool set's submit queue
     /// — the per-pool backpressure ledger (`copy_queue_peak` CSV
     /// column; reported as a level, not a delta).
@@ -246,6 +345,16 @@ pub struct TransferPipeline {
     /// so `upload_stats` stays monotone when a fresh pair (zeroed
     /// counters) replaces a lost one.
     upload_retired: UploadStats,
+    /// Degrade/recover ladder state for this pool (DESIGN.md §11).
+    degrade: DegradeState,
+    /// Watchdog budget for fence waits at stage boundaries: a
+    /// transfer exceeding it is abandoned (pair and worker) and the
+    /// ladder demotes, instead of the engine hanging.
+    fence_timeout: Duration,
+    /// Streams parked by the watchdog: a stalled worker cannot be
+    /// joined on the engine thread (that would ride out the stall),
+    /// so its handle retires here and joins when the pipeline drops.
+    zombies: Vec<CopyStream>,
     stats: PipelineStats,
     reported: PipelineStats,
     upload_reported: UploadStats,
@@ -293,6 +402,9 @@ impl TransferPipeline {
             front_fresh: false,
             recycle: Vec::new(),
             upload_retired: UploadStats::default(),
+            degrade: DegradeState::fresh(),
+            fence_timeout: DEFAULT_FENCE_TIMEOUT,
+            zombies: Vec::new(),
             stats: PipelineStats::default(),
             reported: PipelineStats::default(),
             upload_reported: UploadStats::default(),
@@ -302,16 +414,16 @@ impl TransferPipeline {
     /// `--pipeline off` / `per_bucket` layout: collapse to the serial
     /// single-pair path (turning off drops any staged upload; the idle
     /// worker is left alive for a later re-enable). Turning on starts
-    /// the worker a disabled construction skipped — unless it was
-    /// poisoned, which permanently demotes this pipeline to inline
-    /// staging.
+    /// the worker a disabled construction skipped — unless the ladder
+    /// currently holds this pool below [`DegradeLevel::Pipelined`],
+    /// in which case re-arming waits for the clean-step quota.
     pub fn set_enabled(&mut self, on: bool) {
         if !on {
             self.settle();
             self.staged = false;
         } else if self.stream.is_none()
             && self.kind == BackingKind::Sim
-            && self.stats.poisons == 0
+            && self.degrade.level == DegradeLevel::Pipelined
         {
             self.stream = Some(self.source.stream());
         }
@@ -322,15 +434,16 @@ impl TransferPipeline {
     /// per-pool worker vs a lane on a shared multiplexed engine.
     /// Settles any in-flight transfer, retires the old worker/lane,
     /// and (when enabled on a sim backing) opens a fresh one from the
-    /// new source — unless this pipeline was already poisoned, which
-    /// permanently demotes it to inline staging.
+    /// new source — unless the ladder currently holds this pool below
+    /// pipelined, in which case the new source is used when the
+    /// clean-step quota re-promotes it.
     pub fn set_source(&mut self, source: CopySource) {
         self.settle();
         self.stream = None; // joins a dedicated worker / closes a lane
         self.source = source;
         if self.enabled
             && self.kind == BackingKind::Sim
-            && self.stats.poisons == 0
+            && self.degrade.level == DegradeLevel::Pipelined
         {
             self.stream = Some(self.source.stream());
         }
@@ -383,6 +496,43 @@ impl TransferPipeline {
         }
     }
 
+    /// Fault hook: stall the transfer worker for `ns` before its next
+    /// job, so an in-flight fence can outlive the watchdog (the
+    /// chaos suite's interconnect-spike injection).
+    pub fn inject_stall(&self, ns: u64) {
+        if let Some(s) = &self.stream {
+            s.inject_stall(ns);
+        }
+    }
+
+    /// Current rung of the degrade/recover ladder (DESIGN.md §11).
+    pub fn degrade_level(&self) -> DegradeLevel {
+        self.degrade.level
+    }
+
+    /// Fence watchdog budget for stage-boundary waits. Tests and the
+    /// chaos suite shrink it to exercise the timeout path; serving
+    /// keeps the generous default.
+    pub fn set_fence_timeout(&mut self, timeout: Duration) {
+        self.fence_timeout = timeout;
+    }
+
+    /// A failed execute: both backings are suspect — drop them AND
+    /// take a rung down the ladder, so repeated execute failures walk
+    /// the pool toward rebuild instead of thrashing the fast path.
+    /// (Plain residency loss keeps using [`invalidate`], which
+    /// recovers via epochs without a demotion.)
+    ///
+    /// [`invalidate`]: TransferPipeline::invalidate
+    pub fn note_execute_failure(&mut self) {
+        self.settle();
+        self.fault_demote();
+        self.front.invalidate();
+        if let Some(b) = self.back.as_mut() {
+            b.invalidate();
+        }
+    }
+
     /// Drop both device backings (failed execute, device reset): the
     /// next step full-syncs whatever pair is in front.
     pub fn invalidate(&mut self) {
@@ -410,15 +560,15 @@ impl TransferPipeline {
 
     /// Collect the outstanding copy-stream ticket, if any: recover the
     /// device pair, bank the measured wall/wait ns, and stash the
-    /// capture buffers for the window arena. On poison the pair died
-    /// with the worker — a fresh (invalid) pair takes its place and
-    /// staging demotes to the inline path, exactly the buffer-loss
-    /// collapse.
+    /// capture buffers for the window arena. The wait is bounded by
+    /// the fence watchdog — poison and timeout both cost one ladder
+    /// demotion (the pair died with, or stays with, the worker; a
+    /// fresh invalid pair takes its place), never a hang.
     fn settle(&mut self) {
         let Some((fence, base)) = self.in_flight.take() else { return };
         let t = Instant::now();
-        match fence.wait() {
-            Ok(done) => {
+        match fence.wait_timeout(self.fence_timeout) {
+            FenceWait::Done(done) => {
                 let waited = t.elapsed().as_nanos() as u64;
                 profile::record_ns(Phase::FenceWait, waited);
                 self.stats.measured_wall_ns += done.wall_ns;
@@ -436,16 +586,82 @@ impl TransferPipeline {
                     .push((done.k_data, done.v_data, done.ranges));
                 self.back = Some(done.pair);
             }
-            Err(_) => {
+            FenceWait::Poisoned => {
                 self.stats.poisons += 1;
-                self.staged = false;
-                self.stream = None; // inline staging from here on
                 // the pair died with the worker: retire its totals so
                 // upload_stats stays monotone past the zeroed
                 // replacement
                 self.upload_retired = self.upload_retired.plus(&base);
+                self.fault_demote();
                 self.back = Some(self.kind.pair()); // fresh, invalid
             }
+            FenceWait::TimedOut => {
+                // stalled transfer: the watchdog bounds the stage
+                // boundary instead of riding the stall out. The
+                // worker still owns the pair (and may still be
+                // asleep), so park the handle rather than joining it
+                // here; pair and worker are both replaced.
+                self.stats.fence_timeouts += 1;
+                self.upload_retired = self.upload_retired.plus(&base);
+                self.zombies.extend(self.stream.take());
+                self.fault_demote();
+                self.back = Some(self.kind.pair()); // fresh, invalid
+            }
+        }
+    }
+
+    /// One rung down the ladder after a transfer fault. Effects are
+    /// cumulative per rung: Inline drops the worker (staging moves to
+    /// the engine thread), FullUpload additionally forces whole-window
+    /// staging, Rebuild additionally invalidates both pairs so the
+    /// following steps resync from the live window.
+    fn fault_demote(&mut self) {
+        self.stats.faults += 1;
+        self.stats.demotes += 1;
+        self.staged = false;
+        self.stream = None; // joins a dead worker / closes the lane
+        self.degrade.demote();
+        if self.degrade.level == DegradeLevel::Rebuild {
+            self.front.invalidate();
+            if let Some(b) = self.back.as_mut() {
+                b.invalidate();
+            }
+        }
+    }
+
+    /// Clean-step bookkeeping at the top of every step: count a
+    /// clean step at the current rung and climb one rung when the
+    /// quota is met. Back at the top rung, a full clean quota
+    /// re-earns the fast backoff.
+    fn degrade_tick(&mut self) {
+        if self.degrade.level == DegradeLevel::Pipelined {
+            if self.degrade.clean_steps < self.degrade.promote_after {
+                self.degrade.clean_steps += 1;
+                if self.degrade.clean_steps
+                    >= self.degrade.promote_after
+                {
+                    self.degrade.promote_after = PROMOTE_AFTER;
+                }
+            }
+            return;
+        }
+        self.degrade.clean_steps += 1;
+        if self.degrade.clean_steps < self.degrade.promote_after {
+            return;
+        }
+        self.degrade.clean_steps = 0;
+        self.degrade.level = self.degrade.level.up();
+        self.stats.repromotes += 1;
+        if self.degrade.level == DegradeLevel::Pipelined
+            && self.stream.is_none()
+            && self.enabled
+            && self.kind == BackingKind::Sim
+        {
+            // re-arm on a FRESH worker/lane — the old one died with
+            // its poison or was parked by the watchdog. If the new
+            // one is dead too (engine shut down), the next submit
+            // refusal demotes again, with a doubled quota.
+            self.stream = Some(self.source.stream());
         }
     }
 
@@ -462,6 +678,12 @@ impl TransferPipeline {
         self.front_fresh = false;
         for (k, v, r) in self.recycle.drain(..) {
             win.donate_capture(k, v, r);
+        }
+        if self.enabled {
+            // the previous step ended without a fault (any fault
+            // would have reset the count): one clean step toward
+            // re-promotion
+            self.degrade_tick();
         }
         if !self.enabled || !self.staged {
             return;
@@ -514,12 +736,16 @@ impl TransferPipeline {
     /// after the sync — that IS the PR 2 upload step.
     pub fn pre_execute(&mut self, win: &mut ResidentWindow) {
         let host_len = win.k_window().len();
+        // The full-upload and rebuild rungs of the ladder behave like
+        // `window_upload = full` until the pool re-promotes.
+        let full_mode = self.upload_full
+            || self.degrade.level >= DegradeLevel::FullUpload;
         // In full-upload mode a freshly rotated front already received
         // the whole window during the (overlapped) staged phase; its
         // sync only tops up the residual. Everywhere else the mode
         // forces a whole-window push, as does a backing without range
         // support (plan_for still orders Full on any epoch staleness).
-        let force_full = (self.upload_full && !self.front_fresh)
+        let force_full = (full_mode && !self.front_fresh)
             || !self.front.supports_ranges();
         let front_epoch = self.front.epoch();
         let (plan, through) = win.plan_for(front_epoch, force_full);
@@ -541,9 +767,9 @@ impl TransferPipeline {
         let back_stale = !back.can_delta(host_len);
         let snap = win.snapshot_for(
             back.epoch(),
-            self.upload_full || back_stale,
+            full_mode || back_stale,
         );
-        if snap.full && !self.upload_full && !back_stale {
+        if snap.full && !full_mode && !back_stale {
             // the window itself forced the refill (residency drop /
             // relayout since the back pair last uploaded)
             self.stats.collapses += 1;
@@ -572,11 +798,14 @@ impl TransferPipeline {
                 Err(job) => {
                     // worker died between steps: take the pair back,
                     // drop the dead stream (join), un-count the
-                    // submit, stage inline from now on
+                    // submit, demote, and retry the same snapshot
+                    // inline so this step stays byte-correct
                     self.stats.poisons += 1;
                     let job = *job;
                     self.unnote_staged(&job.snap);
                     self.back = Some(job.pair);
+                    self.fault_demote();
+                    self.stats.retries += 1;
                     self.apply_staged_inline(win, job.snap, host_len);
                 }
             }
@@ -678,6 +907,11 @@ impl TransferPipeline {
             collapses: s.collapses - r.collapses,
             drains: s.drains - r.drains,
             poisons: s.poisons - r.poisons,
+            faults: s.faults - r.faults,
+            demotes: s.demotes - r.demotes,
+            repromotes: s.repromotes - r.repromotes,
+            retries: s.retries - r.retries,
+            fence_timeouts: s.fence_timeouts - r.fence_timeouts,
             queue_peak: s.queue_peak,
             last_staged_ns: s.last_staged_ns,
             last_tail_ns: s.last_tail_ns,
@@ -808,6 +1042,12 @@ mod tests {
         assert!(s.measured_wall_ns > 0,
                 "staged uploads really ran on the worker: {s:?}");
         assert_eq!(s.poisons, 0);
+        // the fault layer provably costs nothing on the happy path
+        assert_eq!(s.faults, 0);
+        assert_eq!(s.demotes, 0);
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.fence_timeouts, 0);
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Pipelined);
     }
 
     #[test]
@@ -897,6 +1137,94 @@ mod tests {
         r.step(&[0, 1], 8, "post-poison b");
         assert!(r.pipe.stats().staged_uploads > staged_before,
                 "staging continues inline after poison");
+    }
+
+    #[test]
+    fn pool_repromotes_to_pipelined_after_clean_steps() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "warm");
+        r.pipe.poison_stream_for_test();
+        for i in 0..10 {
+            r.step(&[0, 1], 8, &format!("fault step {i}"));
+            if r.pipe.stats().poisons > 0 {
+                break;
+            }
+        }
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Inline,
+                   "{:?}", r.pipe.stats());
+        assert!(r.pipe.stats().demotes >= 1);
+        // a clean-step quota later the ladder re-arms the fast path
+        // on a FRESH worker — the demotion is not sticky
+        for i in 0..32 {
+            r.step(&[0, 1], 8, &format!("clean step {i}"));
+            if r.pipe.degrade_level() == DegradeLevel::Pipelined {
+                break;
+            }
+        }
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Pipelined,
+                   "{:?}", r.pipe.stats());
+        assert!(r.pipe.stats().repromotes >= 1);
+        let wall_before = r.pipe.stats().measured_wall_ns;
+        for i in 0..4 {
+            r.step(&[0, 1], 8, &format!("repromoted step {i}"));
+        }
+        assert!(r.pipe.stats().measured_wall_ns > wall_before,
+                "staging really runs on the fresh worker again: {:?}",
+                r.pipe.stats());
+    }
+
+    #[test]
+    fn stalled_fence_times_out_demotes_and_recovers() {
+        let mut r = Rig::new(true);
+        r.pipe.set_fence_timeout(Duration::from_millis(20));
+        r.step(&[0, 1], 8, "warm");
+        // stall the worker well past the watchdog; the next staged
+        // upload queues behind the stall and its fence goes quiet
+        r.pipe.inject_stall(300_000_000);
+        r.step(&[0, 1], 8, "stalled submit");
+        let t = Instant::now();
+        r.step(&[0, 1], 8, "watchdog step");
+        assert!(t.elapsed() < Duration::from_millis(250),
+                "stage boundary must not ride out the stall");
+        let s = *r.pipe.stats();
+        assert!(s.fence_timeouts >= 1, "{s:?}");
+        assert!(s.demotes >= 1, "{s:?}");
+        assert_ne!(r.pipe.degrade_level(), DegradeLevel::Pipelined);
+        // every later step still executes against synced contents,
+        // and the ladder climbs back once the storm passes
+        for i in 0..24 {
+            r.step(&[0, 1], 8, &format!("post-stall step {i}"));
+            if r.pipe.degrade_level() == DegradeLevel::Pipelined {
+                break;
+            }
+        }
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Pipelined,
+                   "ladder climbs back after the stall: {:?}",
+                   r.pipe.stats());
+    }
+
+    #[test]
+    fn repeated_execute_failures_walk_to_rebuild_and_back() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "warm a");
+        r.step(&[0, 1], 8, "warm b");
+        r.pipe.note_execute_failure();
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Inline);
+        r.pipe.note_execute_failure();
+        r.pipe.note_execute_failure();
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Rebuild);
+        assert!(r.pipe.stats().faults >= 3);
+        // even on the bottom rung every step executes against fully
+        // synced front contents; 3 quotas later it is pipelined again
+        for i in 0..60 {
+            r.step(&[0, 1], 8, &format!("rebuild step {i}"));
+            if r.pipe.degrade_level() == DegradeLevel::Pipelined {
+                break;
+            }
+        }
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Pipelined,
+                   "{:?}", r.pipe.stats());
+        assert!(r.pipe.stats().repromotes >= 3);
     }
 
     #[test]

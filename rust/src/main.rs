@@ -15,6 +15,7 @@
 //!   --no-window-delta   --window-layout fixed|per_bucket
 //!   --window-upload delta|full   --pipeline on|off
 //!   --copy-threads N   --copy-engine shared|per-pool
+//!   --fault-plan seed:S[:H[:C]] | kind@step,...
 //!   --max-batch N --prefill-chunk N
 //!   --config FILE.json
 //! ```
@@ -85,6 +86,10 @@ fn print_help() {
            --copy-engine shared|per-pool (one multiplexed transfer\n\
              worker shared by every pool set, or a dedicated worker\n\
              per pool set; default per-pool)\n\
+           --fault-plan SPEC (chaos testing: seed:S[:HORIZON[:COUNT]]\n\
+             for a seeded schedule, or kind@step,... with kinds\n\
+             panic|loss|stall|alloc|exec; PF_FAULT_SEED=S is the env\n\
+             shorthand; default none)\n\
            --max-batch N --prefill-chunk N --config FILE.json"
     );
 }
@@ -174,6 +179,11 @@ impl Flags {
         }
         if let Some(e) = self.get("copy-engine") {
             cfg.copy_engine = config::CopyEngineCfg::from_str(e)?;
+        }
+        if let Some(fp) = self.get("fault-plan") {
+            // validate eagerly so a typo fails at startup, not mid-run
+            paged_flex::runtime::FaultPlan::parse(fp)?;
+            cfg.fault_plan = Some(fp.to_string());
         }
         if let Some(b) = self.get("max-batch") {
             cfg.scheduler.max_batch_size =

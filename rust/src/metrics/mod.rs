@@ -174,6 +174,15 @@ pub struct ServingMetrics {
     /// Copy-stream workers (or shared-engine lanes) lost to a panic
     /// (staging demoted inline).
     pub pipeline_poisons: AtomicU64,
+    /// Transfer faults the degrade ladder absorbed (worker panics,
+    /// fence-watchdog timeouts, failed executes — DESIGN.md §11).
+    pub pipeline_faults: AtomicU64,
+    /// Ladder demotions (pipelined → inline → full-upload → rebuild).
+    pub pipeline_demotes: AtomicU64,
+    /// Ladder re-promotions after a backoff-bounded clean-step run.
+    pub pipeline_repromotes: AtomicU64,
+    /// Staged uploads re-applied inline right after a refused submit.
+    pub pipeline_retries: AtomicU64,
     /// Peak outstanding jobs on this pool set's copy-engine submit
     /// queue (per-pool backpressure ledger, DESIGN.md §10).
     pub pipeline_queue_peak: AtomicU64,
@@ -219,6 +228,10 @@ impl ServingMetrics {
         Self::inc(&self.pipeline_measured_wall_ns, d.measured_wall_ns);
         Self::inc(&self.pipeline_measured_wait_ns, d.measured_wait_ns);
         Self::inc(&self.pipeline_poisons, d.poisons);
+        Self::inc(&self.pipeline_faults, d.faults);
+        Self::inc(&self.pipeline_demotes, d.demotes);
+        Self::inc(&self.pipeline_repromotes, d.repromotes);
+        Self::inc(&self.pipeline_retries, d.retries);
         // a high-water level, not a delta
         self.pipeline_queue_peak
             .fetch_max(d.queue_peak, Ordering::Relaxed);
@@ -321,6 +334,8 @@ impl ServingMetrics {
              kv pipeline: staged={} collapses={} drains={} \
              poisons={} queue_peak={} overlap={:.0}% \
              measured={:.0}% fence_wait={:.3} ms/step\n\
+             kv faults: faults={} demotes={} repromotes={} \
+             retries={}\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -350,6 +365,10 @@ impl ServingMetrics {
             100.0 * self.pipeline_overlap_fraction(),
             100.0 * self.measured_overlap_fraction(),
             self.fence_wait_ms_per_step(),
+            self.pipeline_faults.load(Ordering::Relaxed),
+            self.pipeline_demotes.load(Ordering::Relaxed),
+            self.pipeline_repromotes.load(Ordering::Relaxed),
+            self.pipeline_retries.load(Ordering::Relaxed),
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -419,6 +438,14 @@ const CSV_COLUMNS: &[CsvCol] = &[
      |m| m.pipeline_queue_peak.load(Ordering::Relaxed).to_string()),
     ("fence_wait_ms_per_step",
      |m| format!("{:.4}", m.fence_wait_ms_per_step())),
+    ("transfer_faults",
+     |m| m.pipeline_faults.load(Ordering::Relaxed).to_string()),
+    ("pool_demotes",
+     |m| m.pipeline_demotes.load(Ordering::Relaxed).to_string()),
+    ("pool_repromotes",
+     |m| m.pipeline_repromotes.load(Ordering::Relaxed).to_string()),
+    ("transfer_retries",
+     |m| m.pipeline_retries.load(Ordering::Relaxed).to_string()),
 ];
 
 /// Scoped timer recording into a histogram on drop.
@@ -520,7 +547,8 @@ mod tests {
         assert_eq!(m.alloc_bytes_per_step(), 0,
                    "warm step must read 0, not the warm-up residue");
         assert_eq!(m.alloc_bytes.load(Ordering::Relaxed), 128);
-        assert!(m.csv_row().ends_with("2048,0,0.000,0,0.000,0,0.0000"),
+        assert!(m.csv_row()
+                 .ends_with("2048,0,0.000,0,0.000,0,0.0000,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -541,7 +569,8 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("delta=3"), "{s}");
         assert!(s.contains("ranges=9"), "{s}");
-        assert!(m.csv_row().ends_with("4096,0.000,0,0.000,0,0.0000"),
+        assert!(m.csv_row()
+                 .ends_with("4096,0.000,0,0.000,0,0.0000,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -562,6 +591,10 @@ mod tests {
             drains: 2,
             poisons: 1,
             queue_peak: 2,
+            faults: 2,
+            demotes: 2,
+            repromotes: 1,
+            retries: 1,
             ..Default::default()
         };
         m.note_pipeline(&d);
@@ -580,7 +613,12 @@ mod tests {
         assert!(s.contains("queue_peak=2"), "{s}");
         assert!(s.contains("overlap=75%"), "{s}");
         assert!(s.contains("measured=75%"), "{s}");
-        assert!(m.csv_row().ends_with("0.750,0,0.750,2,0.0000"),
+        assert!(s.contains("faults=2"), "{s}");
+        assert!(s.contains("demotes=2"), "{s}");
+        assert!(s.contains("repromotes=1"), "{s}");
+        assert!(s.contains("retries=1"), "{s}");
+        assert!(m.csv_row()
+                 .ends_with("0.750,0,0.750,2,0.0000,2,2,1,1"),
                 "{}", m.csv_row());
     }
 
@@ -603,7 +641,9 @@ mod tests {
         }
         for name in ["alloc_bytes_per_step", "measured_overlap_frac",
                      "pipeline_overlap_frac", "copy_queue_peak",
-                     "fence_wait_ms_per_step"] {
+                     "fence_wait_ms_per_step", "transfer_faults",
+                     "pool_demotes", "pool_repromotes",
+                     "transfer_retries"] {
             assert!(header.contains(&name), "missing column {name}");
         }
     }

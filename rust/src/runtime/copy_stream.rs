@@ -54,7 +54,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::kvpage::StagedUpload;
 use crate::runtime::DeviceWindow;
@@ -134,6 +134,18 @@ pub struct CopyDone {
 #[derive(Debug)]
 pub struct Poisoned;
 
+/// Outcome of a watchdogged fence wait (DESIGN.md §11).
+pub enum FenceWait {
+    /// The transfer finished; the device pair is back.
+    Done(CopyDone),
+    /// The worker (or this pool's lane) died with the pair.
+    Poisoned,
+    /// The watchdog fired first: the worker still owns the pair
+    /// (stalled transfer, saturated interconnect). The caller must
+    /// abandon the pair and degrade — never wait unboundedly.
+    TimedOut,
+}
+
 /// Completion ticket for one submitted [`CopyJob`].
 pub struct Fence {
     rx: mpsc::Receiver<CopyDone>,
@@ -148,6 +160,22 @@ impl Fence {
     pub fn wait(self) -> Result<CopyDone, Poisoned> {
         self.rx.recv().map_err(|_| Poisoned)
     }
+
+    /// [`wait`](Fence::wait) with a watchdog: a transfer that has not
+    /// completed within `timeout` reports [`FenceWait::TimedOut`]
+    /// instead of hanging the stage boundary. The fence is consumed
+    /// either way; after a timeout the in-flight device pair stays
+    /// with the worker (its eventual reply is dropped) and the caller
+    /// rebuilds from a fresh pair, exactly like the poison path.
+    pub fn wait_timeout(self, timeout: Duration) -> FenceWait {
+        match self.rx.recv_timeout(timeout) {
+            Ok(done) => FenceWait::Done(done),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                FenceWait::Poisoned
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => FenceWait::TimedOut,
+        }
+    }
 }
 
 enum WorkItem {
@@ -159,6 +187,10 @@ enum WorkItem {
     /// dedicated stream the whole worker dies; on the shared engine
     /// the panic is caught and poisons only the submitting lane.
     Poison,
+    /// Fault hook: the servicing worker sleeps this many ns before
+    /// taking the next job — a transfer stall (interconnect spike)
+    /// that the fence watchdog must bound (DESIGN.md §11).
+    Stall(u64),
 }
 
 /// Submission-queue depth, per pool set. The pipeline keeps at most
@@ -377,6 +409,12 @@ fn shared_worker_loop(core: &EngineCore) {
                 panic!("copy engine poisoned while servicing a lane \
                         (test hook)");
             }
+            WorkItem::Stall(ns) => {
+                // injected interconnect spike: the lane (and, with
+                // one worker, its siblings) stalls; the submitters'
+                // fence watchdogs bound the damage
+                std::thread::sleep(Duration::from_nanos(ns));
+            }
         }))
         .is_err();
         let mut st = core.state.lock().unwrap();
@@ -474,9 +512,7 @@ impl CopyStream {
                         depth.fetch_sub(1, Ordering::Relaxed);
                         Err(job)
                     }
-                    Err(mpsc::SendError(WorkItem::Poison)) => {
-                        unreachable!()
-                    }
+                    Err(mpsc::SendError(_)) => unreachable!(),
                 }
             }
             StreamImpl::Shared { core, pool } => {
@@ -531,6 +567,33 @@ impl CopyStream {
         }
     }
 
+    /// Fault hook: the worker sleeps `ns` before servicing whatever
+    /// is queued behind — a deterministic transfer stall. Later
+    /// fences stay unanswered for the duration, which is exactly the
+    /// condition [`Fence::wait_timeout`]'s watchdog must bound
+    /// (DESIGN.md §11). On the shared engine the stall occupies the
+    /// servicing worker (head-of-line, like a real interconnect
+    /// spike); siblings' watchdogs bound it the same way.
+    pub fn inject_stall(&self, ns: u64) {
+        match &self.imp {
+            StreamImpl::Dedicated { tx, .. } => {
+                if let Some(tx) = tx {
+                    let _ = tx.send(WorkItem::Stall(ns));
+                }
+            }
+            StreamImpl::Shared { core, pool } => {
+                let mut st = core.state.lock().unwrap();
+                if let Some(lane) = st.lanes[*pool].as_mut() {
+                    if !lane.poisoned {
+                        lane.queue.push_back(WorkItem::Stall(ns));
+                    }
+                }
+                drop(st);
+                core.work.notify_one();
+            }
+        }
+    }
+
     /// Peak outstanding jobs (submitted, not yet completed) observed
     /// for this pool set — the per-pool backpressure ledger
     /// (`copy_queue_peak` CSV column). Both topologies count the job
@@ -555,7 +618,7 @@ impl CopyStream {
 fn unwrap_upload(item: WorkItem) -> Box<CopyJob> {
     match item {
         WorkItem::Upload { job, .. } => job,
-        WorkItem::Poison => unreachable!("poison is never handed back"),
+        _ => unreachable!("only uploads are ever handed back"),
     }
 }
 
@@ -601,12 +664,15 @@ fn dedicated_worker_loop(rx: mpsc::Receiver<WorkItem>,
                 let _ = reply.send(run_job(*job));
                 // depth counts outstanding Upload jobs — submitted
                 // and not yet completed — matching the shared lane's
-                // queued + in-service accounting (the Poison test
-                // hook never touches it)
+                // queued + in-service accounting (the Poison/Stall
+                // fault hooks never touch it)
                 depth.fetch_sub(1, Ordering::Relaxed);
             }
             WorkItem::Poison => {
                 panic!("copy stream poisoned (test hook)");
+            }
+            WorkItem::Stall(ns) => {
+                std::thread::sleep(Duration::from_nanos(ns));
             }
         }
     }
@@ -772,6 +838,44 @@ mod tests {
         }
         assert!(poisoned, "poison never surfaced");
         drop(stream); // join of a panicked worker must not hang
+    }
+
+    #[test]
+    fn fence_watchdog_bounds_a_stalled_transfer() {
+        let stream = CopyStream::spawn();
+        // stall the worker well past the watchdog, then queue a job
+        stream.inject_stall(200_000_000); // 200 ms
+        let Ok(fence) = stream.submit(CopyJob {
+            pair: zeroed_pair(4),
+            snap: full_snap(vec![1.0; 4], 1),
+            host_len: 4,
+        }) else {
+            panic!("live worker must accept jobs");
+        };
+        let t = Instant::now();
+        match fence.wait_timeout(Duration::from_millis(10)) {
+            FenceWait::TimedOut => {}
+            FenceWait::Done(_) => panic!("stalled job finished early"),
+            FenceWait::Poisoned => panic!("stall is not a poison"),
+        }
+        assert!(t.elapsed() < Duration::from_millis(150),
+                "watchdog must fire well before the stall clears");
+        // an unstalled job + generous watchdog completes normally
+        let Ok(fence) = stream.submit(CopyJob {
+            pair: zeroed_pair(4),
+            snap: full_snap(vec![2.0; 4], 1),
+            host_len: 4,
+        }) else {
+            panic!("worker survives a stall");
+        };
+        match fence.wait_timeout(Duration::from_secs(10)) {
+            FenceWait::Done(done) => {
+                assert!(done.ok);
+                assert_eq!(done.pair.k.contents().unwrap()[0], 2.0);
+            }
+            _ => panic!("healthy transfer must complete"),
+        }
+        drop(stream);
     }
 
     #[test]

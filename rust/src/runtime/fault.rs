@@ -1,0 +1,301 @@
+//! Deterministic fault-injection plans for the KV transfer stack
+//! (DESIGN.md §11).
+//!
+//! A [`FaultPlan`] is a seed-reproducible schedule of fault events,
+//! each pinned to a step index: copy-worker panics, device-buffer
+//! loss, transfer stalls, allocation failures, failed executes. The
+//! plan itself is pure data — *call sites* consume it through a
+//! [`FaultInjector`] at their step boundaries and apply each event
+//! with whatever mechanism that layer owns (`inject_poison`, buffer
+//! `invalidate`, stalled jobs, refused reservations). The same plan
+//! therefore drives both the real engine (`--fault-plan` /
+//! `PF_FAULT_SEED`) and the offline chaos conformance suite, and a
+//! given seed replays the identical schedule everywhere.
+
+use crate::trace::Rng;
+use crate::util::Result;
+use crate::{bail, err};
+
+/// One injectable failure mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Crash the pool's copy worker / shared-engine lane.
+    WorkerPanic,
+    /// Drop one half of a device buffer pair (loss mid-run).
+    BufferLoss,
+    /// Stall the in-flight transfer past the fence watchdog.
+    Stall,
+    /// Refuse the next page reservation (pool pressure spike).
+    AllocFail,
+    /// Fail the next execute (device-side launch failure).
+    ExecFail,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::WorkerPanic,
+        FaultKind::BufferLoss,
+        FaultKind::Stall,
+        FaultKind::AllocFail,
+        FaultKind::ExecFail,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::WorkerPanic => "panic",
+            FaultKind::BufferLoss => "loss",
+            FaultKind::Stall => "stall",
+            FaultKind::AllocFail => "alloc",
+            FaultKind::ExecFail => "exec",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "panic" => Ok(FaultKind::WorkerPanic),
+            "loss" => Ok(FaultKind::BufferLoss),
+            "stall" => Ok(FaultKind::Stall),
+            "alloc" => Ok(FaultKind::AllocFail),
+            "exec" => Ok(FaultKind::ExecFail),
+            other => Err(err!(
+                "unknown fault kind '{other}' (want \
+                 panic|loss|stall|alloc|exec)"
+            )),
+        }
+    }
+}
+
+/// One scheduled fault: `kind` fires when the consumer reaches
+/// step `step` (0-based, counted by the consuming layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// A full schedule, sorted by step. Cloneable pure data: hand the
+/// same plan to two replicas and they see the same storm.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan — the zero-cost happy path.
+    pub fn none() -> Self {
+        FaultPlan { events: vec![] }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Seed-reproducible random schedule: `count` events uniformly
+    /// over `[0, horizon)` steps, kinds drawn uniformly. The same
+    /// seed always yields the same schedule (splitmix-seeded
+    /// xoshiro, no ambient entropy).
+    pub fn seeded(seed: u64, horizon: u64, count: usize) -> Self {
+        let mut rng = Rng::seeded(seed ^ 0xFA17_FA17_FA17_FA17);
+        let mut events: Vec<FaultEvent> = (0..count)
+            .map(|_| FaultEvent {
+                step: rng.below(horizon.max(1)),
+                kind: FaultKind::ALL
+                    [rng.below(FaultKind::ALL.len() as u64) as usize],
+            })
+            .collect();
+        events.sort_by_key(|e| e.step);
+        FaultPlan { events }
+    }
+
+    /// Parse a `--fault-plan` spec. Two forms:
+    ///
+    /// * `seed:S` or `seed:S:HORIZON:COUNT` — a [`seeded`] plan
+    ///   (defaults: horizon 240, count 12);
+    /// * explicit comma list `kind@step,...`, e.g.
+    ///   `panic@12,loss@30,stall@44,alloc@50,exec@61`.
+    ///
+    /// The empty string and `none` parse to the empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultPlan::none());
+        }
+        if let Some(rest) = spec.strip_prefix("seed:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            let parse_u64 = |s: &str, what: &str| -> Result<u64> {
+                s.parse::<u64>().map_err(|_| {
+                    err!("fault plan: bad {what} '{s}' in '{spec}'")
+                })
+            };
+            let seed = parse_u64(parts[0], "seed")?;
+            let horizon = match parts.get(1) {
+                Some(s) => parse_u64(s, "horizon")?,
+                None => 240,
+            };
+            let count = match parts.get(2) {
+                Some(s) => parse_u64(s, "count")? as usize,
+                None => 12,
+            };
+            if parts.len() > 3 {
+                bail!("fault plan: too many ':' fields in '{spec}'");
+            }
+            return Ok(FaultPlan::seeded(seed, horizon, count));
+        }
+        let mut events = vec![];
+        for item in spec.split(',') {
+            let item = item.trim();
+            let (kind, step) = item.split_once('@').ok_or_else(|| {
+                err!("fault plan item '{item}' is not 'kind@step'")
+            })?;
+            events.push(FaultEvent {
+                step: step.parse::<u64>().map_err(|_| {
+                    err!("fault plan: bad step '{step}' in '{item}'")
+                })?,
+                kind: FaultKind::parse(kind)?,
+            });
+        }
+        events.sort_by_key(|e| e.step);
+        Ok(FaultPlan { events })
+    }
+
+    /// `PF_FAULT_SEED=S` → the default seeded plan for `S`
+    /// (horizon 240, count 12); unset/unparsable → `None`.
+    pub fn from_env() -> Option<Self> {
+        let seed = std::env::var("PF_FAULT_SEED")
+            .ok()?
+            .trim()
+            .parse::<u64>()
+            .ok()?;
+        Some(FaultPlan::seeded(seed, 240, 12))
+    }
+}
+
+/// Stateful cursor over a [`FaultPlan`]: the consuming layer calls
+/// [`begin_step`](FaultInjector::begin_step) once per step and
+/// applies whatever events fire. Steps past the horizon are clean —
+/// recovery is always reachable.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    cursor: usize,
+    step: u64,
+    injected: u64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultInjector { plan, cursor: 0, step: 0, injected: 0 }
+    }
+
+    /// An injector that never fires (the production default).
+    pub fn idle() -> Self {
+        FaultInjector::new(FaultPlan::none())
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Events scheduled for the current step (may be several), in
+    /// plan order. Advances the step counter.
+    pub fn begin_step(&mut self) -> Vec<FaultKind> {
+        let mut fired = vec![];
+        while let Some(ev) = self.plan.events.get(self.cursor) {
+            if ev.step > self.step {
+                break;
+            }
+            fired.push(ev.kind);
+            self.cursor += 1;
+        }
+        self.injected += fired.len() as u64;
+        self.step += 1;
+        fired
+    }
+
+    /// Total events delivered so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Steps consumed so far.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_replay_identically() {
+        let a = FaultPlan::seeded(42, 100, 8);
+        let b = FaultPlan::seeded(42, 100, 8);
+        assert_eq!(a, b);
+        assert_eq!(a.events().len(), 8);
+        assert!(a.events().iter().all(|e| e.step < 100));
+        assert!(a.events().windows(2).all(|w| w[0].step <= w[1].step));
+        let c = FaultPlan::seeded(43, 100, 8);
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn parse_explicit_list_sorts_by_step() {
+        let p = FaultPlan::parse("loss@30, panic@12,exec@61").unwrap();
+        let steps: Vec<u64> =
+            p.events().iter().map(|e| e.step).collect();
+        assert_eq!(steps, vec![12, 30, 61]);
+        assert_eq!(p.events()[0].kind, FaultKind::WorkerPanic);
+        assert_eq!(p.events()[1].kind, FaultKind::BufferLoss);
+        assert_eq!(p.events()[2].kind, FaultKind::ExecFail);
+    }
+
+    #[test]
+    fn parse_seed_form_and_empty() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("none").unwrap().is_empty());
+        let p = FaultPlan::parse("seed:7").unwrap();
+        assert_eq!(p, FaultPlan::seeded(7, 240, 12));
+        let q = FaultPlan::parse("seed:7:50:3").unwrap();
+        assert_eq!(q, FaultPlan::seeded(7, 50, 3));
+        assert!(FaultPlan::parse("seed:x").is_err());
+        assert!(FaultPlan::parse("panic@z").is_err());
+        assert!(FaultPlan::parse("frob@3").is_err());
+        assert!(FaultPlan::parse("panic-3").is_err());
+    }
+
+    #[test]
+    fn injector_fires_at_scheduled_steps_then_goes_clean() {
+        let plan =
+            FaultPlan::parse("panic@1,loss@1,stall@3").unwrap();
+        let mut inj = FaultInjector::new(plan);
+        assert!(inj.begin_step().is_empty()); // step 0
+        assert_eq!(
+            inj.begin_step(),
+            vec![FaultKind::WorkerPanic, FaultKind::BufferLoss]
+        );
+        assert!(inj.begin_step().is_empty()); // step 2
+        assert_eq!(inj.begin_step(), vec![FaultKind::Stall]);
+        for _ in 0..32 {
+            assert!(inj.begin_step().is_empty(), "past the horizon");
+        }
+        assert_eq!(inj.injected(), 3);
+        assert_eq!(inj.step(), 36);
+    }
+
+    #[test]
+    fn past_due_events_fire_on_next_step() {
+        // an injector built mid-run (step counter fresh) still
+        // delivers every event exactly once
+        let mut inj =
+            FaultInjector::new(FaultPlan::parse("alloc@0").unwrap());
+        assert_eq!(inj.begin_step(), vec![FaultKind::AllocFail]);
+        assert!(inj.begin_step().is_empty());
+        assert!(inj.is_idle() == false);
+        assert!(FaultInjector::idle().is_idle());
+    }
+}

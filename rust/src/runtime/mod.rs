@@ -16,6 +16,7 @@
 
 pub mod copy_stream;
 pub mod device_window;
+pub mod fault;
 pub mod tensor;
 
 use std::cell::RefCell;
@@ -29,8 +30,9 @@ use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
 
 pub use copy_stream::{CopyDone, CopyEngine, CopyJob, CopyStream,
-                      DevicePair, Fence, Poisoned};
+                      DevicePair, Fence, FenceWait, Poisoned};
 pub use device_window::{DeviceWindow, UploadStats};
+pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan};
 pub use tensor::HostTensor;
 
 /// One loaded model config: manifest entry + device weights + executable

@@ -3,20 +3,50 @@
 
 use std::fmt;
 
-/// String-backed error with a context chain.
+/// Typed classification for errors the serving tier must *route*
+/// rather than just display (DESIGN.md §11). Most errors stay
+/// untyped strings; a kind is attached only where a caller branches
+/// on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineError {
+    /// KV pool exhausted with nothing preemptible: the request that
+    /// needed the page cannot be served at current load. The
+    /// coordinator retires that request with this error and keeps
+    /// the batch serving — saturation is a per-request outcome, not
+    /// a process failure.
+    Saturated,
+}
+
+/// String-backed error with a context chain and an optional typed
+/// kind (the kind survives added context).
 #[derive(Debug)]
 pub struct Error {
     chain: Vec<String>,
+    kind: Option<EngineError>,
 }
 
 impl Error {
     pub fn msg(m: impl fmt::Display) -> Self {
-        Error { chain: vec![m.to_string()] }
+        Error { chain: vec![m.to_string()], kind: None }
+    }
+
+    /// A pool-saturation error ([`EngineError::Saturated`]).
+    pub fn saturated(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()],
+                kind: Some(EngineError::Saturated) }
     }
 
     pub fn context(mut self, c: impl fmt::Display) -> Self {
         self.chain.push(c.to_string());
         self
+    }
+
+    pub fn kind(&self) -> Option<EngineError> {
+        self.kind
+    }
+
+    pub fn is_saturated(&self) -> bool {
+        self.kind == Some(EngineError::Saturated)
     }
 }
 
@@ -153,5 +183,17 @@ mod tests {
         let v: Option<u32> = None;
         assert_eq!(v.wrap_err("missing field").unwrap_err().to_string(),
                    "missing field");
+    }
+
+    #[test]
+    fn saturated_kind_survives_context() {
+        let e = Error::saturated("pool exhausted")
+            .context("admitting request 7");
+        assert!(e.is_saturated());
+        assert_eq!(e.kind(), Some(EngineError::Saturated));
+        assert_eq!(e.to_string(),
+                   "admitting request 7: pool exhausted");
+        assert!(!err!("plain").is_saturated());
+        assert_eq!(err!("plain").kind(), None);
     }
 }

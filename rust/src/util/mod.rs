@@ -8,5 +8,5 @@ pub mod error;
 pub mod json;
 pub mod profile;
 
-pub use error::{Error, Result, WrapErr};
+pub use error::{EngineError, Error, Result, WrapErr};
 pub use json::Value;

@@ -1,0 +1,664 @@
+//! Chaos conformance: randomized fault schedules vs a fault-free
+//! serial replica (DESIGN.md §11).
+//!
+//! Two independent full replicas of the kvpage + window state machine
+//! run the same random op sequence — one uploads through the
+//! double-buffered [`TransferPipeline`] while a seeded [`FaultPlan`]
+//! injects worker panics, device-buffer loss, transfer stalls,
+//! drained staging (the pool-dry admission behaviour) and failed
+//! executes into it; the other runs the plain serial dirty-range path
+//! with no faults at all. At every execute boundary the pipeline's
+//! FRONT device contents and the serial device contents must both be
+//! element-identical to their pools — faults may only cost
+//! throughput, never a byte.
+//!
+//! On top of byte-identity the suite locks the recovery ladder
+//! (demote on fault, re-promote to pipelined staging after the
+//! backoff-bounded clean-step quota), the fence watchdog (a stalled
+//! worker costs a bounded wait, not a hang), invariant I10 (all
+//! cumulative fault/transfer counters are monotone under chaos), the
+//! allocator audit I1–I4 after every injected fault, and that
+//! zero-fault runs report zero demotions/retries.
+//!
+//! `PF_FAULT_SEED=S` narrows the schedule sweep to one seed (the CI
+//! chaos matrix); `PF_COPY_ENGINE=shared` stages through a shared
+//! multiplexed engine; `PF_COPY_THREADS=N` shards the gather.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use paged_flex::engine::pipeline::TransferPipeline;
+use paged_flex::engine::DegradeLevel;
+use paged_flex::kvpage::{
+    AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
+    PoolGeometry, ResidentWindow,
+};
+use paged_flex::runtime::{CopyEngine, DeviceWindow, FaultInjector,
+                          FaultKind, FaultPlan};
+use paged_flex::trace::Rng;
+
+const N_PAGES: u32 = 48;
+const PAGE_SIZE: usize = 8;
+const BYTES_PER_TOKEN: u64 = 16;
+const MAX_BLOCKS: usize = 12;
+const GEO: PoolGeometry = PoolGeometry {
+    n_layers: 2,
+    n_pages: N_PAGES as usize,
+    page_size: PAGE_SIZE,
+    n_kv_heads: 2,
+    d_head: 4,
+};
+const BATCH_CAP: usize = 4;
+const WINDOW_PAGES: usize = BATCH_CAP * MAX_BLOCKS;
+
+/// `PF_FAULT_SEED=S` → run just that schedule (the CI chaos matrix);
+/// unset → sweep the defaults.
+fn fault_seeds(defaults: &[u64]) -> Vec<u64> {
+    match std::env::var("PF_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+    {
+        Some(s) => vec![s],
+        None => defaults.to_vec(),
+    }
+}
+
+fn env_copy_threads(default: usize) -> usize {
+    std::env::var("PF_COPY_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+fn shared_engine() -> bool {
+    std::env::var("PF_COPY_ENGINE").as_deref() == Ok("shared")
+}
+
+/// One full replica of the host-side decode state.
+struct PathState {
+    mgr: PageManager,
+    k: HostPool,
+    v: HostPool,
+    win: ResidentWindow,
+}
+
+impl PathState {
+    fn new(policy: GrowthPolicy) -> Self {
+        let alloc = Arc::new(PageAllocator::new(
+            N_PAGES, PAGE_SIZE, BYTES_PER_TOKEN, policy));
+        PathState {
+            mgr: PageManager::new(alloc, MAX_BLOCKS),
+            k: HostPool::zeros(GEO),
+            v: HostPool::zeros(GEO),
+            win: ResidentWindow::new(GEO),
+        }
+    }
+
+    fn write_tokens(&mut self, id: u64, start: usize, n: usize,
+                    counter: &mut f32) {
+        let pages = self.mgr.table(id).unwrap().pages().to_vec();
+        for pos in start..start + n {
+            let (page, off) = (pages[pos / PAGE_SIZE], pos % PAGE_SIZE);
+            for layer in 0..GEO.n_layers {
+                *counter += 1.0;
+                self.k.token_row_mut(layer, page, off).fill(*counter);
+                self.v.token_row_mut(layer, page, off).fill(-*counter);
+            }
+        }
+    }
+
+    /// Allocator audit I1–I4 (DESIGN.md §7), run after every injected
+    /// fault: chaos must never corrupt page accounting.
+    fn check_audit(&self, live: &[u64], ctx: &str, path: &str) {
+        let alloc = self.mgr.allocator();
+        let mut held: HashMap<u32, u32> = HashMap::new();
+        for &id in live {
+            let t = self.mgr.table(id).unwrap();
+            assert!(t.len_tokens() <= t.capacity_tokens(),
+                    "{ctx}: {path} I3 violated for seq {id}");
+            for &p in t.pages() {
+                *held.entry(p).or_insert(0) += 1;
+            }
+        }
+        for (&p, &n) in &held {
+            assert!(alloc.refcount(p) >= n,
+                    "{ctx}: {path} I2 page {p}: {n} holders > rc {}",
+                    alloc.refcount(p));
+        }
+        assert_eq!(alloc.free_pages() + held.len(), N_PAGES as usize,
+                   "{ctx}: {path} I1 conservation");
+        let page_bytes = PAGE_SIZE as u64 * BYTES_PER_TOKEN;
+        assert_eq!(alloc.audit().reserved_bytes(),
+                   held.len() as u64 * page_bytes,
+                   "{ctx}: {path} I4 reserved-bytes accounting");
+    }
+}
+
+fn pick<'a>(rng: &mut Rng, xs: &'a [u64]) -> Option<&'a u64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(&xs[rng.below(xs.len() as u64) as usize])
+    }
+}
+
+struct ChaosHarness {
+    /// Replica uploading through the (fault-injected) pipeline.
+    p: PathState,
+    pipe: TransferPipeline,
+    /// Keeps the shared engine's owner alive for the run.
+    _engine: Option<CopyEngine>,
+    /// Fault-free serial replica (the reference stream).
+    s: PathState,
+    s_kdev: DeviceWindow,
+    s_vdev: DeviceWindow,
+    live: Vec<u64>,
+    next_id: u64,
+    rng: Rng,
+    counter_p: f32,
+    counter_s: f32,
+}
+
+impl ChaosHarness {
+    fn new(seed: u64, policy: GrowthPolicy, copy_threads: usize)
+           -> Self {
+        let mut p = PathState::new(policy);
+        p.win.set_copy_threads(copy_threads);
+        let (pipe, engine) = if shared_engine() {
+            let e = CopyEngine::new(1);
+            (TransferPipeline::sim_shared(&e, true), Some(e))
+        } else {
+            (TransferPipeline::sim(true), None)
+        };
+        ChaosHarness {
+            p,
+            pipe,
+            _engine: engine,
+            s: PathState::new(policy),
+            s_kdev: DeviceWindow::sim(),
+            s_vdev: DeviceWindow::sim(),
+            live: vec![],
+            next_id: 1,
+            rng: Rng::seeded(seed),
+            counter_p: 0.0,
+            counter_s: 0.0,
+        }
+    }
+
+    /// Map one scheduled fault onto the pipelined replica, exactly as
+    /// `engine::paged` maps it (the serial replica never faults).
+    fn apply_fault(&mut self, kind: FaultKind) {
+        match kind {
+            FaultKind::WorkerPanic => {
+                self.pipe.poison_stream_for_test();
+            }
+            FaultKind::Stall => {
+                // well under the fence watchdog set by the tests:
+                // latency, not a timeout
+                self.pipe.inject_stall(10_000_000);
+            }
+            FaultKind::BufferLoss => {
+                self.p.win.invalidate();
+                self.pipe.invalidate();
+            }
+            FaultKind::ExecFail => {
+                self.p.win.invalidate();
+                self.pipe.note_execute_failure();
+            }
+            FaultKind::AllocFail => {
+                // the engine's pool-dry admission drains staging
+                self.pipe.drain();
+            }
+        }
+    }
+
+    fn reserve_op(&mut self) {
+        let id = self.next_id;
+        let len = 1 + self.rng.below(60) as usize;
+        let prompt: Vec<u32> =
+            (0..len).map(|_| self.rng.below(512) as u32).collect();
+        let a = self.p.mgr.reserve(id, &prompt);
+        let b = self.s.mgr.reserve(id, &prompt);
+        match (a, b) {
+            (Ok(oa), Ok(ob)) => {
+                assert_eq!(oa.cached_tokens, ob.cached_tokens,
+                           "replicas diverged on admission");
+                self.next_id += 1;
+                self.live.push(id);
+                let fresh = prompt.len() - oa.cached_tokens;
+                self.p.write_tokens(id, oa.cached_tokens, fresh,
+                                    &mut self.counter_p);
+                self.s.write_tokens(id, ob.cached_tokens, fresh,
+                                    &mut self.counter_s);
+                self.p.mgr.note_assigned(id, fresh).unwrap();
+                self.s.mgr.note_assigned(id, fresh).unwrap();
+                if self.rng.below(2) == 0 {
+                    self.p.mgr.register_prefix(id, &prompt).unwrap();
+                    self.s.mgr.register_prefix(id, &prompt).unwrap();
+                }
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on reserve outcome"),
+        }
+    }
+
+    fn append_op(&mut self) {
+        let Some(&id) = pick(&mut self.rng, &self.live) else { return };
+        let extra = 1 + self.rng.below(10) as usize;
+        let a = self.p.mgr.prepare_append(id, extra);
+        let b = self.s.mgr.prepare_append(id, extra);
+        match (a, b) {
+            (Ok(pa), Ok(pb)) => {
+                if let Some((src, dst)) = pa.cow_copy {
+                    self.p.k.copy_page(src, dst);
+                    self.p.v.copy_page(src, dst);
+                }
+                if let Some((src, dst)) = pb.cow_copy {
+                    self.s.k.copy_page(src, dst);
+                    self.s.v.copy_page(src, dst);
+                }
+                let len = self.p.mgr.seq_len(id).unwrap();
+                self.p.write_tokens(id, len, extra,
+                                    &mut self.counter_p);
+                self.s.write_tokens(id, len, extra,
+                                    &mut self.counter_s);
+                self.p.mgr.note_assigned(id, extra).unwrap();
+                self.s.mgr.note_assigned(id, extra).unwrap();
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("replicas diverged on append outcome"),
+        }
+    }
+
+    fn free_op(&mut self, preempt: bool) {
+        if self.live.is_empty() {
+            return;
+        }
+        let i = self.rng.below(self.live.len() as u64) as usize;
+        let id = self.live.swap_remove(i);
+        for page in self.p.mgr.free(id).unwrap() {
+            self.p.win.forget(page);
+        }
+        for page in self.s.mgr.free(id).unwrap() {
+            self.s.win.forget(page);
+        }
+        if preempt {
+            self.p.win.invalidate();
+            self.s.win.invalidate();
+            self.pipe.drain();
+        }
+    }
+
+    /// One engine-shaped decode step over a random batch; verifies the
+    /// execute-boundary equivalence inside.
+    fn decode_step_op(&mut self, ctx: &str) {
+        let mut batch: Vec<u64> = vec![];
+        let want = 1 + self.rng.below(BATCH_CAP as u64) as usize;
+        for _ in 0..want {
+            if let Some(&id) = pick(&mut self.rng, &self.live) {
+                if !batch.contains(&id) {
+                    batch.push(id);
+                }
+            }
+        }
+        batch.retain(|&id| {
+            let a = self.p.mgr.prepare_append(id, 1);
+            let b = self.s.mgr.prepare_append(id, 1);
+            match (a, b) {
+                (Ok(pa), Ok(pb)) => {
+                    if let Some((src, dst)) = pa.cow_copy {
+                        self.p.k.copy_page(src, dst);
+                        self.p.v.copy_page(src, dst);
+                    }
+                    if let Some((src, dst)) = pb.cow_copy {
+                        self.s.k.copy_page(src, dst);
+                        self.s.v.copy_page(src, dst);
+                    }
+                    true
+                }
+                (Err(_), Err(_)) => false,
+                _ => panic!("{ctx}: replicas diverged on append"),
+            }
+        });
+        if batch.is_empty() {
+            return;
+        }
+
+        // pipelined replica: the engine's three stage boundaries
+        self.pipe.begin_step(&mut self.p.win);
+        self.p.win.begin_step(WINDOW_PAGES);
+        let mut mapped: Vec<(u64, Vec<u32>)> = vec![];
+        for &id in &batch {
+            let len = self.p.mgr.seq_len(id).unwrap();
+            let pages = self
+                .p
+                .mgr
+                .table(id)
+                .unwrap()
+                .blocks_covering(len + 1)
+                .to_vec();
+            for &pg in &pages {
+                self.p
+                    .win
+                    .map_page(&mut self.p.k, &mut self.p.v, pg)
+                    .expect("pipeline window slots exhausted");
+            }
+            mapped.push((id, pages));
+        }
+        self.p.win.flush_pending(&self.p.k, &self.p.v);
+        self.pipe.pre_execute(&mut self.p.win);
+
+        // serial fault-free replica
+        self.s.win.begin_step(WINDOW_PAGES);
+        for (_, pages) in &mapped {
+            for &pg in pages {
+                self.s
+                    .win
+                    .map_page(&mut self.s.k, &mut self.s.v, pg)
+                    .expect("serial window slots exhausted");
+            }
+        }
+        let (plan, through) = self.s.win.plan_for(
+            self.s_kdev.epoch().min(self.s_vdev.epoch()),
+            false,
+        );
+        self.s_kdev.apply_at(self.s.win.k_window(), &plan, through);
+        self.s_vdev.apply_at(self.s.win.v_window(), &plan, through);
+
+        self.verify(ctx, &mapped);
+        self.pipe.note_execute(1_000_000);
+
+        for &id in &batch {
+            let len = self.p.mgr.seq_len(id).unwrap();
+            for (st, counter) in [
+                (&mut self.p, &mut self.counter_p),
+                (&mut self.s, &mut self.counter_s),
+            ] {
+                let pages = st.mgr.table(id).unwrap().pages().to_vec();
+                let (page, off) =
+                    (pages[len / PAGE_SIZE], len % PAGE_SIZE);
+                for layer in 0..GEO.n_layers {
+                    *counter += 1.0;
+                    st.k.token_row_mut(layer, page, off).fill(*counter);
+                    st.v.token_row_mut(layer, page, off)
+                        .fill(-*counter);
+                    st.win.write_row(&mut st.k, &mut st.v, layer, page,
+                                     off);
+                }
+                st.mgr.note_assigned(id, 1).unwrap();
+            }
+        }
+        self.p.win.flush_rows(&self.p.k, &self.p.v);
+        self.s.win.flush_rows(&self.s.k, &self.s.v);
+    }
+
+    /// For every mapped page the pipeline's FRONT device pair and the
+    /// serial device pair are element-identical to their pools (and
+    /// the pools are identical by construction): chaos never changes
+    /// a served byte.
+    fn verify(&self, ctx: &str, mapped: &[(u64, Vec<u32>)]) {
+        let pe = GEO.page_elems();
+        let fk = self.pipe.front().k.contents()
+            .expect("pipeline front K resident after pre_execute");
+        let fv = self.pipe.front().v.contents()
+            .expect("pipeline front V resident after pre_execute");
+        let sk = self.s_kdev.contents()
+            .expect("serial K resident after apply");
+        let sv = self.s_vdev.contents()
+            .expect("serial V resident after apply");
+        for (id, pages) in mapped {
+            for &p in pages {
+                let ps = self.p.win.slot(p).unwrap() as usize;
+                let ss = self.s.win.slot(p).unwrap() as usize;
+                for layer in 0..GEO.n_layers {
+                    let src = GEO.offset(layer, p, 0);
+                    let kp = &self.p.k.as_slice()[src..src + pe];
+                    let vp = &self.p.v.as_slice()[src..src + pe];
+                    let poff = (layer * WINDOW_PAGES + ps) * pe;
+                    let soff = (layer * WINDOW_PAGES + ss) * pe;
+                    assert_eq!(&fk[poff..poff + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: faulted FRONT device stale");
+                    assert_eq!(&fv[poff..poff + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: faulted FRONT device stale");
+                    assert_eq!(&sk[soff..soff + pe], kp,
+                               "{ctx}: seq {id} K page {p} layer \
+                                {layer}: serial reference diverged");
+                    assert_eq!(&sv[soff..soff + pe], vp,
+                               "{ctx}: seq {id} V page {p} layer \
+                                {layer}: serial reference diverged");
+                }
+            }
+        }
+    }
+
+    fn step(&mut self, ctx: &str) {
+        match self.rng.below(10) {
+            0..=2 => self.reserve_op(),
+            3 => self.append_op(),
+            4 => self.free_op(false),
+            5 => self.free_op(true),
+            _ => self.decode_step_op(ctx),
+        }
+    }
+
+    fn check_audit(&self, ctx: &str) {
+        self.p.check_audit(&self.live, ctx, "faulted");
+        self.s.check_audit(&self.live, ctx, "serial");
+    }
+}
+
+/// I10 snapshot: every cumulative fault/transfer counter, plus retired
+/// upload bytes. All must be monotone non-decreasing under chaos.
+#[derive(Clone, Copy, Default)]
+struct Monotone {
+    steps: u64,
+    staged_uploads: u64,
+    staged_bytes: u64,
+    poisons: u64,
+    faults: u64,
+    demotes: u64,
+    repromotes: u64,
+    retries: u64,
+    fence_timeouts: u64,
+    bytes_uploaded: u64,
+}
+
+impl Monotone {
+    fn snap(h: &ChaosHarness) -> Self {
+        let s = h.pipe.stats();
+        Monotone {
+            steps: s.steps,
+            staged_uploads: s.staged_uploads,
+            staged_bytes: s.staged_bytes,
+            poisons: s.poisons,
+            faults: s.faults,
+            demotes: s.demotes,
+            repromotes: s.repromotes,
+            retries: s.retries,
+            fence_timeouts: s.fence_timeouts,
+            bytes_uploaded: h.pipe.upload_stats().bytes_uploaded,
+        }
+    }
+
+    fn assert_ge(&self, prev: &Monotone, ctx: &str) {
+        for (name, now, was) in [
+            ("steps", self.steps, prev.steps),
+            ("staged_uploads", self.staged_uploads,
+             prev.staged_uploads),
+            ("staged_bytes", self.staged_bytes, prev.staged_bytes),
+            ("poisons", self.poisons, prev.poisons),
+            ("faults", self.faults, prev.faults),
+            ("demotes", self.demotes, prev.demotes),
+            ("repromotes", self.repromotes, prev.repromotes),
+            ("retries", self.retries, prev.retries),
+            ("fence_timeouts", self.fence_timeouts,
+             prev.fence_timeouts),
+            ("bytes_uploaded", self.bytes_uploaded,
+             prev.bytes_uploaded),
+        ] {
+            assert!(now >= was,
+                    "{ctx}: I10 counter {name} went backwards \
+                     ({was} -> {now})");
+        }
+    }
+}
+
+/// Drive one seeded chaos schedule to completion. Returns the
+/// harness for end-state assertions.
+fn chaos_run(seed: u64, steps: usize, fault_count: usize)
+             -> ChaosHarness {
+    let policy = if seed % 2 == 0 {
+        GrowthPolicy::Exact
+    } else {
+        GrowthPolicy::PowerOfTwo
+    };
+    let plan = FaultPlan::seeded(
+        seed, (steps as u64).saturating_sub(steps as u64 / 4),
+        fault_count);
+    let mut inj = FaultInjector::new(plan);
+    let mut h = ChaosHarness::new(31_000 + seed, policy,
+                                  env_copy_threads(1));
+    // generous next to a 10 ms injected stall, tiny next to a hang
+    h.pipe.set_fence_timeout(Duration::from_millis(500));
+    let mut prev = Monotone::snap(&h);
+    for step in 0..steps {
+        let ctx = format!("chaos seed {seed} step {step} ({policy:?})");
+        let fired = inj.begin_step();
+        for kind in &fired {
+            h.apply_fault(*kind);
+        }
+        h.step(&ctx);
+        if !fired.is_empty() {
+            // satellite: allocator audit after every injected fault
+            h.check_audit(&ctx);
+        }
+        let now = Monotone::snap(&h);
+        now.assert_ge(&prev, &ctx);
+        prev = now;
+    }
+    assert!(inj.injected() >= 1,
+            "seed {seed}: schedule never fired (horizon too small?)");
+    while !h.live.is_empty() {
+        h.free_op(false);
+    }
+    assert_eq!(h.p.mgr.allocator().free_pages(), N_PAGES as usize,
+               "seed {seed}: faulted replica leaked pages");
+    assert_eq!(h.s.mgr.allocator().free_pages(), N_PAGES as usize,
+               "seed {seed}: serial replica leaked pages");
+    h
+}
+
+#[test]
+fn seeded_fault_schedules_keep_streams_byte_identical() {
+    for seed in fault_seeds(&[3, 17, 29]) {
+        let h = chaos_run(seed, 260, 10);
+        let ps = h.pipe.stats();
+        assert!(ps.staged_uploads > 0,
+                "seed {seed}: pipeline never staged ({ps:?})");
+    }
+}
+
+#[test]
+fn fault_storm_demotes_then_repromotes_to_pipelined() {
+    // Deterministic storm: three ladder faults in a row walk the pool
+    // to Rebuild; the backoff quota (4 -> 8 -> 16, capped) then
+    // requires at most 16 clean steps per rung to climb home.
+    let mut h = ChaosHarness::new(55, GrowthPolicy::Exact, 1);
+    while h.live.is_empty() {
+        h.reserve_op();
+    }
+    for i in 0..4 {
+        h.decode_step_op(&format!("storm warmup {i}"));
+    }
+    h.apply_fault(FaultKind::WorkerPanic);
+    h.decode_step_op("storm a"); // settle sees the poisoned fence
+    h.apply_fault(FaultKind::ExecFail);
+    h.apply_fault(FaultKind::ExecFail);
+    assert!(h.pipe.degrade_level() > DegradeLevel::Pipelined,
+            "storm must demote, at {:?}", h.pipe.degrade_level());
+    let mut recovered_at = None;
+    for i in 0..80 {
+        h.decode_step_op(&format!("recovery {i}"));
+        if h.pipe.degrade_level() == DegradeLevel::Pipelined {
+            recovered_at = Some(i);
+            break;
+        }
+    }
+    assert!(recovered_at.is_some(),
+            "pool never re-promoted to pipelined within 80 clean \
+             steps (level {:?}, stats {:?})",
+            h.pipe.degrade_level(), h.pipe.stats());
+    // the fresh lane must actually stage again after recovery
+    let staged_before = h.pipe.stats().staged_uploads;
+    for i in 0..6 {
+        h.decode_step_op(&format!("post-recovery {i}"));
+    }
+    assert!(h.pipe.stats().staged_uploads > staged_before,
+            "re-promoted pool never staged again ({:?})",
+            h.pipe.stats());
+    assert!(h.pipe.stats().repromotes >= 1, "{:?}", h.pipe.stats());
+    assert!(h.pipe.stats().demotes >= 3, "{:?}", h.pipe.stats());
+}
+
+#[test]
+fn stalled_transfer_times_out_instead_of_hanging() {
+    let mut h = ChaosHarness::new(99, GrowthPolicy::Exact, 1);
+    h.pipe.set_fence_timeout(Duration::from_millis(25));
+    while h.live.is_empty() {
+        h.reserve_op();
+    }
+    for i in 0..4 {
+        h.decode_step_op(&format!("stall warmup {i}"));
+    }
+    // park the worker far past the watchdog; the next settle must cut
+    // the stalled transfer loose instead of riding it out
+    h.pipe.inject_stall(400_000_000);
+    let t = Instant::now();
+    for i in 0..6 {
+        h.decode_step_op(&format!("stall step {i}"));
+    }
+    assert!(t.elapsed() < Duration::from_millis(350),
+            "watchdog failed to bound a stalled transfer \
+             ({:?} elapsed, stats {:?})", t.elapsed(),
+            h.pipe.stats());
+    assert!(h.pipe.stats().fence_timeouts >= 1,
+            "stall never tripped the watchdog ({:?})",
+            h.pipe.stats());
+    assert!(h.pipe.degrade_level() > DegradeLevel::Pipelined
+                || h.pipe.stats().repromotes >= 1,
+            "timeout must demote (or already have recovered)");
+}
+
+#[test]
+fn zero_fault_run_reports_zero_demotes_and_retries() {
+    let mut h = ChaosHarness::new(7, GrowthPolicy::Exact,
+                                  env_copy_threads(1));
+    for step in 0..200 {
+        h.step(&format!("clean step {step}"));
+    }
+    let ps = h.pipe.stats();
+    assert!(ps.staged_uploads > 0, "never staged ({ps:?})");
+    assert_eq!(ps.faults, 0, "clean run reported faults ({ps:?})");
+    assert_eq!(ps.demotes, 0, "clean run reported demotes ({ps:?})");
+    assert_eq!(ps.retries, 0, "clean run reported retries ({ps:?})");
+    assert_eq!(ps.fence_timeouts, 0,
+               "clean run tripped the watchdog ({ps:?})");
+    assert_eq!(ps.poisons, 0, "clean run reported poisons ({ps:?})");
+    assert_eq!(h.pipe.degrade_level(), DegradeLevel::Pipelined);
+}
+
+#[test]
+fn i10_heavy_schedules_counters_stay_monotone() {
+    // Denser schedules than the byte-identity sweep: every kind fires
+    // several times, including back-to-back events on one step.
+    for seed in fault_seeds(&[101, 202]) {
+        let h = chaos_run(seed, 200, 24);
+        let ps = h.pipe.stats();
+        assert!(ps.faults >= ps.demotes || ps.demotes == 0,
+                "seed {seed}: more demotes than faults ({ps:?})");
+    }
+}
