@@ -1,0 +1,460 @@
+//! Overload shed gate — drives the serving tier's admission/shed
+//! policy (coordinator::overload + kvpage budget accounting) through
+//! a deterministic tick-based rig under a seeded 2× over-capacity
+//! burst (DESIGN.md §12). No wall clock anywhere: one tick = one
+//! scheduler step = one decoded token per running sequence, so the
+//! run replays bit-identically on every machine.
+//!
+//! The rig is the offline twin of `coordinator::tick_paged`: KV-budget
+//! admission with watermark hysteresis, deadline expiry before decode,
+//! bounded retry-with-backoff for pool-exhaustion victims, and the
+//! Accept → DeferPrefill → ShedNewest → RejectAll ladder stepped by
+//! queue depth + pool pressure. Arrivals come from
+//! `sim::load::bursty_trace` (thinned Poisson, square-wave bursts).
+//!
+//! Exits nonzero (CI gate) when any of these break under the burst:
+//!   * a request fails to terminate with tokens OR a typed reason
+//!     (no aborts, no hangs — the run itself must drain);
+//!   * the storm produces zero shed activity (ladder never engaged);
+//!   * p99 TTFT of admitted-and-finished requests exceeds the
+//!     deadline budget (expiry must bound the tail);
+//!   * any overload counter moves backwards between ticks (I11);
+//!   * the zero-overload control run shows ANY shed/expiry/deferral
+//!     activity, or the pool is not fully restored after drain.
+
+include!("common.rs");
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Duration;
+
+use paged_flex::coordinator::{backoff_ticks, estimate_pages,
+                              overload_pressure, AdmissionGate,
+                              OverloadLadder, ShedLevel};
+use paged_flex::harness::print_table;
+use paged_flex::kvpage::{AllocError, GrowthPolicy, PageAllocator,
+                         PageManager};
+use paged_flex::metrics::ServingMetrics;
+use paged_flex::sim::load::{bursty_trace, BurstSpec};
+
+const PAGE_SIZE: usize = 8;
+const N_PAGES: u32 = 256; // 2048-token pool
+const MAX_RUNNING: usize = 8;
+const MAX_WAITING: usize = 64;
+const QUEUE_HIGH: usize = 32;
+const QUEUE_LOW: usize = 8;
+const LOW_PAGES: usize = 16;
+const HIGH_PAGES: usize = 32;
+const WATERMARK: usize = 4;
+const MAX_RETRIES: u32 = 4;
+const DEADLINE_TICKS: u64 = 300;
+const TICK_US: u64 = 1_000;
+const MAX_NEW: usize = 16;
+
+/// ~0.47 req/tick service capacity (MAX_RUNNING seqs, ~17-tick
+/// lifetime) → base 350/s sits under it, the 2.5× burst ≈ 2× over.
+const STORM: BurstSpec = BurstSpec {
+    base_rate_per_sec: 350.0,
+    burst_multiplier: 2.5,
+    burst_period_sec: 1.0,
+    burst_duty: 0.4,
+};
+const CALM: BurstSpec = BurstSpec {
+    base_rate_per_sec: 100.0,
+    burst_multiplier: 1.0,
+    burst_period_sec: 1.0,
+    burst_duty: 0.0,
+};
+
+struct Job {
+    id: u64,
+    arrive: u64,
+    prompt_len: usize,
+    generated: usize,
+    retries: u32,
+    not_before: u64,
+    first_tick: Option<u64>,
+}
+
+struct Outcome {
+    tokens: usize,
+    reason: Option<&'static str>,
+    ttft: Option<u64>,
+}
+
+#[derive(Default)]
+struct RunStats {
+    finished: u64,
+    violations: Vec<String>,
+    ttfts: Vec<u64>,
+}
+
+/// One full deterministic serving run over `spec`; every violation is
+/// collected rather than panicking so the gate can report them all.
+fn run(seed: u64, spec: BurstSpec, duration_sec: f64,
+       m: &ServingMetrics) -> RunStats {
+    let trace = bursty_trace(seed, 512, spec, duration_sec, 16, 64,
+                             MAX_NEW);
+    let n_req = trace.len();
+    let mut arrivals: VecDeque<(u64, u64, usize)> = trace
+        .iter()
+        .map(|r| (r.arrival_us / TICK_US, r.id, r.prompt.len()))
+        .collect();
+
+    let alloc = Arc::new(PageAllocator::new(
+        N_PAGES, PAGE_SIZE, 64, GrowthPolicy::Exact));
+    let mut mgr = PageManager::new(Arc::clone(&alloc), 64);
+    // every synthetic prompt is a 0..len ramp — with prefix sharing
+    // on they'd all alias one chain and the budget path under test
+    // would never see real pool pressure
+    mgr.set_prefix_cache(false);
+    let mut ladder = OverloadLadder::new();
+    let mut gate = AdmissionGate::new();
+    let mut waiting: VecDeque<Job> = VecDeque::new();
+    let mut running: Vec<Job> = Vec::new();
+    let mut outcomes: Vec<Option<Outcome>> = Vec::new();
+    outcomes.resize_with(n_req, || None);
+    let mut stats = RunStats::default();
+    let mut last_snap = [0u64; 7];
+
+    let horizon = arrivals.back().map(|a| a.0).unwrap_or(0)
+        + DEADLINE_TICKS
+        + 64 * MAX_RETRIES as u64
+        + MAX_NEW as u64
+        + 64;
+    let mut tick = 0u64;
+    let terminate =
+        |job: Job, why: &'static str,
+         outcomes: &mut Vec<Option<Outcome>>| {
+            outcomes[job.id as usize] = Some(Outcome {
+                tokens: job.generated,
+                reason: Some(why),
+                ttft: None,
+            });
+        };
+
+    while tick <= horizon {
+        // 1. arrivals (submit-side rejections are typed)
+        while arrivals.front().map(|a| a.0 <= tick).unwrap_or(false) {
+            let (_, id, prompt_len) = arrivals.pop_front().unwrap();
+            let job = Job { id, arrive: tick, prompt_len,
+                            generated: 0, retries: 0, not_before: 0,
+                            first_tick: None };
+            if ladder.level() == ShedLevel::RejectAll {
+                ServingMetrics::inc(&m.requests_rejected, 1);
+                ServingMetrics::inc(&m.requests_shed, 1);
+                terminate(job, "overloaded", &mut outcomes);
+            } else if waiting.len() >= MAX_WAITING {
+                ServingMetrics::inc(&m.requests_rejected, 1);
+                terminate(job, "queue_full", &mut outcomes);
+            } else {
+                waiting.push_back(job);
+            }
+        }
+
+        // 2. overload tick: expiry, pressure, shed-newest
+        let mut i = 0;
+        while i < waiting.len() {
+            if tick - waiting[i].arrive >= DEADLINE_TICKS {
+                let job = waiting.remove(i).unwrap();
+                ServingMetrics::inc(&m.requests_expired, 1);
+                terminate(job, "expired", &mut outcomes);
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < running.len() {
+            if tick - running[i].arrive >= DEADLINE_TICKS {
+                let job = running.swap_remove(i);
+                mgr.free(job.id).unwrap();
+                ServingMetrics::inc(&m.requests_expired, 1);
+                terminate(job, "expired", &mut outcomes);
+            } else {
+                i += 1;
+            }
+        }
+        let free = alloc.free_pages();
+        let level = ladder.note_tick(overload_pressure(
+            waiting.len(), QUEUE_HIGH, free, LOW_PAGES));
+        if level >= ShedLevel::ShedNewest {
+            while waiting.len() > QUEUE_LOW {
+                let job = waiting.pop_back().unwrap();
+                ServingMetrics::inc(&m.requests_shed, 1);
+                terminate(job, "overloaded", &mut outcomes);
+            }
+        }
+        m.shed_demotes.store(ladder.demotes(), Relaxed);
+        m.shed_repromotes.store(ladder.repromotes(), Relaxed);
+
+        // 3. admission: stash-aware backoff gate + KV page budget
+        while running.len() < MAX_RUNNING {
+            if level >= ShedLevel::DeferPrefill && !running.is_empty()
+            {
+                break;
+            }
+            let ready = waiting
+                .front()
+                .map(|j| j.not_before <= tick)
+                .unwrap_or(false);
+            if !ready {
+                break;
+            }
+            let free = alloc.free_pages();
+            let open = gate.evaluate(free, LOW_PAGES, HIGH_PAGES);
+            let job = waiting.front().unwrap();
+            let est = estimate_pages(
+                job.prompt_len + job.generated,
+                MAX_NEW - job.generated, PAGE_SIZE);
+            let fits = free >= est + WATERMARK;
+            if (!open || !fits) && !running.is_empty() {
+                gate.note_deferral();
+                ServingMetrics::inc(&m.admission_deferrals, 1);
+                break;
+            }
+            let mut job = waiting.pop_front().unwrap();
+            let ctx: Vec<u32> =
+                (0..(job.prompt_len + job.generated) as u32).collect();
+            match mgr.reserve(job.id, &ctx) {
+                Ok(_) => {
+                    mgr.note_assigned(job.id, ctx.len()).unwrap();
+                    ServingMetrics::inc(&m.requests_admitted, 1);
+                    ServingMetrics::inc(&m.tokens_prefilled,
+                                        ctx.len() as u64);
+                    running.push(job);
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    if job.retries >= MAX_RETRIES {
+                        ServingMetrics::inc(&m.requests_rejected, 1);
+                        terminate(job, "saturated", &mut outcomes);
+                    } else {
+                        job.retries += 1;
+                        job.not_before =
+                            tick + backoff_ticks(job.retries);
+                        ServingMetrics::inc(&m.saturated_retries, 1);
+                        waiting.push_front(job);
+                    }
+                    break;
+                }
+                Err(e) => {
+                    stats.violations
+                         .push(format!("req {}: {e}", job.id));
+                    terminate(job, "internal", &mut outcomes);
+                    break;
+                }
+            }
+        }
+
+        // 4. decode: one token per running seq per tick
+        let mut i = 0;
+        while i < running.len() {
+            match mgr.prepare_append(running[i].id, 1) {
+                Ok(_) => {
+                    mgr.note_assigned(running[i].id, 1).unwrap();
+                    if running[i].first_tick.is_none() {
+                        running[i].first_tick = Some(tick);
+                        let t = tick - running[i].arrive;
+                        stats.ttfts.push(t);
+                        m.ttft.record(Duration::from_millis(t));
+                    }
+                    running[i].generated += 1;
+                    ServingMetrics::inc(&m.tokens_decoded, 1);
+                    if running[i].generated >= MAX_NEW {
+                        let job = running.swap_remove(i);
+                        mgr.free(job.id).unwrap();
+                        stats.finished += 1;
+                        ServingMetrics::inc(&m.requests_finished, 1);
+                        outcomes[job.id as usize] = Some(Outcome {
+                            tokens: job.generated,
+                            reason: None,
+                            ttft: job
+                                .first_tick
+                                .map(|f| f - job.arrive),
+                        });
+                        continue;
+                    }
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    // saturated victim: preempt, bounded retry
+                    let mut job = running.swap_remove(i);
+                    mgr.free(job.id).unwrap();
+                    if job.retries >= MAX_RETRIES {
+                        ServingMetrics::inc(&m.requests_rejected, 1);
+                        terminate(job, "saturated", &mut outcomes);
+                    } else {
+                        job.retries += 1;
+                        job.not_before =
+                            tick + backoff_ticks(job.retries);
+                        ServingMetrics::inc(&m.saturated_retries, 1);
+                        ServingMetrics::inc(&m.requests_preempted, 1);
+                        waiting.push_front(job);
+                    }
+                    continue;
+                }
+                Err(e) => {
+                    let job = running.swap_remove(i);
+                    mgr.free(job.id).unwrap();
+                    stats.violations
+                         .push(format!("req {}: {e}", job.id));
+                    terminate(job, "internal", &mut outcomes);
+                    continue;
+                }
+            }
+            i += 1;
+        }
+
+        // 5. I11: overload counters never move backwards
+        let snap = [
+            m.requests_shed.load(Relaxed),
+            m.requests_expired.load(Relaxed),
+            m.saturated_retries.load(Relaxed),
+            m.shed_demotes.load(Relaxed),
+            m.shed_repromotes.load(Relaxed),
+            m.admission_deferrals.load(Relaxed),
+            m.requests_rejected.load(Relaxed),
+        ];
+        if snap.iter().zip(&last_snap).any(|(a, b)| a < b) {
+            stats.violations.push(format!(
+                "tick {tick}: counter regressed {last_snap:?} -> \
+                 {snap:?}"));
+        }
+        last_snap = snap;
+
+        if arrivals.is_empty() && waiting.is_empty()
+            && running.is_empty()
+        {
+            break;
+        }
+        tick += 1;
+    }
+
+    if !(arrivals.is_empty() && waiting.is_empty()
+         && running.is_empty())
+    {
+        stats.violations.push(format!(
+            "run did not drain by tick {horizon}: {} queued, {} \
+             running", waiting.len() + arrivals.len(),
+            running.len()));
+    }
+    if alloc.free_pages() != N_PAGES as usize {
+        stats.violations.push(format!(
+            "pool leak: {} of {N_PAGES} pages free after drain",
+            alloc.free_pages()));
+    }
+    for (id, o) in outcomes.iter().enumerate() {
+        match o {
+            None => stats.violations.push(format!(
+                "req {id} vanished without tokens or typed reason")),
+            Some(o) if o.reason == Some("internal") => stats
+                .violations
+                .push(format!("req {id} aborted untyped")),
+            Some(o) if o.reason.is_none()
+                && (o.tokens != MAX_NEW || o.ttft.is_none()) =>
+            {
+                stats.violations.push(format!(
+                    "req {id} finished with {} of {MAX_NEW} tokens \
+                     (ttft recorded: {})", o.tokens,
+                    o.ttft.is_some()));
+            }
+            _ => {}
+        }
+    }
+    stats
+}
+
+fn p99(sorted: &mut Vec<u64>) -> u64 {
+    sorted.sort_unstable();
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * 0.99).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let duration = if quick() { 2.0 } else { 4.0 };
+    let seeds: &[u64] = if quick() { &[3] } else { &[3, 17, 29] };
+    let mut rows = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    for &seed in seeds {
+        for (name, spec) in [("storm", STORM), ("calm", CALM)] {
+            let m = ServingMetrics::new();
+            let mut st = run(seed, spec, duration, &m);
+            let shed = m.requests_shed.load(Relaxed);
+            let expired = m.requests_expired.load(Relaxed);
+            let retries = m.saturated_retries.load(Relaxed);
+            let demotes = m.shed_demotes.load(Relaxed);
+            let defer = m.admission_deferrals.load(Relaxed);
+            let p99_ttft = p99(&mut st.ttfts);
+            for v in &st.violations {
+                failures.push(format!("{name} seed {seed}: {v}"));
+            }
+            match name {
+                "storm" => {
+                    if shed + demotes + defer + expired == 0 {
+                        failures.push(format!(
+                            "storm seed {seed}: 2x burst produced \
+                             zero shed activity"));
+                    }
+                    if p99_ttft > DEADLINE_TICKS {
+                        failures.push(format!(
+                            "storm seed {seed}: p99 TTFT \
+                             {p99_ttft} ticks exceeds the \
+                             {DEADLINE_TICKS}-tick deadline"));
+                    }
+                }
+                _ => {
+                    if shed + expired + retries + demotes + defer
+                        + m.requests_rejected.load(Relaxed)
+                        != 0
+                    {
+                        failures.push(format!(
+                            "calm seed {seed}: zero-overload run \
+                             shed={shed} expired={expired} \
+                             retries={retries} demotes={demotes} \
+                             deferrals={defer}"));
+                    }
+                }
+            }
+            rows.push(vec![
+                name.to_string(),
+                seed.to_string(),
+                st.finished.to_string(),
+                shed.to_string(),
+                expired.to_string(),
+                retries.to_string(),
+                demotes.to_string(),
+                m.shed_repromotes.load(Relaxed).to_string(),
+                defer.to_string(),
+                p99_ttft.to_string(),
+            ]);
+        }
+    }
+
+    print_table(
+        &format!(
+            "overload shed gate: tick-based serving rig, \
+             {duration:.0}s trace, storm = {:.0} req/s bursting \
+             {:.1}x (~2x capacity), calm = {:.0} req/s control",
+            STORM.base_rate_per_sec, STORM.burst_multiplier,
+            CALM.base_rate_per_sec),
+        &["load", "seed", "finished", "shed", "expired",
+          "sat_retries", "demotes", "repromotes", "deferrals",
+          "p99_ttft_ticks"],
+        &rows,
+    );
+
+    if failures.is_empty() {
+        println!("\novergate: zero aborts, shed engaged under burst, \
+                  admitted p99 TTFT within deadline, counters \
+                  monotone (I11), calm control silent: PASS");
+    } else {
+        println!("\novergate: FAIL");
+        for f in &failures {
+            println!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

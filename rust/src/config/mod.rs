@@ -171,6 +171,31 @@ pub struct SchedulerConfig {
     pub prefill_chunk: usize,
     /// Prefer prefills over decodes when both are ready.
     pub prefill_priority: bool,
+    /// Max concurrent TCP connections the server accepts; over-cap
+    /// connections get a typed `overloaded` error and close
+    /// (DESIGN.md §12).
+    pub max_connections: usize,
+    /// Per-connection socket read timeout in ms — a reader that
+    /// stays silent this long is disconnected. 0 disables.
+    pub read_timeout_ms: u64,
+    /// Whole-request deadline in ms applied at submit when the
+    /// request carries none (typed `expired` retirement). 0 disables.
+    pub default_deadline_ms: u64,
+    /// Time-to-first-token budget in ms for requests that carry
+    /// none. 0 disables.
+    pub ttft_budget_ms: u64,
+    /// Saturated/pool-exhausted requeues a request survives (with
+    /// doubling tick backoff) before typed `saturated` retirement.
+    pub max_sat_retries: u32,
+    /// Queue depth that counts as overload pressure for the shed
+    /// ladder; 0 disables the queue trigger.
+    pub shed_queue_high: usize,
+    /// ShedNewest trims the waiting queue down to this depth.
+    pub shed_queue_low: usize,
+    /// Admission gate closes when free pool pages fall under this…
+    pub admit_low_pages: usize,
+    /// …and reopens once they recover to this (hysteresis).
+    pub admit_high_pages: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -182,6 +207,15 @@ impl Default for SchedulerConfig {
             watermark_pages: 4,
             prefill_chunk: 512,
             prefill_priority: true,
+            max_connections: 64,
+            read_timeout_ms: 30_000,
+            default_deadline_ms: 0,
+            ttft_budget_ms: 0,
+            max_sat_retries: 4,
+            shed_queue_high: 32,
+            shed_queue_low: 8,
+            admit_low_pages: 2,
+            admit_high_pages: 8,
         }
     }
 }
@@ -344,6 +378,22 @@ impl EngineConfig {
                 ("watermark_pages", Value::num(s.watermark_pages as f64)),
                 ("prefill_chunk", Value::num(s.prefill_chunk as f64)),
                 ("prefill_priority", Value::Bool(s.prefill_priority)),
+                ("max_connections",
+                 Value::num(s.max_connections as f64)),
+                ("read_timeout_ms",
+                 Value::num(s.read_timeout_ms as f64)),
+                ("default_deadline_ms",
+                 Value::num(s.default_deadline_ms as f64)),
+                ("ttft_budget_ms", Value::num(s.ttft_budget_ms as f64)),
+                ("max_sat_retries",
+                 Value::num(s.max_sat_retries as f64)),
+                ("shed_queue_high",
+                 Value::num(s.shed_queue_high as f64)),
+                ("shed_queue_low", Value::num(s.shed_queue_low as f64)),
+                ("admit_low_pages",
+                 Value::num(s.admit_low_pages as f64)),
+                ("admit_high_pages",
+                 Value::num(s.admit_high_pages as f64)),
             ])),
             ("sampling", self.sampling.to_json()),
         ];
@@ -378,6 +428,35 @@ impl EngineConfig {
                     prefill_priority: s.opt("prefill_priority")
                         .map(|x| x.as_bool()).transpose()?
                         .unwrap_or(ds.prefill_priority),
+                    max_connections: s.opt("max_connections")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.max_connections)
+                        .max(1),
+                    read_timeout_ms: s.opt("read_timeout_ms")
+                        .map(|x| x.as_u64()).transpose()?
+                        .unwrap_or(ds.read_timeout_ms),
+                    default_deadline_ms: s.opt("default_deadline_ms")
+                        .map(|x| x.as_u64()).transpose()?
+                        .unwrap_or(ds.default_deadline_ms),
+                    ttft_budget_ms: s.opt("ttft_budget_ms")
+                        .map(|x| x.as_u64()).transpose()?
+                        .unwrap_or(ds.ttft_budget_ms),
+                    max_sat_retries: s.opt("max_sat_retries")
+                        .map(|x| x.as_u64()).transpose()?
+                        .map(|x| x as u32)
+                        .unwrap_or(ds.max_sat_retries),
+                    shed_queue_high: s.opt("shed_queue_high")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.shed_queue_high),
+                    shed_queue_low: s.opt("shed_queue_low")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.shed_queue_low),
+                    admit_low_pages: s.opt("admit_low_pages")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.admit_low_pages),
+                    admit_high_pages: s.opt("admit_high_pages")
+                        .map(|x| x.as_usize()).transpose()?
+                        .unwrap_or(ds.admit_high_pages),
                 }
             }
         };
@@ -521,6 +600,43 @@ mod tests {
         // 0 would mean "no gather at all" — clamp to serial
         let v = parse(r#"{"copy_threads": 0}"#).unwrap();
         assert_eq!(EngineConfig::from_json(&v).unwrap().copy_threads, 1);
+    }
+
+    #[test]
+    fn overload_knobs_default_and_roundtrip() {
+        let d = SchedulerConfig::default();
+        assert_eq!(d.max_connections, 64);
+        assert_eq!(d.read_timeout_ms, 30_000);
+        assert_eq!(d.default_deadline_ms, 0, "deadlines opt-in");
+        assert_eq!(d.ttft_budget_ms, 0);
+        assert_eq!(d.max_sat_retries, 4);
+        assert!(d.shed_queue_low < d.shed_queue_high);
+        assert!(d.admit_low_pages < d.admit_high_pages);
+        let v = parse(
+            r#"{"scheduler": {"max_connections": 4,
+                "read_timeout_ms": 250, "default_deadline_ms": 900,
+                "ttft_budget_ms": 150, "max_sat_retries": 0,
+                "shed_queue_high": 6, "shed_queue_low": 2,
+                "admit_low_pages": 1, "admit_high_pages": 3}}"#,
+        ).unwrap();
+        let cfg = EngineConfig::from_json(&v).unwrap();
+        let s = &cfg.scheduler;
+        assert_eq!(s.max_connections, 4);
+        assert_eq!(s.read_timeout_ms, 250);
+        assert_eq!(s.default_deadline_ms, 900);
+        assert_eq!(s.ttft_budget_ms, 150);
+        assert_eq!(s.max_sat_retries, 0);
+        assert_eq!((s.shed_queue_high, s.shed_queue_low), (6, 2));
+        assert_eq!((s.admit_low_pages, s.admit_high_pages), (1, 3));
+        let back = EngineConfig::from_json(
+            &parse(&cfg.to_json().to_json_pretty()).unwrap(),
+        ).unwrap();
+        assert_eq!(back, cfg);
+        // 0 connections would serve nobody — clamp to 1
+        let v = parse(r#"{"scheduler": {"max_connections": 0}}"#)
+            .unwrap();
+        assert_eq!(EngineConfig::from_json(&v).unwrap()
+                       .scheduler.max_connections, 1);
     }
 
     #[test]

@@ -7,20 +7,35 @@
 //! freed, tokens kept) when the pool runs dry — Alg. 1's allocator under
 //! a real multiplexing workload.
 //!
+//! Overload hardening (DESIGN.md §12) wraps that loop: KV-budget
+//! admission behind a watermark-hysteresis gate, per-request deadlines
+//! and TTFT budgets (typed `expired` retirement each tick), bounded
+//! retry-with-backoff for `Saturated` victims, and the Accept →
+//! DeferPrefill → ShedNewest → RejectAll shed ladder mirroring the
+//! PR 6 transfer degrade ladder. Every rejection is a typed
+//! [`EngineError`] so the server can tell clients retryable from
+//! fatal.
+//!
 //! `tick()` advances the world one scheduling step; `run_to_completion`
 //! and the TCP server both drive it. Scheduling *policy* lives in pure
-//! functions at the bottom for unit testing without an engine.
+//! functions ([`overload`] + the bottom of this file) for unit testing
+//! without an engine.
+
+pub mod overload;
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{AttentionMode, SamplingConfig};
 use crate::engine::{Engine, Sampler};
 use crate::kvpage::{AllocError, SeqId};
 use crate::metrics::ServingMetrics;
 use crate::tokenizer::EOS;
-use crate::util::{Error, Result};
+use crate::util::{EngineError, Error, Result};
 use crate::{bail, err};
+
+pub use overload::{backoff_ticks, estimate_pages, overload_pressure,
+                   AdmissionGate, OverloadLadder, ShedLevel};
 
 /// A generation request as submitted.
 #[derive(Debug, Clone)]
@@ -31,6 +46,11 @@ pub struct Request {
     pub sampling: SamplingConfig,
     /// Stop at EOS (besides the token budget).
     pub stop_at_eos: bool,
+    /// Whole-request deadline, ms from submit (None → the scheduler
+    /// default; 0 in both places disables).
+    pub deadline_ms: Option<u64>,
+    /// Time-to-first-token budget, ms from submit (same defaulting).
+    pub ttft_budget_ms: Option<u64>,
 }
 
 impl Request {
@@ -41,11 +61,15 @@ impl Request {
             max_new_tokens: max_new,
             sampling: SamplingConfig::greedy(),
             stop_at_eos: false,
+            deadline_ms: None,
+            ttft_budget_ms: None,
         }
     }
 }
 
-/// Terminal record handed back to the caller.
+/// Terminal record handed back to the caller. `error` keeps its typed
+/// [`EngineError`] kind so the server can surface a structured
+/// `"reason"` (None = completed normally).
 #[derive(Debug, Clone)]
 pub struct Finished {
     pub id: u64,
@@ -55,7 +79,7 @@ pub struct Finished {
     pub total_s: f64,
     pub preemptions: u32,
     pub cached_prompt_tokens: usize,
-    pub error: Option<String>,
+    pub error: Option<Error>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,14 +101,67 @@ struct Live {
     first_token: Option<Instant>,
     preemptions: u32,
     cached_prompt_tokens: usize,
+    /// Saturated/pool-exhausted requeues consumed so far.
+    retries: u32,
+    deadline: Option<Instant>,
+    ttft_deadline: Option<Instant>,
+}
+
+impl Live {
+    fn expired(&self, now: Instant) -> Option<&'static str> {
+        if self.deadline.is_some_and(|d| now >= d) {
+            Some("deadline")
+        } else if self.first_token.is_none()
+            && self.ttft_deadline.is_some_and(|d| now >= d)
+        {
+            Some("ttft budget")
+        } else {
+            None
+        }
+    }
+}
+
+/// A queued (not yet admitted) request with its overload bookkeeping:
+/// tokens generated before a preemption/saturation requeue, how many
+/// times admission bounced it, and the earliest tick it may retry.
+struct Queued {
+    req: Request,
+    /// Tokens generated before this entry was requeued (empty for a
+    /// fresh submit); re-admission prefills prompt + generated so the
+    /// resumed stream continues where it stopped.
+    generated: Vec<u32>,
+    preemptions: u32,
+    retries: u32,
+    /// Backoff gate: not admitted before this scheduler tick.
+    not_before: u64,
+    deadline: Option<Instant>,
+    ttft_deadline: Option<Instant>,
+}
+
+impl Queued {
+    fn expired(&self, now: Instant) -> Option<&'static str> {
+        if self.deadline.is_some_and(|d| now >= d) {
+            Some("deadline")
+        } else if self.generated.is_empty()
+            && self.ttft_deadline.is_some_and(|d| now >= d)
+        {
+            // no first token yet → the TTFT budget also binds here
+            Some("ttft budget")
+        } else {
+            None
+        }
+    }
 }
 
 pub struct Coordinator {
     pub engine: Engine,
-    waiting: VecDeque<Request>,
+    waiting: VecDeque<Queued>,
     running: Vec<Live>,
     finished: Vec<Finished>,
-    preempt_stash: VecDeque<(Request, Vec<u32>, u32, Instant)>,
+    preempt_stash: VecDeque<Queued>,
+    tick_no: u64,
+    shed: OverloadLadder,
+    gate: AdmissionGate,
 }
 
 impl Coordinator {
@@ -95,6 +172,9 @@ impl Coordinator {
             running: Vec::new(),
             finished: Vec::new(),
             preempt_stash: VecDeque::new(),
+            tick_no: 0,
+            shed: OverloadLadder::new(),
+            gate: AdmissionGate::new(),
         }
     }
 
@@ -102,22 +182,72 @@ impl Coordinator {
         &self.engine.metrics
     }
 
+    /// Current shed-ladder rung (the `stats` op reports it).
+    pub fn shed_level(&self) -> ShedLevel {
+        self.shed.level()
+    }
+
+    /// Free KV pool pages (0 outside paged mode).
+    pub fn free_pages(&self) -> usize {
+        self.engine
+            .paged
+            .as_ref()
+            .map(|pe| pe.mgr.allocator().free_pages())
+            .unwrap_or(0)
+    }
+
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        let m = &self.engine.metrics;
+        if self.shed.level() == ShedLevel::RejectAll {
+            ServingMetrics::inc(&m.requests_rejected, 1);
+            ServingMetrics::inc(&m.requests_shed, 1);
+            return Err(Error::with_kind(
+                EngineError::Overloaded,
+                format!("overloaded: rejecting all new work \
+                         ({} waiting)", self.n_waiting()),
+            ));
+        }
         if self.waiting.len() >= self.engine.cfg.scheduler.max_waiting {
-            ServingMetrics::inc(&self.engine.metrics.requests_rejected, 1);
-            bail!("queue full ({} waiting)", self.waiting.len());
+            ServingMetrics::inc(&m.requests_rejected, 1);
+            return Err(Error::with_kind(
+                EngineError::QueueFull,
+                format!("queue full ({} waiting)", self.waiting.len()),
+            ));
         }
         if req.prompt.is_empty() {
-            ServingMetrics::inc(&self.engine.metrics.requests_rejected, 1);
-            bail!("empty prompt");
+            ServingMetrics::inc(&m.requests_rejected, 1);
+            return Err(Error::with_kind(EngineError::EmptyPrompt,
+                                        "empty prompt"));
         }
         let limit = self.engine.rt.spec().max_seq_len;
         if req.prompt.len() + req.max_new_tokens > limit {
-            ServingMetrics::inc(&self.engine.metrics.requests_rejected, 1);
-            bail!("prompt {} + max_new {} exceeds max context {}",
-                  req.prompt.len(), req.max_new_tokens, limit);
+            ServingMetrics::inc(&m.requests_rejected, 1);
+            return Err(Error::with_kind(
+                EngineError::ContextOverflow,
+                format!("prompt {} + max_new {} exceeds max context {}",
+                        req.prompt.len(), req.max_new_tokens, limit),
+            ));
         }
-        self.waiting.push_back(req);
+        let sched = &self.engine.cfg.scheduler;
+        let now = Instant::now();
+        // per-request value wins; 0 (anywhere) disables the budget
+        let budget = |per_req: Option<u64>, default_ms: u64| {
+            let ms = per_req.unwrap_or(default_ms);
+            (ms > 0).then(|| now + Duration::from_millis(ms))
+        };
+        let deadline = budget(req.deadline_ms,
+                              sched.default_deadline_ms);
+        let ttft_deadline =
+            budget(req.ttft_budget_ms, sched.ttft_budget_ms);
+        self.waiting.push_back(Queued {
+            req,
+            generated: Vec::new(),
+            preemptions: 0,
+            retries: 0,
+            not_before: 0,
+            deadline,
+            ttft_deadline,
+        });
         Ok(())
     }
 
@@ -136,6 +266,32 @@ impl Coordinator {
     pub fn idle(&self) -> bool {
         self.waiting.is_empty() && self.running.is_empty()
             && self.preempt_stash.is_empty()
+    }
+
+    /// Shed every queued (not yet admitted) request with a typed
+    /// `Overloaded` error — the server's graceful-drain path: the
+    /// running batch finishes, the queue gets an answer instead of a
+    /// hung connection. Returns how many were shed.
+    pub fn shed_queued(&mut self, why: &str) -> usize {
+        let mut n = 0;
+        for queue in [
+            std::mem::take(&mut self.waiting),
+            std::mem::take(&mut self.preempt_stash),
+        ] {
+            for q in queue {
+                let e = Error::with_kind(
+                    EngineError::Overloaded,
+                    format!("request {} shed: {why}", q.req.id),
+                );
+                self.finish_queued(q, e);
+                n += 1;
+            }
+        }
+        if n > 0 {
+            ServingMetrics::inc(&self.engine.metrics.requests_shed,
+                                n as u64);
+        }
+        n
     }
 
     /// Advance one scheduling step. Returns true if any work happened.
@@ -163,11 +319,12 @@ impl Coordinator {
     }
 
     // ------------------------------------------------------------------
-    // paged mode: continuous batching + preemption
+    // paged mode: continuous batching + preemption + overload ladder
     // ------------------------------------------------------------------
 
     fn tick_paged(&mut self) -> Result<bool> {
-        let mut progressed = self.admit_paged()?;
+        let mut progressed = self.overload_tick();
+        progressed |= self.admit_paged()?;
         let sched = self.engine.cfg.scheduler.clone();
 
         let prefill_ids = select_batch(
@@ -194,6 +351,111 @@ impl Coordinator {
         Ok(progressed)
     }
 
+    /// Per-tick overload bookkeeping (DESIGN.md §12): retire
+    /// deadline/TTFT overruns with typed `Expired`, advance the shed
+    /// ladder from queue depth + pool pressure, shed the newest
+    /// queued requests on the ShedNewest rung, and export the ladder
+    /// counters. Returns true if any request was retired.
+    fn overload_tick(&mut self) -> bool {
+        self.tick_no += 1;
+        let now = Instant::now();
+        let mut acted = self.expire_queued(now);
+
+        let overdue: Vec<(SeqId, &'static str)> = self
+            .running
+            .iter()
+            .filter_map(|l| l.expired(now).map(|w| (l.seq, w)))
+            .collect();
+        for (seq, what) in overdue {
+            let id = self
+                .running
+                .iter()
+                .find(|l| l.seq == seq)
+                .map(|l| l.req.id)
+                .unwrap_or(0);
+            self.retire_running_with(seq, expired_error(id, what));
+            ServingMetrics::inc(&self.engine.metrics.requests_expired,
+                                1);
+            acted = true;
+        }
+
+        let sched = &self.engine.cfg.scheduler;
+        let (queue_high, queue_low, low_pages) = (
+            sched.shed_queue_high,
+            sched.shed_queue_low,
+            sched.admit_low_pages,
+        );
+        let pressured = overload_pressure(
+            self.n_waiting(), queue_high, self.free_pages(), low_pages);
+        let level = self.shed.note_tick(pressured);
+        if level >= ShedLevel::ShedNewest {
+            while self.waiting.len() > queue_low {
+                let q = self.waiting.pop_back().unwrap();
+                let e = Error::with_kind(
+                    EngineError::Overloaded,
+                    format!("request {} shed under overload \
+                             ({} waiting)", q.req.id,
+                            self.waiting.len() + 1),
+                );
+                self.finish_queued(q, e);
+                ServingMetrics::inc(&self.engine.metrics.requests_shed,
+                                    1);
+                acted = true;
+            }
+        }
+        // ladder/gate totals are monotone at the source; exporting by
+        // store keeps the metrics counters monotone too (I11)
+        let m = &self.engine.metrics;
+        use std::sync::atomic::Ordering::Relaxed;
+        m.shed_demotes.store(self.shed.demotes(), Relaxed);
+        m.shed_repromotes.store(self.shed.repromotes(), Relaxed);
+        m.admission_deferrals.store(self.gate.deferrals(), Relaxed);
+        acted
+    }
+
+    /// Expire queued entries whose deadline or TTFT budget passed
+    /// while they waited.
+    fn expire_queued(&mut self, now: Instant) -> bool {
+        let mut acted = false;
+        for pick in 0..2 {
+            let queue = if pick == 0 {
+                &mut self.waiting
+            } else {
+                &mut self.preempt_stash
+            };
+            if queue.iter().all(|q| q.expired(now).is_none()) {
+                continue;
+            }
+            let (dead, keep): (Vec<_>, Vec<_>) = queue
+                .drain(..)
+                .partition(|q| q.expired(now).is_some());
+            *queue = keep.into();
+            for q in dead {
+                let what = q.expired(now).unwrap_or("deadline");
+                let e = expired_error(q.req.id, what);
+                self.finish_queued(q, e);
+                ServingMetrics::inc(
+                    &self.engine.metrics.requests_expired, 1);
+                acted = true;
+            }
+        }
+        acted
+    }
+
+    /// Terminal record for a queued entry that never (re)started.
+    fn finish_queued(&mut self, q: Queued, error: Error) {
+        self.finished.push(Finished {
+            id: q.req.id,
+            prompt_len: q.req.prompt.len(),
+            tokens: q.generated,
+            ttft_s: 0.0,
+            total_s: 0.0,
+            preemptions: q.preemptions,
+            cached_prompt_tokens: 0,
+            error: Some(error),
+        });
+    }
+
     fn decode_bucket_cap(&self, max_batch: usize) -> usize {
         self.engine
             .rt
@@ -205,30 +467,107 @@ impl Coordinator {
             .min(max_batch)
     }
 
-    /// Admit waiting + preempted requests while pages allow.
+    /// Admit waiting + preempted requests while the gate, the KV
+    /// budget, and the shed ladder allow. Returns true if the tick
+    /// did work — including when admissions are merely backoff-gated
+    /// (the backoff clock ticking IS the progress; retries are
+    /// bounded, so this cannot spin forever).
     fn admit_paged(&mut self) -> Result<bool> {
         let mut progressed = false;
-        let max_running = self.engine.cfg.scheduler.max_running_seqs;
+        let mut gated = false;
+        let sched = self.engine.cfg.scheduler.clone();
         loop {
-            if self.running.len() >= max_running {
+            if self.running.len() >= sched.max_running_seqs {
                 break;
             }
-            // preempted requests re-enter first (anti-starvation)
-            let (req, preemptions) = if let Some((req, tokens, n, _)) =
-                self.preempt_stash.pop_front()
+            // DeferPrefill and worse admit nothing while a batch is
+            // live; an empty batch still admits (forced progress so a
+            // deferred queue can never wedge the loop)
+            if self.shed.level() >= ShedLevel::DeferPrefill
+                && !self.running.is_empty()
             {
-                let mut r = req;
-                r.prompt = tokens; // re-prefill everything it had
-                (r, n)
-            } else if let Some(r) = self.waiting.pop_front() {
-                (r, 0)
-            } else {
                 break;
+            }
+            // preempted/saturated requeues re-enter first
+            // (anti-starvation), each behind its backoff gate; a
+            // gated stash head does not block fresh admissions
+            let tick = self.tick_no;
+            let stash_ready = self
+                .preempt_stash
+                .front()
+                .map(|q| q.not_before <= tick);
+            let mut from_stash = false;
+            let mut q = match stash_ready {
+                Some(true) => {
+                    from_stash = true;
+                    self.preempt_stash.pop_front()
+                }
+                Some(false) => {
+                    gated = true;
+                    None
+                }
+                None => None,
             };
+            if q.is_none() {
+                let wait_ready = self
+                    .waiting
+                    .front()
+                    .map(|h| h.not_before <= tick);
+                q = match wait_ready {
+                    Some(true) => self.waiting.pop_front(),
+                    Some(false) => {
+                        gated = true;
+                        break;
+                    }
+                    None => break,
+                };
+            }
+            let Some(q) = q else { break };
+
+            // KV-budget admission behind the hysteresis gate: charge
+            // the request's full end-state reservation, keep the
+            // eviction watermark as headroom. An empty batch admits
+            // regardless — nothing else can free pages, so deferring
+            // would deadlock (the engine-level retry ladder bounds
+            // what happens if it still doesn't fit).
+            let free = self.free_pages();
+            let pe_ps = self
+                .engine
+                .paged
+                .as_ref()
+                .map(|pe| pe.mgr.allocator().page_size())
+                .unwrap_or(1);
+            let gate_open = self.gate.evaluate(
+                free, sched.admit_low_pages, sched.admit_high_pages);
+            let est = estimate_pages(
+                q.req.prompt.len() + q.generated.len(),
+                q.req.max_new_tokens.saturating_sub(q.generated.len()),
+                pe_ps,
+            );
+            let fits = free >= est + sched.watermark_pages;
+            if (!gate_open || !fits) && !self.running.is_empty() {
+                self.gate.note_deferral();
+                if from_stash {
+                    self.preempt_stash.push_front(q);
+                } else {
+                    self.waiting.push_front(q);
+                }
+                gated = true;
+                break;
+            }
 
             let seq = self.engine.fresh_seq_id();
+            // resumed entries re-prefill prompt + generated so the
+            // stream continues exactly where preemption stopped
+            let ctx: Vec<u32> = if q.generated.is_empty() {
+                q.req.prompt.clone()
+            } else {
+                let mut c = q.req.prompt.clone();
+                c.extend_from_slice(&q.generated);
+                c
+            };
             let pe = self.engine.paged.as_mut().unwrap();
-            match pe.admit(seq, &req.prompt) {
+            match pe.admit(seq, &ctx) {
                 Ok(adm) => {
                     let m = &self.engine.metrics;
                     ServingMetrics::inc(&m.requests_admitted, 1);
@@ -237,50 +576,70 @@ impl Coordinator {
                         ServingMetrics::inc(&m.prefix_cached_tokens,
                                             adm.cached_tokens as u64);
                     }
-                    let sampler = Sampler::new(req.sampling);
+                    let sampler = Sampler::new(q.req.sampling);
                     self.running.push(Live {
                         seq,
                         sampler,
-                        generated: Vec::new(),
+                        generated: q.generated,
                         pending_logits: None,
                         submitted: Instant::now(),
                         first_token: None,
-                        preemptions,
+                        preemptions: q.preemptions,
                         cached_prompt_tokens: adm.cached_tokens,
+                        retries: q.retries,
+                        deadline: q.deadline,
+                        ttft_deadline: q.ttft_deadline,
                         phase: Phase::Prefill,
-                        req,
+                        req: q.req,
                     });
                     progressed = true;
                 }
                 Err(AllocError::PoolExhausted { .. }) => {
-                    // put it back and stop admitting
-                    if preemptions > 0 {
-                        self.preempt_stash.push_front((
-                            req.clone(),
-                            req.prompt.clone(),
-                            preemptions,
-                            Instant::now(),
-                        ));
-                    } else {
-                        self.waiting.push_front(req);
-                    }
+                    // bounded retry-with-backoff instead of pinning
+                    // the queue head forever (DESIGN.md §12)
+                    self.requeue_backoff(q, from_stash, free);
+                    gated = true;
                     break;
                 }
                 Err(e) => {
                     self.finished.push(Finished {
-                        id: req.id,
+                        id: q.req.id,
                         tokens: vec![],
-                        prompt_len: req.prompt.len(),
+                        prompt_len: q.req.prompt.len(),
                         ttft_s: 0.0,
                         total_s: 0.0,
-                        preemptions,
+                        preemptions: q.preemptions,
                         cached_prompt_tokens: 0,
-                        error: Some(e.to_string()),
+                        error: Some(err!("admit: {e}")),
                     });
                 }
             }
         }
-        Ok(progressed)
+        Ok(progressed || gated)
+    }
+
+    /// Requeue a queued entry the pool could not hold, with a
+    /// doubling tick backoff; after `max_sat_retries` bounces it is
+    /// retired with a typed `Saturated` error instead.
+    fn requeue_backoff(&mut self, mut q: Queued, to_stash: bool,
+                       free: usize) {
+        let max_retries = self.engine.cfg.scheduler.max_sat_retries;
+        if q.retries >= max_retries {
+            let e = Error::saturated(format!(
+                "request {} dropped after {} admission retries \
+                 ({free} pages free)", q.req.id, q.retries,
+            ));
+            self.finish_queued(q, e);
+            return;
+        }
+        q.retries += 1;
+        q.not_before = self.tick_no + backoff_ticks(q.retries);
+        ServingMetrics::inc(&self.engine.metrics.saturated_retries, 1);
+        if to_stash {
+            self.preempt_stash.push_front(q);
+        } else {
+            self.waiting.push_front(q);
+        }
     }
 
     fn prefill_step(&mut self, ids: &[SeqId], chunk: usize) -> Result<()> {
@@ -299,8 +658,9 @@ impl Coordinator {
         for (seq, done, logits) in results {
             let live = self.live_mut(seq)?;
             if done {
-                prefilled_tokens += (live.req.prompt.len()
-                    - live.cached_prompt_tokens)
+                prefilled_tokens += ((live.req.prompt.len()
+                    + live.generated.len())
+                    .saturating_sub(live.cached_prompt_tokens))
                     as u64;
                 live.phase = Phase::Decode;
                 live.pending_logits = Some(logits);
@@ -343,12 +703,12 @@ impl Coordinator {
                         preempted_here += 1;
                     } else {
                         // hard exhaustion, nothing preemptible
-                        // anywhere: fail ONLY the request that needed
-                        // the page (typed Saturated) and keep the
-                        // batch serving — saturation is a per-request
-                        // outcome, never a run abort (DESIGN.md §11).
-                        // Its pages moved, so drain like a preemption.
-                        self.retire_saturated(seq);
+                        // anywhere: requeue ONLY the request that
+                        // needed the page with bounded backoff; it
+                        // dies with typed Saturated only after
+                        // max_sat_retries (DESIGN.md §12). Its pages
+                        // move, so drain like a preemption.
+                        self.saturate_requeue(seq);
                         preempted_here += 1;
                     }
                 }
@@ -421,13 +781,11 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Retire the victim of hard pool exhaustion: free whatever it
-    /// held, hand back its partial output with a typed
-    /// [`EngineError::Saturated`](crate::util::EngineError) error,
-    /// and leave every other live request untouched.
-    fn retire_saturated(&mut self, seq: SeqId) {
+    /// Retire a live request with `error`: free whatever it held and
+    /// hand back its partial output, leaving every other live request
+    /// untouched.
+    fn retire_running_with(&mut self, seq: SeqId, error: Error) {
         let pe = self.engine.paged.as_mut().unwrap();
-        let free = pe.mgr.allocator().free_pages();
         let _ = pe.release(seq);
         let Some(i) =
             self.running.iter().position(|l| l.seq == seq)
@@ -448,13 +806,50 @@ impl Coordinator {
             total_s: now.duration_since(live.submitted).as_secs_f64(),
             preemptions: live.preemptions,
             cached_prompt_tokens: live.cached_prompt_tokens,
-            error: Some(saturated_error(seq, free).to_string()),
+            error: Some(error),
         });
     }
 
-    /// Preempt the youngest decoding sequence NOT in `protect`; if all are
-    /// protected, preempt the youngest protected one (progress beats
-    /// fairness under hard exhaustion).
+    /// Victim of hard pool exhaustion with nothing preemptible: free
+    /// its pages (recompute-style — tokens kept) and requeue it with
+    /// bounded backoff; only past `max_sat_retries` does it die with
+    /// the typed [`EngineError::Saturated`](crate::util::EngineError)
+    /// error. Saturation is a per-request outcome, never a run abort.
+    fn saturate_requeue(&mut self, seq: SeqId) {
+        let max_retries = self.engine.cfg.scheduler.max_sat_retries;
+        let pe = self.engine.paged.as_mut().unwrap();
+        let free = pe.mgr.allocator().free_pages();
+        let Some(i) =
+            self.running.iter().position(|l| l.seq == seq)
+        else {
+            let _ = pe.release(seq);
+            return;
+        };
+        if self.running[i].retries >= max_retries {
+            self.retire_running_with(seq, saturated_error(seq, free));
+            return;
+        }
+        let live = self.running.swap_remove(i);
+        let pe = self.engine.paged.as_mut().unwrap();
+        // preempt (not release): recompute-style page recovery
+        let _ = pe.preempt(live.seq);
+        let retries = live.retries + 1;
+        ServingMetrics::inc(&self.engine.metrics.saturated_retries, 1);
+        self.preempt_stash.push_back(Queued {
+            req: live.req,
+            generated: live.generated,
+            preemptions: live.preemptions,
+            retries,
+            not_before: self.tick_no + backoff_ticks(retries),
+            deadline: live.deadline,
+            ttft_deadline: live.ttft_deadline,
+        });
+    }
+
+    /// Preempt the youngest decoding sequence NOT in `protect`;
+    /// returns false when every live sequence is protected (the
+    /// caller then saturate-requeues the victim — freeing *its* pages
+    /// is the only remaining way to make progress).
     fn preempt_youngest(&mut self, protect: &[SeqId]) -> Result<bool> {
         let pick = self
             .running
@@ -462,32 +857,23 @@ impl Coordinator {
             .enumerate()
             .filter(|(_, l)| !protect.contains(&l.seq))
             .max_by_key(|(_, l)| l.submitted)
-            .map(|(i, _)| i)
-            .or_else(|| {
-                self.running
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|(_, l)| l.submitted)
-                    .map(|(i, _)| i)
-            });
+            .map(|(i, _)| i);
         let Some(i) = pick else { return Ok(false) };
-        let mut live = self.running.swap_remove(i);
+        let live = self.running.swap_remove(i);
         let pe = self.engine.paged.as_mut().unwrap();
-        let mut tokens = pe
+        let _ = pe
             .preempt(live.seq)
             .map_err(|e| err!("preempt: {e}"))?;
-        // tokens already includes generated ones appended during decode
-        if live.phase == Phase::Prefill {
-            tokens = live.req.prompt.clone();
-        }
         ServingMetrics::inc(&self.engine.metrics.requests_preempted, 1);
-        live.preemptions += 1;
-        self.preempt_stash.push_back((
-            live.req,
-            tokens,
-            live.preemptions,
-            Instant::now(),
-        ));
+        self.preempt_stash.push_back(Queued {
+            req: live.req,
+            generated: live.generated,
+            preemptions: live.preemptions + 1,
+            retries: live.retries,
+            not_before: 0,
+            deadline: live.deadline,
+            ttft_deadline: live.ttft_deadline,
+        });
         Ok(true)
     }
 
@@ -564,29 +950,32 @@ impl Coordinator {
         let cap = self.engine.cfg.scheduler.max_batch_size.min(bucket_cap);
         // admit while the arena holds
         while self.running.len() < cap {
-            let Some(req) = self.waiting.pop_front() else { break };
+            let Some(q) = self.waiting.pop_front() else { break };
             let seq = self.engine.fresh_seq_id();
             let ce = self.engine.contiguous.as_mut().unwrap();
-            match ce.admit(seq, &req.prompt) {
+            match ce.admit(seq, &q.req.prompt) {
                 Ok(()) => {
                     ServingMetrics::inc(
                         &self.engine.metrics.requests_admitted, 1);
                     self.running.push(Live {
                         seq,
-                        sampler: Sampler::new(req.sampling),
+                        sampler: Sampler::new(q.req.sampling),
                         generated: Vec::new(),
                         pending_logits: None,
                         submitted: Instant::now(),
                         first_token: None,
                         preemptions: 0,
                         cached_prompt_tokens: 0,
+                        retries: 0,
+                        deadline: q.deadline,
+                        ttft_deadline: q.ttft_deadline,
                         phase: Phase::Prefill,
-                        req,
+                        req: q.req,
                     });
                     progressed = true;
                 }
                 Err(AllocError::PoolExhausted { .. }) => {
-                    self.waiting.push_front(req);
+                    self.waiting.push_front(q);
                     break;
                 }
                 Err(e) => bail!("contiguous admit: {e}"),
@@ -665,9 +1054,10 @@ impl Coordinator {
     // ------------------------------------------------------------------
 
     fn tick_nocache(&mut self) -> Result<bool> {
-        let Some(req) = self.waiting.pop_front() else {
+        let Some(q) = self.waiting.pop_front() else {
             return Ok(false);
         };
+        let req = q.req;
         ServingMetrics::inc(&self.engine.metrics.requests_admitted, 1);
         let submitted = Instant::now();
         let mut sampler = Sampler::new(req.sampling);
@@ -752,6 +1142,14 @@ fn saturated_error(seq: SeqId, free_pages: usize) -> Error {
     ))
 }
 
+/// The typed per-request error for deadline/TTFT-budget expiry.
+fn expired_error(id: u64, what: &str) -> Error {
+    Error::with_kind(
+        EngineError::Expired,
+        format!("request {id} expired: {what} elapsed"),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -776,6 +1174,8 @@ mod tests {
         assert_eq!(r.max_new_tokens, 7);
         assert!(r.sampling.is_greedy());
         assert!(!r.stop_at_eos);
+        assert_eq!(r.deadline_ms, None, "deadlines opt-in");
+        assert_eq!(r.ttft_budget_ms, None);
     }
 
     #[test]
@@ -812,6 +1212,43 @@ mod tests {
         // garden-variety errors stay untyped: only true saturation
         // takes the retire-the-victim path
         assert!(!err!("prepare_append: bad page").is_saturated());
+    }
+
+    #[test]
+    fn expiry_is_typed_fatal_and_names_the_budget() {
+        let e = expired_error(12, "ttft budget");
+        assert_eq!(e.kind(), Some(EngineError::Expired));
+        assert!(!e.kind().unwrap().retryable(),
+                "a blown budget does not improve on resubmit");
+        let msg = e.to_string();
+        assert!(msg.contains("request 12"), "{msg}");
+        assert!(msg.contains("ttft budget"), "{msg}");
+    }
+
+    #[test]
+    fn queued_expiry_checks_deadline_then_ttft() {
+        let now = Instant::now();
+        let past = now - Duration::from_millis(10);
+        let future = now + Duration::from_secs(60);
+        let mk = |deadline, ttft, generated: usize| Queued {
+            req: Request::greedy(1, vec![1], 4),
+            generated: vec![0; generated],
+            preemptions: 0,
+            retries: 0,
+            not_before: 0,
+            deadline,
+            ttft_deadline: ttft,
+        };
+        assert_eq!(mk(None, None, 0).expired(now), None);
+        assert_eq!(mk(Some(future), Some(future), 0).expired(now), None);
+        assert_eq!(mk(Some(past), None, 0).expired(now),
+                   Some("deadline"));
+        assert_eq!(mk(None, Some(past), 0).expired(now),
+                   Some("ttft budget"));
+        // a requeued entry that already produced tokens met its TTFT
+        assert_eq!(mk(None, Some(past), 3).expired(now), None);
+        assert_eq!(mk(Some(past), Some(past), 3).expired(now),
+                   Some("deadline"));
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Overload policy — pure, engine-free state machines for the
+//! serving tier's graceful degradation (DESIGN.md §12).
+//!
+//! Three pieces, each unit-testable and reused verbatim by the
+//! offline `overload_shed` bench rig:
+//!
+//! * [`OverloadLadder`] — the load-shedding ladder (Accept →
+//!   DeferPrefill → ShedNewest → RejectAll), the serving-tier mirror
+//!   of the PR 6 transfer degrade ladder: pressure steps one rung
+//!   down and doubles the clean-tick re-promotion quota (4 → 8 → 16
+//!   capped); a full quota of clean ticks climbs one rung back.
+//! * [`AdmissionGate`] — low/high watermark hysteresis over free KV
+//!   pages so admission doesn't thrash at the boundary.
+//! * [`estimate_pages`] / [`backoff_ticks`] — the KV-budget estimate
+//!   admission charges a request with, and the bounded
+//!   retry-with-backoff schedule for `Saturated` victims.
+
+/// One rung of the load-shedding ladder, mildest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ShedLevel {
+    /// Normal service: admit everything the gate allows.
+    Accept,
+    /// Stop admitting new work; run the batch already admitted.
+    DeferPrefill,
+    /// DeferPrefill + drop the newest queued requests over the low
+    /// queue watermark (typed `Overloaded`, newest-first so the
+    /// oldest waiters keep their place).
+    ShedNewest,
+    /// Reject every new submit at the door.
+    RejectAll,
+}
+
+impl ShedLevel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedLevel::Accept => "accept",
+            ShedLevel::DeferPrefill => "defer_prefill",
+            ShedLevel::ShedNewest => "shed_newest",
+            ShedLevel::RejectAll => "reject_all",
+        }
+    }
+
+    fn down(self) -> ShedLevel {
+        match self {
+            ShedLevel::Accept => ShedLevel::DeferPrefill,
+            ShedLevel::DeferPrefill => ShedLevel::ShedNewest,
+            _ => ShedLevel::RejectAll,
+        }
+    }
+
+    fn up(self) -> ShedLevel {
+        match self {
+            ShedLevel::RejectAll => ShedLevel::ShedNewest,
+            ShedLevel::ShedNewest => ShedLevel::DeferPrefill,
+            _ => ShedLevel::Accept,
+        }
+    }
+}
+
+const BASE_QUOTA: u32 = 4;
+const MAX_QUOTA: u32 = 16;
+
+/// The shed ladder's state machine. Call [`note_tick`] once per
+/// scheduler tick with the current pressure verdict; read the level
+/// to pick admission behaviour. Demotions/re-promotions accumulate
+/// for `ServingMetrics` (monotone, invariant I11).
+#[derive(Debug, Clone)]
+pub struct OverloadLadder {
+    level: ShedLevel,
+    clean: u32,
+    quota: u32,
+    demotes: u64,
+    repromotes: u64,
+}
+
+impl Default for OverloadLadder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OverloadLadder {
+    pub fn new() -> Self {
+        OverloadLadder {
+            level: ShedLevel::Accept,
+            clean: 0,
+            quota: BASE_QUOTA,
+            demotes: 0,
+            repromotes: 0,
+        }
+    }
+
+    pub fn level(&self) -> ShedLevel {
+        self.level
+    }
+
+    pub fn demotes(&self) -> u64 {
+        self.demotes
+    }
+
+    pub fn repromotes(&self) -> u64 {
+        self.repromotes
+    }
+
+    /// Advance one tick. `pressured` steps one rung down (doubling
+    /// the re-promotion quota, capped); a clean tick counts toward
+    /// climbing one rung back up. Returns the level for this tick.
+    pub fn note_tick(&mut self, pressured: bool) -> ShedLevel {
+        if pressured {
+            if self.level != ShedLevel::RejectAll {
+                self.level = self.level.down();
+                self.demotes += 1;
+                self.quota = (self.quota * 2).min(MAX_QUOTA);
+            }
+            self.clean = 0;
+        } else if self.level != ShedLevel::Accept {
+            self.clean += 1;
+            if self.clean >= self.quota {
+                self.level = self.level.up();
+                self.repromotes += 1;
+                self.clean = 0;
+            }
+        }
+        self.level
+    }
+}
+
+/// Pressure predicate feeding the ladder: queue depth at the high
+/// watermark, or the free-page pool under the admission low
+/// watermark. Pure so the storm property tests can sweep it.
+pub fn overload_pressure(queue_depth: usize, queue_high: usize,
+                         free_pages: usize, low_pages: usize) -> bool {
+    (queue_high > 0 && queue_depth >= queue_high)
+        || free_pages < low_pages
+}
+
+/// Admission hysteresis over free pool pages: the gate closes when
+/// free pages fall under `low` and reopens only once they recover to
+/// `high` — a single boundary would flap every admit/release pair.
+#[derive(Debug, Clone)]
+pub struct AdmissionGate {
+    open: bool,
+    deferrals: u64,
+}
+
+impl Default for AdmissionGate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AdmissionGate {
+    pub fn new() -> Self {
+        AdmissionGate { open: true, deferrals: 0 }
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.open
+    }
+
+    pub fn deferrals(&self) -> u64 {
+        self.deferrals
+    }
+
+    /// Update the hysteresis from the current free-page level and
+    /// return whether admission may proceed this tick.
+    pub fn evaluate(&mut self, free_pages: usize, low: usize,
+                    high: usize) -> bool {
+        if self.open {
+            if free_pages < low {
+                self.open = false;
+            }
+        } else if free_pages >= high.max(low) {
+            self.open = true;
+        }
+        self.open
+    }
+
+    /// Record an admission deferred by a closed gate (counted into
+    /// `ServingMetrics::admission_deferrals`).
+    pub fn note_deferral(&mut self) {
+        self.deferrals += 1;
+    }
+}
+
+/// KV pages a request will need end to end: every prompt token plus
+/// every token it may generate, rounded up to whole pages. The
+/// admission budget charges the full reservation so a request never
+/// starts unless its completion could fit the pool.
+pub fn estimate_pages(prompt_len: usize, max_new: usize,
+                      page_size: usize) -> usize {
+    let tokens = prompt_len.max(1) + max_new;
+    tokens.div_ceil(page_size.max(1))
+}
+
+/// Ticks a saturated/backpressured request waits before retry
+/// `retries` (1-based on requeue): 2, 4, 8, ... capped at 64.
+pub fn backoff_ticks(retries: u32) -> u64 {
+    1u64 << (retries.clamp(1, 6))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_steps_down_on_pressure_and_back_on_clean_quota() {
+        let mut l = OverloadLadder::new();
+        assert_eq!(l.level(), ShedLevel::Accept);
+        assert_eq!(l.note_tick(true), ShedLevel::DeferPrefill);
+        assert_eq!(l.note_tick(true), ShedLevel::ShedNewest);
+        assert_eq!(l.note_tick(true), ShedLevel::RejectAll);
+        // bottom rung holds; demotes stop counting there
+        assert_eq!(l.note_tick(true), ShedLevel::RejectAll);
+        assert_eq!(l.demotes(), 3);
+        // quota doubled 4→8→16 (capped): 16 clean ticks per rung now
+        for _ in 0..15 {
+            assert_eq!(l.note_tick(false), ShedLevel::RejectAll);
+        }
+        assert_eq!(l.note_tick(false), ShedLevel::ShedNewest);
+        for _ in 0..15 {
+            l.note_tick(false);
+        }
+        assert_eq!(l.level(), ShedLevel::DeferPrefill);
+        for _ in 0..16 {
+            l.note_tick(false);
+        }
+        assert_eq!(l.level(), ShedLevel::Accept);
+        assert_eq!(l.repromotes(), 3);
+        // clean ticks at Accept are free — no counter motion
+        l.note_tick(false);
+        assert_eq!(l.demotes(), 3);
+        assert_eq!(l.repromotes(), 3);
+    }
+
+    #[test]
+    fn ladder_pressure_resets_the_clean_run() {
+        let mut l = OverloadLadder::new();
+        l.note_tick(true); // DeferPrefill, quota 8
+        for _ in 0..7 {
+            l.note_tick(false);
+        }
+        // one pressured tick wipes the 7-clean run AND demotes
+        assert_eq!(l.note_tick(true), ShedLevel::ShedNewest);
+        for _ in 0..15 {
+            assert_eq!(l.note_tick(false), ShedLevel::ShedNewest);
+        }
+        assert_eq!(l.note_tick(false), ShedLevel::DeferPrefill);
+    }
+
+    #[test]
+    fn ladder_counters_are_monotone_under_any_interleaving() {
+        // I11 at the policy layer: demotes/repromotes never decrease
+        let mut l = OverloadLadder::new();
+        let (mut d, mut r) = (0, 0);
+        let mut x = 0x9E37u64;
+        for _ in 0..4000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            l.note_tick(x & 0b11 == 0);
+            assert!(l.demotes() >= d && l.repromotes() >= r);
+            d = l.demotes();
+            r = l.repromotes();
+        }
+    }
+
+    #[test]
+    fn pressure_predicate_edges() {
+        assert!(overload_pressure(8, 8, 100, 2), "queue at high");
+        assert!(!overload_pressure(7, 8, 100, 2));
+        assert!(overload_pressure(0, 8, 1, 2), "pool under low");
+        assert!(!overload_pressure(0, 8, 2, 2), "at low is clean");
+        // queue_high 0 disables the queue trigger, not the pool one
+        assert!(!overload_pressure(100, 0, 10, 2));
+        assert!(overload_pressure(100, 0, 1, 2));
+    }
+
+    #[test]
+    fn gate_hysteresis_does_not_thrash_at_the_boundary() {
+        let mut g = AdmissionGate::new();
+        assert!(g.evaluate(10, 2, 6));
+        assert!(!g.evaluate(1, 2, 6), "closes under low");
+        // recovery to between the marks keeps it closed
+        assert!(!g.evaluate(4, 2, 6));
+        assert!(!g.evaluate(5, 2, 6));
+        assert!(g.evaluate(6, 2, 6), "reopens at high");
+        assert!(g.evaluate(3, 2, 6), "open above low stays open");
+        g.note_deferral();
+        assert_eq!(g.deferrals(), 1);
+    }
+
+    #[test]
+    fn gate_with_high_below_low_still_recovers() {
+        // degenerate config (high < low) must not wedge shut
+        let mut g = AdmissionGate::new();
+        assert!(!g.evaluate(0, 4, 1));
+        assert!(g.evaluate(4, 4, 1), "reopens at max(low, high)");
+    }
+
+    #[test]
+    fn page_estimate_charges_the_full_reservation() {
+        assert_eq!(estimate_pages(8, 8, 8), 2);
+        assert_eq!(estimate_pages(9, 0, 8), 2);
+        assert_eq!(estimate_pages(1, 0, 8), 1);
+        assert_eq!(estimate_pages(0, 0, 8), 1, "min one page");
+        assert_eq!(estimate_pages(100, 28, 8), 16);
+        assert_eq!(estimate_pages(5, 5, 0), 10, "page_size clamped");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff_ticks(0), 2);
+        assert_eq!(backoff_ticks(1), 2);
+        assert_eq!(backoff_ticks(2), 4);
+        assert_eq!(backoff_ticks(3), 8);
+        assert_eq!(backoff_ticks(6), 64);
+        assert_eq!(backoff_ticks(40), 64, "capped");
+    }
+}

@@ -17,6 +17,8 @@
 //!   --copy-threads N   --copy-engine shared|per-pool
 //!   --fault-plan seed:S[:H[:C]] | kind@step,...
 //!   --max-batch N --prefill-chunk N
+//!   --max-conns N --read-timeout-ms MS
+//!   --deadline-ms MS --ttft-budget-ms MS --max-sat-retries N
 //!   --config FILE.json
 //! ```
 
@@ -90,7 +92,20 @@ fn print_help() {
              for a seeded schedule, or kind@step,... with kinds\n\
              panic|loss|stall|alloc|exec; PF_FAULT_SEED=S is the env\n\
              shorthand; default none)\n\
-           --max-batch N --prefill-chunk N --config FILE.json"
+           --max-batch N --prefill-chunk N --config FILE.json\n\
+         \n\
+         overload hardening (DESIGN.md §12):\n\
+           --max-conns N (connection cap; over-cap clients get a\n\
+             typed 'overloaded' refusal at accept; default 64)\n\
+           --read-timeout-ms MS (slow-reader guard on each\n\
+             connection; 0 disables; default 30000)\n\
+           --deadline-ms MS (default end-to-end deadline applied to\n\
+             requests that carry none; 0 = unbounded; per-request\n\
+             'deadline_ms' overrides)\n\
+           --ttft-budget-ms MS (expire requests still waiting for\n\
+             their first token past this budget; 0 = unbounded)\n\
+           --max-sat-retries N (bounded retry-with-backoff before a\n\
+             pool-saturated request dies typed; default 4)"
     );
 }
 
@@ -192,6 +207,29 @@ impl Flags {
         if let Some(c) = self.get("prefill-chunk") {
             cfg.scheduler.prefill_chunk =
                 c.parse().map_err(|_| err!("bad --prefill-chunk {c}"))?;
+        }
+        if let Some(n) = self.get("max-conns") {
+            cfg.scheduler.max_connections =
+                n.parse().map_err(|_| err!("bad --max-conns {n}"))?;
+        }
+        if let Some(t) = self.get("read-timeout-ms") {
+            cfg.scheduler.read_timeout_ms = t
+                .parse()
+                .map_err(|_| err!("bad --read-timeout-ms {t}"))?;
+        }
+        if let Some(d) = self.get("deadline-ms") {
+            cfg.scheduler.default_deadline_ms =
+                d.parse().map_err(|_| err!("bad --deadline-ms {d}"))?;
+        }
+        if let Some(t) = self.get("ttft-budget-ms") {
+            cfg.scheduler.ttft_budget_ms = t
+                .parse()
+                .map_err(|_| err!("bad --ttft-budget-ms {t}"))?;
+        }
+        if let Some(r) = self.get("max-sat-retries") {
+            cfg.scheduler.max_sat_retries = r
+                .parse()
+                .map_err(|_| err!("bad --max-sat-retries {r}"))?;
         }
         Ok(cfg)
     }

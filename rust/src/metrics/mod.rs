@@ -186,6 +186,20 @@ pub struct ServingMetrics {
     /// Peak outstanding jobs on this pool set's copy-engine submit
     /// queue (per-pool backpressure ledger, DESIGN.md §10).
     pub pipeline_queue_peak: AtomicU64,
+    /// Requests dropped by the overload ladder (ShedNewest trims,
+    /// RejectAll at submit, graceful-drain sheds — DESIGN.md §12).
+    pub requests_shed: AtomicU64,
+    /// Requests retired because a deadline or TTFT budget elapsed.
+    pub requests_expired: AtomicU64,
+    /// Saturated/pool-exhausted requeues granted (bounded
+    /// retry-with-backoff; a request dies only past the retry cap).
+    pub saturated_retries: AtomicU64,
+    /// Shed-ladder demotions (Accept → … → RejectAll steps).
+    pub shed_demotes: AtomicU64,
+    /// Shed-ladder re-promotions after a clean-tick quota.
+    pub shed_repromotes: AtomicU64,
+    /// Admissions deferred by the KV watermark gate or budget.
+    pub admission_deferrals: AtomicU64,
     started: Option<Instant>,
 }
 
@@ -336,6 +350,8 @@ impl ServingMetrics {
              measured={:.0}% fence_wait={:.3} ms/step\n\
              kv faults: faults={} demotes={} repromotes={} \
              retries={}\n\
+             overload: shed={} expired={} sat_retries={} \
+             shed_demotes={} shed_repromotes={} deferrals={}\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -369,6 +385,12 @@ impl ServingMetrics {
             self.pipeline_demotes.load(Ordering::Relaxed),
             self.pipeline_repromotes.load(Ordering::Relaxed),
             self.pipeline_retries.load(Ordering::Relaxed),
+            self.requests_shed.load(Ordering::Relaxed),
+            self.requests_expired.load(Ordering::Relaxed),
+            self.saturated_retries.load(Ordering::Relaxed),
+            self.shed_demotes.load(Ordering::Relaxed),
+            self.shed_repromotes.load(Ordering::Relaxed),
+            self.admission_deferrals.load(Ordering::Relaxed),
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -446,6 +468,18 @@ const CSV_COLUMNS: &[CsvCol] = &[
      |m| m.pipeline_repromotes.load(Ordering::Relaxed).to_string()),
     ("transfer_retries",
      |m| m.pipeline_retries.load(Ordering::Relaxed).to_string()),
+    ("requests_shed",
+     |m| m.requests_shed.load(Ordering::Relaxed).to_string()),
+    ("requests_expired",
+     |m| m.requests_expired.load(Ordering::Relaxed).to_string()),
+    ("saturated_retries",
+     |m| m.saturated_retries.load(Ordering::Relaxed).to_string()),
+    ("shed_demotes",
+     |m| m.shed_demotes.load(Ordering::Relaxed).to_string()),
+    ("shed_repromotes",
+     |m| m.shed_repromotes.load(Ordering::Relaxed).to_string()),
+    ("admission_deferrals",
+     |m| m.admission_deferrals.load(Ordering::Relaxed).to_string()),
 ];
 
 /// Scoped timer recording into a histogram on drop.
@@ -548,7 +582,8 @@ mod tests {
                    "warm step must read 0, not the warm-up residue");
         assert_eq!(m.alloc_bytes.load(Ordering::Relaxed), 128);
         assert!(m.csv_row()
-                 .ends_with("2048,0,0.000,0,0.000,0,0.0000,0,0,0,0"),
+                 .ends_with("2048,0,0.000,0,0.000,0,0.0000,0,0,0,0,\
+                             0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -570,7 +605,8 @@ mod tests {
         assert!(s.contains("delta=3"), "{s}");
         assert!(s.contains("ranges=9"), "{s}");
         assert!(m.csv_row()
-                 .ends_with("4096,0.000,0,0.000,0,0.0000,0,0,0,0"),
+                 .ends_with("4096,0.000,0,0.000,0,0.0000,0,0,0,0,\
+                             0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -618,7 +654,8 @@ mod tests {
         assert!(s.contains("repromotes=1"), "{s}");
         assert!(s.contains("retries=1"), "{s}");
         assert!(m.csv_row()
-                 .ends_with("0.750,0,0.750,2,0.0000,2,2,1,1"),
+                 .ends_with("0.750,0,0.750,2,0.0000,2,2,1,1,\
+                             0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -643,9 +680,32 @@ mod tests {
                      "pipeline_overlap_frac", "copy_queue_peak",
                      "fence_wait_ms_per_step", "transfer_faults",
                      "pool_demotes", "pool_repromotes",
-                     "transfer_retries"] {
+                     "transfer_retries", "requests_shed",
+                     "requests_expired", "saturated_retries",
+                     "shed_demotes", "shed_repromotes",
+                     "admission_deferrals"] {
             assert!(header.contains(&name), "missing column {name}");
         }
+    }
+
+    #[test]
+    fn overload_counters_render_in_summary_and_csv() {
+        let m = ServingMetrics::new();
+        ServingMetrics::inc(&m.requests_shed, 3);
+        ServingMetrics::inc(&m.requests_expired, 2);
+        ServingMetrics::inc(&m.saturated_retries, 5);
+        m.shed_demotes.store(4, Ordering::Relaxed);
+        m.shed_repromotes.store(1, Ordering::Relaxed);
+        m.admission_deferrals.store(7, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("shed=3"), "{s}");
+        assert!(s.contains("expired=2"), "{s}");
+        assert!(s.contains("sat_retries=5"), "{s}");
+        assert!(s.contains("shed_demotes=4"), "{s}");
+        assert!(s.contains("shed_repromotes=1"), "{s}");
+        assert!(s.contains("deferrals=7"), "{s}");
+        assert!(m.csv_row().ends_with("3,2,5,4,1,7"),
+                "{}", m.csv_row());
     }
 
     #[test]

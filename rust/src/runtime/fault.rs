@@ -227,6 +227,195 @@ impl FaultInjector {
     }
 }
 
+// ----------------------------------------------------------------------
+// serving-layer faults (DESIGN.md §12)
+// ----------------------------------------------------------------------
+
+/// One injectable *serving-tier* failure mode — faults that hit the
+/// TCP/coordinator layer rather than the KV transfer stack. A
+/// separate enum (not new [`FaultKind`] variants) on purpose:
+/// `FaultPlan::seeded` draws kinds uniformly over `FaultKind::ALL`,
+/// so widening that array would silently reshuffle every existing
+/// seed's schedule (the CI chaos matrix pins seeds 3/17/29).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServingFaultKind {
+    /// Client drops the connection mid-generate (reply send fails).
+    ClientDisconnect,
+    /// A burst of extra requests lands in one step (overload spike).
+    Burst,
+    /// A client stops reading / trickles bytes (read-timeout prey).
+    SlowReader,
+}
+
+impl ServingFaultKind {
+    pub const ALL: [ServingFaultKind; 3] = [
+        ServingFaultKind::ClientDisconnect,
+        ServingFaultKind::Burst,
+        ServingFaultKind::SlowReader,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServingFaultKind::ClientDisconnect => "disconnect",
+            ServingFaultKind::Burst => "burst",
+            ServingFaultKind::SlowReader => "slow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "disconnect" => Ok(ServingFaultKind::ClientDisconnect),
+            "burst" => Ok(ServingFaultKind::Burst),
+            "slow" => Ok(ServingFaultKind::SlowReader),
+            other => Err(err!(
+                "unknown serving fault kind '{other}' (want \
+                 disconnect|burst|slow)"
+            )),
+        }
+    }
+}
+
+/// One scheduled serving fault (same step semantics as
+/// [`FaultEvent`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServingFaultEvent {
+    pub step: u64,
+    pub kind: ServingFaultKind,
+}
+
+/// Seed-reproducible serving-fault schedule, the `serving_chaos`
+/// mirror of [`FaultPlan`]. Distinct seed salt: the same numeric
+/// seed drives *independent* engine and serving storms.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServingFaultPlan {
+    events: Vec<ServingFaultEvent>,
+}
+
+impl ServingFaultPlan {
+    pub fn none() -> Self {
+        ServingFaultPlan { events: vec![] }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[ServingFaultEvent] {
+        &self.events
+    }
+
+    /// `count` events uniformly over `[0, horizon)` steps, kinds
+    /// uniform; same seed → same schedule.
+    pub fn seeded(seed: u64, horizon: u64, count: usize) -> Self {
+        let mut rng = Rng::seeded(seed ^ 0x5E12_11F0_5E12_11F0);
+        let mut events: Vec<ServingFaultEvent> = (0..count)
+            .map(|_| ServingFaultEvent {
+                step: rng.below(horizon.max(1)),
+                kind: ServingFaultKind::ALL[rng
+                    .below(ServingFaultKind::ALL.len() as u64)
+                    as usize],
+            })
+            .collect();
+        events.sort_by_key(|e| e.step);
+        ServingFaultPlan { events }
+    }
+
+    /// Parse `seed:S[:HORIZON[:COUNT]]` (defaults 120/8) or an
+    /// explicit `kind@step,...` list; ``/`none` → empty.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(ServingFaultPlan::none());
+        }
+        if let Some(rest) = spec.strip_prefix("seed:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            let parse_u64 = |s: &str, what: &str| -> Result<u64> {
+                s.parse::<u64>().map_err(|_| {
+                    err!("serving fault plan: bad {what} '{s}' \
+                          in '{spec}'")
+                })
+            };
+            let seed = parse_u64(parts[0], "seed")?;
+            let horizon = match parts.get(1) {
+                Some(s) => parse_u64(s, "horizon")?,
+                None => 120,
+            };
+            let count = match parts.get(2) {
+                Some(s) => parse_u64(s, "count")? as usize,
+                None => 8,
+            };
+            if parts.len() > 3 {
+                bail!("serving fault plan: too many ':' fields \
+                       in '{spec}'");
+            }
+            return Ok(ServingFaultPlan::seeded(seed, horizon, count));
+        }
+        let mut events = vec![];
+        for item in spec.split(',') {
+            let item = item.trim();
+            let (kind, step) = item.split_once('@').ok_or_else(|| {
+                err!("serving fault item '{item}' is not 'kind@step'")
+            })?;
+            events.push(ServingFaultEvent {
+                step: step.parse::<u64>().map_err(|_| {
+                    err!("serving fault plan: bad step '{step}' \
+                          in '{item}'")
+                })?,
+                kind: ServingFaultKind::parse(kind)?,
+            });
+        }
+        events.sort_by_key(|e| e.step);
+        Ok(ServingFaultPlan { events })
+    }
+}
+
+/// Stateful cursor over a [`ServingFaultPlan`] (same contract as
+/// [`FaultInjector`]: one `begin_step` per serving step, clean past
+/// the horizon).
+#[derive(Debug, Clone)]
+pub struct ServingFaultInjector {
+    plan: ServingFaultPlan,
+    cursor: usize,
+    step: u64,
+    injected: u64,
+}
+
+impl ServingFaultInjector {
+    pub fn new(plan: ServingFaultPlan) -> Self {
+        ServingFaultInjector { plan, cursor: 0, step: 0, injected: 0 }
+    }
+
+    pub fn idle() -> Self {
+        ServingFaultInjector::new(ServingFaultPlan::none())
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    pub fn begin_step(&mut self) -> Vec<ServingFaultKind> {
+        let mut fired = vec![];
+        while let Some(ev) = self.plan.events.get(self.cursor) {
+            if ev.step > self.step {
+                break;
+            }
+            fired.push(ev.kind);
+            self.cursor += 1;
+        }
+        self.injected += fired.len() as u64;
+        self.step += 1;
+        fired
+    }
+
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +474,67 @@ mod tests {
         }
         assert_eq!(inj.injected(), 3);
         assert_eq!(inj.step(), 36);
+    }
+
+    #[test]
+    fn serving_plans_replay_and_stay_independent_of_engine_plans() {
+        let a = ServingFaultPlan::seeded(42, 64, 6);
+        assert_eq!(a, ServingFaultPlan::seeded(42, 64, 6));
+        assert_eq!(a.events().len(), 6);
+        assert!(a.events().iter().all(|e| e.step < 64));
+        assert!(a.events().windows(2).all(|w| w[0].step <= w[1].step));
+        assert_ne!(a, ServingFaultPlan::seeded(43, 64, 6));
+        // distinct salt: the engine plan for the same seed draws a
+        // different stream (steps can't all coincide by construction)
+        let eng = FaultPlan::seeded(42, 64, 6);
+        let eng_steps: Vec<u64> =
+            eng.events().iter().map(|e| e.step).collect();
+        let srv_steps: Vec<u64> =
+            a.events().iter().map(|e| e.step).collect();
+        assert_ne!(eng_steps, srv_steps,
+                   "serving salt must decorrelate the streams");
+    }
+
+    #[test]
+    fn serving_plan_parses_both_forms() {
+        assert!(ServingFaultPlan::parse("").unwrap().is_empty());
+        assert!(ServingFaultPlan::parse("none").unwrap().is_empty());
+        assert_eq!(ServingFaultPlan::parse("seed:9").unwrap(),
+                   ServingFaultPlan::seeded(9, 120, 8));
+        assert_eq!(ServingFaultPlan::parse("seed:9:40:2").unwrap(),
+                   ServingFaultPlan::seeded(9, 40, 2));
+        let p = ServingFaultPlan::parse(
+            "slow@9, disconnect@2,burst@5").unwrap();
+        let got: Vec<(u64, &str)> = p.events()
+            .iter()
+            .map(|e| (e.step, e.kind.as_str()))
+            .collect();
+        assert_eq!(got, vec![(2, "disconnect"), (5, "burst"),
+                             (9, "slow")]);
+        assert!(ServingFaultPlan::parse("seed:x").is_err());
+        assert!(ServingFaultPlan::parse("frob@3").is_err());
+        assert!(ServingFaultPlan::parse("slow-3").is_err());
+    }
+
+    #[test]
+    fn serving_injector_fires_then_goes_clean() {
+        let plan = ServingFaultPlan::parse(
+            "disconnect@1,burst@1,slow@3").unwrap();
+        let mut inj = ServingFaultInjector::new(plan);
+        assert!(inj.begin_step().is_empty());
+        assert_eq!(inj.begin_step(),
+                   vec![ServingFaultKind::ClientDisconnect,
+                        ServingFaultKind::Burst]);
+        assert!(inj.begin_step().is_empty());
+        assert_eq!(inj.begin_step(),
+                   vec![ServingFaultKind::SlowReader]);
+        for _ in 0..16 {
+            assert!(inj.begin_step().is_empty());
+        }
+        assert_eq!(inj.injected(), 3);
+        assert_eq!(inj.step(), 20);
+        assert!(ServingFaultInjector::idle().is_idle());
+        assert!(!inj.is_idle());
     }
 
     #[test]

@@ -32,7 +32,9 @@ use crate::{ensure, err};
 pub use copy_stream::{CopyDone, CopyEngine, CopyJob, CopyStream,
                       DevicePair, Fence, FenceWait, Poisoned};
 pub use device_window::{DeviceWindow, UploadStats};
-pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan};
+pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan,
+                ServingFaultEvent, ServingFaultInjector,
+                ServingFaultKind, ServingFaultPlan};
 pub use tensor::HostTensor;
 
 /// One loaded model config: manifest entry + device weights + executable

@@ -14,16 +14,25 @@
 //!
 //! Protocol (one JSON object per line):
 //!   → {"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
-//!      "temperature":0.7,"top_k":40,"top_p":0.9,"stop_at_eos":true}
+//!      "temperature":0.7,"top_k":40,"top_p":0.9,"stop_at_eos":true,
+//!      "deadline_ms":5000,"ttft_budget_ms":1000}
 //!   → {"op":"generate","text":"hello","max_new_tokens":8}
 //!   → {"op":"stats"}           → {"op":"shutdown"}
 //!   ← {"id":1,"tokens":[...],"text":"...","ttft_ms":..,"total_ms":..,
 //!      "preemptions":0,"cached_prompt_tokens":0}
-//!   ← {"error":"..."}
+//!   ← {"error":"...","reason":"saturated","retryable":true}
+//!
+//! Overload hardening (DESIGN.md §12): connections beyond
+//! `scheduler.max_connections` get a typed `overloaded` error at
+//! accept; readers idle past `scheduler.read_timeout_ms` are closed; a
+//! panicking connection handler kills only its own connection; and
+//! shutdown drains gracefully — in-flight requests finish, every
+//! queued/new request gets a typed JSON error, and no `handle_conn`
+//! is left blocked on `rx.recv()`.
 
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::time::Duration;
@@ -33,13 +42,23 @@ use crate::coordinator::{Coordinator, Finished, Request};
 use crate::engine::Engine;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{parse, Value};
-use crate::util::{Result, WrapErr};
+use crate::util::{EngineError, Error, Result, WrapErr};
 use crate::err;
 
 enum Incoming {
     Generate { req: Request, reply: Sender<String> },
     Stats { reply: Sender<String> },
     Shutdown,
+}
+
+/// Decrements the live-connection count when a connection ends —
+/// however it ends (clean close, timeout, panic unwind).
+struct ConnSlot(Arc<AtomicUsize>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Construct the engine from `cfg` on THIS thread and serve it — the
@@ -62,9 +81,12 @@ pub fn serve(engine: Engine, addr: &str,
     let local = listener.local_addr()?;
     on_bound(local);
 
+    let max_conns = engine.cfg.scheduler.max_connections.max(1);
+    let read_timeout_ms = engine.cfg.scheduler.read_timeout_ms;
     let (tx, rx) = channel::<Incoming>();
     let stop = Arc::new(AtomicBool::new(false));
     let next_id = Arc::new(AtomicU64::new(1));
+    let conns = Arc::new(AtomicUsize::new(0));
     let tokenizer = Arc::new(Tokenizer::byte_level(
         engine.rt.spec().vocab_size as u32));
 
@@ -79,12 +101,38 @@ pub fn serve(engine: Engine, addr: &str,
                 if stop.load(Ordering::Relaxed) {
                     break;
                 }
-                let Ok(conn) = conn else { continue };
+                let Ok(mut conn) = conn else { continue };
+                // connection cap: over-limit clients get a typed
+                // refusal instead of an unbounded reader thread
+                let slot = ConnSlot(Arc::clone(&conns));
+                if conns.fetch_add(1, Ordering::Relaxed) >= max_conns {
+                    let e = Error::with_kind(
+                        EngineError::Overloaded,
+                        format!("connection limit {max_conns} \
+                                 reached"),
+                    );
+                    let _ = conn.write_all(error_json(&e).as_bytes());
+                    let _ = conn.write_all(b"\n");
+                    drop(slot); // fetch_sub via Drop
+                    continue;
+                }
+                if read_timeout_ms > 0 {
+                    let _ = conn.set_read_timeout(Some(
+                        Duration::from_millis(read_timeout_ms)));
+                }
                 let tx = tx.clone();
                 let next_id = Arc::clone(&next_id);
                 let tok = Arc::clone(&tok);
                 std::thread::spawn(move || {
-                    let _ = handle_conn(conn, tx, next_id, tok);
+                    let _slot = slot;
+                    // panic isolation: a handler bug (or poisoned
+                    // input) kills this connection, not the server
+                    let _ = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            let _ =
+                                handle_conn(conn, tx, next_id, tok);
+                        }),
+                    );
                 });
             }
         });
@@ -104,13 +152,18 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
         loop {
             match rx.try_recv() {
                 Ok(Incoming::Generate { req, reply }) => {
+                    if stop.load(Ordering::Relaxed) {
+                        // draining: answer instead of submitting
+                        let _ = reply.send(error_json(&drain_error()));
+                        continue;
+                    }
                     let id = req.id;
                     match coord.submit(req) {
                         Ok(()) => {
                             replies.insert(id, reply);
                         }
                         Err(e) => {
-                            let _ = reply.send(error_json(&e.to_string()));
+                            let _ = reply.send(error_json(&e));
                         }
                     }
                 }
@@ -127,20 +180,38 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
                 }
             }
         }
-        if stop.load(Ordering::Relaxed) && coord.idle() {
-            return Ok(());
+        if stop.load(Ordering::Relaxed) {
+            // graceful drain: the running batch finishes; everything
+            // still queued is retired with a typed error that the
+            // finish-routing below delivers — no client hangs
+            coord.shed_queued("server draining");
         }
-        if coord.idle() {
-            std::thread::sleep(Duration::from_millis(2));
-            continue;
+        if !coord.idle() {
+            coord.tick()?;
         }
-        coord.tick()?;
         for fin in coord.drain_finished() {
             if let Some(reply) = replies.remove(&fin.id) {
                 let _ = reply.send(finished_json(&fin, &tok));
             }
         }
+        if stop.load(Ordering::Relaxed) && coord.idle() {
+            // belt-and-braces: any reply sender still registered
+            // (submitted but its Finished got lost) must be answered,
+            // or its handle_conn leaks a blocked recv()
+            for (_, reply) in replies.drain() {
+                let _ = reply.send(error_json(&drain_error()));
+            }
+            return Ok(());
+        }
+        if coord.idle() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
     }
+}
+
+fn drain_error() -> Error {
+    Error::with_kind(EngineError::Overloaded,
+                     "server draining for shutdown")
 }
 
 fn handle_conn(conn: TcpStream, tx: Sender<Incoming>,
@@ -148,6 +219,8 @@ fn handle_conn(conn: TcpStream, tx: Sender<Incoming>,
     let mut writer = conn.try_clone()?;
     let reader = BufReader::new(conn);
     for line in reader.lines() {
+        // a read error here includes the slow-reader timeout
+        // (set_read_timeout in the accept loop): close the connection
         let line = line?;
         if line.trim().is_empty() {
             continue;
@@ -155,10 +228,10 @@ fn handle_conn(conn: TcpStream, tx: Sender<Incoming>,
         let reply_line = match handle_line(&line, &tx, &next_id, &tok) {
             Ok(Some(rx)) => match rx.recv() {
                 Ok(l) => l,
-                Err(_) => error_json("server shut down"),
+                Err(_) => error_json(&drain_error()),
             },
-            Ok(None) => error_json("shutting down"),
-            Err(e) => error_json(&e.to_string()),
+            Ok(None) => error_json(&Error::msg("shutting down")),
+            Err(e) => error_json(&e),
         };
         writer.write_all(reply_line.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -199,6 +272,14 @@ fn handle_line(line: &str, tx: &Sender<Incoming>,
                     .map(|x| x.as_bool())
                     .transpose()?
                     .unwrap_or(false),
+                deadline_ms: v
+                    .opt("deadline_ms")
+                    .map(|x| x.as_u64())
+                    .transpose()?,
+                ttft_budget_ms: v
+                    .opt("ttft_budget_ms")
+                    .map(|x| x.as_u64())
+                    .transpose()?,
             };
             let (rtx, rrx) = channel();
             tx.send(Incoming::Generate { req, reply: rtx })
@@ -221,7 +302,7 @@ fn handle_line(line: &str, tx: &Sender<Incoming>,
 
 fn finished_json(fin: &Finished, tok: &Tokenizer) -> String {
     if let Some(e) = &fin.error {
-        return error_json(e);
+        return error_json_with(e, Some(fin.id));
     }
     let text = String::from_utf8_lossy(&tok.decode_lossy(&fin.tokens))
         .into_owned();
@@ -242,21 +323,54 @@ fn finished_json(fin: &Finished, tok: &Tokenizer) -> String {
 
 fn stats_json(coord: &Coordinator) -> String {
     let m = coord.metrics();
+    let c = |a: &std::sync::atomic::AtomicU64| {
+        Value::num(a.load(Ordering::Relaxed) as f64)
+    };
     Value::obj(vec![
         ("waiting", Value::num(coord.n_waiting() as f64)),
         ("running", Value::num(coord.n_running() as f64)),
+        ("free_pages", Value::num(coord.free_pages() as f64)),
+        ("shed_level", Value::str(coord.shed_level().as_str())),
         ("decode_tok_per_s", Value::num(m.decode_tokens_per_sec())),
         ("ttft_p50_ms",
          Value::num(m.ttft.p50().as_secs_f64() * 1e3)),
         ("per_token_p50_ms",
          Value::num(m.per_token.p50().as_secs_f64() * 1e3)),
+        ("transfer_faults", c(&m.pipeline_faults)),
+        ("pool_demotes", c(&m.pipeline_demotes)),
+        ("pool_repromotes", c(&m.pipeline_repromotes)),
+        ("requests_rejected", c(&m.requests_rejected)),
+        ("requests_shed", c(&m.requests_shed)),
+        ("requests_expired", c(&m.requests_expired)),
+        ("saturated_retries", c(&m.saturated_retries)),
+        ("shed_demotes", c(&m.shed_demotes)),
+        ("shed_repromotes", c(&m.shed_repromotes)),
+        ("admission_deferrals", c(&m.admission_deferrals)),
         ("summary", Value::str(m.summary())),
     ])
     .to_json()
 }
 
-fn error_json(msg: &str) -> String {
-    Value::obj(vec![("error", Value::str(msg))]).to_json()
+/// Structured error line: human `error` text plus a machine `reason`
+/// (the typed [`EngineError`] wire name, `"internal"` when untyped)
+/// and a `retryable` classification so clients can route
+/// resubmit-vs-fail without parsing prose.
+fn error_json(e: &Error) -> String {
+    error_json_with(e, None)
+}
+
+fn error_json_with(e: &Error, id: Option<u64>) -> String {
+    let reason = e.kind().map(|k| k.as_str()).unwrap_or("internal");
+    let retryable = e.kind().map(|k| k.retryable()).unwrap_or(false);
+    let mut fields = vec![
+        ("error", Value::str(e.to_string())),
+        ("reason", Value::str(reason)),
+        ("retryable", Value::Bool(retryable)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", Value::num(id as f64)));
+    }
+    Value::obj(fields).to_json()
 }
 
 /// Blocking line-protocol client (tests, examples, CLI).
@@ -308,5 +422,64 @@ impl Client {
             .write_all(b"{\"op\":\"shutdown\"}\n")?;
         self.writer.flush()?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_json_carries_reason_and_retryability() {
+        let e = Error::with_kind(EngineError::Saturated,
+                                 "pool exhausted");
+        let v = parse(&error_json(&e)).unwrap();
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(),
+                   "saturated");
+        assert!(v.get("retryable").unwrap().as_bool().unwrap());
+        assert!(v.get("error").unwrap().as_str().unwrap()
+                 .contains("pool exhausted"));
+
+        let e = Error::with_kind(EngineError::ContextOverflow, "big");
+        let v = parse(&error_json(&e)).unwrap();
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(),
+                   "context_overflow");
+        assert!(!v.get("retryable").unwrap().as_bool().unwrap());
+
+        // untyped errors stay parseable: reason "internal", fatal
+        let v = parse(&error_json(&err!("boom"))).unwrap();
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(),
+                   "internal");
+        assert!(!v.get("retryable").unwrap().as_bool().unwrap());
+        assert!(v.opt("id").is_none());
+    }
+
+    #[test]
+    fn finished_error_json_names_the_request() {
+        let fin = Finished {
+            id: 42,
+            tokens: vec![],
+            prompt_len: 3,
+            ttft_s: 0.0,
+            total_s: 0.0,
+            preemptions: 0,
+            cached_prompt_tokens: 0,
+            error: Some(Error::with_kind(EngineError::Expired,
+                                         "deadline elapsed")),
+        };
+        let tok = Tokenizer::byte_level(300);
+        let v = parse(&finished_json(&fin, &tok)).unwrap();
+        assert_eq!(v.get("id").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(),
+                   "expired");
+        assert!(!v.get("retryable").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn drain_error_is_typed_retryable() {
+        let e = drain_error();
+        assert_eq!(e.kind(), Some(EngineError::Overloaded));
+        assert!(e.kind().unwrap().retryable(),
+                "a draining server is retryable elsewhere");
     }
 }

@@ -1,0 +1,165 @@
+//! Open-loop bursty load generation (DESIGN.md §12).
+//!
+//! `trace::poisson_trace` models steady open-loop arrivals; overload
+//! hardening needs the *other* regime — a base rate punctuated by
+//! fleet-scale bursts (deploys, retry storms, cache stampedes). A
+//! [`BurstSpec`] describes a square-wave rate profile: `base` req/s
+//! outside bursts, `base × multiplier` inside, with bursts occupying
+//! the first `duty` fraction of every `period`. Arrivals are drawn by
+//! thinning a Poisson process at the peak rate, so the same seed
+//! yields the same trace for any duty cycle — deterministic and
+//! replayable like every other generator here.
+
+use crate::trace::{synthetic_corpus, Rng, TraceRequest};
+
+/// Square-wave arrival-rate profile for overload benches.
+#[derive(Debug, Clone, Copy)]
+pub struct BurstSpec {
+    /// Arrival rate outside bursts (req/s).
+    pub base_rate_per_sec: f64,
+    /// Rate multiplier inside a burst window (2.0 = the
+    /// `overload_shed` gate's 2× over-capacity storm).
+    pub burst_multiplier: f64,
+    /// Full burst cycle length, seconds.
+    pub burst_period_sec: f64,
+    /// Fraction of each period spent bursting, in [0, 1].
+    pub burst_duty: f64,
+}
+
+impl BurstSpec {
+    /// Instantaneous rate at time `t` (seconds from trace start).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        if self.in_burst(t) {
+            self.base_rate_per_sec * self.burst_multiplier.max(1.0)
+        } else {
+            self.base_rate_per_sec
+        }
+    }
+
+    /// Is `t` inside a burst window?
+    pub fn in_burst(&self, t: f64) -> bool {
+        if self.burst_period_sec <= 0.0 || self.burst_duty <= 0.0 {
+            return false;
+        }
+        let phase = t.rem_euclid(self.burst_period_sec);
+        phase < self.burst_duty.min(1.0) * self.burst_period_sec
+    }
+
+    /// Peak rate (the thinning envelope).
+    pub fn peak_rate(&self) -> f64 {
+        self.base_rate_per_sec * self.burst_multiplier.max(1.0)
+    }
+}
+
+/// Open-loop arrivals under `spec` over `duration_sec`, mixed-grid
+/// prompt lengths like `trace::poisson_trace`. Implemented by
+/// thinning a homogeneous Poisson process at the peak rate: each
+/// candidate arrival at time `t` is kept with probability
+/// `rate_at(t) / peak_rate`, which yields an inhomogeneous Poisson
+/// process with exactly the square-wave intensity.
+pub fn bursty_trace(seed: u64, vocab: u32, spec: BurstSpec,
+                    duration_sec: f64, step: usize, max_len: usize,
+                    max_new: usize) -> Vec<TraceRequest> {
+    let mut rng = Rng::seeded(seed);
+    let grid: Vec<usize> = (1..)
+        .map(|i| i * step)
+        .take_while(|&l| l <= max_len)
+        .collect();
+    let peak = spec.peak_rate();
+    let mut out = Vec::new();
+    if peak <= 0.0 || grid.is_empty() {
+        return out;
+    }
+    let mut t = 0.0f64;
+    let mut id = 0u64;
+    loop {
+        t += rng.exp(peak);
+        if t > duration_sec {
+            break;
+        }
+        // thinning: always consume the acceptance draw so the
+        // arrival-time stream is independent of the duty cycle
+        let keep = rng.f64() < spec.rate_at(t) / peak;
+        if !keep {
+            continue;
+        }
+        let len = grid[rng.below(grid.len() as u64) as usize];
+        out.push(TraceRequest {
+            id,
+            arrival_us: (t * 1e6) as u64,
+            prompt: synthetic_corpus(&mut rng, len, vocab),
+            max_new_tokens: max_new,
+        });
+        id += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: BurstSpec = BurstSpec {
+        base_rate_per_sec: 50.0,
+        burst_multiplier: 4.0,
+        burst_period_sec: 2.0,
+        burst_duty: 0.25,
+    };
+
+    #[test]
+    fn burst_windows_follow_the_square_wave() {
+        assert!(SPEC.in_burst(0.0));
+        assert!(SPEC.in_burst(0.49));
+        assert!(!SPEC.in_burst(0.51));
+        assert!(!SPEC.in_burst(1.99));
+        assert!(SPEC.in_burst(2.1), "periodic");
+        assert_eq!(SPEC.rate_at(0.1), 200.0);
+        assert_eq!(SPEC.rate_at(1.0), 50.0);
+        assert_eq!(SPEC.peak_rate(), 200.0);
+        let flat = BurstSpec { burst_duty: 0.0, ..SPEC };
+        assert!(!flat.in_burst(0.0));
+        assert_eq!(flat.peak_rate(), 200.0, "envelope unchanged");
+    }
+
+    #[test]
+    fn bursty_trace_replays_and_is_sorted_and_denser_in_bursts() {
+        let a = bursty_trace(11, 512, SPEC, 20.0, 16, 64, 4);
+        let b = bursty_trace(11, 512, SPEC, 20.0, 16, 64, 4);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| {
+            x.id == y.id && x.arrival_us == y.arrival_us
+                && x.prompt == y.prompt
+        }), "same seed must replay the identical trace");
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| {
+            w[0].arrival_us <= w[1].arrival_us
+        }), "arrivals must be time-sorted");
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        // the burst windows cover 25% of the time but at 4× rate —
+        // they should hold roughly half the arrivals, and certainly
+        // a higher arrival *rate* than the quiet stretches
+        let in_burst = a.iter()
+            .filter(|r| SPEC.in_burst(r.arrival_us as f64 / 1e6))
+            .count() as f64;
+        let quiet = a.len() as f64 - in_burst;
+        let burst_rate = in_burst / (20.0 * 0.25);
+        let quiet_rate = quiet / (20.0 * 0.75);
+        assert!(burst_rate > 2.0 * quiet_rate,
+                "burst rate {burst_rate:.1}/s not elevated over \
+                 quiet {quiet_rate:.1}/s");
+    }
+
+    #[test]
+    fn degenerate_specs_yield_empty_or_flat_traces() {
+        let dead = BurstSpec { base_rate_per_sec: 0.0, ..SPEC };
+        assert!(bursty_trace(3, 512, dead, 10.0, 16, 64, 4)
+                    .is_empty());
+        // multiplier < 1 clamps to flat (a "burst" may not *reduce*
+        // load below base)
+        let calm = BurstSpec { burst_multiplier: 0.5, ..SPEC };
+        assert_eq!(calm.rate_at(0.1), 50.0);
+        assert_eq!(calm.peak_rate(), 50.0);
+        let t = bursty_trace(3, 512, calm, 10.0, 16, 64, 4);
+        assert!(!t.is_empty());
+    }
+}

@@ -8,6 +8,8 @@
 //! Calibration constants are the public L4 datasheet + the paper's own
 //! numbers (Sec. IV-B.1), recorded in DESIGN.md §1.
 
+pub mod load;
+
 /// NVIDIA L4 (paper's card) datasheet + LLaMA-7B fp16 constants.
 #[derive(Debug, Clone, Copy)]
 pub struct GpuModel {

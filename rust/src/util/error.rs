@@ -4,9 +4,10 @@
 use std::fmt;
 
 /// Typed classification for errors the serving tier must *route*
-/// rather than just display (DESIGN.md §11). Most errors stay
+/// rather than just display (DESIGN.md §11–12). Most errors stay
 /// untyped strings; a kind is attached only where a caller branches
-/// on it.
+/// on it — the server surfaces it to clients as a structured
+/// `"reason"` field so they can tell retryable from fatal.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineError {
     /// KV pool exhausted with nothing preemptible: the request that
@@ -15,11 +16,50 @@ pub enum EngineError {
     /// the batch serving — saturation is a per-request outcome, not
     /// a process failure.
     Saturated,
+    /// Waiting queue at `max_waiting`; rejected at submit.
+    QueueFull,
+    /// Zero-length prompt; nothing to serve.
+    EmptyPrompt,
+    /// `prompt + max_new_tokens` exceeds the model's max context.
+    ContextOverflow,
+    /// Deadline or TTFT budget elapsed before completion.
+    Expired,
+    /// Shed by the overload ladder (ShedNewest / RejectAll) or the
+    /// graceful-drain path — the server chose not to serve it.
+    Overloaded,
+}
+
+impl EngineError {
+    /// Stable wire name — the server's `"reason"` field.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineError::Saturated => "saturated",
+            EngineError::QueueFull => "queue_full",
+            EngineError::EmptyPrompt => "empty_prompt",
+            EngineError::ContextOverflow => "context_overflow",
+            EngineError::Expired => "expired",
+            EngineError::Overloaded => "overloaded",
+        }
+    }
+
+    /// Would an identical resubmission plausibly succeed later?
+    /// Load-dependent outcomes are retryable; malformed requests and
+    /// elapsed budgets are not.
+    pub fn retryable(&self) -> bool {
+        match self {
+            EngineError::Saturated
+            | EngineError::QueueFull
+            | EngineError::Overloaded => true,
+            EngineError::EmptyPrompt
+            | EngineError::ContextOverflow
+            | EngineError::Expired => false,
+        }
+    }
 }
 
 /// String-backed error with a context chain and an optional typed
 /// kind (the kind survives added context).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Error {
     chain: Vec<String>,
     kind: Option<EngineError>,
@@ -30,10 +70,14 @@ impl Error {
         Error { chain: vec![m.to_string()], kind: None }
     }
 
+    /// An error carrying a typed [`EngineError`] kind.
+    pub fn with_kind(kind: EngineError, m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()], kind: Some(kind) }
+    }
+
     /// A pool-saturation error ([`EngineError::Saturated`]).
     pub fn saturated(m: impl fmt::Display) -> Self {
-        Error { chain: vec![m.to_string()],
-                kind: Some(EngineError::Saturated) }
+        Error::with_kind(EngineError::Saturated, m)
     }
 
     pub fn context(mut self, c: impl fmt::Display) -> Self {
@@ -195,5 +239,33 @@ mod tests {
                    "admitting request 7: pool exhausted");
         assert!(!err!("plain").is_saturated());
         assert_eq!(err!("plain").kind(), None);
+    }
+
+    #[test]
+    fn typed_kinds_name_themselves_and_classify_retryability() {
+        use EngineError::*;
+        for (k, name, retry) in [
+            (Saturated, "saturated", true),
+            (QueueFull, "queue_full", true),
+            (Overloaded, "overloaded", true),
+            (EmptyPrompt, "empty_prompt", false),
+            (ContextOverflow, "context_overflow", false),
+            (Expired, "expired", false),
+        ] {
+            assert_eq!(k.as_str(), name);
+            assert_eq!(k.retryable(), retry,
+                       "{name}: wrong retryability class");
+            let e = Error::with_kind(k, "why").context("ctx");
+            assert_eq!(e.kind(), Some(k), "{name}: kind lost in chain");
+        }
+    }
+
+    #[test]
+    fn errors_clone_with_kind_and_chain() {
+        let e = Error::with_kind(EngineError::Expired, "deadline")
+            .context("request 3");
+        let c = e.clone();
+        assert_eq!(c.kind(), Some(EngineError::Expired));
+        assert_eq!(c.to_string(), e.to_string());
     }
 }

@@ -1,0 +1,748 @@
+//! Serving-tier chaos conformance (DESIGN.md §12), the overload
+//! mirror of `chaos_recovery.rs`.
+//!
+//! Two layers:
+//!
+//! * **Offline storms (always run).** A deterministic tick-based
+//!   replica of the coordinator's overload machinery — KV-budget
+//!   admission with hysteresis, deadline expiry, bounded
+//!   retry-with-backoff, the Accept → DeferPrefill → ShedNewest →
+//!   RejectAll ladder — is driven by seeded [`ServingFaultPlan`]
+//!   schedules (client disconnects, request bursts, slow readers).
+//!   Under every schedule the run must drain, every request must end
+//!   with tokens or a typed reason, the page pool must come back
+//!   whole, and every overload counter must be monotone (I11). A
+//!   fault-free low-rate control must show zero shed activity.
+//!
+//! * **TCP storms (artifact-gated).** The same properties through the
+//!   real JSON-lines server over real tiny artifacts: an
+//!   overcommitted generation storm drains with typed outcomes only;
+//!   chaos clients (mid-generate disconnects, connection bursts, slow
+//!   readers) leave the survivors' token streams byte-identical to a
+//!   fault-free replica; graceful drain answers every client instead
+//!   of leaving one blocked; over-cap connections get a typed
+//!   `overloaded` refusal.
+//!
+//! `PF_FAULT_SEED=S` narrows the seed sweep to one schedule (the CI
+//! serving-chaos matrix).
+
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+
+use paged_flex::coordinator::{backoff_ticks, estimate_pages,
+                              overload_pressure, AdmissionGate,
+                              OverloadLadder, ShedLevel};
+use paged_flex::kvpage::{AllocError, GrowthPolicy, PageAllocator,
+                         PageManager};
+use paged_flex::metrics::ServingMetrics;
+use paged_flex::runtime::{ServingFaultInjector, ServingFaultKind,
+                          ServingFaultPlan};
+use paged_flex::trace::Rng;
+
+const PAGE_SIZE: usize = 8;
+
+/// `PF_FAULT_SEED=S` → run just that schedule (the CI serving-chaos
+/// matrix); unset → sweep the defaults.
+fn fault_seeds(defaults: &[u64]) -> Vec<u64> {
+    match std::env::var("PF_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+    {
+        Some(s) => vec![s],
+        None => defaults.to_vec(),
+    }
+}
+
+// ---------------------------------------------------------------
+// offline overload rig
+// ---------------------------------------------------------------
+
+struct RigCfg {
+    n_pages: u32,
+    max_running: usize,
+    max_waiting: usize,
+    max_retries: u32,
+    deadline: u64,
+    queue_high: usize,
+    queue_low: usize,
+    low_pages: usize,
+    high_pages: usize,
+    watermark: usize,
+    prompt_len: usize,
+    max_new: usize,
+}
+
+const STORM_RIG: RigCfg = RigCfg {
+    n_pages: 32,
+    max_running: 4,
+    max_waiting: 32,
+    max_retries: 3,
+    deadline: 120,
+    queue_high: 10,
+    queue_low: 4,
+    low_pages: 4,
+    high_pages: 8,
+    watermark: 2,
+    prompt_len: 24,
+    max_new: 8,
+};
+
+struct RigJob {
+    id: u64,
+    arrive: u64,
+    generated: usize,
+    retries: u32,
+    not_before: u64,
+}
+
+struct RigOut {
+    /// request id → Ok(token count) | Err(typed reason)
+    outcomes: HashMap<u64, Result<usize, &'static str>>,
+    drained: bool,
+    free_end: usize,
+    injected: u64,
+    violations: Vec<String>,
+    shed: u64,
+    expired: u64,
+    sat_retries: u64,
+    demotes: u64,
+    repromotes: u64,
+    deferrals: u64,
+    rejected: u64,
+}
+
+/// Deterministic replica of the coordinator's overload tick: faults →
+/// arrivals → expiry → ladder/shed → budget admission → decode →
+/// retire, with the same forced-progress and bounded-retry rules.
+fn run_rig(rc: &RigCfg, n_jobs: usize, arrival_every: u64,
+           plan: ServingFaultPlan) -> RigOut {
+    let n_events = plan.events().len() as u64;
+    let mut inj = ServingFaultInjector::new(plan);
+    let m = ServingMetrics::new();
+    let alloc = Arc::new(PageAllocator::new(
+        rc.n_pages, PAGE_SIZE, 16, GrowthPolicy::Exact));
+    let mut mgr = PageManager::new(Arc::clone(&alloc), 64);
+    mgr.set_prefix_cache(false); // ramp prompts would all alias
+
+    let mut ladder = OverloadLadder::new();
+    let mut gate = AdmissionGate::new();
+    let mut waiting: VecDeque<RigJob> = VecDeque::new();
+    let mut running: Vec<RigJob> = Vec::new();
+    let mut outcomes: HashMap<u64, Result<usize, &'static str>> =
+        HashMap::new();
+    let mut violations = Vec::new();
+    let mut last_snap = [0u64; 7];
+    let mut next_burst_id = n_jobs as u64;
+    let mut arrived = 0usize;
+    let mut stalled: Option<u64> = None;
+    let cap = 5_000u64;
+    let mut tick = 0u64;
+
+    loop {
+        // serving faults land first, like wire events beating the tick
+        let mut arrivals: Vec<u64> = Vec::new();
+        for kind in inj.begin_step() {
+            match kind {
+                ServingFaultKind::Burst => {
+                    for _ in 0..4 {
+                        arrivals.push(next_burst_id);
+                        next_burst_id += 1;
+                    }
+                }
+                ServingFaultKind::ClientDisconnect => {
+                    // newest running client vanishes mid-generate
+                    if let Some(i) = running
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, j)| (j.arrive, j.id))
+                        .map(|(i, _)| i)
+                    {
+                        let job = running.swap_remove(i);
+                        mgr.free(job.id).unwrap();
+                        outcomes.insert(job.id, Err("cancelled"));
+                    }
+                }
+                ServingFaultKind::SlowReader => {
+                    stalled = running.first().map(|j| j.id);
+                }
+            }
+        }
+        while arrived < n_jobs
+            && tick >= arrived as u64 * arrival_every
+        {
+            arrivals.push(arrived as u64);
+            arrived += 1;
+        }
+        for id in arrivals {
+            if ladder.level() == ShedLevel::RejectAll {
+                ServingMetrics::inc(&m.requests_rejected, 1);
+                ServingMetrics::inc(&m.requests_shed, 1);
+                outcomes.insert(id, Err("overloaded"));
+            } else if waiting.len() >= rc.max_waiting {
+                ServingMetrics::inc(&m.requests_rejected, 1);
+                outcomes.insert(id, Err("queue_full"));
+            } else {
+                waiting.push_back(RigJob {
+                    id, arrive: tick, generated: 0, retries: 0,
+                    not_before: 0,
+                });
+            }
+        }
+
+        // deadline expiry (waiting then running), then the ladder
+        let mut i = 0;
+        while i < waiting.len() {
+            if tick - waiting[i].arrive >= rc.deadline {
+                let job = waiting.remove(i).unwrap();
+                ServingMetrics::inc(&m.requests_expired, 1);
+                outcomes.insert(job.id, Err("expired"));
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < running.len() {
+            if tick - running[i].arrive >= rc.deadline {
+                let job = running.swap_remove(i);
+                mgr.free(job.id).unwrap();
+                ServingMetrics::inc(&m.requests_expired, 1);
+                outcomes.insert(job.id, Err("expired"));
+            } else {
+                i += 1;
+            }
+        }
+        let level = ladder.note_tick(overload_pressure(
+            waiting.len(), rc.queue_high, alloc.free_pages(),
+            rc.low_pages));
+        if level >= ShedLevel::ShedNewest {
+            while waiting.len() > rc.queue_low {
+                let job = waiting.pop_back().unwrap();
+                ServingMetrics::inc(&m.requests_shed, 1);
+                outcomes.insert(job.id, Err("overloaded"));
+            }
+        }
+        m.shed_demotes.store(ladder.demotes(), Relaxed);
+        m.shed_repromotes.store(ladder.repromotes(), Relaxed);
+
+        // budget admission with forced progress + bounded retries
+        while running.len() < rc.max_running {
+            if level >= ShedLevel::DeferPrefill && !running.is_empty()
+            {
+                break;
+            }
+            let ready = waiting
+                .front()
+                .map(|j| j.not_before <= tick)
+                .unwrap_or(false);
+            if !ready {
+                break;
+            }
+            let free = alloc.free_pages();
+            let open =
+                gate.evaluate(free, rc.low_pages, rc.high_pages);
+            let job = waiting.front().unwrap();
+            let est = estimate_pages(
+                rc.prompt_len + job.generated,
+                rc.max_new - job.generated, PAGE_SIZE);
+            let fits = free >= est + rc.watermark;
+            if (!open || !fits) && !running.is_empty() {
+                gate.note_deferral();
+                ServingMetrics::inc(&m.admission_deferrals, 1);
+                break;
+            }
+            let mut job = waiting.pop_front().unwrap();
+            let ctx: Vec<u32> =
+                (0..(rc.prompt_len + job.generated) as u32).collect();
+            match mgr.reserve(job.id, &ctx) {
+                Ok(_) => {
+                    mgr.note_assigned(job.id, ctx.len()).unwrap();
+                    ServingMetrics::inc(&m.requests_admitted, 1);
+                    running.push(job);
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    if job.retries >= rc.max_retries {
+                        outcomes.insert(job.id, Err("saturated"));
+                    } else {
+                        job.retries += 1;
+                        job.not_before =
+                            tick + backoff_ticks(job.retries);
+                        ServingMetrics::inc(&m.saturated_retries, 1);
+                        waiting.push_front(job);
+                    }
+                    break;
+                }
+                Err(e) => {
+                    violations.push(format!("req {}: {e}", job.id));
+                    outcomes.insert(job.id, Err("internal"));
+                    break;
+                }
+            }
+        }
+
+        // decode one token per running seq; a slow reader stalls its
+        // victim for the tick (pages held, no progress)
+        let mut i = 0;
+        while i < running.len() {
+            if stalled == Some(running[i].id) {
+                i += 1;
+                continue;
+            }
+            match mgr.prepare_append(running[i].id, 1) {
+                Ok(_) => {
+                    mgr.note_assigned(running[i].id, 1).unwrap();
+                    running[i].generated += 1;
+                    if running[i].generated >= rc.max_new {
+                        let job = running.swap_remove(i);
+                        mgr.free(job.id).unwrap();
+                        ServingMetrics::inc(&m.requests_finished, 1);
+                        outcomes
+                            .insert(job.id, Ok(job.generated));
+                        continue;
+                    }
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    let mut job = running.swap_remove(i);
+                    mgr.free(job.id).unwrap();
+                    if job.retries >= rc.max_retries {
+                        outcomes.insert(job.id, Err("saturated"));
+                    } else {
+                        job.retries += 1;
+                        job.not_before =
+                            tick + backoff_ticks(job.retries);
+                        ServingMetrics::inc(&m.saturated_retries, 1);
+                        waiting.push_front(job);
+                    }
+                    continue;
+                }
+                Err(e) => {
+                    let job = running.swap_remove(i);
+                    mgr.free(job.id).unwrap();
+                    violations.push(format!("req {}: {e}", job.id));
+                    outcomes.insert(job.id, Err("internal"));
+                    continue;
+                }
+            }
+            i += 1;
+        }
+        stalled = None;
+
+        // I11: the overload counter set never moves backwards
+        let snap = [
+            m.requests_shed.load(Relaxed),
+            m.requests_expired.load(Relaxed),
+            m.saturated_retries.load(Relaxed),
+            m.shed_demotes.load(Relaxed),
+            m.shed_repromotes.load(Relaxed),
+            m.admission_deferrals.load(Relaxed),
+            m.requests_rejected.load(Relaxed),
+        ];
+        if snap.iter().zip(&last_snap).any(|(a, b)| a < b) {
+            violations.push(format!(
+                "tick {tick}: counters regressed {last_snap:?} -> \
+                 {snap:?}"));
+        }
+        last_snap = snap;
+
+        let drained = arrived >= n_jobs && waiting.is_empty()
+            && running.is_empty();
+        if (drained && inj.injected() >= n_events) || tick >= cap {
+            break;
+        }
+        tick += 1;
+    }
+
+    RigOut {
+        drained: arrived >= n_jobs && waiting.is_empty()
+            && running.is_empty(),
+        free_end: alloc.free_pages(),
+        injected: inj.injected(),
+        violations,
+        shed: m.requests_shed.load(Relaxed),
+        expired: m.requests_expired.load(Relaxed),
+        sat_retries: m.saturated_retries.load(Relaxed),
+        demotes: m.shed_demotes.load(Relaxed),
+        repromotes: m.shed_repromotes.load(Relaxed),
+        deferrals: m.admission_deferrals.load(Relaxed),
+        rejected: m.requests_rejected.load(Relaxed),
+        outcomes,
+    }
+}
+
+const TYPED: &[&str] = &["overloaded", "queue_full", "expired",
+                         "saturated", "cancelled"];
+
+#[test]
+fn serving_plans_replay_and_differ_across_seeds() {
+    let mut schedules = Vec::new();
+    for seed in [3u64, 17, 29] {
+        let a = ServingFaultPlan::seeded(seed, 64, 10);
+        assert_eq!(a, ServingFaultPlan::seeded(seed, 64, 10),
+                   "seed {seed} must replay identically");
+        assert_eq!(
+            a,
+            ServingFaultPlan::parse(&format!("seed:{seed}:64:10"))
+                .unwrap(),
+            "parse(seed:...) must be the seeded constructor");
+        assert_eq!(a.events().len(), 10);
+        assert!(a.events().iter().all(|e| e.step < 64));
+        assert!(a.events().windows(2).all(|w| w[0].step <= w[1].step));
+        // the injector fires each event exactly once, then goes clean
+        let mut inj = ServingFaultInjector::new(a.clone());
+        let mut fired = 0;
+        for _ in 0..96 {
+            fired += inj.begin_step().len();
+        }
+        assert_eq!(fired, 10);
+        assert_eq!(inj.injected(), 10);
+        schedules.push(a);
+    }
+    assert!(schedules.windows(2).any(|w| w[0] != w[1]),
+            "different seeds must yield different storms");
+}
+
+#[test]
+fn offline_storms_drain_typed_with_monotone_counters() {
+    for seed in fault_seeds(&[3, 17, 29]) {
+        let plan = ServingFaultPlan::seeded(seed, 64, 10);
+        let out = run_rig(&STORM_RIG, 24, 2, plan);
+        assert!(out.violations.is_empty(),
+                "seed {seed}: {:?}", out.violations);
+        assert!(out.drained, "seed {seed}: storm did not drain");
+        assert_eq!(out.injected, 10,
+                   "seed {seed}: schedule only partially fired");
+        assert_eq!(out.free_end, STORM_RIG.n_pages as usize,
+                   "seed {seed}: pages leaked");
+        // every request — base arrivals and burst extras — ended in
+        // tokens or a typed reason
+        assert!(out.outcomes.len() >= 24);
+        for (id, o) in &out.outcomes {
+            match o {
+                Ok(n) => assert_eq!(*n, STORM_RIG.max_new,
+                                    "req {id} finished short"),
+                Err(why) => assert!(TYPED.contains(why),
+                                    "req {id}: untyped end '{why}'"),
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_free_low_rate_control_is_silent() {
+    // under-capacity arrivals, no faults: the overload machinery must
+    // be a strict no-op — zero shed, expiry, retries, deferrals
+    let out = run_rig(&STORM_RIG, 24, 3, ServingFaultPlan::none());
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    assert!(out.drained);
+    assert_eq!(out.free_end, STORM_RIG.n_pages as usize);
+    assert_eq!(out.outcomes.len(), 24);
+    assert!(out.outcomes.values().all(|o| o == &Ok(STORM_RIG.max_new)),
+            "calm run must finish everything");
+    assert_eq!(
+        (out.shed, out.expired, out.sat_retries, out.demotes,
+         out.repromotes, out.deferrals, out.rejected),
+        (0, 0, 0, 0, 0, 0, 0),
+        "zero-overload run reported overload activity");
+}
+
+#[test]
+fn saturated_retirement_is_bounded_and_counted() {
+    // a request that can never fit the pool must retry exactly
+    // max_retries times with doubling backoff, then die typed —
+    // never loop forever, never abort the run
+    let rc = RigCfg {
+        n_pages: 2, // 16 pooled tokens << prompt_len
+        max_running: 2,
+        ..STORM_RIG
+    };
+    let out = run_rig(&rc, 1, 1, ServingFaultPlan::none());
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    assert!(out.drained, "saturated request must not wedge the rig");
+    assert_eq!(out.outcomes.get(&0), Some(&Err("saturated")));
+    assert_eq!(out.sat_retries, rc.max_retries as u64,
+               "retry count must be exact, then typed retirement");
+    assert_eq!(out.free_end, rc.n_pages as usize);
+}
+
+// ---------------------------------------------------------------
+// TCP storms over real tiny artifacts
+// ---------------------------------------------------------------
+
+use paged_flex::config::{AttentionMode, EngineConfig};
+use paged_flex::server::{self, Client};
+use paged_flex::util::json::{parse, Value};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn cfg(dir: &Path) -> EngineConfig {
+    let mut c = EngineConfig::default();
+    c.model = "tiny".into();
+    c.artifacts_dir = dir.to_path_buf();
+    c.attention = AttentionMode::Paged;
+    c.scheduler.max_batch_size = 2;
+    c.scheduler.prefill_chunk = 32;
+    c
+}
+
+fn prompt(seed: u64, len: usize) -> Vec<u32> {
+    let mut rng = Rng::seeded(seed);
+    (0..len).map(|_| rng.below(512) as u32).collect()
+}
+
+fn spawn_server(cfg: EngineConfig)
+                -> (String, std::thread::JoinHandle<()>) {
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        server::serve_config(cfg, "127.0.0.1:0", move |bound| {
+            addr_tx.send(bound).unwrap();
+        })
+        .unwrap();
+    });
+    (addr_rx.recv().unwrap().to_string(), handle)
+}
+
+fn gen_body(p: &[u32], max_new: usize) -> Value {
+    Value::obj(vec![
+        ("op", Value::str("generate")),
+        ("prompt",
+         Value::arr(p.iter().map(|&t| Value::num(t as f64)))),
+        ("max_new_tokens", Value::num(max_new as f64)),
+    ])
+}
+
+/// Satellite: overcommitted generation storm through the wire. Six
+/// gen-heavy requests whose end-to-end KV need (6 × 16 pages) is 1.5×
+/// the 64-page pool are all admissible up front (each reserves one
+/// prompt page); the pool dries mid-decode. Whatever mix of
+/// preemption, bounded saturated retries, and shed the coordinator
+/// picks, every client must get a terminal line — full tokens or a
+/// typed reason — and the pool must come back whole.
+#[test]
+fn overcommit_storm_drains_typed_over_tcp() {
+    let Some(dir) = artifacts() else { return };
+    let mut c = cfg(&dir);
+    c.scheduler.max_running_seqs = 8;
+    c.scheduler.max_sat_retries = 1;
+    let (addr, handle) = spawn_server(c);
+
+    let mut stats0 = Client::connect(&addr).unwrap();
+    let free_full = stats0
+        .request(&Value::obj(vec![("op", Value::str("stats"))]))
+        .unwrap()
+        .get("free_pages").unwrap()
+        .as_u64().unwrap();
+
+    let workers: Vec<_> = (0..6u64)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut cl = Client::connect(&addr).unwrap();
+                cl.request(&gen_body(&prompt(i, 8), 120)).unwrap()
+            })
+        })
+        .collect();
+    let replies: Vec<Value> =
+        workers.into_iter().map(|w| w.join().unwrap()).collect();
+
+    let mut done = 0;
+    for v in &replies {
+        if v.opt("error").is_some() {
+            let reason = v.get("reason").unwrap().as_str().unwrap();
+            assert!(TYPED.contains(&reason),
+                    "untyped failure line: {}", v.to_json());
+            v.get("retryable").unwrap().as_bool().unwrap();
+        } else {
+            assert_eq!(
+                v.get("tokens").unwrap().as_array().unwrap().len(),
+                120, "short stream: {}", v.to_json());
+            done += 1;
+        }
+    }
+    assert!(done >= 1, "storm starved every request");
+
+    let stats = stats0
+        .request(&Value::obj(vec![("op", Value::str("stats"))]))
+        .unwrap();
+    assert_eq!(stats.get("waiting").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(stats.get("running").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(stats.get("free_pages").unwrap().as_u64().unwrap(),
+               free_full, "pages leaked across the storm");
+
+    stats0.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// Chaos clients vs a fault-free replica: seeded disconnects, bursts
+/// and slow readers may cost latency but the surviving clients'
+/// greedy token streams must match the clean run byte for byte.
+#[test]
+fn disconnect_chaos_matches_fault_free_replica() {
+    let Some(dir) = artifacts() else { return };
+    let reqs: Vec<Vec<u32>> = (0..10u64)
+        .map(|i| prompt(100 + i, 12 + (i as usize % 3) * 8))
+        .collect();
+
+    // clean replica: sequential, unfaulted
+    let (addr, handle) = spawn_server(cfg(&dir));
+    let mut cl = Client::connect(&addr).unwrap();
+    let expected: Vec<Vec<u32>> = reqs
+        .iter()
+        .map(|p| cl.generate_tokens(p, 5).unwrap())
+        .collect();
+    cl.shutdown().unwrap();
+    handle.join().unwrap();
+
+    for seed in fault_seeds(&[3, 17, 29]) {
+        let mut inj = ServingFaultInjector::new(
+            ServingFaultPlan::seeded(seed, 10, 5));
+        let (addr, handle) = spawn_server(cfg(&dir));
+        let mut workers = Vec::new();
+        for (i, p) in reqs.iter().enumerate() {
+            let fired = inj.begin_step();
+            if fired.contains(&ServingFaultKind::Burst) {
+                // connection burst: ephemeral stats clients
+                for _ in 0..2 {
+                    let mut b = Client::connect(&addr).unwrap();
+                    b.request(&Value::obj(vec![
+                        ("op", Value::str("stats"))])).unwrap();
+                }
+            }
+            if fired.contains(&ServingFaultKind::ClientDisconnect) {
+                // fire the request and vanish mid-generate: the
+                // server must carry on; nobody reads the reply
+                use std::io::Write as _;
+                let mut s =
+                    std::net::TcpStream::connect(&addr).unwrap();
+                s.write_all(gen_body(p, 5).to_json().as_bytes())
+                    .unwrap();
+                s.write_all(b"\n").unwrap();
+                s.flush().unwrap();
+                drop(s);
+                continue;
+            }
+            let slow =
+                fired.contains(&ServingFaultKind::SlowReader);
+            let addr = addr.clone();
+            let p = p.clone();
+            workers.push((i, std::thread::spawn(move || {
+                let mut cl = Client::connect(&addr).unwrap();
+                if slow {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(80));
+                }
+                cl.generate_tokens(&p, 5).unwrap()
+            })));
+        }
+        for (i, w) in workers {
+            let toks = w.join().unwrap();
+            assert_eq!(toks, expected[i],
+                       "seed {seed}: request {i} diverged from the \
+                        fault-free replica");
+        }
+        let mut cl = Client::connect(&addr).unwrap();
+        let stats = cl
+            .request(&Value::obj(vec![("op", Value::str("stats"))]))
+            .unwrap();
+        assert_eq!(stats.get("waiting").unwrap().as_u64().unwrap(),
+                   0, "seed {seed}: requests stuck after chaos");
+        assert_eq!(stats.get("running").unwrap().as_u64().unwrap(),
+                   0);
+        cl.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+}
+
+/// Graceful drain: shutdown lets the in-flight request finish with
+/// its full token stream while a request submitted after shutdown
+/// gets an immediate terminal error line — no client is left blocked
+/// on a reply that will never come.
+#[test]
+fn graceful_drain_answers_every_client() {
+    let Some(dir) = artifacts() else { return };
+    let (addr, handle) = spawn_server(cfg(&dir));
+
+    let in_flight = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut cl = Client::connect(&addr).unwrap();
+            cl.generate_tokens(&prompt(7, 20), 60).unwrap()
+        })
+    };
+    // late client connects BEFORE shutdown (so its reader thread
+    // exists) but submits after; the in-flight request is admitted
+    // well before the stop flag lands
+    let mut late = Client::connect(&addr).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(150));
+
+    let mut sd = Client::connect(&addr).unwrap();
+    sd.shutdown().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let v = late.request(&gen_body(&prompt(8, 10), 4)).unwrap();
+    assert!(v.opt("error").is_some(),
+            "post-shutdown submit must not run: {}", v.to_json());
+    // mid-drain the coordinator answers with a typed retryable
+    // `overloaded`; once it has exited the reader thread answers
+    // itself ("server stopped", reason internal) — both are terminal
+    // lines, which is the property (the client must never hang)
+    let reason = v.get("reason").unwrap().as_str().unwrap();
+    match reason {
+        "overloaded" => {
+            assert!(v.get("retryable").unwrap().as_bool().unwrap(),
+                    "drain refusals are retryable elsewhere");
+        }
+        "internal" => {
+            let msg = v.get("error").unwrap().as_str().unwrap();
+            assert!(msg.contains("stopped")
+                        || msg.contains("shutting down"),
+                    "untyped drain refusal: {}", v.to_json());
+        }
+        other => panic!("unexpected drain reason '{other}': {}",
+                        v.to_json()),
+    }
+
+    assert_eq!(in_flight.join().unwrap().len(), 60,
+               "in-flight request truncated by drain");
+    handle.join().unwrap();
+}
+
+/// Connection cap: the over-cap client gets a typed refusal line at
+/// accept instead of a silent hang or an unbounded reader thread.
+#[test]
+fn over_cap_connection_gets_typed_refusal() {
+    let Some(dir) = artifacts() else { return };
+    let mut c = cfg(&dir);
+    c.scheduler.max_connections = 1;
+    let (addr, handle) = spawn_server(c);
+
+    let mut first = Client::connect(&addr).unwrap();
+    first
+        .request(&Value::obj(vec![("op", Value::str("stats"))]))
+        .unwrap();
+
+    // read-only raw stream: the refusal line arrives unprompted at
+    // accept (writing first could race the server-side close into an
+    // RST that drops the buffered refusal)
+    let second = std::net::TcpStream::connect(&addr).unwrap();
+    let mut line = String::new();
+    use std::io::BufRead as _;
+    std::io::BufReader::new(second).read_line(&mut line).unwrap();
+    let v = parse(&line).unwrap();
+    assert!(v.opt("error").is_some(), "{}", v.to_json());
+    assert_eq!(v.get("reason").unwrap().as_str().unwrap(),
+               "overloaded");
+    assert!(v.get("retryable").unwrap().as_bool().unwrap());
+
+    drop(first); // slot frees when the reader thread exits
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let mut third = Client::connect(&addr).unwrap();
+    third
+        .request(&Value::obj(vec![("op", Value::str("stats"))]))
+        .unwrap();
+    third.shutdown().unwrap();
+    handle.join().unwrap();
+}
