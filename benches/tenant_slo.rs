@@ -1,0 +1,638 @@
+//! Tenant SLO gate — drives the per-class scheduling policy
+//! (coordinator::tenant DRR weights + EDF-under-pressure) through the
+//! same deterministic tick rig as `overload_shed`, under a seeded
+//! two-class 2× over-capacity storm (DESIGN.md §13). No wall clock:
+//! one tick = one scheduler step = one decoded token per running
+//! sequence, so the run replays bit-identically everywhere.
+//!
+//! Two tenants share one KV pool: a `prio` class (weight 4, tight
+//! TTFT budget, ~35% of arrivals) and a `bulk` class (weight 1,
+//! loose deadline, the rest). The rig runs each storm twice — once
+//! with the SLO-aware policy (weighted DRR, EDF ordering while the
+//! shed ladder is ≥ DeferPrefill or the gate is closed, shed-newest
+//! victims drawn from the cheapest class) and once with plain FIFO —
+//! plus a calm control.
+//!
+//! Exits nonzero (CI gate) when any of these break:
+//!   * SLO-aware storm: prio p99 TTFT exceeds its budget, prio
+//!     completion < 80%, or < 80% of shed/expiry/deferral events
+//!     land on the bulk class;
+//!   * FIFO storm: FIFO *satisfies* all three conditions above (the
+//!     gate must actually discriminate — if FIFO passes, the storm
+//!     is too weak to mean anything);
+//!   * any recorded TTFT sample comes from a request that never
+//!     produced a token (the expired-while-queued 0 ms bug);
+//!   * a request ends without tokens or a typed reason, a counter
+//!     regresses (I11), the pool leaks, or the calm control shows
+//!     any scheduling-policy activity at all.
+
+include!("common.rs");
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Duration;
+
+use paged_flex::coordinator::{backoff_ticks, estimate_pages,
+                              overload_pressure, AdmissionGate,
+                              ClassQueues, OverloadLadder, Popped,
+                              ShedLevel};
+use paged_flex::harness::print_table;
+use paged_flex::kvpage::{AllocError, GrowthPolicy, PageAllocator,
+                         PageManager};
+use paged_flex::metrics::ServingMetrics;
+use paged_flex::sim::load::{multi_tenant_trace, BurstSpec};
+
+const PAGE_SIZE: usize = 8;
+const N_PAGES: u32 = 256; // 2048-token pool
+const MAX_RUNNING: usize = 8;
+const MAX_WAITING: usize = 64;
+const QUEUE_HIGH: usize = 32;
+const QUEUE_LOW: usize = 8;
+const LOW_PAGES: usize = 16;
+const HIGH_PAGES: usize = 32;
+const WATERMARK: usize = 4;
+const MAX_RETRIES: u32 = 4;
+const TICK_US: u64 = 1_000;
+const MAX_NEW: usize = 16;
+
+const PRIO: usize = 0;
+const BULK: usize = 1;
+const WEIGHTS: [u32; 2] = [4, 1];
+/// prio first token must land within this many ticks of arrival.
+const TTFT_BUDGET_TICKS: u64 = 80;
+/// Both classes share the loose end-to-end deadline.
+const DEADLINE_TICKS: u64 = 400;
+
+/// Combined avg ≈ 640 req/s vs ~470 req/s service capacity
+/// (MAX_RUNNING seqs, ~17-tick lifetime); burst peak ≈ 1000 req/s
+/// ≈ 2× over capacity. prio alone (avg ≈ 224/s) fits under
+/// capacity, so a policy that protects it *can* finish it.
+const PRIO_STORM: BurstSpec = BurstSpec {
+    base_rate_per_sec: 140.0,
+    burst_multiplier: 2.5,
+    burst_period_sec: 1.0,
+    burst_duty: 0.4,
+};
+const BULK_STORM: BurstSpec = BurstSpec {
+    base_rate_per_sec: 260.0,
+    burst_multiplier: 2.5,
+    burst_period_sec: 1.0,
+    burst_duty: 0.4,
+};
+const PRIO_CALM: BurstSpec = BurstSpec {
+    base_rate_per_sec: 40.0,
+    burst_multiplier: 1.0,
+    burst_period_sec: 1.0,
+    burst_duty: 0.0,
+};
+const BULK_CALM: BurstSpec = BurstSpec {
+    base_rate_per_sec: 60.0,
+    burst_multiplier: 1.0,
+    burst_period_sec: 1.0,
+    burst_duty: 0.0,
+};
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    SloAware,
+    Fifo,
+}
+
+struct Job {
+    id: u64,
+    class: usize,
+    arrive: u64,
+    prompt_len: usize,
+    generated: usize,
+    retries: u32,
+    not_before: u64,
+    first_tick: Option<u64>,
+}
+
+impl Job {
+    /// Earliest blown budget instant in ticks (the EDF key): the
+    /// TTFT budget while no token exists, else the deadline — the
+    /// same earliest-blown rule the coordinator's expiry uses.
+    fn urgency(&self) -> u64 {
+        let dl = self.arrive + DEADLINE_TICKS;
+        if self.first_tick.is_none() && self.class == PRIO {
+            dl.min(self.arrive + TTFT_BUDGET_TICKS)
+        } else {
+            dl
+        }
+    }
+}
+
+struct Outcome {
+    tokens: usize,
+    reason: Option<&'static str>,
+    ttft: Option<u64>,
+}
+
+#[derive(Default)]
+struct ClassStats {
+    arrived: u64,
+    finished: u64,
+    shed: u64,
+    expired: u64,
+    deferrals: u64,
+    started: u64,
+    ttfts: Vec<u64>,
+}
+
+#[derive(Default)]
+struct RunStats {
+    violations: Vec<String>,
+    class: [ClassStats; 2],
+    edf_ticks: u64,
+}
+
+/// One full deterministic two-class serving run; violations are
+/// collected rather than panicking so the gate reports them all.
+fn run(seed: u64, specs: [BurstSpec; 2], mode: Mode,
+       duration_sec: f64, m: &ServingMetrics) -> RunStats {
+    let trace = multi_tenant_trace(
+        seed, 512, &[(specs[PRIO], PRIO), (specs[BULK], BULK)],
+        duration_sec, 16, 64, MAX_NEW);
+    let n_req = trace.len();
+    let mut arrivals: VecDeque<(u64, u64, usize, usize)> = trace
+        .iter()
+        .map(|t| (t.req.arrival_us / TICK_US, t.req.id, t.class,
+                  t.req.prompt.len()))
+        .collect();
+
+    let alloc = Arc::new(PageAllocator::new(
+        N_PAGES, PAGE_SIZE, 64, GrowthPolicy::Exact));
+    let mut mgr = PageManager::new(Arc::clone(&alloc), 64);
+    // ramp prompts all alias one chain with sharing on; the budget
+    // path under test needs real pool pressure
+    mgr.set_prefix_cache(false);
+    let mut ladder = OverloadLadder::new();
+    let mut gate = AdmissionGate::new();
+    // FIFO control collapses both tenants into one unweighted queue;
+    // jobs keep their true class for accounting either way
+    let mut waiting: ClassQueues<Job> = match mode {
+        Mode::SloAware => ClassQueues::new(&WEIGHTS),
+        Mode::Fifo => ClassQueues::new(&[1]),
+    };
+    let qc = |job: &Job| match mode {
+        Mode::SloAware => job.class,
+        Mode::Fifo => 0,
+    };
+    let mut running: Vec<Job> = Vec::new();
+    let mut outcomes: Vec<Option<Outcome>> = Vec::new();
+    outcomes.resize_with(n_req, || None);
+    let mut stats = RunStats::default();
+    let mut last_snap = [0u64; 9];
+
+    let horizon = arrivals.back().map(|a| a.0).unwrap_or(0)
+        + DEADLINE_TICKS
+        + 64 * MAX_RETRIES as u64
+        + MAX_NEW as u64
+        + 64;
+    let mut tick = 0u64;
+    let terminate =
+        |job: Job, why: &'static str,
+         outcomes: &mut Vec<Option<Outcome>>| {
+            outcomes[job.id as usize] = Some(Outcome {
+                tokens: job.generated,
+                reason: Some(why),
+                ttft: None,
+            });
+        };
+
+    while tick <= horizon {
+        // 1. arrivals (submit-side rejections are typed)
+        while arrivals.front().map(|a| a.0 <= tick).unwrap_or(false) {
+            let (_, id, class, prompt_len) =
+                arrivals.pop_front().unwrap();
+            let job = Job { id, class, arrive: tick, prompt_len,
+                            generated: 0, retries: 0, not_before: 0,
+                            first_tick: None };
+            stats.class[class].arrived += 1;
+            if ladder.level() == ShedLevel::RejectAll {
+                ServingMetrics::inc(&m.requests_rejected, 1);
+                ServingMetrics::inc(&m.requests_shed, 1);
+                ServingMetrics::inc(&m.class(class).shed, 1);
+                stats.class[class].shed += 1;
+                terminate(job, "overloaded", &mut outcomes);
+            } else if waiting.len() >= MAX_WAITING {
+                ServingMetrics::inc(&m.requests_rejected, 1);
+                terminate(job, "queue_full", &mut outcomes);
+            } else {
+                waiting.push_back(qc(&job), job);
+            }
+        }
+
+        // 2. overload tick: expiry (single in-place pass, order
+        // preserved, earliest-blown-budget rule), pressure, trims
+        for c in 0..waiting.n_classes() {
+            let q = waiting.queue_mut(c);
+            let mut i = 0;
+            while i < q.len() {
+                if tick >= q[i].urgency() {
+                    let job = q.remove(i).unwrap();
+                    ServingMetrics::inc(&m.requests_expired, 1);
+                    ServingMetrics::inc(
+                        &m.class(job.class).expired, 1);
+                    stats.class[job.class].expired += 1;
+                    terminate(job, "expired", &mut outcomes);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let mut i = 0;
+        while i < running.len() {
+            if tick >= running[i].urgency() {
+                let job = running.swap_remove(i);
+                mgr.free(job.id).unwrap();
+                ServingMetrics::inc(&m.requests_expired, 1);
+                ServingMetrics::inc(&m.class(job.class).expired, 1);
+                stats.class[job.class].expired += 1;
+                terminate(job, "expired", &mut outcomes);
+            } else {
+                i += 1;
+            }
+        }
+        let free = alloc.free_pages();
+        let level = ladder.note_tick(overload_pressure(
+            waiting.len(), QUEUE_HIGH, free, LOW_PAGES));
+        if level >= ShedLevel::ShedNewest {
+            // victims come from the cheapest class first (SLO-aware
+            // mode); the FIFO control sheds whoever arrived last
+            while waiting.len() > QUEUE_LOW {
+                let (_, job) = waiting.pop_shed_newest().unwrap();
+                ServingMetrics::inc(&m.requests_shed, 1);
+                ServingMetrics::inc(&m.class(job.class).shed, 1);
+                stats.class[job.class].shed += 1;
+                terminate(job, "overloaded", &mut outcomes);
+            }
+        }
+        m.shed_demotes.store(ladder.demotes(), Relaxed);
+        m.shed_repromotes.store(ladder.repromotes(), Relaxed);
+
+        // 3. admission: DRR by weight normally; EDF by earliest
+        // blown budget while pressure holds (the tentpole policy)
+        let mut edf_used = false;
+        while running.len() < MAX_RUNNING {
+            if level >= ShedLevel::DeferPrefill && !running.is_empty()
+            {
+                break;
+            }
+            let free = alloc.free_pages();
+            let open = gate.evaluate(free, LOW_PAGES, HIGH_PAGES);
+            let pressure =
+                level >= ShedLevel::DeferPrefill || !open;
+            let popped = match mode {
+                Mode::SloAware if pressure => {
+                    edf_used = true;
+                    waiting.pop_edf(|j| j.not_before <= tick,
+                                    |j| j.urgency())
+                }
+                _ => waiting.pop_drr(|j| j.not_before <= tick),
+            };
+            let mut job = match popped {
+                Popped::Item { item, .. } => item,
+                _ => break,
+            };
+            let est = estimate_pages(
+                job.prompt_len + job.generated,
+                MAX_NEW - job.generated, PAGE_SIZE);
+            let fits = free >= est + WATERMARK;
+            if (!open || !fits) && !running.is_empty() {
+                gate.note_deferral();
+                ServingMetrics::inc(&m.admission_deferrals, 1);
+                ServingMetrics::inc(
+                    &m.class(job.class).deferrals, 1);
+                stats.class[job.class].deferrals += 1;
+                waiting.push_front(qc(&job), job);
+                break;
+            }
+            let ctx: Vec<u32> =
+                (0..(job.prompt_len + job.generated) as u32).collect();
+            match mgr.reserve(job.id, &ctx) {
+                Ok(_) => {
+                    mgr.note_assigned(job.id, ctx.len()).unwrap();
+                    ServingMetrics::inc(&m.requests_admitted, 1);
+                    ServingMetrics::inc(
+                        &m.class(job.class).admitted, 1);
+                    ServingMetrics::inc(&m.tokens_prefilled,
+                                        ctx.len() as u64);
+                    running.push(job);
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    if job.retries >= MAX_RETRIES {
+                        ServingMetrics::inc(&m.requests_rejected, 1);
+                        terminate(job, "saturated", &mut outcomes);
+                    } else {
+                        job.retries += 1;
+                        job.not_before =
+                            tick + backoff_ticks(job.retries);
+                        ServingMetrics::inc(&m.saturated_retries, 1);
+                        waiting.push_front(qc(&job), job);
+                    }
+                    break;
+                }
+                Err(e) => {
+                    stats.violations
+                         .push(format!("req {}: {e}", job.id));
+                    terminate(job, "internal", &mut outcomes);
+                    break;
+                }
+            }
+        }
+        if edf_used {
+            ServingMetrics::inc(&m.sched_edf_ticks, 1);
+            stats.edf_ticks += 1;
+        }
+
+        // 4. decode: one token per running seq per tick
+        let mut i = 0;
+        while i < running.len() {
+            match mgr.prepare_append(running[i].id, 1) {
+                Ok(_) => {
+                    mgr.note_assigned(running[i].id, 1).unwrap();
+                    if running[i].first_tick.is_none() {
+                        running[i].first_tick = Some(tick);
+                        let t = tick - running[i].arrive;
+                        let cs = &mut stats.class[running[i].class];
+                        cs.started += 1;
+                        cs.ttfts.push(t);
+                        m.ttft.record(Duration::from_millis(t));
+                        m.class(running[i].class)
+                            .ttft
+                            .record(Duration::from_millis(t));
+                    }
+                    running[i].generated += 1;
+                    ServingMetrics::inc(&m.tokens_decoded, 1);
+                    if running[i].generated >= MAX_NEW {
+                        let job = running.swap_remove(i);
+                        mgr.free(job.id).unwrap();
+                        ServingMetrics::inc(&m.requests_finished, 1);
+                        ServingMetrics::inc(
+                            &m.class(job.class).finished, 1);
+                        stats.class[job.class].finished += 1;
+                        outcomes[job.id as usize] = Some(Outcome {
+                            tokens: job.generated,
+                            reason: None,
+                            ttft: job
+                                .first_tick
+                                .map(|f| f - job.arrive),
+                        });
+                        continue;
+                    }
+                }
+                Err(AllocError::PoolExhausted { .. }) => {
+                    let mut job = running.swap_remove(i);
+                    mgr.free(job.id).unwrap();
+                    if job.retries >= MAX_RETRIES {
+                        ServingMetrics::inc(&m.requests_rejected, 1);
+                        terminate(job, "saturated", &mut outcomes);
+                    } else {
+                        job.retries += 1;
+                        job.not_before =
+                            tick + backoff_ticks(job.retries);
+                        ServingMetrics::inc(&m.saturated_retries, 1);
+                        ServingMetrics::inc(&m.requests_preempted, 1);
+                        waiting.push_front(qc(&job), job);
+                    }
+                    continue;
+                }
+                Err(e) => {
+                    let job = running.swap_remove(i);
+                    mgr.free(job.id).unwrap();
+                    stats.violations
+                         .push(format!("req {}: {e}", job.id));
+                    terminate(job, "internal", &mut outcomes);
+                    continue;
+                }
+            }
+            i += 1;
+        }
+
+        // 5. I11: scheduling counters never move backwards
+        let snap = [
+            m.requests_shed.load(Relaxed),
+            m.requests_expired.load(Relaxed),
+            m.admission_deferrals.load(Relaxed),
+            m.sched_edf_ticks.load(Relaxed),
+            m.class(PRIO).shed.load(Relaxed),
+            m.class(PRIO).expired.load(Relaxed),
+            m.class(BULK).shed.load(Relaxed),
+            m.class(BULK).expired.load(Relaxed),
+            m.requests_rejected.load(Relaxed),
+        ];
+        if snap.iter().zip(&last_snap).any(|(a, b)| a < b) {
+            stats.violations.push(format!(
+                "tick {tick}: counter regressed {last_snap:?} -> \
+                 {snap:?}"));
+        }
+        last_snap = snap;
+
+        if arrivals.is_empty() && waiting.is_empty()
+            && running.is_empty()
+        {
+            break;
+        }
+        tick += 1;
+    }
+
+    if !(arrivals.is_empty() && waiting.is_empty()
+         && running.is_empty())
+    {
+        stats.violations.push(format!(
+            "run did not drain by tick {horizon}: {} queued, {} \
+             running", waiting.len() + arrivals.len(),
+            running.len()));
+    }
+    if alloc.free_pages() != N_PAGES as usize {
+        stats.violations.push(format!(
+            "pool leak: {} of {N_PAGES} pages free after drain",
+            alloc.free_pages()));
+    }
+    for (id, o) in outcomes.iter().enumerate() {
+        match o {
+            None => stats.violations.push(format!(
+                "req {id} vanished without tokens or typed reason")),
+            Some(o) if o.reason == Some("internal") => stats
+                .violations
+                .push(format!("req {id} aborted untyped")),
+            Some(o) if o.reason.is_none()
+                && (o.tokens != MAX_NEW || o.ttft.is_none()) =>
+            {
+                stats.violations.push(format!(
+                    "req {id} finished with {} of {MAX_NEW} tokens \
+                     (ttft recorded: {})", o.tokens,
+                    o.ttft.is_some()));
+            }
+            _ => {}
+        }
+    }
+    // the 0 ms-TTFT bug check: every recorded sample must belong to
+    // a request that actually produced a first token
+    for (name, cs) in
+        [("prio", &stats.class[PRIO]), ("bulk", &stats.class[BULK])]
+    {
+        if cs.ttfts.len() as u64 != cs.started {
+            stats.violations.push(format!(
+                "{name}: {} TTFT samples from {} started requests — \
+                 a never-started request leaked a sample",
+                cs.ttfts.len(), cs.started));
+        }
+    }
+    stats
+}
+
+fn p99(sorted: &mut Vec<u64>) -> u64 {
+    sorted.sort_unstable();
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * 0.99).round() as usize;
+    sorted[idx]
+}
+
+/// The three storm SLO conditions; returns the ones that FAILED.
+fn slo_failures(st: &mut RunStats) -> Vec<String> {
+    let mut out = Vec::new();
+    let p99_prio = p99(&mut st.class[PRIO].ttfts);
+    if p99_prio > TTFT_BUDGET_TICKS {
+        out.push(format!(
+            "prio p99 TTFT {p99_prio} ticks > \
+             {TTFT_BUDGET_TICKS}-tick budget"));
+    }
+    let prio = &st.class[PRIO];
+    let completion = if prio.arrived == 0 {
+        0.0
+    } else {
+        prio.finished as f64 / prio.arrived as f64
+    };
+    if completion < 0.8 {
+        out.push(format!(
+            "prio completion {completion:.2} < 0.80 \
+             ({}/{} finished)", prio.finished, prio.arrived));
+    }
+    let harm = |c: &ClassStats| c.shed + c.expired + c.deferrals;
+    let bulk_harm = harm(&st.class[BULK]);
+    let total_harm = bulk_harm + harm(&st.class[PRIO]);
+    let share = if total_harm == 0 {
+        0.0
+    } else {
+        bulk_harm as f64 / total_harm as f64
+    };
+    if total_harm == 0 {
+        out.push("storm produced zero shed/expiry/deferral \
+                  activity"
+            .to_string());
+    } else if share < 0.8 {
+        out.push(format!(
+            "bulk absorbs only {share:.2} of \
+             shed/expiry/deferrals ({bulk_harm}/{total_harm})"));
+    }
+    out
+}
+
+fn main() {
+    let duration = if quick() { 2.0 } else { 4.0 };
+    let seeds: &[u64] = if quick() { &[3] } else { &[3, 17, 29] };
+    let storm = [PRIO_STORM, BULK_STORM];
+    let calm = [PRIO_CALM, BULK_CALM];
+    let mut rows = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    for &seed in seeds {
+        let cases = [("storm/slo", storm, Mode::SloAware),
+                     ("storm/fifo", storm, Mode::Fifo),
+                     ("calm/slo", calm, Mode::SloAware)];
+        for (name, specs, mode) in cases {
+            let m = ServingMetrics::new();
+            m.set_class_names(vec!["prio".into(), "bulk".into()]);
+            let mut st = run(seed, specs, mode, duration, &m);
+            for v in &st.violations {
+                failures.push(format!("{name} seed {seed}: {v}"));
+            }
+            let slo = slo_failures(&mut st);
+            match name {
+                "storm/slo" => {
+                    for s in &slo {
+                        failures.push(format!(
+                            "storm/slo seed {seed}: {s}"));
+                    }
+                    if st.edf_ticks == 0 {
+                        failures.push(format!(
+                            "storm/slo seed {seed}: EDF ordering \
+                             never engaged under the storm"));
+                    }
+                }
+                "storm/fifo" => {
+                    if slo.is_empty() {
+                        failures.push(format!(
+                            "storm/fifo seed {seed}: FIFO \
+                             satisfies every SLO condition — the \
+                             storm does not discriminate"));
+                    }
+                }
+                _ => {
+                    let harm = |c: &ClassStats| {
+                        c.shed + c.expired + c.deferrals
+                    };
+                    let activity = harm(&st.class[PRIO])
+                        + harm(&st.class[BULK])
+                        + st.edf_ticks
+                        + m.requests_rejected.load(Relaxed)
+                        + m.saturated_retries.load(Relaxed);
+                    if activity != 0 {
+                        failures.push(format!(
+                            "calm/slo seed {seed}: control run \
+                             shows policy activity ({activity} \
+                             events)"));
+                    }
+                }
+            }
+            let prio_p99 = p99(&mut st.class[PRIO].ttfts);
+            let bulk_p99 = p99(&mut st.class[BULK].ttfts);
+            rows.push(vec![
+                name.to_string(),
+                seed.to_string(),
+                st.class[PRIO].finished.to_string(),
+                st.class[PRIO].arrived.to_string(),
+                prio_p99.to_string(),
+                st.class[BULK].finished.to_string(),
+                st.class[BULK].arrived.to_string(),
+                bulk_p99.to_string(),
+                (st.class[PRIO].shed + st.class[PRIO].expired)
+                    .to_string(),
+                (st.class[BULK].shed + st.class[BULK].expired)
+                    .to_string(),
+                st.edf_ticks.to_string(),
+            ]);
+        }
+    }
+
+    print_table(
+        &format!(
+            "tenant SLO gate: two-class tick rig, {duration:.0}s \
+             trace, prio weight {}:{} + {TTFT_BUDGET_TICKS}-tick \
+             TTFT budget, storm ≈ 2x capacity",
+            WEIGHTS[PRIO], WEIGHTS[BULK]),
+        &["case", "seed", "prio_fin", "prio_arr", "prio_p99",
+          "bulk_fin", "bulk_arr", "bulk_p99", "prio_harm",
+          "bulk_harm", "edf_ticks"],
+        &rows,
+    );
+
+    if failures.is_empty() {
+        println!("\ntenant-slo: prio p99 TTFT within budget, bulk \
+                  absorbs the shed, FIFO control fails the gate, \
+                  no 0 ms TTFT ghosts, counters monotone (I11), \
+                  calm control silent: PASS");
+    } else {
+        println!("\ntenant-slo: FAIL");
+        for f in &failures {
+            println!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

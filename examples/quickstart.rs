@@ -49,9 +49,10 @@ fn main() {
     let text = tok.decode_lossy(&fin.tokens);
     println!("\nprompt:    {prompt_text:?}");
     println!("generated: {:?}", String::from_utf8_lossy(&text));
+    let ttft = fin.ttft_s.unwrap_or(0.0);
     println!("\nTTFT {:.1} ms | total {:.1} ms | {:.1} tok/s decode",
-             fin.ttft_s * 1e3, fin.total_s * 1e3,
+             ttft * 1e3, fin.total_s * 1e3,
              fin.tokens.len() as f64
-                 / (fin.total_s - fin.ttft_s).max(1e-9));
+                 / (fin.total_s - ttft).max(1e-9));
     println!("\n{}", coord.metrics().summary());
 }

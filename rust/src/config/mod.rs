@@ -156,6 +156,43 @@ impl CopyEngineCfg {
     }
 }
 
+/// One tenant scheduling class: requests name it on the wire
+/// (`"class": "bulk"` / `"tenant": ...`), the coordinator maps it to
+/// a weighted deficit-round-robin queue (DESIGN.md §13). Absent or
+/// unknown names land in class 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClassCfg {
+    pub name: String,
+    /// DRR weight — the class's share of admission slots under
+    /// contention. Clamped to ≥ 1 (a zero weight would starve).
+    pub weight: u32,
+}
+
+/// Parse the CLI `--classes` form `"name:weight,name:weight"` (a
+/// bare `name` gets weight 1).
+pub fn parse_classes(s: &str) -> Result<Vec<ClassCfg>> {
+    let mut out = Vec::new();
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, weight) = match part.split_once(':') {
+            Some((n, w)) => match w.trim().parse::<u32>() {
+                Ok(w) => (n.trim(), w),
+                Err(_) => bail!("bad class weight in '{part}' \
+                                 (want name:weight)"),
+            },
+            None => (part.trim(), 1),
+        };
+        if name.is_empty() {
+            bail!("empty class name in '{s}'");
+        }
+        out.push(ClassCfg { name: name.into(),
+                            weight: weight.max(1) });
+    }
+    if out.is_empty() {
+        bail!("no classes in '{s}' (want name:weight,...)");
+    }
+    Ok(out)
+}
+
 /// Scheduler knobs (coordinator::scheduler).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SchedulerConfig {
@@ -196,6 +233,40 @@ pub struct SchedulerConfig {
     pub admit_low_pages: usize,
     /// …and reopens once they recover to this (hysteresis).
     pub admit_high_pages: usize,
+    /// Tenant scheduling classes in queue-index order; class 0 is
+    /// the default for requests that name no class (DESIGN.md §13).
+    pub classes: Vec<ClassCfg>,
+}
+
+impl SchedulerConfig {
+    /// Map a wire tenant/class name to its queue index; absent or
+    /// unknown names land in class 0 (the default class).
+    pub fn class_of(&self, tenant: Option<&str>) -> usize {
+        tenant
+            .and_then(|t| {
+                self.classes.iter().position(|c| c.name == t)
+            })
+            .unwrap_or(0)
+    }
+
+    /// The DRR weight vector the coordinator builds its queues from
+    /// (never empty; weights clamped ≥ 1).
+    pub fn class_weights(&self) -> Vec<u32> {
+        if self.classes.is_empty() {
+            vec![1]
+        } else {
+            self.classes.iter().map(|c| c.weight.max(1)).collect()
+        }
+    }
+
+    /// Class names in queue-index order (for per-class telemetry).
+    pub fn class_names(&self) -> Vec<String> {
+        if self.classes.is_empty() {
+            vec!["default".into()]
+        } else {
+            self.classes.iter().map(|c| c.name.clone()).collect()
+        }
+    }
 }
 
 impl Default for SchedulerConfig {
@@ -216,6 +287,8 @@ impl Default for SchedulerConfig {
             shed_queue_low: 8,
             admit_low_pages: 2,
             admit_high_pages: 8,
+            classes: vec![ClassCfg { name: "default".into(),
+                                     weight: 1 }],
         }
     }
 }
@@ -394,6 +467,12 @@ impl EngineConfig {
                  Value::num(s.admit_low_pages as f64)),
                 ("admit_high_pages",
                  Value::num(s.admit_high_pages as f64)),
+                ("classes", Value::arr(s.classes.iter().map(|c| {
+                    Value::obj(vec![
+                        ("name", Value::str(c.name.clone())),
+                        ("weight", Value::num(c.weight as f64)),
+                    ])
+                }))),
             ])),
             ("sampling", self.sampling.to_json()),
         ];
@@ -409,6 +488,26 @@ impl EngineConfig {
             None => d.scheduler.clone(),
             Some(s) => {
                 let ds = SchedulerConfig::default();
+                let classes = match s.opt("classes") {
+                    None => ds.classes.clone(),
+                    Some(arr) => {
+                        let mut out = Vec::new();
+                        for c in arr.as_array()? {
+                            let name = c.get("name")?
+                                .as_str()?.to_string();
+                            let weight = c.opt("weight")
+                                .map(|w| w.as_u64()).transpose()?
+                                .unwrap_or(1).max(1)
+                                as u32;
+                            out.push(ClassCfg { name, weight });
+                        }
+                        if out.is_empty() {
+                            ds.classes.clone()
+                        } else {
+                            out
+                        }
+                    }
+                };
                 SchedulerConfig {
                     max_batch_size: s.opt("max_batch_size")
                         .map(|x| x.as_usize()).transpose()?
@@ -457,6 +556,7 @@ impl EngineConfig {
                     admit_high_pages: s.opt("admit_high_pages")
                         .map(|x| x.as_usize()).transpose()?
                         .unwrap_or(ds.admit_high_pages),
+                    classes,
                 }
             }
         };
@@ -637,6 +737,52 @@ mod tests {
             .unwrap();
         assert_eq!(EngineConfig::from_json(&v).unwrap()
                        .scheduler.max_connections, 1);
+    }
+
+    #[test]
+    fn classes_default_parse_resolve_and_roundtrip() {
+        let d = SchedulerConfig::default();
+        assert_eq!(d.classes.len(), 1);
+        assert_eq!(d.classes[0].name, "default");
+        assert_eq!(d.class_weights(), vec![1]);
+        assert_eq!(d.class_of(None), 0);
+        assert_eq!(d.class_of(Some("nope")), 0,
+                   "unknown tenants land in the default class");
+        let v = parse(
+            r#"{"scheduler": {"classes": [
+                {"name": "prio", "weight": 4},
+                {"name": "bulk", "weight": 0}]}}"#,
+        ).unwrap();
+        let cfg = EngineConfig::from_json(&v).unwrap();
+        let s = &cfg.scheduler;
+        assert_eq!(s.class_names(), vec!["prio", "bulk"]);
+        assert_eq!(s.class_weights(), vec![4, 1],
+                   "zero weights clamp to 1");
+        assert_eq!(s.class_of(Some("bulk")), 1);
+        assert_eq!(s.class_of(Some("prio")), 0);
+        assert_eq!(s.class_of(None), 0);
+        let back = EngineConfig::from_json(
+            &parse(&cfg.to_json().to_json_pretty()).unwrap(),
+        ).unwrap();
+        // the weight-0 clamp happens at parse, so the clamped
+        // config round-trips stably
+        assert_eq!(back, cfg);
+        assert_eq!(back.scheduler.classes[1].weight, 1);
+    }
+
+    #[test]
+    fn parse_classes_cli_form() {
+        let cs = parse_classes("prio:4,bulk:1").unwrap();
+        assert_eq!(cs.len(), 2);
+        assert_eq!((cs[0].name.as_str(), cs[0].weight), ("prio", 4));
+        assert_eq!((cs[1].name.as_str(), cs[1].weight), ("bulk", 1));
+        let cs = parse_classes("solo").unwrap();
+        assert_eq!((cs[0].name.as_str(), cs[0].weight), ("solo", 1),
+                   "bare names default to weight 1");
+        assert_eq!(parse_classes("a:0").unwrap()[0].weight, 1);
+        assert!(parse_classes("a:x").is_err());
+        assert!(parse_classes("").is_err());
+        assert!(parse_classes(":3").is_err());
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! without an engine.
 
 pub mod overload;
+pub mod tenant;
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -36,6 +37,7 @@ use crate::{bail, err};
 
 pub use overload::{backoff_ticks, estimate_pages, overload_pressure,
                    AdmissionGate, OverloadLadder, ShedLevel};
+pub use tenant::{ClassQueues, Popped};
 
 /// A generation request as submitted.
 #[derive(Debug, Clone)]
@@ -51,6 +53,12 @@ pub struct Request {
     pub deadline_ms: Option<u64>,
     /// Time-to-first-token budget, ms from submit (same defaulting).
     pub ttft_budget_ms: Option<u64>,
+    /// Tenant / scheduling-class name from the wire (`"tenant"` or
+    /// `"class"`); None and unknown names land in class 0.
+    pub tenant: Option<String>,
+    /// Stream one JSON line per decoded token batch before the
+    /// terminal line (DESIGN.md §13).
+    pub stream: bool,
 }
 
 impl Request {
@@ -63,6 +71,8 @@ impl Request {
             stop_at_eos: false,
             deadline_ms: None,
             ttft_budget_ms: None,
+            tenant: None,
+            stream: false,
         }
     }
 }
@@ -75,11 +85,25 @@ pub struct Finished {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub prompt_len: usize,
-    pub ttft_s: f64,
+    /// Submit→first-token latency; None when the request never
+    /// produced a token (expired/shed while queued), so percentile
+    /// aggregation skips it instead of counting a 0 ms ghost.
+    pub ttft_s: Option<f64>,
+    /// Submit→retirement wall time (real even for never-started
+    /// requests: their queue wait is the latency the client saw).
     pub total_s: f64,
     pub preemptions: u32,
     pub cached_prompt_tokens: usize,
     pub error: Option<Error>,
+}
+
+/// One streamed token batch for a `stream: true` request — drained
+/// by the server after each tick and written as a non-terminal
+/// `"stream": true` JSON line (DESIGN.md §13).
+#[derive(Debug, Clone)]
+pub struct StreamChunk {
+    pub id: u64,
+    pub tokens: Vec<u32>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,27 +121,25 @@ struct Live {
     /// Logits awaiting the next sample (set when prefill finishes and
     /// after every decode step).
     pending_logits: Option<Vec<f32>>,
+    /// Original submit instant, carried across preempt/requeue
+    /// cycles — TTFT and total latency include queue wait, matching
+    /// what the deadline budgets measure.
     submitted: Instant,
     first_token: Option<Instant>,
     preemptions: u32,
     cached_prompt_tokens: usize,
     /// Saturated/pool-exhausted requeues consumed so far.
     retries: u32,
+    /// Scheduling class (index into the coordinator's queues).
+    class: usize,
     deadline: Option<Instant>,
     ttft_deadline: Option<Instant>,
 }
 
 impl Live {
     fn expired(&self, now: Instant) -> Option<&'static str> {
-        if self.deadline.is_some_and(|d| now >= d) {
-            Some("deadline")
-        } else if self.first_token.is_none()
-            && self.ttft_deadline.is_some_and(|d| now >= d)
-        {
-            Some("ttft budget")
-        } else {
-            None
-        }
+        blown_budget(now, self.deadline, self.ttft_deadline,
+                     self.first_token.is_none())
     }
 }
 
@@ -134,31 +156,47 @@ struct Queued {
     retries: u32,
     /// Backoff gate: not admitted before this scheduler tick.
     not_before: u64,
+    /// Original submit instant (survives requeues).
+    submitted: Instant,
+    /// First-token instant from a pre-preemption spell, if any.
+    first_token: Option<Instant>,
+    /// Scheduling class (index into the coordinator's queues).
+    class: usize,
     deadline: Option<Instant>,
     ttft_deadline: Option<Instant>,
 }
 
 impl Queued {
     fn expired(&self, now: Instant) -> Option<&'static str> {
-        if self.deadline.is_some_and(|d| now >= d) {
-            Some("deadline")
-        } else if self.generated.is_empty()
-            && self.ttft_deadline.is_some_and(|d| now >= d)
-        {
-            // no first token yet → the TTFT budget also binds here
-            Some("ttft budget")
+        blown_budget(now, self.deadline, self.ttft_deadline,
+                     self.first_token.is_none())
+    }
+
+    /// The earliest instant that can expire this entry — the EDF
+    /// ordering key under pressure (None = no budget, least urgent).
+    fn urgency(&self) -> Option<Instant> {
+        let ttft = if self.first_token.is_none() {
+            self.ttft_deadline
         } else {
             None
+        };
+        match (self.deadline, ttft) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
         }
     }
 }
 
 pub struct Coordinator {
     pub engine: Engine,
-    waiting: VecDeque<Queued>,
+    /// Weighted per-class DRR queues (DESIGN.md §13); class 0 is the
+    /// default class.
+    waiting: ClassQueues<Queued>,
     running: Vec<Live>,
     finished: Vec<Finished>,
     preempt_stash: VecDeque<Queued>,
+    /// Token batches awaiting the server's streaming drain.
+    stream_out: Vec<StreamChunk>,
     tick_no: u64,
     shed: OverloadLadder,
     gate: AdmissionGate,
@@ -166,15 +204,20 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(engine: Engine) -> Self {
+        let weights = engine.cfg.scheduler.class_weights();
+        engine
+            .metrics
+            .set_class_names(engine.cfg.scheduler.class_names());
         Coordinator {
-            engine,
-            waiting: VecDeque::new(),
+            waiting: ClassQueues::new(&weights),
             running: Vec::new(),
             finished: Vec::new(),
             preempt_stash: VecDeque::new(),
+            stream_out: Vec::new(),
             tick_no: 0,
             shed: OverloadLadder::new(),
             gate: AdmissionGate::new(),
+            engine,
         }
     }
 
@@ -197,10 +240,16 @@ impl Coordinator {
     }
 
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        let class = self
+            .engine
+            .cfg
+            .scheduler
+            .class_of(req.tenant.as_deref());
         let m = &self.engine.metrics;
         if self.shed.level() == ShedLevel::RejectAll {
             ServingMetrics::inc(&m.requests_rejected, 1);
             ServingMetrics::inc(&m.requests_shed, 1);
+            ServingMetrics::inc(&m.class(class).shed, 1);
             return Err(Error::with_kind(
                 EngineError::Overloaded,
                 format!("overloaded: rejecting all new work \
@@ -239,12 +288,15 @@ impl Coordinator {
                               sched.default_deadline_ms);
         let ttft_deadline =
             budget(req.ttft_budget_ms, sched.ttft_budget_ms);
-        self.waiting.push_back(Queued {
+        self.waiting.push_back(class, Queued {
             req,
             generated: Vec::new(),
             preemptions: 0,
             retries: 0,
             not_before: 0,
+            submitted: now,
+            first_token: None,
+            class,
             deadline,
             ttft_deadline,
         });
@@ -263,6 +315,12 @@ impl Coordinator {
         std::mem::take(&mut self.finished)
     }
 
+    /// Streamed token batches produced since the last drain (only
+    /// `stream: true` requests emit them).
+    pub fn drain_stream_chunks(&mut self) -> Vec<StreamChunk> {
+        std::mem::take(&mut self.stream_out)
+    }
+
     pub fn idle(&self) -> bool {
         self.waiting.is_empty() && self.running.is_empty()
             && self.preempt_stash.is_empty()
@@ -273,19 +331,20 @@ impl Coordinator {
     /// running batch finishes, the queue gets an answer instead of a
     /// hung connection. Returns how many were shed.
     pub fn shed_queued(&mut self, why: &str) -> usize {
-        let mut n = 0;
-        for queue in [
-            std::mem::take(&mut self.waiting),
-            std::mem::take(&mut self.preempt_stash),
-        ] {
-            for q in queue {
-                let e = Error::with_kind(
-                    EngineError::Overloaded,
-                    format!("request {} shed: {why}", q.req.id),
-                );
-                self.finish_queued(q, e);
-                n += 1;
-            }
+        let mut all: Vec<Queued> = self
+            .waiting
+            .drain_all()
+            .into_iter()
+            .map(|(_, q)| q)
+            .collect();
+        all.extend(std::mem::take(&mut self.preempt_stash));
+        let n = all.len();
+        for q in all {
+            let e = Error::with_kind(
+                EngineError::Overloaded,
+                format!("request {} shed: {why}", q.req.id),
+            );
+            self.finish_queued(q, e);
         }
         if n > 0 {
             ServingMetrics::inc(&self.engine.metrics.requests_shed,
@@ -389,8 +448,11 @@ impl Coordinator {
             self.n_waiting(), queue_high, self.free_pages(), low_pages);
         let level = self.shed.note_tick(pressured);
         if level >= ShedLevel::ShedNewest {
+            // victims come newest-first from the cheapest (lowest
+            // weight) class, so bulk traffic absorbs the shed before
+            // priority traffic loses anything (DESIGN.md §13)
             while self.waiting.len() > queue_low {
-                let q = self.waiting.pop_back().unwrap();
+                let (_, q) = self.waiting.pop_shed_newest().unwrap();
                 let e = Error::with_kind(
                     EngineError::Overloaded,
                     format!("request {} shed under overload \
@@ -414,46 +476,44 @@ impl Coordinator {
     }
 
     /// Expire queued entries whose deadline or TTFT budget passed
-    /// while they waited.
+    /// while they waited — one in-place, order-preserving pass per
+    /// queue ([`sweep_expired`]; the blown budget is captured at
+    /// detection, never re-evaluated).
     fn expire_queued(&mut self, now: Instant) -> bool {
-        let mut acted = false;
-        for pick in 0..2 {
-            let queue = if pick == 0 {
-                &mut self.waiting
-            } else {
-                &mut self.preempt_stash
-            };
-            if queue.iter().all(|q| q.expired(now).is_none()) {
-                continue;
-            }
-            let (dead, keep): (Vec<_>, Vec<_>) = queue
-                .drain(..)
-                .partition(|q| q.expired(now).is_some());
-            *queue = keep.into();
-            for q in dead {
-                let what = q.expired(now).unwrap_or("deadline");
-                let e = expired_error(q.req.id, what);
-                self.finish_queued(q, e);
-                ServingMetrics::inc(
-                    &self.engine.metrics.requests_expired, 1);
-                acted = true;
-            }
+        let mut dead = Vec::new();
+        for c in 0..self.waiting.n_classes() {
+            dead.extend(
+                sweep_expired(self.waiting.queue_mut(c), now));
+        }
+        dead.extend(sweep_expired(&mut self.preempt_stash, now));
+        let acted = !dead.is_empty();
+        for (q, what) in dead {
+            let e = expired_error(q.req.id, what);
+            self.finish_queued(q, e);
+            ServingMetrics::inc(
+                &self.engine.metrics.requests_expired, 1);
         }
         acted
     }
 
-    /// Terminal record for a queued entry that never (re)started.
+    /// Terminal record for a queued entry that never (re)started:
+    /// no TTFT sample unless a pre-preemption spell produced one,
+    /// but the real submit→retirement wait is recorded — a request
+    /// that died waiting must not flatter the latency percentiles
+    /// with a 0 ms ghost.
     fn finish_queued(&mut self, q: Queued, error: Error) {
-        self.finished.push(Finished {
-            id: q.req.id,
-            prompt_len: q.req.prompt.len(),
-            tokens: q.generated,
-            ttft_s: 0.0,
-            total_s: 0.0,
-            preemptions: q.preemptions,
-            cached_prompt_tokens: 0,
-            error: Some(error),
-        });
+        let m = &self.engine.metrics;
+        m.queue_wait.record(q.submitted.elapsed());
+        match error.kind() {
+            Some(EngineError::Expired) => {
+                ServingMetrics::inc(&m.class(q.class).expired, 1);
+            }
+            Some(EngineError::Overloaded) => {
+                ServingMetrics::inc(&m.class(q.class).shed, 1);
+            }
+            _ => {}
+        }
+        self.finished.push(queued_terminal_record(q, error));
     }
 
     fn decode_bucket_cap(&self, max_batch: usize) -> usize {
@@ -475,6 +535,7 @@ impl Coordinator {
     fn admit_paged(&mut self) -> Result<bool> {
         let mut progressed = false;
         let mut gated = false;
+        let mut edf_used = false;
         let sched = self.engine.cfg.scheduler.clone();
         loop {
             if self.running.len() >= sched.max_running_seqs {
@@ -509,17 +570,32 @@ impl Coordinator {
                 None => None,
             };
             if q.is_none() {
-                let wait_ready = self
-                    .waiting
-                    .front()
-                    .map(|h| h.not_before <= tick);
-                q = match wait_ready {
-                    Some(true) => self.waiting.pop_front(),
-                    Some(false) => {
+                // ordering policy (DESIGN.md §13): weighted DRR
+                // while calm; under pressure (shed ladder at
+                // DeferPrefill+ or admission gate closed) urgency
+                // overrides fairness — earliest blown-able instant
+                // first, budgetless requests last
+                let edf = self.shed.level() >= ShedLevel::DeferPrefill
+                    || !self.gate.is_open();
+                let popped = if edf {
+                    edf_used = true;
+                    self.waiting.pop_edf(
+                        |h| h.not_before <= tick,
+                        |h| match h.urgency() {
+                            Some(t) => (0u8, Some(t)),
+                            None => (1u8, None),
+                        },
+                    )
+                } else {
+                    self.waiting.pop_drr(|h| h.not_before <= tick)
+                };
+                q = match popped {
+                    Popped::Item { item, .. } => Some(item),
+                    Popped::Gated => {
                         gated = true;
                         break;
                     }
-                    None => break,
+                    Popped::Empty => break,
                 };
             }
             let Some(q) = q else { break };
@@ -547,10 +623,13 @@ impl Coordinator {
             let fits = free >= est + sched.watermark_pages;
             if (!gate_open || !fits) && !self.running.is_empty() {
                 self.gate.note_deferral();
+                ServingMetrics::inc(
+                    &self.engine.metrics.class(q.class).deferrals,
+                    1);
                 if from_stash {
                     self.preempt_stash.push_front(q);
                 } else {
-                    self.waiting.push_front(q);
+                    self.waiting.push_front(q.class, q);
                 }
                 gated = true;
                 break;
@@ -571,6 +650,8 @@ impl Coordinator {
                 Ok(adm) => {
                     let m = &self.engine.metrics;
                     ServingMetrics::inc(&m.requests_admitted, 1);
+                    ServingMetrics::inc(&m.class(q.class).admitted,
+                                        1);
                     if adm.cached_tokens > 0 {
                         ServingMetrics::inc(&m.prefix_cache_hits, 1);
                         ServingMetrics::inc(&m.prefix_cached_tokens,
@@ -582,11 +663,12 @@ impl Coordinator {
                         sampler,
                         generated: q.generated,
                         pending_logits: None,
-                        submitted: Instant::now(),
-                        first_token: None,
+                        submitted: q.submitted,
+                        first_token: q.first_token,
                         preemptions: q.preemptions,
                         cached_prompt_tokens: adm.cached_tokens,
                         retries: q.retries,
+                        class: q.class,
                         deadline: q.deadline,
                         ttft_deadline: q.ttft_deadline,
                         phase: Phase::Prefill,
@@ -602,18 +684,15 @@ impl Coordinator {
                     break;
                 }
                 Err(e) => {
-                    self.finished.push(Finished {
-                        id: q.req.id,
-                        tokens: vec![],
-                        prompt_len: q.req.prompt.len(),
-                        ttft_s: 0.0,
-                        total_s: 0.0,
-                        preemptions: q.preemptions,
-                        cached_prompt_tokens: 0,
-                        error: Some(err!("admit: {e}")),
-                    });
+                    let err = err!("admit: {e}");
+                    self.finished
+                        .push(queued_terminal_record(q, err));
                 }
             }
+        }
+        if edf_used {
+            ServingMetrics::inc(
+                &self.engine.metrics.sched_edf_ticks, 1);
         }
         Ok(progressed || gated)
     }
@@ -638,7 +717,7 @@ impl Coordinator {
         if to_stash {
             self.preempt_stash.push_front(q);
         } else {
-            self.waiting.push_front(q);
+            self.waiting.push_front(q.class, q);
         }
     }
 
@@ -756,6 +835,18 @@ impl Coordinator {
             }
             next.push(tok);
         }
+        for (&id, &tok) in live_ids.iter().zip(&next) {
+            if let Some(l) =
+                self.running.iter().find(|l| l.seq == id)
+            {
+                if l.req.stream {
+                    self.stream_out.push(StreamChunk {
+                        id: l.req.id,
+                        tokens: vec![tok],
+                    });
+                }
+            }
+        }
 
         let rt = &self.engine.rt;
         let pe = self.engine.paged.as_mut().unwrap();
@@ -796,8 +887,7 @@ impl Coordinator {
         let now = Instant::now();
         let ttft = live
             .first_token
-            .map(|t| t.duration_since(live.submitted).as_secs_f64())
-            .unwrap_or(0.0);
+            .map(|t| t.duration_since(live.submitted).as_secs_f64());
         self.finished.push(Finished {
             id: live.req.id,
             prompt_len: live.req.prompt.len(),
@@ -841,6 +931,9 @@ impl Coordinator {
             preemptions: live.preemptions,
             retries,
             not_before: self.tick_no + backoff_ticks(retries),
+            submitted: live.submitted,
+            first_token: live.first_token,
+            class: live.class,
             deadline: live.deadline,
             ttft_deadline: live.ttft_deadline,
         });
@@ -871,6 +964,9 @@ impl Coordinator {
             preemptions: live.preemptions + 1,
             retries: live.retries,
             not_before: 0,
+            submitted: live.submitted,
+            first_token: live.first_token,
+            class: live.class,
             deadline: live.deadline,
             ttft_deadline: live.ttft_deadline,
         });
@@ -893,10 +989,19 @@ impl Coordinator {
             let now = Instant::now();
             let ttft = live
                 .first_token
-                .map(|t| t.duration_since(live.submitted).as_secs_f64())
-                .unwrap_or(0.0);
-            self.engine.metrics.ttft.record(
-                std::time::Duration::from_secs_f64(ttft.max(0.0)));
+                .map(|t| t.duration_since(live.submitted).as_secs_f64());
+            let total =
+                now.duration_since(live.submitted).as_secs_f64();
+            let cm = self.engine.metrics.class(live.class);
+            if let Some(t) = ttft {
+                let d =
+                    std::time::Duration::from_secs_f64(t.max(0.0));
+                self.engine.metrics.ttft.record(d);
+                cm.ttft.record(d);
+            }
+            cm.total.record(
+                std::time::Duration::from_secs_f64(total.max(0.0)));
+            ServingMetrics::inc(&cm.finished, 1);
             match self.engine.mode() {
                 AttentionMode::Paged => {
                     let pe = self.engine.paged.as_mut().unwrap();
@@ -914,7 +1019,7 @@ impl Coordinator {
                 prompt_len: live.req.prompt.len(),
                 tokens: live.generated,
                 ttft_s: ttft,
-                total_s: now.duration_since(live.submitted).as_secs_f64(),
+                total_s: total,
                 preemptions: live.preemptions,
                 cached_prompt_tokens: live.cached_prompt_tokens,
                 error: None,
@@ -927,6 +1032,15 @@ impl Coordinator {
             .iter_mut()
             .find(|l| l.seq == seq)
             .ok_or_else(|| err!("unknown live sequence {seq}"))
+    }
+
+    /// Plain weighted pop for the non-paged modes (they have no
+    /// overload machinery, so every head is always ready).
+    fn pop_waiting(&mut self) -> Option<Queued> {
+        match self.waiting.pop_drr(|_| true) {
+            Popped::Item { item, .. } => Some(item),
+            _ => None,
+        }
     }
 
     // ------------------------------------------------------------------
@@ -950,7 +1064,7 @@ impl Coordinator {
         let cap = self.engine.cfg.scheduler.max_batch_size.min(bucket_cap);
         // admit while the arena holds
         while self.running.len() < cap {
-            let Some(q) = self.waiting.pop_front() else { break };
+            let Some(q) = self.pop_waiting() else { break };
             let seq = self.engine.fresh_seq_id();
             let ce = self.engine.contiguous.as_mut().unwrap();
             match ce.admit(seq, &q.req.prompt) {
@@ -962,11 +1076,12 @@ impl Coordinator {
                         sampler: Sampler::new(q.req.sampling),
                         generated: Vec::new(),
                         pending_logits: None,
-                        submitted: Instant::now(),
+                        submitted: q.submitted,
                         first_token: None,
                         preemptions: 0,
                         cached_prompt_tokens: 0,
                         retries: 0,
+                        class: q.class,
                         deadline: q.deadline,
                         ttft_deadline: q.ttft_deadline,
                         phase: Phase::Prefill,
@@ -975,7 +1090,7 @@ impl Coordinator {
                     progressed = true;
                 }
                 Err(AllocError::PoolExhausted { .. }) => {
-                    self.waiting.push_front(q);
+                    self.waiting.push_front(q.class, q);
                     break;
                 }
                 Err(e) => bail!("contiguous admit: {e}"),
@@ -1028,6 +1143,18 @@ impl Coordinator {
                 }
                 next.push(tok);
             }
+            for (&id, &tok) in decode_ids.iter().zip(&next) {
+                if let Some(l) =
+                    self.running.iter().find(|l| l.seq == id)
+                {
+                    if l.req.stream {
+                        self.stream_out.push(StreamChunk {
+                            id: l.req.id,
+                            tokens: vec![tok],
+                        });
+                    }
+                }
+            }
             let rt = &self.engine.rt;
             let ce = self.engine.contiguous.as_mut().unwrap();
             let t0 = Instant::now();
@@ -1054,12 +1181,12 @@ impl Coordinator {
     // ------------------------------------------------------------------
 
     fn tick_nocache(&mut self) -> Result<bool> {
-        let Some(q) = self.waiting.pop_front() else {
+        let Some(q) = self.pop_waiting() else {
             return Ok(false);
         };
         let req = q.req;
         ServingMetrics::inc(&self.engine.metrics.requests_admitted, 1);
-        let submitted = Instant::now();
+        let submitted = q.submitted;
         let mut sampler = Sampler::new(req.sampling);
         let mut tokens = req.prompt.clone();
         let mut generated = Vec::new();
@@ -1073,18 +1200,25 @@ impl Coordinator {
             first_token.get_or_insert(Instant::now());
             generated.push(tok);
             tokens.push(tok);
+            if req.stream {
+                self.stream_out.push(StreamChunk {
+                    id: req.id,
+                    tokens: vec![tok],
+                });
+            }
             ServingMetrics::inc(&self.engine.metrics.tokens_decoded, 1);
             if req.stop_at_eos && tok == EOS {
                 break;
             }
         }
         let ttft = first_token
-            .map(|t| t.duration_since(submitted).as_secs_f64())
-            .unwrap_or(0.0);
-        self.engine
-            .metrics
-            .ttft
-            .record(std::time::Duration::from_secs_f64(ttft));
+            .map(|t| t.duration_since(submitted).as_secs_f64());
+        if let Some(t) = ttft {
+            self.engine
+                .metrics
+                .ttft
+                .record(std::time::Duration::from_secs_f64(t));
+        }
         ServingMetrics::inc(&self.engine.metrics.requests_finished, 1);
         self.finished.push(Finished {
             id: req.id,
@@ -1150,6 +1284,68 @@ fn expired_error(id: u64, what: &str) -> Error {
     )
 }
 
+/// Which budget (if any) is blown at `now` — the ONE expiry rule
+/// shared by `Live` and `Queued` (PR 8 bugfix: they used to be
+/// copy-paste duplicates that both checked the deadline first, so an
+/// earlier-blown TTFT budget was misreported as `"deadline"`). The
+/// budget whose instant passed earliest names the expiry; an exact
+/// tie goes to the whole-request deadline. `ttft_pending` is false
+/// once a first token exists — a met TTFT budget can no longer fire.
+fn blown_budget(now: Instant, deadline: Option<Instant>,
+                ttft_deadline: Option<Instant>, ttft_pending: bool)
+                -> Option<&'static str> {
+    let dl = deadline.filter(|&d| now >= d);
+    let tt = ttft_deadline
+        .filter(|&d| ttft_pending && now >= d);
+    match (dl, tt) {
+        (Some(d), Some(t)) if t < d => Some("ttft budget"),
+        (Some(_), _) => Some("deadline"),
+        (None, Some(_)) => Some("ttft budget"),
+        (None, None) => None,
+    }
+}
+
+/// Single in-place expiry pass over one queue: remove every entry
+/// whose budget is blown at `now`, capturing the blown budget at
+/// detection time; survivors keep their arrival order and a fully
+/// live queue is not touched at all (PR 8 bugfix: the old sweep
+/// scanned twice, rebuilt the VecDeque even when nothing expired,
+/// and re-evaluated the reason after the partition).
+fn sweep_expired(queue: &mut VecDeque<Queued>, now: Instant)
+                 -> Vec<(Queued, &'static str)> {
+    let mut dead = Vec::new();
+    let mut i = 0;
+    while i < queue.len() {
+        match queue[i].expired(now) {
+            Some(what) => {
+                dead.push((queue.remove(i).unwrap(), what));
+            }
+            None => i += 1,
+        }
+    }
+    dead
+}
+
+/// Terminal [`Finished`] for a queued entry that never (re)started:
+/// `ttft_s` only if a pre-preemption spell produced a token, and
+/// `total_s` is the REAL submit→retirement wait (PR 8 bugfix: both
+/// used to be hardcoded 0.0, so queue-expired requests flattered
+/// every TTFT/latency percentile with 0 ms samples).
+fn queued_terminal_record(q: Queued, error: Error) -> Finished {
+    Finished {
+        id: q.req.id,
+        prompt_len: q.req.prompt.len(),
+        tokens: q.generated,
+        ttft_s: q.first_token.map(|t| {
+            t.duration_since(q.submitted).as_secs_f64()
+        }),
+        total_s: q.submitted.elapsed().as_secs_f64(),
+        preemptions: q.preemptions,
+        cached_prompt_tokens: 0,
+        error: Some(error),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1176,6 +1372,8 @@ mod tests {
         assert!(!r.stop_at_eos);
         assert_eq!(r.deadline_ms, None, "deadlines opt-in");
         assert_eq!(r.ttft_budget_ms, None);
+        assert_eq!(r.tenant, None, "tenant classes opt-in");
+        assert!(!r.stream, "single-shot replies by default");
     }
 
     #[test]
@@ -1225,30 +1423,140 @@ mod tests {
         assert!(msg.contains("ttft budget"), "{msg}");
     }
 
-    #[test]
-    fn queued_expiry_checks_deadline_then_ttft() {
-        let now = Instant::now();
-        let past = now - Duration::from_millis(10);
-        let future = now + Duration::from_secs(60);
-        let mk = |deadline, ttft, generated: usize| Queued {
+    fn mk_queued(deadline: Option<Instant>, ttft: Option<Instant>,
+                 first_token: Option<Instant>) -> Queued {
+        Queued {
             req: Request::greedy(1, vec![1], 4),
-            generated: vec![0; generated],
+            generated: Vec::new(),
             preemptions: 0,
             retries: 0,
             not_before: 0,
+            submitted: Instant::now(),
+            first_token,
+            class: 0,
             deadline,
             ttft_deadline: ttft,
-        };
-        assert_eq!(mk(None, None, 0).expired(now), None);
-        assert_eq!(mk(Some(future), Some(future), 0).expired(now), None);
-        assert_eq!(mk(Some(past), None, 0).expired(now),
+        }
+    }
+
+    #[test]
+    fn expiry_names_the_earliest_blown_budget() {
+        let now = Instant::now();
+        let past = now - Duration::from_millis(10);
+        let earlier = now - Duration::from_millis(20);
+        let future = now + Duration::from_secs(60);
+        assert_eq!(blown_budget(now, None, None, true), None);
+        assert_eq!(blown_budget(now, Some(future), Some(future),
+                                true), None);
+        assert_eq!(blown_budget(now, Some(past), None, true),
                    Some("deadline"));
-        assert_eq!(mk(None, Some(past), 0).expired(now),
+        assert_eq!(blown_budget(now, None, Some(past), true),
                    Some("ttft budget"));
-        // a requeued entry that already produced tokens met its TTFT
-        assert_eq!(mk(None, Some(past), 3).expired(now), None);
-        assert_eq!(mk(Some(past), Some(past), 3).expired(now),
+        // BOTH blown: the budget that fired first gets the blame
+        // (the PR 8 bugfix — the deadline used to win regardless)
+        assert_eq!(blown_budget(now, Some(past), Some(earlier), true),
+                   Some("ttft budget"));
+        assert_eq!(blown_budget(now, Some(earlier), Some(past), true),
                    Some("deadline"));
+        // an exact tie goes to the whole-request deadline
+        assert_eq!(blown_budget(now, Some(past), Some(past), true),
+                   Some("deadline"));
+        // a produced first token retires the TTFT budget entirely
+        assert_eq!(blown_budget(now, None, Some(earlier), false),
+                   None);
+        assert_eq!(blown_budget(now, Some(past), Some(earlier),
+                                false),
+                   Some("deadline"));
+    }
+
+    #[test]
+    fn live_and_queued_share_the_expiry_rule() {
+        let now = Instant::now();
+        let past = now - Duration::from_millis(10);
+        let earlier = now - Duration::from_millis(20);
+        let q = mk_queued(Some(past), Some(earlier), None);
+        assert_eq!(q.expired(now), Some("ttft budget"),
+                   "queued: earliest blown instant names the expiry");
+        // a requeued entry that already produced a token has met its
+        // TTFT — only the deadline still binds
+        let q = mk_queued(None, Some(earlier), Some(earlier));
+        assert_eq!(q.expired(now), None);
+        let q = mk_queued(Some(past), Some(earlier), Some(earlier));
+        assert_eq!(q.expired(now), Some("deadline"));
+    }
+
+    #[test]
+    fn urgency_is_the_earliest_relevant_instant() {
+        let now = Instant::now();
+        let soon = now + Duration::from_millis(10);
+        let later = now + Duration::from_secs(60);
+        assert_eq!(mk_queued(None, None, None).urgency(), None);
+        assert_eq!(mk_queued(Some(later), Some(soon), None).urgency(),
+                   Some(soon));
+        assert_eq!(mk_queued(Some(soon), Some(later), None).urgency(),
+                   Some(soon));
+        // first token produced → the TTFT instant no longer matters
+        assert_eq!(
+            mk_queued(Some(later), Some(soon), Some(now)).urgency(),
+            Some(later));
+        assert_eq!(mk_queued(None, Some(soon), Some(now)).urgency(),
+                   None);
+    }
+
+    #[test]
+    fn sweep_expired_is_single_pass_and_order_stable() {
+        let now = Instant::now();
+        let past = now - Duration::from_millis(5);
+        let future = now + Duration::from_secs(60);
+        let mut queue: VecDeque<Queued> = VecDeque::new();
+        // ids 0..6, every odd one expired
+        for id in 0..6u64 {
+            let deadline =
+                if id % 2 == 1 { Some(past) } else { Some(future) };
+            let mut q = mk_queued(deadline, None, None);
+            q.req.id = id;
+            queue.push_back(q);
+        }
+        let dead = sweep_expired(&mut queue, now);
+        let dead_ids: Vec<u64> =
+            dead.iter().map(|(q, _)| q.req.id).collect();
+        assert_eq!(dead_ids, vec![1, 3, 5]);
+        assert!(dead.iter().all(|(_, w)| *w == "deadline"));
+        let kept: Vec<u64> =
+            queue.iter().map(|q| q.req.id).collect();
+        assert_eq!(kept, vec![0, 2, 4],
+                   "survivors must keep arrival order");
+        // nothing-expired pass: queue untouched, same order
+        let dead = sweep_expired(&mut queue, now);
+        assert!(dead.is_empty());
+        let kept2: Vec<u64> =
+            queue.iter().map(|q| q.req.id).collect();
+        assert_eq!(kept2, kept);
+    }
+
+    #[test]
+    fn queued_terminal_record_has_no_ttft_and_a_real_wait() {
+        // regression (PR 8 bugfix): a request expired while queued
+        // used to report ttft_s = 0.0 / total_s = 0.0, flattering
+        // exactly the percentiles the overload gates measure
+        let mut q = mk_queued(None, None, None);
+        q.submitted = Instant::now() - Duration::from_millis(50);
+        let fin =
+            queued_terminal_record(q, expired_error(1, "deadline"));
+        assert_eq!(fin.ttft_s, None,
+                   "a never-started request has NO TTFT sample");
+        assert!(fin.total_s >= 0.045,
+                "total_s must be the real submit→retirement wait, \
+                 got {}", fin.total_s);
+        // a preempted-then-shed request keeps its earned TTFT
+        let mut q = mk_queued(None, None, None);
+        q.submitted = Instant::now() - Duration::from_millis(50);
+        q.first_token =
+            Some(q.submitted + Duration::from_millis(10));
+        let fin =
+            queued_terminal_record(q, expired_error(1, "deadline"));
+        let ttft = fin.ttft_s.expect("earned TTFT survives");
+        assert!((0.009..0.02).contains(&ttft), "{ttft}");
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! Per-class scheduling policy (DESIGN.md §13), pure and engine-free:
+//! weighted deficit-round-robin queues over tenant classes, an
+//! earliest-deadline-first pop for overload ticks, and a min-weight
+//! shed-victim pick. The coordinator swaps its single FIFO `waiting`
+//! queue for a [`ClassQueues`] of queued requests; everything here is
+//! unit/property-tested without an engine.
+//!
+//! DRR (deficit round robin) semantics: each class holds a FIFO
+//! queue and a configured weight. A turn at class `c` grants it
+//! `weight[c]` consecutive pops before the cursor advances, so over
+//! any window in which every class stays backlogged, class `c`
+//! admits `weight[c] / Σweights` of the slots — weighted fairness
+//! with O(1) pops and no per-item bookkeeping. Empty classes forfeit
+//! their turn (work-conserving); backoff-gated heads are skipped
+//! without burning deficit.
+
+use std::collections::VecDeque;
+
+/// Outcome of a scheduling pop.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Popped<T> {
+    /// An item was selected from `class`.
+    Item { class: usize, item: T },
+    /// Work is queued but every candidate is (backoff-)gated.
+    Gated,
+    /// No queued work at all.
+    Empty,
+}
+
+/// Weighted per-class FIFO queues with DRR / EDF / shed pops.
+pub struct ClassQueues<T> {
+    queues: Vec<VecDeque<T>>,
+    weights: Vec<u32>,
+    /// DRR scan position: the class the next pop visits first.
+    cursor: usize,
+    /// Remaining pops in each class's current DRR turn.
+    deficit: Vec<u32>,
+}
+
+impl<T> ClassQueues<T> {
+    /// One queue per weight; zero weights are clamped to 1 (a
+    /// zero-weight class would starve forever), and an empty weight
+    /// list degenerates to a single FIFO class.
+    pub fn new(weights: &[u32]) -> Self {
+        let weights: Vec<u32> = if weights.is_empty() {
+            vec![1]
+        } else {
+            weights.iter().map(|&w| w.max(1)).collect()
+        };
+        let n = weights.len();
+        ClassQueues {
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            deficit: vec![0; n],
+            cursor: 0,
+            weights,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn weight(&self, class: usize) -> u32 {
+        self.weights[class.min(self.weights.len() - 1)]
+    }
+
+    /// Total queued items across every class.
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    pub fn class_len(&self, class: usize) -> usize {
+        self.queues.get(class).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// Clamp an out-of-range class to the last configured one (the
+    /// wire may name classes the server was not configured with).
+    fn clamp(&self, class: usize) -> usize {
+        class.min(self.queues.len() - 1)
+    }
+
+    pub fn push_back(&mut self, class: usize, item: T) {
+        let c = self.clamp(class);
+        self.queues[c].push_back(item);
+    }
+
+    /// Return an item to the head of its class (deferred admission
+    /// put-back; preserves FIFO order within the class).
+    pub fn push_front(&mut self, class: usize, item: T) {
+        let c = self.clamp(class);
+        self.queues[c].push_front(item);
+    }
+
+    /// Direct access for in-place sweeps (expiry) over one class.
+    pub fn queue_mut(&mut self, class: usize) -> &mut VecDeque<T> {
+        let c = self.clamp(class);
+        &mut self.queues[c]
+    }
+
+    /// Take everything, oldest-first within each class (drain path).
+    pub fn drain_all(&mut self) -> Vec<(usize, T)> {
+        let mut out = Vec::new();
+        for (c, q) in self.queues.iter_mut().enumerate() {
+            out.extend(q.drain(..).map(|item| (c, item)));
+        }
+        out
+    }
+
+    fn advance(&mut self) {
+        self.cursor = (self.cursor + 1) % self.queues.len();
+    }
+
+    /// Deficit-round-robin pop: the cursor class spends one unit of
+    /// its turn; empty classes forfeit (deficit reset), gated heads
+    /// are skipped without losing their remaining turn.
+    pub fn pop_drr(&mut self, ready: impl Fn(&T) -> bool)
+                   -> Popped<T> {
+        let n = self.queues.len();
+        let mut gated = false;
+        for _ in 0..n {
+            let c = self.cursor;
+            if self.queues[c].is_empty() {
+                self.deficit[c] = 0;
+                self.advance();
+                continue;
+            }
+            if !ready(&self.queues[c][0]) {
+                gated = true;
+                self.advance();
+                continue;
+            }
+            if self.deficit[c] == 0 {
+                self.deficit[c] = self.weights[c];
+            }
+            self.deficit[c] -= 1;
+            let item = self.queues[c].pop_front().unwrap();
+            if self.deficit[c] == 0 {
+                self.advance();
+            }
+            return Popped::Item { class: c, item };
+        }
+        if gated {
+            Popped::Gated
+        } else {
+            Popped::Empty
+        }
+    }
+
+    /// Earliest-deadline-first pop across every class (the overload
+    /// ordering): the ready item with the strictly smallest key wins;
+    /// ties keep submission order (lowest class index, then FIFO
+    /// position). Ignores weights and deficits — urgency overrides
+    /// fairness while the pressure lasts.
+    pub fn pop_edf<K: Ord>(&mut self, ready: impl Fn(&T) -> bool,
+                           key: impl Fn(&T) -> K) -> Popped<T> {
+        let mut best: Option<(usize, usize, K)> = None;
+        let mut any = false;
+        for (c, q) in self.queues.iter().enumerate() {
+            for (i, item) in q.iter().enumerate() {
+                any = true;
+                if !ready(item) {
+                    continue;
+                }
+                let k = key(item);
+                if best.as_ref().is_none_or(|(_, _, bk)| k < *bk) {
+                    best = Some((c, i, k));
+                }
+            }
+        }
+        match best {
+            Some((c, i, _)) => {
+                let item = self.queues[c].remove(i).unwrap();
+                Popped::Item { class: c, item }
+            }
+            None if any => Popped::Gated,
+            None => Popped::Empty,
+        }
+    }
+
+    /// Shed-victim pop: the newest item of the cheapest class — the
+    /// nonempty class with the smallest weight (ties: deepest queue,
+    /// then highest index), so bulk traffic absorbs ShedNewest before
+    /// priority traffic loses anything.
+    pub fn pop_shed_newest(&mut self) -> Option<(usize, T)> {
+        let weights = &self.weights;
+        let victim = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| !q.is_empty())
+            .min_by_key(|&(c, q)| {
+                (weights[c], usize::MAX - q.len(), usize::MAX - c)
+            })
+            .map(|(c, _)| c)?;
+        let item = self.queues[victim].pop_back().unwrap();
+        Some((victim, item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Rng;
+
+    fn fed(weights: &[u32], per_class: usize) -> ClassQueues<u64> {
+        let mut cq = ClassQueues::new(weights);
+        for c in 0..weights.len() {
+            for i in 0..per_class {
+                cq.push_back(c, (c * 1000 + i) as u64);
+            }
+        }
+        cq
+    }
+
+    #[test]
+    fn drr_backlogged_classes_split_by_weight_exactly() {
+        let weights = [3u32, 1];
+        let mut cq = fed(&weights, 400);
+        let mut counts = [0usize; 2];
+        let mut order = Vec::new();
+        for _ in 0..400 {
+            match cq.pop_drr(|_| true) {
+                Popped::Item { class, .. } => {
+                    counts[class] += 1;
+                    order.push(class);
+                }
+                other => panic!("backlogged pop: {other:?}"),
+            }
+        }
+        assert_eq!(counts, [300, 100],
+                   "3:1 weights must yield a 3:1 split exactly \
+                    while both classes stay backlogged");
+        // the turn structure is 3 pops of class 0 then 1 of class 1
+        assert_eq!(&order[..8], &[0, 0, 0, 1, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn drr_is_work_conserving_when_a_class_is_empty() {
+        let mut cq = ClassQueues::new(&[4, 1]);
+        for i in 0..5u64 {
+            cq.push_back(1, i);
+        }
+        // class 0 empty: class 1 takes every slot, FIFO order kept
+        for want in 0..5u64 {
+            match cq.pop_drr(|_| true) {
+                Popped::Item { class, item } => {
+                    assert_eq!((class, item), (1, want));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(cq.pop_drr(|_| true), Popped::Empty);
+    }
+
+    #[test]
+    fn drr_gated_heads_report_gated_not_empty() {
+        let mut cq = ClassQueues::new(&[2, 1]);
+        cq.push_back(0, 7u64);
+        assert_eq!(cq.pop_drr(|_| false), Popped::Gated,
+                   "a gated head is pending work, not an idle queue");
+        assert_eq!(cq.pop_drr(|&x| x == 7),
+                   Popped::Item { class: 0, item: 7 });
+    }
+
+    #[test]
+    fn drr_starvation_freedom_under_random_weights() {
+        // property: however the weights are drawn, a class that
+        // stays backlogged admits at least once every Σweights pops
+        let mut rng = Rng::seeded(0xC1A5);
+        for _round in 0..50 {
+            let n = 2 + rng.below(3) as usize;
+            let weights: Vec<u32> = (0..n)
+                .map(|_| 1 + rng.below(7) as u32)
+                .collect();
+            let cycle: u32 = weights.iter().sum();
+            let mut cq = fed(&weights, 4 * cycle as usize);
+            let mut last_seen = vec![0usize; n];
+            for pop in 0..(2 * cycle as usize) {
+                match cq.pop_drr(|_| true) {
+                    Popped::Item { class, .. } => {
+                        last_seen[class] = pop;
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            for (c, &seen) in last_seen.iter().enumerate() {
+                assert!(
+                    2 * cycle as usize - seen <= cycle as usize + 1,
+                    "weights {weights:?}: class {c} starved \
+                     (last admitted at pop {seen})");
+            }
+        }
+    }
+
+    #[test]
+    fn edf_admits_in_deadline_order_and_breaks_ties_stably() {
+        let mut rng = Rng::seeded(0xEDF);
+        for _round in 0..50 {
+            let mut cq = ClassQueues::new(&[1, 1, 1]);
+            let n = 3 + rng.below(20) as usize;
+            for i in 0..n {
+                let class = rng.below(3) as usize;
+                // key encodes the deadline; a few collide on purpose
+                let deadline = rng.below(8);
+                cq.push_back(class,
+                             deadline * 1000 + i as u64);
+            }
+            let mut keys = Vec::new();
+            loop {
+                match cq.pop_edf(|_| true, |&x| x / 1000) {
+                    Popped::Item { item, .. } => {
+                        keys.push(item / 1000);
+                    }
+                    Popped::Empty => break,
+                    Popped::Gated => panic!("all items are ready"),
+                }
+            }
+            assert_eq!(keys.len(), n);
+            assert!(keys.windows(2).all(|w| w[0] <= w[1]),
+                    "EDF admitted a later deadline first: {keys:?}");
+        }
+    }
+
+    #[test]
+    fn edf_skips_gated_items_and_reports_gated() {
+        let mut cq = ClassQueues::new(&[1, 1]);
+        cq.push_back(0, 10u64); // earliest deadline but gated
+        cq.push_back(1, 20u64);
+        let got = cq.pop_edf(|&x| x != 10, |&x| x);
+        assert_eq!(got, Popped::Item { class: 1, item: 20 },
+                   "a gated earlier deadline must not block later \
+                    ready work");
+        assert_eq!(cq.pop_edf(|_| false, |&x| x), Popped::Gated);
+        assert_eq!(cq.pop_edf(|_| true, |&x| x),
+                   Popped::Item { class: 0, item: 10 });
+        assert_eq!(cq.pop_edf(|_| true, |&x| x), Popped::Empty);
+    }
+
+    #[test]
+    fn shed_victim_is_the_newest_of_the_cheapest_class() {
+        let mut cq = ClassQueues::new(&[4, 1]);
+        cq.push_back(0, 1u64);
+        cq.push_back(1, 2u64);
+        cq.push_back(1, 3u64);
+        assert_eq!(cq.pop_shed_newest(), Some((1, 3)),
+                   "bulk class absorbs shed, newest first");
+        assert_eq!(cq.pop_shed_newest(), Some((1, 2)));
+        // bulk drained: only now does the priority class pay
+        assert_eq!(cq.pop_shed_newest(), Some((0, 1)));
+        assert_eq!(cq.pop_shed_newest(), None);
+    }
+
+    #[test]
+    fn shed_weight_ties_pick_the_deeper_queue() {
+        let mut cq = ClassQueues::new(&[1, 1]);
+        cq.push_back(0, 1u64);
+        cq.push_back(1, 2u64);
+        cq.push_back(1, 3u64);
+        assert_eq!(cq.pop_shed_newest(), Some((1, 3)));
+    }
+
+    #[test]
+    fn out_of_range_classes_clamp_and_empty_weights_degenerate() {
+        let mut cq: ClassQueues<u64> = ClassQueues::new(&[]);
+        assert_eq!(cq.n_classes(), 1);
+        cq.push_back(9, 5); // clamped to the only class
+        assert_eq!(cq.class_len(0), 1);
+        assert_eq!(ClassQueues::<u64>::new(&[0, 2]).weight(0), 1,
+                   "zero weights clamp to 1 (would starve)");
+    }
+
+    #[test]
+    fn push_front_restores_the_head() {
+        let mut cq = ClassQueues::new(&[1, 1]);
+        cq.push_back(1, 8u64);
+        cq.push_back(1, 9u64);
+        if let Popped::Item { class, item } = cq.pop_drr(|_| true) {
+            cq.push_front(class, item);
+        } else {
+            panic!("expected an item");
+        }
+        assert_eq!(cq.pop_drr(|_| true),
+                   Popped::Item { class: 1, item: 8 },
+                   "deferred put-back must keep FIFO order");
+    }
+}

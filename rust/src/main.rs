@@ -19,6 +19,7 @@
 //!   --max-batch N --prefill-chunk N
 //!   --max-conns N --read-timeout-ms MS
 //!   --deadline-ms MS --ttft-budget-ms MS --max-sat-retries N
+//!   --classes name:weight,...
 //!   --config FILE.json
 //! ```
 
@@ -105,7 +106,12 @@ fn print_help() {
            --ttft-budget-ms MS (expire requests still waiting for\n\
              their first token past this budget; 0 = unbounded)\n\
            --max-sat-retries N (bounded retry-with-backoff before a\n\
-             pool-saturated request dies typed; default 4)"
+             pool-saturated request dies typed; default 4)\n\
+         \n\
+         multi-tenant scheduling (DESIGN.md §13):\n\
+           --classes name:weight,... (weighted per-class admission;\n\
+             requests pick a class via their 'tenant' field, unknown\n\
+             tenants map to the first class; default 'default:1')"
     );
 }
 
@@ -231,6 +237,9 @@ impl Flags {
                 .parse()
                 .map_err(|_| err!("bad --max-sat-retries {r}"))?;
         }
+        if let Some(c) = self.get("classes") {
+            cfg.scheduler.classes = config::parse_classes(c)?;
+        }
         Ok(cfg)
     }
 }
@@ -289,7 +298,7 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         "prompt_len={} generated={} ttft={:.1}ms total={:.1}ms",
         fin.prompt_len,
         fin.tokens.len(),
-        fin.ttft_s * 1e3,
+        fin.ttft_s.unwrap_or(0.0) * 1e3,
         fin.total_s * 1e3
     );
     println!("tokens: {:?}", fin.tokens);

@@ -5,6 +5,7 @@
 //! to ~±19 % across nine decades without allocation on the record path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use crate::engine::pipeline::PipelineStats;
@@ -107,6 +108,29 @@ impl Default for LatencyHistogram {
     }
 }
 
+/// Hard cap on scheduling classes the metrics track; out-of-range
+/// class indices clamp into the last slot rather than panic.
+pub const MAX_CLASSES: usize = 8;
+
+/// Per-class scheduling counters + SLO histograms (DESIGN.md §13).
+#[derive(Default)]
+pub struct ClassMetrics {
+    /// Requests admitted into a batch from this class's queue.
+    pub admitted: AtomicU64,
+    /// Requests retired with tokens.
+    pub finished: AtomicU64,
+    /// Requests shed (RejectAll at submit, ShedNewest trims, drains).
+    pub shed: AtomicU64,
+    /// Requests retired on a blown deadline / TTFT budget.
+    pub expired: AtomicU64,
+    /// Admissions pushed back by the gate or page budget.
+    pub deferrals: AtomicU64,
+    /// Submit → first token, per class (queue wait included).
+    pub ttft: LatencyHistogram,
+    /// Submit → retirement, per class.
+    pub total: LatencyHistogram,
+}
+
 /// Counter set for one serving run.
 #[derive(Default)]
 pub struct ServingMetrics {
@@ -200,6 +224,14 @@ pub struct ServingMetrics {
     pub shed_repromotes: AtomicU64,
     /// Admissions deferred by the KV watermark gate or budget.
     pub admission_deferrals: AtomicU64,
+    /// Ticks whose admission ordering ran earliest-deadline-first
+    /// (pressure trigger: shed ≥ DeferPrefill or gate closed —
+    /// DESIGN.md §13).
+    pub sched_edf_ticks: AtomicU64,
+    /// Per-class scheduling counters + SLO histograms, indexed by
+    /// scheduler class (clamped to [`MAX_CLASSES`] slots).
+    pub classes: [ClassMetrics; MAX_CLASSES],
+    class_names: OnceLock<Vec<String>>,
     started: Option<Instant>,
 }
 
@@ -210,6 +242,27 @@ impl ServingMetrics {
 
     pub fn inc(counter: &AtomicU64, by: u64) {
         counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    /// Per-class counter slot; out-of-range indices clamp to the
+    /// last slot so unconfigured classes still land somewhere.
+    pub fn class(&self, idx: usize) -> &ClassMetrics {
+        &self.classes[idx.min(MAX_CLASSES - 1)]
+    }
+
+    /// Install the configured class names (first call wins; the
+    /// names drive [`ServingMetrics::class_csv_rows`] and the
+    /// server's stats op).
+    pub fn set_class_names(&self, names: Vec<String>) {
+        let _ = self.class_names.set(names);
+    }
+
+    /// Configured class names (a lone "default" before any install).
+    pub fn class_names(&self) -> Vec<String> {
+        self.class_names
+            .get()
+            .cloned()
+            .unwrap_or_else(|| vec!["default".to_string()])
     }
 
     /// Merge a window-transfer delta (`PagedEngine::take_window_delta`).
@@ -352,6 +405,7 @@ impl ServingMetrics {
              retries={}\n\
              overload: shed={} expired={} sat_retries={} \
              shed_demotes={} shed_repromotes={} deferrals={}\n\
+             sched:    edf_ticks={}\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -391,6 +445,7 @@ impl ServingMetrics {
             self.shed_demotes.load(Ordering::Relaxed),
             self.shed_repromotes.load(Ordering::Relaxed),
             self.admission_deferrals.load(Ordering::Relaxed),
+            self.sched_edf_ticks.load(Ordering::Relaxed),
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -418,6 +473,30 @@ impl ServingMetrics {
             .map(|(_, render)| render(self))
             .collect::<Vec<_>>()
             .join(",")
+    }
+
+    /// Header matching [`ServingMetrics::class_csv_rows`] (both walk
+    /// [`CLASS_CSV_COLUMNS`], plus the leading `class` name column).
+    pub fn class_csv_header() -> String {
+        let mut cols = vec!["class"];
+        cols.extend(CLASS_CSV_COLUMNS.iter().map(|(n, _)| *n));
+        cols.join(",")
+    }
+
+    /// One CSV row per configured class, in configured order.
+    pub fn class_csv_rows(&self) -> Vec<String> {
+        self.class_names()
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let c = self.class(i);
+                let mut fields = vec![name.clone()];
+                fields.extend(
+                    CLASS_CSV_COLUMNS.iter().map(|(_, r)| r(c)),
+                );
+                fields.join(",")
+            })
+            .collect()
     }
 }
 
@@ -480,6 +559,33 @@ const CSV_COLUMNS: &[CsvCol] = &[
      |m| m.shed_repromotes.load(Ordering::Relaxed).to_string()),
     ("admission_deferrals",
      |m| m.admission_deferrals.load(Ordering::Relaxed).to_string()),
+    ("edf_ticks",
+     |m| m.sched_edf_ticks.load(Ordering::Relaxed).to_string()),
+];
+
+type ClassCsvCol = (&'static str, fn(&ClassMetrics) -> String);
+
+/// Per-class CSV table — the same lockstep idiom as [`CSV_COLUMNS`];
+/// `class_csv_header`/`class_csv_rows` prepend the class-name column.
+const CLASS_CSV_COLUMNS: &[ClassCsvCol] = &[
+    ("admitted",
+     |c| c.admitted.load(Ordering::Relaxed).to_string()),
+    ("finished",
+     |c| c.finished.load(Ordering::Relaxed).to_string()),
+    ("shed",
+     |c| c.shed.load(Ordering::Relaxed).to_string()),
+    ("expired",
+     |c| c.expired.load(Ordering::Relaxed).to_string()),
+    ("deferrals",
+     |c| c.deferrals.load(Ordering::Relaxed).to_string()),
+    ("ttft_p50_ms",
+     |c| format!("{:.3}", c.ttft.p50().as_secs_f64() * 1e3)),
+    ("ttft_p99_ms",
+     |c| format!("{:.3}", c.ttft.p99().as_secs_f64() * 1e3)),
+    ("total_p50_ms",
+     |c| format!("{:.3}", c.total.p50().as_secs_f64() * 1e3)),
+    ("total_p99_ms",
+     |c| format!("{:.3}", c.total.p99().as_secs_f64() * 1e3)),
 ];
 
 /// Scoped timer recording into a histogram on drop.
@@ -583,7 +689,7 @@ mod tests {
         assert_eq!(m.alloc_bytes.load(Ordering::Relaxed), 128);
         assert!(m.csv_row()
                  .ends_with("2048,0,0.000,0,0.000,0,0.0000,0,0,0,0,\
-                             0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -606,7 +712,7 @@ mod tests {
         assert!(s.contains("ranges=9"), "{s}");
         assert!(m.csv_row()
                  .ends_with("4096,0.000,0,0.000,0,0.0000,0,0,0,0,\
-                             0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -655,7 +761,7 @@ mod tests {
         assert!(s.contains("retries=1"), "{s}");
         assert!(m.csv_row()
                  .ends_with("0.750,0,0.750,2,0.0000,2,2,1,1,\
-                             0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -683,7 +789,7 @@ mod tests {
                      "transfer_retries", "requests_shed",
                      "requests_expired", "saturated_retries",
                      "shed_demotes", "shed_repromotes",
-                     "admission_deferrals"] {
+                     "admission_deferrals", "edf_ticks"] {
             assert!(header.contains(&name), "missing column {name}");
         }
     }
@@ -697,6 +803,7 @@ mod tests {
         m.shed_demotes.store(4, Ordering::Relaxed);
         m.shed_repromotes.store(1, Ordering::Relaxed);
         m.admission_deferrals.store(7, Ordering::Relaxed);
+        m.sched_edf_ticks.store(6, Ordering::Relaxed);
         let s = m.summary();
         assert!(s.contains("shed=3"), "{s}");
         assert!(s.contains("expired=2"), "{s}");
@@ -704,8 +811,54 @@ mod tests {
         assert!(s.contains("shed_demotes=4"), "{s}");
         assert!(s.contains("shed_repromotes=1"), "{s}");
         assert!(s.contains("deferrals=7"), "{s}");
-        assert!(m.csv_row().ends_with("3,2,5,4,1,7"),
+        assert!(s.contains("edf_ticks=6"), "{s}");
+        assert!(m.csv_row().ends_with("3,2,5,4,1,7,6"),
                 "{}", m.csv_row());
+    }
+
+    #[test]
+    fn class_csv_header_and_rows_stay_in_lockstep() {
+        let m = ServingMetrics::new();
+        m.set_class_names(vec!["prio".into(), "bulk".into()]);
+        ServingMetrics::inc(&m.class(0).admitted, 2);
+        ServingMetrics::inc(&m.class(1).shed, 3);
+        m.class(0).ttft.record(Duration::from_millis(4));
+        let header: Vec<&str> =
+            ServingMetrics::class_csv_header().split(',').collect();
+        assert_eq!(header.len(), CLASS_CSV_COLUMNS.len() + 1,
+                   "name column + one per table entry");
+        let rows = m.class_csv_rows();
+        assert_eq!(rows.len(), 2, "one row per configured class");
+        for row in &rows {
+            let fields: Vec<&str> = row.split(',').collect();
+            assert_eq!(header.len(), fields.len(),
+                       "class header/row diverged: {row}");
+            for (name, field) in header.iter().zip(&fields).skip(1) {
+                assert!(field.parse::<f64>().is_ok(),
+                        "column {name} renders non-numeric \
+                         '{field}'");
+            }
+        }
+        assert!(rows[0].starts_with("prio,2,"), "{}", rows[0]);
+        assert!(rows[1].starts_with("bulk,0,0,3,"), "{}", rows[1]);
+    }
+
+    #[test]
+    fn class_slots_clamp_and_names_install_once() {
+        let m = ServingMetrics::new();
+        ServingMetrics::inc(&m.class(MAX_CLASSES + 5).expired, 1);
+        assert_eq!(
+            m.class(MAX_CLASSES - 1).expired.load(Ordering::Relaxed),
+            1,
+            "out-of-range class must clamp into the last slot"
+        );
+        // before any install a lone default row still renders
+        assert_eq!(m.class_csv_rows().len(), 1);
+        assert!(m.class_csv_rows()[0].starts_with("default,"));
+        // first install wins; a later one is ignored
+        m.set_class_names(vec!["a".into()]);
+        m.set_class_names(vec!["b".into(), "c".into()]);
+        assert_eq!(m.class_names(), vec!["a".to_string()]);
     }
 
     #[test]

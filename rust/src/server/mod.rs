@@ -15,12 +15,20 @@
 //! Protocol (one JSON object per line):
 //!   → {"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
 //!      "temperature":0.7,"top_k":40,"top_p":0.9,"stop_at_eos":true,
-//!      "deadline_ms":5000,"ttft_budget_ms":1000}
+//!      "deadline_ms":5000,"ttft_budget_ms":1000,
+//!      "tenant":"prio","stream":true}
 //!   → {"op":"generate","text":"hello","max_new_tokens":8}
 //!   → {"op":"stats"}           → {"op":"shutdown"}
 //!   ← {"id":1,"tokens":[...],"text":"...","ttft_ms":..,"total_ms":..,
-//!      "preemptions":0,"cached_prompt_tokens":0}
+//!      "preemptions":0,"cached_prompt_tokens":0,"done":true}
 //!   ← {"error":"...","reason":"saturated","retryable":true}
+//!
+//! With `"stream": true` the reply becomes one
+//! `{"id":N,"stream":true,"tokens":[...]}` line per decoded token
+//! batch, closed by the usual terminal line (`"done":true` on
+//! success, a typed error line otherwise) — the terminal line never
+//! carries `"stream"`, so clients split on that key. `ttft_ms` is
+//! omitted when a request never produced a token (DESIGN.md §13).
 //!
 //! Overload hardening (DESIGN.md §12): connections beyond
 //! `scheduler.max_connections` get a typed `overloaded` error at
@@ -38,7 +46,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::SamplingConfig;
-use crate::coordinator::{Coordinator, Finished, Request};
+use crate::coordinator::{Coordinator, Finished, Request, StreamChunk};
 use crate::engine::Engine;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{parse, Value};
@@ -46,9 +54,21 @@ use crate::util::{EngineError, Error, Result, WrapErr};
 use crate::err;
 
 enum Incoming {
-    Generate { req: Request, reply: Sender<String> },
-    Stats { reply: Sender<String> },
+    Generate { req: Request, reply: Sender<Reply> },
+    Stats { reply: Sender<Reply> },
     Shutdown,
+}
+
+/// One reply line; `last` closes the request (the reader loop in
+/// `handle_conn` keeps receiving until it sees it, so streamed
+/// chunks and the terminal line share one channel).
+struct Reply {
+    line: String,
+    last: bool,
+}
+
+fn terminal(line: String) -> Reply {
+    Reply { line, last: true }
 }
 
 /// Decrements the live-connection count when a connection ends —
@@ -145,7 +165,7 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
                     stop: Arc<AtomicBool>, tok: Arc<Tokenizer>)
                     -> Result<()> {
     let mut coord = Coordinator::new(engine);
-    let mut replies: std::collections::HashMap<u64, Sender<String>> =
+    let mut replies: std::collections::HashMap<u64, Sender<Reply>> =
         std::collections::HashMap::new();
     loop {
         // drain the inbox
@@ -154,7 +174,8 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
                 Ok(Incoming::Generate { req, reply }) => {
                     if stop.load(Ordering::Relaxed) {
                         // draining: answer instead of submitting
-                        let _ = reply.send(error_json(&drain_error()));
+                        let _ = reply
+                            .send(terminal(error_json(&drain_error())));
                         continue;
                     }
                     let id = req.id;
@@ -163,12 +184,13 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
                             replies.insert(id, reply);
                         }
                         Err(e) => {
-                            let _ = reply.send(error_json(&e));
+                            let _ =
+                                reply.send(terminal(error_json(&e)));
                         }
                     }
                 }
                 Ok(Incoming::Stats { reply }) => {
-                    let _ = reply.send(stats_json(&coord));
+                    let _ = reply.send(terminal(stats_json(&coord)));
                 }
                 Ok(Incoming::Shutdown) => {
                     stop.store(true, Ordering::Relaxed);
@@ -189,9 +211,20 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
         if !coord.idle() {
             coord.tick()?;
         }
+        // streamed chunks first, then terminals — a request's last
+        // chunk lands before the line that closes its channel
+        for ch in coord.drain_stream_chunks() {
+            if let Some(reply) = replies.get(&ch.id) {
+                let _ = reply.send(Reply {
+                    line: stream_json(&ch),
+                    last: false,
+                });
+            }
+        }
         for fin in coord.drain_finished() {
             if let Some(reply) = replies.remove(&fin.id) {
-                let _ = reply.send(finished_json(&fin, &tok));
+                let _ =
+                    reply.send(terminal(finished_json(&fin, &tok)));
             }
         }
         if stop.load(Ordering::Relaxed) && coord.idle() {
@@ -199,7 +232,7 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
             // (submitted but its Finished got lost) must be answered,
             // or its handle_conn leaks a blocked recv()
             for (_, reply) in replies.drain() {
-                let _ = reply.send(error_json(&drain_error()));
+                let _ = reply.send(terminal(error_json(&drain_error())));
             }
             return Ok(());
         }
@@ -225,17 +258,33 @@ fn handle_conn(conn: TcpStream, tx: Sender<Incoming>,
         if line.trim().is_empty() {
             continue;
         }
-        let reply_line = match handle_line(&line, &tx, &next_id, &tok) {
-            Ok(Some(rx)) => match rx.recv() {
-                Ok(l) => l,
-                Err(_) => error_json(&drain_error()),
+        match handle_line(&line, &tx, &next_id, &tok) {
+            Ok(Some(rx)) => loop {
+                // keep relaying until the terminal line — one
+                // iteration for plain requests, one per chunk plus
+                // the terminal for streamed ones
+                let r = rx.recv().unwrap_or_else(|_| {
+                    terminal(error_json(&drain_error()))
+                });
+                writer.write_all(r.line.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                if r.last {
+                    break;
+                }
             },
-            Ok(None) => error_json(&Error::msg("shutting down")),
-            Err(e) => error_json(&e),
-        };
-        writer.write_all(reply_line.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            Ok(None) => {
+                let l = error_json(&Error::msg("shutting down"));
+                writer.write_all(l.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(e) => {
+                writer.write_all(error_json(&e).as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+        }
     }
     Ok(())
 }
@@ -280,6 +329,16 @@ fn handle_line(line: &str, tx: &Sender<Incoming>,
                     .opt("ttft_budget_ms")
                     .map(|x| x.as_u64())
                     .transpose()?,
+                tenant: v
+                    .opt("tenant")
+                    .or_else(|| v.opt("class"))
+                    .map(|x| x.as_str().map(str::to_string))
+                    .transpose()?,
+                stream: v
+                    .opt("stream")
+                    .map(|x| x.as_bool())
+                    .transpose()?
+                    .unwrap_or(false),
             };
             let (rtx, rrx) = channel();
             tx.send(Incoming::Generate { req, reply: rtx })
@@ -306,17 +365,34 @@ fn finished_json(fin: &Finished, tok: &Tokenizer) -> String {
     }
     let text = String::from_utf8_lossy(&tok.decode_lossy(&fin.tokens))
         .into_owned();
-    Value::obj(vec![
+    let mut fields = vec![
         ("id", Value::num(fin.id as f64)),
         ("tokens", Value::arr(
             fin.tokens.iter().map(|&t| Value::num(t as f64)))),
         ("text", Value::str(text)),
         ("prompt_len", Value::num(fin.prompt_len as f64)),
-        ("ttft_ms", Value::num(fin.ttft_s * 1e3)),
-        ("total_ms", Value::num(fin.total_s * 1e3)),
-        ("preemptions", Value::num(fin.preemptions as f64)),
-        ("cached_prompt_tokens",
-         Value::num(fin.cached_prompt_tokens as f64)),
+    ];
+    // a request that never produced a token has no TTFT — omitting
+    // the key (instead of a flattering 0.0) keeps client-side
+    // percentiles honest
+    if let Some(t) = fin.ttft_s {
+        fields.push(("ttft_ms", Value::num(t * 1e3)));
+    }
+    fields.push(("total_ms", Value::num(fin.total_s * 1e3)));
+    fields.push(("preemptions", Value::num(fin.preemptions as f64)));
+    fields.push(("cached_prompt_tokens",
+                 Value::num(fin.cached_prompt_tokens as f64)));
+    fields.push(("done", Value::Bool(true)));
+    Value::obj(fields).to_json()
+}
+
+/// Non-terminal streamed line: one decoded token batch for `id`.
+fn stream_json(ch: &StreamChunk) -> String {
+    Value::obj(vec![
+        ("id", Value::num(ch.id as f64)),
+        ("stream", Value::Bool(true)),
+        ("tokens", Value::arr(
+            ch.tokens.iter().map(|&t| Value::num(t as f64)))),
     ])
     .to_json()
 }
@@ -346,6 +422,21 @@ fn stats_json(coord: &Coordinator) -> String {
         ("shed_demotes", c(&m.shed_demotes)),
         ("shed_repromotes", c(&m.shed_repromotes)),
         ("admission_deferrals", c(&m.admission_deferrals)),
+        ("edf_ticks", c(&m.sched_edf_ticks)),
+        ("classes", Value::arr(
+            m.class_names().iter().enumerate().map(|(i, name)| {
+                let cm = m.class(i);
+                Value::obj(vec![
+                    ("class", Value::str(name.as_str())),
+                    ("admitted", c(&cm.admitted)),
+                    ("finished", c(&cm.finished)),
+                    ("shed", c(&cm.shed)),
+                    ("expired", c(&cm.expired)),
+                    ("deferrals", c(&cm.deferrals)),
+                    ("ttft_p99_ms", Value::num(
+                        cm.ttft.p99().as_secs_f64() * 1e3)),
+                ])
+            }))),
         ("summary", Value::str(m.summary())),
     ])
     .to_json()
@@ -396,6 +487,35 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         parse(&line)
+    }
+
+    /// Streamed request: collects every non-terminal
+    /// `"stream":true` chunk line, returning `(chunks, terminal)`
+    /// where the terminal is the `"done":true` result or a typed
+    /// error line.
+    pub fn request_stream(&mut self, body: &Value)
+                          -> Result<(Vec<Value>, Value)> {
+        self.writer.write_all(body.to_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut chunks = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(err!("connection closed mid-stream"));
+            }
+            let v = parse(&line)?;
+            let streamed = v
+                .opt("stream")
+                .map(|x| x.as_bool())
+                .transpose()?
+                .unwrap_or(false);
+            if streamed {
+                chunks.push(v);
+            } else {
+                return Ok((chunks, v));
+            }
+        }
     }
 
     pub fn generate_tokens(&mut self, prompt: &[u32], max_new: usize)
@@ -460,8 +580,8 @@ mod tests {
             id: 42,
             tokens: vec![],
             prompt_len: 3,
-            ttft_s: 0.0,
-            total_s: 0.0,
+            ttft_s: None,
+            total_s: 0.5,
             preemptions: 0,
             cached_prompt_tokens: 0,
             error: Some(Error::with_kind(EngineError::Expired,
@@ -473,6 +593,42 @@ mod tests {
         assert_eq!(v.get("reason").unwrap().as_str().unwrap(),
                    "expired");
         assert!(!v.get("retryable").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn finished_json_marks_done_and_skips_absent_ttft() {
+        let tok = Tokenizer::byte_level(300);
+        let mut fin = Finished {
+            id: 7,
+            tokens: vec![65, 66],
+            prompt_len: 2,
+            ttft_s: None,
+            total_s: 0.5,
+            preemptions: 0,
+            cached_prompt_tokens: 0,
+            error: None,
+        };
+        let v = parse(&finished_json(&fin, &tok)).unwrap();
+        assert!(v.get("done").unwrap().as_bool().unwrap());
+        assert!(v.opt("ttft_ms").is_none(),
+                "no first token → no ttft sample on the wire");
+        fin.ttft_s = Some(0.25);
+        let v = parse(&finished_json(&fin, &tok)).unwrap();
+        let ms = v.get("ttft_ms").unwrap().as_f64().unwrap();
+        assert!((ms - 250.0).abs() < 1e-6, "{ms}");
+        assert!(v.opt("stream").is_none(),
+                "terminal lines never carry the stream marker");
+    }
+
+    #[test]
+    fn stream_json_chunk_is_marked_and_carries_tokens() {
+        let ch = StreamChunk { id: 9, tokens: vec![1, 2, 3] };
+        let v = parse(&stream_json(&ch)).unwrap();
+        assert_eq!(v.get("id").unwrap().as_u64().unwrap(), 9);
+        assert!(v.get("stream").unwrap().as_bool().unwrap());
+        assert_eq!(
+            v.get("tokens").unwrap().as_array().unwrap().len(), 3);
+        assert!(v.opt("done").is_none());
     }
 
     #[test]

@@ -51,7 +51,8 @@ fn coordinator_serves_mixed_batch_to_completion() {
         assert!(f.error.is_none(), "request {} failed: {:?}", f.id,
                 f.error);
         assert_eq!(f.tokens.len(), 5);
-        assert!(f.ttft_s >= 0.0 && f.total_s >= f.ttft_s);
+        let ttft = f.ttft_s.expect("finished with tokens has a TTFT");
+        assert!(ttft >= 0.0 && f.total_s >= ttft);
     }
     let m = coord.metrics();
     assert_eq!(

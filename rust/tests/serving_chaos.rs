@@ -21,7 +21,8 @@
 //!   readers) leave the survivors' token streams byte-identical to a
 //!   fault-free replica; graceful drain answers every client instead
 //!   of leaving one blocked; over-cap connections get a typed
-//!   `overloaded` refusal.
+//!   `overloaded` refusal; streamed replies (PR 8) concatenate to the
+//!   exact greedy stream and still terminate through a drain.
 //!
 //! `PF_FAULT_SEED=S` narrows the seed sweep to one schedule (the CI
 //! serving-chaos matrix).
@@ -744,5 +745,115 @@ fn over_cap_connection_gets_typed_refusal() {
         .request(&Value::obj(vec![("op", Value::str("stats"))]))
         .unwrap();
     third.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+fn stream_body(p: &[u32], max_new: usize) -> Value {
+    Value::obj(vec![
+        ("op", Value::str("generate")),
+        ("prompt",
+         Value::arr(p.iter().map(|&t| Value::num(t as f64)))),
+        ("max_new_tokens", Value::num(max_new as f64)),
+        ("stream", Value::Bool(true)),
+    ])
+}
+
+/// Streaming conformance (DESIGN.md §13): the chunk lines concatenate
+/// to exactly the non-streamed greedy stream for the same prompt,
+/// every chunk is marked `"stream":true` and names the request, and
+/// the terminal line is typed — `done:true`, the full token list, a
+/// TTFT, and no `"stream"` key for clients that split on it.
+#[test]
+fn streamed_chunks_concatenate_to_the_greedy_stream() {
+    let Some(dir) = artifacts() else { return };
+    let (addr, handle) = spawn_server(cfg(&dir));
+    let p = prompt(42, 16);
+
+    let mut cl = Client::connect(&addr).unwrap();
+    let expected = cl.generate_tokens(&p, 12).unwrap();
+    assert_eq!(expected.len(), 12);
+
+    let (chunks, term) =
+        cl.request_stream(&stream_body(&p, 12)).unwrap();
+    assert!(term.opt("error").is_none(), "{}", term.to_json());
+    assert!(!chunks.is_empty(), "streamed run produced no chunks");
+    let id = term.get("id").unwrap().as_u64().unwrap();
+    let mut streamed: Vec<u32> = Vec::new();
+    for ch in &chunks {
+        assert!(ch.get("stream").unwrap().as_bool().unwrap());
+        assert_eq!(ch.get("id").unwrap().as_u64().unwrap(), id,
+                   "chunk names a different request");
+        assert!(ch.opt("done").is_none(),
+                "chunks must not carry the terminal marker");
+        for t in ch.get("tokens").unwrap().as_array().unwrap() {
+            streamed.push(t.as_u64().unwrap() as u32);
+        }
+    }
+    assert_eq!(streamed, expected,
+               "chunk concatenation diverged from the greedy stream");
+    assert!(term.get("done").unwrap().as_bool().unwrap());
+    assert!(term.opt("stream").is_none(),
+            "terminal line must not be marked as a chunk");
+    let full: Vec<u32> = term
+        .get("tokens").unwrap().as_array().unwrap()
+        .iter()
+        .map(|t| t.as_u64().unwrap() as u32)
+        .collect();
+    assert_eq!(full, expected,
+               "terminal token list diverged from the stream");
+    assert!(term.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+
+    cl.shutdown().unwrap();
+    handle.join().unwrap();
+}
+
+/// Graceful drain composes with streaming: an in-flight streamed
+/// request keeps its chunks flowing through the drain and ends with a
+/// real `done:true` terminal carrying every token, while a streamed
+/// submit after shutdown gets a typed terminal error line and zero
+/// chunks — no streaming client is ever left blocked mid-stream.
+#[test]
+fn graceful_drain_answers_a_mid_stream_client() {
+    let Some(dir) = artifacts() else { return };
+    let (addr, handle) = spawn_server(cfg(&dir));
+
+    let in_flight = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut cl = Client::connect(&addr).unwrap();
+            cl.request_stream(&stream_body(&prompt(9, 20), 60))
+                .unwrap()
+        })
+    };
+    // late client connects BEFORE shutdown (reader thread exists)
+    // but submits after; the in-flight stream is admitted well
+    // before the stop flag lands
+    let mut late = Client::connect(&addr).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(150));
+
+    let mut sd = Client::connect(&addr).unwrap();
+    sd.shutdown().unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let (late_chunks, late_term) = late
+        .request_stream(&stream_body(&prompt(10, 8), 4))
+        .unwrap();
+    assert!(late_chunks.is_empty(),
+            "post-shutdown stream must not produce tokens");
+    assert!(late_term.opt("error").is_some(),
+            "post-shutdown submit must end typed: {}",
+            late_term.to_json());
+
+    let (chunks, term) = in_flight.join().unwrap();
+    assert!(term.get("done").unwrap().as_bool().unwrap(),
+            "drain must let the in-flight stream finish: {}",
+            term.to_json());
+    let n: usize = chunks
+        .iter()
+        .map(|c| {
+            c.get("tokens").unwrap().as_array().unwrap().len()
+        })
+        .sum();
+    assert_eq!(n, 60, "in-flight stream truncated by drain");
     handle.join().unwrap();
 }

@@ -1,0 +1,203 @@
+//! Seeded property sweeps over the per-class scheduling policy
+//! (coordinator::tenant, DESIGN.md §13) — the in-tree PRNG stands in
+//! for proptest (offline container, no new crates):
+//!
+//!   * weighted DRR is starvation-free: under sustained backlog every
+//!     class with weight > 0 pops again within one full weight cycle;
+//!   * DRR shares service proportionally to configured weights;
+//!   * EDF never admits a later-deadline item ahead of an earlier one
+//!     drained within the same tick, and breaks ties stably;
+//!   * shed victims always come from the cheapest backlogged class,
+//!     newest first;
+//!   * queue bookkeeping (lengths, drains) stays consistent under
+//!     randomized interleavings of push/pop/shed.
+
+use paged_flex::coordinator::{ClassQueues, Popped};
+use paged_flex::trace::Rng;
+
+/// Random class count (2..=4) and weights (1..=7) from `rng`.
+fn random_weights(rng: &mut Rng) -> Vec<u32> {
+    let n = 2 + rng.below(3) as usize;
+    (0..n).map(|_| 1 + rng.below(7) as u32).collect()
+}
+
+#[test]
+fn drr_is_starvation_free_under_sustained_backlog() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::seeded(0xFA1A_0000 + seed);
+        let weights = random_weights(&mut rng);
+        let cycle: u64 = weights.iter().map(|&w| w as u64).sum();
+        let mut q: ClassQueues<u64> = ClassQueues::new(&weights);
+        // keep every queue backlogged the whole time
+        for c in 0..weights.len() {
+            for i in 0..64u64 {
+                q.push_back(c, i);
+            }
+        }
+        let mut last_seen = vec![0u64; weights.len()];
+        for pop in 0..(4 * cycle) {
+            let Popped::Item { class, .. } = q.pop_drr(|_| true)
+            else {
+                panic!("seed {seed}: backlogged queues went empty");
+            };
+            q.push_back(class, pop); // keep it backlogged
+            let gap = pop - last_seen[class];
+            assert!(gap <= cycle,
+                    "seed {seed}: class {class} (weights \
+                     {weights:?}) waited {gap} pops, cycle {cycle}");
+            last_seen[class] = pop;
+        }
+    }
+}
+
+#[test]
+fn drr_service_share_tracks_weights_exactly() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::seeded(0xFA1A_1000 + seed);
+        let weights = random_weights(&mut rng);
+        let cycle: usize =
+            weights.iter().map(|&w| w as usize).sum();
+        let mut q: ClassQueues<usize> = ClassQueues::new(&weights);
+        for c in 0..weights.len() {
+            for i in 0..512 {
+                q.push_back(c, i);
+            }
+        }
+        // whole cycles over fully-backlogged queues give each class
+        // exactly `weight` pops per cycle — no drift, no bias
+        let rounds = 10;
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..(rounds * cycle) {
+            match q.pop_drr(|_| true) {
+                Popped::Item { class, .. } => counts[class] += 1,
+                other => panic!("seed {seed}: {other:?}"),
+            }
+        }
+        for (c, &w) in weights.iter().enumerate() {
+            assert_eq!(counts[c], rounds * w as usize,
+                       "seed {seed}: class {c} of {weights:?} got \
+                        {counts:?}");
+        }
+    }
+}
+
+#[test]
+fn edf_drains_in_deadline_order_within_a_tick() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::seeded(0xEDF_2000 + seed);
+        let weights = random_weights(&mut rng);
+        let mut q: ClassQueues<(u64, u64)> =
+            ClassQueues::new(&weights);
+        let n = 16 + rng.below(48);
+        for i in 0..n {
+            let class = rng.below(weights.len() as u64) as usize;
+            let deadline = rng.below(40); // dense → many ties
+            q.push_back(class, (deadline, i));
+        }
+        // one "tick": drain everything by EDF; the admitted
+        // deadline sequence must never decrease (no inversion)
+        let mut prev: Option<(u64, u64)> = None;
+        while let Popped::Item { item, .. } =
+            q.pop_edf(|_| true, |&(d, _)| d)
+        {
+            if let Some((pd, pi)) = prev {
+                assert!(item.0 >= pd,
+                        "seed {seed}: deadline {} admitted after \
+                         {pd} (items {pi} then {})", item.0, item.1);
+            }
+            prev = Some(item);
+        }
+        assert!(q.is_empty());
+    }
+}
+
+#[test]
+fn edf_tie_break_is_stable_within_a_class() {
+    // equal deadlines in one class must drain in arrival order
+    let mut q: ClassQueues<(u64, u64)> = ClassQueues::new(&[1, 1]);
+    for i in 0..8u64 {
+        q.push_back(0, (5, i));
+    }
+    let mut seen = Vec::new();
+    while let Popped::Item { item, .. } =
+        q.pop_edf(|_| true, |&(d, _)| d)
+    {
+        seen.push(item.1);
+    }
+    assert_eq!(seen, (0..8).collect::<Vec<u64>>(),
+               "equal-deadline items must keep arrival order");
+}
+
+#[test]
+fn shed_victims_are_newest_of_the_cheapest_backlogged_class() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::seeded(0x5EED_3000 + seed);
+        let weights = random_weights(&mut rng);
+        let mut q: ClassQueues<u64> = ClassQueues::new(&weights);
+        let mut tails: Vec<Vec<u64>> =
+            vec![Vec::new(); weights.len()];
+        let n = 8 + rng.below(40);
+        for i in 0..n {
+            let class = rng.below(weights.len() as u64) as usize;
+            q.push_back(class, i);
+            tails[class].push(i);
+        }
+        while let Some((class, item)) = q.pop_shed_newest() {
+            let w = weights[class];
+            for (c, t) in tails.iter().enumerate() {
+                if !t.is_empty() {
+                    assert!(weights[c] >= w,
+                            "seed {seed}: shed from weight-{w} \
+                             class {class} while cheaper class {c} \
+                             (weight {}) was backlogged",
+                            weights[c]);
+                }
+            }
+            let expect = tails[class].pop().unwrap();
+            assert_eq!(item, expect,
+                       "seed {seed}: victim must be the newest of \
+                        class {class}");
+        }
+        assert!(tails.iter().all(|t| t.is_empty()));
+    }
+}
+
+#[test]
+fn bookkeeping_survives_randomized_interleavings() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::seeded(0xB00C_4000 + seed);
+        let weights = random_weights(&mut rng);
+        let mut q: ClassQueues<u64> = ClassQueues::new(&weights);
+        let mut alive = 0usize;
+        for op in 0..400u64 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let c = rng.below(weights.len() as u64) as usize;
+                    q.push_back(c, op);
+                    alive += 1;
+                }
+                2 => {
+                    if let Popped::Item { .. } = q.pop_drr(|_| true) {
+                        alive -= 1;
+                    }
+                }
+                _ => {
+                    if q.pop_shed_newest().is_some() {
+                        alive -= 1;
+                    }
+                }
+            }
+            assert_eq!(q.len(), alive, "seed {seed} op {op}");
+            let by_class: usize = (0..q.n_classes())
+                .map(|c| q.class_len(c))
+                .sum();
+            assert_eq!(by_class, alive,
+                       "seed {seed} op {op}: per-class lengths \
+                        disagree with the total");
+        }
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), alive,
+                   "drain_all must return every queued item");
+        assert!(q.is_empty());
+    }
+}
