@@ -1,0 +1,430 @@
+//! Integrity scrub gate — cost and correctness of the §14 KV
+//! integrity protocol (page checksums, budgeted scrub, repair
+//! ladder) over the host-side kvpage + transfer-pipeline layers.
+//! Host-only and artifact-free like benches/pipeline_overlap.rs:
+//! execute time comes from the L4 roofline model, transfer time from
+//! the modeled interconnect, and only the scrub pass itself is
+//! measured wall-clock — the one term the gate is about.
+//!
+//! Three runs, two CI gates (exit nonzero on failure):
+//!
+//!   1. overhead: a steady-state decode with the default scrub
+//!      budget (DEFAULT_SCRUB_BUDGET pages/step) must cost ≤ 5% of
+//!      the mean decode-step time of the identical budget-0 run;
+//!   2. storm: a `seeded_with_corrupt` schedule hammering all three
+//!      §14 stations (host page, staged snapshot, device window)
+//!      must end with ZERO wrong served pages — every execute
+//!      boundary compares the FRONT device contents against a
+//!      fault-free reference pool after scrub/audit repair — and
+//!      with `pages_corrupted == pages_repaired`;
+//!   3. control: both zero-fault runs must report
+//!      `pages_corrupted == pages_repaired == 0` (the repair path
+//!      is corruption-only).
+//!
+//! The storm run raises the budget to the full working set (a
+//! correctness run, DESIGN.md §14); the overhead run keeps the
+//! serving default so the gate prices what production pays.
+
+include!("common.rs");
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use paged_flex::engine::paged::DEFAULT_SCRUB_BUDGET;
+use paged_flex::engine::pipeline::TransferPipeline;
+use paged_flex::harness::print_table;
+use paged_flex::kvpage::{
+    GrowthPolicy, HostPool, PageAllocator, PageManager, PoolGeometry,
+    ResidentWindow,
+};
+use paged_flex::runtime::{CorruptTarget, FaultInjector, FaultKind,
+                          FaultPlan};
+use paged_flex::sim::l4_decode_step_time;
+
+const N_LAYERS: usize = 4;
+const PAGE_SIZE: usize = 16;
+const N_KV_HEADS: usize = 4;
+const D_HEAD: usize = 16;
+const SEQ_LEN: usize = 256;
+/// Modeled host-memcpy bandwidth for the gather term (bytes/sec).
+const HOST_GATHER_BYTES_PER_SEC: f64 = 24e9;
+
+struct Rig {
+    mgr: PageManager,
+    k: HostPool,
+    v: HostPool,
+    /// Fault-free reference pools: written identically, never
+    /// corrupted. The repair source (standing in for span
+    /// re-prefill) and the end-to-end served-bytes oracle.
+    rk: HostPool,
+    rv: HostPool,
+    win: ResidentWindow,
+    window_pages: usize,
+}
+
+fn rig(steps: usize) -> Rig {
+    let max_blocks = (SEQ_LEN + steps).div_ceil(PAGE_SIZE) + 2;
+    let n_pages = max_blocks + 8;
+    let geo = PoolGeometry {
+        n_layers: N_LAYERS,
+        n_pages,
+        page_size: PAGE_SIZE,
+        n_kv_heads: N_KV_HEADS,
+        d_head: D_HEAD,
+    };
+    let alloc = Arc::new(PageAllocator::new(
+        n_pages as u32,
+        PAGE_SIZE,
+        (geo.token_elems() * 8) as u64,
+        GrowthPolicy::Exact,
+    ));
+    let mut mgr = PageManager::new(alloc, max_blocks);
+    let mut k = HostPool::zeros(geo);
+    let mut v = HostPool::zeros(geo);
+    let mut rk = HostPool::zeros(geo);
+    let mut rv = HostPool::zeros(geo);
+    let prompt: Vec<u32> = (0..SEQ_LEN as u32).collect();
+    mgr.reserve(1, &prompt).unwrap();
+    {
+        let table = mgr.table(1).unwrap();
+        for pos in 0..SEQ_LEN {
+            let (page, off) =
+                (table.pages()[pos / PAGE_SIZE], pos % PAGE_SIZE);
+            for layer in 0..N_LAYERS {
+                k.token_row_mut(layer, page, off).fill(pos as f32);
+                v.token_row_mut(layer, page, off).fill(-(pos as f32));
+                rk.token_row_mut(layer, page, off).fill(pos as f32);
+                rv.token_row_mut(layer, page, off)
+                    .fill(-(pos as f32));
+            }
+        }
+    }
+    mgr.note_assigned(1, SEQ_LEN).unwrap();
+    // stamp every written page before the first step — the engine's
+    // prefill flush boundary does the same
+    k.seal_stale();
+    v.seal_stale();
+    Rig {
+        mgr,
+        k,
+        v,
+        rk,
+        rv,
+        win: ResidentWindow::new(geo),
+        window_pages: max_blocks,
+    }
+}
+
+fn gather_ns(bytes: u64) -> f64 {
+    bytes as f64 * 1e9 / HOST_GATHER_BYTES_PER_SEC
+}
+
+#[derive(Default)]
+struct RunOut {
+    /// Mean modeled decode-step ns WITHOUT the scrub term.
+    base_step_ns: f64,
+    /// Mean measured scrub wall ns per step.
+    scrub_ns: f64,
+    pages_corrupted: u64,
+    pages_scrubbed: u64,
+    pages_repaired: u64,
+    staged_corrupt: u64,
+    /// Corruptions that actually landed (host + device stations).
+    landed: u64,
+    /// Execute-boundary pages whose served bytes diverged from the
+    /// fault-free reference — the zero-wrong-tokens gate.
+    wrong_pages: u64,
+}
+
+/// One steady-state single-sequence decode run. `budget` pages are
+/// verified per step (usize::MAX = the full working set); damage is
+/// repaired from the reference pools; the FRONT device contents are
+/// compared against the reference at every execute boundary.
+fn run(steps: usize, budget: usize, plan: FaultPlan) -> RunOut {
+    let mut r = rig(steps);
+    let mut pipe = TransferPipeline::sim(true);
+    let mut inj = FaultInjector::new(plan);
+    let exec_ns = l4_decode_step_time(SEQ_LEN, 1) * 1e9;
+    let pe = r.k.geometry().page_elems();
+
+    let mut out = RunOut::default();
+    let mut salt = 0u64;
+    let mut hand = 0usize;
+    let mut total_ns = 0.0f64;
+    let mut scrub_total = 0u128;
+    let mut counted = 0usize;
+    for step in 0..steps {
+        for kind in inj.begin_step() {
+            salt += 1;
+            match kind {
+                FaultKind::Corrupt(CorruptTarget::HostPage) => {
+                    let pages =
+                        r.mgr.table(1).unwrap().pages().to_vec();
+                    if pages.len() < 2 {
+                        continue;
+                    }
+                    // completed pages only: tail bytes belong to
+                    // the write path, not the scrub (§14)
+                    let pg =
+                        pages[salt as usize % (pages.len() - 1)];
+                    if salt & 1 == 0 {
+                        r.k.corrupt_page_silently(pg, salt);
+                    } else {
+                        r.v.corrupt_page_silently(pg, salt);
+                    }
+                    out.landed += 1;
+                }
+                FaultKind::Corrupt(CorruptTarget::StagedSnapshot) =>
+                {
+                    pipe.corrupt_next_snapshot_for_test();
+                }
+                FaultKind::Corrupt(CorruptTarget::DeviceWindow) => {
+                    if pipe.corrupt_front_for_test(salt) {
+                        out.landed += 1;
+                    }
+                }
+                // the legacy kinds have their own gate
+                // (benches/copy_stream_overlap.rs, chaos suite)
+                _ => {}
+            }
+        }
+
+        r.mgr.prepare_append(1, 1).unwrap();
+        let len = r.mgr.seq_len(1).unwrap();
+
+        // budgeted host scrub BEFORE the gather can copy damage out
+        let t = Instant::now();
+        let pages = r.mgr.table(1).unwrap().pages().to_vec();
+        let take = budget.min(pages.len());
+        for i in 0..take {
+            let pg = pages[(hand + i) % pages.len()];
+            out.pages_scrubbed += 2;
+            let k_ok = r.k.verify_page(pg);
+            let v_ok = r.v.verify_page(pg);
+            if !k_ok {
+                out.pages_corrupted += 1;
+                let flat = r.rk.extract_page(pg);
+                r.k.repair_page(pg, &flat);
+                out.pages_repaired += 1;
+            }
+            if !v_ok {
+                out.pages_corrupted += 1;
+                let flat = r.rv.extract_page(pg);
+                r.v.repair_page(pg, &flat);
+                out.pages_repaired += 1;
+            }
+        }
+        if !pages.is_empty() {
+            hand = (hand + take) % pages.len();
+        }
+        let scrub_elapsed = t.elapsed().as_nanos();
+
+        let gather_before = r.win.stats().bytes_moved;
+        pipe.begin_step(&mut r.win);
+        r.win.begin_step(r.window_pages);
+        let mapped: Vec<u32> = {
+            let table = r.mgr.table(1).unwrap();
+            let covering = table.blocks_covering(len + 1).to_vec();
+            for &p in &covering {
+                r.win.map_page(&mut r.k, &mut r.v, p).unwrap();
+            }
+            covering
+        };
+        r.win.flush_pending(&r.k, &r.v);
+        pipe.pre_execute(&mut r.win);
+
+        // execute-boundary device audit: FRONT vs live window for
+        // this step's pages; divergence re-uploads from host (§14)
+        let mut bad = 0u64;
+        if let (Some(fk), Some(fv)) =
+            (pipe.front().k.contents(), pipe.front().v.contents())
+        {
+            for &pg in &mapped {
+                let Some(slot) = r.win.slot(pg) else { continue };
+                for layer in 0..N_LAYERS {
+                    let off = (layer * r.window_pages
+                               + slot as usize) * pe;
+                    if fk[off..off + pe]
+                        != *r.win.k_page_slice(layer, slot)
+                        || fv[off..off + pe]
+                            != *r.win.v_page_slice(layer, slot)
+                    {
+                        bad += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        out.pages_scrubbed += mapped.len() as u64;
+        if bad > 0 {
+            out.pages_corrupted += bad;
+            pipe.resync_front(&r.win);
+            out.pages_repaired += bad;
+        }
+
+        // the zero-wrong-tokens oracle: what the execute would read
+        // must be byte-identical to the fault-free reference
+        if let (Some(fk), Some(fv)) =
+            (pipe.front().k.contents(), pipe.front().v.contents())
+        {
+            for &pg in &mapped {
+                let Some(slot) = r.win.slot(pg) else { continue };
+                for layer in 0..N_LAYERS {
+                    let off = (layer * r.window_pages
+                               + slot as usize) * pe;
+                    let src = r.k.geometry().offset(layer, pg, 0);
+                    if fk[off..off + pe]
+                        != r.rk.as_slice()[src..src + pe]
+                        || fv[off..off + pe]
+                            != r.rv.as_slice()[src..src + pe]
+                    {
+                        out.wrong_pages += 1;
+                        break;
+                    }
+                }
+            }
+        }
+
+        pipe.note_execute(exec_ns as u64);
+        let s = pipe.stats();
+        let g = gather_ns(r.win.stats().bytes_moved - gather_before);
+        let step_ns = (s.last_tail_ns + s.last_sync_ns) as f64
+            + g
+            + exec_ns.max(s.last_staged_ns as f64);
+
+        // the decode kernel produced one new KV row (both replicas)
+        let pos = len;
+        let table = r.mgr.table(1).unwrap();
+        let (page, off) =
+            (table.pages()[pos / PAGE_SIZE], pos % PAGE_SIZE);
+        for layer in 0..N_LAYERS {
+            r.k.token_row_mut(layer, page, off).fill(step as f32);
+            r.v.token_row_mut(layer, page, off).fill(step as f32);
+            r.rk.token_row_mut(layer, page, off).fill(step as f32);
+            r.rv.token_row_mut(layer, page, off).fill(step as f32);
+            r.win.write_row(&mut r.k, &mut r.v, layer, page, off);
+        }
+        r.mgr.note_assigned(1, 1).unwrap();
+        r.win.flush_rows(&r.k, &r.v);
+
+        if step > 0 {
+            // step 0 is the cold full gather + refill
+            total_ns += step_ns;
+            scrub_total += scrub_elapsed;
+            counted += 1;
+        }
+    }
+    out.staged_corrupt = pipe.stats().staged_corrupt;
+    out.base_step_ns = total_ns / counted as f64;
+    out.scrub_ns = scrub_total as f64 / counted as f64;
+    out
+}
+
+fn main() {
+    let steps = if quick() { 80 } else { 240 };
+    let storm_seeds: &[u64] = if quick() { &[11] } else { &[11, 23] };
+    let mut failures: Vec<String> = Vec::new();
+    let mut rows = Vec::new();
+
+    // 1 + 3. overhead gate at the serving default, budget-0
+    // baseline, both as zero-fault controls
+    let with = run(steps, DEFAULT_SCRUB_BUDGET, FaultPlan::none());
+    let without = run(steps, 0, FaultPlan::none());
+    let overhead_pct = 100.0 * with.scrub_ns / without.base_step_ns;
+    for (name, r) in [("budget-8", &with), ("budget-0", &without)] {
+        if r.pages_corrupted != 0 || r.pages_repaired != 0 {
+            failures.push(format!(
+                "{name}: zero-fault run reported corrupted={} \
+                 repaired={}", r.pages_corrupted, r.pages_repaired));
+        }
+        if r.staged_corrupt != 0 {
+            failures.push(format!(
+                "{name}: zero-fault run discarded {} snapshots",
+                r.staged_corrupt));
+        }
+        if r.wrong_pages != 0 {
+            failures.push(format!(
+                "{name}: clean run served {} wrong pages",
+                r.wrong_pages));
+        }
+        rows.push(vec![
+            name.to_string(),
+            "-".to_string(),
+            f(r.base_step_ns / 1e3, 1),
+            f(r.scrub_ns / 1e3, 2),
+            r.pages_scrubbed.to_string(),
+            r.pages_corrupted.to_string(),
+            r.pages_repaired.to_string(),
+            r.staged_corrupt.to_string(),
+            r.wrong_pages.to_string(),
+        ]);
+    }
+    if overhead_pct > 5.0 || !overhead_pct.is_finite() {
+        failures.push(format!(
+            "scrub overhead {overhead_pct:.2}% of the mean decode \
+             step exceeds the 5% budget ({:.1}µs scrub vs {:.1}µs \
+             step)", with.scrub_ns / 1e3,
+            without.base_step_ns / 1e3));
+    }
+    if with.pages_scrubbed == 0 {
+        failures.push("budget-8 run never verified a page".into());
+    }
+
+    // 2. corruption storm at correctness budget (full working set)
+    for &seed in storm_seeds {
+        let plan = FaultPlan::seeded_with_corrupt(
+            seed, steps as u64 - steps as u64 / 4, 24);
+        let st = run(steps, usize::MAX, plan);
+        if st.wrong_pages != 0 {
+            failures.push(format!(
+                "storm seed {seed}: {} execute boundaries served \
+                 bytes diverging from the fault-free reference",
+                st.wrong_pages));
+        }
+        if st.pages_corrupted != st.pages_repaired {
+            failures.push(format!(
+                "storm seed {seed}: corrupted={} != repaired={}",
+                st.pages_corrupted, st.pages_repaired));
+        }
+        if st.landed + st.staged_corrupt == 0 {
+            failures.push(format!(
+                "storm seed {seed}: no corruption landed — the \
+                 schedule exercised nothing"));
+        }
+        rows.push(vec![
+            "storm".to_string(),
+            seed.to_string(),
+            f(st.base_step_ns / 1e3, 1),
+            f(st.scrub_ns / 1e3, 2),
+            st.pages_scrubbed.to_string(),
+            st.pages_corrupted.to_string(),
+            st.pages_repaired.to_string(),
+            st.staged_corrupt.to_string(),
+            st.wrong_pages.to_string(),
+        ]);
+    }
+
+    print_table(
+        &format!(
+            "integrity scrub gate: {steps}-step decode @seq={SEQ_LEN}, \
+             default budget {DEFAULT_SCRUB_BUDGET} pages/step, storm \
+             = cseed plans over all three §14 stations"),
+        &["run", "seed", "step_µs", "scrub_µs", "scrubbed",
+          "corrupted", "repaired", "snap_discards", "wrong_pages"],
+        &rows,
+    );
+    println!("\nscrub overhead: {:.2}% of mean decode step (budget \
+              {DEFAULT_SCRUB_BUDGET}, bar 5%)", overhead_pct);
+
+    if failures.is_empty() {
+        println!("\nintegrity gate: scrub within budget, storm \
+                  repaired to zero wrong pages, zero-fault controls \
+                  silent: PASS");
+    } else {
+        println!("\nintegrity gate: FAIL");
+        for fl in &failures {
+            println!("  - {fl}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -392,6 +392,11 @@ pub struct EngineConfig {
     /// `"kind@step,..."` list (`--fault-plan`; `PF_FAULT_SEED` is the
     /// env shorthand). `None` (default) injects nothing.
     pub fault_plan: Option<String>,
+    /// Fence-watchdog timeout in ms (DESIGN.md §11): a staged copy
+    /// whose fence is still unsignaled after this long is treated as
+    /// a transfer fault and absorbed by the degrade ladder. The old
+    /// hardcoded 2 s default; `--fence-timeout-ms` overrides.
+    pub fence_timeout_ms: u64,
     pub scheduler: SchedulerConfig,
     /// Default sampling params (overridable per request).
     pub sampling: SamplingConfig,
@@ -421,6 +426,7 @@ impl Default for EngineConfig {
             copy_threads: default_copy_threads(),
             copy_engine: CopyEngineCfg::default(),
             fault_plan: None,
+            fence_timeout_ms: 2000,
             scheduler: SchedulerConfig::default(),
             sampling: SamplingConfig::default(),
         }
@@ -444,6 +450,8 @@ impl EngineConfig {
             ("pipeline", Value::Bool(self.pipeline)),
             ("copy_threads", Value::num(self.copy_threads as f64)),
             ("copy_engine", Value::str(self.copy_engine.as_str())),
+            ("fence_timeout_ms",
+             Value::num(self.fence_timeout_ms as f64)),
             ("scheduler", Value::obj(vec![
                 ("max_batch_size", Value::num(s.max_batch_size as f64)),
                 ("max_running_seqs", Value::num(s.max_running_seqs as f64)),
@@ -602,6 +610,10 @@ impl EngineConfig {
                 .map(|x| x.as_str()).transpose()?
                 .map(str::to_string)
                 .or(d.fault_plan),
+            fence_timeout_ms: v.opt("fence_timeout_ms")
+                .map(|x| x.as_u64()).transpose()?
+                .unwrap_or(d.fence_timeout_ms)
+                .max(1),
             scheduler: sched,
             sampling: match v.opt("sampling") {
                 Some(s) => SamplingConfig::from_json(s)?,
@@ -795,6 +807,23 @@ mod tests {
             &parse(&cfg.to_json().to_json_pretty()).unwrap(),
         ).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn fence_timeout_defaults_2s_and_roundtrips() {
+        assert_eq!(EngineConfig::default().fence_timeout_ms, 2000,
+                   "the promoted hardcoded watchdog default");
+        let v = parse(r#"{"fence_timeout_ms": 250}"#).unwrap();
+        let cfg = EngineConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.fence_timeout_ms, 250);
+        let back = EngineConfig::from_json(
+            &parse(&cfg.to_json().to_json_pretty()).unwrap(),
+        ).unwrap();
+        assert_eq!(back, cfg);
+        // 0 would fire the watchdog on every staged copy — clamp
+        let v = parse(r#"{"fence_timeout_ms": 0}"#).unwrap();
+        assert_eq!(EngineConfig::from_json(&v).unwrap()
+                       .fence_timeout_ms, 1);
     }
 
     #[test]

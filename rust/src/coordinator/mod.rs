@@ -747,7 +747,67 @@ impl Coordinator {
         }
         ServingMetrics::inc(&self.engine.metrics.tokens_prefilled,
                             prefilled_tokens);
+        self.handle_corruption();
         Ok(())
+    }
+
+    /// Drain integrity victims from the engine (DESIGN.md §14): each
+    /// sequence whose host pages failed verification had this step's
+    /// logits row withheld; preempt it (pages freed, tokens kept — the
+    /// quarantined page retires, and re-admission re-prefills
+    /// prompt + generated, rebuilding the damaged span byte-identical
+    /// from scratch) and requeue with bounded backoff. Past
+    /// `max_sat_retries` rebuilds it is retired with the typed
+    /// retryable [`EngineError::Corrupted`] instead — composing with
+    /// the PR 7 retry ladder, never aborting the run.
+    fn handle_corruption(&mut self) {
+        let pe = self.engine.paged.as_mut().unwrap();
+        let victims = pe.take_corrupt_seqs();
+        let delta = pe.take_integrity_delta();
+        self.engine.metrics.note_integrity(&delta);
+        for seq in victims {
+            self.corrupt_requeue(seq);
+        }
+    }
+
+    /// The corruption rung of the requeue ladder — the shape of
+    /// [`saturate_requeue`](Self::saturate_requeue), sharing its
+    /// bounded retry budget, but counting the victim as a preemption
+    /// (its pages really moved) and retiring with `Corrupted`.
+    fn corrupt_requeue(&mut self, seq: SeqId) {
+        let max_retries = self.engine.cfg.scheduler.max_sat_retries;
+        let Some(i) =
+            self.running.iter().position(|l| l.seq == seq)
+        else {
+            // already retired this tick (expired/shed); just free
+            let pe = self.engine.paged.as_mut().unwrap();
+            let _ = pe.release(seq);
+            return;
+        };
+        if self.running[i].retries >= max_retries {
+            self.retire_running_with(seq, corrupted_error(seq));
+            ServingMetrics::inc(
+                &self.engine.metrics.requests_corrupt_retired, 1);
+            return;
+        }
+        let live = self.running.swap_remove(i);
+        let pe = self.engine.paged.as_mut().unwrap();
+        let _ = pe.preempt(live.seq);
+        let retries = live.retries + 1;
+        ServingMetrics::inc(
+            &self.engine.metrics.requests_preempted, 1);
+        self.preempt_stash.push_back(Queued {
+            req: live.req,
+            generated: live.generated,
+            preemptions: live.preemptions + 1,
+            retries,
+            not_before: self.tick_no + backoff_ticks(retries),
+            submitted: live.submitted,
+            first_token: live.first_token,
+            class: live.class,
+            deadline: live.deadline,
+            ttft_deadline: live.ttft_deadline,
+        });
     }
 
     fn decode_step_paged(&mut self, ids: &[SeqId]) -> Result<()> {
@@ -869,6 +929,7 @@ impl Coordinator {
         for (seq, logits) in results {
             self.live_mut(seq)?.pending_logits = Some(logits);
         }
+        self.handle_corruption();
         Ok(())
     }
 
@@ -1276,6 +1337,19 @@ fn saturated_error(seq: SeqId, free_pages: usize) -> Error {
     ))
 }
 
+/// The typed per-request error for a corrupted span that outlived its
+/// rebuild budget (pure so the policy tests can pin kind + message).
+/// Retryable: no wrong tokens were emitted — the stream was cut
+/// before the damaged step's output, and an identical resubmission
+/// recomputes the span from scratch (DESIGN.md §14).
+fn corrupted_error(seq: SeqId) -> Error {
+    Error::with_kind(
+        EngineError::Corrupted,
+        format!("seq {seq}: kv page corruption outlived the \
+                 rebuild budget"),
+    )
+}
+
 /// The typed per-request error for deadline/TTFT-budget expiry.
 fn expired_error(id: u64, what: &str) -> Error {
     Error::with_kind(
@@ -1410,6 +1484,18 @@ mod tests {
         // garden-variety errors stay untyped: only true saturation
         // takes the retire-the-victim path
         assert!(!err!("prepare_append: bad page").is_saturated());
+    }
+
+    #[test]
+    fn corruption_retirement_is_typed_and_retryable() {
+        let e = corrupted_error(9);
+        assert_eq!(e.kind(), Some(EngineError::Corrupted));
+        assert!(e.kind().unwrap().retryable(),
+                "a rebuilt-from-scratch resubmission plausibly \
+                 succeeds — corruption retirement must be retryable");
+        let msg = e.to_string();
+        assert!(msg.contains("seq 9"), "{msg}");
+        assert!(msg.contains("corruption"), "{msg}");
     }
 
     #[test]

@@ -28,7 +28,8 @@ use crate::{bail, err};
 
 pub use contiguous::ContiguousEngine;
 pub use nocache::NoCacheEngine;
-pub use paged::{PagedEngine, SeqState};
+pub use paged::{IntegrityStats, PagedEngine, SeqState,
+                DEFAULT_SCRUB_BUDGET};
 pub use pipeline::{CopySource, DegradeLevel, DevicePair,
                    PipelineStats, TransferPipeline};
 pub use sampler::{argmax, log_prob, Sampler};
@@ -62,6 +63,9 @@ impl Engine {
                 pe.set_copy_engine(cfg.copy_engine);
                 pe.set_pipeline(cfg.pipeline);
                 pe.set_copy_threads(cfg.copy_threads);
+                pe.set_fence_timeout(std::time::Duration::from_millis(
+                    cfg.fence_timeout_ms,
+                ));
                 // --fault-plan / config wins; PF_FAULT_SEED is the
                 // env shorthand for harnesses (DESIGN.md §11)
                 let plan = match &cfg.fault_plan {

@@ -38,8 +38,8 @@ use crate::kvpage::{
     PoolGeometry, ResidentWindow, SeqId, WindowLayout, WindowStats,
 };
 use crate::model::ModelSpec;
-use crate::runtime::{FaultInjector, FaultKind, FaultPlan, HostTensor,
-                     Runtime, UploadStats};
+use crate::runtime::{CorruptTarget, FaultInjector, FaultKind,
+                     FaultPlan, HostTensor, Runtime, UploadStats};
 use crate::util::profile::{self, Phase};
 use crate::util::{Result, WrapErr};
 use crate::{ensure, err};
@@ -74,6 +74,30 @@ struct StepScratch {
 /// tests shrink the watchdog via `set_fence_timeout` to force the
 /// timeout → demote path.
 const INJECTED_STALL_NS: u64 = 50_000_000;
+
+/// Default per-step integrity scrub budget (DESIGN.md §14): pages
+/// checksum-verified per decode step, batch pages first, the rest in
+/// clock-hand order over the whole pool. Sized so the scrub costs a
+/// few page-hash passes per step (`benches/integrity_scrub.rs` gates
+/// the overhead at ≤ 5%); chaos tests raise it so every batch page is
+/// verified the same step damage lands.
+pub const DEFAULT_SCRUB_BUDGET: usize = 8;
+
+/// Cumulative KV-integrity counters (DESIGN.md §14). All monotone —
+/// invariant I12; `tests/chaos_recovery.rs` holds them to it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IntegrityStats {
+    /// Host pages, staged snapshots, or device window slots whose
+    /// bytes diverged from their checksum stamp or host mirror.
+    pub pages_corrupted: u64,
+    /// Integrity verifications performed (execute-boundary spot
+    /// scrub + background clock hand + device audit).
+    pub pages_scrubbed: u64,
+    /// Damage neutralized: device slots re-uploaded from the host
+    /// copy, snapshots discarded and re-captured, host pages
+    /// quarantined with their owning spans scheduled for rebuild.
+    pub pages_repaired: u64,
+}
 
 impl StepScratch {
     /// Clear and zero-fill for a (batch, chunk) bucket.
@@ -122,6 +146,24 @@ pub struct PagedEngine {
     /// queue/preempt/saturation ladder absorbs it.
     alloc_fail_armed: bool,
     scr: StepScratch,
+    /// Pages this step's batch tables reference (collected during the
+    /// map loop) — the spot-scrub and device-audit working set.
+    scrub_pages: Vec<u32>,
+    /// Per-step integrity verification budget (0 disables the
+    /// integrity layer entirely — the zero-overhead escape hatch).
+    scrub_budget: usize,
+    /// Rotation cursors: batch-page spot scrub, batch-slot device
+    /// audit, and the pool-wide background clock hand.
+    spot_hand: usize,
+    audit_hand: usize,
+    scrub_hand: u32,
+    integrity: IntegrityStats,
+    integrity_reported: IntegrityStats,
+    /// Sequences whose host pages failed verification; their result
+    /// rows are withheld and the coordinator drains them via
+    /// [`PagedEngine::take_corrupt_seqs`] for re-prefill or typed
+    /// retirement (DESIGN.md §14).
+    corrupt_seqs: Vec<SeqId>,
 }
 
 /// Outcome of admitting a prompt.
@@ -156,6 +198,14 @@ impl PagedEngine {
             fault: FaultInjector::idle(),
             alloc_fail_armed: false,
             scr: StepScratch::default(),
+            scrub_pages: Vec::new(),
+            scrub_budget: DEFAULT_SCRUB_BUDGET,
+            spot_hand: 0,
+            audit_hand: 0,
+            scrub_hand: 0,
+            integrity: IntegrityStats::default(),
+            integrity_reported: IntegrityStats::default(),
+            corrupt_seqs: Vec::new(),
         }
     }
 
@@ -293,6 +343,46 @@ impl PagedEngine {
     /// default is production-sized).
     pub fn set_fence_timeout(&mut self, timeout: Duration) {
         self.pipe.set_fence_timeout(timeout);
+    }
+
+    /// Per-step integrity scrub budget (DESIGN.md §14). 0 turns the
+    /// integrity layer off; chaos tests raise it past the batch
+    /// working set so damage is caught the step it lands.
+    pub fn set_scrub_budget(&mut self, budget: usize) {
+        self.scrub_budget = budget;
+    }
+
+    /// Cumulative integrity counters, including the pipeline's
+    /// staged-snapshot discards (each is one corruption caught and
+    /// one damage neutralized before it reached a device buffer).
+    pub fn integrity_stats(&self) -> IntegrityStats {
+        let mut s = self.integrity;
+        let sc = self.pipe.stats().staged_corrupt;
+        s.pages_corrupted += sc;
+        s.pages_repaired += sc;
+        s
+    }
+
+    /// Integrity counters accumulated since the last call (the
+    /// coordinator merges these into `ServingMetrics`).
+    pub fn take_integrity_delta(&mut self) -> IntegrityStats {
+        let now = self.integrity_stats();
+        let r = self.integrity_reported;
+        self.integrity_reported = now;
+        IntegrityStats {
+            pages_corrupted: now.pages_corrupted - r.pages_corrupted,
+            pages_scrubbed: now.pages_scrubbed - r.pages_scrubbed,
+            pages_repaired: now.pages_repaired - r.pages_repaired,
+        }
+    }
+
+    /// Drain the sequences whose host pages failed verification.
+    /// Their result rows were withheld from the step that caught the
+    /// damage; the caller preempts and re-prefills each (the span
+    /// rebuild of the repair ladder) or retires it typed-`Corrupted`
+    /// past the retry cap.
+    pub fn take_corrupt_seqs(&mut self) -> Vec<SeqId> {
+        std::mem::take(&mut self.corrupt_seqs)
     }
 
     /// RESERVE + sequence bookkeeping. Errors bubble PoolExhausted so the
@@ -450,6 +540,13 @@ impl PagedEngine {
             let s = self.seqs.get_mut(id).unwrap();
             s.prefilled += take;
             let finished = s.prefilled == s.tokens.len();
+            if self.corrupt_seqs.contains(id) {
+                // the step may have gathered a damaged page: withhold
+                // the row and skip prefix registration — the owner is
+                // queued for span rebuild, which recomputes the same
+                // bytes from scratch
+                continue;
+            }
             if finished {
                 let toks = s.tokens.clone();
                 self.mgr
@@ -517,6 +614,12 @@ impl PagedEngine {
             let s = self.seqs.get_mut(id).unwrap();
             s.tokens.push(next[i]);
             s.prefilled += 1;
+            if self.corrupt_seqs.contains(id) {
+                // logits may reflect a damaged page; the token just
+                // appended came from the PREVIOUS clean step's logits
+                // and stays — only this step's output is withheld
+                continue;
+            }
             let row =
                 logits_rows[i * vocab..(i + 1) * vocab].to_vec();
             results.push((*id, row));
@@ -613,7 +716,9 @@ impl PagedEngine {
         // due injected faults land BEFORE the stage boundaries so this
         // very step absorbs them through the degrade ladder
         // (DESIGN.md §11); outputs stay byte-identical either way
-        for kind in self.fault.begin_step() {
+        for (fi, kind) in
+            self.fault.begin_step().into_iter().enumerate()
+        {
             match kind {
                 FaultKind::WorkerPanic => {
                     self.pipe.poison_stream_for_test();
@@ -633,6 +738,13 @@ impl PagedEngine {
                     self.pipe.note_execute_failure();
                 }
                 FaultKind::AllocFail => self.alloc_fail_armed = true,
+                FaultKind::Corrupt(target) => {
+                    // silent by design: the injection tells no layer
+                    // what it damaged — detection is the integrity
+                    // scrub's job (DESIGN.md §14)
+                    let salt = self.fault.injected() + fi as u64;
+                    self.inject_corruption(target, ids, salt);
+                }
             }
         }
 
@@ -644,6 +756,7 @@ impl PagedEngine {
         // remap physical pages -> stable window slots, copying only
         // newly-resident or dirty pages (everything on a full gather)
         self.window.begin_step(window_pages);
+        self.scrub_pages.clear();
         {
             let _prof = profile::span(if self.window.is_full_step() {
                 Phase::SubpoolGather
@@ -665,6 +778,7 @@ impl PagedEngine {
                             "active set exceeds window ({window_pages} \
                              slots)"))?;
                     self.scr.tables[i * maxb + j] = slot as i32;
+                    self.scrub_pages.push(p);
                 }
             }
             // deferred mode (`--copy-threads` > 1): the loop above only
@@ -672,6 +786,16 @@ impl PagedEngine {
             // scoped gather pool. Serial mode: no-op.
             self.window.flush_pending(&self.k_pool, &self.v_pool);
         }
+        // prefix-shared pages appear once per owning sequence above;
+        // dedup so the budget is spent on distinct pages
+        self.scrub_pages.sort_unstable();
+        self.scrub_pages.dedup();
+        // execute-boundary spot scrub (DESIGN.md §14): verify a
+        // budgeted, rotating slice of the batch's pages (then the
+        // pool-wide clock hand) against their write-time checksums,
+        // before this step's logits can be trusted. The flush above
+        // restamped every pending page, so only silent damage fails.
+        self.scrub_step();
         // stage boundary 2: sync the front device pair for THIS step
         // (only what the gather just changed) and stage the next
         // step's upload into the back pair, modeled as overlapping the
@@ -680,6 +804,11 @@ impl PagedEngine {
         // serially, and records the whole-window re-push it actually
         // performs at execute time)
         self.pipe.pre_execute(&mut self.window);
+        // device-side trust boundary: the front pair is now what the
+        // execute reads — audit a budgeted rotation of batch slots
+        // against the host window and re-upload on divergence, so
+        // silent device damage never reaches the attention kernel
+        self.audit_device();
 
         let win_shape = vec![geo.n_layers, window_pages, ps,
                              geo.n_kv_heads, geo.d_head];
@@ -745,6 +874,162 @@ impl PagedEngine {
             self.pipe.note_execute(run_ns);
         }
         result
+    }
+
+    /// Fire one scheduled [`FaultKind::Corrupt`] event: silently bend
+    /// bytes at the chosen target. No layer is told what was damaged
+    /// — detection is the scrub/audit's job (DESIGN.md §14).
+    fn inject_corruption(&mut self, target: CorruptTarget,
+                         ids: &[SeqId], salt: u64) {
+        match target {
+            CorruptTarget::HostPage => {
+                if ids.is_empty() {
+                    return;
+                }
+                let id = ids[salt as usize % ids.len()];
+                let Ok(table) = self.mgr.table(id) else { return };
+                // only completed pages: the tail page's next token
+                // write would mark it stale and the scrub would
+                // reseal the damage as trusted content — tail bytes
+                // are owned by the write path, not the scrub
+                let pages = table.pages();
+                if pages.len() < 2 {
+                    return;
+                }
+                let pages = &pages[..pages.len() - 1];
+                let page = pages[salt as usize % pages.len()];
+                if salt & 1 == 0 {
+                    self.k_pool.corrupt_page_silently(page, salt);
+                } else {
+                    self.v_pool.corrupt_page_silently(page, salt);
+                }
+            }
+            CorruptTarget::StagedSnapshot => {
+                self.pipe.corrupt_next_snapshot_for_test();
+            }
+            CorruptTarget::DeviceWindow => {
+                self.pipe.corrupt_front_for_test(salt);
+            }
+        }
+    }
+
+    /// Budgeted host-page scrub (DESIGN.md §14): verify a rotating
+    /// slice of this step's batch pages against their write-time
+    /// checksums, then spend any leftover budget on a clock-hand
+    /// sweep of the whole pool. A failed page is counted once,
+    /// quarantined (prefix-cache eviction + permanent retirement),
+    /// resealed at its damaged bytes so it is not re-counted every
+    /// step, and its owners queue for span rebuild.
+    fn scrub_step(&mut self) {
+        let budget = self.scrub_budget;
+        if budget == 0 {
+            return;
+        }
+        let mut damaged: Vec<u32> = Vec::new();
+        let mut checked = 0u64;
+        let m = self.scrub_pages.len();
+        let spot = budget.min(m);
+        for i in 0..spot {
+            let p = self.scrub_pages[(self.spot_hand + i) % m];
+            checked += 1;
+            let k_ok = self.k_pool.verify_page(p);
+            let v_ok = self.v_pool.verify_page(p);
+            if !(k_ok && v_ok) {
+                damaged.push(p);
+            }
+        }
+        if m > 0 {
+            self.spot_hand = (self.spot_hand + spot) % m;
+        }
+        let n_pages = self.k_pool.geometry().n_pages;
+        for _ in 0..(budget - spot).min(n_pages) {
+            let p = self.scrub_hand;
+            self.scrub_hand = (self.scrub_hand + 1) % n_pages as u32;
+            if self.mgr.allocator().refcount(p) == 0 {
+                continue; // free pages hold no trusted bytes
+            }
+            checked += 1;
+            let k_ok = self.k_pool.verify_page(p);
+            let v_ok = self.v_pool.verify_page(p);
+            if !(k_ok && v_ok) {
+                damaged.push(p);
+            }
+        }
+        self.integrity.pages_scrubbed += checked;
+        if damaged.is_empty() {
+            return;
+        }
+        damaged.sort_unstable();
+        damaged.dedup();
+        for &p in &damaged {
+            self.integrity.pages_corrupted += 1;
+            self.mgr.quarantine_page(p);
+            self.k_pool.seal_page(p);
+            self.v_pool.seal_page(p);
+            self.integrity.pages_repaired += 1;
+            for owner in self.mgr.owners_of(p) {
+                if !self.corrupt_seqs.contains(&owner) {
+                    self.corrupt_seqs.push(owner);
+                }
+            }
+        }
+    }
+
+    /// Budgeted device audit at the execute boundary (DESIGN.md §14):
+    /// byte-compare a rotating slice of this step's batch slots in
+    /// the front pair against the live host window; any divergence is
+    /// silent device damage, repaired by re-uploading the whole
+    /// window from the intact host copy. Sim backing only — the
+    /// accounting PJRT path keeps no resident bytes (its real
+    /// transfer happens at execute time from the host window itself).
+    fn audit_device(&mut self) {
+        if self.scrub_budget == 0 || self.scrub_pages.is_empty() {
+            return;
+        }
+        let geo = *self.k_pool.geometry();
+        let pe = geo.page_elems();
+        let w = self.window.window_pages();
+        let m = self.scrub_pages.len();
+        let take = self.scrub_budget.min(m);
+        let mut bad = 0u64;
+        {
+            let fk = match self.pipe.front().k.contents() {
+                Some(x) => x,
+                None => return,
+            };
+            let fv = match self.pipe.front().v.contents() {
+                Some(x) => x,
+                None => return,
+            };
+            if fk.len() != self.window.k_window().len() {
+                return; // mid-relayout; the next sync re-uploads
+            }
+            for i in 0..take {
+                let p = self.scrub_pages[(self.audit_hand + i) % m];
+                let Some(slot) = self.window.slot(p) else {
+                    continue;
+                };
+                let sl = slot as usize;
+                for l in 0..geo.n_layers {
+                    let off = (l * w + sl) * pe;
+                    if fk[off..off + pe]
+                        != *self.window.k_page_slice(l, slot)
+                        || fv[off..off + pe]
+                            != *self.window.v_page_slice(l, slot)
+                    {
+                        bad += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        self.audit_hand = (self.audit_hand + take) % m;
+        self.integrity.pages_scrubbed += take as u64;
+        if bad > 0 {
+            self.integrity.pages_corrupted += bad;
+            self.pipe.resync_front(&self.window);
+            self.integrity.pages_repaired += bad;
+        }
     }
 
     /// Rust-side ASSIGN: scatter `take` tokens of row `i` of a chunk

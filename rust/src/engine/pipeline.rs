@@ -210,6 +210,11 @@ pub struct PipelineStats {
     /// Fence watchdog expiries: a stalled transfer abandoned (pair
     /// and worker) instead of hanging a stage boundary.
     pub fence_timeouts: u64,
+    /// Captured snapshots whose bytes no longer matched their stamp
+    /// at the apply boundary (DESIGN.md §14): each was discarded
+    /// before reaching a device buffer and re-captured from the
+    /// intact live window on the following step.
+    pub staged_corrupt: u64,
     /// Peak outstanding jobs observed on this pool set's submit queue
     /// — the per-pool backpressure ledger (`copy_queue_peak` CSV
     /// column; reported as a level, not a delta).
@@ -355,6 +360,9 @@ pub struct TransferPipeline {
     /// joined on the engine thread (that would ride out the stall),
     /// so its handle retires here and joins when the pipeline drops.
     zombies: Vec<CopyStream>,
+    /// One-shot fault hook: bend the next captured snapshot after
+    /// its checksum stamp (`FaultKind::Corrupt(StagedSnapshot)`).
+    corrupt_next_snapshot: bool,
     stats: PipelineStats,
     reported: PipelineStats,
     upload_reported: UploadStats,
@@ -405,6 +413,7 @@ impl TransferPipeline {
             degrade: DegradeState::fresh(),
             fence_timeout: DEFAULT_FENCE_TIMEOUT,
             zombies: Vec::new(),
+            corrupt_next_snapshot: false,
             stats: PipelineStats::default(),
             reported: PipelineStats::default(),
             upload_reported: UploadStats::default(),
@@ -503,6 +512,39 @@ impl TransferPipeline {
         if let Some(s) = &self.stream {
             s.inject_stall(ns);
         }
+    }
+
+    /// Fault hook: arm a one-shot bit flip in the next captured
+    /// snapshot *after* its checksum stamp — the staged-snapshot
+    /// corruption target of `FaultKind::Corrupt` (DESIGN.md §14).
+    /// Stays armed across steps whose snapshot captured no bytes.
+    pub fn corrupt_next_snapshot_for_test(&mut self) {
+        self.corrupt_next_snapshot = true;
+    }
+
+    /// Fault hook: silently bend one resident element of the front
+    /// pair (K or V by salt parity) — the device-window corruption
+    /// target of `FaultKind::Corrupt`. Returns whether anything was
+    /// damaged (false on the accounting backing or before the first
+    /// upload).
+    pub fn corrupt_front_for_test(&mut self, salt: u64) -> bool {
+        if salt & 1 == 0 {
+            self.front.k.corrupt_for_test(salt)
+        } else {
+            self.front.v.corrupt_for_test(salt)
+        }
+    }
+
+    /// Repair entry point for device-side damage found by the
+    /// execute-boundary audit (DESIGN.md §14): re-upload the whole
+    /// live window into the front pair at its current epoch,
+    /// restoring byte parity from the intact host copy. Not a ladder
+    /// fault — the transfer machinery did nothing wrong, so serving
+    /// stays at its current rung.
+    pub fn resync_front(&mut self, win: &ResidentWindow) {
+        let through = self.front.epoch();
+        self.front.k.upload_full_captured(win.k_window(), through);
+        self.front.v.upload_full_captured(win.v_window(), through);
     }
 
     /// Current rung of the degrade/recover ladder (DESIGN.md §11).
@@ -765,7 +807,7 @@ impl TransferPipeline {
             return;
         }
         let back_stale = !back.can_delta(host_len);
-        let snap = win.snapshot_for(
+        let mut snap = win.snapshot_for(
             back.epoch(),
             full_mode || back_stale,
         );
@@ -773,6 +815,23 @@ impl TransferPipeline {
             // the window itself forced the refill (residency drop /
             // relayout since the back pair last uploaded)
             self.stats.collapses += 1;
+        }
+        if self.corrupt_next_snapshot && !snap.k_data.is_empty() {
+            self.corrupt_next_snapshot = false;
+            let bent = snap.k_data[0].to_bits() ^ 0x0040_0001;
+            snap.k_data[0] = f32::from_bits(bent);
+        }
+        if !snap.verify() {
+            // apply-boundary integrity check (DESIGN.md §14): the
+            // captured bytes no longer match the stamp taken at
+            // snapshot time. Discard the snapshot before it can
+            // reach a device buffer — the front pair is already
+            // synced for THIS step, and the next pre_execute
+            // re-captures from the intact live window, so the
+            // damage costs one un-staged step and nothing else.
+            self.stats.staged_corrupt += 1;
+            win.donate_capture(snap.k_data, snap.v_data, snap.ranges);
+            return;
         }
 
         if let Some(stream) = self.stream.take() {
@@ -912,6 +971,7 @@ impl TransferPipeline {
             repromotes: s.repromotes - r.repromotes,
             retries: s.retries - r.retries,
             fence_timeouts: s.fence_timeouts - r.fence_timeouts,
+            staged_corrupt: s.staged_corrupt - r.staged_corrupt,
             queue_peak: s.queue_peak,
             last_staged_ns: s.last_staged_ns,
             last_tail_ns: s.last_tail_ns,
@@ -1225,6 +1285,100 @@ mod tests {
         assert_eq!(r.pipe.degrade_level(), DegradeLevel::Pipelined,
                    "{:?}", r.pipe.stats());
         assert!(r.pipe.stats().repromotes >= 3);
+    }
+
+    #[test]
+    fn corrupted_staged_snapshot_is_discarded_and_restaged() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "warm a");
+        r.step(&[0, 1], 8, "warm b");
+        r.pipe.corrupt_next_snapshot_for_test();
+        // the hook fires on the next snapshot that captures bytes;
+        // every step still executes against synced front contents
+        for i in 0..6 {
+            r.step(&[0, 1], 8, &format!("corrupt step {i}"));
+            if r.pipe.stats().staged_corrupt > 0 {
+                break;
+            }
+        }
+        assert_eq!(r.pipe.stats().staged_corrupt, 1,
+                   "{:?}", r.pipe.stats());
+        assert!(!r.pipe.has_staged(),
+                "a damaged snapshot never reaches a device buffer");
+        r.step(&[0, 1], 8, "post-corrupt a");
+        r.step(&[0, 1], 8, "post-corrupt b");
+        assert!(r.pipe.has_staged(),
+                "staging resumes from a clean re-capture");
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Pipelined,
+                   "snapshot damage is not a transfer fault");
+        assert_eq!(r.pipe.stats().faults, 0);
+    }
+
+    #[test]
+    fn front_corruption_hook_damages_and_resync_repairs() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "warm");
+        let before = r.pipe.front().k.contents().unwrap().to_vec();
+        assert!(r.pipe.corrupt_front_for_test(6), "K element bent");
+        assert_ne!(before,
+                   r.pipe.front().k.contents().unwrap().to_vec(),
+                   "damage is visible to a device read");
+        r.pipe.resync_front(&r.win);
+        assert_eq!(r.pipe.front().k.contents().unwrap(),
+                   r.win.k_window(),
+                   "byte parity restored from the host copy");
+        assert_eq!(r.pipe.front().v.contents().unwrap(),
+                   r.win.v_window());
+        r.step(&[0, 1], 8, "keeps serving");
+        assert_eq!(r.pipe.stats().faults, 0,
+                   "repair is a re-upload, not a ladder fault");
+    }
+
+    #[test]
+    fn repromotion_quota_doubles_and_caps() {
+        let mut d = DegradeState::fresh();
+        assert_eq!(d.promote_after, PROMOTE_AFTER, "fresh lane: 4");
+        d.demote();
+        assert_eq!(d.promote_after, 8, "first fault: 4 → 8");
+        d.demote();
+        assert_eq!(d.promote_after, 16, "second fault: 8 → 16");
+        for _ in 0..4 {
+            d.demote();
+        }
+        assert_eq!(d.promote_after, PROMOTE_AFTER_MAX,
+                   "repeated demote cycles stay capped at 16");
+        assert_eq!(d.level, DegradeLevel::Rebuild,
+                   "the ladder floors at rebuild");
+    }
+
+    #[test]
+    fn reentering_pipelined_re_earns_the_fresh_lane_quota() {
+        let mut r = Rig::new(true);
+        r.step(&[0, 1], 8, "warm");
+        r.pipe.poison_stream_for_test();
+        for i in 0..10 {
+            r.step(&[0, 1], 8, &format!("fault step {i}"));
+            if r.pipe.stats().poisons > 0 {
+                break;
+            }
+        }
+        assert_eq!(r.pipe.degrade.promote_after, 8,
+                   "one fault doubles the probation quota");
+        for i in 0..32 {
+            r.step(&[0, 1], 8, &format!("climb step {i}"));
+            if r.pipe.degrade_level() == DegradeLevel::Pipelined {
+                break;
+            }
+        }
+        assert_eq!(r.pipe.degrade_level(), DegradeLevel::Pipelined);
+        assert_eq!(r.pipe.degrade.promote_after, 8,
+                   "probation persists until a clean run completes");
+        for i in 0..PROMOTE_AFTER_MAX {
+            r.step(&[0, 1], 8, &format!("probation step {i}"));
+        }
+        assert_eq!(r.pipe.degrade.promote_after, PROMOTE_AFTER,
+                   "a clean quota at the top rung re-earns the fresh \
+                    lane's base quota of 4");
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! up to the next power of two in *pages* — the "power-of-two cache
 //! allocations" whose steps are visible beyond 2 k tokens in Fig. 1.
 
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 
 use super::audit::MemoryAudit;
 use super::freelist::FreeList;
@@ -40,6 +40,10 @@ impl GrowthPolicy {
 pub struct PageAllocator {
     free: FreeList,
     refcounts: Box<[AtomicU32]>,
+    /// Pages the integrity layer condemned (DESIGN.md §14): when the
+    /// last reference dies they are retired instead of returning to
+    /// the free list, so damaged bytes can never be re-issued.
+    quarantined: Box<[AtomicBool]>,
     page_size: usize,
     kv_bytes_per_token: u64,
     policy: GrowthPolicy,
@@ -65,9 +69,12 @@ impl PageAllocator {
         audit: MemoryAudit,
     ) -> Self {
         let refcounts = (0..n_pages).map(|_| AtomicU32::new(0)).collect();
+        let quarantined =
+            (0..n_pages).map(|_| AtomicBool::new(false)).collect();
         PageAllocator {
             free: FreeList::new(n_pages),
             refcounts,
+            quarantined,
             page_size,
             kv_bytes_per_token,
             policy,
@@ -141,6 +148,12 @@ impl PageAllocator {
                 self.bytes_per_page(),
                 live_tokens as u64 * self.kv_bytes_per_token,
             );
+            if self.is_quarantined(page) {
+                // condemned by the integrity layer: retire instead of
+                // recycling — the pool shrinks by one page, which is
+                // the whole point (DESIGN.md §14)
+                return true;
+            }
             self.free.push(page);
             return true;
         }
@@ -149,6 +162,29 @@ impl PageAllocator {
 
     pub fn refcount(&self, page: u32) -> u32 {
         self.refcounts[page as usize].load(Ordering::Acquire)
+    }
+
+    /// Condemn a page whose bytes failed verification (DESIGN.md
+    /// §14). Must be called while the page is still referenced; it
+    /// keeps serving its current owners (their spans are being
+    /// rebuilt elsewhere) and retires permanently when the last
+    /// reference dies.
+    pub fn quarantine_page(&self, page: u32) {
+        debug_assert!(self.refcount(page) > 0,
+                      "quarantine of unreferenced page {page}");
+        self.quarantined[page as usize].store(true, Ordering::Release);
+    }
+
+    pub fn is_quarantined(&self, page: u32) -> bool {
+        self.quarantined[page as usize].load(Ordering::Acquire)
+    }
+
+    /// Pages condemned so far (quarantined, whether or not their last
+    /// reference has died yet).
+    pub fn quarantined_pages(&self) -> Vec<u32> {
+        (0..self.n_pages())
+            .filter(|&p| self.is_quarantined(p))
+            .collect()
     }
 
     /// Pages needed to grow a mapping from `current_blocks` to hold
@@ -218,6 +254,34 @@ mod tests {
         assert_eq!(a.free_pages(), 15, "still shared");
         a.release_page(p, 8);
         assert_eq!(a.free_pages(), 16);
+    }
+
+    #[test]
+    fn quarantined_pages_retire_instead_of_recycling() {
+        let a = alloc();
+        let pages = a.alloc_pages(2).unwrap();
+        let (bad, good) = (pages[0], pages[1]);
+        a.retain_page(bad); // shared (prefix-cache shape)
+        a.quarantine_page(bad);
+        assert!(a.is_quarantined(bad));
+        assert_eq!(a.quarantined_pages(), vec![bad]);
+
+        // first owner dies: page survives for the second owner
+        assert!(!a.release_page(bad, 0));
+        assert_eq!(a.free_pages(), 14);
+        // last owner dies: the page retires — reported dead, never
+        // pushed back onto the free list
+        assert!(a.release_page(bad, 8));
+        assert_eq!(a.free_pages(), 14, "pool shrank by one page");
+        a.release_page(good, 8);
+        assert_eq!(a.free_pages(), 15);
+
+        // the retired page can never be re-issued
+        let refill = a.alloc_pages(15).unwrap();
+        assert!(!refill.contains(&bad));
+        assert!(a.alloc_pages(1).is_none(), "capacity stays reduced");
+        assert_eq!(a.quarantined_pages(), vec![bad],
+                   "quarantine is permanent");
     }
 
     #[test]

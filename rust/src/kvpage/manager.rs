@@ -345,6 +345,29 @@ impl PageManager {
         }
     }
 
+    /// Sequences whose tables reference `page` — the owners of a
+    /// damaged page's span (integrity repair ladder, DESIGN.md §14).
+    /// O(sequences × blocks); only walked on a verification failure.
+    pub fn owners_of(&self, page: u32) -> Vec<SeqId> {
+        let mut out: Vec<SeqId> = self
+            .tables
+            .iter()
+            .filter(|(_, t)| t.pages().contains(&page))
+            .map(|(&s, _)| s)
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Condemn a damaged page: it keeps serving its current owners
+    /// (whose spans are being rebuilt) and retires permanently when
+    /// the last reference dies, and it leaves the prefix cache now so
+    /// no new sequence can alias damaged bytes.
+    pub fn quarantine_page(&mut self, page: u32) {
+        self.prefix.evict_page(page);
+        self.alloc.quarantine_page(page);
+    }
+
     /// Dense i32 device row for the batch tensor.
     pub fn device_row(&self, seq: SeqId) -> Result<Vec<i32>, AllocError> {
         Ok(self.table(seq)?.to_device_row(self.max_blocks_per_seq))
@@ -519,6 +542,29 @@ mod tests {
         assert_eq!(src, m.table(1).unwrap().pages()[2]);
         assert_eq!(dst, *m.table(2).unwrap().pages().last().unwrap());
         assert_eq!(m.seq_len(2).unwrap(), 19);
+    }
+
+    #[test]
+    fn quarantine_evicts_prefix_entries_and_blocks_reuse() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        let p = prompt(16); // 2 pages
+        m.reserve(1, &p).unwrap();
+        m.note_assigned(1, 16).unwrap();
+        m.register_prefix(1, &p).unwrap();
+        let bad = m.table(1).unwrap().pages()[0];
+        m.quarantine_page(bad);
+        assert_eq!(m.owners_of(bad), vec![1]);
+
+        // the cached prefix must not alias damaged bytes to a new
+        // admit — its entries left the cache at quarantine time
+        let out = m.reserve(2, &p).unwrap();
+        assert_eq!(out.cached_tokens, 0, "prefix entries evicted");
+        assert!(!m.table(2).unwrap().pages().contains(&bad));
+
+        m.free(1).unwrap();
+        m.free(2).unwrap();
+        assert_eq!(m.allocator().free_pages(), 63,
+                   "the damaged page retired instead of recycling");
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub use baseline::ContiguousAllocator;
 pub use block_table::BlockTable;
 pub use freelist::FreeList;
 pub use manager::{AllocError, AppendPlan, PageManager, ReserveOutcome, SeqId};
-pub use pool::{HostPool, PoolGeometry};
+pub use pool::{fnv1a_f32, HostPool, PoolGeometry, FNV_OFFSET};
 pub use prefix::{PrefixIndex, PrefixMatch};
 pub use window::{ResidentWindow, StagedUpload, UploadPlan, WindowLayout,
                  WindowStats};

@@ -9,7 +9,28 @@
 //!   (preempted sequences' pages land here via the `read_pages`
 //!   executable).
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
 use crate::model::ModelSpec;
+
+/// FNV-1a 64 offset basis — seed value for [`fnv1a_f32`] chains.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64 over the raw bit patterns of an f32 slice — the KV
+/// checksum primitive (DESIGN.md §14). Hashes `to_bits()` bytes
+/// low-octet first, so the digest is platform-independent; chain
+/// multiple slices by threading the returned state back in as `h`.
+pub fn fnv1a_f32(data: &[f32], mut h: u64) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    for &x in data {
+        let bits = x.to_bits();
+        for shift in [0u32, 8, 16, 24] {
+            h ^= u64::from((bits >> shift) & 0xFF);
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
 
 /// Geometry of one [L, P, page, Hkv, Dh] f32 tensor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,6 +95,14 @@ pub struct HostPool {
     geo: PoolGeometry,
     data: Vec<f32>,
     dirty: Vec<bool>,
+    /// Per-page FNV-1a content checksum, valid while `!stale[page]`
+    /// (DESIGN.md §14). Atomics because the sharded flush paths
+    /// restamp through a shared `&HostPool`.
+    sums: Vec<AtomicU64>,
+    /// Page mutated since its last [`seal_page`](Self::seal_page) —
+    /// the checksum is pending, not wrong; verification treats a
+    /// stale page as trusted-and-restamped, never as corrupt.
+    stale: Vec<AtomicBool>,
 }
 
 impl HostPool {
@@ -82,6 +111,10 @@ impl HostPool {
             geo,
             data: vec![0.0; geo.total_elems()],
             dirty: vec![false; geo.n_pages],
+            sums: (0..geo.n_pages).map(|_| AtomicU64::new(0)).collect(),
+            stale: (0..geo.n_pages)
+                .map(|_| AtomicBool::new(true))
+                .collect(),
         }
     }
 
@@ -94,7 +127,16 @@ impl HostPool {
     }
 
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // untracked raw access: every checksum is pending afterwards
+        for s in &self.stale {
+            s.store(true, Ordering::Relaxed);
+        }
         &mut self.data
+    }
+
+    /// Mark one page's checksum as pending (page content mutated).
+    fn touch(&self, page: u32) {
+        self.stale[page as usize].store(true, Ordering::Relaxed);
     }
 
     /// Alg. 1 ASSIGN (host side): write one token's [Hkv, Dh] row.
@@ -105,6 +147,7 @@ impl HostPool {
         let off = self.geo.offset(layer, page, slot);
         self.data[off..off + n].copy_from_slice(row);
         self.dirty[page as usize] = true;
+        self.touch(page);
     }
 
     /// Mutable view of one token's [Hkv, Dh] row — ASSIGN without a
@@ -115,6 +158,7 @@ impl HostPool {
         let n = self.geo.token_elems();
         let off = self.geo.offset(layer, page, slot);
         self.dirty[page as usize] = true;
+        self.touch(page);
         &mut self.data[off..off + n]
     }
 
@@ -164,6 +208,7 @@ impl HostPool {
             }
         }
         self.dirty[dst as usize] = true;
+        self.touch(dst);
     }
 
     /// Extract a whole page across layers: [L, page, Hkv, Dh] flat
@@ -188,6 +233,89 @@ impl HostPool {
                 .copy_from_slice(&flat[layer * n..(layer + 1) * n]);
         }
         self.dirty[page as usize] = true;
+        self.touch(page);
+    }
+
+    // ------------------------------------------------------------------
+    // page integrity (DESIGN.md §14)
+    // ------------------------------------------------------------------
+
+    /// Recompute one page's content checksum from scratch (every
+    /// layer's slab, FNV-1a over raw f32 bits).
+    fn compute_sum(&self, page: u32) -> u64 {
+        let n = self.geo.page_elems();
+        let mut h = FNV_OFFSET;
+        for layer in 0..self.geo.n_layers {
+            let s = self.geo.offset(layer, page, 0);
+            h = fnv1a_f32(&self.data[s..s + n], h);
+        }
+        h
+    }
+
+    /// Stamp the page's checksum from its current content and clear
+    /// the pending flag. `&self` on purpose: the sharded flush paths
+    /// restamp through the same shared reference they gather from.
+    pub fn seal_page(&self, page: u32) {
+        let sum = self.compute_sum(page);
+        self.sums[page as usize].store(sum, Ordering::Relaxed);
+        self.stale[page as usize].store(false, Ordering::Release);
+    }
+
+    /// Stamp every page whose checksum is pending; returns how many
+    /// were sealed. The write-path boundaries (flush/scatter ends)
+    /// call this so verification never races a half-written page.
+    pub fn seal_stale(&self) -> usize {
+        let mut sealed = 0;
+        for page in 0..self.geo.n_pages as u32 {
+            if self.stale[page as usize].load(Ordering::Acquire) {
+                self.seal_page(page);
+                sealed += 1;
+            }
+        }
+        sealed
+    }
+
+    /// Checksum pending (page mutated since its last seal)?
+    pub fn is_stale(&self, page: u32) -> bool {
+        self.stale[page as usize].load(Ordering::Acquire)
+    }
+
+    /// Stored checksum (meaningful only while `!is_stale(page)`).
+    pub fn checksum(&self, page: u32) -> u64 {
+        self.sums[page as usize].load(Ordering::Relaxed)
+    }
+
+    /// Verify one page against its stamped checksum. A stale page is
+    /// sealed and trusted (its mutation path owns the content); a
+    /// sealed page must hash to its stamp. Returns `false` exactly
+    /// when the page's bytes silently diverged — corruption.
+    pub fn verify_page(&self, page: u32) -> bool {
+        if self.is_stale(page) {
+            self.seal_page(page);
+            return true;
+        }
+        self.compute_sum(page) == self.checksum(page)
+    }
+
+    /// Fault-injection primitive: flip mantissa bits of one element
+    /// in the page *without* touching the dirty/stale/checksum
+    /// bookkeeping — the silent corruption the scrub path exists to
+    /// catch. Deterministic in `salt`; never produces NaN/Inf from a
+    /// finite value (the exponent byte is untouched).
+    pub fn corrupt_page_silently(&mut self, page: u32, salt: u64) {
+        let slot = (salt as usize) % self.geo.page_size;
+        let off = self.geo.offset(0, page, slot);
+        let mask =
+            0x0040_0000u32 | (((salt >> 4) as u32 & 0x7) << 1) | 1;
+        self.data[off] = f32::from_bits(self.data[off].to_bits() ^ mask);
+    }
+
+    /// Repair primitive: overwrite one page from a trusted flat copy
+    /// (`extract_page` layout) and restamp it. Marks the page dirty
+    /// so the resident window re-gathers it.
+    pub fn repair_page(&mut self, page: u32, flat: &[f32]) {
+        self.insert_page(page, flat);
+        self.seal_page(page);
     }
 }
 
@@ -253,6 +381,66 @@ mod tests {
             p.clear_dirty(pg);
         }
         assert_eq!(p.dirty_pages(), 0);
+    }
+
+    #[test]
+    fn seal_verify_catches_silent_corruption_only() {
+        let mut p = HostPool::zeros(geo());
+        // fresh pages are stale: verify trusts + restamps
+        assert!(p.is_stale(1));
+        assert!(p.verify_page(1));
+        assert!(!p.is_stale(1));
+        let sum0 = p.checksum(1);
+        // a tracked mutation re-stales; sealing restamps a new sum
+        let row: Vec<f32> = (0..8).map(|x| x as f32 + 1.0).collect();
+        p.assign_token(0, 1, 0, &row);
+        assert!(p.is_stale(1));
+        assert!(p.verify_page(1), "stale is pending, not corrupt");
+        assert_ne!(p.checksum(1), sum0, "content change moves the sum");
+        assert!(p.verify_page(1), "sealed + untouched verifies");
+        // silent corruption: bytes move, bookkeeping does not
+        p.corrupt_page_silently(1, 7);
+        assert!(!p.is_stale(1));
+        assert!(!p.verify_page(1), "silent flip must be caught");
+        // repair from a trusted flat copy restamps and re-dirties
+        let mut good = HostPool::zeros(geo());
+        good.assign_token(0, 1, 0, &row);
+        let flat = good.extract_page(1);
+        p.clear_dirty(1);
+        p.repair_page(1, &flat);
+        assert!(p.verify_page(1));
+        assert!(p.is_dirty(1), "repair must trigger a re-gather");
+        assert_eq!(p.gather_token(0, 1, 0), &row[..]);
+    }
+
+    #[test]
+    fn seal_stale_sweeps_every_pending_page_once() {
+        let mut p = HostPool::zeros(geo());
+        assert_eq!(p.seal_stale(), 4, "all pages start pending");
+        assert_eq!(p.seal_stale(), 0);
+        p.token_row_mut(1, 2, 3).fill(9.0);
+        p.copy_page(2, 0);
+        assert_eq!(p.seal_stale(), 2, "mutated + CoW destination");
+        for pg in 0..4 {
+            assert!(p.verify_page(pg));
+        }
+        // untracked raw access pessimistically re-stales everything
+        p.as_mut_slice()[0] = 5.0;
+        assert_eq!(p.seal_stale(), 4);
+    }
+
+    #[test]
+    fn fnv1a_chains_and_separates_bit_patterns() {
+        let h0 = fnv1a_f32(&[1.0, 2.0], FNV_OFFSET);
+        assert_eq!(h0, fnv1a_f32(&[1.0, 2.0], FNV_OFFSET));
+        assert_ne!(h0, fnv1a_f32(&[2.0, 1.0], FNV_OFFSET));
+        // 0.0 and -0.0 compare equal as floats but differ as bits —
+        // the checksum is over bits, so it must distinguish them
+        assert_ne!(fnv1a_f32(&[0.0], FNV_OFFSET),
+                   fnv1a_f32(&[-0.0], FNV_OFFSET));
+        // chaining k then v == hashing the concatenation
+        let part = fnv1a_f32(&[3.0], fnv1a_f32(&[1.0, 2.0], FNV_OFFSET));
+        assert_eq!(part, fnv1a_f32(&[1.0, 2.0, 3.0], FNV_OFFSET));
     }
 
     #[test]

@@ -63,7 +63,7 @@
 
 use std::collections::HashMap;
 
-use super::pool::{HostPool, PoolGeometry};
+use super::pool::{fnv1a_f32, HostPool, PoolGeometry, FNV_OFFSET};
 use crate::util::profile::{self, Phase};
 
 /// Sentinel for "slot holds no page".
@@ -135,6 +135,11 @@ pub struct StagedUpload {
     pub ranges: Vec<(usize, usize)>,
     pub k_data: Vec<f32>,
     pub v_data: Vec<f32>,
+    /// FNV-1a over `k_data` then `v_data`, stamped at snapshot time
+    /// (DESIGN.md §14): the apply boundaries re-hash before pushing
+    /// bytes to a device buffer, so in-flight corruption is caught
+    /// instead of uploaded.
+    pub sum: u64,
 }
 
 impl StagedUpload {
@@ -146,6 +151,16 @@ impl StagedUpload {
     /// Individual device copies this upload costs (K and V).
     pub fn copies(&self) -> usize {
         if self.full { 2 } else { 2 * self.ranges.len() }
+    }
+
+    /// The checksum the snapshot's current bytes hash to.
+    pub fn compute_sum(&self) -> u64 {
+        fnv1a_f32(&self.v_data, fnv1a_f32(&self.k_data, FNV_OFFSET))
+    }
+
+    /// Captured bytes still match the snapshot-time stamp?
+    pub fn verify(&self) -> bool {
+        self.compute_sum() == self.sum
     }
 }
 
@@ -440,6 +455,12 @@ impl ResidentWindow {
     /// was queued. Must run before any capture or scatter.
     pub fn flush_pending(&mut self, k: &HostPool, v: &HostPool) {
         if self.pending.is_empty() {
+            // still a restamp boundary (DESIGN.md §14): the serial
+            // path reaches here with nothing queued, but any pool
+            // page the step mutated before the gather (CoW copies,
+            // swap-in) needs its checksum sealed before verification
+            k.seal_stale();
+            v.seal_stale();
             return;
         }
         let _p = profile::span(Phase::GatherFlush);
@@ -454,6 +475,8 @@ impl ResidentWindow {
         }
         jobs.clear();
         self.pending = jobs; // recycle the job list's allocation
+        k.seal_stale();
+        v.seal_stale();
     }
 
     /// Sharded flush: each shard is one (layer, slot-range) cut of the
@@ -539,6 +562,11 @@ impl ResidentWindow {
     /// capture.
     pub fn flush_rows(&mut self, k: &HostPool, v: &HostPool) {
         if self.pending_rows.is_empty() {
+            // restamp boundary for the serial scatter (DESIGN.md §14):
+            // the step's token-append rows staled their pages'
+            // checksums; reseal them before anything verifies
+            k.seal_stale();
+            v.seal_stale();
             return;
         }
         let _p = profile::span(Phase::ScatterFlush);
@@ -556,6 +584,8 @@ impl ResidentWindow {
         }
         rows.clear();
         self.pending_rows = rows; // recycle the row list's allocation
+        k.seal_stale();
+        v.seal_stale();
     }
 
     /// The memcpy half of one write-through row (both pools).
@@ -943,12 +973,15 @@ impl ResidentWindow {
             self.note_alloc(caps.0, k_data.capacity(), 4);
             self.note_alloc(caps.1, v_data.capacity(), 4);
             let through = self.capture_point();
+            let sum =
+                fnv1a_f32(&v_data, fnv1a_f32(&k_data, FNV_OFFSET));
             return StagedUpload {
                 through,
                 full: true,
                 ranges: Vec::new(),
                 k_data,
                 v_data,
+                sum,
             };
         }
         let ranges = self.ranges_since(dev_epoch);
@@ -959,7 +992,8 @@ impl ResidentWindow {
         self.note_alloc(caps.0, k_data.capacity(), 4);
         self.note_alloc(caps.1, v_data.capacity(), 4);
         let through = self.capture_point();
-        StagedUpload { through, full: false, ranges, k_data, v_data }
+        let sum = fnv1a_f32(&v_data, fnv1a_f32(&k_data, FNV_OFFSET));
+        StagedUpload { through, full: false, ranges, k_data, v_data, sum }
     }
 
     /// The rows written through since the last capture, as element
@@ -1656,6 +1690,71 @@ mod tests {
         }
         assert_eq!(w.stats().alloc_bytes, total_after_warmup,
                    "cumulative total keeps the run history");
+    }
+
+    /// The gather/scatter flush boundaries restamp every pool page a
+    /// step mutated, in both serial and deferred modes, so a spot
+    /// scrub right after the flush never sees a pending checksum
+    /// (DESIGN.md §14).
+    #[test]
+    fn flush_boundaries_restamp_pool_checksums() {
+        for threads in [1usize, 4] {
+            let (mut k, mut v) = pools();
+            let mut w = ResidentWindow::new(geo());
+            w.set_copy_threads(threads);
+            for p in 0..10u32 {
+                fill_page(&mut k, p, p as f32);
+                fill_page(&mut v, p, -(p as f32));
+            }
+            w.begin_step(12);
+            for p in 0..10u32 {
+                w.map_page(&mut k, &mut v, p).unwrap();
+            }
+            w.flush_pending(&k, &v);
+            for p in 0..10u32 {
+                assert!(!k.is_stale(p) && !v.is_stale(p),
+                        "gather flush must restamp page {p} \
+                         (threads={threads})");
+                assert!(k.verify_page(p) && v.verify_page(p));
+            }
+            // decode-style scatter then the row-flush boundary
+            for layer in 0..2 {
+                k.token_row_mut(layer, 3, 1).fill(77.0);
+                v.token_row_mut(layer, 3, 1).fill(-77.0);
+                w.write_row(&mut k, &mut v, layer, 3, 1);
+            }
+            assert!(k.is_stale(3), "scatter stales the checksum");
+            w.flush_rows(&k, &v);
+            assert!(!k.is_stale(3) && !v.is_stale(3),
+                    "scatter flush must restamp (threads={threads})");
+            assert!(k.verify_page(3) && v.verify_page(3));
+        }
+    }
+
+    /// Staged snapshots are stamped at capture time and must fail
+    /// verification after any in-flight byte flip — both the delta
+    /// and the full-capture shapes.
+    #[test]
+    fn staged_snapshots_carry_a_verifiable_checksum() {
+        let (mut k, mut v) = pools();
+        let mut w = ResidentWindow::new(geo());
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 2).unwrap();
+        let full = w.snapshot_for(0, true);
+        assert!(full.full);
+        assert!(full.verify(), "fresh full snapshot verifies");
+        let e0 = full.through;
+
+        fill_page(&mut k, 2, 9.0);
+        w.begin_step(8);
+        w.map_page(&mut k, &mut v, 2).unwrap();
+        let mut snap = w.snapshot_for(e0, false);
+        assert!(!snap.full);
+        assert!(snap.verify(), "fresh delta snapshot verifies");
+        let idx = snap.k_data.len() / 2;
+        snap.k_data[idx] =
+            f32::from_bits(snap.k_data[idx].to_bits() ^ 0x0040_0001);
+        assert!(!snap.verify(), "flipped bits must be caught");
     }
 
     #[test]

@@ -15,7 +15,8 @@
 //!   --no-window-delta   --window-layout fixed|per_bucket
 //!   --window-upload delta|full   --pipeline on|off
 //!   --copy-threads N   --copy-engine shared|per-pool
-//!   --fault-plan seed:S[:H[:C]] | kind@step,...
+//!   --fault-plan seed:S[:H[:C]] | cseed:S[:H[:C]] | kind@step,...
+//!   --fence-timeout-ms MS
 //!   --max-batch N --prefill-chunk N
 //!   --max-conns N --read-timeout-ms MS
 //!   --deadline-ms MS --ttft-budget-ms MS --max-sat-retries N
@@ -91,8 +92,13 @@ fn print_help() {
              per pool set; default per-pool)\n\
            --fault-plan SPEC (chaos testing: seed:S[:HORIZON[:COUNT]]\n\
              for a seeded schedule, or kind@step,... with kinds\n\
-             panic|loss|stall|alloc|exec; PF_FAULT_SEED=S is the env\n\
-             shorthand; default none)\n\
+             panic|loss|stall|alloc|exec|corrupt-host|corrupt-stage|\n\
+             corrupt-device; cseed:S[:H[:C]] seeds from the corrupt-\n\
+             bearing kind set; PF_FAULT_SEED=S is the env shorthand;\n\
+             default none)\n\
+           --fence-timeout-ms MS (fence watchdog: a staged KV copy\n\
+             unsignaled past this is absorbed as a transfer fault by\n\
+             the degrade ladder; default 2000)\n\
            --max-batch N --prefill-chunk N --config FILE.json\n\
          \n\
          overload hardening (DESIGN.md §12):\n\
@@ -239,6 +245,12 @@ impl Flags {
         }
         if let Some(c) = self.get("classes") {
             cfg.scheduler.classes = config::parse_classes(c)?;
+        }
+        if let Some(t) = self.get("fence-timeout-ms") {
+            cfg.fence_timeout_ms = t
+                .parse::<u64>()
+                .map_err(|_| err!("bad --fence-timeout-ms {t}"))?
+                .max(1);
         }
         Ok(cfg)
     }

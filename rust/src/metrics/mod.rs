@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
+use crate::engine::paged::IntegrityStats;
 use crate::engine::pipeline::PipelineStats;
 use crate::kvpage::WindowStats;
 use crate::runtime::UploadStats;
@@ -207,6 +208,11 @@ pub struct ServingMetrics {
     pub pipeline_repromotes: AtomicU64,
     /// Staged uploads re-applied inline right after a refused submit.
     pub pipeline_retries: AtomicU64,
+    /// Fence-watchdog expiries: stalled transfers abandoned instead
+    /// of hanging a stage boundary. Each also counts as a fault in
+    /// `pipeline_faults`; this split lets operators tell watchdog
+    /// fires from worker panics in the server `stats` op.
+    pub pipeline_fence_timeouts: AtomicU64,
     /// Peak outstanding jobs on this pool set's copy-engine submit
     /// queue (per-pool backpressure ledger, DESIGN.md §10).
     pub pipeline_queue_peak: AtomicU64,
@@ -228,6 +234,20 @@ pub struct ServingMetrics {
     /// (pressure trigger: shed ≥ DeferPrefill or gate closed —
     /// DESIGN.md §13).
     pub sched_edf_ticks: AtomicU64,
+    /// KV pages that failed checksum / byte-audit verification
+    /// (host, staged-snapshot, and device targets together) —
+    /// monotone, invariant I12 (DESIGN.md §14).
+    pub pages_corrupted: AtomicU64,
+    /// Integrity verifications performed (spot scrub + pool clock
+    /// hand + device audit page checks). Monotone, I12.
+    pub pages_scrubbed: AtomicU64,
+    /// Damaged pages neutralized: device re-upload from the host
+    /// copy, staged-snapshot discard + recapture, or host quarantine
+    /// with the owning span scheduled for rebuild. Monotone, I12.
+    pub pages_repaired: AtomicU64,
+    /// Requests retired with the typed `Corrupted` error because a
+    /// damaged span outlived its bounded rebuild budget.
+    pub requests_corrupt_retired: AtomicU64,
     /// Per-class scheduling counters + SLO histograms, indexed by
     /// scheduler class (clamped to [`MAX_CLASSES`] slots).
     pub classes: [ClassMetrics; MAX_CLASSES],
@@ -299,9 +319,20 @@ impl ServingMetrics {
         Self::inc(&self.pipeline_demotes, d.demotes);
         Self::inc(&self.pipeline_repromotes, d.repromotes);
         Self::inc(&self.pipeline_retries, d.retries);
+        Self::inc(&self.pipeline_fence_timeouts, d.fence_timeouts);
         // a high-water level, not a delta
         self.pipeline_queue_peak
             .fetch_max(d.queue_peak, Ordering::Relaxed);
+    }
+
+    /// Merge an integrity delta (`PagedEngine::take_integrity_delta`).
+    /// The engine already folds staged-snapshot discards into its
+    /// corrupted/repaired totals — `PipelineStats::staged_corrupt`
+    /// must NOT be added here too, that would double count.
+    pub fn note_integrity(&self, d: &IntegrityStats) {
+        Self::inc(&self.pages_corrupted, d.pages_corrupted);
+        Self::inc(&self.pages_scrubbed, d.pages_scrubbed);
+        Self::inc(&self.pages_repaired, d.pages_repaired);
     }
 
     /// Fraction of modeled staged-transfer time hidden under execute
@@ -406,6 +437,8 @@ impl ServingMetrics {
              overload: shed={} expired={} sat_retries={} \
              shed_demotes={} shed_repromotes={} deferrals={}\n\
              sched:    edf_ticks={}\n\
+             integrity: corrupted={} scrubbed={} repaired={} \
+             corrupt_retired={}\n\
              TTFT ms:  p50={:.2} p95={:.2} p99={:.2} max={:.2}\n\
              per-token ms: p50={:.3} p95={:.3} p99={:.3} mean={:.3}\n\
              decode step ms: p50={:.3} p95={:.3} (n={})",
@@ -446,6 +479,10 @@ impl ServingMetrics {
             self.shed_repromotes.load(Ordering::Relaxed),
             self.admission_deferrals.load(Ordering::Relaxed),
             self.sched_edf_ticks.load(Ordering::Relaxed),
+            self.pages_corrupted.load(Ordering::Relaxed),
+            self.pages_scrubbed.load(Ordering::Relaxed),
+            self.pages_repaired.load(Ordering::Relaxed),
+            self.requests_corrupt_retired.load(Ordering::Relaxed),
             ms(self.ttft.p50()), ms(self.ttft.p95()), ms(self.ttft.p99()),
             ms(self.ttft.max()),
             ms(self.per_token.p50()), ms(self.per_token.p95()),
@@ -561,6 +598,15 @@ const CSV_COLUMNS: &[CsvCol] = &[
      |m| m.admission_deferrals.load(Ordering::Relaxed).to_string()),
     ("edf_ticks",
      |m| m.sched_edf_ticks.load(Ordering::Relaxed).to_string()),
+    ("pages_corrupted",
+     |m| m.pages_corrupted.load(Ordering::Relaxed).to_string()),
+    ("pages_scrubbed",
+     |m| m.pages_scrubbed.load(Ordering::Relaxed).to_string()),
+    ("pages_repaired",
+     |m| m.pages_repaired.load(Ordering::Relaxed).to_string()),
+    ("requests_corrupt_retired",
+     |m| m.requests_corrupt_retired
+          .load(Ordering::Relaxed).to_string()),
 ];
 
 type ClassCsvCol = (&'static str, fn(&ClassMetrics) -> String);
@@ -689,7 +735,7 @@ mod tests {
         assert_eq!(m.alloc_bytes.load(Ordering::Relaxed), 128);
         assert!(m.csv_row()
                  .ends_with("2048,0,0.000,0,0.000,0,0.0000,0,0,0,0,\
-                             0,0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -712,7 +758,7 @@ mod tests {
         assert!(s.contains("ranges=9"), "{s}");
         assert!(m.csv_row()
                  .ends_with("4096,0.000,0,0.000,0,0.0000,0,0,0,0,\
-                             0,0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -737,9 +783,12 @@ mod tests {
             demotes: 2,
             repromotes: 1,
             retries: 1,
+            fence_timeouts: 3,
             ..Default::default()
         };
         m.note_pipeline(&d);
+        assert_eq!(
+            m.pipeline_fence_timeouts.load(Ordering::Relaxed), 3);
         assert_eq!(m.pipeline_overlap_fraction(), 0.75);
         assert_eq!(m.measured_overlap_fraction(), 0.75);
         // queue peak is a high-water mark: a later, lower level must
@@ -761,7 +810,7 @@ mod tests {
         assert!(s.contains("retries=1"), "{s}");
         assert!(m.csv_row()
                  .ends_with("0.750,0,0.750,2,0.0000,2,2,1,1,\
-                             0,0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0,0,0,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -789,7 +838,10 @@ mod tests {
                      "transfer_retries", "requests_shed",
                      "requests_expired", "saturated_retries",
                      "shed_demotes", "shed_repromotes",
-                     "admission_deferrals", "edf_ticks"] {
+                     "admission_deferrals", "edf_ticks",
+                     "pages_corrupted", "pages_scrubbed",
+                     "pages_repaired",
+                     "requests_corrupt_retired"] {
             assert!(header.contains(&name), "missing column {name}");
         }
     }
@@ -812,8 +864,34 @@ mod tests {
         assert!(s.contains("shed_repromotes=1"), "{s}");
         assert!(s.contains("deferrals=7"), "{s}");
         assert!(s.contains("edf_ticks=6"), "{s}");
-        assert!(m.csv_row().ends_with("3,2,5,4,1,7,6"),
+        assert!(m.csv_row().ends_with("3,2,5,4,1,7,6,0,0,0,0"),
                 "{}", m.csv_row());
+    }
+
+    #[test]
+    fn integrity_counters_merge_and_render() {
+        let m = ServingMetrics::new();
+        m.note_integrity(&IntegrityStats {
+            pages_corrupted: 2,
+            pages_scrubbed: 40,
+            pages_repaired: 2,
+        });
+        // deltas accumulate monotonically (invariant I12)
+        m.note_integrity(&IntegrityStats {
+            pages_corrupted: 1,
+            pages_scrubbed: 8,
+            pages_repaired: 1,
+        });
+        ServingMetrics::inc(&m.requests_corrupt_retired, 1);
+        assert_eq!(m.pages_corrupted.load(Ordering::Relaxed), 3);
+        assert_eq!(m.pages_scrubbed.load(Ordering::Relaxed), 48);
+        assert_eq!(m.pages_repaired.load(Ordering::Relaxed), 3);
+        let s = m.summary();
+        assert!(s.contains("corrupted=3"), "{s}");
+        assert!(s.contains("scrubbed=48"), "{s}");
+        assert!(s.contains("repaired=3"), "{s}");
+        assert!(s.contains("corrupt_retired=1"), "{s}");
+        assert!(m.csv_row().ends_with("3,48,3,1"), "{}", m.csv_row());
     }
 
     #[test]

@@ -719,13 +719,16 @@ mod tests {
     use super::*;
 
     fn full_snap(data: Vec<f32>, through: u64) -> StagedUpload {
-        StagedUpload {
+        let mut snap = StagedUpload {
             through,
             full: true,
             ranges: Vec::new(),
             v_data: data.clone(),
             k_data: data,
-        }
+            sum: 0,
+        };
+        snap.sum = snap.compute_sum();
+        snap
     }
 
     fn zeroed_pair(len: usize) -> DevicePair {
@@ -740,13 +743,15 @@ mod tests {
         let stream = CopyStream::spawn();
         let pair = zeroed_pair(16);
 
-        let snap = StagedUpload {
+        let mut snap = StagedUpload {
             through: 7,
             full: false,
             ranges: vec![(4, 2)],
             k_data: vec![1.0, 2.0],
             v_data: vec![-1.0, -2.0],
+            sum: 0,
         };
+        snap.sum = snap.compute_sum();
         let Ok(fence) = stream.submit(CopyJob { pair, snap, host_len: 16 })
         else {
             panic!("live worker must accept jobs");
@@ -766,13 +771,15 @@ mod tests {
     fn stale_pair_reports_not_ok_but_survives() {
         let stream = CopyStream::spawn();
         let pair = DevicePair::sim(); // never uploaded: can_delta false
-        let snap = StagedUpload {
+        let mut snap = StagedUpload {
             through: 3,
             full: false,
             ranges: vec![(0, 1)],
             k_data: vec![1.0],
             v_data: vec![1.0],
+            sum: 0,
         };
+        snap.sum = snap.compute_sum();
         let Ok(fence) = stream.submit(CopyJob { pair, snap, host_len: 8 })
         else {
             panic!("live worker must accept jobs");

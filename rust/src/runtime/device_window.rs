@@ -279,6 +279,31 @@ impl DeviceWindow {
         self.epoch = through;
     }
 
+    /// Seeded silent corruption for fault injection: bend one resident
+    /// element's mantissa in place (sim backing only — the accounting
+    /// PJRT path has no modeled bytes to damage). Touches neither the
+    /// epoch nor the upload counters, so nothing downstream can tell
+    /// the buffer is wrong without re-reading it — exactly the failure
+    /// the execute-boundary device audit exists to catch (DESIGN.md
+    /// §14). Returns whether an element was actually damaged.
+    pub fn corrupt_for_test(&mut self, salt: u64) -> bool {
+        if !self.valid || self.len == 0 {
+            return false;
+        }
+        let Backing::Sim(buf) = &mut self.backing else {
+            return false;
+        };
+        let idx = (salt as usize) % self.len;
+        let cur = buf.as_slice()[idx];
+        // Mantissa-only flip: never manufactures NaN/Inf from a
+        // finite value, so the damage survives arithmetic and
+        // comparisons instead of tripping debug asserts.
+        let bent = f32::from_bits(cur.to_bits() ^ 0x0040_0001);
+        buf.write_range(idx, &[bent])
+            .expect("in-bounds single-element corruption write");
+        true
+    }
+
     /// Device-side contents (sim backing only; tests and benches verify
     /// the dirty-range protocol against these).
     pub fn contents(&self) -> Option<&[f32]> {
@@ -348,6 +373,30 @@ mod tests {
         assert_eq!(dev.stats().delta_uploads, 0);
         assert!(dev.contents().is_none(), "no modeled contents");
         assert!(dev.upload_ranges(&host, &[(0, 1)]).is_err());
+    }
+
+    #[test]
+    fn corruption_hook_bends_one_element_silently() {
+        let mut dev = DeviceWindow::sim();
+        let host = vec![1.0f32; 16];
+        dev.apply_at(&host, &UploadPlan::Full, 7);
+        let before = *dev.stats();
+
+        assert!(dev.corrupt_for_test(5));
+        let got = dev.contents().unwrap();
+        let diffs: Vec<usize> = (0..host.len())
+            .filter(|&i| got[i].to_bits() != host[i].to_bits())
+            .collect();
+        assert_eq!(diffs, vec![5], "exactly one element bent");
+        assert!(got[5].is_finite(), "mantissa flip stays finite");
+        assert_eq!(dev.epoch(), 7, "epoch untouched — damage is silent");
+        assert_eq!(*dev.stats(), before, "no counters move");
+
+        let mut lost = DeviceWindow::sim();
+        assert!(!lost.corrupt_for_test(1), "no resident buffer");
+        let mut acc = DeviceWindow::pjrt();
+        acc.apply(&host, &UploadPlan::Full);
+        assert!(!acc.corrupt_for_test(1), "no modeled bytes on pjrt");
     }
 
     #[test]

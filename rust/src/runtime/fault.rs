@@ -16,6 +16,21 @@ use crate::trace::Rng;
 use crate::util::Result;
 use crate::{bail, err};
 
+/// Where an injected KV corruption lands (DESIGN.md §14): the three
+/// stations a page's bytes pass through on the host→device path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptTarget {
+    /// Flip bits in a host pool page *without* restamping its
+    /// checksum (models a torn sharded flush / stray write).
+    HostPage,
+    /// Flip bits in the staged snapshot after it was checksummed
+    /// (models corruption in flight on the copy stream).
+    StagedSnapshot,
+    /// Flip bits in the live device window contents (models a
+    /// device-side upset after a clean upload).
+    DeviceWindow,
+}
+
 /// One injectable failure mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultKind {
@@ -29,15 +44,36 @@ pub enum FaultKind {
     AllocFail,
     /// Fail the next execute (device-side launch failure).
     ExecFail,
+    /// Silently corrupt KV bytes at the given station.
+    Corrupt(CorruptTarget),
 }
 
 impl FaultKind {
+    /// The legacy draw table for `seed:` plans. Frozen at the PR 6
+    /// set on purpose: widening it would silently reshuffle every
+    /// existing seed's schedule (the CI chaos matrix pins seeds
+    /// 3/17/29). Corruption-bearing schedules draw from
+    /// [`ALL_WITH_CORRUPT`](Self::ALL_WITH_CORRUPT) via `cseed:`.
     pub const ALL: [FaultKind; 5] = [
         FaultKind::WorkerPanic,
         FaultKind::BufferLoss,
         FaultKind::Stall,
         FaultKind::AllocFail,
         FaultKind::ExecFail,
+    ];
+
+    /// The widened draw table — every legacy kind plus the three
+    /// corruption targets — used only by [`FaultPlan::seeded_with_corrupt`]
+    /// (`cseed:` specs), so legacy `seed:` schedules stay byte-stable.
+    pub const ALL_WITH_CORRUPT: [FaultKind; 8] = [
+        FaultKind::WorkerPanic,
+        FaultKind::BufferLoss,
+        FaultKind::Stall,
+        FaultKind::AllocFail,
+        FaultKind::ExecFail,
+        FaultKind::Corrupt(CorruptTarget::HostPage),
+        FaultKind::Corrupt(CorruptTarget::StagedSnapshot),
+        FaultKind::Corrupt(CorruptTarget::DeviceWindow),
     ];
 
     pub fn as_str(&self) -> &'static str {
@@ -47,6 +83,15 @@ impl FaultKind {
             FaultKind::Stall => "stall",
             FaultKind::AllocFail => "alloc",
             FaultKind::ExecFail => "exec",
+            FaultKind::Corrupt(CorruptTarget::HostPage) => {
+                "corrupt-host"
+            }
+            FaultKind::Corrupt(CorruptTarget::StagedSnapshot) => {
+                "corrupt-stage"
+            }
+            FaultKind::Corrupt(CorruptTarget::DeviceWindow) => {
+                "corrupt-device"
+            }
         }
     }
 
@@ -57,9 +102,19 @@ impl FaultKind {
             "stall" => Ok(FaultKind::Stall),
             "alloc" => Ok(FaultKind::AllocFail),
             "exec" => Ok(FaultKind::ExecFail),
+            "corrupt-host" => {
+                Ok(FaultKind::Corrupt(CorruptTarget::HostPage))
+            }
+            "corrupt-stage" => {
+                Ok(FaultKind::Corrupt(CorruptTarget::StagedSnapshot))
+            }
+            "corrupt-device" => {
+                Ok(FaultKind::Corrupt(CorruptTarget::DeviceWindow))
+            }
             other => Err(err!(
                 "unknown fault kind '{other}' (want \
-                 panic|loss|stall|alloc|exec)"
+                 panic|loss|stall|alloc|exec|corrupt-host|\
+                 corrupt-stage|corrupt-device)"
             )),
         }
     }
@@ -111,12 +166,34 @@ impl FaultPlan {
         FaultPlan { events }
     }
 
-    /// Parse a `--fault-plan` spec. Two forms:
+    /// [`seeded`](Self::seeded) over the widened
+    /// [`FaultKind::ALL_WITH_CORRUPT`] table (the `cseed:` spec
+    /// form). A distinct seed salt decorrelates it from the legacy
+    /// stream, so `seed:S` schedules are untouched by the widening.
+    pub fn seeded_with_corrupt(seed: u64, horizon: u64,
+                               count: usize) -> Self {
+        let mut rng = Rng::seeded(seed ^ 0xC0DE_FA17_C0DE_FA17);
+        let table = FaultKind::ALL_WITH_CORRUPT;
+        let mut events: Vec<FaultEvent> = (0..count)
+            .map(|_| FaultEvent {
+                step: rng.below(horizon.max(1)),
+                kind: table
+                    [rng.below(table.len() as u64) as usize],
+            })
+            .collect();
+        events.sort_by_key(|e| e.step);
+        FaultPlan { events }
+    }
+
+    /// Parse a `--fault-plan` spec. Three forms:
     ///
     /// * `seed:S` or `seed:S:HORIZON:COUNT` — a [`seeded`] plan
     ///   (defaults: horizon 240, count 12);
+    /// * `cseed:S[:HORIZON[:COUNT]]` — same, drawing from the
+    ///   widened corruption-bearing kind table
+    ///   ([`seeded_with_corrupt`](Self::seeded_with_corrupt));
     /// * explicit comma list `kind@step,...`, e.g.
-    ///   `panic@12,loss@30,stall@44,alloc@50,exec@61`.
+    ///   `panic@12,corrupt-host@30,stall@44,alloc@50,exec@61`.
     ///
     /// The empty string and `none` parse to the empty plan.
     pub fn parse(spec: &str) -> Result<Self> {
@@ -124,7 +201,13 @@ impl FaultPlan {
         if spec.is_empty() || spec == "none" {
             return Ok(FaultPlan::none());
         }
-        if let Some(rest) = spec.strip_prefix("seed:") {
+        let seeded_form = spec
+            .strip_prefix("seed:")
+            .map(|rest| (rest, false))
+            .or_else(|| {
+                spec.strip_prefix("cseed:").map(|rest| (rest, true))
+            });
+        if let Some((rest, with_corrupt)) = seeded_form {
             let parts: Vec<&str> = rest.split(':').collect();
             let parse_u64 = |s: &str, what: &str| -> Result<u64> {
                 s.parse::<u64>().map_err(|_| {
@@ -143,7 +226,11 @@ impl FaultPlan {
             if parts.len() > 3 {
                 bail!("fault plan: too many ':' fields in '{spec}'");
             }
-            return Ok(FaultPlan::seeded(seed, horizon, count));
+            return Ok(if with_corrupt {
+                FaultPlan::seeded_with_corrupt(seed, horizon, count)
+            } else {
+                FaultPlan::seeded(seed, horizon, count)
+            });
         }
         let mut events = vec![];
         for item in spec.split(',') {
@@ -163,14 +250,18 @@ impl FaultPlan {
     }
 
     /// `PF_FAULT_SEED=S` → the default seeded plan for `S`
-    /// (horizon 240, count 12); unset/unparsable → `None`.
+    /// (horizon 240, count 12). Any non-numeric value is parsed as a
+    /// full [`parse`](Self::parse) spec, so the CI matrix can pin
+    /// corruption-bearing schedules (`PF_FAULT_SEED=cseed:41`)
+    /// through the same variable. Unset / unparsable / empty →
+    /// `None`.
     pub fn from_env() -> Option<Self> {
-        let seed = std::env::var("PF_FAULT_SEED")
-            .ok()?
-            .trim()
-            .parse::<u64>()
-            .ok()?;
-        Some(FaultPlan::seeded(seed, 240, 12))
+        let raw = std::env::var("PF_FAULT_SEED").ok()?;
+        let raw = raw.trim();
+        if let Ok(seed) = raw.parse::<u64>() {
+            return Some(FaultPlan::seeded(seed, 240, 12));
+        }
+        FaultPlan::parse(raw).ok().filter(|p| !p.is_empty())
     }
 }
 
@@ -236,7 +327,9 @@ impl FaultInjector {
 /// separate enum (not new [`FaultKind`] variants) on purpose:
 /// `FaultPlan::seeded` draws kinds uniformly over `FaultKind::ALL`,
 /// so widening that array would silently reshuffle every existing
-/// seed's schedule (the CI chaos matrix pins seeds 3/17/29).
+/// seed's schedule (the CI chaos matrix pins seeds 3/17/29). The
+/// PR 9 corruption kinds dodge the same hazard through the separate
+/// [`FaultKind::ALL_WITH_CORRUPT`] table + `cseed:` spec form.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ServingFaultKind {
     /// Client drops the connection mid-generate (reply send fails).
@@ -455,6 +548,63 @@ mod tests {
         assert!(FaultPlan::parse("panic@z").is_err());
         assert!(FaultPlan::parse("frob@3").is_err());
         assert!(FaultPlan::parse("panic-3").is_err());
+    }
+
+    #[test]
+    fn corrupt_kinds_roundtrip_and_parse_in_explicit_lists() {
+        for kind in [
+            FaultKind::Corrupt(CorruptTarget::HostPage),
+            FaultKind::Corrupt(CorruptTarget::StagedSnapshot),
+            FaultKind::Corrupt(CorruptTarget::DeviceWindow),
+        ] {
+            assert_eq!(FaultKind::parse(kind.as_str()).unwrap(), kind);
+        }
+        let p = FaultPlan::parse(
+            "corrupt-device@9,corrupt-host@2, corrupt-stage@5",
+        )
+        .unwrap();
+        let got: Vec<(u64, &str)> = p
+            .events()
+            .iter()
+            .map(|e| (e.step, e.kind.as_str()))
+            .collect();
+        assert_eq!(
+            got,
+            vec![(2, "corrupt-host"), (5, "corrupt-stage"),
+                 (9, "corrupt-device")]
+        );
+        assert!(FaultPlan::parse("corrupt@3").is_err(),
+                "bare 'corrupt' must not parse");
+    }
+
+    #[test]
+    fn cseed_widens_the_draw_table_and_leaves_seed_form_stable() {
+        // legacy seed: schedules must not move — the CI chaos matrix
+        // pins 3/17/29 against exactly these streams
+        for seed in [3u64, 17, 29] {
+            let p = FaultPlan::parse(&format!("seed:{seed}")).unwrap();
+            assert_eq!(p, FaultPlan::seeded(seed, 240, 12));
+            assert!(
+                p.events().iter().all(|e| {
+                    !matches!(e.kind, FaultKind::Corrupt(_))
+                }),
+                "seed: form must never draw corruption"
+            );
+        }
+        // cseed: replays identically and reaches the widened table
+        let c = FaultPlan::parse("cseed:41").unwrap();
+        assert_eq!(c, FaultPlan::seeded_with_corrupt(41, 240, 12));
+        assert_eq!(FaultPlan::parse("cseed:41:60:5").unwrap(),
+                   FaultPlan::seeded_with_corrupt(41, 60, 5));
+        let storm = FaultPlan::seeded_with_corrupt(41, 240, 48);
+        assert!(
+            storm.events().iter().any(|e| {
+                matches!(e.kind, FaultKind::Corrupt(_))
+            }),
+            "a 48-event cseed storm must include corruption"
+        );
+        assert!(FaultPlan::parse("cseed:x").is_err());
+        assert!(FaultPlan::parse("cseed:1:2:3:4").is_err());
     }
 
     #[test]

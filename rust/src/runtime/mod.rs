@@ -32,8 +32,8 @@ use crate::{ensure, err};
 pub use copy_stream::{CopyDone, CopyEngine, CopyJob, CopyStream,
                       DevicePair, Fence, FenceWait, Poisoned};
 pub use device_window::{DeviceWindow, UploadStats};
-pub use fault::{FaultEvent, FaultInjector, FaultKind, FaultPlan,
-                ServingFaultEvent, ServingFaultInjector,
+pub use fault::{CorruptTarget, FaultEvent, FaultInjector, FaultKind,
+                FaultPlan, ServingFaultEvent, ServingFaultInjector,
                 ServingFaultKind, ServingFaultPlan};
 pub use tensor::HostTensor;
 

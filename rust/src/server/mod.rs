@@ -413,8 +413,14 @@ fn stats_json(coord: &Coordinator) -> String {
         ("per_token_p50_ms",
          Value::num(m.per_token.p50().as_secs_f64() * 1e3)),
         ("transfer_faults", c(&m.pipeline_faults)),
+        ("transfer_retries", c(&m.pipeline_retries)),
+        ("fence_timeouts", c(&m.pipeline_fence_timeouts)),
         ("pool_demotes", c(&m.pipeline_demotes)),
         ("pool_repromotes", c(&m.pipeline_repromotes)),
+        ("pages_corrupted", c(&m.pages_corrupted)),
+        ("pages_scrubbed", c(&m.pages_scrubbed)),
+        ("pages_repaired", c(&m.pages_repaired)),
+        ("requests_corrupt_retired", c(&m.requests_corrupt_retired)),
         ("requests_rejected", c(&m.requests_rejected)),
         ("requests_shed", c(&m.requests_shed)),
         ("requests_expired", c(&m.requests_expired)),

@@ -27,6 +27,12 @@ pub enum EngineError {
     /// Shed by the overload ladder (ShedNewest / RejectAll) or the
     /// graceful-drain path — the server chose not to serve it.
     Overloaded,
+    /// KV integrity damage hit the request's span and the rebuild
+    /// budget ran out (DESIGN.md §14). No wrong tokens were emitted —
+    /// the stream was cut before the damaged step's output; an
+    /// identical resubmission recomputes from scratch and plausibly
+    /// succeeds, so this is retryable.
+    Corrupted,
 }
 
 impl EngineError {
@@ -39,6 +45,7 @@ impl EngineError {
             EngineError::ContextOverflow => "context_overflow",
             EngineError::Expired => "expired",
             EngineError::Overloaded => "overloaded",
+            EngineError::Corrupted => "corrupted",
         }
     }
 
@@ -49,7 +56,8 @@ impl EngineError {
         match self {
             EngineError::Saturated
             | EngineError::QueueFull
-            | EngineError::Overloaded => true,
+            | EngineError::Overloaded
+            | EngineError::Corrupted => true,
             EngineError::EmptyPrompt
             | EngineError::ContextOverflow
             | EngineError::Expired => false,
@@ -248,6 +256,7 @@ mod tests {
             (Saturated, "saturated", true),
             (QueueFull, "queue_full", true),
             (Overloaded, "overloaded", true),
+            (Corrupted, "corrupted", true),
             (EmptyPrompt, "empty_prompt", false),
             (ContextOverflow, "context_overflow", false),
             (Expired, "expired", false),

@@ -20,6 +20,21 @@
 //! allocator audit I1–I4 after every injected fault, and that
 //! zero-fault runs report zero demotions/retries.
 //!
+//! Corruption-bearing schedules (`FaultPlan::seeded_with_corrupt`,
+//! the `cseed:` spec form) extend the storm with silent KV damage at
+//! the three §14 stations — host pool page, staged snapshot, live
+//! device window. The harness runs the engine-shaped integrity
+//! protocol against them: a checksum scrub over the live pages before
+//! every gather (repairing misses byte-for-byte from the fault-free
+//! replica, the stand-in for quarantine + span re-prefill), a
+//! device audit of the FRONT pair at the execute boundary (repairing
+//! via `resync_front`), and the pipeline's own stamp check at the
+//! staged-snapshot apply boundary. The same execute-boundary byte
+//! compare then proves repair converged: corruption, like every
+//! other fault, may cost throughput but never a byte. Invariant I12
+//! (monotone integrity counters) rides the same per-step snapshot
+//! that checks I10.
+//!
 //! `PF_FAULT_SEED=S` narrows the schedule sweep to one seed (the CI
 //! chaos matrix); `PF_COPY_ENGINE=shared` stages through a shared
 //! multiplexed engine; `PF_COPY_THREADS=N` shards the gather.
@@ -34,8 +49,8 @@ use paged_flex::kvpage::{
     AllocError, GrowthPolicy, HostPool, PageAllocator, PageManager,
     PoolGeometry, ResidentWindow,
 };
-use paged_flex::runtime::{CopyEngine, DeviceWindow, FaultInjector,
-                          FaultKind, FaultPlan};
+use paged_flex::runtime::{CopyEngine, CorruptTarget, DeviceWindow,
+                          FaultInjector, FaultKind, FaultPlan};
 use paged_flex::trace::Rng;
 
 const N_PAGES: u32 = 48;
@@ -159,6 +174,19 @@ struct ChaosHarness {
     rng: Rng,
     counter_p: f32,
     counter_s: f32,
+    /// Deterministic per-event salt for corruption injection (a
+    /// dedicated counter so faults never perturb the shared op rng —
+    /// both replicas must keep drawing the same op sequence).
+    corrupt_salt: u64,
+    /// Host/device corruptions that actually landed (a scheduled
+    /// event is a no-op when no live page qualifies).
+    host_corrupts: u64,
+    device_corrupts: u64,
+    /// Engine-shaped integrity ledger (invariant I12): all monotone.
+    pages_corrupted: u64,
+    pages_scrubbed: u64,
+    pages_repaired: u64,
+    device_resyncs: u64,
 }
 
 impl ChaosHarness {
@@ -184,6 +212,13 @@ impl ChaosHarness {
             rng: Rng::seeded(seed),
             counter_p: 0.0,
             counter_s: 0.0,
+            corrupt_salt: 0,
+            host_corrupts: 0,
+            device_corrupts: 0,
+            pages_corrupted: 0,
+            pages_scrubbed: 0,
+            pages_repaired: 0,
+            device_resyncs: 0,
         }
     }
 
@@ -211,6 +246,138 @@ impl ChaosHarness {
                 // the engine's pool-dry admission drains staging
                 self.pipe.drain();
             }
+            FaultKind::Corrupt(target) => self.apply_corrupt(target),
+        }
+    }
+
+    /// Silent KV damage at one of the three §14 stations, exactly as
+    /// `engine::paged` injects it. Only the pipelined replica is
+    /// hit; the scrub/audit passes inside `decode_step_op` must
+    /// repair it before the execute-boundary byte compare.
+    fn apply_corrupt(&mut self, target: CorruptTarget) {
+        self.corrupt_salt += 1;
+        let salt = self.corrupt_salt;
+        match target {
+            CorruptTarget::HostPage => {
+                if self.live.is_empty() {
+                    return;
+                }
+                let id = self.live[salt as usize % self.live.len()];
+                let pages =
+                    self.p.mgr.table(id).unwrap().pages().to_vec();
+                // completed pages only, as the engine injects it:
+                // the tail page's next token write reseals it, so
+                // tail bytes belong to the write path, not the scrub
+                if pages.len() < 2 {
+                    return;
+                }
+                let page = pages[salt as usize % (pages.len() - 1)];
+                if salt & 1 == 0 {
+                    self.p.k.corrupt_page_silently(page, salt);
+                } else {
+                    self.p.v.corrupt_page_silently(page, salt);
+                }
+                self.host_corrupts += 1;
+            }
+            CorruptTarget::StagedSnapshot => {
+                // one-shot: the pipeline's own stamp check discards
+                // the bent snapshot at the apply boundary
+                self.pipe.corrupt_next_snapshot_for_test();
+            }
+            CorruptTarget::DeviceWindow => {
+                if self.pipe.corrupt_front_for_test(salt) {
+                    self.device_corrupts += 1;
+                }
+            }
+        }
+    }
+
+    /// Engine-shaped host scrub at correctness-mode budget (every
+    /// live page, every decode step): verify both pools against
+    /// their write-time stamps before the gather can copy damage
+    /// into the window. A miss is repaired byte-for-byte from the
+    /// fault-free replica — the harness's stand-in for the engine's
+    /// quarantine + span-re-prefill rung (the replicas must keep
+    /// identical page numbering, which a real re-prefill through the
+    /// allocator would break).
+    fn scrub_hosts(&mut self) {
+        let mut pages: Vec<u32> = vec![];
+        for &id in &self.live {
+            pages.extend_from_slice(
+                self.p.mgr.table(id).unwrap().pages());
+        }
+        pages.sort_unstable();
+        pages.dedup();
+        for pg in pages {
+            self.scrub_one(pg);
+        }
+    }
+
+    /// Verify one page in both pools; repair misses from the
+    /// reference replica and restamp.
+    fn scrub_one(&mut self, pg: u32) {
+        self.pages_scrubbed += 2;
+        let k_ok = self.p.k.verify_page(pg);
+        let v_ok = self.p.v.verify_page(pg);
+        if !k_ok {
+            self.pages_corrupted += 1;
+            let flat = self.s.k.extract_page(pg);
+            self.p.k.repair_page(pg, &flat);
+            self.pages_repaired += 1;
+        }
+        if !v_ok {
+            self.pages_corrupted += 1;
+            let flat = self.s.v.extract_page(pg);
+            self.p.v.repair_page(pg, &flat);
+            self.pages_repaired += 1;
+        }
+    }
+
+    /// Execute-boundary device audit (DESIGN.md §14): compare the
+    /// FRONT pair against the live window for this step's mapped
+    /// pages; any divergence re-uploads the whole window from the
+    /// intact host copy (`resync_front`) before anything reads it.
+    fn audit_device(&mut self, mapped: &[(u64, Vec<u32>)]) {
+        let pe = GEO.page_elems();
+        let mut bad = 0u64;
+        let mut audited = 0u64;
+        {
+            let fk = match self.pipe.front().k.contents() {
+                Some(c) => c,
+                None => return,
+            };
+            let fv = match self.pipe.front().v.contents() {
+                Some(c) => c,
+                None => return,
+            };
+            for (_, pages) in mapped {
+                for &pg in pages {
+                    let Some(slot) = self.p.win.slot(pg) else {
+                        continue;
+                    };
+                    audited += 1;
+                    for layer in 0..GEO.n_layers {
+                        let off = (layer * WINDOW_PAGES
+                                   + slot as usize) * pe;
+                        if fk[off..off + pe]
+                            != *self.p.win.k_page_slice(layer, slot)
+                            || fv[off..off + pe]
+                                != *self.p.win.v_page_slice(layer,
+                                                            slot)
+                        {
+                            bad += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        self.pages_scrubbed += audited;
+        if bad > 0 {
+            self.pages_corrupted += bad;
+            self.pipe.resync_front(&self.p.win);
+            self.pages_repaired += bad;
+            self.device_resyncs += 1;
         }
     }
 
@@ -238,6 +405,12 @@ impl ChaosHarness {
                     self.p.mgr.register_prefix(id, &prompt).unwrap();
                     self.s.mgr.register_prefix(id, &prompt).unwrap();
                 }
+                // the engine reseals at its prefill flush boundary;
+                // this op writes outside a decode step, so restamp
+                // here — injected corruption must always land on a
+                // sealed page (the scrub's detection domain, §14)
+                self.p.k.seal_stale();
+                self.p.v.seal_stale();
             }
             (Err(_), Err(_)) => {}
             _ => panic!("replicas diverged on reserve outcome"),
@@ -266,6 +439,9 @@ impl ChaosHarness {
                                     &mut self.counter_s);
                 self.p.mgr.note_assigned(id, extra).unwrap();
                 self.s.mgr.note_assigned(id, extra).unwrap();
+                // restamp boundary, as in reserve_op (§14)
+                self.p.k.seal_stale();
+                self.p.v.seal_stale();
             }
             (Err(_), Err(_)) => {}
             _ => panic!("replicas diverged on append outcome"),
@@ -278,6 +454,17 @@ impl ChaosHarness {
         }
         let i = self.rng.below(self.live.len() as u64) as usize;
         let id = self.live.swap_remove(i);
+        // verify the retiring span before its pages can recycle: a
+        // reallocated page is only partially rewritten by its next
+        // owner, so damage parked beyond the new sequence's tokens
+        // would otherwise outlive the checksum (the engine gets away
+        // without this pass because attention masks beyond-length
+        // rows; the harness's full-page byte compare does not)
+        let retiring =
+            self.p.mgr.table(id).unwrap().pages().to_vec();
+        for pg in retiring {
+            self.scrub_one(pg);
+        }
         for page in self.p.mgr.free(id).unwrap() {
             self.p.win.forget(page);
         }
@@ -294,6 +481,9 @@ impl ChaosHarness {
     /// One engine-shaped decode step over a random batch; verifies the
     /// execute-boundary equivalence inside.
     fn decode_step_op(&mut self, ctx: &str) {
+        // §14 scrub pass first: host damage must be repaired before
+        // this step's gather (or a CoW copy below) can propagate it
+        self.scrub_hosts();
         let mut batch: Vec<u64> = vec![];
         let want = 1 + self.rng.below(BATCH_CAP as u64) as usize;
         for _ in 0..want {
@@ -349,6 +539,9 @@ impl ChaosHarness {
         }
         self.p.win.flush_pending(&self.p.k, &self.p.v);
         self.pipe.pre_execute(&mut self.p.win);
+        // §14 device audit at the execute boundary: repair FRONT
+        // damage before the byte compare (and the logits) read it
+        self.audit_device(&mapped);
 
         // serial fault-free replica
         self.s.win.begin_step(WINDOW_PAGES);
@@ -451,8 +644,9 @@ impl ChaosHarness {
     }
 }
 
-/// I10 snapshot: every cumulative fault/transfer counter, plus retired
-/// upload bytes. All must be monotone non-decreasing under chaos.
+/// I10 + I12 snapshot: every cumulative fault/transfer counter,
+/// retired upload bytes, and the integrity ledger. All must be
+/// monotone non-decreasing under chaos.
 #[derive(Clone, Copy, Default)]
 struct Monotone {
     steps: u64,
@@ -465,6 +659,10 @@ struct Monotone {
     retries: u64,
     fence_timeouts: u64,
     bytes_uploaded: u64,
+    staged_corrupt: u64,
+    pages_corrupted: u64,
+    pages_scrubbed: u64,
+    pages_repaired: u64,
 }
 
 impl Monotone {
@@ -481,27 +679,40 @@ impl Monotone {
             retries: s.retries,
             fence_timeouts: s.fence_timeouts,
             bytes_uploaded: h.pipe.upload_stats().bytes_uploaded,
+            staged_corrupt: s.staged_corrupt,
+            pages_corrupted: h.pages_corrupted,
+            pages_scrubbed: h.pages_scrubbed,
+            pages_repaired: h.pages_repaired,
         }
     }
 
     fn assert_ge(&self, prev: &Monotone, ctx: &str) {
-        for (name, now, was) in [
-            ("steps", self.steps, prev.steps),
-            ("staged_uploads", self.staged_uploads,
+        for (inv, name, now, was) in [
+            ("I10", "steps", self.steps, prev.steps),
+            ("I10", "staged_uploads", self.staged_uploads,
              prev.staged_uploads),
-            ("staged_bytes", self.staged_bytes, prev.staged_bytes),
-            ("poisons", self.poisons, prev.poisons),
-            ("faults", self.faults, prev.faults),
-            ("demotes", self.demotes, prev.demotes),
-            ("repromotes", self.repromotes, prev.repromotes),
-            ("retries", self.retries, prev.retries),
-            ("fence_timeouts", self.fence_timeouts,
+            ("I10", "staged_bytes", self.staged_bytes,
+             prev.staged_bytes),
+            ("I10", "poisons", self.poisons, prev.poisons),
+            ("I10", "faults", self.faults, prev.faults),
+            ("I10", "demotes", self.demotes, prev.demotes),
+            ("I10", "repromotes", self.repromotes, prev.repromotes),
+            ("I10", "retries", self.retries, prev.retries),
+            ("I10", "fence_timeouts", self.fence_timeouts,
              prev.fence_timeouts),
-            ("bytes_uploaded", self.bytes_uploaded,
+            ("I10", "bytes_uploaded", self.bytes_uploaded,
              prev.bytes_uploaded),
+            ("I12", "staged_corrupt", self.staged_corrupt,
+             prev.staged_corrupt),
+            ("I12", "pages_corrupted", self.pages_corrupted,
+             prev.pages_corrupted),
+            ("I12", "pages_scrubbed", self.pages_scrubbed,
+             prev.pages_scrubbed),
+            ("I12", "pages_repaired", self.pages_repaired,
+             prev.pages_repaired),
         ] {
             assert!(now >= was,
-                    "{ctx}: I10 counter {name} went backwards \
+                    "{ctx}: {inv} counter {name} went backwards \
                      ({was} -> {now})");
         }
     }
@@ -511,14 +722,21 @@ impl Monotone {
 /// harness for end-state assertions.
 fn chaos_run(seed: u64, steps: usize, fault_count: usize)
              -> ChaosHarness {
+    let plan = FaultPlan::seeded(
+        seed, (steps as u64).saturating_sub(steps as u64 / 4),
+        fault_count);
+    chaos_run_plan(plan, seed, steps)
+}
+
+/// Drive an explicit plan (legacy or corruption-bearing) through the
+/// harness; `seed` picks the op-sequence rng and growth policy.
+fn chaos_run_plan(plan: FaultPlan, seed: u64, steps: usize)
+                  -> ChaosHarness {
     let policy = if seed % 2 == 0 {
         GrowthPolicy::Exact
     } else {
         GrowthPolicy::PowerOfTwo
     };
-    let plan = FaultPlan::seeded(
-        seed, (steps as u64).saturating_sub(steps as u64 / 4),
-        fault_count);
     let mut inj = FaultInjector::new(plan);
     let mut h = ChaosHarness::new(31_000 + seed, policy,
                                   env_copy_threads(1));
@@ -559,6 +777,49 @@ fn seeded_fault_schedules_keep_streams_byte_identical() {
         let ps = h.pipe.stats();
         assert!(ps.staged_uploads > 0,
                 "seed {seed}: pipeline never staged ({ps:?})");
+    }
+}
+
+#[test]
+fn corruption_schedules_converge_byte_identical_after_repair() {
+    // `cseed:`-form plans add the three §14 corruption stations to
+    // the storm; the scrub/audit/stamp-check ladder must repair
+    // every hit before the execute-boundary byte compare inside
+    // `decode_step_op` — which is the real lock here: a missed or
+    // botched repair fails the run as a byte divergence.
+    let mut exercised = 0u64;
+    for seed in fault_seeds(&[41, 57]) {
+        let steps = 260usize;
+        let plan = FaultPlan::seeded_with_corrupt(
+            seed, (steps as u64).saturating_sub(steps as u64 / 4),
+            14);
+        let h = chaos_run_plan(plan, seed, steps);
+        let ps = h.pipe.stats();
+        assert!(ps.staged_uploads > 0,
+                "seed {seed}: pipeline never staged ({ps:?})");
+        assert_eq!(h.pages_corrupted, h.pages_repaired,
+                   "seed {seed}: detected damage left unrepaired");
+        assert!(h.pages_scrubbed > 0,
+                "seed {seed}: scrub detection pass never ran");
+        exercised += h.host_corrupts + h.device_corrupts
+            + ps.staged_corrupt;
+    }
+    assert!(exercised >= 1,
+            "corruption sweep never landed a single hit — the \
+             schedules exercise nothing");
+}
+
+#[test]
+fn i12_corruption_storm_counters_stay_monotone() {
+    // Denser corruption-bearing schedule; the per-step Monotone
+    // snapshot inside `chaos_run_plan` checks I10 + I12 throughout.
+    for seed in fault_seeds(&[303]) {
+        let plan = FaultPlan::seeded_with_corrupt(seed, 150, 30);
+        let h = chaos_run_plan(plan, seed, 200);
+        assert_eq!(h.pages_corrupted, h.pages_repaired,
+                   "seed {seed}: corrupted/repaired diverged at end");
+        assert!(h.pages_scrubbed >= h.pages_corrupted,
+                "seed {seed}: more detections than verifications");
     }
 }
 
@@ -649,6 +910,15 @@ fn zero_fault_run_reports_zero_demotes_and_retries() {
                "clean run tripped the watchdog ({ps:?})");
     assert_eq!(ps.poisons, 0, "clean run reported poisons ({ps:?})");
     assert_eq!(h.pipe.degrade_level(), DegradeLevel::Pipelined);
+    // §14: scrubbing runs on clean steps too, but the repair path is
+    // corruption-only — a zero-fault run must never touch it
+    assert!(h.pages_scrubbed > 0, "scrub pass never ran");
+    assert_eq!(h.pages_corrupted, 0,
+               "clean run detected phantom corruption");
+    assert_eq!(h.pages_repaired, 0, "clean run repaired something");
+    assert_eq!(h.device_resyncs, 0, "clean run resynced the front");
+    assert_eq!(ps.staged_corrupt, 0,
+               "clean run discarded a snapshot ({ps:?})");
 }
 
 #[test]
