@@ -1,0 +1,341 @@
+//! Prefix-reuse gate — proves cross-request prefix sharing pays for
+//! itself AND never changes what a request decodes (DESIGN.md §15).
+//!
+//! A shared-prefix multi-tenant trace (`sim::load::shared_prefix_trace`)
+//! runs twice through a deterministic tick rig over the real
+//! `PageManager`: once with the radix prefix cache on, once with it
+//! off. The rig keeps a simulated physical page store (page id →
+//! token slots) and derives each greedy token from an FNV-1a hash of
+//! the context *read back through the block table*, so a wrong alias,
+//! a missed CoW copy, or a recycled-while-cached page changes the
+//! bytes a sequence sees and therefore its stream.
+//!
+//! Exits nonzero (CI gate) when any of these break:
+//!   * prefill-skip fraction (cached / total prompt tokens) < 50%
+//!     on the shared-prefix trace with the cache on;
+//!   * pages allocated per request with sharing is not strictly
+//!     below the no-sharing run;
+//!   * any greedy stream differs between the two runs (sharing must
+//!     be invisible to decoded bytes);
+//!   * the cache-off control reports cached tokens or shared pages;
+//!   * a cached-prefix read-back diverges from the admitted prompt;
+//!   * the pool is not fully restored after drain + cache flush.
+
+include!("common.rs");
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use paged_flex::harness::print_table;
+use paged_flex::kvpage::{GrowthPolicy, PageAllocator, PageManager};
+use paged_flex::sim::load::shared_prefix_trace;
+
+const PAGE_SIZE: usize = 8;
+const N_PAGES: u32 = 256; // 2048-token pool
+const MAX_RUNNING: usize = 8;
+const VOCAB: u32 = 512;
+const TENANTS: usize = 4;
+const PREFIX_LEN: usize = 64; // 8 shared pages per tenant
+const SUFFIX_LEN: usize = 16; // 2 private pages per request
+const MAX_NEW: usize = 16;
+
+fn fnv1a(tokens: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Token at logical position `pos`, read through the block table from
+/// the simulated physical store. u32::MAX marks never-written slots.
+fn read_ctx(store: &HashMap<u32, Vec<u32>>, pages: &[u32], len: usize)
+            -> Vec<u32> {
+    (0..len)
+        .map(|i| {
+            store
+                .get(&pages[i / PAGE_SIZE])
+                .map(|s| s[i % PAGE_SIZE])
+                .unwrap_or(u32::MAX)
+        })
+        .collect()
+}
+
+fn write_tok(store: &mut HashMap<u32, Vec<u32>>, pages: &[u32],
+             pos: usize, tok: u32) {
+    let slots = store
+        .entry(pages[pos / PAGE_SIZE])
+        .or_insert_with(|| vec![u32::MAX; PAGE_SIZE]);
+    slots[pos % PAGE_SIZE] = tok;
+}
+
+struct RunOut {
+    /// Greedy stream per trace request id.
+    streams: Vec<Vec<u32>>,
+    cached_tokens: u64,
+    prompt_tokens: u64,
+    pages_allocated: u64,
+    shared_pages: u64,
+    cow_breaks: u64,
+    violations: Vec<String>,
+}
+
+/// One deterministic serving run. The schedule (FIFO admission,
+/// one decoded token per running sequence per tick) is identical in
+/// both modes; only the page-mapping layer differs.
+fn run(seed: u64, cache_on: bool, per_tenant: usize) -> RunOut {
+    let trace = shared_prefix_trace(seed, VOCAB, TENANTS, per_tenant,
+                                    PREFIX_LEN, SUFFIX_LEN, MAX_NEW);
+    let n_req = trace.len();
+    let mut arrivals: VecDeque<(u64, usize)> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.arrival_us / 1_000, i))
+        .collect();
+
+    let alloc = Arc::new(PageAllocator::new(
+        N_PAGES, PAGE_SIZE, 64, GrowthPolicy::Exact));
+    let mut mgr = PageManager::new(Arc::clone(&alloc), 64);
+    mgr.set_prefix_cache(cache_on);
+
+    let mut store: HashMap<u32, Vec<u32>> = HashMap::new();
+    let mut waiting: VecDeque<usize> = VecDeque::new();
+    let mut running: Vec<(usize, usize)> = Vec::new(); // (idx, gen)
+    let mut out = RunOut {
+        streams: vec![Vec::new(); n_req],
+        cached_tokens: 0,
+        prompt_tokens: 0,
+        pages_allocated: 0,
+        shared_pages: 0,
+        cow_breaks: 0,
+        violations: Vec::new(),
+    };
+
+    let horizon = n_req as u64 + 10_000;
+    let mut tick = 0u64;
+    loop {
+        while arrivals.front().map(|a| a.0 <= tick).unwrap_or(false) {
+            waiting.push_back(arrivals.pop_front().unwrap().1);
+        }
+
+        // admission: FIFO, capacity-gated by the real reserve path
+        while running.len() < MAX_RUNNING {
+            let Some(&idx) = waiting.front() else { break };
+            let req = &trace[idx];
+            match mgr.reserve(req.id, &req.prompt) {
+                Ok(r) => {
+                    waiting.pop_front();
+                    let pages =
+                        mgr.table(req.id).unwrap().pages().to_vec();
+                    // aliased pages must already hold the admitted
+                    // prompt's bytes — a wrong radix match shows here
+                    let got =
+                        read_ctx(&store, &pages, r.cached_tokens);
+                    if got[..] != req.prompt[..r.cached_tokens] {
+                        out.violations.push(format!(
+                            "req {}: cached prefix bytes diverge \
+                             from prompt", req.id));
+                    }
+                    if !cache_on && r.cached_tokens != 0 {
+                        out.violations.push(format!(
+                            "req {}: cache off but {} cached tokens",
+                            req.id, r.cached_tokens));
+                    }
+                    // prefill only the uncached remainder
+                    for (i, &t) in req.prompt
+                        .iter()
+                        .enumerate()
+                        .skip(r.cached_tokens)
+                    {
+                        write_tok(&mut store, &pages, i, t);
+                    }
+                    mgr.note_assigned(
+                        req.id,
+                        req.prompt.len() - r.cached_tokens,
+                    ).unwrap();
+                    mgr.register_prefix(req.id, &req.prompt)
+                        .unwrap();
+                    out.cached_tokens += r.cached_tokens as u64;
+                    out.prompt_tokens += req.prompt.len() as u64;
+                    out.pages_allocated += r.new_pages as u64;
+                    running.push((idx, 0));
+                }
+                Err(e) => {
+                    waiting.pop_front();
+                    out.violations
+                       .push(format!("req {}: {e}", req.id));
+                }
+            }
+        }
+
+        // decode: one content-derived greedy token per seq per tick
+        let mut i = 0;
+        while i < running.len() {
+            let (idx, generated) = running[i];
+            let req = &trace[idx];
+            match mgr.prepare_append(req.id, 1) {
+                Ok(plan) => {
+                    if let Some((src, dst)) = plan.cow_copy {
+                        // emulate the device copy_pages execution
+                        let bytes = store
+                            .get(&src)
+                            .cloned()
+                            .unwrap_or_else(
+                                || vec![u32::MAX; PAGE_SIZE]);
+                        store.insert(dst, bytes);
+                    }
+                    out.pages_allocated += plan.new_pages as u64
+                        + u64::from(plan.cow_copy.is_some());
+                    let len = mgr.seq_len(req.id).unwrap();
+                    let pages =
+                        mgr.table(req.id).unwrap().pages().to_vec();
+                    let ctx = read_ctx(&store, &pages, len);
+                    let tok = (fnv1a(&ctx) % VOCAB as u64) as u32;
+                    write_tok(&mut store, &pages, len, tok);
+                    mgr.note_assigned(req.id, 1).unwrap();
+                    out.streams[idx].push(tok);
+                    if generated + 1 >= req.max_new_tokens {
+                        mgr.free(req.id).unwrap();
+                        running.swap_remove(i);
+                        continue;
+                    }
+                    running[i].1 += 1;
+                }
+                Err(e) => {
+                    out.violations
+                       .push(format!("req {}: decode: {e}", req.id));
+                    mgr.free(req.id).unwrap();
+                    running.swap_remove(i);
+                    continue;
+                }
+            }
+            i += 1;
+        }
+
+        if arrivals.is_empty() && waiting.is_empty()
+            && running.is_empty()
+        {
+            break;
+        }
+        tick += 1;
+        if tick > horizon {
+            out.violations.push(format!(
+                "run did not drain by tick {horizon}: {} queued, \
+                 {} running",
+                waiting.len() + arrivals.len(), running.len()));
+            break;
+        }
+    }
+
+    out.shared_pages = mgr.shared_pages_total();
+    out.cow_breaks = mgr.cow_breaks_total();
+    mgr.flush_prefix_cache();
+    mgr.take_cache_evicted();
+    if alloc.free_pages() != N_PAGES as usize {
+        out.violations.push(format!(
+            "pool leak: {} of {N_PAGES} pages free after drain + \
+             cache flush", alloc.free_pages()));
+    }
+    out
+}
+
+fn main() {
+    let per_tenant = if quick() { 4 } else { 8 };
+    let seeds: &[u64] = if quick() { &[11] } else { &[11, 23, 47] };
+    let mut rows = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    for &seed in seeds {
+        let on = run(seed, true, per_tenant);
+        let off = run(seed, false, per_tenant);
+        let n_req = on.streams.len();
+        for v in &on.violations {
+            failures.push(format!("cache-on seed {seed}: {v}"));
+        }
+        for v in &off.violations {
+            failures.push(format!("cache-off seed {seed}: {v}"));
+        }
+
+        let skip = on.cached_tokens as f64
+            / on.prompt_tokens.max(1) as f64;
+        if skip < 0.5 {
+            failures.push(format!(
+                "seed {seed}: prefill-skip fraction {skip:.2} < \
+                 0.50 on a shared-prefix trace"));
+        }
+        if on.pages_allocated >= off.pages_allocated {
+            failures.push(format!(
+                "seed {seed}: sharing allocated {} pages, \
+                 no-sharing {} — reuse must strictly reduce pages",
+                on.pages_allocated, off.pages_allocated));
+        }
+        if on.shared_pages == 0 {
+            failures.push(format!(
+                "seed {seed}: cache on but zero pages served by \
+                 aliasing"));
+        }
+        if off.cached_tokens != 0 || off.shared_pages != 0 {
+            failures.push(format!(
+                "seed {seed}: cache-off control shows sharing \
+                 (cached={} shared={})",
+                off.cached_tokens, off.shared_pages));
+        }
+        let mut diverged = None;
+        for id in 0..n_req {
+            if on.streams[id].len() != MAX_NEW {
+                failures.push(format!(
+                    "seed {seed}: req {id} decoded {} of {MAX_NEW} \
+                     tokens", on.streams[id].len()));
+            }
+            if diverged.is_none()
+                && on.streams[id] != off.streams[id]
+            {
+                diverged = Some(id);
+            }
+        }
+        if let Some(id) = diverged {
+            failures.push(format!(
+                "seed {seed}: greedy stream diverges at req {id} — \
+                 prefix sharing changed decoded bytes"));
+        }
+
+        for (mode, r) in [("on", &on), ("off", &off)] {
+            rows.push(vec![
+                mode.to_string(),
+                seed.to_string(),
+                n_req.to_string(),
+                f(r.cached_tokens as f64
+                  / r.prompt_tokens.max(1) as f64, 2),
+                f(r.pages_allocated as f64 / n_req as f64, 1),
+                r.shared_pages.to_string(),
+                r.cow_breaks.to_string(),
+            ]);
+        }
+    }
+
+    print_table(
+        &format!(
+            "prefix reuse gate: {TENANTS} tenants x {per_tenant} \
+             requests, {PREFIX_LEN}-token shared prefix + \
+             {SUFFIX_LEN}-token private suffix, page size \
+             {PAGE_SIZE}, cache on vs off"),
+        &["cache", "seed", "reqs", "skip_frac", "pages_per_req",
+          "shared_pages", "cow_breaks"],
+        &rows,
+    );
+
+    if failures.is_empty() {
+        println!("\nprefix gate: skip >= 50%, pages strictly below \
+                  no-sharing, streams byte-identical, control \
+                  clean, pool restored: PASS");
+    } else {
+        println!("\nprefix gate: FAIL");
+        for fl in &failures {
+            println!("  - {fl}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -59,6 +59,11 @@ pub struct Request {
     /// Stream one JSON line per decoded token batch before the
     /// terminal line (DESIGN.md §13).
     pub stream: bool,
+    /// Parallel completions from one prompt (`"n"` on the wire):
+    /// the prompt is prefilled ONCE, then fanned into `n` CoW
+    /// streams that alias its full pages by refcount (DESIGN.md
+    /// §15). The client receives `n` terminal records. 0 acts as 1.
+    pub n: usize,
 }
 
 impl Request {
@@ -73,6 +78,7 @@ impl Request {
             ttft_budget_ms: None,
             tenant: None,
             stream: false,
+            n: 1,
         }
     }
 }
@@ -134,6 +140,11 @@ struct Live {
     class: usize,
     deadline: Option<Instant>,
     ttft_deadline: Option<Instant>,
+    /// Completions this entry still owes. Fan-out happens the tick
+    /// its prefill lands, so paged decode-phase entries always carry
+    /// 1; non-paged modes never fork and instead duplicate their
+    /// single stream `fan` times at retirement.
+    fan: usize,
 }
 
 impl Live {
@@ -164,6 +175,16 @@ struct Queued {
     class: usize,
     deadline: Option<Instant>,
     ttft_deadline: Option<Instant>,
+    /// True once this entry has been admitted before (preemption /
+    /// saturation / corruption requeues and fan-out remainders).
+    /// The prefix-hit counters fire only on FIRST admissions — a
+    /// resumed request re-matches the pages its own first admission
+    /// registered, and counting that bounce again inflated the hit
+    /// counters with preemption pressure (bugfix, DESIGN.md §15).
+    counted: bool,
+    /// Completions this entry represents: [`Request::n`] for a
+    /// fresh submit, the unforked remainder for a fan-out requeue.
+    fan: usize,
 }
 
 impl Queued {
@@ -239,6 +260,19 @@ impl Coordinator {
             .unwrap_or(0)
     }
 
+    /// Admission-visible page supply: free pages PLUS cached-only
+    /// prefix pages the manager can reclaim leaf-first on demand
+    /// (DESIGN.md §15). The admission gate and KV budget see this
+    /// figure — a warm cache holding most of the pool must read as
+    /// reclaimable headroom, not as exhaustion.
+    pub fn available_pages(&self) -> usize {
+        self.engine
+            .paged
+            .as_ref()
+            .map(|pe| pe.mgr.available_pages())
+            .unwrap_or(0)
+    }
+
     pub fn submit(&mut self, req: Request) -> Result<()> {
         let class = self
             .engine
@@ -288,6 +322,7 @@ impl Coordinator {
                               sched.default_deadline_ms);
         let ttft_deadline =
             budget(req.ttft_budget_ms, sched.ttft_budget_ms);
+        let fan = req.n.max(1);
         self.waiting.push_back(class, Queued {
             req,
             generated: Vec::new(),
@@ -299,6 +334,8 @@ impl Coordinator {
             class,
             deadline,
             ttft_deadline,
+            counted: false,
+            fan,
         });
         Ok(())
     }
@@ -445,7 +482,8 @@ impl Coordinator {
             sched.admit_low_pages,
         );
         let pressured = overload_pressure(
-            self.n_waiting(), queue_high, self.free_pages(), low_pages);
+            self.n_waiting(), queue_high, self.available_pages(),
+            low_pages);
         let level = self.shed.note_tick(pressured);
         if level >= ShedLevel::ShedNewest {
             // victims come newest-first from the cheapest (lowest
@@ -472,6 +510,11 @@ impl Coordinator {
         m.shed_demotes.store(self.shed.demotes(), Relaxed);
         m.shed_repromotes.store(self.shed.repromotes(), Relaxed);
         m.admission_deferrals.store(self.gate.deferrals(), Relaxed);
+        if let Some(pe) = self.engine.paged.as_ref() {
+            m.prefix_shared_pages
+                .store(pe.mgr.shared_pages_total(), Relaxed);
+            m.cow_breaks.store(pe.mgr.cow_breaks_total(), Relaxed);
+        }
         acted
     }
 
@@ -513,7 +556,14 @@ impl Coordinator {
             }
             _ => {}
         }
-        self.finished.push(queued_terminal_record(q, error));
+        // an n-way entry owes n terminal records — its client is
+        // waiting for exactly that many lines
+        let fan = q.fan.max(1);
+        let rec = queued_terminal_record(q, error);
+        for _ in 1..fan {
+            self.finished.push(rec.clone());
+        }
+        self.finished.push(rec);
     }
 
     fn decode_bucket_cap(&self, max_batch: usize) -> usize {
@@ -606,7 +656,10 @@ impl Coordinator {
             // regardless — nothing else can free pages, so deferring
             // would deadlock (the engine-level retry ladder bounds
             // what happens if it still doesn't fit).
-            let free = self.free_pages();
+            // the supply side counts cached-only prefix pages as
+            // reclaimable (DESIGN.md §15): the manager evicts them
+            // leaf-first inside reserve when the free list runs dry
+            let avail = self.available_pages();
             let pe_ps = self
                 .engine
                 .paged
@@ -614,13 +667,13 @@ impl Coordinator {
                 .map(|pe| pe.mgr.allocator().page_size())
                 .unwrap_or(1);
             let gate_open = self.gate.evaluate(
-                free, sched.admit_low_pages, sched.admit_high_pages);
+                avail, sched.admit_low_pages, sched.admit_high_pages);
             let est = estimate_pages(
                 q.req.prompt.len() + q.generated.len(),
                 q.req.max_new_tokens.saturating_sub(q.generated.len()),
                 pe_ps,
             );
-            let fits = free >= est + sched.watermark_pages;
+            let fits = avail >= est + sched.watermark_pages;
             if (!gate_open || !fits) && !self.running.is_empty() {
                 self.gate.note_deferral();
                 ServingMetrics::inc(
@@ -652,7 +705,7 @@ impl Coordinator {
                     ServingMetrics::inc(&m.requests_admitted, 1);
                     ServingMetrics::inc(&m.class(q.class).admitted,
                                         1);
-                    if adm.cached_tokens > 0 {
+                    if count_prefix_hit(adm.cached_tokens, q.counted) {
                         ServingMetrics::inc(&m.prefix_cache_hits, 1);
                         ServingMetrics::inc(&m.prefix_cached_tokens,
                                             adm.cached_tokens as u64);
@@ -672,6 +725,7 @@ impl Coordinator {
                         deadline: q.deadline,
                         ttft_deadline: q.ttft_deadline,
                         phase: Phase::Prefill,
+                        fan: q.fan.max(1),
                         req: q.req,
                     });
                     progressed = true;
@@ -679,14 +733,13 @@ impl Coordinator {
                 Err(AllocError::PoolExhausted { .. }) => {
                     // bounded retry-with-backoff instead of pinning
                     // the queue head forever (DESIGN.md §12)
-                    self.requeue_backoff(q, from_stash, free);
+                    self.requeue_backoff(q, from_stash, avail);
                     gated = true;
                     break;
                 }
                 Err(e) => {
                     let err = err!("admit: {e}");
-                    self.finished
-                        .push(queued_terminal_record(q, err));
+                    self.finish_queued(q, err);
                 }
             }
         }
@@ -734,6 +787,7 @@ impl Coordinator {
         self.engine.metrics.note_upload(&upload);
         self.engine.metrics.note_pipeline(&pipeline);
         let mut prefilled_tokens = 0u64;
+        let mut landed: Vec<SeqId> = Vec::new();
         for (seq, done, logits) in results {
             let live = self.live_mut(seq)?;
             if done {
@@ -743,11 +797,110 @@ impl Coordinator {
                     as u64;
                 live.phase = Phase::Decode;
                 live.pending_logits = Some(logits);
+                if live.fan > 1 {
+                    landed.push(seq);
+                }
             }
         }
         ServingMetrics::inc(&self.engine.metrics.tokens_prefilled,
                             prefilled_tokens);
+        for seq in landed {
+            self.fan_out(seq)?;
+        }
         self.handle_corruption();
+        Ok(())
+    }
+
+    /// One prompt in, N streams out (DESIGN.md §15): the tick a
+    /// parent with `fan > 1` lands its prefill, fork `fan - 1` CoW
+    /// children off its page table — full pages aliased by refcount,
+    /// the partial tail copied once per child — each entering decode
+    /// with a clone of the parent's landed logits. Children the pool
+    /// cannot hold right now are requeued as ONE entry carrying the
+    /// unforked remainder; by then the parent's pages are registered
+    /// in the prefix index, so the retry re-enters through the cache
+    /// (a page-table walk, not a recompute) and fans out again.
+    fn fan_out(&mut self, parent: SeqId) -> Result<()> {
+        let Some(i) =
+            self.running.iter().position(|l| l.seq == parent)
+        else {
+            return Ok(());
+        };
+        let wanted = self.running[i].fan.saturating_sub(1);
+        if wanted == 0 {
+            return Ok(());
+        }
+        self.running[i].fan = 1;
+        let (req, generated, logits, submitted, first_token) = {
+            let l = &self.running[i];
+            (l.req.clone(), l.generated.clone(),
+             l.pending_logits.clone(), l.submitted, l.first_token)
+        };
+        let (class, deadline, ttft_deadline) = {
+            let l = &self.running[i];
+            (l.class, l.deadline, l.ttft_deadline)
+        };
+        let tokens = req.prompt.len() + generated.len();
+        let kids: Vec<SeqId> = (0..wanted)
+            .map(|_| self.engine.fresh_seq_id())
+            .collect();
+        let pe = self.engine.paged.as_mut().unwrap();
+        let made = pe
+            .fork_n(parent, &kids, tokens)
+            .map_err(|e| err!("fork_n: {e}"))?;
+        if made > 0 {
+            let m = &self.engine.metrics;
+            ServingMetrics::inc(&m.requests_admitted, made as u64);
+            ServingMetrics::inc(&m.class(class).admitted,
+                                made as u64);
+            // every child skips its entire prefill — that IS the
+            // prefix cache paying out, so the hit counters see it
+            ServingMetrics::inc(&m.prefix_cache_hits, made as u64);
+            ServingMetrics::inc(&m.prefix_cached_tokens,
+                                (made * tokens) as u64);
+        }
+        for (k, &child) in kids[..made].iter().enumerate() {
+            let mut sampling = req.sampling;
+            // decorrelate seeded sampling across siblings; greedy
+            // children intentionally stay byte-identical
+            sampling.seed = sampling
+                .seed
+                .map(|s| s.wrapping_add(k as u64 + 1));
+            self.running.push(Live {
+                seq: child,
+                sampler: Sampler::new(sampling),
+                generated: generated.clone(),
+                pending_logits: logits.clone(),
+                submitted,
+                first_token,
+                preemptions: 0,
+                cached_prompt_tokens: tokens,
+                retries: 0,
+                class,
+                deadline,
+                ttft_deadline,
+                phase: Phase::Decode,
+                fan: 1,
+                req: req.clone(),
+            });
+        }
+        let remaining = wanted - made;
+        if remaining > 0 {
+            self.waiting.push_front(class, Queued {
+                req,
+                generated,
+                preemptions: 0,
+                retries: 0,
+                not_before: self.tick_no + 1,
+                submitted,
+                first_token,
+                class,
+                deadline,
+                ttft_deadline,
+                counted: true,
+                fan: remaining,
+            });
+        }
         Ok(())
     }
 
@@ -807,6 +960,8 @@ impl Coordinator {
             class: live.class,
             deadline: live.deadline,
             ttft_deadline: live.ttft_deadline,
+            counted: true,
+            fan: live.fan,
         });
     }
 
@@ -945,11 +1100,14 @@ impl Coordinator {
             return;
         };
         let live = self.running.swap_remove(i);
+        // a parent dying BEFORE fan-out (expired/corrupted in
+        // prefill) still owes its client `fan` terminal records
+        let fan = live.fan.max(1);
         let now = Instant::now();
         let ttft = live
             .first_token
             .map(|t| t.duration_since(live.submitted).as_secs_f64());
-        self.finished.push(Finished {
+        let rec = Finished {
             id: live.req.id,
             prompt_len: live.req.prompt.len(),
             tokens: live.generated,
@@ -958,7 +1116,11 @@ impl Coordinator {
             preemptions: live.preemptions,
             cached_prompt_tokens: live.cached_prompt_tokens,
             error: Some(error),
-        });
+        };
+        for _ in 1..fan {
+            self.finished.push(rec.clone());
+        }
+        self.finished.push(rec);
     }
 
     /// Victim of hard pool exhaustion with nothing preemptible: free
@@ -997,6 +1159,8 @@ impl Coordinator {
             class: live.class,
             deadline: live.deadline,
             ttft_deadline: live.ttft_deadline,
+            counted: true,
+            fan: live.fan,
         });
     }
 
@@ -1030,6 +1194,8 @@ impl Coordinator {
             class: live.class,
             deadline: live.deadline,
             ttft_deadline: live.ttft_deadline,
+            counted: true,
+            fan: live.fan,
         });
         Ok(true)
     }
@@ -1047,6 +1213,11 @@ impl Coordinator {
                 continue;
             }
             let live = self.running.swap_remove(i);
+            // paged entries fanned out at prefill time and carry 1;
+            // non-paged modes never fork, so an n-way request
+            // duplicates its single stream — the client still gets
+            // exactly n terminal records
+            let fan = live.fan.max(1);
             let now = Instant::now();
             let ttft = live
                 .first_token
@@ -1062,7 +1233,7 @@ impl Coordinator {
             }
             cm.total.record(
                 std::time::Duration::from_secs_f64(total.max(0.0)));
-            ServingMetrics::inc(&cm.finished, 1);
+            ServingMetrics::inc(&cm.finished, fan as u64);
             match self.engine.mode() {
                 AttentionMode::Paged => {
                     let pe = self.engine.paged.as_mut().unwrap();
@@ -1074,8 +1245,9 @@ impl Coordinator {
                 }
                 AttentionMode::NoCache => {}
             }
-            ServingMetrics::inc(&self.engine.metrics.requests_finished, 1);
-            self.finished.push(Finished {
+            ServingMetrics::inc(&self.engine.metrics.requests_finished,
+                                fan as u64);
+            let rec = Finished {
                 id: live.req.id,
                 prompt_len: live.req.prompt.len(),
                 tokens: live.generated,
@@ -1084,7 +1256,11 @@ impl Coordinator {
                 preemptions: live.preemptions,
                 cached_prompt_tokens: live.cached_prompt_tokens,
                 error: None,
-            });
+            };
+            for _ in 1..fan {
+                self.finished.push(rec.clone());
+            }
+            self.finished.push(rec);
         }
     }
 
@@ -1146,6 +1322,7 @@ impl Coordinator {
                         deadline: q.deadline,
                         ttft_deadline: q.ttft_deadline,
                         phase: Phase::Prefill,
+                        fan: q.fan.max(1),
                         req: q.req,
                     });
                     progressed = true;
@@ -1245,6 +1422,7 @@ impl Coordinator {
         let Some(q) = self.pop_waiting() else {
             return Ok(false);
         };
+        let fan = q.fan.max(1);
         let req = q.req;
         ServingMetrics::inc(&self.engine.metrics.requests_admitted, 1);
         let submitted = q.submitted;
@@ -1280,8 +1458,9 @@ impl Coordinator {
                 .ttft
                 .record(std::time::Duration::from_secs_f64(t));
         }
-        ServingMetrics::inc(&self.engine.metrics.requests_finished, 1);
-        self.finished.push(Finished {
+        ServingMetrics::inc(&self.engine.metrics.requests_finished,
+                            fan as u64);
+        let rec = Finished {
             id: req.id,
             prompt_len: req.prompt.len(),
             tokens: generated,
@@ -1290,7 +1469,13 @@ impl Coordinator {
             preemptions: 0,
             cached_prompt_tokens: 0,
             error: None,
-        });
+        };
+        // nocache never forks: duplicate the stream so an n-way
+        // client still sees n terminal records
+        for _ in 1..fan {
+            self.finished.push(rec.clone());
+        }
+        self.finished.push(rec);
         Ok(true)
     }
 }
@@ -1400,6 +1585,16 @@ fn sweep_expired(queue: &mut VecDeque<Queued>, now: Instant)
     dead
 }
 
+/// Prefix-hit accounting fires only on a request's FIRST admission.
+/// A resumed-after-preempt re-admission re-matches exactly the pages
+/// its own first admission registered, so counting that bounce again
+/// made `prefix_cache_hits` / `prefix_cached_tokens` grow with
+/// preemption pressure instead of with actual cross-request reuse
+/// (bugfix, DESIGN.md §15).
+fn count_prefix_hit(cached_tokens: usize, readmission: bool) -> bool {
+    cached_tokens > 0 && !readmission
+}
+
 /// Terminal [`Finished`] for a queued entry that never (re)started:
 /// `ttft_s` only if a pre-preemption spell produced a token, and
 /// `total_s` is the REAL submit→retirement wait (PR 8 bugfix: both
@@ -1448,6 +1643,7 @@ mod tests {
         assert_eq!(r.ttft_budget_ms, None);
         assert_eq!(r.tenant, None, "tenant classes opt-in");
         assert!(!r.stream, "single-shot replies by default");
+        assert_eq!(r.n, 1, "one completion by default");
     }
 
     #[test]
@@ -1522,7 +1718,22 @@ mod tests {
             class: 0,
             deadline,
             ttft_deadline: ttft,
+            counted: false,
+            fan: 1,
         }
+    }
+
+    #[test]
+    fn prefix_hits_count_only_first_admissions() {
+        // fresh admission with cached tokens: a real reuse hit
+        assert!(count_prefix_hit(16, false));
+        // regression: a preempted request resumed over its OWN
+        // requeued pages used to re-count as a fresh hit on every
+        // bounce, so hit counters tracked preemption pressure
+        assert!(!count_prefix_hit(16, true));
+        // no cached tokens is never a hit, first admission or not
+        assert!(!count_prefix_hit(0, false));
+        assert!(!count_prefix_hit(0, true));
     }
 
     #[test]

@@ -401,11 +401,23 @@ impl PagedEngine {
             });
         }
         let out = self.mgr.reserve(id, prompt)?;
+        // reserving may have reclaimed LRU cached pages to fit: their
+        // window slots are free again
+        self.drain_cache_evictions();
         self.seqs.insert(id, SeqState {
             tokens: prompt.to_vec(),
             prefilled: out.cached_tokens,
         });
         Ok(Admission { cached_tokens: out.cached_tokens })
+    }
+
+    /// Release the window slots of pages the prefix cache surrendered
+    /// (LRU reclaim, quarantine un-share) — the cache-side mirror of
+    /// the dead-page forget in `release`.
+    fn drain_cache_evictions(&mut self) {
+        for page in self.mgr.take_cache_evicted() {
+            self.window.forget(page);
+        }
     }
 
     /// FREE everything the sequence holds; dead pages release their
@@ -465,8 +477,56 @@ impl PagedEngine {
             tokens: parent_tokens[..tokens].to_vec(),
             prefilled: tokens,
         });
+        self.drain_cache_evictions();
         self.pipe.drain();
         Ok(())
+    }
+
+    /// Fan one parent out into N children sharing its prefill
+    /// (parallel sampling, the `"n": K` wire op): full pages alias by
+    /// refcount, and a partial tail page is CoW-copied once per child
+    /// through the same `cow_copy` plumbing as [`Self::fork`]. Stops
+    /// early when the pool runs dry even after cache reclaim and
+    /// returns how many children were created — the caller re-queues
+    /// the rest (they will ride the prefix cache on re-admission).
+    /// One pipeline drain covers the whole fan-out.
+    pub fn fork_n(
+        &mut self,
+        parent: SeqId,
+        children: &[SeqId],
+        tokens: usize,
+    ) -> Result<usize, AllocError> {
+        let parent_tokens = self
+            .seqs
+            .get(&parent)
+            .ok_or(AllocError::UnknownSeq(parent))?
+            .tokens
+            .clone();
+        let mut made = 0;
+        for &child in children {
+            match self.mgr.fork(parent, child, tokens) {
+                Ok(plan) => {
+                    if let Some((src, dst)) = plan.cow_copy {
+                        self.k_pool.copy_page(src, dst);
+                        self.v_pool.copy_page(src, dst);
+                    }
+                    self.seqs.insert(child, SeqState {
+                        tokens: parent_tokens[..tokens].to_vec(),
+                        prefilled: tokens,
+                    });
+                    made += 1;
+                }
+                Err(AllocError::PoolExhausted { .. }) => break,
+                Err(e) => {
+                    self.drain_cache_evictions();
+                    self.pipe.drain();
+                    return Err(e);
+                }
+            }
+        }
+        self.drain_cache_evictions();
+        self.pipe.drain();
+        Ok(made)
     }
 
     /// Chat-growth extension: append `new_tokens` to an existing
@@ -475,6 +535,7 @@ impl PagedEngine {
     pub fn extend_sequence(&mut self, id: SeqId, new_tokens: &[u32])
                            -> Result<(), AllocError> {
         let plan = self.mgr.prepare_append(id, new_tokens.len())?;
+        self.drain_cache_evictions();
         if let Some((src, dst)) = plan.cow_copy {
             self.k_pool.copy_page(src, dst);
             self.v_pool.copy_page(src, dst);
@@ -549,6 +610,20 @@ impl PagedEngine {
             }
             if finished {
                 let toks = s.tokens.clone();
+                let live = s.prefilled;
+                // seal the full pages' host checksums BEFORE they
+                // enter the prefix index: a registered page must
+                // never be stale-pending, or the first scrub would
+                // trust-seal whatever bytes it happens to hold and
+                // every future cache hit would alias them unverified
+                let full = live / self.spec.page_size;
+                if let Ok(t) = self.mgr.table(*id) {
+                    let n = full.min(t.pages().len());
+                    for &p in &t.pages()[..n] {
+                        self.k_pool.seal_page(p);
+                        self.v_pool.seal_page(p);
+                    }
+                }
                 self.mgr
                     .register_prefix(*id, &toks)
                     .map_err(|e| err!("{e}"))?;
@@ -596,6 +671,8 @@ impl PagedEngine {
                 self.v_pool.copy_page(src, dst);
             }
         }
+        // growth may have reclaimed LRU cached pages: drop their slots
+        self.drain_cache_evictions();
 
         self.scr.begin(b, 1, self.spec.max_blocks_per_seq);
         for (i, id) in ids.iter().enumerate() {
@@ -973,6 +1050,10 @@ impl PagedEngine {
                 }
             }
         }
+        // quarantine atomically un-shares: the damaged page's cached
+        // radix subtree was evicted, and any owner-free pages in it
+        // died — release their window slots now
+        self.drain_cache_evictions();
     }
 
     /// Budgeted device audit at the execute boundary (DESIGN.md §14):

@@ -94,6 +94,17 @@ impl PageAllocator {
         self.free.free_pages()
     }
 
+    /// Pages the admission gate may treat as available: the free list
+    /// plus `reclaimable_cached` prefix-cache pages whose only
+    /// remaining reference is the index itself — the manager can
+    /// surrender those in LRU order before a reserve fails
+    /// (DESIGN.md §15). Kept here so the admission path, the bench
+    /// gates, and the invariant checks share one definition of the
+    /// free-vs-cached watermark.
+    pub fn available_pages(&self, reclaimable_cached: usize) -> usize {
+        self.free_pages() + reclaimable_cached
+    }
+
     pub fn policy(&self) -> GrowthPolicy {
         self.policy
     }
@@ -282,6 +293,17 @@ mod tests {
         assert!(a.alloc_pages(1).is_none(), "capacity stays reduced");
         assert_eq!(a.quarantined_pages(), vec![bad],
                    "quarantine is permanent");
+    }
+
+    #[test]
+    fn available_counts_reclaimable_cached_pages() {
+        let a = alloc();
+        a.alloc_pages(6).unwrap();
+        assert_eq!(a.free_pages(), 10);
+        // 4 of the 6 held pages are cache-only (reclaimable): the
+        // admission watermark sees them as spendable capacity
+        assert_eq!(a.available_pages(4), 14);
+        assert_eq!(a.available_pages(0), 10);
     }
 
     #[test]

@@ -6,9 +6,15 @@
 //! runs inside the decode executable (see python/compile/model.py); the
 //! manager owns the *mapping* state and its invariants:
 //!
-//! * a physical page is referenced by ≥1 table iff its refcount is ≥1;
-//! * pages referenced by no table are on the free list exactly once;
-//! * a sequence's mapped capacity always covers its live tokens.
+//! * a physical page's refcount equals the tables referencing it plus
+//!   one if the prefix cache holds it (the index owns a reference of
+//!   its own, so cached prefixes survive their registering sequence);
+//! * pages referenced by no table and not cached are on the free list
+//!   exactly once;
+//! * a sequence's mapped capacity always covers its live tokens;
+//! * cached pages whose only reference is the index are reclaimable:
+//!   a failing allocation surrenders them leaf-first in LRU order
+//!   before reporting exhaustion (DESIGN.md §15).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -75,6 +81,12 @@ pub struct PageManager {
     prefix: PrefixIndex,
     max_blocks_per_seq: usize,
     prefix_cache_enabled: bool,
+    /// Pages that died because the cache surrendered them (LRU
+    /// eviction, flush, quarantine un-share) rather than via `free`.
+    /// The engine drains these to drop resident-window slots.
+    cache_evicted: Vec<u32>,
+    shared_pages_total: u64,
+    cow_breaks_total: u64,
 }
 
 impl PageManager {
@@ -85,11 +97,18 @@ impl PageManager {
             prefix: PrefixIndex::new(),
             max_blocks_per_seq,
             prefix_cache_enabled: true,
+            cache_evicted: Vec::new(),
+            shared_pages_total: 0,
+            cow_breaks_total: 0,
         }
     }
 
     pub fn set_prefix_cache(&mut self, enabled: bool) {
         self.prefix_cache_enabled = enabled;
+        if !enabled {
+            let dead = self.flush_prefix_cache();
+            self.cache_evicted.extend(dead);
+        }
     }
 
     pub fn allocator(&self) -> &PageAllocator {
@@ -131,7 +150,11 @@ impl PageManager {
         }
         let ps = self.alloc.page_size();
         let m: PrefixMatch = if self.prefix_cache_enabled {
-            self.prefix.lookup(prompt, ps)
+            // never alias bytes the integrity layer condemned between
+            // scrub and admission — a quarantined page ends the walk
+            let alloc = self.alloc.clone();
+            self.prefix
+                .lookup_where(prompt, ps, |p| alloc.is_quarantined(p))
         } else {
             PrefixMatch { pages: vec![], tokens: 0 }
         };
@@ -151,7 +174,8 @@ impl PageManager {
         let target_blocks = table.n_blocks() + need;
         if target_blocks > self.max_blocks_per_seq {
             for &p in &m.pages {
-                self.evict_if_dying(p);
+                // matched pages cannot die here: the index still
+                // holds its own reference on every cached page
                 self.alloc.release_page(p, ps);
             }
             return Err(AllocError::CapacityExceeded {
@@ -159,15 +183,15 @@ impl PageManager {
                 max_blocks: self.max_blocks_per_seq,
             });
         }
-        match self.alloc.alloc_pages(need) {
+        match self.alloc_or_evict(need) {
             Some(pages) => {
                 table.push_pages(&pages);
                 self.tables.insert(seq, table);
+                self.shared_pages_total += m.pages.len() as u64;
                 Ok(ReserveOutcome { cached_tokens: m.tokens, new_pages: need })
             }
             None => {
                 for &p in &m.pages {
-                    self.evict_if_dying(p);
                     self.alloc.release_page(p, ps);
                 }
                 Err(AllocError::PoolExhausted {
@@ -176,6 +200,39 @@ impl PageManager {
                 })
             }
         }
+    }
+
+    /// `alloc_pages` with cache reclaim: when the free list runs dry,
+    /// surrender unreferenced cached prefix pages leaf-first in LRU
+    /// order until the allocation fits or nothing is reclaimable. This
+    /// is what lets admission treat cached pages as available capacity
+    /// (the free-vs-cached watermark, DESIGN.md §15).
+    fn alloc_or_evict(&mut self, n: usize) -> Option<Vec<u32>> {
+        loop {
+            if let Some(pages) = self.alloc.alloc_pages(n) {
+                return Some(pages);
+            }
+            if !self.evict_one_cached() {
+                return None;
+            }
+        }
+    }
+
+    /// Evict the least-recently-used cached page whose only reference
+    /// is the index itself. Returns false when nothing is reclaimable.
+    fn evict_one_cached(&mut self) -> bool {
+        let alloc = self.alloc.clone();
+        let Some(page) =
+            self.prefix.lru_page(|p| alloc.refcount(p) == 1)
+        else {
+            return false;
+        };
+        let ps = self.alloc.page_size();
+        self.prefix.evict_page(page);
+        if self.alloc.release_page(page, ps) {
+            self.cache_evicted.push(page);
+        }
+        true
     }
 
     /// Guarantee capacity for `extra` more tokens and plan the append:
@@ -206,7 +263,7 @@ impl PageManager {
                 max_blocks: self.max_blocks_per_seq,
             });
         }
-        let pages = self.alloc.alloc_pages(need + cow_need).ok_or(
+        let pages = self.alloc_or_evict(need + cow_need).ok_or(
             AllocError::PoolExhausted {
                 needed: need + cow_need,
                 available: self.alloc.free_pages(),
@@ -222,10 +279,12 @@ impl PageManager {
             debug_assert_eq!(old, src);
             // The old page stays live for its other owners; this sequence
             // keeps `len % ps` tokens of it in its new private copy, which
-            // duplicates those tokens physically.
-            self.evict_if_dying(src);
+            // duplicates those tokens physically. (A partial tail is
+            // never a cached page — the index only holds full pages —
+            // so this release cannot race the prefix cache.)
             self.alloc.release_page(src, ps);
             self.alloc.note_assigned(len % ps);
+            self.cow_breaks_total += 1;
             cow_copy = Some((src, dst));
         }
         let t = self.tables.get_mut(&seq).unwrap();
@@ -245,7 +304,13 @@ impl PageManager {
     }
 
     /// Register a finished prefill's full pages in the prefix cache so
-    /// future prompts can reuse them.
+    /// future prompts can reuse them. Each freshly registered page
+    /// takes one index reference of its own, so the cached prefix
+    /// outlives its registering sequence (until LRU eviction or
+    /// quarantine surrenders it). The caller must have sealed the
+    /// pages' host checksums first — a stale page must never vouch for
+    /// bytes nobody summed. Quarantined pages are refused and end the
+    /// chain (their descendants would vouch for damaged bytes).
     pub fn register_prefix(
         &mut self,
         seq: SeqId,
@@ -256,14 +321,28 @@ impl PageManager {
         }
         let ps = self.alloc.page_size();
         let chain = prompt_chain(prompt, ps);
-        let t = self.tables.get(&seq).ok_or(AllocError::UnknownSeq(seq))?;
-        let full_live = t.len_tokens() / ps;
+        let pages: Vec<u32> = {
+            let t =
+                self.tables.get(&seq).ok_or(AllocError::UnknownSeq(seq))?;
+            let full_live = t.len_tokens() / ps;
+            t.pages()[..full_live.min(t.pages().len())].to_vec()
+        };
         let mut registered = 0;
-        for (i, h) in chain.iter().enumerate().take(full_live) {
-            let canonical = self.prefix.insert(*h, t.pages()[i]);
-            if canonical == t.pages()[i] {
+        let mut parent = None;
+        for (h, &page) in chain.iter().zip(pages.iter()) {
+            if self.alloc.is_quarantined(page) {
+                break;
+            }
+            let fresh = !self.prefix.contains_hash(*h);
+            let Some(canonical) = self.prefix.insert(parent, *h, page)
+            else {
+                break;
+            };
+            if fresh && canonical == page {
+                self.alloc.retain_page(page);
                 registered += 1;
             }
+            parent = Some(*h);
         }
         Ok(registered)
     }
@@ -288,8 +367,7 @@ impl PageManager {
         let needs_cow = tokens % ps != 0;
         let fresh = if needs_cow {
             Some(
-                self.alloc
-                    .alloc_pages(1)
+                self.alloc_or_evict(1)
                     .ok_or(AllocError::PoolExhausted {
                         needed: 1,
                         available: self.alloc.free_pages(),
@@ -311,15 +389,19 @@ impl PageManager {
         // the CoW copy duplicates `tokens % ps` live tokens
         if needs_cow {
             self.alloc.note_assigned(tokens % ps);
+            self.cow_breaks_total += 1;
         }
+        self.shared_pages_total += plan.shared_pages.len() as u64;
         self.tables.insert(child, table);
         Ok(AppendPlan { cow_copy: plan.cow_copy, new_pages: 0 })
     }
 
     /// Alg. 1 FREE: release every page of `seq`; pages whose refcount
-    /// drops to zero return to the free list and leave the prefix cache.
-    /// Returns the pages that actually died (refcount hit zero) so the
-    /// engine can drop their resident-window slots (DESIGN.md §5).
+    /// drops to zero return to the free list. Registered prefix pages
+    /// survive their owners — the index reference keeps them alive for
+    /// future admissions until LRU eviction reclaims them. Returns the
+    /// pages that actually died (refcount hit zero) so the engine can
+    /// drop their resident-window slots (DESIGN.md §5).
     pub fn free(&mut self, seq: SeqId) -> Result<Vec<u32>, AllocError> {
         let mut table = self
             .tables
@@ -331,18 +413,11 @@ impl PageManager {
         let mut dead = Vec::new();
         for (i, p) in pages.iter().enumerate() {
             let live_here = len.saturating_sub(i * ps).min(ps);
-            self.evict_if_dying(*p);
             if self.alloc.release_page(*p, live_here) {
                 dead.push(*p);
             }
         }
         Ok(dead)
-    }
-
-    fn evict_if_dying(&mut self, page: u32) {
-        if self.alloc.refcount(page) == 1 {
-            self.prefix.evict_page(page);
-        }
     }
 
     /// Sequences whose tables reference `page` — the owners of a
@@ -361,11 +436,80 @@ impl PageManager {
 
     /// Condemn a damaged page: it keeps serving its current owners
     /// (whose spans are being rebuilt) and retires permanently when
-    /// the last reference dies, and it leaves the prefix cache now so
-    /// no new sequence can alias damaged bytes.
+    /// the last reference dies, and it atomically un-shares: the page
+    /// leaves the prefix cache now, together with every cached radix
+    /// descendant (their chain hashes vouch for the damaged bytes), so
+    /// no new sequence can ever alias them.
     pub fn quarantine_page(&mut self, page: u32) {
-        self.prefix.evict_page(page);
+        // condemn first: if the index held the last reference, the
+        // release below must retire the page, not recycle it
         self.alloc.quarantine_page(page);
+        let ps = self.alloc.page_size();
+        for p in self.prefix.evict_subtree(page) {
+            if self.alloc.release_page(p, ps) {
+                self.cache_evicted.push(p);
+            }
+        }
+    }
+
+    /// Drop every prefix-cache entry, releasing the index references.
+    /// Returns the pages that died (owner-free cached pages). Used by
+    /// drains and by `set_prefix_cache(false)`.
+    pub fn flush_prefix_cache(&mut self) -> Vec<u32> {
+        let ps = self.alloc.page_size();
+        let mut dead = Vec::new();
+        loop {
+            let leaves = self.prefix.leaf_pages();
+            if leaves.is_empty() {
+                break;
+            }
+            for p in leaves {
+                self.prefix.evict_page(p);
+                if self.alloc.release_page(p, ps) {
+                    dead.push(p);
+                }
+            }
+        }
+        dead
+    }
+
+    /// Pages freed by cache surrender (LRU eviction, flush, quarantine
+    /// un-share) since the last call — the engine forgets their
+    /// resident-window slots, mirroring the `free` dead list.
+    pub fn take_cache_evicted(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.cache_evicted)
+    }
+
+    /// Every page the prefix cache currently holds a reference on.
+    pub fn cached_pages(&self) -> Vec<u32> {
+        self.prefix.pages()
+    }
+
+    /// Cached pages whose only reference is the index — capacity the
+    /// allocator can reclaim on demand (admission counts these as
+    /// available, DESIGN.md §15).
+    pub fn reclaimable_pages(&self) -> usize {
+        self.prefix
+            .pages()
+            .iter()
+            .filter(|&&p| self.alloc.refcount(p) == 1)
+            .count()
+    }
+
+    /// Free-list pages plus reclaimable cached pages — what admission
+    /// compares against its watermark.
+    pub fn available_pages(&self) -> usize {
+        self.alloc.available_pages(self.reclaimable_pages())
+    }
+
+    /// Cumulative pages served by aliasing (cache hits + fork shares).
+    pub fn shared_pages_total(&self) -> u64 {
+        self.shared_pages_total
+    }
+
+    /// Cumulative copy-on-write page breaks (append + fork tails).
+    pub fn cow_breaks_total(&self) -> u64 {
+        self.cow_breaks_total
     }
 
     /// Dense i32 device row for the batch tensor.
@@ -457,15 +601,18 @@ mod tests {
         m.note_assigned(1, 24).unwrap();
         assert_eq!(m.register_prefix(1, &p).unwrap(), 3);
 
-        // identical prompt: all 3 pages served from cache
+        // identical prompt: the first 2 pages come from cache; the
+        // last full page recomputes (the lookup cap keeps at least
+        // one token out of the match so the first decode has logits)
         let out = m.reserve(2, &p).unwrap();
-        assert_eq!(out.cached_tokens, 24);
-        assert_eq!(out.new_pages, 0);
+        assert_eq!(out.cached_tokens, 16);
+        assert_eq!(out.new_pages, 1);
         let t1 = m.table(1).unwrap().pages().to_vec();
         let t2 = m.table(2).unwrap().pages().to_vec();
-        assert_eq!(t1, t2, "physical pages aliased");
+        assert_eq!(t1[..2], t2[..2], "physical pages aliased");
+        assert_ne!(t1[2], t2[2], "tail recomputes privately");
 
-        // longer prompt with same prefix: 3 cached + 1 new
+        // longer prompt with same prefix: all 3 cached + 1 new
         let mut longer = p.clone();
         longer.extend_from_slice(&[900, 901, 902]);
         let out = m.reserve(3, &longer).unwrap();
@@ -474,25 +621,80 @@ mod tests {
     }
 
     #[test]
-    fn prefix_pages_survive_owner_free() {
+    fn page_aligned_prompt_is_never_fully_cached() {
+        // Regression: both admissions of a page-multiple prompt must
+        // leave at least the last token to prefill — a 100% match
+        // would produce no logits for the first decode step.
         let mut m = mgr(64, GrowthPolicy::Exact);
-        let p = prompt(16);
+        let p = prompt(16); // exactly 2 pages
         m.reserve(1, &p).unwrap();
         m.note_assigned(1, 16).unwrap();
-        m.register_prefix(1, &p).unwrap();
+        assert_eq!(m.register_prefix(1, &p).unwrap(), 2);
+        for seq in [2u64, 3] {
+            let out = m.reserve(seq, &p).unwrap();
+            assert!(
+                out.cached_tokens < p.len(),
+                "seq {seq}: match must leave tokens to prefill"
+            );
+            assert_eq!(out.cached_tokens, 8);
+            assert_eq!(out.new_pages, 1);
+        }
+    }
+
+    #[test]
+    fn prefix_pages_survive_owner_free() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        let p = prompt(17); // 2 full pages + 1 partial
+        m.reserve(1, &p).unwrap();
+        m.note_assigned(1, 17).unwrap();
+        assert_eq!(m.register_prefix(1, &p).unwrap(), 2);
         m.reserve(2, &p).unwrap();
         m.free(1).unwrap();
         // seq 2 still owns the pages; they must not be recycled
         let free_before = m.allocator().free_pages();
         let out = m.reserve(3, &p).unwrap();
         assert_eq!(out.cached_tokens, 16, "cache entry still valid");
-        assert_eq!(m.allocator().free_pages(), free_before);
+        // only the private tail page is new; the prefix is aliased
+        assert_eq!(m.allocator().free_pages(), free_before - 1);
         m.free(2).unwrap();
         m.free(3).unwrap();
-        assert_eq!(m.allocator().free_pages(), 64);
-        // after the last owner died the cache entry is gone
+        // every owner died, but the index reference retains the two
+        // registered pages for future admissions
+        assert_eq!(m.allocator().free_pages(), 62);
+        assert_eq!(m.reclaimable_pages(), 2);
+        assert_eq!(m.available_pages(), 64);
         let out = m.reserve(4, &p).unwrap();
-        assert_eq!(out.cached_tokens, 0);
+        assert_eq!(out.cached_tokens, 16, "prefix outlives owners");
+        m.free(4).unwrap();
+        // flushing surrenders the retained pages and their slots
+        let dead = m.flush_prefix_cache();
+        assert_eq!(dead.len(), 2);
+        assert_eq!(m.allocator().free_pages(), 64);
+        assert_eq!(m.allocator().audit().reserved_bytes(), 0);
+        assert_eq!(m.allocator().audit().live_bytes(), 0);
+    }
+
+    #[test]
+    fn cache_pages_are_reclaimed_lru_under_pressure() {
+        let mut m = mgr(4, GrowthPolicy::Exact);
+        let p = prompt(17); // 3 pages, 2 registrable
+        m.reserve(1, &p).unwrap();
+        m.note_assigned(1, 17).unwrap();
+        m.register_prefix(1, &p).unwrap();
+        m.free(1).unwrap();
+        assert_eq!(m.allocator().free_pages(), 2);
+        assert_eq!(m.reclaimable_pages(), 2);
+
+        // a 4-page reserve only fits by surrendering the cache,
+        // leaf-first in LRU order
+        let big: Vec<u32> = (900..932).collect();
+        let out = m.reserve(2, &big).unwrap();
+        assert_eq!(out.new_pages, 4);
+        assert_eq!(m.prefix_cache_len(), 0, "cache fully surrendered");
+        let evicted = m.take_cache_evicted();
+        assert_eq!(evicted.len(), 2, "both cached pages died");
+        m.free(2).unwrap();
+        assert_eq!(m.allocator().free_pages(), 4);
     }
 
     #[test]
@@ -565,6 +767,24 @@ mod tests {
         m.free(2).unwrap();
         assert_eq!(m.allocator().free_pages(), 63,
                    "the damaged page retired instead of recycling");
+    }
+
+    #[test]
+    fn sharing_counters_are_cumulative() {
+        let mut m = mgr(64, GrowthPolicy::Exact);
+        let p = prompt(24);
+        m.reserve(1, &p).unwrap();
+        m.note_assigned(1, 24).unwrap();
+        m.register_prefix(1, &p).unwrap();
+        assert_eq!(m.shared_pages_total(), 0);
+        m.reserve(2, &p).unwrap(); // 2 pages aliased
+        assert_eq!(m.shared_pages_total(), 2);
+        m.fork(1, 3, 20).unwrap(); // 2 shared + 1 CoW tail
+        assert_eq!(m.shared_pages_total(), 4);
+        assert_eq!(m.cow_breaks_total(), 1);
+        m.fork(1, 4, 16).unwrap(); // aligned: 2 shared, no CoW
+        assert_eq!(m.shared_pages_total(), 6);
+        assert_eq!(m.cow_breaks_total(), 1);
     }
 
     #[test]

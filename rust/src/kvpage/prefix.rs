@@ -2,19 +2,23 @@
 //!
 //! Two cooperating pieces:
 //!
-//! * [`PrefixIndex`] — vLLM-style automatic prefix caching: full KV pages
-//!   are content-addressed by the hash-chain of the token ids they hold,
-//!   so a new request whose prompt starts with an already-cached prefix
-//!   maps those pages instead of recomputing them. Lookup/insert are O(1)
-//!   hash operations per page.
-//! * Fork/copy-on-write planning — when a sequence forks (beam search,
-//!   shared chat history), full prefix pages are aliased via refcounts;
-//!   a shared *partial* tail page must be copied before either fork
-//!   appends into it. The copy itself happens on device
-//!   (`runtime`'s `copy_pages` executable); this module only plans it.
+//! * [`PrefixIndex`] — a radix tree over page hash-chains (vLLM-style
+//!   automatic prefix caching, grown into a tree): full KV pages are
+//!   content-addressed by the hash-chain of the token ids they hold,
+//!   and each cached page keeps an explicit parent link to the page
+//!   covering the preceding tokens. A new request whose prompt starts
+//!   with an already-cached prefix maps those pages instead of
+//!   recomputing them; divergence after any full page lands on a
+//!   different radix child. Lookup/insert are O(1) hash operations per
+//!   page; LRU stamps order eviction of unreferenced cached pages.
+//! * Fork/copy-on-write planning — when a sequence forks (parallel
+//!   sampling via `fork_n`, shared chat history), full prefix pages
+//!   are aliased via refcounts; a shared *partial* tail page must be
+//!   copied before either fork appends into it. The copy itself
+//!   happens on device (`runtime`'s `copy_pages` executable); this
+//!   module only plans it.
 
 use std::collections::HashMap;
-use std::collections::hash_map::Entry;
 
 /// FNV-1a over token ids, chained with the previous page's hash so that a
 /// page is only reusable when its *entire prefix* matches.
@@ -40,11 +44,21 @@ pub fn prompt_chain(tokens: &[u32], page_size: usize) -> Vec<u64> {
     out
 }
 
-/// Content-addressed registry of full, immutable KV pages.
+/// One cached page in the radix tree, keyed by its chain hash.
+struct Node {
+    page: u32,
+    parent: Option<u64>,
+    children: Vec<u64>,
+    /// LRU stamp: the index clock value of the last lookup/insert touch.
+    stamp: u64,
+}
+
+/// Content-addressed radix tree of full, immutable KV pages.
 #[derive(Default)]
 pub struct PrefixIndex {
-    by_hash: HashMap<u64, u32>,
+    nodes: HashMap<u64, Node>,
     by_page: HashMap<u32, u64>,
+    clock: u64,
 }
 
 /// Result of matching a new prompt against the index.
@@ -62,55 +76,172 @@ impl PrefixIndex {
     }
 
     pub fn len(&self) -> usize {
-        self.by_hash.len()
+        self.nodes.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.by_hash.is_empty()
+        self.nodes.is_empty()
     }
 
-    /// Longest already-cached prefix of `tokens`. The caller must
-    /// `retain_page` each returned page before using the match.
-    pub fn lookup(&self, tokens: &[u32], page_size: usize) -> PrefixMatch {
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Longest already-cached prefix of `tokens`, capped so at least the
+    /// last prompt token always recomputes: a fully-cached prompt would
+    /// leave zero tokens to prefill and no logits for the first decode
+    /// step. The caller must `retain_page` each returned page before
+    /// using the match. `reject` refuses individual pages (quarantined
+    /// bytes must never be re-aliased); a rejected page ends the walk.
+    pub fn lookup_where(
+        &mut self,
+        tokens: &[u32],
+        page_size: usize,
+        reject: impl Fn(u32) -> bool,
+    ) -> PrefixMatch {
+        let max_full = tokens.len().saturating_sub(1) / page_size.max(1);
+        let now = self.tick();
         let mut pages = Vec::new();
-        for h in prompt_chain(tokens, page_size) {
-            match self.by_hash.get(&h) {
-                Some(&p) => pages.push(p),
-                None => break,
+        let mut prev: Option<u64> = None;
+        for h in prompt_chain(tokens, page_size).into_iter().take(max_full)
+        {
+            match self.nodes.get_mut(&h) {
+                Some(n) if n.parent == prev && !reject(n.page) => {
+                    n.stamp = now;
+                    pages.push(n.page);
+                    prev = Some(h);
+                }
+                _ => break,
             }
         }
         let tokens = pages.len() * page_size;
         PrefixMatch { pages, tokens }
     }
 
-    /// Register `page` as holding the full-page chunk whose chain hash is
-    /// `hash`. First writer wins (identical content by construction);
-    /// returns the canonical page.
-    pub fn insert(&mut self, hash: u64, page: u32) -> u32 {
-        match self.by_hash.entry(hash) {
-            Entry::Occupied(e) => *e.get(),
-            Entry::Vacant(e) => {
-                e.insert(page);
-                self.by_page.insert(page, hash);
-                page
+    /// [`Self::lookup_where`] with no page rejection.
+    pub fn lookup(
+        &mut self,
+        tokens: &[u32],
+        page_size: usize,
+    ) -> PrefixMatch {
+        self.lookup_where(tokens, page_size, |_| false)
+    }
+
+    /// Register `page` as holding the full-page chunk whose chain hash
+    /// is `hash`, as a radix child of `parent` (`None` for the first
+    /// page of a prompt). First writer wins (identical content by
+    /// construction); returns the canonical page, or `None` when the
+    /// parent link is gone (the entry is skipped rather than orphaned).
+    pub fn insert(
+        &mut self,
+        parent: Option<u64>,
+        hash: u64,
+        page: u32,
+    ) -> Option<u32> {
+        let now = self.tick();
+        if let Some(n) = self.nodes.get_mut(&hash) {
+            n.stamp = now;
+            return Some(n.page);
+        }
+        if let Some(ph) = parent {
+            match self.nodes.get_mut(&ph) {
+                Some(p) => p.children.push(hash),
+                None => return None,
+            }
+        }
+        self.nodes.insert(
+            hash,
+            Node { page, parent, children: Vec::new(), stamp: now },
+        );
+        self.by_page.insert(page, hash);
+        Some(page)
+    }
+
+    /// Drop a single childless page from the index. Interior pages must
+    /// leave via [`Self::evict_subtree`] so no child is ever orphaned.
+    pub fn evict_page(&mut self, page: u32) {
+        let Some(&h) = self.by_page.get(&page) else { return };
+        debug_assert!(
+            self.nodes[&h].children.is_empty(),
+            "evict_page on interior page {page}"
+        );
+        self.remove_node(h);
+    }
+
+    fn remove_node(&mut self, h: u64) {
+        let Some(n) = self.nodes.remove(&h) else { return };
+        self.by_page.remove(&n.page);
+        if let Some(ph) = n.parent {
+            if let Some(p) = self.nodes.get_mut(&ph) {
+                p.children.retain(|&c| c != h);
             }
         }
     }
 
-    /// Drop a page from the index (its refcount reached zero and the
-    /// allocator is about to recycle it).
-    pub fn evict_page(&mut self, page: u32) {
-        if let Some(h) = self.by_page.remove(&page) {
-            // Only remove the hash entry if it still points at this page.
-            if self.by_hash.get(&h) == Some(&page) {
-                self.by_hash.remove(&h);
+    /// Drop `page` and every cached descendant (pages whose prefix runs
+    /// through it) — quarantine must atomically un-share the whole
+    /// subtree, since a descendant's chain hash vouches for the damaged
+    /// bytes. Returns every evicted page, `page` first.
+    pub fn evict_subtree(&mut self, page: u32) -> Vec<u32> {
+        let Some(&root) = self.by_page.get(&page) else {
+            return Vec::new();
+        };
+        let mut stack = vec![root];
+        let mut hashes = Vec::new();
+        while let Some(h) = stack.pop() {
+            if let Some(n) = self.nodes.get(&h) {
+                stack.extend_from_slice(&n.children);
+                hashes.push(h);
             }
         }
+        let mut out = Vec::with_capacity(hashes.len());
+        for h in hashes {
+            if let Some(n) = self.nodes.get(&h) {
+                out.push(n.page);
+            }
+            self.remove_node(h);
+        }
+        out
+    }
+
+    /// Least-recently-touched childless page satisfying `pred` — the
+    /// eviction candidate when the pool runs dry. Leaf-first is safe:
+    /// table ownership is downward-closed (a table covering page `i`
+    /// covers its whole prefix), so an unreferenced interior page has
+    /// only unreferenced descendants and becomes a leaf once they go.
+    pub fn lru_page(&self, pred: impl Fn(u32) -> bool) -> Option<u32> {
+        self.nodes
+            .values()
+            .filter(|n| n.children.is_empty() && pred(n.page))
+            .min_by_key(|n| n.stamp)
+            .map(|n| n.page)
+    }
+
+    /// Childless cached pages (eviction frontier), unordered.
+    pub fn leaf_pages(&self) -> Vec<u32> {
+        self.nodes
+            .values()
+            .filter(|n| n.children.is_empty())
+            .map(|n| n.page)
+            .collect()
+    }
+
+    /// Every cached page, unordered.
+    pub fn pages(&self) -> Vec<u32> {
+        self.by_page.keys().copied().collect()
     }
 
     /// Is this page currently serving as a shared prefix page?
     pub fn contains_page(&self, page: u32) -> bool {
         self.by_page.contains_key(&page)
+    }
+
+    /// Is this chain hash already cached? (Registration uses this to
+    /// tell a fresh insert — which takes an index reference — from a
+    /// re-encounter of an already-canonical entry.)
+    pub fn contains_hash(&self, hash: u64) -> bool {
+        self.nodes.contains_key(&hash)
     }
 }
 
@@ -168,14 +299,21 @@ mod tests {
         assert_eq!(chain.len(), 2); // 21 tokens -> 2 full pages of 8
     }
 
+    fn seed(idx: &mut PrefixIndex, toks: &[u32], pages: &[u32]) {
+        let chain = prompt_chain(toks, 8);
+        let mut prev = None;
+        for (h, &p) in chain.iter().zip(pages) {
+            assert_eq!(idx.insert(prev, *h, p), Some(p));
+            prev = Some(*h);
+        }
+    }
+
     #[test]
     fn lookup_matches_longest_prefix() {
         let mut idx = PrefixIndex::new();
         let toks: Vec<u32> = (0..32).collect();
-        let chain = prompt_chain(&toks, 8);
-        idx.insert(chain[0], 100);
-        idx.insert(chain[1], 101);
-        // full match of first 16 tokens
+        seed(&mut idx, &toks, &[100, 101]);
+        // full match of first 16 tokens (prompt is longer)
         let m = idx.lookup(&toks, 8);
         assert_eq!(m.pages, vec![100, 101]);
         assert_eq!(m.tokens, 16);
@@ -190,20 +328,106 @@ mod tests {
     }
 
     #[test]
+    fn lookup_never_matches_the_entire_prompt() {
+        // Regression: a page-aligned prompt fully present in the cache
+        // must keep its last token out of the match, or admission would
+        // skip the whole prefill and the first decode step would have
+        // no logits to sample from.
+        let mut idx = PrefixIndex::new();
+        let toks: Vec<u32> = (0..16).collect();
+        seed(&mut idx, &toks, &[100, 101]);
+        let m = idx.lookup(&toks, 8);
+        assert_eq!(m.pages, vec![100], "last page must recompute");
+        assert_eq!(m.tokens, 8);
+        // one token past the boundary frees the full match again
+        let longer: Vec<u32> = (0..17).collect();
+        let m = idx.lookup(&longer, 8);
+        assert_eq!(m.pages, vec![100, 101]);
+    }
+
+    #[test]
+    fn lookup_rejects_refused_pages() {
+        let mut idx = PrefixIndex::new();
+        let toks: Vec<u32> = (0..32).collect();
+        seed(&mut idx, &toks, &[100, 101]);
+        let m = idx.lookup_where(&toks, 8, |p| p == 100);
+        assert!(m.pages.is_empty(), "rejected root ends the walk");
+        let m = idx.lookup_where(&toks, 8, |p| p == 101);
+        assert_eq!(m.pages, vec![100]);
+    }
+
+    #[test]
+    fn radix_divergence_lands_on_siblings() {
+        let mut idx = PrefixIndex::new();
+        let a: Vec<u32> = (0..24).collect();
+        seed(&mut idx, &a, &[10, 11]);
+        // same first page, different second page -> sibling child
+        let mut b = a.clone();
+        b[12] = 777;
+        let chain_b = prompt_chain(&b, 8);
+        assert_eq!(
+            idx.insert(Some(chain_b[0]), chain_b[1], 20),
+            Some(20)
+        );
+        assert_eq!(idx.lookup(&a, 8).pages, vec![10, 11]);
+        assert_eq!(idx.lookup(&b, 8).pages, vec![10, 20]);
+        assert_eq!(idx.len(), 3, "one shared root, two children");
+    }
+
+    #[test]
     fn insert_first_writer_wins() {
         let mut idx = PrefixIndex::new();
-        assert_eq!(idx.insert(42, 7), 7);
-        assert_eq!(idx.insert(42, 9), 7, "canonical page kept");
+        assert_eq!(idx.insert(None, 42, 7), Some(7));
+        assert_eq!(idx.insert(None, 42, 9), Some(7), "canonical kept");
+    }
+
+    #[test]
+    fn insert_without_parent_link_is_refused() {
+        let mut idx = PrefixIndex::new();
+        assert_eq!(idx.insert(Some(999), 42, 7), None);
+        assert!(idx.is_empty());
     }
 
     #[test]
     fn evict_removes_both_maps() {
         let mut idx = PrefixIndex::new();
-        idx.insert(42, 7);
+        idx.insert(None, 42, 7);
         idx.evict_page(7);
         assert!(!idx.contains_page(7));
-        assert_eq!(idx.lookup(&[], 8).pages.len(), 0);
+        let toks: Vec<u32> = (0..9).collect();
+        assert!(idx.lookup(&toks, 8).pages.is_empty());
         assert_eq!(idx.len(), 0);
+    }
+
+    #[test]
+    fn evict_subtree_takes_descendants() {
+        let mut idx = PrefixIndex::new();
+        let toks: Vec<u32> = (0..40).collect();
+        seed(&mut idx, &toks, &[10, 11, 12, 13]);
+        let mut got = idx.evict_subtree(11);
+        got.sort_unstable();
+        assert_eq!(got, vec![11, 12, 13]);
+        assert_eq!(idx.len(), 1, "root survives");
+        assert!(idx.contains_page(10));
+        // the surviving root is childless again -> evictable
+        assert_eq!(idx.lru_page(|_| true), Some(10));
+    }
+
+    #[test]
+    fn lru_prefers_coldest_leaf() {
+        let mut idx = PrefixIndex::new();
+        let a: Vec<u32> = (0..16).collect();
+        let b: Vec<u32> = (100..116).collect();
+        seed(&mut idx, &a, &[1]);
+        seed(&mut idx, &b, &[2]);
+        // touch a's entry -> b becomes the coldest
+        idx.lookup(&a, 8);
+        assert_eq!(idx.lru_page(|_| true), Some(2));
+        assert_eq!(idx.lru_page(|p| p != 2), Some(1));
+        // interior pages are never LRU candidates
+        let long: Vec<u32> = (200..224).collect();
+        seed(&mut idx, &long, &[3, 4]);
+        assert_eq!(idx.lru_page(|p| p >= 3), Some(4), "leaf only");
     }
 
     #[test]

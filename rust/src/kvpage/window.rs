@@ -1057,6 +1057,14 @@ impl ResidentWindow {
         self.slot_of.get(&page).copied()
     }
 
+    /// Every page currently holding a slot, unordered. A shared page
+    /// occupies exactly one slot no matter how many sequences alias it
+    /// (slots key on the physical page id) — the I13 audit asserts
+    /// this stays in agreement with refcounts and the prefix index.
+    pub fn resident_pages(&self) -> Vec<u32> {
+        self.slot_of.keys().copied().collect()
+    }
+
     pub fn k_window(&self) -> &[f32] {
         &self.k_win
     }

@@ -248,6 +248,13 @@ pub struct ServingMetrics {
     /// Requests retired with the typed `Corrupted` error because a
     /// damaged span outlived its bounded rebuild budget.
     pub requests_corrupt_retired: AtomicU64,
+    /// Full pages aliased into a new owner's table by a prefix-cache
+    /// hit or a CoW fork (exported by store from the manager's
+    /// monotone counter, so I11 holds — DESIGN.md §15).
+    pub prefix_shared_pages: AtomicU64,
+    /// Shared pages privatized on a divergent append (CoW breaks);
+    /// same monotone-at-source export as `prefix_shared_pages`.
+    pub cow_breaks: AtomicU64,
     /// Per-class scheduling counters + SLO histograms, indexed by
     /// scheduler class (clamped to [`MAX_CLASSES`] slots).
     pub classes: [ClassMetrics; MAX_CLASSES],
@@ -402,6 +409,18 @@ impl ServingMetrics {
         self.upload_bytes.load(Ordering::Relaxed) as f64 / steps as f64
     }
 
+    /// Fraction of admissions that reused cached prefix pages
+    /// ([0, 1]; fan-out children count as both an admission and a
+    /// hit — they skip their entire prefill).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let admitted = self.requests_admitted.load(Ordering::Relaxed);
+        if admitted == 0 {
+            return 0.0;
+        }
+        self.prefix_cache_hits.load(Ordering::Relaxed) as f64
+            / admitted as f64
+    }
+
     pub fn elapsed(&self) -> Duration {
         self.started.map(|s| s.elapsed()).unwrap_or_default()
     }
@@ -423,7 +442,8 @@ impl ServingMetrics {
         format!(
             "requests: admitted={} finished={} rejected={} preempted={}\n\
              tokens:   prefill={} decode={} ({:.1} tok/s decode)\n\
-             prefix cache: hits={} cached_tokens={}\n\
+             prefix cache: hits={} cached_tokens={} rate={:.2} \
+             shared_pages={} cow_breaks={}\n\
              kv window: pages_copied={} rows_written={} \
              full_gathers={} ({:.1} KB/decode step, \
              alloc {} B/step)\n\
@@ -451,6 +471,9 @@ impl ServingMetrics {
             self.decode_tokens_per_sec(),
             self.prefix_cache_hits.load(Ordering::Relaxed),
             self.prefix_cached_tokens.load(Ordering::Relaxed),
+            self.prefix_hit_rate(),
+            self.prefix_shared_pages.load(Ordering::Relaxed),
+            self.cow_breaks.load(Ordering::Relaxed),
             self.window_pages_copied.load(Ordering::Relaxed),
             self.window_rows_written.load(Ordering::Relaxed),
             self.window_full_gathers.load(Ordering::Relaxed),
@@ -607,6 +630,12 @@ const CSV_COLUMNS: &[CsvCol] = &[
     ("requests_corrupt_retired",
      |m| m.requests_corrupt_retired
           .load(Ordering::Relaxed).to_string()),
+    ("prefix_hit_rate",
+     |m| format!("{:.3}", m.prefix_hit_rate())),
+    ("prefix_shared_pages",
+     |m| m.prefix_shared_pages.load(Ordering::Relaxed).to_string()),
+    ("cow_breaks",
+     |m| m.cow_breaks.load(Ordering::Relaxed).to_string()),
 ];
 
 type ClassCsvCol = (&'static str, fn(&ClassMetrics) -> String);
@@ -735,7 +764,7 @@ mod tests {
         assert_eq!(m.alloc_bytes.load(Ordering::Relaxed), 128);
         assert!(m.csv_row()
                  .ends_with("2048,0,0.000,0,0.000,0,0.0000,0,0,0,0,\
-                             0,0,0,0,0,0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0,0,0,0,0,0.000,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -758,7 +787,7 @@ mod tests {
         assert!(s.contains("ranges=9"), "{s}");
         assert!(m.csv_row()
                  .ends_with("4096,0.000,0,0.000,0,0.0000,0,0,0,0,\
-                             0,0,0,0,0,0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0,0,0,0,0,0.000,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -810,7 +839,7 @@ mod tests {
         assert!(s.contains("retries=1"), "{s}");
         assert!(m.csv_row()
                  .ends_with("0.750,0,0.750,2,0.0000,2,2,1,1,\
-                             0,0,0,0,0,0,0,0,0,0,0"),
+                             0,0,0,0,0,0,0,0,0,0,0,0.000,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -841,9 +870,31 @@ mod tests {
                      "admission_deferrals", "edf_ticks",
                      "pages_corrupted", "pages_scrubbed",
                      "pages_repaired",
-                     "requests_corrupt_retired"] {
+                     "requests_corrupt_retired", "prefix_hit_rate",
+                     "prefix_shared_pages", "cow_breaks"] {
             assert!(header.contains(&name), "missing column {name}");
         }
+    }
+
+    #[test]
+    fn prefix_counters_render_in_summary_and_csv() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0,
+                   "no admissions → rate 0, never NaN");
+        ServingMetrics::inc(&m.requests_admitted, 4);
+        ServingMetrics::inc(&m.prefix_cache_hits, 3);
+        ServingMetrics::inc(&m.prefix_cached_tokens, 48);
+        m.prefix_shared_pages.store(6, Ordering::Relaxed);
+        m.cow_breaks.store(2, Ordering::Relaxed);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("hits=3"), "{s}");
+        assert!(s.contains("cached_tokens=48"), "{s}");
+        assert!(s.contains("rate=0.75"), "{s}");
+        assert!(s.contains("shared_pages=6"), "{s}");
+        assert!(s.contains("cow_breaks=2"), "{s}");
+        assert!(m.csv_row().ends_with("0.750,6,2"),
+                "{}", m.csv_row());
     }
 
     #[test]
@@ -864,7 +915,8 @@ mod tests {
         assert!(s.contains("shed_repromotes=1"), "{s}");
         assert!(s.contains("deferrals=7"), "{s}");
         assert!(s.contains("edf_ticks=6"), "{s}");
-        assert!(m.csv_row().ends_with("3,2,5,4,1,7,6,0,0,0,0"),
+        assert!(m.csv_row()
+                 .ends_with("3,2,5,4,1,7,6,0,0,0,0,0.000,0,0"),
                 "{}", m.csv_row());
     }
 
@@ -891,7 +943,8 @@ mod tests {
         assert!(s.contains("scrubbed=48"), "{s}");
         assert!(s.contains("repaired=3"), "{s}");
         assert!(s.contains("corrupt_retired=1"), "{s}");
-        assert!(m.csv_row().ends_with("3,48,3,1"), "{}", m.csv_row());
+        assert!(m.csv_row().ends_with("3,48,3,1,0.000,0,0"),
+                "{}", m.csv_row());
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //!   → {"op":"generate","prompt":[1,2,3],"max_new_tokens":8,
 //!      "temperature":0.7,"top_k":40,"top_p":0.9,"stop_at_eos":true,
 //!      "deadline_ms":5000,"ttft_budget_ms":1000,
-//!      "tenant":"prio","stream":true}
+//!      "tenant":"prio","stream":true,"n":4}
 //!   → {"op":"generate","text":"hello","max_new_tokens":8}
 //!   → {"op":"stats"}           → {"op":"shutdown"}
 //!   ← {"id":1,"tokens":[...],"text":"...","ttft_ms":..,"total_ms":..,
@@ -29,6 +29,11 @@
 //! success, a typed error line otherwise) — the terminal line never
 //! carries `"stream"`, so clients split on that key. `ttft_ms` is
 //! omitted when a request never produced a token (DESIGN.md §13).
+//!
+//! With `"n": K` the prompt is prefilled once and fanned into K CoW
+//! streams sharing its KV pages (DESIGN.md §15); the reply is K
+//! result lines for the same `id`, the channel closing after the
+//! K-th. [`Client::request_many`] collects them.
 //!
 //! Overload hardening (DESIGN.md §12): connections beyond
 //! `scheduler.max_connections` get a typed `overloaded` error at
@@ -165,8 +170,10 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
                     stop: Arc<AtomicBool>, tok: Arc<Tokenizer>)
                     -> Result<()> {
     let mut coord = Coordinator::new(engine);
-    let mut replies: std::collections::HashMap<u64, Sender<Reply>> =
-        std::collections::HashMap::new();
+    // per-request reply channel plus how many terminal lines it still
+    // expects — an n-way generate closes only after its n-th result
+    let mut replies: std::collections::HashMap<
+        u64, (Sender<Reply>, usize)> = std::collections::HashMap::new();
     loop {
         // drain the inbox
         loop {
@@ -179,9 +186,10 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
                         continue;
                     }
                     let id = req.id;
+                    let fan = req.n.max(1);
                     match coord.submit(req) {
                         Ok(()) => {
-                            replies.insert(id, reply);
+                            replies.insert(id, (reply, fan));
                         }
                         Err(e) => {
                             let _ =
@@ -214,7 +222,7 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
         // streamed chunks first, then terminals — a request's last
         // chunk lands before the line that closes its channel
         for ch in coord.drain_stream_chunks() {
-            if let Some(reply) = replies.get(&ch.id) {
+            if let Some((reply, _)) = replies.get(&ch.id) {
                 let _ = reply.send(Reply {
                     line: stream_json(&ch),
                     last: false,
@@ -222,16 +230,25 @@ fn coordinator_loop(engine: Engine, rx: Receiver<Incoming>,
             }
         }
         for fin in coord.drain_finished() {
-            if let Some(reply) = replies.remove(&fin.id) {
-                let _ =
-                    reply.send(terminal(finished_json(&fin, &tok)));
+            let Some((reply, remaining)) = replies.get_mut(&fin.id)
+            else {
+                continue;
+            };
+            *remaining = remaining.saturating_sub(1);
+            let last = *remaining == 0;
+            let _ = reply.send(Reply {
+                line: finished_json(&fin, &tok),
+                last,
+            });
+            if last {
+                replies.remove(&fin.id);
             }
         }
         if stop.load(Ordering::Relaxed) && coord.idle() {
             // belt-and-braces: any reply sender still registered
             // (submitted but its Finished got lost) must be answered,
             // or its handle_conn leaks a blocked recv()
-            for (_, reply) in replies.drain() {
+            for (_, (reply, _)) in replies.drain() {
                 let _ = reply.send(terminal(error_json(&drain_error())));
             }
             return Ok(());
@@ -339,6 +356,12 @@ fn handle_line(line: &str, tx: &Sender<Incoming>,
                     .map(|x| x.as_bool())
                     .transpose()?
                     .unwrap_or(false),
+                n: v
+                    .opt("n")
+                    .map(|x| x.as_usize())
+                    .transpose()?
+                    .unwrap_or(1)
+                    .max(1),
             };
             let (rtx, rrx) = channel();
             tx.send(Incoming::Generate { req, reply: rtx })
@@ -429,6 +452,11 @@ fn stats_json(coord: &Coordinator) -> String {
         ("shed_repromotes", c(&m.shed_repromotes)),
         ("admission_deferrals", c(&m.admission_deferrals)),
         ("edf_ticks", c(&m.sched_edf_ticks)),
+        ("prefix_hit_rate", Value::num(m.prefix_hit_rate())),
+        ("prefix_cache_hits", c(&m.prefix_cache_hits)),
+        ("prefix_cached_tokens", c(&m.prefix_cached_tokens)),
+        ("prefix_shared_pages", c(&m.prefix_shared_pages)),
+        ("cow_breaks", c(&m.cow_breaks)),
         ("classes", Value::arr(
             m.class_names().iter().enumerate().map(|(i, name)| {
                 let cm = m.class(i);
@@ -522,6 +550,33 @@ impl Client {
                 return Ok((chunks, v));
             }
         }
+    }
+
+    /// n-way request (`"n": K` fan-out): collects the K result lines
+    /// the server emits for one id, skipping interleaved
+    /// `"stream":true` chunk lines.
+    pub fn request_many(&mut self, body: &Value, n: usize)
+                        -> Result<Vec<Value>> {
+        self.writer.write_all(body.to_json().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(err!("connection closed mid-fan-out"));
+            }
+            let v = parse(&line)?;
+            let streamed = v
+                .opt("stream")
+                .map(|x| x.as_bool())
+                .transpose()?
+                .unwrap_or(false);
+            if !streamed {
+                out.push(v);
+            }
+        }
+        Ok(out)
     }
 
     pub fn generate_tokens(&mut self, prompt: &[u32], max_new: usize)

@@ -142,11 +142,21 @@ impl PathState {
                     "{ctx}: {path} I2 page {p}: {n} holders > rc {}",
                     alloc.refcount(p));
         }
-        assert_eq!(alloc.free_pages() + held.len(), N_PAGES as usize,
+        // cached prefix pages are physically held by the index even
+        // with no table owner (DESIGN.md §15)
+        let mut physical = held.len();
+        for p in self.mgr.cached_pages() {
+            assert!(alloc.refcount(p) >= 1,
+                    "{ctx}: {path} cached page {p} is dead");
+            if !held.contains_key(&p) {
+                physical += 1;
+            }
+        }
+        assert_eq!(alloc.free_pages() + physical, N_PAGES as usize,
                    "{ctx}: {path} I1 conservation");
         let page_bytes = PAGE_SIZE as u64 * BYTES_PER_TOKEN;
         assert_eq!(alloc.audit().reserved_bytes(),
-                   held.len() as u64 * page_bytes,
+                   physical as u64 * page_bytes,
                    "{ctx}: {path} I4 reserved-bytes accounting");
     }
 }
@@ -381,6 +391,19 @@ impl ChaosHarness {
         }
     }
 
+    /// Cache surrender (LRU reclaim when the free list runs dry)
+    /// kills pages without a FREE; both replicas evolve identically,
+    /// so they surrender the same pages. Drop their window slots
+    /// exactly like the free dead-list (DESIGN.md §15).
+    fn drain_cache_evictions(&mut self) {
+        for page in self.p.mgr.take_cache_evicted() {
+            self.p.win.forget(page);
+        }
+        for page in self.s.mgr.take_cache_evicted() {
+            self.s.win.forget(page);
+        }
+    }
+
     fn reserve_op(&mut self) {
         let id = self.next_id;
         let len = 1 + self.rng.below(60) as usize;
@@ -415,6 +438,7 @@ impl ChaosHarness {
             (Err(_), Err(_)) => {}
             _ => panic!("replicas diverged on reserve outcome"),
         }
+        self.drain_cache_evictions();
     }
 
     fn append_op(&mut self) {
@@ -446,6 +470,7 @@ impl ChaosHarness {
             (Err(_), Err(_)) => {}
             _ => panic!("replicas diverged on append outcome"),
         }
+        self.drain_cache_evictions();
     }
 
     fn free_op(&mut self, preempt: bool) {
@@ -512,6 +537,7 @@ impl ChaosHarness {
                 _ => panic!("{ctx}: replicas diverged on append"),
             }
         });
+        self.drain_cache_evictions();
         if batch.is_empty() {
             return;
         }
@@ -763,6 +789,12 @@ fn chaos_run_plan(plan: FaultPlan, seed: u64, steps: usize)
     while !h.live.is_empty() {
         h.free_op(false);
     }
+    for page in h.p.mgr.flush_prefix_cache() {
+        h.p.win.forget(page);
+    }
+    for page in h.s.mgr.flush_prefix_cache() {
+        h.s.win.forget(page);
+    }
     assert_eq!(h.p.mgr.allocator().free_pages(), N_PAGES as usize,
                "seed {seed}: faulted replica leaked pages");
     assert_eq!(h.s.mgr.allocator().free_pages(), N_PAGES as usize,
@@ -919,6 +951,73 @@ fn zero_fault_run_reports_zero_demotes_and_retries() {
     assert_eq!(h.device_resyncs, 0, "clean run resynced the front");
     assert_eq!(ps.staged_corrupt, 0,
                "clean run discarded a snapshot ({ps:?})");
+}
+
+#[test]
+fn corrupt_shared_prefix_page_unshares_all_owners() {
+    // §14 meets §15: silent damage lands on a page the prefix cache
+    // shares across several owners. Quarantine must atomically
+    // un-share — every owner is discoverable for the coordinator's
+    // requeue, the radix entry and its descendants leave the index,
+    // no later admission re-aliases the damaged bytes, the sharing
+    // counter stays monotone without moving, and the page retires
+    // instead of recycling when its last owner dies.
+    let alloc = Arc::new(PageAllocator::new(
+        N_PAGES, PAGE_SIZE, BYTES_PER_TOKEN, GrowthPolicy::Exact));
+    let mut mgr = PageManager::new(alloc, MAX_BLOCKS);
+    let mut k = HostPool::zeros(GEO);
+    let mut v = HostPool::zeros(GEO);
+    let mut win = ResidentWindow::new(GEO);
+
+    let prompt: Vec<u32> = (0..24).collect(); // exactly 3 pages
+    mgr.reserve(1, &prompt).unwrap();
+    mgr.note_assigned(1, prompt.len()).unwrap();
+    assert_eq!(mgr.register_prefix(1, &prompt).unwrap(), 3);
+    for seq in [2u64, 3] {
+        let out = mgr.reserve(seq, &prompt).unwrap();
+        assert_eq!(out.cached_tokens, 16, "seq {seq} aliased 2 pages");
+        mgr.note_assigned(seq, prompt.len() - out.cached_tokens)
+            .unwrap();
+    }
+    let shared = mgr.table(1).unwrap().pages()[0];
+    win.begin_step(WINDOW_PAGES);
+    win.map_page(&mut k, &mut v, shared).unwrap();
+    assert!(win.resident_pages().contains(&shared));
+
+    // the scrub detects damage on the shared page: quarantine
+    assert_eq!(mgr.owners_of(shared), vec![1, 2, 3],
+               "every owner must be discoverable for requeue");
+    let shares_before = mgr.shared_pages_total();
+    mgr.quarantine_page(shared);
+    for page in mgr.take_cache_evicted() {
+        win.forget(page);
+    }
+
+    // the index entry and its radix descendants are gone: the next
+    // admission recomputes instead of aliasing damaged bytes
+    let out = mgr.reserve(4, &prompt).unwrap();
+    assert_eq!(out.cached_tokens, 0, "no re-alias after quarantine");
+    assert!(!mgr.table(4).unwrap().pages().contains(&shared));
+    mgr.note_assigned(4, prompt.len()).unwrap();
+    assert_eq!(mgr.shared_pages_total(), shares_before,
+               "quarantine must not serve new pages by aliasing");
+
+    // owners drain (the coordinator's requeue frees their spans);
+    // the damaged page retires instead of recycling
+    for seq in [1u64, 2, 3, 4] {
+        for page in mgr.free(seq).unwrap() {
+            win.forget(page);
+        }
+    }
+    for page in mgr.flush_prefix_cache() {
+        win.forget(page);
+    }
+    mgr.take_cache_evicted();
+    assert!(!win.resident_pages().contains(&shared),
+            "window slot survived quarantine retirement");
+    assert!(mgr.allocator().is_quarantined(shared));
+    assert_eq!(mgr.allocator().free_pages(), N_PAGES as usize - 1,
+               "damaged page must retire, not recycle");
 }
 
 #[test]

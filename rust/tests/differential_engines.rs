@@ -355,3 +355,85 @@ fn fork_identical_pipeline_on() {
 fn fork_identical_pipeline_off() {
     fork_matches_fresh_prefill(false);
 }
+
+/// Cross-request prefix sharing must be invisible to decoded bytes:
+/// a shared-prefix multi-tenant trace served with the radix prefix
+/// cache on yields exactly the streams of a cache-off run, even
+/// though most admissions alias previously registered pages.
+#[test]
+fn prefix_cache_on_off_streams_byte_identical() {
+    let Some(dir) = artifacts() else { return };
+    use paged_flex::sim::load::shared_prefix_trace;
+    for seed in [5u64, 19] {
+        let reqs: Vec<(u64, Vec<u32>, usize)> =
+            shared_prefix_trace(seed, 512, 3, 4, 24, 8, 6)
+                .into_iter()
+                .map(|r| (r.id, r.prompt, r.max_new_tokens))
+                .collect();
+        let on = cfg(AttentionMode::Paged, &dir, true);
+        let mut off = cfg(AttentionMode::Paged, &dir, true);
+        assert!(on.prefix_cache, "cache is on by default");
+        off.prefix_cache = false;
+        let got_on = serve(on, &reqs);
+        let got_off = serve(off, &reqs);
+        for (id, _, _) in &reqs {
+            assert_eq!(got_on[id], got_off[id],
+                       "seed {seed} req {id}: prefix cache changed \
+                        the tokens");
+        }
+    }
+}
+
+/// CoW fan-out: every child of a one-shot `fork_n` must produce
+/// logits byte-identical to a freshly prefilled sequence over the
+/// same prefix when driven with the same token chain.
+fn fork_n_children_match_fresh(pipeline: bool) {
+    let Some(dir) = artifacts() else { return };
+    let p = prompt(94, 32);
+    let at = 27; // partial tail → one CoW copy per child
+
+    let mut eng =
+        Engine::new(cfg(AttentionMode::Paged, &dir, pipeline)).unwrap();
+    let parent = eng.fresh_seq_id();
+    let pe = eng.paged.as_mut().unwrap();
+    pe.admit(parent, &p).unwrap();
+    let out = pe.prefill_chunk(&eng.rt, &[parent], 64).unwrap();
+    assert!(out[0].1, "parent prefill finished");
+
+    let fresh = 600;
+    pe.admit(fresh, &p[..at]).unwrap();
+    let out = pe.prefill_chunk(&eng.rt, &[fresh], 64).unwrap();
+    assert!(out[0].1);
+    let mut fresh_logits = out[0].2.clone();
+
+    let kids = [601u64, 602, 603];
+    let made = pe.fork_n(parent, &kids, at).unwrap();
+    assert_eq!(made, kids.len(), "pool fits the whole fan");
+
+    for step in 0..5 {
+        let tok = argmax(&fresh_logits);
+        let ids = [fresh, kids[0], kids[1], kids[2]];
+        let mut rows: HashMap<u64, Vec<f32>> = pe
+            .decode_step(&eng.rt, &ids, &[tok; 4])
+            .unwrap()
+            .into_iter()
+            .collect();
+        let f = rows.remove(&fresh).unwrap();
+        for &kid in &kids {
+            assert_eq!(rows.remove(&kid).unwrap(), f,
+                       "pipeline={pipeline} step {step}: fanned \
+                        child {kid} diverged from fresh prefill");
+        }
+        fresh_logits = f;
+    }
+}
+
+#[test]
+fn fork_n_identical_pipeline_on() {
+    fork_n_children_match_fresh(true);
+}
+
+#[test]
+fn fork_n_identical_pipeline_off() {
+    fork_n_children_match_fresh(false);
+}

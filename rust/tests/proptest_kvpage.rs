@@ -5,12 +5,16 @@
 //! FORK / FREE interleavings, with full-state invariant checks after
 //! every step. Failures print the seed + step for replay.
 //!
-//! Invariants (DESIGN.md §7):
-//!  I1  page conservation: free + referenced-by-tables == capacity
+//! Invariants (DESIGN.md §7, §15):
+//!  I1  page conservation: free + referenced-by-tables-or-cache ==
+//!      capacity (cached prefix pages are physically held)
 //!  I2  no page appears in two tables unless its refcount covers it
 //!  I3  every table's mapped capacity covers its live tokens
 //!  I4  audit: reserved bytes == physically-held pages × page bytes
-//!  I5  after all FREEs, the pool is fully free and audit is zero
+//!  I5  after all FREEs + a cache flush, the pool is fully free and
+//!      audit is zero
+//!  I13 refcount + prefix-index + window-slot agreement under random
+//!      share/fork/unshare/preempt/quarantine interleavings
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -135,13 +139,23 @@ impl Harness {
                     "{ctx}: I2 page {p}: {n} holders > rc {}",
                     alloc.refcount(p));
         }
-        // I1: free + distinct-held == capacity
-        assert_eq!(alloc.free_pages() + held.len(), N_PAGES as usize,
+        // cached prefix pages are physically held by the index even
+        // when no table references them (DESIGN.md §15)
+        let mut physical = held.len();
+        for p in self.mgr.cached_pages() {
+            assert!(alloc.refcount(p) >= 1,
+                    "{ctx}: cached page {p} is dead");
+            if !held.contains_key(&p) {
+                physical += 1;
+            }
+        }
+        // I1: free + table-held + cache-only-held == capacity
+        assert_eq!(alloc.free_pages() + physical, N_PAGES as usize,
                    "{ctx}: I1 conservation");
         // I4: reserved bytes track physically held pages
         let page_bytes = PAGE_SIZE as u64 * BYTES_PER_TOKEN;
         assert_eq!(alloc.audit().reserved_bytes(),
-                   held.len() as u64 * page_bytes,
+                   physical as u64 * page_bytes,
                    "{ctx}: I4 reserved-bytes accounting");
     }
 
@@ -149,6 +163,10 @@ impl Harness {
         for id in std::mem::take(&mut self.live) {
             self.mgr.free(id).unwrap();
         }
+        // registered prefixes outlive their owners by design; only a
+        // cache flush lets I5 demand a fully free pool
+        self.mgr.flush_prefix_cache();
+        self.mgr.take_cache_evicted();
         let alloc = self.mgr.allocator();
         assert_eq!(alloc.free_pages(), N_PAGES as usize, "{ctx}: I5 free");
         assert_eq!(alloc.audit().reserved_bytes(), 0, "{ctx}: I5 reserved");
@@ -561,6 +579,13 @@ impl WindowHarness {
             7 => self.free_op(true),
             _ => self.decode_step_op(ctx),
         }
+        // cache surrender (LRU reclaim under pressure) kills pages
+        // without a FREE — their window slots must be dropped exactly
+        // like the free dead-list (DESIGN.md §15)
+        for page in self.mgr.take_cache_evicted() {
+            self.delta.forget(page);
+            self.full.forget(page);
+        }
     }
 }
 
@@ -577,10 +602,16 @@ fn window_delta_matches_full_gather_random_interleavings() {
             let ctx = format!("seed {seed} step {step} ({policy:?})");
             h.step(&ctx);
         }
-        // drain: every sequence freed; pools fully reclaimed
+        // drain: every sequence freed, cache flushed; pools fully
+        // reclaimed
         while !h.live.is_empty() {
             h.free_op(false);
         }
+        for page in h.mgr.flush_prefix_cache() {
+            h.delta.forget(page);
+            h.full.forget(page);
+        }
+        h.mgr.take_cache_evicted();
         assert_eq!(h.mgr.allocator().free_pages(), N_PAGES as usize,
                    "seed {seed}: pages leaked");
         assert!(h.delta.stats().full_gathers <= h.delta.stats().steps,
@@ -1102,6 +1133,14 @@ impl PipeHarness {
             6 => self.free_op(true),
             _ => self.decode_step_op(ctx),
         }
+        // both replicas evolve identically, so their caches surrender
+        // the same pages; forget them like the free dead-list
+        for page in self.p.mgr.take_cache_evicted() {
+            self.p.win.forget(page);
+        }
+        for page in self.s.mgr.take_cache_evicted() {
+            self.s.win.forget(page);
+        }
     }
 }
 
@@ -1140,6 +1179,12 @@ fn pipeline_matches_serial(seeds: std::ops::Range<u64>,
         }
         while !h.live.is_empty() {
             h.free_op(false);
+        }
+        for page in h.p.mgr.flush_prefix_cache() {
+            h.p.win.forget(page);
+        }
+        for page in h.s.mgr.flush_prefix_cache() {
+            h.s.win.forget(page);
         }
         assert_eq!(h.p.mgr.allocator().free_pages(), N_PAGES as usize,
                    "seed {seed}: pipeline replica leaked pages");
@@ -1230,6 +1275,250 @@ fn epoch_handoff_never_uploads_a_stale_slot() {
     h.decode_step_op("reuse a");
     h.decode_step_op("reuse b");
     h.decode_step_op("reuse c");
+}
+
+// ----------------------------------------------------------------------
+// I13: refcount + prefix-index + window-slot agreement (DESIGN.md §15)
+//
+// Random share / fork / unshare / preempt / quarantine interleavings
+// over prompts drawn from a few shared base prefixes (so cache hits
+// and radix sharing are common). After EVERY op:
+//   * each page's refcount equals its table-holder count plus one if
+//     the prefix index caches it — exactly, not just at least;
+//   * no quarantined page is ever cached (quarantine atomically
+//     un-shares the page and its radix descendants);
+//   * free + referenced + quarantine-retired pages == capacity;
+//   * every resident window slot maps a page with refcount > 0
+//     (cache surrender and FREE both drop slots).
+// PF_FAULT_SEED shifts the seed block (the CI chaos matrix reuses it).
+// ----------------------------------------------------------------------
+
+struct ShareHarness {
+    mgr: PageManager,
+    k: HostPool,
+    v: HostPool,
+    win: ResidentWindow,
+    bases: Vec<Vec<u32>>,
+    live: Vec<u64>,
+    next_id: u64,
+    rng: Rng,
+}
+
+impl ShareHarness {
+    fn new(seed: u64) -> Self {
+        let alloc = Arc::new(PageAllocator::new(
+            N_PAGES, PAGE_SIZE, BYTES_PER_TOKEN, GrowthPolicy::Exact));
+        let mut rng = Rng::seeded(seed);
+        let bases = (0..3)
+            .map(|_| (0..40).map(|_| rng.below(512) as u32).collect())
+            .collect();
+        ShareHarness {
+            mgr: PageManager::new(alloc, MAX_BLOCKS),
+            k: HostPool::zeros(GEO),
+            v: HostPool::zeros(GEO),
+            win: ResidentWindow::new(GEO),
+            bases,
+            live: vec![],
+            next_id: 1,
+            rng,
+        }
+    }
+
+    /// Shared base prefix cut at a random depth + a short random tail:
+    /// hits, partial hits, and misses all occur.
+    fn shared_prompt(&mut self) -> Vec<u32> {
+        let b = &self.bases[self.rng.below(3) as usize];
+        let cut = 8 + self.rng.below(33) as usize;
+        let mut p = b[..cut.min(b.len())].to_vec();
+        for _ in 0..self.rng.below(12) {
+            p.push(self.rng.below(512) as u32);
+        }
+        p
+    }
+
+    fn free_seq(&mut self, id: u64) {
+        for page in self.mgr.free(id).unwrap() {
+            self.win.forget(page);
+        }
+    }
+
+    fn step(&mut self, ctx: &str) {
+        match self.rng.below(12) {
+            // RESERVE + always register: stir the radix index hard
+            0..=3 => {
+                let id = self.next_id;
+                let prompt = self.shared_prompt();
+                match self.mgr.reserve(id, &prompt) {
+                    Ok(out) => {
+                        self.next_id += 1;
+                        self.live.push(id);
+                        let fresh = prompt.len() - out.cached_tokens;
+                        self.mgr.note_assigned(id, fresh).unwrap();
+                        self.mgr.register_prefix(id, &prompt).unwrap();
+                    }
+                    Err(AllocError::PoolExhausted { .. })
+                    | Err(AllocError::CapacityExceeded { .. }) => {}
+                    Err(e) => panic!("{ctx}: reserve: {e}"),
+                }
+            }
+            // APPEND (CoW breaks on shared tails)
+            4..=5 => {
+                if let Some(&id) = pick(&mut self.rng, &self.live) {
+                    let extra = 1 + self.rng.below(8) as usize;
+                    match self.mgr.prepare_append(id, extra) {
+                        Ok(_) => {
+                            self.mgr.note_assigned(id, extra).unwrap()
+                        }
+                        Err(AllocError::PoolExhausted { .. })
+                        | Err(AllocError::CapacityExceeded { .. }) => {}
+                        Err(e) => panic!("{ctx}: append: {e}"),
+                    }
+                }
+            }
+            // FAN-OUT: fork 1–3 children at a random point (the
+            // manager half of PagedEngine::fork_n)
+            6..=7 => {
+                let Some(&parent) = pick(&mut self.rng, &self.live)
+                else {
+                    return;
+                };
+                let plen = self.mgr.seq_len(parent).unwrap();
+                if plen == 0 {
+                    return;
+                }
+                let at = 1 + self.rng.below(plen as u64) as usize;
+                for _ in 0..1 + self.rng.below(3) {
+                    let child = self.next_id;
+                    match self.mgr.fork(parent, child, at) {
+                        Ok(_) => {
+                            self.next_id += 1;
+                            self.live.push(child);
+                        }
+                        Err(AllocError::PoolExhausted { .. }) => break,
+                        Err(e) => panic!("{ctx}: fork: {e}"),
+                    }
+                }
+            }
+            // QUARANTINE a random live page: atomic un-share
+            8 => {
+                if let Some(&id) = pick(&mut self.rng, &self.live) {
+                    let pages =
+                        self.mgr.table(id).unwrap().pages().to_vec();
+                    if !pages.is_empty() {
+                        let i = self.rng.below(pages.len() as u64);
+                        self.mgr.quarantine_page(pages[i as usize]);
+                    }
+                }
+            }
+            // PREEMPT: wholesale residency invalidation
+            9 => self.win.invalidate(),
+            // MAP a live sequence's pages (decode-shaped residency)
+            10 => {
+                if let Some(&id) = pick(&mut self.rng, &self.live) {
+                    self.win.begin_step(WINDOW_PAGES);
+                    let pages =
+                        self.mgr.table(id).unwrap().pages().to_vec();
+                    for &p in &pages {
+                        self.win
+                            .map_page(&mut self.k, &mut self.v, p)
+                            .expect("I13 window slots exhausted");
+                    }
+                }
+            }
+            // FREE
+            _ => {
+                if !self.live.is_empty() {
+                    let i = self.rng.below(self.live.len() as u64);
+                    let id = self.live.swap_remove(i as usize);
+                    self.free_seq(id);
+                }
+            }
+        }
+        for page in self.mgr.take_cache_evicted() {
+            self.win.forget(page);
+        }
+        self.check(ctx);
+    }
+
+    fn check(&self, ctx: &str) {
+        let alloc = self.mgr.allocator();
+        let mut holders: HashMap<u32, u32> = HashMap::new();
+        for &id in &self.live {
+            for &p in self.mgr.table(id).unwrap().pages() {
+                *holders.entry(p).or_insert(0) += 1;
+            }
+        }
+        let cached = self.mgr.cached_pages();
+        for &p in &cached {
+            assert!(!alloc.is_quarantined(p),
+                    "{ctx}: I13 quarantined page {p} still cached");
+        }
+        let cached: std::collections::HashSet<u32> =
+            cached.into_iter().collect();
+        let mut phys = 0usize;
+        for p in 0..N_PAGES {
+            let rc = alloc.refcount(p);
+            let want = holders.get(&p).copied().unwrap_or(0)
+                + u32::from(cached.contains(&p));
+            assert_eq!(rc, want,
+                       "{ctx}: I13 page {p}: rc {rc} != holders + \
+                        cached bit {want}");
+            if rc > 0 {
+                phys += 1;
+            }
+        }
+        let retired = alloc
+            .quarantined_pages()
+            .iter()
+            .filter(|&&p| alloc.refcount(p) == 0)
+            .count();
+        assert_eq!(alloc.free_pages() + phys + retired,
+                   N_PAGES as usize, "{ctx}: I13 conservation");
+        for p in self.win.resident_pages() {
+            assert!(alloc.refcount(p) > 0,
+                    "{ctx}: I13 window slot maps dead page {p}");
+        }
+    }
+}
+
+fn env_fault_seed() -> u64 {
+    std::env::var("PF_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0)
+}
+
+#[test]
+fn i13_share_fork_unshare_quarantine_interleavings() {
+    let base = 5000 + env_fault_seed() * 131;
+    for seed in base..base + 8 {
+        let mut h = ShareHarness::new(seed);
+        for step in 0..300 {
+            let ctx = format!("I13 seed {seed} step {step}");
+            h.step(&ctx);
+        }
+        while let Some(id) = h.live.pop() {
+            h.free_seq(id);
+        }
+        for page in h.mgr.flush_prefix_cache() {
+            h.win.forget(page);
+        }
+        h.mgr.take_cache_evicted();
+        let alloc = h.mgr.allocator();
+        let retired = alloc
+            .quarantined_pages()
+            .iter()
+            .filter(|&&p| alloc.refcount(p) == 0)
+            .count();
+        assert_eq!(alloc.free_pages() + retired, N_PAGES as usize,
+                   "I13 seed {seed}: drain left pages unaccounted");
+        assert!(h.win.resident_pages().is_empty()
+                    || h.win
+                        .resident_pages()
+                        .iter()
+                        .all(|&p| alloc.refcount(p) > 0),
+                "I13 seed {seed}: stale window residency after drain");
+    }
 }
 
 #[test]
